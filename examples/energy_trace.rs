@@ -1,0 +1,57 @@
+//! Trace-driven energy simulation: replay a serving trace through the
+//! workload model and report what the nonlinear ops would cost on (a) the
+//! GPU and (b) 32 SOLE units — the deployment-facing version of Table III.
+//!
+//! ```
+//! cargo run --release --offline --example energy_trace -- \
+//!     [--model deit_t] [--requests 512] [--mean-batch 6]
+//! ```
+
+use sole::hw::gpu;
+use sole::hw::units::{AiLayerNormUnit, E2SoftmaxUnit, HwUnit};
+use sole::model::latency::SOLE_UNITS;
+use sole::model::PaperModel;
+use sole::util::cli::Args;
+use sole::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let model = args.opt_str("model", "deit_t");
+    let n_requests = args.opt_usize("requests", 512);
+    let mean_batch = args.opt_f64("mean-batch", 6.0);
+
+    let m = PaperModel::by_name(model).expect("unknown model (see model::PaperModel::zoo)");
+    let sm = E2SoftmaxUnit::default();
+    let ln = AiLayerNormUnit::default();
+    let mut rng = Rng::new(11);
+
+    let (mut gpu_j, mut sole_j, mut gpu_s, mut sole_s) = (0f64, 0f64, 0f64, 0f64);
+    let mut served = 0usize;
+    while served < n_requests {
+        // batch sizes drawn from a geometric-ish arrival mixture
+        let b = ((rng.exponential(1.0 / mean_batch)).ceil() as usize).clamp(1, 16);
+        served += b;
+        for w in m.softmax_work(b) {
+            let t = gpu::softmax_time(w.rows, w.len) * w.kernels as f64;
+            gpu_j += gpu::energy_j(t);
+            gpu_s += t;
+            sole_j += sm.energy_j(w.rows, w.len) * w.kernels as f64;
+            sole_s += sm.seconds(w.rows, w.len, SOLE_UNITS) * w.kernels as f64;
+        }
+        for w in m.layernorm_work(b) {
+            let t = gpu::layernorm_time(w.rows, w.len) * w.kernels as f64;
+            gpu_j += gpu::energy_j(t);
+            gpu_s += t;
+            sole_j += ln.energy_j(w.rows, w.len) * w.kernels as f64;
+            sole_s += ln.seconds(w.rows, w.len, SOLE_UNITS) * w.kernels as f64;
+        }
+    }
+    println!("trace: {served} requests of {model} (mean batch {mean_batch:.1})");
+    println!("nonlinear ops on GPU model:   {:>10.2} J   {:>10.1} ms", gpu_j, gpu_s * 1e3);
+    println!("nonlinear ops on SOLE units:  {:>10.6} J   {:>10.1} ms", sole_j, sole_s * 1e3);
+    println!(
+        "energy ratio {:.0}x, time ratio {:.1}x (paper: orders-of-magnitude energy, 36-61x time)",
+        gpu_j / sole_j,
+        gpu_s / sole_s
+    );
+}

@@ -1,0 +1,56 @@
+//! Hardware design-space ablation (DESIGN.md §4 "ablation benches"):
+//! sweeps the E2Softmax/AILayerNorm unit parameters the paper fixed —
+//! lane count and buffer capacity — and reports area/energy/throughput,
+//! showing where the paper's (V=32, L=1024) point sits.
+//!
+//! ```
+//! cargo run --release --offline --example hw_sweep
+//! ```
+
+use sole::hw::units::{AiLayerNormUnit, E2SoftmaxUnit, HwUnit, SoftermaxUnit};
+
+fn main() {
+    println!("E2Softmax Unit design-space (workload: L=785 rows, DeiT-T@448)\n");
+    println!("{:>6} {:>7} {:>12} {:>14} {:>14} {:>12}", "lanes", "l_max", "area um^2",
+             "pJ/elem", "Gelem/s", "mW");
+    for &lanes in &[8usize, 16, 32, 64] {
+        for &l_max in &[512usize, 1024, 2048] {
+            let u = E2SoftmaxUnit { lanes, l_max };
+            let e = u.energy_per_row(785).total() / 785.0;
+            let thr = u.pipeline().throughput(785) / 1e9;
+            println!(
+                "{:>6} {:>7} {:>12.0} {:>14.3} {:>14.2} {:>12.1}",
+                lanes, l_max, u.area().total(), e, thr, u.power_mw(785)
+            );
+        }
+    }
+
+    println!("\nAILayerNorm Unit design-space (workload: C=192)\n");
+    println!("{:>6} {:>7} {:>12} {:>14} {:>14} {:>12}", "lanes", "c_max", "area um^2",
+             "pJ/elem", "Gelem/s", "mW");
+    for &lanes in &[8usize, 16, 32, 64] {
+        for &c_max in &[512usize, 1024, 2048] {
+            let u = AiLayerNormUnit { lanes, c_max };
+            let e = u.energy_per_row(192).total() / 192.0;
+            let thr = u.pipeline().throughput(192) / 1e9;
+            println!(
+                "{:>6} {:>7} {:>12.0} {:>14.3} {:>14.2} {:>12.1}",
+                lanes, c_max, u.area().total(), e, thr, u.power_mw(192)
+            );
+        }
+    }
+
+    // intermediate bit-width ablation: what the 4-bit log2 quantization of
+    // E2Softmax buys vs Softermax's 16-bit buffer, at matched lanes
+    println!("\nBuffer-width ablation (the paper's memory-bound argument):\n");
+    let sole = E2SoftmaxUnit::default();
+    let soft = SoftermaxUnit::default();
+    let es = sole.energy_per_row(1024);
+    let eo = soft.energy_per_row(1024);
+    println!("SOLE 4-bit buffer:       {:>7.1} pJ/row buffers, {:>7.1} pJ/row compute",
+             es.buffers, es.stage1 + es.stage2);
+    println!("Softermax 16-bit buffer: {:>7.1} pJ/row buffers, {:>7.1} pJ/row compute",
+             eo.buffers, eo.stage1 + eo.stage2);
+    println!("buffer-energy ratio: {:.2}x (4-bit vs 16-bit intermediates)",
+             eo.buffers / es.buffers);
+}

@@ -1,0 +1,58 @@
+//! Quickstart: load an AOT artifact, run a batch, print predictions.
+//!
+//! ```
+//! cargo run --release --offline --example quickstart -- [--artifacts DIR] \
+//!     [--model deit_t] [--variant fp32_sole]
+//! ```
+//!
+//! Demonstrates the minimal API surface: `Engine::open` -> `load` ->
+//! `run_f32`, with the eval dataset read through `tensor::Bundle`.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+use sole::runtime::Engine;
+use sole::tensor::Bundle;
+use sole::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let dir = PathBuf::from(args.opt_str("artifacts", "artifacts"));
+    let model = args.opt_str("model", "deit_t");
+    let variant = args.opt_str("variant", "fp32_sole");
+
+    let engine = Engine::open(&dir)?;
+    println!("platform: {}", engine.platform());
+    let ids = engine.find(model, variant);
+    anyhow::ensure!(!ids.is_empty(), "no artifacts for {model}/{variant}");
+    let id = ids.iter().find(|i| i.ends_with("_b64")).unwrap_or(&ids[0]);
+    println!("loading {id} ...");
+    let m = engine.load(id)?;
+
+    let data = Bundle::load(&dir.join("data/cv_eval"))?;
+    let x = data.get("x")?;
+    let y = data.get("y")?.as_i32()?;
+    let xs = x.as_f32()?;
+    let item: usize = x.shape[1..].iter().product();
+    let b = m.batch();
+    let ncls = m.meta.output_shape[1];
+
+    let logits = m.run_f32(&xs[..b * item])?;
+    let mut correct = 0;
+    for i in 0..b {
+        let row = &logits[i * ncls..(i + 1) * ncls];
+        let pred = row.iter().enumerate().max_by(|a, c| a.1.partial_cmp(c.1).unwrap()).unwrap().0;
+        if pred as i32 == y[i] {
+            correct += 1;
+        }
+        if i < 4 {
+            println!(
+                "sample {i}: label={} pred={pred} logits[..4]={:?}",
+                y[i],
+                &row[..4.min(ncls)]
+            );
+        }
+    }
+    println!("batch accuracy: {correct}/{b}");
+    Ok(())
+}

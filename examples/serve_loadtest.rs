@@ -1,0 +1,87 @@
+//! End-to-end serving driver (EXPERIMENTS.md §Serving): loads the bucketed
+//! deit_t SOLE artifacts, serves Poisson-arrival requests through the
+//! dynamic batcher, and reports latency/throughput per offered load.
+//!
+//! ```
+//! cargo run --release --offline --example serve_loadtest -- \
+//!     [--artifacts DIR] [--model deit_t] [--variant fp32_sole] \
+//!     [--requests 96] [--rates 4,16,64] [--max-wait-ms 20]
+//! ```
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use sole::coordinator::{Backend, BatchPolicy, Coordinator, PjrtBackend};
+use sole::runtime::Engine;
+use sole::tensor::Bundle;
+use sole::util::cli::Args;
+use sole::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let dir = PathBuf::from(args.opt_str("artifacts", "artifacts"));
+    let model = args.opt_str("model", "deit_t");
+    let variant = args.opt_str("variant", "fp32_sole");
+    let n = args.opt_usize("requests", 96);
+    let rates: Vec<f64> = args
+        .opt_str("rates", "4,16,64")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let max_wait = Duration::from_millis(args.opt_usize("max-wait-ms", 20) as u64);
+
+    let engine = Engine::open(&dir)?;
+    println!("loading {model}/{variant} buckets ...");
+    let backend = Arc::new(PjrtBackend::from_family(&engine, model, variant)?);
+    let item = backend.item_input_len();
+    println!("buckets {:?}, item {} f32", backend.buckets(), item);
+
+    let data = Bundle::load(&dir.join("data/cv_eval"))?;
+    let xs = data.get("x")?.as_f32()?;
+    let y = data.get("y")?.as_i32()?;
+
+    println!("\n{:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>8}", "rate req/s", "achieved",
+             "p50 ms", "p99 ms", "mean ms", "avg batch", "top-1");
+    for &rate in &rates {
+        let co = Coordinator::start(backend.clone(), BatchPolicy { max_wait, max_batch: 16 }, 1);
+        let cl = co.client();
+        let mut rng = Rng::new(7);
+        let t0 = Instant::now();
+        let mut pending = Vec::new();
+        for i in 0..n {
+            let idx = i % (xs.len() / item);
+            pending.push((idx, cl.submit(xs[idx * item..(idx + 1) * item].to_vec())?));
+            std::thread::sleep(Duration::from_secs_f64(rng.exponential(rate)));
+        }
+        let mut correct = 0usize;
+        for (idx, rx) in pending {
+            let r = rx.recv()?;
+            let pred = r
+                .output
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred as i32 == y[idx] {
+                correct += 1;
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let (p50, p99, mean) = co.metrics.total_latency();
+        println!(
+            "{:>10.1} {:>10.1} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>7.1}%",
+            rate,
+            n as f64 / wall,
+            p50 * 1e3,
+            p99 * 1e3,
+            mean * 1e3,
+            co.metrics.mean_batch(),
+            100.0 * correct as f64 / n as f64,
+        );
+        co.shutdown();
+    }
+    Ok(())
+}

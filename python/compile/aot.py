@@ -1,0 +1,376 @@
+"""AOT driver: trains, calibrates, and lowers every model variant to HLO text.
+
+This is the single entry point of the build-time Python stack
+(``make artifacts`` -> ``python -m compile.aot --artifacts ../artifacts``).
+It is idempotent: every stage skips itself when its outputs already exist.
+
+Stages
+  1. datasets      synthetic CV + NLP train/eval splits; eval exported as
+                   tensor bundles for the Rust harness
+  2. train         one tiny model per Table I/II row (cached weight bundles)
+  3. calibrate     PTF (alpha/s/zp) per LayerNorm + Fig 3 statistics
+  4. accuracy_py   python-side accuracy matrix (incl. Softermax / I-BERT
+                   ablations) — cross-checks the Rust PJRT evaluation
+  5. lower         HLO text per (architecture x variant x batch); weights
+                   stay runtime *parameters* (loaded by rust/src/tensor),
+                   so each architecture lowers once — not once per task
+  6. golden        bit-exact test vectors for the Rust models
+  7. manifest      artifacts/manifest.json describing everything above
+
+Interchange is HLO *text*: jax >= 0.5 serialized protos carry 64-bit ids
+that xla_extension 0.5.1 rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import calibrate, data, gen_golden, tensor_io, train
+from .model import (
+    EXACT,
+    MODEL_ZOO,
+    ModelConfig,
+    OpsConfig,
+    bert_for_task,
+    forward,
+)
+from .kernels import ailayernorm as ail_kernel
+from .kernels import e2softmax as e2_kernel
+
+# ---------------------------------------------------------------------------
+# Build plan
+# ---------------------------------------------------------------------------
+
+CV_MODELS = ["deit_t", "deit_s", "swin_t"]
+NLP_TASKS = data.NLP_TASKS
+VARIANTS = ["fp32", "fp32_sole", "int8", "int8_sole"]
+EVAL_BATCH = 64
+SERVING_BATCHES = [1, 4, 8, 16]
+CV_TRAIN_N, CV_EVAL_N = 2048, 512
+NLP_TRAIN_N, NLP_EVAL_N = 2048, 512
+CV_STEPS = 300
+NLP_STEPS = 150
+TRAIN_BATCH = 48
+
+
+def ops_for(variant: str, cfg: ModelConfig, ln_calib: dict | None) -> OpsConfig:
+    v = 16 if cfg.kind == "swin" else 32
+    mm = "int8" if variant.startswith("int8") else "fp32"
+    if variant.endswith("sole"):
+        return OpsConfig(softmax="sole", layernorm="sole", matmul=mm,
+                         softmax_v=v, ln_calib=ln_calib)
+    return OpsConfig(matmul=mm)
+
+
+def ln_names(cfg: ModelConfig) -> list[str]:
+    names = []
+    for i in range(cfg.depth):
+        names += [f"b{i}.ln1", f"b{i}.ln2"]
+    return names + ["lnf"]
+
+
+# ---------------------------------------------------------------------------
+# HLO lowering with weights (and PTF calib) as runtime parameters
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is ESSENTIAL: the default printer elides any
+    # sizeable constant to "{...}", which the downstream HLO text parser
+    # silently reads back as zeros (cost us a debugging session: the
+    # AILayerNorm rsqrt LUT became all-zero inside the artifacts).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def flat_weight_items(params) -> list[tuple[str, np.ndarray]]:
+    flat = train._flatten(params)
+    return [(k, np.asarray(v, dtype=np.float32)) for k, v in sorted(flat.items())]
+
+
+def calib_items(cfg: ModelConfig, ln_calib: dict) -> list[tuple[str, np.ndarray]]:
+    items: list[tuple[str, np.ndarray]] = []
+    for name in ln_names(cfg):
+        cal = ln_calib[name]
+        items.append((f"calib/{name}/alpha", np.asarray(cal["alpha"], dtype=np.float32)))
+        items.append((f"calib/{name}/s", np.asarray([cal["s"]], dtype=np.float32)))
+    return items
+
+
+def make_infer_fn(cfg: ModelConfig, variant: str, weight_names: list[str],
+                  calib_names: list[str]):
+    """Build fn(weights_list, calib_list, x) -> logits for lowering."""
+
+    def fn(weights_list, calib_list, x):
+        flat = dict(zip(weight_names, weights_list))
+        params = train._unflatten(flat)
+        ln_calib = None
+        if calib_names:
+            ln_calib = {}
+            for name, arr in zip(calib_names, calib_list):
+                _, ln, field = name.split("/")
+                entry = ln_calib.setdefault(ln, {"zp": 128})
+                entry[field] = arr if field == "alpha" else arr[0]
+        ops = ops_for(variant, cfg, ln_calib)
+        return (forward(params, x, cfg, ops),)
+
+    return fn
+
+
+def lower_model(cfg: ModelConfig, params, variant: str, ln_calib: dict | None,
+                batch: int, out_path: Path) -> dict:
+    """Lower one (model, variant, batch) to HLO text; returns its manifest."""
+    witems = flat_weight_items(params)
+    wnames = [k for k, _ in witems]
+    citems = calib_items(cfg, ln_calib) if variant.endswith("sole") else []
+    cnames = [k for k, _ in citems]
+    fn = make_infer_fn(cfg, variant, wnames, cnames)
+
+    wspecs = [jax.ShapeDtypeStruct(a.shape, jnp.float32) for _, a in witems]
+    cspecs = [jax.ShapeDtypeStruct(a.shape, jnp.float32) for _, a in citems]
+    if cfg.kind == "bert":
+        xspec = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+        input_desc = {"dtype": "i32", "shape": [batch, cfg.seq_len]}
+    else:
+        xspec = jax.ShapeDtypeStruct((batch, cfg.img_size, cfg.img_size, 1), jnp.float32)
+        input_desc = {"dtype": "f32", "shape": [batch, cfg.img_size, cfg.img_size, 1]}
+
+    lowered = jax.jit(fn).lower(wspecs, cspecs, xspec)
+    text = to_hlo_text(lowered)
+    out_path.write_text(text)
+    return {
+        "hlo": out_path.name,
+        "params": wnames + cnames,
+        "input": input_desc,
+        "output": {"dtype": "f32", "shape": [batch, cfg.n_classes]},
+        "batch": batch,
+        "variant": variant,
+    }
+
+
+def lower_op_kernels(art: Path, log) -> list[dict]:
+    """Standalone op graphs for runtime tests + microbenches."""
+    out = []
+    rows, length = 64, 128
+    cdim = 64
+
+    def emit(name, fn, specs, input_desc, output_desc):
+        p = art / f"op_{name}.hlo.txt"
+        if not p.exists():
+            text = to_hlo_text(jax.jit(fn).lower(*specs))
+            p.write_text(text)
+            log(f"  lowered {p.name}")
+        out.append({"id": f"op_{name}", "kind": "op", "hlo": p.name,
+                    "params": [], "input": input_desc, "output": output_desc})
+
+    emit("e2softmax",
+         lambda x: (e2_kernel.e2softmax(x)[0],),
+         [jax.ShapeDtypeStruct((rows, length), jnp.float32)],
+         {"dtype": "f32", "shape": [rows, length]},
+         {"dtype": "f32", "shape": [rows, length]})
+    emit("softmax_exact",
+         lambda x: (jax.nn.softmax(x, axis=-1),),
+         [jax.ShapeDtypeStruct((rows, length), jnp.float32)],
+         {"dtype": "f32", "shape": [rows, length]},
+         {"dtype": "f32", "shape": [rows, length]})
+
+    alpha = jnp.zeros(cdim)
+    gamma = jnp.ones(cdim)
+    beta = jnp.zeros(cdim)
+
+    emit("ailayernorm",
+         lambda codes: (ail_kernel.ailayernorm(codes, alpha, gamma, beta, zp=128),),
+         [jax.ShapeDtypeStruct((rows, cdim), jnp.float32)],
+         {"dtype": "f32", "shape": [rows, cdim]},
+         {"dtype": "f32", "shape": [rows, cdim]})
+    emit("layernorm_exact",
+         lambda x: ((x - jnp.mean(x, -1, keepdims=True))
+                    / jnp.sqrt(jnp.var(x, -1, keepdims=True) + 1e-6),),
+         [jax.ShapeDtypeStruct((rows, cdim), jnp.float32)],
+         {"dtype": "f32", "shape": [rows, cdim]},
+         {"dtype": "f32", "shape": [rows, cdim]})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Python-side accuracy matrix (stage 4)
+# ---------------------------------------------------------------------------
+
+def eval_accuracy(cfg, params, x_eval, y_eval, ops: OpsConfig, batch=128) -> float:
+    correct = 0
+    fwd = jax.jit(lambda xb: forward(params, xb, cfg, ops))
+    for i in range(0, len(x_eval), batch):
+        xb = jnp.asarray(x_eval[i:i + batch])
+        logits = np.asarray(fwd(xb))
+        correct += int((logits.argmax(-1) == y_eval[i:i + batch]).sum())
+    return correct / len(x_eval)
+
+
+def accuracy_variants(cfg, params, x_eval, y_eval, ln_calib) -> dict[str, float]:
+    """The four Table I/II variants + prior-work ablations (jnp twins)."""
+    out = {}
+    for variant in VARIANTS:
+        ops = ops_for(variant, cfg, ln_calib)
+        ops = dataclasses.replace(ops, use_pallas=False)
+        out[variant] = eval_accuracy(cfg, params, x_eval, y_eval, ops)
+    # ablations: prior-work approximations under fp32 matmul
+    out["fp32_softermax"] = eval_accuracy(
+        cfg, params, x_eval, y_eval, OpsConfig(softmax="softermax"))
+    out["fp32_ibert"] = eval_accuracy(
+        cfg, params, x_eval, y_eval, OpsConfig(softmax="ibert", layernorm="ibert"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="../artifacts")
+    ap.add_argument("--skip-serving", action="store_true")
+    args = ap.parse_args()
+    art = Path(args.artifacts).resolve()
+    art.mkdir(parents=True, exist_ok=True)
+    (art / "data").mkdir(exist_ok=True)
+    (art / "weights").mkdir(exist_ok=True)
+    (art / "calib").mkdir(exist_ok=True)
+    (art / "golden").mkdir(exist_ok=True)
+    log = print
+    t_start = time.time()
+
+    manifest: dict = {"version": 1, "models": [], "ops": [], "datasets": []}
+
+    # ---- stage 1: datasets ---------------------------------------------
+    log("[1/7] datasets")
+    cv_train = data.shapes_dataset(CV_TRAIN_N, seed=100)
+    cv_eval = data.shapes_dataset(CV_EVAL_N, seed=200)
+    if not tensor_io.bundle_exists(art / "data" / "cv_eval"):
+        tensor_io.write_bundle(art / "data" / "cv_eval",
+                               {"x": cv_eval[0], "y": cv_eval[1]})
+    manifest["datasets"].append({"id": "cv_eval", "n": CV_EVAL_N,
+                                 "path": "data/cv_eval"})
+    nlp_data = {}
+    for task in NLP_TASKS:
+        tr = data.tokens_dataset(task, NLP_TRAIN_N, seed=300)
+        ev = data.tokens_dataset(task, NLP_EVAL_N, seed=400)
+        nlp_data[task] = (tr, ev)
+        if not tensor_io.bundle_exists(art / "data" / f"bert_{task}_eval"):
+            tensor_io.write_bundle(art / "data" / f"bert_{task}_eval",
+                                   {"x": ev[0], "y": ev[1]})
+        manifest["datasets"].append({"id": f"bert_{task}_eval", "n": NLP_EVAL_N,
+                                     "path": f"data/bert_{task}_eval"})
+
+    # ---- stage 2+3+4+5 per model ----------------------------------------
+    accuracy_table: dict[str, dict] = {}
+    fig3: dict = {}
+
+    def build_model(name: str, cfg: ModelConfig, train_xy, eval_xy, steps, seed):
+        log(f"[model {name}]")
+        params = train.train_or_load(name, cfg, train_xy[0], train_xy[1],
+                                     art / "weights", steps=steps, seed=seed, batch=TRAIN_BATCH, log=log)
+        calib_path = art / "calib" / f"{name}_ptf.json"
+        if calib_path.exists():
+            ln_calib = json.loads(calib_path.read_text())
+        else:
+            ln_calib = calibrate.ptf_calibrate(params, jnp.asarray(train_xy[0][:64]), cfg)
+            calib_path.write_text(json.dumps(ln_calib))
+        # calib bundle for rust
+        if not tensor_io.bundle_exists(art / "calib" / name):
+            tensor_io.write_bundle(art / "calib" / name,
+                                   dict(calib_items(cfg, ln_calib)))
+        # fig3 stats from the first CV model
+        if cfg.kind != "bert" and "hist" not in fig3:
+            fig3.update(calibrate.softmax_input_stats(
+                params, jnp.asarray(train_xy[0][:16]), cfg))
+        # accuracy matrix (python side)
+        acc_path = art / f"accuracy_{name}.json"
+        if acc_path.exists():
+            accuracy_table[name] = json.loads(acc_path.read_text())
+        else:
+            accuracy_table[name] = accuracy_variants(
+                cfg, params, eval_xy[0], eval_xy[1], ln_calib)
+            acc_path.write_text(json.dumps(accuracy_table[name]))
+        log(f"  accuracy: " + "  ".join(
+            f"{k}={v:.3f}" for k, v in accuracy_table[name].items()))
+        # lower variants
+        entries = []
+        for variant in VARIANTS:
+            hlo_path = art / f"{name}_{variant}_b{EVAL_BATCH}.hlo.txt"
+            mpath = art / f"{name}_{variant}_b{EVAL_BATCH}.meta.json"
+            if hlo_path.exists() and mpath.exists():
+                entries.append(json.loads(mpath.read_text()))
+                continue
+            t0 = time.time()
+            meta = lower_model(cfg, params, variant, ln_calib, EVAL_BATCH, hlo_path)
+            meta["id"] = f"{name}_{variant}_b{EVAL_BATCH}"
+            meta["model"] = name
+            meta["weights"] = f"weights/{name}"
+            meta["calib"] = f"calib/{name}"
+            mpath.write_text(json.dumps(meta))
+            entries.append(meta)
+            log(f"  lowered {hlo_path.name} ({time.time()-t0:.1f}s, "
+                f"{hlo_path.stat().st_size // 1024} KiB)")
+        manifest["models"].extend(entries)
+        return params, ln_calib
+
+    cv_params = {}
+    for name in CV_MODELS:
+        cfg = MODEL_ZOO[name]
+        cv_params[name] = build_model(name, cfg, cv_train, cv_eval,
+                                      CV_STEPS, seed=sum(map(ord, name)) % 1000)
+
+    for task in NLP_TASKS:
+        cfg = bert_for_task(data.task_num_classes(task))
+        tr, ev = nlp_data[task]
+        build_model(f"bert_{task}", cfg, tr, ev, NLP_STEPS,
+                    seed=1000 + sum(map(ord, task)) % 1000)
+
+    # ---- serving artifacts (dynamic-batcher buckets) ---------------------
+    if not args.skip_serving:
+        log("[serving artifacts]")
+        name = "deit_t"
+        cfg = MODEL_ZOO[name]
+        params, ln_calib = cv_params[name]
+        for b in SERVING_BATCHES:
+            hlo_path = art / f"{name}_fp32_sole_b{b}.hlo.txt"
+            mpath = art / f"{name}_fp32_sole_b{b}.meta.json"
+            if hlo_path.exists() and mpath.exists():
+                manifest["models"].append(json.loads(mpath.read_text()))
+                continue
+            meta = lower_model(cfg, params, "fp32_sole", ln_calib, b, hlo_path)
+            meta["id"] = f"{name}_fp32_sole_b{b}"
+            meta["model"] = name
+            meta["weights"] = f"weights/{name}"
+            meta["calib"] = f"calib/{name}"
+            mpath.write_text(json.dumps(meta))
+            manifest["models"].append(meta)
+            log(f"  lowered {hlo_path.name}")
+
+    # ---- standalone op graphs -------------------------------------------
+    log("[op kernels]")
+    manifest["ops"] = lower_op_kernels(art, log)
+
+    # ---- fig3 + golden + manifest ----------------------------------------
+    (art / "fig3.json").write_text(json.dumps(fig3))
+    log("[golden vectors]")
+    gen_golden.generate_all(art / "golden", log=log)
+    (art / "accuracy_py.json").write_text(json.dumps(accuracy_table))
+    (art / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    log(f"artifacts complete in {time.time()-t_start:.0f}s -> {art}")
+
+
+if __name__ == "__main__":
+    main()

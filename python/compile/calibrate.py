@@ -1,0 +1,83 @@
+"""Post-training calibration: PTF for AILayerNorm + Fig 3 statistics.
+
+PTF (Power-of-Two Factor, FQ-ViT) assigns each LayerNorm input channel a
+power-of-two factor alpha so one layer-wise 8-bit scale covers channels with
+very different ranges — the inter-channel variation that plain per-tensor
+quantization destroys.  This runs once per trained model on a calibration
+batch with exact ops, capturing every LN input.
+
+Also dumps the paper's Fig 3 ingredient: the distribution of
+exp(X_i - X_max) in the log2 domain for real attention logits.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from pathlib import Path
+
+import numpy as np
+
+from .model import EXACT, ModelConfig, Params, capture_attn_logits, forward
+
+ALPHA_MAX = 5  # PTF factor range [0, 2^5] (paper/FQ-ViT use small alpha)
+
+
+def ptf_calibrate(
+    params: Params,
+    x_calib: np.ndarray,
+    cfg: ModelConfig,
+    *,
+    alpha_max: int = ALPHA_MAX,
+) -> dict[str, dict]:
+    """Run a capture forward and fit per-LN {alpha (C,), s, zp}.
+
+    alpha_c = round(log2(range_c / range_base)) with the base at the 10th
+    percentile channel; s covers the largest post-shift channel range with
+    codes in [zp-127, zp+127] (zp = 128, symmetric u8).
+    """
+    capture: dict = {}
+    forward(params, x_calib, cfg, EXACT, capture=capture)
+    out: dict[str, dict] = {}
+    for name, xin in capture["ln_inputs"].items():
+        arr = np.asarray(xin, dtype=np.float64).reshape(-1, xin.shape[-1])
+        r_c = np.abs(arr).max(axis=0) + 1e-12
+        base = max(np.quantile(r_c, 0.10), 1e-9)
+        alpha = np.clip(np.round(np.log2(r_c / base)), 0, alpha_max).astype(np.int32)
+        s = float((r_c / np.power(2.0, alpha)).max() / 127.0)
+        out[name] = {"alpha": alpha.tolist(), "s": s, "zp": 128}
+    return out
+
+
+def softmax_input_stats(params: Params, x_calib: np.ndarray, cfg: ModelConfig) -> dict:
+    """Fig 3: histogram of log2(exp(x - xmax)) = (x - xmax)/ln2 over all
+    attention logits, plus the moments the paper's 'close to normal on a
+    log2 scale' claim rests on."""
+    logit_blocks = capture_attn_logits(params, x_calib, cfg)
+    vals = []
+    for lg in logit_blocks:
+        a = np.asarray(lg, dtype=np.float64)
+        z = a - a.max(axis=-1, keepdims=True)
+        vals.append((z / math.log(2.0)).ravel())
+    allv = np.concatenate(vals)
+    # clip the -inf-ish tail for the histogram (paper plots a finite range)
+    clipped = np.clip(allv, -24.0, 0.0)
+    hist, edges = np.histogram(clipped, bins=48, range=(-24.0, 0.0))
+    return {
+        "hist": hist.tolist(),
+        "edges": edges.tolist(),
+        "mean": float(allv.mean()),
+        "std": float(allv.std()),
+        "frac_below_kmax": float((allv < -15.0).mean()),
+        "count": int(allv.size),
+    }
+
+
+def save_calib(path: Path, calib: dict) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(calib))
+
+
+def load_calib(path: Path) -> dict:
+    calib = json.loads(path.read_text())
+    return calib

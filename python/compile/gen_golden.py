@@ -1,0 +1,104 @@
+"""Golden-vector emitter: pins the Rust bit-exact models to ref.py.
+
+Writes JSON files under artifacts/golden/ with inputs and every staged
+intermediate from the integer references.  The Rust test
+``rust/tests/golden_vectors.rs`` replays them and asserts exact equality.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from .kernels import ref
+
+
+def _rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+def gen_log2exp(path: Path) -> None:
+    cases = []
+    for e in (3, 4, 5):
+        for d in range(0, -256, -1):
+            cases.append({"d": d, "e": e, "k": ref.log2exp_int(d, e)})
+    path.write_text(json.dumps({"cases": cases}))
+
+
+def gen_aldivision(path: Path) -> None:
+    rng = _rng(7)
+    cases = []
+    for _ in range(512):
+        k_y = int(rng.integers(0, 31))
+        sum_q15 = int(rng.integers(1 << 15, 1 << 26))
+        o23, o8 = ref.aldivision_int(k_y, sum_q15)
+        cases.append({"k_y": k_y, "sum_q15": sum_q15, "out_q23": o23, "out_u8": o8})
+    path.write_text(json.dumps({"cases": cases}))
+
+
+def gen_e2softmax(path: Path) -> None:
+    rng = _rng(11)
+    cases = []
+    for chunk in (1, 32):
+        for n in (1, 7, 32, 96, 256):
+            for _ in range(4):
+                x = rng.normal(0, 2.0, n)
+                q = np.clip(np.round((x - x.max()) * 16), -255, 0).astype(int)
+                gold = ref.e2softmax_online_int(q, e=4, chunk=chunk)
+                cases.append({
+                    "q": q.tolist(), "e": 4, "chunk": chunk,
+                    "k": gold["k"], "sum_q15": gold["sum_q15"],
+                    "out_q23": gold["out_q23"], "out_u8": gold["out_u8"],
+                })
+    path.write_text(json.dumps({"cases": cases}))
+
+
+def gen_compress(path: Path) -> None:
+    cases = []
+    for x in range(256):
+        y, s = ref.dynamic_compress_int(x)
+        cases.append({"x": x, "y": y, "s": s})
+    path.write_text(json.dumps({"cases": cases}))
+
+
+def gen_ailayernorm(path: Path) -> None:
+    rng = _rng(13)
+    cases = []
+    for c in (16, 64, 192):
+        for _ in range(6):
+            codes = rng.integers(0, 256, size=c).astype(int)
+            alpha = rng.integers(0, 4, size=c).astype(int)
+            gamma = rng.normal(1.0, 0.2, c)
+            beta = rng.normal(0.0, 0.2, c)
+            gold = ref.ailayernorm_int(codes, alpha, 128, gamma, beta)
+            cases.append({
+                "codes": codes.tolist(), "alpha": alpha.tolist(), "zp": 128,
+                "gamma": gamma.tolist(), "beta": beta.tolist(),
+                "ex": gold["ex"], "ex2": gold["ex2"],
+                "std_inv": gold["std_inv"],
+                "y": list(map(float, gold["y"])),
+            })
+    path.write_text(json.dumps({"cases": cases}))
+
+
+def gen_rsqrt(path: Path) -> None:
+    rng = _rng(17)
+    cases = []
+    for _ in range(256):
+        num = int(rng.integers(1, 1 << 40))
+        den = int(rng.integers(1, 1 << 20))
+        cases.append({"num": num, "den": den, "out": ref.rsqrt_hw(num, den)})
+    path.write_text(json.dumps({"cases": cases, "lut": ref.rsqrt_lut()}))
+
+
+def generate_all(golden_dir: Path, log=print) -> None:
+    golden_dir.mkdir(parents=True, exist_ok=True)
+    gen_log2exp(golden_dir / "log2exp.json")
+    gen_aldivision(golden_dir / "aldivision.json")
+    gen_e2softmax(golden_dir / "e2softmax.json")
+    gen_compress(golden_dir / "compress.json")
+    gen_ailayernorm(golden_dir / "ailayernorm.json")
+    gen_rsqrt(golden_dir / "rsqrt.json")
+    log(f"  golden vectors -> {golden_dir}")

@@ -1,0 +1,178 @@
+"""AILayerNorm as a Pallas kernel (Layer 1).
+
+Implements Algorithm 2: the two-stage AILayerNorm Unit dataflow (Fig. 5).
+Stage 1 (statistic calculation) consumes PTF-quantized u8 codes, applies
+dynamic 8->4-bit compression, squares through the 16-entry LUT (expressed
+as y*y — identical values, the LUT is a hardware implementation choice),
+decompresses with the << 4s shift, PTF-shifts by << 2*alpha, and reduces.
+Stage 2 (affine transform) computes A = gamma * std_inv and
+Y = A * (D - mu) + B.
+
+TPU adaptation (DESIGN.md §3): a (block_rows x C) slab of 8-bit codes plus
+the per-channel alpha/gamma/beta vectors live in VMEM (the unit's Input
+Buffer + parameter registers); statistics are row reductions on the VPU.
+The x^-0.5 is evaluated with the same 64-entry Q16 LUT as the hardware
+(gathered from a constant table), not with a float rsqrt.
+
+Bit-exactness: stage-1 sums are exact while E_x2 < 2^24 (e.g. C <= 256 with
+alpha <= 2); beyond that f32 accumulation agrees with the integer reference
+to ~2^-24 relative, far below the 4-bit compression error (paper: ~0.2% on
+E(x^2)).  Tests cover both regimes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _pow2i(x: jnp.ndarray) -> jnp.ndarray:
+    """Exact 2^x for integer-valued f32 x (XLA's exp2 is transcendental and
+    off by ULPs at integer arguments — ldexp is exact)."""
+    return jnp.ldexp(jnp.float32(1.0), x.astype(jnp.int32))
+
+_LUT_BITS = ref.RSQRT_LUT_BITS
+_LUT_Q = ref.RSQRT_LUT_Q
+_RSQRT_TABLE = jnp.array(ref.rsqrt_lut(), dtype=jnp.float32)
+
+
+def _floor_log4(x: jnp.ndarray) -> jnp.ndarray:
+    """Exact floor(log4(x)) (= k with 4^k <= x < 4^(k+1)) for f32 x > 0."""
+    k = jnp.floor(jnp.log2(x) * 0.5)
+    k = jnp.where(_pow2i(2.0 * k) > x, k - 1.0, k)
+    k = jnp.where(_pow2i(2.0 * (k + 1.0)) <= x, k + 1.0, k)
+    return k
+
+
+def rsqrt_lut_f(var: jnp.ndarray, table: jnp.ndarray | None = None) -> jnp.ndarray:
+    """The hardware x^-0.5: normalize to 4^k * v, v in [1,4); 64-entry LUT.
+
+    Matches ref.rsqrt_hw on every input where f32 normalization is exact.
+    ``table`` is threaded in as a kernel operand (pallas kernels cannot
+    capture array constants); defaults to the module-level table outside
+    pallas.
+    """
+    if table is None:
+        table = _RSQRT_TABLE
+    k = _floor_log4(var)
+    v = var * _pow2i(-2.0 * k)
+    idx = jnp.floor((v - 1.0) * float(1 << _LUT_BITS) * (1.0 / 3.0))
+    idx = jnp.clip(idx, 0.0, float((1 << _LUT_BITS) - 1))
+    # gather-free lookup: the stablehlo->HLO-text conversion produces a
+    # gather that xla_extension 0.5.1 executes as zeros, so select the
+    # entry with a one-hot reduction instead (64 compares per row, cheap —
+    # and closer to how the hardware's ROM decoder actually works).
+    flat = table.reshape(1, 1 << _LUT_BITS)
+    iota = jax.lax.broadcasted_iota(jnp.float32, (1, 1 << _LUT_BITS), 1)
+    idx2 = idx.reshape(-1, 1)
+    onehot = (iota == idx2).astype(jnp.float32)  # (N, 64)
+    val = jnp.sum(onehot * flat, axis=-1).reshape(var.shape)
+    return val * (1.0 / float(1 << _LUT_Q)) * _pow2i(-k)
+
+
+def _ailayernorm_kernel(x_ref, alpha_ref, gamma_ref, beta_ref, lut_ref, out_ref, *, zp: int, cdim: int):
+    """One block of rows through both AILayerNorm stages."""
+    codes = x_ref[...]  # (R, C) u8 codes as f32 integers
+    alpha = alpha_ref[...]  # (1, C)
+    gamma = gamma_ref[...]
+    beta = beta_ref[...]
+    lut = lut_ref[...]
+
+    # ---- Stage 1: statistic calculation --------------------------------
+    xi = codes - float(zp)  # signed 9-bit
+    pot = _pow2i(alpha)
+    d = xi * pot  # D_i = (X_i - zp) << alpha_i
+
+    mag = jnp.minimum(jnp.abs(xi), 255.0)
+    sflag = (mag >= 64.0).astype(jnp.float32)
+    # DynamicCompress: round-to-nearest bit-select y ~ x >> (2 + 2s)
+    half = _pow2i(1.0 + 2.0 * sflag)  # 2 or 8 = half LSB
+    y4 = jnp.minimum(jnp.floor((mag + half) * _pow2i(-(2.0 + 2.0 * sflag))), 15.0)
+    # Square LUT + Decompress (<< 4s) + PTF shift (<< 2*alpha)
+    sq = (y4 * y4) * _pow2i(4.0 * sflag) * pot * pot
+
+    ex = jnp.sum(d, axis=-1, keepdims=True)
+    ex2 = jnp.sum(sq, axis=-1, keepdims=True) * 16.0  # deferred << 4
+
+    inv_c = 1.0 / float(cdim)
+    mean = ex * inv_c
+    var = ex2 * inv_c - mean * mean
+    std_inv = jnp.where(var > 0.0, rsqrt_lut_f(jnp.maximum(var, 1e-30), lut), 0.0)
+
+    # ---- Stage 2: affine transform --------------------------------------
+    a_coef = gamma * std_inv
+    out_ref[...] = a_coef * (d - mean) + beta
+
+
+@functools.partial(jax.jit, static_argnames=("zp", "block_rows", "interpret"))
+def ailayernorm(
+    codes: jnp.ndarray,
+    alpha: jnp.ndarray,
+    gamma: jnp.ndarray,
+    beta: jnp.ndarray,
+    *,
+    zp: int = 128,
+    block_rows: int = 8,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """AILayerNorm over the last axis of PTF-quantized ``codes``.
+
+    Args:
+      codes: (..., C) u8 codes as f32 (PTF-quantized LayerNorm input).
+      alpha: (C,) power-of-two factors (integer-valued f32).
+      gamma, beta: (C,) affine parameters.
+      zp: layer-wise zero point.
+
+    Returns:
+      (..., C) f32 normalized output, on the shared integer domain D
+      (the layer scale s cancels in (x - mu)/sigma — DESIGN.md §6).
+    """
+    orig_shape = codes.shape
+    cdim = orig_shape[-1]
+    rows = 1
+    for dim in orig_shape[:-1]:
+        rows *= dim
+    x2 = codes.reshape(rows, cdim).astype(jnp.float32)
+    pad = (-rows) % block_rows
+    if pad:
+        # pad rows with zp codes -> var 0 -> std_inv 0, harmless
+        x2 = jnp.concatenate([x2, jnp.full((pad, cdim), float(zp), jnp.float32)], axis=0)
+    grid = (x2.shape[0] // block_rows,)
+    kern = functools.partial(_ailayernorm_kernel, zp=zp, cdim=cdim)
+    a2 = alpha.reshape(1, cdim).astype(jnp.float32)
+    g2 = gamma.reshape(1, cdim).astype(jnp.float32)
+    b2 = beta.reshape(1, cdim).astype(jnp.float32)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, cdim), lambda i: (i, 0)),
+            pl.BlockSpec((1, cdim), lambda i: (0, 0)),
+            pl.BlockSpec((1, cdim), lambda i: (0, 0)),
+            pl.BlockSpec((1, cdim), lambda i: (0, 0)),
+            pl.BlockSpec((1, 64), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, cdim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((x2.shape[0], cdim), jnp.float32),
+        interpret=interpret,
+    )(x2, a2, g2, b2, _RSQRT_TABLE.reshape(1, 64))
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)
+
+
+def vmem_bytes(block_rows: int, cdim: int) -> dict:
+    """Static VMEM footprint model of one grid step (DESIGN.md §7 L1)."""
+    r, c = block_rows, cdim
+    return {
+        "input_codes_8bit": r * c,          # the paper's 8-bit Input Buffer
+        "params_f32": 3 * 4 * c,            # alpha/gamma/beta
+        "stats_regs": 8 * r,                # E_x / E_x2 accumulators
+        "interpret_input_f32": 4 * r * c,
+        "total_arch": r * c + 12 * c + 8 * r,
+    }

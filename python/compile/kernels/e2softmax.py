@@ -1,0 +1,204 @@
+"""E2Softmax as a Pallas kernel (Layer 1).
+
+Implements Algorithm 1 in its V-lane chunked-online form — the dataflow of
+the paper's E2Softmax Unit (Fig. 4): each grid step owns a block of rows;
+inside the kernel a ``fori_loop`` streams V-column slices through the
+Max / Log2Exp / Reduction stages carrying the running (max, sum) exactly
+like the unit's GlobalMax register and Sum Buffer, then stage 2 applies the
+correction and the Approximate Log-based Divider.
+
+TPU adaptation (DESIGN.md §3): the 4-bit Log2Exp codes for a whole
+(block_rows x L) slab live in VMEM — this is the paper's shrunken ping-pong
+Output Buffer; all arithmetic is shift/round/select (VPU work, exact in
+f32), there is deliberately no MXU involvement.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers to plain HLO so the Rust runtime can
+run the same computation (see /opt/xla-example/README.md).
+
+Bit-exactness: every intermediate is an integer-valued f32 within the
+mantissa-exact range provided sum_q15 < 2^24, i.e. rows of length
+L <= 2^9 = 512 are bit-identical to ``ref.e2softmax_online_int(chunk=V)``;
+longer rows agree to ~2^-24 relative on the sum path (tested both ways).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _pow2i(x: jnp.ndarray) -> jnp.ndarray:
+    """Exact 2^x for integer-valued f32 x (XLA's exp2 is transcendental and
+    off by ULPs at integer arguments — ldexp is exact)."""
+    return jnp.ldexp(jnp.float32(1.0), x.astype(jnp.int32))
+
+# Contract constants (shared with ref.py / rust).
+_F = ref.LOG2EXP_F
+_KMAX = float(ref.K_MAX)
+_SUM_FRAC = ref.SUM_FRAC
+_C0 = float(ref.ALDIV_C0)
+_C1 = float(ref.ALDIV_C1)
+_ALDIV_Q = ref.ALDIV_Q
+_OUT_FRAC = ref.OUT_FRAC
+
+
+def _log2exp(d: jnp.ndarray, e: int) -> jnp.ndarray:
+    """Vectorized Log2Exp on integer-valued (<= 0) f32 code deltas.
+
+    Matches ref.log2exp_int: t = v + v>>1 - v>>4 with floor shifts on the
+    Q(F) value, round-half-up, clip to [0, 15].
+    """
+    v = d * float(1 << _F)
+    t = v + jnp.floor(v * 0.5) - jnp.floor(v * 0.0625)
+    k = jnp.floor((-t + float(1 << (_F + e - 1))) * (1.0 / float(1 << (_F + e))))
+    return jnp.clip(k, 0.0, _KMAX)
+
+
+def _floor_log2(x: jnp.ndarray) -> jnp.ndarray:
+    """Exact floor(log2(x)) for integer-valued f32 x >= 1.
+
+    jnp.log2 alone can round 2^n - eps up to n; correct with one
+    compare-and-fix step in each direction.
+    """
+    k = jnp.floor(jnp.log2(x))
+    k = jnp.where(_pow2i(k) > x, k - 1.0, k)
+    k = jnp.where(_pow2i(k + 1.0) <= x, k + 1.0, k)
+    return k
+
+
+def _e2softmax_kernel(x_ref, out_ref, codes_ref, *, e: int, v: int, length: int):
+    """One block of rows: chunked-online stage 1 + divider stage 2."""
+    x = x_ref[...]  # (R, L) f32 logits
+    rows = x.shape[0]
+    n_chunks = length // v
+
+    # --- quantize to integer codes relative to the row max --------------
+    # d_full = clip(round((x - rowmax) * 2^e), -255, 0); integer-valued f32.
+    # The *online* pass below re-references each slice to the running max,
+    # so we keep raw codes q = round(x * 2^e) clipped to a wide window
+    # around the row max (wide enough that the Log2Exp saturation at k=15
+    # makes the exact window irrelevant).
+    rowmax = jnp.max(x, axis=-1, keepdims=True)
+    q = jnp.round((x - rowmax) * float(1 << e))
+    q = jnp.clip(q, -255.0, 0.0)  # codes relative to global row max
+
+    def body(c, carry):
+        m, s, ks = carry
+        sl = jax.lax.dynamic_slice(q, (0, c * v), (rows, v))  # (R, V)
+        local = jnp.max(sl, axis=-1, keepdims=True)
+        m_new = jnp.maximum(local, m)
+        sub = _log2exp(m - m_new, e)
+        s = jnp.floor(s * _pow2i(-sub))  # sum >> sub (floor shift)
+        k_sl = _log2exp(sl - m_new, e)  # (R, V)
+        s = s + jnp.sum(_pow2i(_SUM_FRAC - k_sl), axis=-1, keepdims=True)
+        # store k and the slice's running max for the stage-2 correction
+        ks = jax.lax.dynamic_update_slice(ks, k_sl + (-m_new) * 1024.0, (0, c * v))
+        return m_new, s, ks
+
+    # carry: running max m (R,1), sum_q15 s (R,1), packed (k + (-m)*1024)
+    m0 = jnp.full((rows, 1), -1024.0, dtype=jnp.float32)
+    s0 = jnp.zeros((rows, 1), dtype=jnp.float32)
+    ks0 = jnp.zeros((rows, length), dtype=jnp.float32)
+    # first chunk initializes the max without a shift (m0 is a -inf proxy:
+    # codes are >= -255 so -1024 never wins and Log2Exp(m0-m1) saturates,
+    # flooring an all-zero sum — harmless and identical to ref's None case)
+    m, s, ks = jax.lax.fori_loop(0, n_chunks, body, (m0, s0, ks0))
+
+    # unpack: k_i and the per-element chunk max m_c(i)
+    mneg = jnp.floor(ks * (1.0 / 1024.0))  # (-m_c) packed in high bits
+    k = ks - mneg * 1024.0
+    m_c = -mneg
+
+    # --- stage 2: correction + ALDivision -------------------------------
+    sub2 = _log2exp(m_c - m, e)
+    k_y = k + sub2
+    msb = _floor_log2(s)  # s >= 2^15 always (global max contributes 2^15)
+    k_s = msb - float(_SUM_FRAC)
+    # bit below the leading one: floor(s / 2^(msb-1)) - 2 in {0, 1}
+    s1 = jnp.floor(s * _pow2i(-(msb - 1.0))) - 2.0
+    c = jnp.where(s1 > 0.5, _C1, _C0)
+    shift = k_y + k_s + 1.0
+    out_q = jnp.floor(c * _pow2i(-shift))  # Q23 integer-valued
+    out_ref[...] = out_q * (1.0 / float(1 << _ALDIV_Q))
+    # round-half-up 8-bit output code (scale 2^-8)
+    half = float(1 << (_ALDIV_Q - _OUT_FRAC - 1))
+    code = jnp.floor((out_q + half) * (1.0 / float(1 << (_ALDIV_Q - _OUT_FRAC))))
+    codes_ref[...] = jnp.minimum(code, 255.0)
+
+
+@functools.partial(jax.jit, static_argnames=("e", "v", "block_rows", "interpret"))
+def e2softmax(
+    x: jnp.ndarray,
+    *,
+    e: int = ref.DEFAULT_E,
+    v: int = 32,
+    block_rows: int = 8,
+    interpret: bool = True,
+):
+    """Chunked-online E2Softmax over the last axis of ``x``.
+
+    Args:
+      x: (..., L) f32 logits; L must be a multiple of ``v``.
+      e: power-of-two input scale exponent (input scale 2^-e).
+      v: lane count of the simulated unit (paper: 32).
+      block_rows: rows per Pallas grid step (VMEM tile height).
+
+    Returns:
+      (probs, codes): f32 probabilities (Q23-grid values) and the 8-bit
+      output codes (as f32 integers, scale 2^-8).
+    """
+    orig_shape = x.shape
+    length = orig_shape[-1]
+    if length % v != 0:
+        raise ValueError(f"L={length} must be a multiple of v={v}")
+    rows = 1
+    for dim in orig_shape[:-1]:
+        rows *= dim
+    x2 = x.reshape(rows, length).astype(jnp.float32)
+    pad = (-rows) % block_rows
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.zeros((pad, length), jnp.float32)], axis=0)
+    grid = (x2.shape[0] // block_rows,)
+    kern = functools.partial(_e2softmax_kernel, e=e, v=v, length=length)
+    probs, codes = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, length), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, length), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, length), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((x2.shape[0], length), jnp.float32),
+            jax.ShapeDtypeStruct((x2.shape[0], length), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x2)
+    if pad:
+        probs = probs[:rows]
+        codes = codes[:rows]
+    return probs.reshape(orig_shape), codes.reshape(orig_shape)
+
+
+def vmem_bytes(block_rows: int, length: int) -> dict:
+    """Static VMEM footprint model of one grid step (DESIGN.md §7 L1).
+
+    On a real TPU the k-codes are 4-bit (int8-packed here); interpret mode
+    materializes f32, so this reports the *architectural* footprint the
+    paper's buffers imply alongside the interpret-mode one.
+    """
+    r, l = block_rows, length
+    return {
+        "input_f32": 4 * r * l,
+        "arch_codes_4bit": (r * l) // 2,          # the paper's Output Buffer
+        "arch_sum_q15_32bit": 4 * r,              # Sum Buffer
+        "arch_max_16bit": 2 * r,                  # GlobalMax registers
+        "interpret_codes_f32": 4 * r * l,
+        "total_arch": 4 * r * l + (r * l) // 2 + 6 * r,
+    }

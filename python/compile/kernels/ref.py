@@ -1,0 +1,413 @@
+"""Reference oracles for SOLE's two algorithms.
+
+Three families of functions live here:
+
+1. **Bit-exact integer references** (``*_int``): plain-Python/numpy integer
+   implementations of E2Softmax (Algorithm 1) and AILayerNorm (Algorithm 2)
+   exactly as the Rust models implement them (DESIGN.md §6).  These produce
+   the golden vectors that pin the Rust implementation, and are the oracle
+   for the Pallas kernels in the exact-representable regime.
+
+2. **Float "model-path" references** (``*_f``): jnp-free numpy float
+   implementations of the same algorithms in the two-pass formulation used
+   inside the JAX models for the accuracy experiments (Tables I/II).
+
+3. **Exact baselines**: IEEE softmax / layernorm, plus the Softermax and
+   I-BERT approximations used as accuracy baselines.
+
+Everything is deterministic and dependency-free (numpy only).
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Fixed-point configuration (the contract constants — keep in sync with
+# rust/src/softmax/config.rs and rust/src/layernorm/config.rs)
+# ---------------------------------------------------------------------------
+
+LOG2EXP_F = 8  # internal fraction bits of the Log2Exp shift-add datapath
+K_MAX = 15  # 4-bit log2-quantized exponent output
+SUM_FRAC = 15  # Q(.15) online sum accumulator
+ALDIV_Q = 23  # Q(.23) constants 1.636 / 1.136 (fit f32 exact-int range)
+ALDIV_C0 = round(1.636 * (1 << ALDIV_Q))  # s' = 0
+ALDIV_C1 = round(1.136 * (1 << ALDIV_Q))  # s' = 1
+OUT_FRAC = 8  # 8-bit softmax output, scale 2^-8
+RSQRT_LUT_BITS = 6  # 64-entry x^-0.5 LUT
+RSQRT_LUT_Q = 16  # Q(.16) LUT entries
+DEFAULT_E = 4  # default power-of-two input scale 2^-e for softmax inputs
+
+
+# ---------------------------------------------------------------------------
+# Log2Exp — Eq. (7)/(8): k = clip(round(-x/ln2), 0, 15) via x + x>>1 - x>>4
+# ---------------------------------------------------------------------------
+
+def log2exp_int(d: int, e: int = DEFAULT_E, f: int = LOG2EXP_F) -> int:
+    """Bit-exact Log2Exp on an integer code difference ``d <= 0``.
+
+    ``d`` is (input code - running max code) with input scale 2^-e, so the
+    real-valued argument is x = d * 2^-e.  Returns k in [0, 15] such that
+    exp(x) ~ 2^-k.  Shifts are arithmetic (floor), matching hardware.
+    """
+    assert d <= 0, "Log2Exp domain is (-inf, 0]"
+    v = d << f
+    t = v + (v >> 1) - (v >> 4)  # v * 1.4375 with floor shifts
+    # round-half-up of (-t) / 2^(f+e); -t >= 0
+    k = (-t + (1 << (f + e - 1))) >> (f + e)
+    return min(k, K_MAX)
+
+
+def log2exp_f(d: np.ndarray, e: int = DEFAULT_E, f: int = LOG2EXP_F) -> np.ndarray:
+    """Vectorized float twin of :func:`log2exp_int` (int-valued float I/O).
+
+    ``d`` holds integer-valued code differences <= 0.  Floor-shifts on
+    negative integers are reproduced with np.floor, so this matches the
+    integer version exactly wherever the float mantissa suffices.
+    """
+    v = d * float(1 << f)
+    t = v + np.floor(v * 0.5) - np.floor(v * 0.0625)
+    k = np.floor((-t + float(1 << (f + e - 1))) / float(1 << (f + e)))
+    return np.minimum(k, float(K_MAX))
+
+
+# ---------------------------------------------------------------------------
+# ALDivision — Eq. (13)/(17)
+# ---------------------------------------------------------------------------
+
+def aldivision_int(k_y: int, sum_q15: int) -> tuple[int, int]:
+    """Bit-exact approximate log-based division.
+
+    ``k_y``: log2-domain numerator (>= 0); ``sum_q15``: the online reduced
+    sum in Q(.15) (> 0).  Returns ``(out_q23, out_u8)``: the Q(.24)
+    fixed-point quotient and its 8-bit output code (scale 2^-8).
+    """
+    assert sum_q15 > 0
+    msb = sum_q15.bit_length() - 1
+    k_s = msb - SUM_FRAC
+    s1 = (sum_q15 >> (msb - 1)) & 1 if msb >= 1 else 0
+    shift = k_y + k_s + 1
+    c = ALDIV_C1 if s1 else ALDIV_C0
+    out_q23 = c >> shift if 0 <= shift < 64 else (c << -shift if shift < 0 else 0)
+    # round-half-up to 8-bit output code
+    code = (out_q23 + (1 << (ALDIV_Q - OUT_FRAC - 1))) >> (ALDIV_Q - OUT_FRAC)
+    return out_q23, min(code, 255)
+
+
+# ---------------------------------------------------------------------------
+# E2Softmax — Algorithm 1 (online, bit-exact)
+# ---------------------------------------------------------------------------
+
+def e2softmax_online_int(q, e: int = DEFAULT_E, chunk: int = 1) -> dict:
+    """Bit-exact single-pass E2Softmax over one row of integer codes ``q``.
+
+    ``chunk=1`` follows Algorithm 1 exactly: running max, Log2Exp of the
+    delta, online sum rescaling by ``sum >> Log2Exp(m_prev - m_new)``, then
+    stage 2 correction + ALDivision.  ``chunk=V`` models the V-lane unit
+    (the paper's vector size is 32): each slice takes a local max via the
+    comparison tree, the running max/sum update once per slice, and every
+    element of the slice is referenced to that slice's running max.
+    Returns a dict with every intermediate so the golden tests can pin
+    each stage.
+    """
+    q = [int(v) for v in np.asarray(q).ravel()]
+    n = len(q)
+    assert n >= 1 and chunk >= 1
+    m_prev: int | None = None
+    s = 0
+    ks: list[int] = []
+    ms: list[int] = []
+    for c0 in range(0, n, chunk):
+        sl = q[c0:c0 + chunk]
+        local = max(sl)
+        m_new = local if m_prev is None else max(local, m_prev)
+        if m_prev is not None and m_prev != m_new:
+            sub = log2exp_int(m_prev - m_new, e)
+            s >>= sub
+        for qi in sl:
+            k_i = log2exp_int(qi - m_new, e)
+            s += 1 << (SUM_FRAC - k_i)
+            ks.append(k_i)
+            ms.append(m_new)
+        m_prev = m_new
+    m_final = m_prev
+    out_q23 = []
+    out_u8 = []
+    kys = []
+    for i in range(n):
+        sub = log2exp_int(ms[i] - m_final, e)
+        k_y = ks[i] + sub
+        o23, o8 = aldivision_int(k_y, s)
+        kys.append(k_y)
+        out_q23.append(o23)
+        out_u8.append(o8)
+    return {
+        "k": ks,
+        "running_max": ms,
+        "sum_q15": s,
+        "k_y": kys,
+        "out_q23": out_q23,
+        "out_u8": out_u8,
+        "out_f": [v / float(1 << ALDIV_Q) for v in out_q23],
+    }
+
+
+def e2softmax_twopass_f(x: np.ndarray, e: int = DEFAULT_E, quantize_out: bool = False) -> np.ndarray:
+    """Two-pass float E2Softmax over the last axis (the model/accuracy path).
+
+    ``x`` is real-valued (e.g. attention logits).  Codes are formed as
+    d = clip(round((x - max) * 2^e), -255, 0); the exponent output is
+    log2-quantized to 4 bits and the division is the unbiased ALDivision.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    xmax = x.max(axis=-1, keepdims=True)
+    d = np.clip(np.round((x - xmax) * float(1 << e)), -255.0, 0.0)
+    k = log2exp_f(d, e)
+    p = np.power(2.0, -k)
+    ssum = p.sum(axis=-1, keepdims=True)
+    k_s = np.floor(np.log2(ssum))
+    frac = ssum / np.power(2.0, k_s) - 1.0  # in [0, 1)
+    s1 = (frac >= 0.5).astype(np.float64)
+    c = 1.636 - 0.5 * s1
+    out = c * np.power(2.0, -(k + k_s + 1.0))
+    if quantize_out:
+        out = np.clip(np.round(out * 256.0), 0.0, 255.0) / 256.0
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Dynamic compression + AILayerNorm — Algorithm 2 (bit-exact)
+# ---------------------------------------------------------------------------
+
+def dynamic_compress_int(x: int) -> tuple[int, int]:
+    """8-bit magnitude -> (4-bit code y, 1-bit shift-select s).
+
+    Recovery is x ~ y << (2 + 2s): values >= 64 keep their top nibble
+    (s=1, shift 4), smaller values keep bits [5:2] (s=0, shift 2).
+    Rounding is to-nearest (add half-LSB before the bit-select): truncation
+    would bias E(x^2) by ~8%, while the paper claims ~0.2% — only the
+    rounding variant meets that, at the cost of one carry adder.
+    """
+    assert 0 <= x <= 255
+    if x >= 64:
+        return min((x + 8) >> 4, 15), 1
+    return min((x + 2) >> 2, 15), 0
+
+
+SQUARE_LUT = [y * y for y in range(16)]  # the 16-entry square LUT
+
+
+def rsqrt_lut() -> list[int]:
+    """The 64-entry x^-0.5 LUT: Q(.16) entries of 1/sqrt(v), v in [1,4)."""
+    out = []
+    for i in range(1 << RSQRT_LUT_BITS):
+        v = 1.0 + (i + 0.5) * 3.0 / (1 << RSQRT_LUT_BITS)
+        out.append(round((1 << RSQRT_LUT_Q) / math.sqrt(v)))
+    return out
+
+
+_RSQRT_LUT = rsqrt_lut()
+
+
+def rsqrt_hw(var_num: int, var_den: int) -> float:
+    """Hardware x^-0.5: normalize var = var_num/var_den to 4^k * v with
+    v in [1,4), look up 1/sqrt(v) in the 64-entry Q16 LUT, shift by k.
+
+    Exact-rational normalization (var_num, var_den ints) keeps this
+    bit-reproducible across languages.
+    """
+    assert var_num > 0 and var_den > 0
+    k = 0
+    num, den = var_num, var_den
+    while num >= 4 * den:
+        den *= 4
+        k += 1
+    while num < den:
+        num *= 4
+        k -= 1
+    # v = var / 4^k in [1,4); LUT index floor((v-1) * 64 / 3)
+    idx = ((num - den) * (1 << RSQRT_LUT_BITS)) // (3 * den)
+    idx = min(idx, (1 << RSQRT_LUT_BITS) - 1)
+    return _RSQRT_LUT[idx] / float(1 << RSQRT_LUT_Q) * math.pow(2.0, -k)
+
+
+def ailayernorm_int(
+    x_codes: np.ndarray,
+    alpha: np.ndarray,
+    zp: int,
+    gamma: np.ndarray,
+    beta: np.ndarray,
+) -> dict:
+    """Bit-exact AILayerNorm over one row (C channels) of u8 codes.
+
+    Statistics are computed exactly as the hardware does: signed codes
+    D_i = (X_i - zp) << alpha_i accumulate E_x; magnitudes are
+    dynamically compressed, squared via the 16-entry LUT, decompressed
+    by << 4s, PTF-shifted by << 2*alpha, and the reduced sum picks up the
+    deferred << 4 (DESIGN.md §2 erratum note).  The affine stage is float
+    (gamma/beta/std_inv), matching the unit's Preprocess/Affine split.
+    """
+    x_codes = np.asarray(x_codes).ravel()
+    alpha = np.asarray(alpha).ravel()
+    c = len(x_codes)
+    assert len(alpha) == c
+    ex = 0
+    ex2 = 0
+    d_all = []
+    comp = []
+    for i in range(c):
+        xi = int(x_codes[i]) - zp
+        a = int(alpha[i])
+        d = xi << a
+        ex += d
+        mag = min(abs(xi), 255)
+        y, sflag = dynamic_compress_int(mag)
+        sq = SQUARE_LUT[y] << (4 * sflag)  # decompress: x^2 ~ y^2 << 4s (<<4 deferred)
+        ex2 += sq << (2 * a)
+        d_all.append(d)
+        comp.append((y, sflag))
+    ex2 <<= 4  # deferred common shift
+    # var = E[x^2] - E[x]^2 as an exact rational with denominator C^2
+    var_num = ex2 * c - ex * ex
+    mean = ex / c
+    if var_num <= 0:
+        std_inv = 0.0
+        var = 0.0
+    else:
+        var = var_num / (c * c)
+        std_inv = rsqrt_hw(var_num, c * c)
+    gamma = np.asarray(gamma, dtype=np.float64).ravel()
+    beta = np.asarray(beta, dtype=np.float64).ravel()
+    a_coef = gamma * std_inv
+    y_out = a_coef * (np.array(d_all, dtype=np.float64) - mean) + beta
+    return {
+        "d": d_all,
+        "compressed": comp,
+        "ex": ex,
+        "ex2": ex2,
+        "mean": mean,
+        "var": var,
+        "std_inv": std_inv,
+        "y": y_out,
+    }
+
+
+def ailayernorm_f(
+    x: np.ndarray,
+    alpha: np.ndarray,
+    s: float,
+    zp: int,
+    gamma: np.ndarray,
+    beta: np.ndarray,
+    lut_rsqrt: bool = False,
+) -> np.ndarray:
+    """Float model-path AILayerNorm over the last axis of real-valued ``x``.
+
+    Quantizes with PTF (scale s * 2^alpha, zero point zp), runs the
+    approximate statistics, and applies the affine transform.  The layer
+    scale ``s`` cancels in (x - mu)/sigma, so the math matches
+    :func:`ailayernorm_int` on the shared integer domain.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    alpha = np.asarray(alpha, dtype=np.float64)
+    cdim = x.shape[-1]
+    scale = s * np.power(2.0, alpha)
+    codes = np.clip(np.round(x / scale) + zp, 0, 255)
+    xi = codes - zp
+    d = xi * np.power(2.0, alpha)
+    mag = np.minimum(np.abs(xi), 255.0)
+    sflag = (mag >= 64.0).astype(np.float64)
+    y4 = np.minimum(np.where(sflag > 0, np.floor((mag + 8.0) / 16.0),
+                             np.floor((mag + 2.0) / 4.0)), 15.0)
+    sq = (y4 * y4) * np.power(2.0, 4.0 * sflag) * np.power(2.0, 2.0 * alpha)
+    ex = d.mean(axis=-1, keepdims=True)
+    ex2 = sq.sum(axis=-1, keepdims=True) * 16.0 / cdim
+    var = np.maximum(ex2 - ex * ex, 0.0)
+    if lut_rsqrt:
+        k = np.floor(np.floor(np.log2(np.maximum(var, 1e-30))) / 2.0)
+        v = var / np.power(4.0, k)
+        idx = np.minimum(np.floor((v - 1.0) * (1 << RSQRT_LUT_BITS) / 3.0), (1 << RSQRT_LUT_BITS) - 1)
+        lut = np.array(_RSQRT_LUT, dtype=np.float64) / float(1 << RSQRT_LUT_Q)
+        std_inv = lut[idx.astype(np.int64)] * np.power(2.0, -k)
+    else:
+        std_inv = np.where(var > 0, 1.0 / np.sqrt(np.maximum(var, 1e-30)), 0.0)
+    return gamma * (d - ex) * std_inv + beta
+
+
+# ---------------------------------------------------------------------------
+# Exact + prior-work baselines
+# ---------------------------------------------------------------------------
+
+def softmax_exact(x: np.ndarray) -> np.ndarray:
+    x = np.asarray(x, dtype=np.float64)
+    z = x - x.max(axis=-1, keepdims=True)
+    p = np.exp(z)
+    return p / p.sum(axis=-1, keepdims=True)
+
+
+def layernorm_exact(x: np.ndarray, gamma: np.ndarray, beta: np.ndarray, eps: float = 1e-6) -> np.ndarray:
+    x = np.asarray(x, dtype=np.float64)
+    mu = x.mean(axis=-1, keepdims=True)
+    var = x.var(axis=-1, keepdims=True)
+    return gamma * (x - mu) / np.sqrt(var + eps) + beta
+
+
+def softermax_f(x: np.ndarray, frac_bits: int = 8) -> np.ndarray:
+    """Softermax (Stevens et al., DAC'21) functional model: base-2 softmax
+    with low-precision (2^-frac_bits) un-normalized intermediates."""
+    x = np.asarray(x, dtype=np.float64)
+    z = np.floor(x / math.log(2.0) * (1 << frac_bits)) / (1 << frac_bits)
+    z = z - np.ceil(z.max(axis=-1, keepdims=True))
+    p = np.power(2.0, z)
+    q = np.floor(p * (1 << frac_bits)) / (1 << frac_bits)  # 16-bit-ish storage
+    s = q.sum(axis=-1, keepdims=True)
+    return q / np.where(s > 0, s, 1.0)
+
+
+def ibert_softmax_f(x: np.ndarray, scale: float = 1.0 / 16) -> np.ndarray:
+    """I-BERT i-exp softmax (Kim et al., ICML'21) functional model.
+
+    exp(p) on p in (-ln2, 0] is approximated by the integer polynomial
+    0.3585 (p + 1.353)^2 + 0.344 after range reduction x = -z ln2 + p.
+    All quantities follow the integer pipeline at input scale ``scale``.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    q = np.floor(x / scale)
+    q = q - q.max(axis=-1, keepdims=True)
+    ln2_q = np.floor(math.log(2.0) / scale)
+    z = np.floor(-q / ln2_q)
+    p = q + z * ln2_q  # in (-ln2/scale, 0]
+    b, c = 1.353, 0.344
+    a = 0.3585
+    qb = np.floor(b / scale)
+    qc = np.floor(c / (a * scale * scale))
+    qout = (p + qb) ** 2 + qc  # at scale a*scale^2
+    qexp = np.floor(qout / np.power(2.0, z))
+    s = qexp.sum(axis=-1, keepdims=True)
+    return qexp / np.where(s > 0, s, 1.0)
+
+
+def ibert_layernorm_f(x: np.ndarray, gamma: np.ndarray, beta: np.ndarray, scale: float = 1.0 / 64) -> np.ndarray:
+    """I-BERT integer LayerNorm (also the arithmetic half of the NN-LUT
+    baseline): INT32 statistics on quantized codes + integer sqrt."""
+    x = np.asarray(x, dtype=np.float64)
+    q = np.floor(x / scale)
+    mu = np.floor(q.mean(axis=-1, keepdims=True))
+    dv = q - mu
+    var = np.floor((dv * dv).mean(axis=-1, keepdims=True))
+    std = np.floor(np.sqrt(var)) + 1.0
+    return gamma * dv / std + beta
+
+
+__all__ = [
+    "LOG2EXP_F", "K_MAX", "SUM_FRAC", "ALDIV_Q", "ALDIV_C0", "ALDIV_C1",
+    "OUT_FRAC", "RSQRT_LUT_BITS", "RSQRT_LUT_Q", "DEFAULT_E",
+    "log2exp_int", "log2exp_f", "aldivision_int",
+    "e2softmax_online_int", "e2softmax_twopass_f",
+    "dynamic_compress_int", "SQUARE_LUT", "rsqrt_lut", "rsqrt_hw",
+    "ailayernorm_int", "ailayernorm_f",
+    "softmax_exact", "layernorm_exact",
+    "softermax_f", "ibert_softmax_f", "ibert_layernorm_f",
+]

@@ -1,0 +1,399 @@
+"""Layer 2: transformer models in JAX with pluggable Softmax/LayerNorm.
+
+The models (a ViT, a Swin-style windowed ViT surrogate, and a BERT-style
+encoder) are written as pure functions over a params pytree so that:
+
+* training (build-time, exact ops) uses ``jax.grad`` directly;
+* the SOLE variants swap in the Layer-1 Pallas kernels
+  (``kernels.e2softmax`` / ``kernels.ailayernorm``) **inside** the jitted
+  forward, so AOT lowering produces a single HLO containing the kernels;
+* prior-work approximations (Softermax, I-BERT) are available as ablation
+  variants for the accuracy benches.
+
+Ops selection is data-driven via :class:`OpsConfig` — this is the
+"SOLE as a plugin" claim of the paper: the same trained weights run under
+any (softmax x layernorm x matmul) combination without retraining.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ailayernorm as ail_kernel
+from .kernels import e2softmax as e2_kernel
+from .kernels.ref import DEFAULT_E
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of one encoder model."""
+
+    kind: str  # "vit" | "swin" | "bert"
+    dim: int = 64
+    depth: int = 4
+    heads: int = 4
+    mlp_ratio: int = 4
+    n_classes: int = 10
+    # vit/swin
+    img_size: int = 32
+    patch: int = 4
+    window: int = 16  # swin: tokens per window
+    # bert
+    vocab: int = 64
+    seq_len: int = 32
+
+    @property
+    def tokens(self) -> int:
+        if self.kind == "bert":
+            return self.seq_len
+        return (self.img_size // self.patch) ** 2
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.heads
+
+
+@dataclasses.dataclass(frozen=True)
+class OpsConfig:
+    """Which implementation each non-linear op uses (the SOLE plugin knob)."""
+
+    softmax: str = "exact"  # exact | sole | softermax | ibert
+    layernorm: str = "exact"  # exact | sole | ibert
+    matmul: str = "fp32"  # fp32 | int8
+    softmax_e: int = DEFAULT_E
+    softmax_v: int = 32  # lane count for the pallas kernel
+    # LayerNorm PTF calibration: name -> {"alpha": (C,), "zp": int, "s": float}
+    ln_calib: dict | None = None
+    use_pallas: bool = True  # False = pure-jnp twins (for training-side evals)
+
+    def variant_name(self) -> str:
+        mm = "int8" if self.matmul == "int8" else "fp32"
+        if self.softmax == "sole" and self.layernorm == "sole":
+            return f"{mm}_sole"
+        if self.softmax == "exact" and self.layernorm == "exact":
+            return mm
+        return f"{mm}_{self.softmax}_{self.layernorm}"
+
+
+EXACT = OpsConfig()
+
+
+# ---------------------------------------------------------------------------
+# Non-linear op implementations (jnp twins of kernels/ref.py)
+# ---------------------------------------------------------------------------
+
+def _pow2i(x: jnp.ndarray) -> jnp.ndarray:
+    """Exact 2^x for integer-valued x (ldexp; XLA exp2 is off at integers)."""
+    return jnp.ldexp(jnp.float32(1.0), x.astype(jnp.int32))
+
+
+def e2softmax_jnp(x: jnp.ndarray, e: int = DEFAULT_E) -> jnp.ndarray:
+    """Two-pass jnp E2Softmax (vectorized twin of ref.e2softmax_twopass_f)."""
+    xmax = jnp.max(x, axis=-1, keepdims=True)
+    d = jnp.clip(jnp.round((x - xmax) * float(1 << e)), -255.0, 0.0)
+    f = 8
+    v = d * float(1 << f)
+    t = v + jnp.floor(v * 0.5) - jnp.floor(v * 0.0625)
+    k = jnp.floor((-t + float(1 << (f + e - 1))) / float(1 << (f + e)))
+    k = jnp.clip(k, 0.0, 15.0)
+    p = _pow2i(-k)
+    ssum = jnp.sum(p, axis=-1, keepdims=True)
+    k_s = jnp.floor(jnp.log2(ssum))
+    k_s = jnp.where(_pow2i(k_s) > ssum, k_s - 1.0, k_s)
+    k_s = jnp.where(_pow2i(k_s + 1.0) <= ssum, k_s + 1.0, k_s)
+    frac = ssum * _pow2i(-k_s) - 1.0
+    c = jnp.where(frac >= 0.5, 1.136, 1.636)
+    return c * _pow2i(-(k + k_s + 1.0))
+
+
+def softermax_jnp(x: jnp.ndarray, frac_bits: int = 8) -> jnp.ndarray:
+    """Softermax: base-2 softmax with 2^-frac_bits quantized intermediates."""
+    scale = float(1 << frac_bits)
+    z = jnp.floor(x / math.log(2.0) * scale) / scale
+    z = z - jnp.ceil(jnp.max(z, axis=-1, keepdims=True))
+    p = jnp.exp2(z)
+    q = jnp.floor(p * scale) / scale
+    s = jnp.sum(q, axis=-1, keepdims=True)
+    return q / jnp.where(s > 0, s, 1.0)
+
+
+def ibert_softmax_jnp(x: jnp.ndarray, scale: float = 1.0 / 16) -> jnp.ndarray:
+    """I-BERT i-exp softmax (integer-polynomial exp), jnp twin of ref."""
+    q = jnp.floor(x / scale)
+    q = q - jnp.max(q, axis=-1, keepdims=True)
+    ln2_q = math.floor(math.log(2.0) / scale)
+    z = jnp.floor(-q / ln2_q)
+    p = q + z * ln2_q
+    qb = math.floor(1.353 / scale)
+    qc = math.floor(0.344 / (0.3585 * scale * scale))
+    qout = (p + qb) ** 2 + qc
+    qexp = jnp.floor(qout * _pow2i(-z))
+    s = jnp.sum(qexp, axis=-1, keepdims=True)
+    return qexp / jnp.where(s > 0, s, 1.0)
+
+
+def layernorm_exact_jnp(x, gamma, beta, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return gamma * (x - mu) / jnp.sqrt(var + eps) + beta
+
+
+def ibert_layernorm_jnp(x, gamma, beta, scale: float = 1.0 / 64):
+    q = jnp.floor(x / scale)
+    mu = jnp.floor(jnp.mean(q, axis=-1, keepdims=True))
+    dv = q - mu
+    var = jnp.floor(jnp.mean(dv * dv, axis=-1, keepdims=True))
+    std = jnp.floor(jnp.sqrt(var)) + 1.0
+    return gamma * dv / std + beta
+
+
+def ailayernorm_jnp(x, gamma, beta, alpha, s, zp):
+    """Pure-jnp AILayerNorm twin (used when use_pallas=False)."""
+    pot = _pow2i(alpha)
+    scale = s * pot
+    codes = jnp.clip(jnp.round(x / scale) + zp, 0, 255)
+    xi = codes - float(zp)
+    d = xi * pot
+    mag = jnp.minimum(jnp.abs(xi), 255.0)
+    sflag = (mag >= 64.0).astype(x.dtype)
+    half = _pow2i(1.0 + 2.0 * sflag)
+    y4 = jnp.minimum(jnp.floor((mag + half) * _pow2i(-(2.0 + 2.0 * sflag))), 15.0)
+    sq = (y4 * y4) * _pow2i(4.0 * sflag) * pot * pot
+    cdim = x.shape[-1]
+    ex = jnp.mean(d, axis=-1, keepdims=True)
+    ex2 = jnp.sum(sq, axis=-1, keepdims=True) * 16.0 / cdim
+    var = jnp.maximum(ex2 - ex * ex, 1e-12)
+    return gamma * (d - ex) / jnp.sqrt(var) + beta
+
+
+# ---------------------------------------------------------------------------
+# Op dispatch
+# ---------------------------------------------------------------------------
+
+def apply_softmax(logits: jnp.ndarray, ops: OpsConfig) -> jnp.ndarray:
+    if ops.softmax == "exact":
+        return jax.nn.softmax(logits, axis=-1)
+    if ops.softmax == "sole":
+        if ops.use_pallas:
+            # block_rows=128: fewer, wider grid steps — 13x faster on the
+            # CPU PJRT backend at identical (bit-exact) results; still a
+            # VMEM-friendly tile architecturally (EXPERIMENTS.md §Perf)
+            probs, _ = e2_kernel.e2softmax(logits, e=ops.softmax_e, v=ops.softmax_v,
+                                           block_rows=128)
+            return probs
+        return e2softmax_jnp(logits, e=ops.softmax_e)
+    if ops.softmax == "softermax":
+        return softermax_jnp(logits)
+    if ops.softmax == "ibert":
+        return ibert_softmax_jnp(logits)
+    raise ValueError(f"unknown softmax {ops.softmax}")
+
+
+def apply_layernorm(x: jnp.ndarray, gamma, beta, name: str, ops: OpsConfig,
+                    capture: dict | None = None) -> jnp.ndarray:
+    if capture is not None:
+        capture.setdefault("ln_inputs", {})[name] = x
+    if ops.layernorm == "exact":
+        return layernorm_exact_jnp(x, gamma, beta)
+    if ops.layernorm == "ibert":
+        return ibert_layernorm_jnp(x, gamma, beta)
+    if ops.layernorm == "sole":
+        calib = (ops.ln_calib or {}).get(name)
+        if calib is None:
+            raise ValueError(f"SOLE layernorm needs PTF calibration for {name}")
+        alpha = jnp.asarray(calib["alpha"], dtype=jnp.float32)
+        if ops.use_pallas:
+            pot = _pow2i(alpha)
+            codes = jnp.clip(jnp.round(x / (calib["s"] * pot)) + calib["zp"], 0, 255)
+            return ail_kernel.ailayernorm(codes, alpha, gamma, beta,
+                                          zp=int(calib["zp"]), block_rows=64)
+        return ailayernorm_jnp(x, gamma, beta, alpha, calib["s"], int(calib["zp"]))
+    raise ValueError(f"unknown layernorm {ops.layernorm}")
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None, ops: OpsConfig) -> jnp.ndarray:
+    """Matmul with optional INT8 fake-quant (per-channel weights, dynamic
+    per-tensor activations) — the paper's INT8 baseline setting."""
+    if ops.matmul == "int8":
+        aw = jnp.max(jnp.abs(w), axis=0, keepdims=True) / 127.0 + 1e-12
+        wq = jnp.round(w / aw) * aw
+        ax = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+        xq = jnp.round(x / ax) * ax
+        y = xq @ wq
+    else:
+        y = x @ w
+    return y if b is None else y + b
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, dim: int, mlp: int) -> Params:
+    k = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(dim)
+    return {
+        "ln1_g": jnp.ones(dim), "ln1_b": jnp.zeros(dim),
+        "wqkv": jax.random.normal(k[0], (dim, 3 * dim)) * s,
+        "bqkv": jnp.zeros(3 * dim),
+        "wo": jax.random.normal(k[1], (dim, dim)) * s,
+        "bo": jnp.zeros(dim),
+        "ln2_g": jnp.ones(dim), "ln2_b": jnp.zeros(dim),
+        "w1": jax.random.normal(k[2], (dim, mlp)) * s,
+        "b1": jnp.zeros(mlp),
+        "w2": jax.random.normal(k[3], (mlp, dim)) * (1.0 / math.sqrt(mlp)),
+        "b2": jnp.zeros(dim),
+    }
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, cfg.depth + 3)
+    p: Params = {"blocks": [_init_block(keys[i], cfg.dim, cfg.dim * cfg.mlp_ratio)
+                            for i in range(cfg.depth)]}
+    if cfg.kind == "bert":
+        p["tok_emb"] = jax.random.normal(keys[-1], (cfg.vocab, cfg.dim)) * 0.02
+        p["pos_emb"] = jax.random.normal(keys[-2], (cfg.tokens, cfg.dim)) * 0.02
+    else:
+        patch_dim = cfg.patch * cfg.patch
+        p["patch_w"] = jax.random.normal(keys[-1], (patch_dim, cfg.dim)) / math.sqrt(patch_dim)
+        p["patch_b"] = jnp.zeros(cfg.dim)
+        p["pos_emb"] = jax.random.normal(keys[-2], (cfg.tokens, cfg.dim)) * 0.02
+    p["lnf_g"] = jnp.ones(cfg.dim)
+    p["lnf_b"] = jnp.zeros(cfg.dim)
+    p["head_w"] = jax.random.normal(keys[-3], (cfg.dim, cfg.n_classes)) / math.sqrt(cfg.dim)
+    p["head_b"] = jnp.zeros(cfg.n_classes)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _attention(x: jnp.ndarray, blk: Params, cfg: ModelConfig, ops: OpsConfig,
+               window: int | None) -> jnp.ndarray:
+    """(B, T, D) multi-head self-attention, optionally windowed (swin)."""
+    b, t, d = x.shape
+    h, hd = cfg.heads, cfg.head_dim
+    qkv = dense(x, blk["wqkv"], blk["bqkv"], ops)  # (B, T, 3D)
+    qkv = qkv.reshape(b, t, 3, h, hd)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]  # (B, T, H, hd)
+    if window is not None:
+        w = window
+        nw = t // w
+        q = q.reshape(b, nw, w, h, hd)
+        k = k.reshape(b, nw, w, h, hd)
+        v = v.reshape(b, nw, w, h, hd)
+        logits = jnp.einsum("bnwhd,bnvhd->bnhwv", q, k) / math.sqrt(hd)
+        probs = apply_softmax(logits, ops)
+        out = jnp.einsum("bnhwv,bnvhd->bnwhd", probs, v).reshape(b, t, h, hd)
+    else:
+        logits = jnp.einsum("bthd,bshd->bhts", q, k) / math.sqrt(hd)
+        probs = apply_softmax(logits, ops)
+        out = jnp.einsum("bhts,bshd->bthd", probs, v)
+    out = out.reshape(b, t, d)
+    return dense(out, blk["wo"], blk["bo"], ops)
+
+
+def forward(params: Params, x: jnp.ndarray, cfg: ModelConfig,
+            ops: OpsConfig = EXACT, capture: dict | None = None) -> jnp.ndarray:
+    """Model forward -> (B, n_classes) logits.
+
+    ``x``: images (B, H, W, 1) f32 for vit/swin, or token ids (B, T) i32
+    for bert.  ``capture`` (eager-mode only) collects LN inputs for PTF
+    calibration.
+    """
+    if cfg.kind == "bert":
+        tokens = params["tok_emb"][x] + params["pos_emb"]
+    else:
+        b = x.shape[0]
+        n = cfg.img_size // cfg.patch
+        xp = x.reshape(b, n, cfg.patch, n, cfg.patch)
+        xp = xp.transpose(0, 1, 3, 2, 4).reshape(b, n * n, cfg.patch * cfg.patch)
+        tokens = dense(xp, params["patch_w"], params["patch_b"], ops) + params["pos_emb"]
+
+    h = tokens
+    for i, blk in enumerate(params["blocks"]):
+        window = cfg.window if cfg.kind == "swin" else None
+        ln1 = apply_layernorm(h, blk["ln1_g"], blk["ln1_b"], f"b{i}.ln1", ops, capture)
+        if cfg.kind == "swin" and i % 2 == 1:
+            # shifted windows couple neighbouring windows between blocks
+            shift = cfg.window // 4
+            ln1s = jnp.roll(ln1, shift, axis=1)
+            att = _attention(ln1s, blk, cfg, ops, window)
+            att = jnp.roll(att, -shift, axis=1)
+        else:
+            att = _attention(ln1, blk, cfg, ops, window)
+        h = h + att
+        ln2 = apply_layernorm(h, blk["ln2_g"], blk["ln2_b"], f"b{i}.ln2", ops, capture)
+        mlp = dense(jax.nn.gelu(dense(ln2, blk["w1"], blk["b1"], ops)), blk["w2"], blk["b2"], ops)
+        h = h + mlp
+
+    h = apply_layernorm(h, params["lnf_g"], params["lnf_b"], "lnf", ops, capture)
+    pooled = jnp.mean(h, axis=1)
+    return dense(pooled, params["head_w"], params["head_b"], ops)
+
+
+def capture_attn_logits(params: Params, x: jnp.ndarray, cfg: ModelConfig) -> list:
+    """Eager helper: exact forward that also returns every block's raw
+    attention logits (pre-softmax) for Fig 3 and softmax-scale studies."""
+    logits_all: list = []
+    ops = EXACT
+    if cfg.kind == "bert":
+        tokens = params["tok_emb"][x] + params["pos_emb"]
+    else:
+        b = x.shape[0]
+        n = cfg.img_size // cfg.patch
+        xp = x.reshape(b, n, cfg.patch, n, cfg.patch)
+        xp = xp.transpose(0, 1, 3, 2, 4).reshape(b, n * n, cfg.patch * cfg.patch)
+        tokens = dense(xp, params["patch_w"], params["patch_b"], ops) + params["pos_emb"]
+    h = tokens
+    for blk in params["blocks"]:
+        window = cfg.window if cfg.kind == "swin" else None
+        ln1 = layernorm_exact_jnp(h, blk["ln1_g"], blk["ln1_b"])
+        bdim, t, d = ln1.shape
+        hh, hd = cfg.heads, cfg.head_dim
+        qkv = (ln1 @ blk["wqkv"] + blk["bqkv"]).reshape(bdim, t, 3, hh, hd)
+        q, k = qkv[:, :, 0], qkv[:, :, 1]
+        if window is not None:
+            nw = t // window
+            qw = q.reshape(bdim, nw, window, hh, hd)
+            kw = k.reshape(bdim, nw, window, hh, hd)
+            lg = jnp.einsum("bnwhd,bnvhd->bnhwv", qw, kw) / math.sqrt(hd)
+        else:
+            lg = jnp.einsum("bthd,bshd->bhts", q, k) / math.sqrt(hd)
+        logits_all.append(lg)
+        att = _attention(ln1, blk, cfg, ops, window)
+        h = h + att
+        ln2 = layernorm_exact_jnp(h, blk["ln2_g"], blk["ln2_b"])
+        h = h + (jax.nn.gelu(ln2 @ blk["w1"] + blk["b1"]) @ blk["w2"] + blk["b2"])
+    return logits_all
+
+
+# ---------------------------------------------------------------------------
+# Model zoo (the paper's model list mapped to build-time-trainable surrogates)
+# ---------------------------------------------------------------------------
+
+MODEL_ZOO: dict[str, ModelConfig] = {
+    # Table I surrogates (CV)
+    "deit_t": ModelConfig(kind="vit", dim=64, depth=4, heads=4),
+    "deit_s": ModelConfig(kind="vit", dim=96, depth=6, heads=6),
+    "swin_t": ModelConfig(kind="swin", dim=64, depth=4, heads=4, window=16),
+    # Table II surrogate (NLP) — instantiated once per task
+    "bert": ModelConfig(kind="bert", dim=64, depth=4, heads=4, n_classes=2),
+}
+
+
+def bert_for_task(n_classes: int) -> ModelConfig:
+    return dataclasses.replace(MODEL_ZOO["bert"], n_classes=n_classes)

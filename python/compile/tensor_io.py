@@ -1,0 +1,68 @@
+"""Shared tensor container format (python writer <-> rust reader).
+
+A *bundle* is ``<name>.json`` + ``<name>.bin``: the JSON manifest lists the
+tensors (name, dtype, shape, byte offset, byte length) and the .bin file
+holds their raw little-endian data back to back.  Deliberately trivial so
+the Rust ``tensor/`` module can parse it with the in-tree JSON substrate —
+no npz/protobuf dependency on either side.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+_DTYPES = {
+    np.dtype(np.float32): "f32",
+    np.dtype(np.int32): "i32",
+    np.dtype(np.uint8): "u8",
+    np.dtype(np.int64): "i64",
+}
+_NP_FROM = {"f32": np.float32, "i32": np.int32, "u8": np.uint8, "i64": np.int64}
+
+
+def write_bundle(path_stem: Path, tensors: dict[str, np.ndarray]) -> None:
+    """Write ``{stem}.json`` + ``{stem}.bin`` for an ordered dict of arrays."""
+    path_stem.parent.mkdir(parents=True, exist_ok=True)
+    entries = []
+    blob = bytearray()
+    for name, arr in tensors.items():
+        arr = np.ascontiguousarray(arr)
+        if arr.dtype == np.float64:
+            arr = arr.astype(np.float32)
+        if arr.dtype == np.int64:
+            arr = arr.astype(np.int32)
+        dt = _DTYPES.get(arr.dtype)
+        if dt is None:
+            raise TypeError(f"unsupported dtype {arr.dtype} for {name}")
+        raw = arr.tobytes()  # C-order little-endian on all supported hosts
+        entries.append({
+            "name": name,
+            "dtype": dt,
+            "shape": list(arr.shape),
+            "offset": len(blob),
+            "nbytes": len(raw),
+        })
+        blob.extend(raw)
+    manifest = {"version": 1, "tensors": entries, "total_bytes": len(blob)}
+    Path(f"{path_stem}.json").write_text(json.dumps(manifest))
+    Path(f"{path_stem}.bin").write_bytes(bytes(blob))
+
+
+def read_bundle(path_stem: Path) -> dict[str, np.ndarray]:
+    manifest = json.loads(Path(f"{path_stem}.json").read_text())
+    blob = Path(f"{path_stem}.bin").read_bytes()
+    out: dict[str, np.ndarray] = {}
+    for e in manifest["tensors"]:
+        arr = np.frombuffer(
+            blob, dtype=_NP_FROM[e["dtype"]], count=int(np.prod(e["shape"], initial=1)),
+            offset=e["offset"],
+        ).reshape(e["shape"])
+        out[e["name"]] = arr.copy()
+    return out
+
+
+def bundle_exists(path_stem: Path) -> bool:
+    return Path(f"{path_stem}.json").exists() and Path(f"{path_stem}.bin").exists()

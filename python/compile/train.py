@@ -1,0 +1,142 @@
+"""Build-time trainer (exact ops only — SOLE is post-training, per the paper).
+
+Minimal Adam + cross-entropy on the synthetic datasets.  Trained weights are
+cached under ``artifacts/weights/<name>.npz`` so ``make artifacts`` is a
+no-op when nothing changed.
+"""
+
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import tensor_io
+from .model import EXACT, ModelConfig, Params, forward, init_params
+
+
+def _tree_map2(f, a, b):
+    return jax.tree_util.tree_map(f, a, b)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def accuracy(logits: np.ndarray, labels: np.ndarray) -> float:
+    return float((np.asarray(logits).argmax(-1) == np.asarray(labels)).mean())
+
+
+def train_model(
+    cfg: ModelConfig,
+    x_train: np.ndarray,
+    y_train: np.ndarray,
+    *,
+    steps: int = 800,
+    batch: int = 64,
+    lr: float = 1e-3,
+    seed: int = 0,
+    log_every: int = 200,
+    log=print,
+) -> Params:
+    """Train ``cfg`` with Adam; returns the trained params pytree."""
+    params = init_params(cfg, seed=seed)
+    m = jax.tree_util.tree_map(jnp.zeros_like, params)
+    v = jax.tree_util.tree_map(jnp.zeros_like, params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    def loss_fn(p, xb, yb):
+        return cross_entropy(forward(p, xb, cfg, EXACT), yb)
+
+    @jax.jit
+    def step(p, m, v, t, xb, yb):
+        loss, g = jax.value_and_grad(loss_fn)(p, xb, yb)
+        m = _tree_map2(lambda mi, gi: b1 * mi + (1 - b1) * gi, m, g)
+        v = _tree_map2(lambda vi, gi: b2 * vi + (1 - b2) * gi * gi, v, g)
+        corr1 = 1 - b1 ** t
+        corr2 = 1 - b2 ** t
+        p = _tree_map2(lambda pi, mi_vi: pi - lr * mi_vi, p,
+                       _tree_map2(lambda mi, vi: (mi / corr1) / (jnp.sqrt(vi / corr2) + eps), m, v))
+        return p, m, v, loss
+
+    rng = np.random.default_rng(seed)
+    n = len(x_train)
+    t0 = time.time()
+    for t in range(1, steps + 1):
+        idx = rng.integers(0, n, size=batch)
+        xb = jnp.asarray(x_train[idx])
+        yb = jnp.asarray(y_train[idx])
+        params, m, v, loss = step(params, m, v, t, xb, yb)
+        if t % log_every == 0 or t == 1:
+            log(f"    step {t:5d}  loss {float(loss):.4f}  ({time.time()-t0:.1f}s)")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# npz (de)serialization of the params pytree
+# ---------------------------------------------------------------------------
+
+def _flatten(params: Params, prefix: str = "") -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    if isinstance(params, dict):
+        for k, val in params.items():
+            out.update(_flatten(val, f"{prefix}{k}/"))
+    elif isinstance(params, list):
+        for i, val in enumerate(params):
+            out.update(_flatten(val, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(params)
+    return out
+
+
+def _unflatten(flat: dict[str, np.ndarray]) -> Params:
+    root: dict = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(val)
+
+    def listify(node):
+        if isinstance(node, dict):
+            if node and all(k.isdigit() for k in node):
+                return [listify(node[str(i)]) for i in range(len(node))]
+            return {k: listify(v) for k, v in node.items()}
+        return node
+
+    return listify(root)
+
+
+def save_params(stem: Path, params: Params) -> None:
+    tensor_io.write_bundle(stem, _flatten(params))
+
+
+def load_params(stem: Path) -> Params:
+    return _unflatten(tensor_io.read_bundle(stem))
+
+
+def train_or_load(
+    name: str,
+    cfg: ModelConfig,
+    x_train: np.ndarray,
+    y_train: np.ndarray,
+    weights_dir: Path,
+    *,
+    steps: int,
+    seed: int = 0,
+    batch: int = 64,
+    log=print,
+) -> Params:
+    path = weights_dir / name
+    if tensor_io.bundle_exists(path):
+        log(f"  [{name}] cached weights {path}")
+        return load_params(path)
+    log(f"  [{name}] training ({steps} steps)...")
+    params = train_model(cfg, x_train, y_train, steps=steps, seed=seed, batch=batch, log=log)
+    save_params(path, params)
+    return params

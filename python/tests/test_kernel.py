@@ -1,0 +1,159 @@
+"""Pallas kernel vs ref.py — the core L1 correctness signal.
+
+Hypothesis sweeps shapes/seeds; bit-exact assertions in the
+mantissa-exact regime (L <= 512 for E2Softmax), tolerance assertions
+beyond it.  interpret=True throughout (CPU).
+"""
+
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax.numpy as jnp  # noqa: E402
+
+from compile.kernels import ref  # noqa: E402
+from compile.kernels import e2softmax as e2  # noqa: E402
+from compile.kernels import ailayernorm as ail  # noqa: E402
+
+
+def _codes(x_row: np.ndarray, e: int = 4) -> np.ndarray:
+    return np.clip(np.round((x_row - x_row.max()) * (1 << e)), -255, 0).astype(int)
+
+
+class TestE2SoftmaxKernel:
+    @given(
+        rows=st.integers(min_value=1, max_value=6),
+        nchunks=st.integers(min_value=1, max_value=8),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        scale=st.sampled_from([0.5, 2.0, 8.0]),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_bitexact_vs_ref(self, rows, nchunks, seed, scale):
+        v = 32
+        length = v * nchunks
+        rng = np.random.default_rng(seed)
+        x = rng.normal(0, scale, (rows, length)).astype(np.float32)
+        probs, codes = e2.e2softmax(jnp.array(x), v=v, block_rows=4)
+        probs = np.asarray(probs)
+        codes = np.asarray(codes)
+        for r in range(rows):
+            gold = ref.e2softmax_online_int(_codes(x[r]), chunk=v)
+            np.testing.assert_array_equal(np.array(gold["out_f"]), probs[r])
+            np.testing.assert_array_equal(
+                np.array(gold["out_u8"], dtype=np.float32), codes[r])
+
+    def test_lane_width_16(self):
+        rng = np.random.default_rng(0)
+        x = rng.normal(0, 2, (3, 48)).astype(np.float32)
+        probs, _ = e2.e2softmax(jnp.array(x), v=16)
+        for r in range(3):
+            gold = ref.e2softmax_online_int(_codes(x[r]), chunk=16)
+            np.testing.assert_array_equal(np.array(gold["out_f"]), np.asarray(probs)[r])
+
+    def test_large_row_tolerance(self):
+        """L = 1024 exceeds the f32-exact sum regime; the result may land on
+        a neighbouring quantization step but stays within 1% of ref."""
+        rng = np.random.default_rng(1)
+        x = rng.normal(0, 2, (2, 1024)).astype(np.float32)
+        probs, _ = e2.e2softmax(jnp.array(x), v=32)
+        for r in range(2):
+            gold = np.array(ref.e2softmax_online_int(_codes(x[r]), chunk=32)["out_f"])
+            p = np.asarray(probs)[r]
+            mask = gold > 0
+            assert np.abs(p[mask] / gold[mask] - 1).max() < 0.01
+
+    def test_batch_dims_preserved(self):
+        rng = np.random.default_rng(2)
+        x = rng.normal(0, 1, (2, 3, 5, 64)).astype(np.float32)
+        probs, codes = e2.e2softmax(jnp.array(x))
+        assert probs.shape == x.shape and codes.shape == x.shape
+        flat, _ = e2.e2softmax(jnp.array(x.reshape(-1, 64)))
+        np.testing.assert_array_equal(np.asarray(probs).reshape(-1, 64), np.asarray(flat))
+
+    def test_rejects_bad_length(self):
+        with pytest.raises(ValueError):
+            e2.e2softmax(jnp.zeros((2, 33)), v=32)
+
+    def test_row_sum_near_one(self):
+        rng = np.random.default_rng(3)
+        x = rng.normal(0, 2, (16, 128)).astype(np.float32)
+        probs, _ = e2.e2softmax(jnp.array(x))
+        sums = np.asarray(probs).sum(-1)
+        assert np.all(sums > 0.6) and np.all(sums < 1.5)
+
+
+class TestAILayerNormKernel:
+    @given(
+        rows=st.integers(min_value=1, max_value=6),
+        cdim=st.sampled_from([16, 64, 192, 384]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        amax=st.integers(min_value=0, max_value=5),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_matches_int_ref(self, rows, cdim, seed, amax):
+        rng = np.random.default_rng(seed)
+        codes = rng.integers(0, 256, size=(rows, cdim))
+        alpha = rng.integers(0, amax + 1, size=cdim)
+        gamma = rng.normal(1, 0.2, cdim)
+        beta = rng.normal(0, 0.2, cdim)
+        out = np.asarray(ail.ailayernorm(
+            jnp.array(codes, dtype=jnp.float32), jnp.array(alpha, dtype=jnp.float32),
+            jnp.array(gamma, dtype=jnp.float32), jnp.array(beta, dtype=jnp.float32),
+            zp=128, block_rows=4))
+        for r in range(rows):
+            gold = ref.ailayernorm_int(codes[r], alpha, 128, gamma, beta)
+            scale = max(1.0, np.abs(gold["y"]).max())
+            assert np.abs(gold["y"] - out[r]).max() / scale < 1e-4
+
+    def test_constant_row(self):
+        """var = 0 -> std_inv = 0 -> output = beta."""
+        c = 32
+        codes = jnp.full((2, c), 130.0)
+        out = np.asarray(ail.ailayernorm(
+            codes, jnp.zeros(c), jnp.ones(c), jnp.full(c, 0.25), zp=128))
+        np.testing.assert_allclose(out, 0.25, atol=1e-6)
+
+    def test_rsqrt_lut_matches_ref(self):
+        rng = np.random.default_rng(4)
+        vars_ = rng.uniform(0.5, 1e9, 200).astype(np.float32)
+        got = np.asarray(ail.rsqrt_lut_f(jnp.array(vars_)))
+        for v, g in zip(vars_, got):
+            num, den = int(np.float64(v) * 2**20), 2**20
+            expect = ref.rsqrt_hw(num, den)
+            assert abs(g / expect - 1) < 2e-3
+
+    def test_batch_dims_preserved(self):
+        rng = np.random.default_rng(5)
+        codes = rng.integers(0, 256, size=(2, 4, 64)).astype(np.float32)
+        c = 64
+        out = ail.ailayernorm(jnp.array(codes), jnp.zeros(c), jnp.ones(c),
+                              jnp.zeros(c), zp=128)
+        assert out.shape == codes.shape
+
+
+class TestModelIntegration:
+    """The kernels inside a jitted forward (the path AOT lowers)."""
+
+    def test_sole_forward_runs_and_tracks_exact(self):
+        import jax
+        from compile.model import MODEL_ZOO, OpsConfig, EXACT, forward, init_params
+        from compile import calibrate
+
+        cfg = MODEL_ZOO["deit_t"]
+        params = init_params(cfg, seed=0)
+        rng = np.random.default_rng(0)
+        x = jnp.array(rng.normal(0, 1, (2, 32, 32, 1)).astype(np.float32))
+        ln_calib = calibrate.ptf_calibrate(params, x, cfg)
+        ops = OpsConfig(softmax="sole", layernorm="sole", ln_calib=ln_calib)
+        exact = np.asarray(jax.jit(lambda a: forward(params, a, cfg, EXACT))(x))
+        sole = np.asarray(jax.jit(lambda a: forward(params, a, cfg, ops))(x))
+        assert sole.shape == exact.shape
+        assert np.isfinite(sole).all()
+        # logits stay correlated — SOLE is an approximation, not noise
+        cc = np.corrcoef(exact.ravel(), sole.ravel())[0, 1]
+        assert cc > 0.95

@@ -1,0 +1,271 @@
+"""Unit + property tests for the reference oracles (kernels/ref.py).
+
+These pin the paper's numeric claims:
+  - Eq. 8  : Log2Exp shift-add == round(-x/ln2) within 1 step (approx 1.4375)
+  - Eq. 13 : ALDivision is the unbiased variant (E[err] ~ 0 over uniform s)
+  - Eq. 17 : divider output constants 0.818 / 0.568
+  - SqIII-C: dynamic compression error ~0.2% on E(x^2), ~0.4% on sigma
+             for uniform inputs
+"""
+
+import math
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from compile.kernels import ref  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# Log2Exp
+# ---------------------------------------------------------------------------
+
+class TestLog2Exp:
+    def test_zero(self):
+        assert ref.log2exp_int(0) == 0
+
+    def test_saturation(self):
+        assert ref.log2exp_int(-255) == 15
+        assert ref.log2exp_int(-200, e=4) == 15
+
+    @given(st.integers(min_value=-255, max_value=0), st.integers(min_value=3, max_value=6))
+    @settings(max_examples=300, deadline=None)
+    def test_matches_ideal(self, d, e):
+        """Shift-add 1.4375 approx of 1/ln2=1.4427 stays within 1 of ideal."""
+        k = ref.log2exp_int(d, e)
+        ideal = min(max(round(-d * 2.0 ** (-e) / math.log(2)), 0), 15)
+        assert abs(k - ideal) <= 1
+
+    @given(st.integers(min_value=-255, max_value=0), st.integers(min_value=3, max_value=6))
+    @settings(max_examples=300, deadline=None)
+    def test_float_twin_exact(self, d, e):
+        kf = ref.log2exp_f(np.array([float(d)]), e)[0]
+        assert kf == ref.log2exp_int(d, e)
+
+    def test_monotone(self):
+        ks = [ref.log2exp_int(d) for d in range(0, -256, -1)]
+        assert all(a <= b for a, b in zip(ks, ks[1:]))
+
+
+# ---------------------------------------------------------------------------
+# ALDivision
+# ---------------------------------------------------------------------------
+
+class TestALDivision:
+    def test_eq17_constants(self):
+        # k_y = 0, sum = 2^15 (s'=0): out = 1.636/2 = 0.818
+        o23, _ = ref.aldivision_int(0, 1 << 15)
+        assert abs(o23 / (1 << 23) - 0.818) < 1e-3
+        # s' = 1: out = 1.136/2 = 0.568
+        o23, _ = ref.aldivision_int(0, (1 << 15) | (1 << 14))
+        assert abs(o23 / (1 << 23) - 0.568) < 1e-3
+
+    def test_unbiased(self):
+        """Mean relative error vs exact division ~ 0 (the -0.636/2 fix)."""
+        rng = np.random.default_rng(3)
+        rel = []
+        for _ in range(4000):
+            k_y = int(rng.integers(0, 8))
+            s = int(rng.integers(1 << 15, 1 << 20))
+            o23, _ = ref.aldivision_int(k_y, s)
+            exact = 2.0 ** (-k_y) / (s / 2 ** 15)
+            rel.append(o23 / (1 << 23) / exact - 1.0)
+        assert abs(np.mean(rel)) < 0.03
+        assert np.max(np.abs(rel)) < 0.25  # Mitchell-style bounded error
+
+    @given(st.integers(min_value=0, max_value=30),
+           st.integers(min_value=1 << 15, max_value=1 << 26))
+    @settings(max_examples=300, deadline=None)
+    def test_code_consistent(self, k_y, s):
+        o23, o8 = ref.aldivision_int(k_y, s)
+        assert 0 <= o8 <= 255
+        # code is round-half-up of the Q23 value to 8 bits
+        expect = min((o23 + (1 << 14)) >> 15, 255)
+        assert o8 == expect
+
+
+# ---------------------------------------------------------------------------
+# E2Softmax end-to-end properties
+# ---------------------------------------------------------------------------
+
+class TestE2Softmax:
+    @given(st.lists(st.integers(min_value=-255, max_value=0), min_size=1, max_size=200),
+           st.sampled_from([1, 32]))
+    @settings(max_examples=150, deadline=None)
+    def test_outputs_in_range(self, q, chunk):
+        out = ref.e2softmax_online_int(np.array(q), chunk=chunk)
+        assert all(0.0 <= v <= 0.818 + 1e-9 for v in out["out_f"])
+        assert all(0 <= k <= 15 for k in out["k"])
+        assert out["sum_q15"] >= 1 << 15  # global max contributes 2^0
+
+    @given(st.lists(st.integers(min_value=-200, max_value=0), min_size=2, max_size=100))
+    @settings(max_examples=100, deadline=None)
+    def test_order_preserved(self, q):
+        """Softmax is monotone up to one quantization step: the online
+        scheme rounds k_i and the stage-2 correction separately (both
+        saturating at 15), so single-step inversions are possible and the
+        saturated tail (p < ~1e-3) may reorder freely — mirrors the Rust
+        monotone_in_input test."""
+        out = ref.e2softmax_online_int(np.array(q), chunk=1)
+        o = out["out_q23"]
+        tail = 1 << 13  # ~1e-3 in Q23
+        for i in range(len(q)):
+            for j in range(i + 1, len(q)):
+                if q[i] > q[j] and o[j] >= tail:
+                    assert 2 * o[i] >= o[j], (i, j, o[i], o[j])
+
+    def test_close_to_exact_softmax(self):
+        rng = np.random.default_rng(5)
+        errs = []
+        for _ in range(50):
+            x = rng.normal(0, 2, 64)
+            p = ref.softmax_exact(x[None, :])[0]
+            q = np.clip(np.round((x - x.max()) * 16), -255, 0).astype(int)
+            o = np.array(ref.e2softmax_online_int(q, chunk=32)["out_f"])
+            errs.append(np.abs(o - p).max())
+        # paper: worst-case softmax error small enough for <1% model drop
+        assert np.mean(errs) < 0.08
+
+    def test_chunked_equals_flat_when_sorted_desc(self):
+        """With a descending row the running max never changes, so chunking
+        cannot alter any intermediate."""
+        q = np.sort(np.random.default_rng(9).integers(-200, 0, 64))[::-1]
+        a = ref.e2softmax_online_int(q, chunk=1)
+        b = ref.e2softmax_online_int(q, chunk=32)
+        assert a["out_q23"] == b["out_q23"]
+        assert a["sum_q15"] == b["sum_q15"]
+
+    def test_twopass_float_matches_online_roughly(self):
+        rng = np.random.default_rng(6)
+        x = rng.normal(0, 2, (8, 96))
+        tp = ref.e2softmax_twopass_f(x)
+        for r in range(8):
+            q = np.clip(np.round((x[r] - x[r].max()) * 16), -255, 0).astype(int)
+            on = np.array(ref.e2softmax_online_int(q, chunk=32)["out_f"])
+            # online sum truncation can flip one k_s/s1 step; bounded by 2x
+            assert np.abs(on - tp[r]).max() < 0.08
+
+
+# ---------------------------------------------------------------------------
+# Dynamic compression + AILayerNorm
+# ---------------------------------------------------------------------------
+
+class TestCompress:
+    @given(st.integers(min_value=0, max_value=255))
+    @settings(max_examples=256, deadline=None)
+    def test_reconstruction_bound(self, x):
+        y, s = ref.dynamic_compress_int(x)
+        assert 0 <= y <= 15
+        rec = y << (2 + 2 * s)
+        lsb = 1 << (2 + 2 * s)
+        # round-to-nearest: |x - rec| <= lsb/2 except where y clamps at 15
+        clamped = (s == 0 and x >= 62) or (s == 1 and x >= 248)
+        assert abs(x - rec) <= (lsb if clamped else lsb // 2)
+
+    def test_paper_error_claim_uniform(self):
+        """~0.2% error on E(x^2), ~0.4% on sigma for uniform u8 inputs."""
+        rng = np.random.default_rng(21)
+        xs = rng.integers(0, 256, size=200_000)
+        sq_true = (xs.astype(np.float64) ** 2)
+        rec = []
+        for x in xs:
+            y, s = ref.dynamic_compress_int(int(x))
+            rec.append(ref.SQUARE_LUT[y] << (4 * s + 4))
+        rec = np.array(rec, dtype=np.float64)
+        err_ex2 = abs(rec.mean() - sq_true.mean()) / sq_true.mean()
+        assert err_ex2 < 0.02  # paper: 0.2%; truncation bias stays O(1%)
+        std_true = np.sqrt(sq_true.mean() - xs.mean() ** 2)
+        std_rec = np.sqrt(max(rec.mean() - xs.mean() ** 2, 0))
+        assert abs(std_rec - std_true) / std_true < 0.02
+
+
+class TestAILayerNorm:
+    def _calibrated(self, rng, c, rows=8, outlier=True):
+        x = rng.normal(0, 1, (rows, c))
+        if outlier:
+            x = x * (1 + 6 * (rng.random(c) > 0.92))
+        r_c = np.abs(x).max(0) + 1e-9
+        base = max(np.quantile(r_c, 0.1), 1e-9)
+        alpha = np.clip(np.round(np.log2(r_c / base)), 0, 5).astype(int)
+        s = (r_c / 2.0 ** alpha).max() / 127.0
+        return x, alpha, s
+
+    def test_close_to_exact(self):
+        rng = np.random.default_rng(31)
+        c = 128
+        x, alpha, s = self._calibrated(rng, c)
+        g = rng.normal(1, 0.1, c)
+        b = rng.normal(0, 0.1, c)
+        y_ex = ref.layernorm_exact(x, g, b)
+        y_ai = ref.ailayernorm_f(x, alpha, s, 128, g, b)
+        rms = np.sqrt(((y_ai - y_ex) ** 2).mean()) / np.sqrt((y_ex ** 2).mean())
+        assert rms < 0.15
+
+    def test_int_float_agree(self):
+        rng = np.random.default_rng(33)
+        c = 96
+        x, alpha, s = self._calibrated(rng, c)
+        g = rng.normal(1, 0.1, c)
+        b = rng.normal(0, 0.1, c)
+        codes = np.clip(np.round(x / (s * 2.0 ** alpha)) + 128, 0, 255).astype(int)
+        for r in range(len(x)):
+            gold = ref.ailayernorm_int(codes[r], alpha, 128, g, b)
+            yf = ref.ailayernorm_f(x[r:r + 1], alpha.astype(float), s, 128, g, b,
+                                   lut_rsqrt=True)[0]
+            assert np.abs(gold["y"] - yf).max() < 1e-6
+
+    @given(st.integers(min_value=8, max_value=256))
+    @settings(max_examples=40, deadline=None)
+    def test_statistics_shift_invariance(self, c):
+        """Adding a constant (via zp) must not change the normalized output
+        beyond compression effects on magnitudes."""
+        rng = np.random.default_rng(c)
+        codes = rng.integers(96, 160, size=c)
+        alpha = np.zeros(c, dtype=int)
+        g = np.ones(c)
+        b = np.zeros(c)
+        out = ref.ailayernorm_int(codes, alpha, 128, g, b)
+        assert abs(float(np.mean(out["y"]))) < 0.3  # normalized: near-zero mean
+
+    def test_rsqrt_lut_accuracy(self):
+        rng = np.random.default_rng(41)
+        for _ in range(200):
+            num = int(rng.integers(1, 1 << 40))
+            den = int(rng.integers(1, 1 << 16))
+            approx = ref.rsqrt_hw(num, den)
+            exact = 1.0 / math.sqrt(num / den)
+            assert abs(approx / exact - 1.0) < 0.012  # 64-entry LUT: <1.2%
+
+
+# ---------------------------------------------------------------------------
+# Prior-work baselines sanity (they should also be decent approximations)
+# ---------------------------------------------------------------------------
+
+class TestBaselines:
+    def test_softermax_close(self):
+        rng = np.random.default_rng(51)
+        x = rng.normal(0, 2, (16, 64))
+        p = ref.softmax_exact(x)
+        q = ref.softermax_f(x)
+        assert np.abs(p - q).max() < 0.05
+
+    def test_ibert_close(self):
+        rng = np.random.default_rng(52)
+        x = rng.normal(0, 2, (16, 64))
+        p = ref.softmax_exact(x)
+        q = ref.ibert_softmax_f(x)
+        assert np.abs(p - q).max() < 0.05
+
+    def test_ibert_layernorm_close(self):
+        rng = np.random.default_rng(53)
+        x = rng.normal(0, 1.5, (16, 64))
+        g = np.ones(64)
+        b = np.zeros(64)
+        a = ref.layernorm_exact(x, g, b)
+        c = ref.ibert_layernorm_f(x, g, b)
+        assert np.sqrt(((a - c) ** 2).mean()) < 0.1

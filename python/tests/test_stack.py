@@ -1,0 +1,145 @@
+"""Build-time stack tests: datasets, tensor bundles, params (de)serialization,
+PTF calibration, and the prior-work jnp twins inside the model."""
+
+import sys
+import tempfile
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax.numpy as jnp  # noqa: E402
+
+from compile import calibrate, data, tensor_io, train  # noqa: E402
+from compile.model import (  # noqa: E402
+    EXACT, MODEL_ZOO, OpsConfig, bert_for_task, forward, init_params,
+)
+
+
+class TestData:
+    def test_deterministic(self):
+        a = data.shapes_dataset(32, seed=1)
+        b = data.shapes_dataset(32, seed=1)
+        np.testing.assert_array_equal(a[0], b[0])
+        np.testing.assert_array_equal(a[1], b[1])
+
+    def test_shapes(self):
+        x, y = data.shapes_dataset(16, seed=2)
+        assert x.shape == (16, 32, 32, 1) and x.dtype == np.float32
+        assert y.shape == (16,) and set(y) <= set(range(10))
+
+    def test_tokens_all_tasks(self):
+        for task in data.NLP_TASKS:
+            x, y = data.tokens_dataset(task, 64, seed=3)
+            assert x.shape == (64, data.SEQ_LEN)
+            assert x.min() >= 0 and x.max() < data.VOCAB
+            ncls = data.task_num_classes(task)
+            assert y.min() >= 0 and y.max() < ncls
+
+    def test_labels_learnable_not_constant(self):
+        """Every task must have both labels present (non-degenerate)."""
+        for task in data.NLP_TASKS:
+            _, y = data.tokens_dataset(task, 256, seed=4)
+            assert len(np.unique(y)) >= 2, task
+
+
+class TestTensorIO:
+    def test_roundtrip(self):
+        with tempfile.TemporaryDirectory() as d:
+            stem = Path(d) / "bundle"
+            tensors = {
+                "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+                "b/c": np.array([1, 2, 3], dtype=np.int32),
+                "u": np.arange(8, dtype=np.uint8),
+            }
+            tensor_io.write_bundle(stem, tensors)
+            back = tensor_io.read_bundle(stem)
+            assert set(back) == set(tensors)
+            for k in tensors:
+                np.testing.assert_array_equal(back[k], tensors[k])
+
+    def test_f64_downcast(self):
+        with tempfile.TemporaryDirectory() as d:
+            stem = Path(d) / "b"
+            tensor_io.write_bundle(stem, {"x": np.ones(3, dtype=np.float64)})
+            assert tensor_io.read_bundle(stem)["x"].dtype == np.float32
+
+
+class TestParamsRoundtrip:
+    def test_flatten_unflatten(self):
+        cfg = MODEL_ZOO["deit_t"]
+        p = init_params(cfg, seed=7)
+        flat = train._flatten(p)
+        back = train._unflatten(flat)
+        x = jnp.zeros((1, 32, 32, 1))
+        a = np.asarray(forward(p, x, cfg, EXACT))
+        b = np.asarray(forward(back, x, cfg, EXACT))
+        np.testing.assert_array_equal(a, b)
+
+    def test_save_load(self):
+        cfg = bert_for_task(2)
+        p = init_params(cfg, seed=8)
+        with tempfile.TemporaryDirectory() as d:
+            stem = Path(d) / "w"
+            train.save_params(stem, p)
+            q = train.load_params(stem)
+        x = jnp.zeros((2, cfg.seq_len), dtype=jnp.int32)
+        np.testing.assert_allclose(np.asarray(forward(p, x, cfg, EXACT)),
+                                   np.asarray(forward(q, x, cfg, EXACT)), rtol=1e-6)
+
+
+class TestCalibration:
+    def test_ptf_covers_all_lns(self):
+        cfg = MODEL_ZOO["deit_t"]
+        p = init_params(cfg, seed=9)
+        x = jnp.array(np.random.default_rng(0).normal(0, 1, (4, 32, 32, 1)),
+                      dtype=jnp.float32)
+        cal = calibrate.ptf_calibrate(p, x, cfg)
+        expect = {f"b{i}.ln{j}" for i in range(cfg.depth) for j in (1, 2)} | {"lnf"}
+        assert set(cal) == expect
+        for entry in cal.values():
+            assert len(entry["alpha"]) == cfg.dim
+            assert entry["s"] > 0
+            assert all(0 <= a <= calibrate.ALPHA_MAX for a in entry["alpha"])
+
+    def test_outlier_channel_gets_larger_alpha(self):
+        cfg = MODEL_ZOO["deit_t"]
+        p = init_params(cfg, seed=10)
+        # inflate one channel of ln gamma path via pos_emb
+        p["pos_emb"] = p["pos_emb"].at[:, 5].mul(50.0)
+        x = jnp.array(np.random.default_rng(1).normal(0, 1, (4, 32, 32, 1)),
+                      dtype=jnp.float32)
+        cal = calibrate.ptf_calibrate(p, x, cfg)
+        a = np.array(cal["b0.ln1"]["alpha"])
+        assert a[5] >= np.median(a)
+
+
+class TestModelVariants:
+    @pytest.mark.parametrize("softmax", ["exact", "softermax", "ibert"])
+    def test_softmax_variants_finite(self, softmax):
+        cfg = bert_for_task(2)
+        p = init_params(cfg, seed=11)
+        x = jnp.array(np.random.default_rng(2).integers(0, cfg.vocab, (2, cfg.seq_len)),
+                      dtype=jnp.int32)
+        out = np.asarray(forward(p, x, cfg, OpsConfig(softmax=softmax)))
+        assert np.isfinite(out).all()
+
+    def test_int8_close_to_fp32(self):
+        cfg = MODEL_ZOO["deit_t"]
+        p = init_params(cfg, seed=12)
+        x = jnp.array(np.random.default_rng(3).normal(0, 1, (2, 32, 32, 1)),
+                      dtype=jnp.float32)
+        a = np.asarray(forward(p, x, cfg, EXACT))
+        b = np.asarray(forward(p, x, cfg, OpsConfig(matmul="int8")))
+        assert np.corrcoef(a.ravel(), b.ravel())[0, 1] > 0.99
+
+    def test_swin_windows(self):
+        cfg = MODEL_ZOO["swin_t"]
+        p = init_params(cfg, seed=13)
+        x = jnp.array(np.random.default_rng(4).normal(0, 1, (2, 32, 32, 1)),
+                      dtype=jnp.float32)
+        out = np.asarray(forward(p, x, cfg, EXACT))
+        assert out.shape == (2, cfg.n_classes)
+        assert np.isfinite(out).all()

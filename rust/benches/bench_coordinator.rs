@@ -1,0 +1,41 @@
+//! Coordinator hot path: submit->batch->execute->respond over the software
+//! backend (no PJRT), isolating router/batcher overhead.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sole::coordinator::{BatchPolicy, Coordinator, SoftwareSoftmaxBackend};
+use sole::util::bench::{bench, report};
+
+fn main() {
+    println!("bench_coordinator — routing + batching overhead (software backend)");
+    for &(wait_ms, nreq) in &[(0u64, 256usize), (2, 256), (5, 256)] {
+        let be = Arc::new(SoftwareSoftmaxBackend::new(128, vec![1, 4, 8, 16]));
+        let co = Coordinator::start(
+            be,
+            BatchPolicy { max_wait: Duration::from_millis(wait_ms), max_batch: 16 },
+            2,
+        );
+        let cl = co.client();
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..nreq).map(|_| cl.submit(vec![0.3; 128]).unwrap()).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let dt = t0.elapsed();
+        println!(
+            "max_wait={wait_ms}ms: {nreq} reqs in {dt:?} ({:.0} req/s), {}",
+            nreq as f64 / dt.as_secs_f64(),
+            co.metrics.summary()
+        );
+        co.shutdown();
+    }
+    // raw single-request round-trip latency
+    let be = Arc::new(SoftwareSoftmaxBackend::new(128, vec![1]));
+    let co = Coordinator::start(be, BatchPolicy { max_wait: Duration::ZERO, max_batch: 1 }, 1);
+    let cl = co.client();
+    report(&bench("single-request round trip", Duration::from_millis(400), || {
+        cl.infer(vec![0.3; 128]).unwrap();
+    }));
+    co.shutdown();
+}

@@ -1,0 +1,49 @@
+//! End-to-end PJRT execution: per-batch latency and images/s for every
+//! lowered deit_t variant (the serving-side counterpart of Fig 6(b)).
+//! Needs artifacts; prints a notice and exits cleanly otherwise.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use sole::runtime::Engine;
+use sole::tensor::Bundle;
+use sole::util::bench::{bench, report};
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("bench_e2e: no artifacts (run `make artifacts`) — skipping");
+        return;
+    }
+    let engine = Engine::open(&dir).unwrap();
+    let data = Bundle::load(&dir.join("data/cv_eval")).unwrap();
+    let xs = data.get("x").unwrap().as_f32().unwrap();
+    let item = 32 * 32;
+    println!("bench_e2e — PJRT artifact execution (deit_t)");
+    for variant in ["fp32", "fp32_sole", "int8", "int8_sole"] {
+        let ids = engine.find("deit_t", variant);
+        let Some(id) = ids.iter().find(|i| i.ends_with("_b64")) else { continue };
+        let m = engine.load(id).unwrap();
+        let b = m.batch();
+        let input = &xs[..b * item];
+        let r = bench(&format!("deit_t/{variant} b{b}"), Duration::from_millis(1500), || {
+            std::hint::black_box(m.run_f32(std::hint::black_box(input)).unwrap());
+        });
+        report(&r);
+        println!("    -> {:.1} img/s", b as f64 * r.per_sec());
+    }
+    // bucketed serving artifacts: latency vs batch for fp32_sole
+    for bkt in [1usize, 4, 8, 16] {
+        let id = format!("deit_t_fp32_sole_b{bkt}");
+        if engine.manifest.get(&id).is_none() {
+            continue;
+        }
+        let m = engine.load(&id).unwrap();
+        let input = &xs[..bkt * item];
+        let r = bench(&format!("deit_t/fp32_sole bucket b{bkt}"), Duration::from_millis(800), || {
+            std::hint::black_box(m.run_f32(std::hint::black_box(input)).unwrap());
+        });
+        report(&r);
+        println!("    -> {:.1} img/s", bkt as f64 * r.per_sec());
+    }
+}

@@ -1,0 +1,34 @@
+//! Hardware-model evaluation speed + the Table III / Fig 6(a) numbers as a
+//! bench target (regenerates the paper's efficiency rows).
+
+use std::time::Duration;
+
+use sole::experiments;
+use sole::hw::units::{AiLayerNormUnit, E2SoftmaxUnit, HwUnit, NnLutLayerNormUnit, SoftermaxUnit};
+use sole::util::bench::{bench, report};
+
+fn main() {
+    println!("bench_hw_units — cycle/energy/area model evaluation");
+    let sm = E2SoftmaxUnit::default();
+    let soft = SoftermaxUnit::default();
+    let ln = AiLayerNormUnit::default();
+    let nn = NnLutLayerNormUnit::default();
+    report(&bench("e2softmax_unit energy+area model", Duration::from_millis(200), || {
+        std::hint::black_box((sm.energy_per_row(785), sm.area()));
+    }));
+    report(&bench("softermax_unit energy+area model", Duration::from_millis(200), || {
+        std::hint::black_box((soft.energy_per_row(785), soft.area()));
+    }));
+    report(&bench("ailayernorm_unit energy+area model", Duration::from_millis(200), || {
+        std::hint::black_box((ln.energy_per_row(192), ln.area()));
+    }));
+    report(&bench("nnlut_unit energy+area model", Duration::from_millis(200), || {
+        std::hint::black_box((nn.energy_per_row(192), nn.area()));
+    }));
+    // regenerate the paper tables that depend only on the models
+    experiments::table3::run().print();
+    experiments::fig6::run_a(&[1, 2, 4, 8, 16]).print();
+    experiments::fig6::run_b(&[1, 4, 8, 16]).print();
+    experiments::fig1::run(8).print();
+    experiments::compress_error::run().print();
+}

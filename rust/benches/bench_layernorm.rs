@@ -1,0 +1,35 @@
+//! Bit-exact AILayerNorm vs exact/I-BERT software baselines across the
+//! paper's channel widths (DeiT-T 192 ... BERT 768).
+
+use std::time::Duration;
+
+use sole::layernorm::ai::layernorm_exact;
+use sole::layernorm::baselines::ibert_layernorm;
+use sole::layernorm::AiLayerNorm;
+use sole::util::bench::{bench, report};
+use sole::util::rng::Rng;
+
+fn main() {
+    println!("bench_layernorm — software implementations, rows of C channels");
+    let mut rng = Rng::new(2);
+    for &c in &[64usize, 192, 384, 768] {
+        let codes: Vec<u8> = (0..c).map(|_| rng.range_i64(0, 256) as u8).collect();
+        let alpha: Vec<u8> = (0..c).map(|_| rng.range_i64(0, 4) as u8).collect();
+        let gamma = vec![1f32; c];
+        let beta = vec![0f32; c];
+        let x: Vec<f32> = codes.iter().map(|&v| (v as f32 - 128.0) / 32.0).collect();
+        let ln = AiLayerNorm::default();
+        let mut out = vec![0f32; c];
+        let r = bench(&format!("ailayernorm C={c}"), Duration::from_millis(300), || {
+            ln.forward_row_f32(std::hint::black_box(&codes), &alpha, &gamma, &beta, &mut out);
+        });
+        report(&r);
+        println!("    -> {:.1} M elem/s", c as f64 * r.per_sec() / 1e6);
+        report(&bench(&format!("layernorm_exact C={c}"), Duration::from_millis(300), || {
+            std::hint::black_box(layernorm_exact(std::hint::black_box(&x), &gamma, &beta, 1e-6));
+        }));
+        report(&bench(&format!("ibert layernorm C={c}"), Duration::from_millis(300), || {
+            std::hint::black_box(ibert_layernorm(std::hint::black_box(&x), &gamma, &beta, 1.0 / 64.0));
+        }));
+    }
+}

@@ -1,0 +1,36 @@
+//! Bit-exact softmax kernels: throughput of the coordinator's software hot
+//! path across the paper's row lengths (the shapes behind Fig 6a).
+
+use std::time::Duration;
+
+use sole::softmax::baselines::{ibert_softmax, softermax};
+use sole::softmax::e2::{softmax_exact, E2Scratch};
+use sole::softmax::{E2Softmax, E2SoftmaxConfig};
+use sole::util::bench::{bench, report};
+use sole::util::rng::Rng;
+
+fn main() {
+    println!("bench_softmax — software implementations, rows of length L");
+    let mut rng = Rng::new(1);
+    for &l in &[49usize, 128, 785, 1024] {
+        let q: Vec<i64> = (0..l).map(|_| -rng.range_i64(0, 256)).collect();
+        let x: Vec<f32> = q.iter().map(|&v| v as f32 / 16.0).collect();
+        let sm = E2Softmax::new(E2SoftmaxConfig::default());
+        let mut out = vec![0f32; l];
+        let mut scratch = E2Scratch::default();
+        let r = bench(&format!("e2softmax(chunked-online) L={l}"), Duration::from_millis(300), || {
+            sm.forward_row_f32(std::hint::black_box(&q), &mut out, &mut scratch);
+        });
+        report(&r);
+        println!("    -> {:.1} M elem/s", l as f64 * r.per_sec() / 1e6);
+        report(&bench(&format!("softmax_exact          L={l}"), Duration::from_millis(300), || {
+            std::hint::black_box(softmax_exact(std::hint::black_box(&x)));
+        }));
+        report(&bench(&format!("softermax baseline     L={l}"), Duration::from_millis(300), || {
+            std::hint::black_box(softermax(std::hint::black_box(&x), 8));
+        }));
+        report(&bench(&format!("ibert baseline         L={l}"), Duration::from_millis(300), || {
+            std::hint::black_box(ibert_softmax(std::hint::black_box(&x), 1.0 / 16.0));
+        }));
+    }
+}

@@ -1,0 +1,136 @@
+//! Coordinator backends: where a packed batch actually executes.
+//!
+//! * `PjrtBackend` — the real path: bucketed AOT artifacts through the
+//!   PJRT runtime (one `LoadedModel` per batch size).
+//! * `SoftwareSoftmaxBackend` — the bit-exact Rust E2Softmax as a
+//!   row-service; lets the coordinator be tested and benchmarked without
+//!   artifacts, and doubles as the op-offload path of `examples/op_offload`.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{Engine, LoadedModel};
+use crate::softmax::{E2Softmax, E2SoftmaxConfig};
+
+/// Executes packed, padded batches at one of the advertised bucket sizes.
+pub trait Backend: Send + Sync {
+    /// Flat f32 length of one item's input.
+    fn item_input_len(&self) -> usize;
+    /// Flat f32 length of one item's output.
+    fn item_output_len(&self) -> usize;
+    /// Available batch sizes, ascending.
+    fn buckets(&self) -> &[usize];
+    /// Run a `bucket`-sized batch (`inputs.len() == bucket * item_input_len`).
+    fn run(&self, bucket: usize, inputs: &[f32]) -> Result<Vec<f32>>;
+}
+
+/// Real serving: one compiled artifact per bucket size.
+pub struct PjrtBackend {
+    models: BTreeMap<usize, Arc<LoadedModel>>,
+    buckets: Vec<usize>,
+    item_in: usize,
+    item_out: usize,
+}
+
+impl PjrtBackend {
+    /// Load every `<model>_<variant>_b<N>` artifact as a bucket.
+    pub fn from_family(engine: &Engine, model: &str, variant: &str) -> Result<PjrtBackend> {
+        let ids = engine.find(model, variant);
+        anyhow::ensure!(!ids.is_empty(), "no artifacts for {model}/{variant}");
+        let mut models = BTreeMap::new();
+        for id in &ids {
+            let m = engine.load(id)?;
+            models.insert(m.batch(), m);
+        }
+        let buckets: Vec<usize> = models.keys().copied().collect();
+        let any = models.values().next().unwrap();
+        let item_in = any.meta.input_shape.iter().skip(1).product::<usize>();
+        let item_out = any.meta.output_shape.iter().skip(1).product::<usize>();
+        Ok(PjrtBackend { models, buckets, item_in, item_out })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn item_input_len(&self) -> usize {
+        self.item_in
+    }
+
+    fn item_output_len(&self) -> usize {
+        self.item_out
+    }
+
+    fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn run(&self, bucket: usize, inputs: &[f32]) -> Result<Vec<f32>> {
+        let m = self
+            .models
+            .get(&bucket)
+            .with_context(|| format!("no artifact for bucket {bucket}"))?;
+        m.run_f32(inputs)
+    }
+}
+
+/// Software op-service: each item is one softmax row of length `l`,
+/// computed by the bit-exact E2Softmax hot path.  Any bucket size works.
+pub struct SoftwareSoftmaxBackend {
+    l: usize,
+    buckets: Vec<usize>,
+    sm: E2Softmax,
+}
+
+impl SoftwareSoftmaxBackend {
+    pub fn new(l: usize, mut buckets: Vec<usize>) -> SoftwareSoftmaxBackend {
+        buckets.sort_unstable();
+        SoftwareSoftmaxBackend { l, buckets, sm: E2Softmax::new(E2SoftmaxConfig::default()) }
+    }
+}
+
+impl Backend for SoftwareSoftmaxBackend {
+    fn item_input_len(&self) -> usize {
+        self.l
+    }
+
+    fn item_output_len(&self) -> usize {
+        self.l
+    }
+
+    fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn run(&self, bucket: usize, inputs: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(inputs.len() == bucket * self.l);
+        let mut out = Vec::with_capacity(inputs.len());
+        for row in inputs.chunks(self.l) {
+            out.extend(self.sm.forward_logits(row).into_iter().map(|v| v as f32));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn software_backend_shapes() {
+        let be = SoftwareSoftmaxBackend::new(32, vec![4, 1, 2]);
+        assert_eq!(be.buckets(), &[1, 2, 4]);
+        let out = be.run(2, &vec![0.5; 64]).unwrap();
+        assert_eq!(out.len(), 64);
+        // uniform logits -> near-uniform probabilities
+        let spread = out.iter().cloned().fold(f32::MIN, f32::max)
+            - out.iter().cloned().fold(f32::MAX, f32::min);
+        assert!(spread < 0.05);
+    }
+
+    #[test]
+    fn software_backend_rejects_bad_len() {
+        let be = SoftwareSoftmaxBackend::new(32, vec![1]);
+        assert!(be.run(1, &vec![0.0; 31]).is_err());
+    }
+}

@@ -1,0 +1,133 @@
+//! Dynamic batching policy: wait up to `max_wait` for the queue to fill,
+//! then dispatch into the largest lowered bucket that fits (vLLM-style
+//! bucketed static shapes — XLA artifacts are fixed-shape, so batch sizes
+//! are quantized to the buckets the AOT step lowered).
+
+use std::time::Duration;
+
+/// Tunables for the batcher.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Longest a request may wait for companions before dispatch.
+    pub max_wait: Duration,
+    /// Hard cap on batch size (<= largest lowered bucket).
+    pub max_batch: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_wait: Duration::from_millis(5), max_batch: 16 }
+    }
+}
+
+/// Pure decision logic (separated from the queue for testability).
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    /// Sorted ascending bucket sizes (e.g. [1, 4, 8, 16]).
+    buckets: Vec<usize>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy, mut buckets: Vec<usize>) -> Batcher {
+        assert!(!buckets.is_empty(), "need at least one bucket");
+        buckets.sort_unstable();
+        buckets.dedup();
+        Batcher { policy, buckets }
+    }
+
+    /// Dispatch now?  Yes when the queue already fills the biggest usable
+    /// bucket, or the oldest request has waited out the window.
+    pub fn should_dispatch(&self, queued: usize, oldest_wait: Duration) -> bool {
+        if queued == 0 {
+            return false;
+        }
+        queued >= self.max_usable() || oldest_wait >= self.policy.max_wait
+    }
+
+    /// How much longer the batcher may wait given the oldest request's age.
+    pub fn remaining_wait(&self, oldest_wait: Duration) -> Duration {
+        self.policy.max_wait.saturating_sub(oldest_wait).max(Duration::from_micros(100))
+    }
+
+    /// Largest bucket <= max_batch.
+    fn max_usable(&self) -> usize {
+        self.buckets
+            .iter()
+            .rev()
+            .find(|&&b| b <= self.policy.max_batch)
+            .copied()
+            .unwrap_or(self.buckets[0])
+    }
+
+    /// Bucket for `n` queued requests: the smallest bucket >= n, capped at
+    /// the largest usable one (padding fills the gap).
+    pub fn pick_bucket(&self, n: usize) -> usize {
+        let cap = self.max_usable();
+        let n = n.clamp(1, cap);
+        self.buckets
+            .iter()
+            .find(|&&b| b >= n)
+            .copied()
+            .unwrap_or(cap)
+            .min(cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(max_wait_ms: u64, max_batch: usize, buckets: &[usize]) -> Batcher {
+        Batcher::new(
+            BatchPolicy { max_wait: Duration::from_millis(max_wait_ms), max_batch },
+            buckets.to_vec(),
+        )
+    }
+
+    #[test]
+    fn picks_smallest_covering_bucket() {
+        let b = mk(5, 16, &[1, 4, 8, 16]);
+        assert_eq!(b.pick_bucket(1), 1);
+        assert_eq!(b.pick_bucket(2), 4);
+        assert_eq!(b.pick_bucket(4), 4);
+        assert_eq!(b.pick_bucket(5), 8);
+        assert_eq!(b.pick_bucket(9), 16);
+        assert_eq!(b.pick_bucket(100), 16);
+    }
+
+    #[test]
+    fn max_batch_caps_bucket() {
+        let b = mk(5, 8, &[1, 4, 8, 16]);
+        assert_eq!(b.pick_bucket(100), 8);
+        assert!(b.should_dispatch(8, Duration::ZERO));
+        assert!(!b.should_dispatch(7, Duration::ZERO));
+    }
+
+    #[test]
+    fn timeout_forces_dispatch() {
+        let b = mk(5, 16, &[1, 4, 8, 16]);
+        assert!(!b.should_dispatch(2, Duration::from_millis(1)));
+        assert!(b.should_dispatch(2, Duration::from_millis(6)));
+        assert!(b.should_dispatch(1, Duration::from_millis(6)));
+    }
+
+    #[test]
+    fn empty_queue_never_dispatches() {
+        let b = mk(5, 16, &[1, 4]);
+        assert!(!b.should_dispatch(0, Duration::from_secs(1)));
+    }
+
+    #[test]
+    fn remaining_wait_counts_down() {
+        let b = mk(10, 16, &[1]);
+        assert!(b.remaining_wait(Duration::from_millis(3)) <= Duration::from_millis(7));
+        assert!(b.remaining_wait(Duration::from_millis(30)) >= Duration::from_micros(100));
+    }
+
+    #[test]
+    fn buckets_deduped_and_sorted() {
+        let b = mk(5, 16, &[8, 1, 8, 4]);
+        assert_eq!(b.pick_bucket(3), 4);
+    }
+}

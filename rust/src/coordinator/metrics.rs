@@ -1,0 +1,106 @@
+//! Serving metrics: latency histograms + counters, shared across workers.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::stats::{LatencyHist, Streaming};
+
+/// Aggregated serving metrics (interior-mutable, worker-shared).
+#[derive(Default)]
+pub struct Metrics {
+    completed: AtomicU64,
+    errors: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    queue_hist: LatencyHist,
+    exec_hist: LatencyHist,
+    total_hist: LatencyHist,
+    batch_sizes: Streaming,
+    padding_waste: Streaming,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record(&self, queue: Duration, exec: Duration, bucket: usize, actual: usize) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let mut g = self.inner.lock().unwrap();
+        g.queue_hist.record(queue.as_secs_f64());
+        g.exec_hist.record(exec.as_secs_f64());
+        g.total_hist.record((queue + exec).as_secs_f64());
+        g.batch_sizes.push(actual as f64);
+        g.padding_waste.push((bucket - actual) as f64 / bucket.max(1) as f64);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    /// One-line summary for the CLI / examples.
+    pub fn summary(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        format!(
+            "completed={} errors={} | total p50={:.2}ms p99={:.2}ms mean={:.2}ms | \
+             exec p50={:.2}ms | queue p50={:.2}ms | avg_batch={:.2} pad_waste={:.0}%",
+            self.completed(),
+            self.errors(),
+            g.total_hist.p50() * 1e3,
+            g.total_hist.p99() * 1e3,
+            g.total_hist.mean() * 1e3,
+            g.exec_hist.p50() * 1e3,
+            g.queue_hist.p50() * 1e3,
+            g.batch_sizes.mean(),
+            g.padding_waste.mean() * 100.0,
+        )
+    }
+
+    /// (p50, p99, mean) of end-to-end latency in seconds.
+    pub fn total_latency(&self) -> (f64, f64, f64) {
+        let g = self.inner.lock().unwrap();
+        (g.total_hist.p50(), g.total_hist.p99(), g.total_hist.mean())
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        self.inner.lock().unwrap().batch_sizes.mean()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.record(
+                Duration::from_micros(i * 10),
+                Duration::from_micros(i * 100),
+                8,
+                (i % 8 + 1) as usize,
+            );
+        }
+        m.record_error();
+        assert_eq!(m.completed(), 100);
+        assert_eq!(m.errors(), 1);
+        let (p50, p99, mean) = m.total_latency();
+        assert!(p50 > 0.0 && p99 >= p50 && mean > 0.0);
+        let s = m.summary();
+        assert!(s.contains("completed=100"));
+        assert!(m.mean_batch() > 1.0);
+    }
+}

@@ -1,0 +1,283 @@
+//! Inference coordinator (Layer 3): request router + dynamic batcher +
+//! worker pool + metrics.
+//!
+//! The paper's contribution is the *operator* co-design, so the
+//! coordinator is the serving shell that makes it deployable: requests
+//! arrive one item at a time, the batcher packs them into the bucketed
+//! batch sizes the AOT artifacts were lowered for (1/4/8/16), a worker
+//! executes the compiled PJRT model, and per-request latency is tracked
+//! through a lock-free-enough metrics layer.  Everything is std::thread —
+//! no async runtime exists in the offline vendor set, and a thread-per-
+//! worker design is the right shape for PJRT's blocking execute anyway.
+
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+pub use backend::{Backend, PjrtBackend, SoftwareSoftmaxBackend};
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::Metrics;
+
+/// One inference request: a flat f32 item (e.g. one image).
+pub struct Request {
+    pub id: u64,
+    pub input: Vec<f32>,
+    pub submitted: Instant,
+    pub resp: mpsc::Sender<Response>,
+}
+
+/// The reply: flat f32 output plus timing.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub output: Vec<f32>,
+    pub queue_time: Duration,
+    pub exec_time: Duration,
+    pub batch_size: usize,
+}
+
+struct Shared {
+    queue: Mutex<std::collections::VecDeque<Request>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Handle for submitting requests.
+#[derive(Clone)]
+pub struct Client {
+    shared: Arc<Shared>,
+    next_id: Arc<AtomicU64>,
+    item_len: usize,
+}
+
+impl Client {
+    /// Submit one item; returns the receiver for its response.
+    pub fn submit(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        anyhow::ensure!(input.len() == self.item_len, "item len {} != {}", input.len(), self.item_len);
+        let (tx, rx) = mpsc::channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            input,
+            submitted: Instant::now(),
+            resp: tx,
+        };
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(req);
+        drop(q);
+        self.shared.available.notify_one();
+        Ok(rx)
+    }
+
+    /// Blocking one-shot convenience.
+    pub fn infer(&self, input: Vec<f32>) -> Result<Response> {
+        Ok(self.submit(input)?.recv()?)
+    }
+}
+
+/// The coordinator: owns the worker threads.
+pub struct Coordinator {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    item_len: usize,
+    next_id: Arc<AtomicU64>,
+}
+
+impl Coordinator {
+    /// Start `n_workers` workers over a shared backend.
+    pub fn start(backend: Arc<dyn Backend>, policy: BatchPolicy, n_workers: usize) -> Coordinator {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(std::collections::VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let metrics = Arc::new(Metrics::new());
+        let item_len = backend.item_input_len();
+        let mut workers = Vec::new();
+        for wid in 0..n_workers.max(1) {
+            let sh = shared.clone();
+            let be = backend.clone();
+            let mt = metrics.clone();
+            let pol = policy.clone();
+            workers.push(std::thread::spawn(move || worker_loop(wid, sh, be, pol, mt)));
+        }
+        Coordinator { shared, workers, metrics, item_len, next_id: Arc::new(AtomicU64::new(0)) }
+    }
+
+    pub fn client(&self) -> Client {
+        Client { shared: self.shared.clone(), next_id: self.next_id.clone(), item_len: self.item_len }
+    }
+
+    /// Graceful shutdown: drains nothing, drops pending requests' senders.
+    pub fn shutdown(mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    _wid: usize,
+    shared: Arc<Shared>,
+    backend: Arc<dyn Backend>,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+) {
+    let batcher = Batcher::new(policy, backend.buckets().to_vec());
+    loop {
+        // collect a batch (blocks until at least one request or shutdown)
+        let batch = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) && q.is_empty() {
+                    return;
+                }
+                if !q.is_empty() {
+                    break;
+                }
+                let (guard, _t) = shared
+                    .available
+                    .wait_timeout(q, Duration::from_millis(50))
+                    .unwrap();
+                q = guard;
+            }
+            // first request's age decides whether we keep waiting for more
+            let oldest = q.front().unwrap().submitted;
+            let mut q = q;
+            loop {
+                let n = q.len();
+                if batcher.should_dispatch(n, oldest.elapsed()) {
+                    break;
+                }
+                let (guard, timeout) = shared
+                    .available
+                    .wait_timeout(q, batcher.remaining_wait(oldest.elapsed()))
+                    .unwrap();
+                q = guard;
+                if timeout.timed_out() || shared.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+            let bucket = batcher.pick_bucket(q.len());
+            let take = bucket.min(q.len());
+            q.drain(..take).collect::<Vec<_>>()
+        };
+        if batch.is_empty() {
+            continue;
+        }
+        execute_batch(&*backend, &batcher, batch, &metrics);
+    }
+}
+
+fn execute_batch(backend: &dyn Backend, batcher: &Batcher, batch: Vec<Request>, metrics: &Metrics) {
+    let n = batch.len();
+    let bucket = batcher.pick_bucket(n);
+    let item_in = backend.item_input_len();
+    let item_out = backend.item_output_len();
+    // pack + zero-pad to the bucket shape
+    let mut inputs = vec![0f32; bucket * item_in];
+    for (i, r) in batch.iter().enumerate() {
+        inputs[i * item_in..(i + 1) * item_in].copy_from_slice(&r.input);
+    }
+    let t0 = Instant::now();
+    let result = backend.run(bucket, &inputs);
+    let exec = t0.elapsed();
+    match result {
+        Ok(out) => {
+            for (i, r) in batch.into_iter().enumerate() {
+                let slice = out[i * item_out..(i + 1) * item_out].to_vec();
+                let queue_time = t0.duration_since(r.submitted);
+                metrics.record(queue_time, exec, bucket, n);
+                let _ = r.resp.send(Response {
+                    id: r.id,
+                    output: slice,
+                    queue_time,
+                    exec_time: exec,
+                    batch_size: n,
+                });
+            }
+        }
+        Err(e) => {
+            metrics.record_error();
+            // drop senders -> callers observe RecvError
+            eprintln!("batch execution failed: {e:#}");
+            drop(batch);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::SoftwareSoftmaxBackend;
+
+    fn start_sw(policy: BatchPolicy) -> Coordinator {
+        let be = Arc::new(SoftwareSoftmaxBackend::new(64, vec![1, 4, 8]));
+        Coordinator::start(be, policy, 1)
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let co = start_sw(BatchPolicy { max_wait: Duration::from_millis(1), max_batch: 8 });
+        let cl = co.client();
+        let x: Vec<f32> = (0..64).map(|i| i as f32 * 0.1).collect();
+        let resp = cl.infer(x).unwrap();
+        assert_eq!(resp.output.len(), 64);
+        let s: f32 = resp.output.iter().sum();
+        assert!((s - 1.0).abs() < 0.4); // e2softmax row sums near 1
+        co.shutdown();
+    }
+
+    #[test]
+    fn many_requests_all_answered() {
+        let co = start_sw(BatchPolicy { max_wait: Duration::from_millis(2), max_batch: 8 });
+        let cl = co.client();
+        let rxs: Vec<_> = (0..50)
+            .map(|i| cl.submit(vec![(i % 7) as f32; 64]).unwrap())
+            .collect();
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.output.len(), 64);
+        }
+        assert_eq!(co.metrics.completed(), 50);
+        co.shutdown();
+    }
+
+    #[test]
+    fn batching_actually_batches() {
+        let co = start_sw(BatchPolicy { max_wait: Duration::from_millis(30), max_batch: 8 });
+        let cl = co.client();
+        let rxs: Vec<_> = (0..8).map(|_| cl.submit(vec![1.0; 64]).unwrap()).collect();
+        let sizes: Vec<usize> = rxs.into_iter().map(|rx| rx.recv().unwrap().batch_size).collect();
+        // at least one multi-request batch formed under the 30ms window
+        assert!(sizes.iter().any(|&s| s > 1), "sizes {sizes:?}");
+        co.shutdown();
+    }
+
+    #[test]
+    fn rejects_wrong_item_len() {
+        let co = start_sw(BatchPolicy::default());
+        let cl = co.client();
+        assert!(cl.submit(vec![0.0; 3]).is_err());
+        co.shutdown();
+    }
+
+    #[test]
+    fn shutdown_idempotent_under_load() {
+        let co = start_sw(BatchPolicy { max_wait: Duration::from_millis(1), max_batch: 4 });
+        let cl = co.client();
+        for _ in 0..10 {
+            let _ = cl.submit(vec![0.5; 64]);
+        }
+        co.shutdown(); // must not hang
+    }
+}

@@ -1,0 +1,165 @@
+//! Tables I & II: accuracy of FP32 / FP32+SOLE / INT8 / INT8+SOLE, measured
+//! by running the AOT artifacts through the PJRT runtime on the exported
+//! eval sets — the Rust serving stack evaluating its own models, no Python.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::Engine;
+use crate::tensor::Bundle;
+use crate::util::json::{obj, Json};
+
+use super::{render_table, ExperimentOut};
+
+pub const VARIANTS: [&str; 4] = ["fp32", "fp32_sole", "int8", "int8_sole"];
+
+/// Evaluate one (model, variant) over up to `max_samples` of its eval set.
+pub fn eval_model(
+    engine: &Engine,
+    artifacts: &Path,
+    model: &str,
+    variant: &str,
+    max_samples: usize,
+) -> Result<f64> {
+    let ids = engine.find(model, variant);
+    let id = ids
+        .iter()
+        .find(|i| i.ends_with("_b64"))
+        .or(ids.first())
+        .with_context(|| format!("no artifact for {model}/{variant}"))?;
+    let m = engine.load(id)?;
+    let dataset = if model.starts_with("bert_") {
+        format!("data/{model}_eval")
+    } else {
+        "data/cv_eval".to_string()
+    };
+    let data = Bundle::load(&artifacts.join(dataset))?;
+    let x = data.get("x")?;
+    let y = data.get("y")?.as_i32()?;
+    let item: usize = x.shape[1..].iter().product();
+    let b = m.batch();
+    let ncls = m.meta.output_shape[1];
+    let n = (y.len().min(max_samples) / b) * b;
+    anyhow::ensure!(n > 0, "eval set smaller than one batch");
+    let mut correct = 0usize;
+    if m.meta.input_dtype == "i32" {
+        let xs = x.as_i32()?;
+        for bi in 0..n / b {
+            let logits = m.run_i32(&xs[bi * b * item..(bi + 1) * b * item])?;
+            correct += count_correct(&logits, &y[bi * b..(bi + 1) * b], ncls);
+        }
+    } else {
+        let xs = x.as_f32()?;
+        for bi in 0..n / b {
+            let logits = m.run_f32(&xs[bi * b * item..(bi + 1) * b * item])?;
+            correct += count_correct(&logits, &y[bi * b..(bi + 1) * b], ncls);
+        }
+    }
+    Ok(correct as f64 / n as f64)
+}
+
+fn count_correct(logits: &[f32], labels: &[i32], ncls: usize) -> usize {
+    labels
+        .iter()
+        .enumerate()
+        .filter(|(i, &lab)| {
+            let row = &logits[i * ncls..(i + 1) * ncls];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            pred as i32 == lab
+        })
+        .count()
+}
+
+/// Render one accuracy table over `models` (Table I: CV; Table II: NLP).
+pub fn run_table(
+    name: &'static str,
+    title: &str,
+    engine: &Engine,
+    artifacts: &Path,
+    models: &[String],
+    max_samples: usize,
+) -> Result<ExperimentOut> {
+    let mut rows = Vec::new();
+    let mut jrows = Vec::new();
+    let mut drops = Vec::new();
+    for model in models {
+        let mut cells = vec![model.clone()];
+        let mut accs = Vec::new();
+        for v in VARIANTS {
+            let acc = eval_model(engine, artifacts, model, v, max_samples)?;
+            cells.push(format!("{:.2}%", acc * 100.0));
+            accs.push(acc);
+        }
+        drops.push((accs[0] - accs[1]) * 100.0);
+        drops.push((accs[2] - accs[3]) * 100.0);
+        jrows.push(obj(vec![
+            ("model", Json::Str(model.clone())),
+            ("fp32", Json::Num(accs[0])),
+            ("fp32_sole", Json::Num(accs[1])),
+            ("int8", Json::Num(accs[2])),
+            ("int8_sole", Json::Num(accs[3])),
+        ]));
+        rows.push(cells);
+    }
+    let avg_drop = drops.iter().sum::<f64>() / drops.len().max(1) as f64;
+    let worst = drops.iter().cloned().fold(f64::MIN, f64::max);
+    let text = render_table(
+        title,
+        &["model".into(), "FP32".into(), "FP32+SOLE".into(), "INT8".into(), "INT8+SOLE".into()],
+        &rows,
+    ) + &format!(
+        "\nSOLE accuracy drop: avg {avg_drop:.2}pp, worst {worst:.2}pp \
+         (paper: avg 0.38/0.2pp, worst 0.9/0.8pp) — no retraining anywhere\n"
+    );
+    Ok(ExperimentOut {
+        name,
+        text,
+        json: obj(vec![
+            ("rows", Json::Arr(jrows)),
+            ("avg_drop_pp", Json::Num(avg_drop)),
+            ("worst_drop_pp", Json::Num(worst)),
+        ]),
+    })
+}
+
+/// Table I (CV surrogates).
+pub fn table1(engine: &Engine, artifacts: &Path, max_samples: usize) -> Result<ExperimentOut> {
+    let models: Vec<String> = engine
+        .manifest
+        .models()
+        .into_iter()
+        .filter(|m| !m.starts_with("bert_"))
+        .collect();
+    run_table(
+        "table1",
+        "Table I — CV accuracy (synthetic-shapes surrogates of DeiT/Swin)",
+        engine,
+        artifacts,
+        &models,
+        max_samples,
+    )
+}
+
+/// Table II (NLP surrogates).
+pub fn table2(engine: &Engine, artifacts: &Path, max_samples: usize) -> Result<ExperimentOut> {
+    let models: Vec<String> = engine
+        .manifest
+        .models()
+        .into_iter()
+        .filter(|m| m.starts_with("bert_"))
+        .collect();
+    run_table(
+        "table2",
+        "Table II — NLP accuracy (synthetic GLUE/SQuAD analogues, BERT surrogate)",
+        engine,
+        artifacts,
+        &models,
+        max_samples,
+    )
+}

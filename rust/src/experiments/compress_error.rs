@@ -1,0 +1,69 @@
+//! §III-C numeric claim: dynamic compression induces ~0.2% error on E(x^2)
+//! and ~0.4% on sigma for uniformly distributed inputs — Monte-Carlo over
+//! the bit-exact implementation, plus the same sweep for Gaussian inputs
+//! (the distribution LayerNorm actually sees) as an extension.
+
+use crate::layernorm::compress::compressed_square;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+
+use super::{render_table, ExperimentOut};
+
+fn sweep(dist: &str, n: usize, seed: u64) -> (f64, f64) {
+    let mut rng = Rng::new(seed);
+    let (mut se, mut sr, mut sx) = (0f64, 0f64, 0f64);
+    for _ in 0..n {
+        let x = match dist {
+            "uniform" => rng.range_i64(0, 256) as u8,
+            _ => (rng.normal().abs() * 48.0).min(255.0) as u8, // half-normal codes
+        };
+        se += (x as f64) * (x as f64);
+        sr += (compressed_square(x) << 4) as f64;
+        sx += x as f64;
+    }
+    let (ex2, rx2, ex) = (se / n as f64, sr / n as f64, sx / n as f64);
+    let e_ex2 = (rx2 - ex2).abs() / ex2.max(1e-9);
+    let sd_t = (ex2 - ex * ex).max(0.0).sqrt();
+    let sd_r = (rx2 - ex * ex).max(0.0).sqrt();
+    let e_sd = (sd_r - sd_t).abs() / sd_t.max(1e-9);
+    (e_ex2, e_sd)
+}
+
+pub fn run() -> ExperimentOut {
+    let n = 400_000;
+    let (u_ex2, u_sd) = sweep("uniform", n, 21);
+    let (g_ex2, g_sd) = sweep("gaussian", n, 22);
+    let rows = vec![
+        vec!["uniform u8 (paper's setting)".into(),
+             format!("{:.2}%", u_ex2 * 100.0), format!("{:.2}%", u_sd * 100.0),
+             "0.2% / 0.4%".into()],
+        vec!["half-normal codes (LN-realistic)".into(),
+             format!("{:.2}%", g_ex2 * 100.0), format!("{:.2}%", g_sd * 100.0),
+             "- (extension)".into()],
+    ];
+    let text = render_table(
+        "§III-C — dynamic compression error on E(x^2) and sigma",
+        &["input distribution".into(), "E(x^2) err".into(), "sigma err".into(), "paper".into()],
+        &rows,
+    );
+    ExperimentOut {
+        name: "compress_error",
+        text,
+        json: obj(vec![
+            ("uniform_ex2", Json::Num(u_ex2)),
+            ("uniform_sigma", Json::Num(u_sd)),
+            ("gaussian_ex2", Json::Num(g_ex2)),
+            ("gaussian_sigma", Json::Num(g_sd)),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn uniform_errors_match_paper_order() {
+        let out = super::run();
+        assert!(out.json.get_f64("uniform_ex2").unwrap() < 0.01);
+        assert!(out.json.get_f64("uniform_sigma").unwrap() < 0.015);
+    }
+}

@@ -1,0 +1,80 @@
+//! Fig 1(a): latency breakdown of DeiT-Tiny (448x448, 785 tokens) on the
+//! GPU model, FP32 vs INT8 — the motivation figure: quantizing matmuls
+//! inflates the Softmax/LayerNorm share.
+
+use crate::model::latency::{latency, ExecMode};
+use crate::model::PaperModel;
+use crate::util::json::{obj, Json};
+
+use super::{render_table, ExperimentOut};
+
+pub fn run(batch: usize) -> ExperimentOut {
+    let m = PaperModel::deit("deit_t", 192, 3);
+    let f = latency(&m, batch, ExecMode::Fp32Gpu);
+    let i = latency(&m, batch, ExecMode::Int8Gpu);
+
+    let pct = |x: f64, t: f64| format!("{:.1}%", 100.0 * x / t);
+    let rows = vec![
+        vec![
+            "FP32".to_string(),
+            format!("{:.2}", f.total() * 1e3),
+            pct(f.matmul, f.total()),
+            pct(f.softmax, f.total()),
+            pct(f.layernorm, f.total()),
+            pct(f.elementwise, f.total()),
+        ],
+        vec![
+            "INT8".to_string(),
+            format!("{:.2}", i.total() * 1e3),
+            pct(i.matmul, i.total()),
+            pct(i.softmax, i.total()),
+            pct(i.layernorm, i.total()),
+            pct(i.elementwise, i.total()),
+        ],
+    ];
+    let text = render_table(
+        &format!("Fig 1(a) — DeiT-T@448 latency breakdown on 2080Ti model (batch {batch})"),
+        &["mode".into(), "total ms".into(), "matmul".into(), "softmax".into(),
+          "layernorm".into(), "elementwise".into()],
+        &rows,
+    ) + &format!(
+        "\npaper's observation reproduced: Softmax+LN share grows {:.0}% -> {:.0}% under INT8\n",
+        100.0 * f.nonlinear_share(),
+        100.0 * i.nonlinear_share()
+    );
+
+    let series = |b: &crate::model::latency::Breakdown| {
+        obj(vec![
+            ("matmul", Json::Num(b.matmul)),
+            ("softmax", Json::Num(b.softmax)),
+            ("layernorm", Json::Num(b.layernorm)),
+            ("elementwise", Json::Num(b.elementwise)),
+        ])
+    };
+    ExperimentOut {
+        name: "fig1a",
+        text,
+        json: obj(vec![
+            ("batch", Json::Int(batch as i64)),
+            ("fp32", series(&f)),
+            ("int8", series(&i)),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn produces_growing_share() {
+        let out = super::run(8);
+        assert!(out.text.contains("Fig 1(a)"));
+        let f = out.json.get("fp32").unwrap();
+        let i = out.json.get("int8").unwrap();
+        let share = |b: &crate::util::json::Json| {
+            let s = b.get_f64("softmax").unwrap() + b.get_f64("layernorm").unwrap();
+            let t = s + b.get_f64("matmul").unwrap() + b.get_f64("elementwise").unwrap();
+            s / t
+        };
+        assert!(share(i) > share(f));
+    }
+}

@@ -1,0 +1,111 @@
+//! Fig 6: (a) standalone Softmax/LayerNorm speedup of 32 SOLE units over
+//! the GPU model, batch 1..16 on DeiT-T@448; (b) end-to-end speedup and
+//! latency breakdown (FP32 / INT8 / INT8+SOLE).
+
+use crate::model::latency::{latency, layernorm_gpu_vs_sole, softmax_gpu_vs_sole, ExecMode};
+use crate::model::PaperModel;
+use crate::util::json::{arr_f64, obj, Json};
+
+use super::{render_table, ExperimentOut};
+
+pub fn run_a(batches: &[usize]) -> ExperimentOut {
+    let m = PaperModel::deit("deit_t", 192, 3);
+    let mut rows = Vec::new();
+    let mut sm_sp = Vec::new();
+    let mut ln_sp = Vec::new();
+    for &b in batches {
+        let (gs, ss) = softmax_gpu_vs_sole(&m, b);
+        let (gl, sl) = layernorm_gpu_vs_sole(&m, b);
+        sm_sp.push(gs / ss);
+        ln_sp.push(gl / sl);
+        rows.push(vec![
+            b.to_string(),
+            format!("{:.0}us", gs * 1e6),
+            format!("{:.1}us", ss * 1e6),
+            format!("{:.1}x", gs / ss),
+            format!("{:.0}us", gl * 1e6),
+            format!("{:.1}us", sl * 1e6),
+            format!("{:.1}x", gl / sl),
+        ]);
+    }
+    let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let text = render_table(
+        "Fig 6(a) — Softmax / LayerNorm speedup over GPU (DeiT-T@448, 32 SOLE units)",
+        &["batch".into(), "gpu sm".into(), "sole sm".into(), "speedup".into(),
+          "gpu ln".into(), "sole ln".into(), "speedup".into()],
+        &rows,
+    ) + &format!(
+        "\naverage speedup: softmax {:.1}x (paper 36.2x, range 29.3-57.5x), \
+         layernorm {:.1}x (paper 61.3x, range 38.4-86.8x)\n",
+        avg(&sm_sp),
+        avg(&ln_sp)
+    );
+    ExperimentOut {
+        name: "fig6a",
+        text,
+        json: obj(vec![
+            ("batches", Json::Arr(batches.iter().map(|&b| Json::Int(b as i64)).collect())),
+            ("softmax_speedup", arr_f64(&sm_sp)),
+            ("layernorm_speedup", arr_f64(&ln_sp)),
+            ("softmax_avg", Json::Num(avg(&sm_sp))),
+            ("layernorm_avg", Json::Num(avg(&ln_sp))),
+        ]),
+    }
+}
+
+pub fn run_b(batches: &[usize]) -> ExperimentOut {
+    let m = PaperModel::deit("deit_t", 192, 3);
+    let mut rows = Vec::new();
+    let mut int8_sp = Vec::new();
+    let mut sole_sp = Vec::new();
+    for &b in batches {
+        let f = latency(&m, b, ExecMode::Fp32Gpu);
+        let i = latency(&m, b, ExecMode::Int8Gpu);
+        let s = latency(&m, b, ExecMode::Int8Sole);
+        int8_sp.push(f.total() / i.total());
+        sole_sp.push(f.total() / s.total());
+        rows.push(vec![
+            b.to_string(),
+            format!("{:.2}ms", f.total() * 1e3),
+            format!("{:.2}ms ({:.2}x)", i.total() * 1e3, f.total() / i.total()),
+            format!("{:.2}ms ({:.2}x)", s.total() * 1e3, f.total() / s.total()),
+            format!("{:.0}%", 100.0 * i.nonlinear_share()),
+            format!("{:.1}%", 100.0 * s.nonlinear_share()),
+        ]);
+    }
+    let text = render_table(
+        "Fig 6(b) — end-to-end DeiT-T@448: FP32 vs INT8 vs INT8+SOLE",
+        &["batch".into(), "fp32".into(), "int8".into(), "int8+sole".into(),
+          "int8 nl-share".into(), "sole nl-share".into()],
+        &rows,
+    ) + "\npaper bands: INT8 1.10-1.28x, INT8+SOLE 1.50-2.09x\n";
+    ExperimentOut {
+        name: "fig6b",
+        text,
+        json: obj(vec![
+            ("batches", Json::Arr(batches.iter().map(|&b| Json::Int(b as i64)).collect())),
+            ("int8_speedup", arr_f64(&int8_sp)),
+            ("sole_speedup", arr_f64(&sole_sp)),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fig6a_speedups_order_of_magnitude() {
+        let out = super::run_a(&[1, 4, 16]);
+        let sm = out.json.get_vec_f64("softmax_speedup").unwrap();
+        assert!(sm.iter().all(|&s| s > 10.0 && s < 100.0), "{sm:?}");
+        // the paper's trend: speedup grows with batch (GPU spills L2)
+        assert!(sm.last().unwrap() > sm.first().unwrap());
+    }
+
+    #[test]
+    fn fig6b_sole_beats_int8() {
+        let out = super::run_b(&[8]);
+        let i = out.json.get_vec_f64("int8_speedup").unwrap()[0];
+        let s = out.json.get_vec_f64("sole_speedup").unwrap()[0];
+        assert!(s > i && i > 1.0);
+    }
+}

@@ -1,0 +1,81 @@
+//! Experiment generators — one per table/figure of the paper (DESIGN.md §4).
+//!
+//! Each generator prints the paper-style table to stdout and returns a
+//! `Json` blob that the CLI writes under `artifacts/results/` so
+//! EXPERIMENTS.md can quote exact numbers.
+
+pub mod ablation;
+pub mod accuracy;
+pub mod compress_error;
+pub mod fig1;
+pub mod fig3;
+pub mod fig6;
+pub mod table3;
+
+use crate::util::json::Json;
+
+/// A rendered experiment: the human table plus machine-readable results.
+pub struct ExperimentOut {
+    pub name: &'static str,
+    pub text: String,
+    pub json: Json,
+}
+
+impl ExperimentOut {
+    pub fn print(&self) {
+        println!("{}", self.text);
+    }
+
+    /// Write the JSON blob under `<artifacts>/results/<name>.json`.
+    pub fn save(&self, artifacts: &std::path::Path) -> anyhow::Result<()> {
+        let dir = artifacts.join("results");
+        std::fs::create_dir_all(&dir)?;
+        std::fs::write(dir.join(format!("{}.json", self.name)), self.json.to_string_compact())?;
+        Ok(())
+    }
+}
+
+/// Simple fixed-width table renderer shared by the generators.
+pub fn render_table(title: &str, header: &[String], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, cell) in r.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: &[String]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8) + 2))
+            .collect::<String>()
+    };
+    let mut out = format!("\n== {title} ==\n");
+    out.push_str(&line(header));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().map(|w| w + 2).sum::<usize>()));
+    out.push('\n');
+    for r in rows {
+        out.push_str(&line(r));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            "T",
+            &["a".into(), "bb".into()],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+        assert!(t.contains("== T =="));
+        assert!(t.contains("333"));
+    }
+}

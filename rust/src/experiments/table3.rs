@@ -1,0 +1,127 @@
+//! Table III: energy-efficiency and area-efficiency of the SOLE units vs
+//! Softermax (softmax), NN-LUT (layernorm) and the GPU — subunits and
+//! complete units, at the paper's operating point (32 lanes, 1 GHz,
+//! L=785 softmax rows / C=192 layernorm rows from DeiT-T@448).
+
+use crate::hw::gpu;
+use crate::hw::units::{AiLayerNormUnit, E2SoftmaxUnit, HwUnit, NnLutLayerNormUnit, SoftermaxUnit};
+use crate::model::latency::SOLE_UNITS;
+use crate::model::PaperModel;
+use crate::util::json::{obj, Json};
+
+use super::{render_table, ExperimentOut};
+
+pub fn run() -> ExperimentOut {
+    let l_sm = 785;
+    let c_ln = 192;
+    let sole_sm = E2SoftmaxUnit::default();
+    let soft = SoftermaxUnit::default();
+    let sole_ln = AiLayerNormUnit::default();
+    let nnlut = NnLutLayerNormUnit::default();
+
+    // energy per processed element (pJ) and area (um^2)
+    let e_sm_sole = sole_sm.energy_per_row(l_sm);
+    let e_sm_soft = soft.energy_per_row(l_sm);
+    let e_ln_sole = sole_ln.energy_per_row(c_ln);
+    let e_ln_nn = nnlut.energy_per_row(c_ln);
+    let a_sm_sole = sole_sm.area();
+    let a_sm_soft = soft.area();
+    let a_ln_sole = sole_ln.area();
+    let a_ln_nn = nnlut.area();
+
+    // subunit rows (paper convention: Normalization = softmax stage 2,
+    // Statistic = layernorm stage 1)
+    let norm_e = e_sm_soft.stage2 / e_sm_sole.stage2;
+    let norm_a = a_sm_soft.stage2 / a_sm_sole.stage2;
+    let stat_e = e_ln_nn.stage1 / e_ln_sole.stage1;
+    let stat_a = a_ln_nn.stage1 / a_ln_sole.stage1;
+    let full_sm_e = e_sm_soft.total() / e_sm_sole.total();
+    let full_sm_a = a_sm_soft.total() / a_sm_sole.total();
+    let full_ln_e = e_ln_nn.total() / e_ln_sole.total();
+    let full_ln_a = a_ln_nn.total() / a_ln_sole.total();
+
+    // GPU energy-efficiency: joules per element over the DeiT-T workload
+    let m = PaperModel::deit("deit_t", 192, 3);
+    let batch = 8;
+    let (mut g_sm_j, mut s_sm_j, mut elems_sm) = (0f64, 0f64, 0f64);
+    for w in m.softmax_work(batch) {
+        g_sm_j += gpu::energy_j(gpu::softmax_time(w.rows, w.len)) * w.kernels as f64;
+        s_sm_j += sole_sm.energy_j(w.rows, w.len) * w.kernels as f64 * SOLE_UNITS as f64 / SOLE_UNITS as f64;
+        elems_sm += (w.rows * w.len * w.kernels) as f64;
+    }
+    let (mut g_ln_j, mut s_ln_j) = (0f64, 0f64);
+    for w in m.layernorm_work(batch) {
+        g_ln_j += gpu::energy_j(gpu::layernorm_time(w.rows, w.len)) * w.kernels as f64;
+        s_ln_j += sole_ln.energy_j(w.rows, w.len) * w.kernels as f64;
+    }
+    let gpu_sm_ratio = g_sm_j / s_sm_j;
+    let gpu_ln_ratio = g_ln_j / s_ln_j;
+    let _ = elems_sm;
+
+    let fx = |v: f64| format!("{v:.2}x");
+    let rows = vec![
+        vec!["Softermax".into(), "Normalization Unit".into(), fx(norm_e), fx(norm_a),
+             "2.46x / 2.89x".into()],
+        vec!["Softermax".into(), "Softmax Unit".into(), fx(full_sm_e), fx(full_sm_a),
+             "3.04x / 2.82x".into()],
+        vec!["NN-LUT".into(), "Statistic Unit".into(), fx(stat_e), fx(stat_a),
+             "11.3x / 3.79x".into()],
+        vec!["NN-LUT".into(), "LayerNorm Unit".into(), fx(full_ln_e), fx(full_ln_a),
+             "3.86x / 3.32x".into()],
+        vec!["2080Ti GPU".into(), "Softmax Unit".into(), format!("{gpu_sm_ratio:.0}x"), "-".into(),
+             "4925x / -".into()],
+        vec!["2080Ti GPU".into(), "LayerNorm Unit".into(), format!("{gpu_ln_ratio:.0}x"), "-".into(),
+             "4259x / -".into()],
+    ];
+    let text = render_table(
+        "Table III — SOLE vs Softermax / NN-LUT / GPU (energy- & area-efficiency)",
+        &["baseline".into(), "unit".into(), "energy-eff".into(), "area-eff".into(),
+          "paper (E / A)".into()],
+        &rows,
+    ) + &format!(
+        "\nabsolute SOLE numbers at this operating point:\n\
+         E2Softmax Unit:   {:.0} um^2, {:.3} pJ/elem, {:.1} mW\n\
+         AILayerNorm Unit: {:.0} um^2, {:.3} pJ/elem, {:.1} mW\n",
+        a_sm_sole.total(),
+        e_sm_sole.total() / l_sm as f64,
+        sole_sm.power_mw(l_sm),
+        a_ln_sole.total(),
+        e_ln_sole.total() / c_ln as f64,
+        sole_ln.power_mw(c_ln),
+    );
+
+    ExperimentOut {
+        name: "table3",
+        text,
+        json: obj(vec![
+            ("normalization_energy", Json::Num(norm_e)),
+            ("normalization_area", Json::Num(norm_a)),
+            ("softmax_unit_energy", Json::Num(full_sm_e)),
+            ("softmax_unit_area", Json::Num(full_sm_a)),
+            ("statistic_energy", Json::Num(stat_e)),
+            ("statistic_area", Json::Num(stat_a)),
+            ("layernorm_unit_energy", Json::Num(full_ln_e)),
+            ("layernorm_unit_area", Json::Num(full_ln_a)),
+            ("gpu_softmax_energy", Json::Num(gpu_sm_ratio)),
+            ("gpu_layernorm_energy", Json::Num(gpu_ln_ratio)),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn ratios_in_paper_ballpark() {
+        let out = super::run();
+        let g = |k: &str| out.json.get_f64(k).unwrap();
+        // who-wins and rough factors must hold (DESIGN.md §2)
+        assert!(g("softmax_unit_energy") > 1.8 && g("softmax_unit_energy") < 6.0);
+        assert!(g("softmax_unit_area") > 1.5 && g("softmax_unit_area") < 6.0);
+        assert!(g("layernorm_unit_energy") > 2.0 && g("layernorm_unit_energy") < 8.0);
+        assert!(g("layernorm_unit_area") > 1.8 && g("layernorm_unit_area") < 8.0);
+        assert!(g("statistic_energy") > 4.0, "INT32-mult kill is the headline");
+        // GPU: orders of magnitude
+        assert!(g("gpu_softmax_energy") > 500.0);
+        assert!(g("gpu_layernorm_energy") > 500.0);
+    }
+}

@@ -1,0 +1,203 @@
+//! Fixed-point arithmetic substrate (DESIGN.md §5 item 4).
+//!
+//! Everything SOLE's datapaths need: arithmetic (floor) shifts that mirror
+//! hardware, leading-one detection, round-half-up division by powers of
+//! two, saturation, and Mitchell's logarithmic multiply/divide (the basis
+//! of the paper's Approximate Log-based Division).
+
+/// Arithmetic right shift that matches hardware/Python semantics (floor).
+/// Rust's `>>` on signed ints is already arithmetic; this exists to make
+/// call sites self-documenting and to guard the shift amount.
+#[inline]
+pub fn asr(v: i64, n: u32) -> i64 {
+    debug_assert!(n < 64);
+    v >> n
+}
+
+/// Round-half-up of `v / 2^n` for `v >= 0` (the hardware "add half then
+/// truncate" rounder used at the Log2Exp output).
+#[inline]
+pub fn round_half_up_shift(v: i64, n: u32) -> i64 {
+    debug_assert!(v >= 0 && n < 63);
+    (v + (1 << (n - 1))) >> n
+}
+
+/// Position of the leading one (floor(log2(v))) — the LOD block.
+#[inline]
+pub fn leading_one(v: u64) -> u32 {
+    debug_assert!(v > 0);
+    63 - v.leading_zeros()
+}
+
+/// Saturate to `[0, 2^bits - 1]`.
+#[inline]
+pub fn sat_u(v: i64, bits: u32) -> i64 {
+    v.clamp(0, (1 << bits) - 1)
+}
+
+/// Saturate to signed `bits`-bit two's complement range.
+#[inline]
+pub fn sat_s(v: i64, bits: u32) -> i64 {
+    let hi = (1 << (bits - 1)) - 1;
+    v.clamp(-hi - 1, hi)
+}
+
+/// Mitchell logarithm: for X = 2^k (1 + x), returns (k, x_q) with the
+/// fractional part x in Q(`frac_bits`).  Eq. (3) of the paper.
+#[inline]
+pub fn mitchell_log2(v: u64, frac_bits: u32) -> (u32, u64) {
+    let k = leading_one(v);
+    let mantissa = v - (1u64 << k); // v - 2^k in [0, 2^k)
+    let x = if k >= frac_bits {
+        mantissa >> (k - frac_bits)
+    } else {
+        mantissa << (frac_bits - k)
+    };
+    (k, x)
+}
+
+/// Mitchell antilog: 2^(k + x/2^frac) ~ 2^k (1 + x/2^frac).
+#[inline]
+pub fn mitchell_exp2(k: u32, x: u64, frac_bits: u32) -> u64 {
+    let base = 1u64 << k;
+    if k >= frac_bits {
+        base + (x << (k - frac_bits))
+    } else {
+        base + (x >> (frac_bits - k))
+    }
+}
+
+/// Mitchell division X1/X2 via log-domain subtraction — Eq. (4)/(5).
+/// Returns the quotient in Q(`out_frac`).
+pub fn mitchell_div(x1: u64, x2: u64, out_frac: u32) -> u64 {
+    debug_assert!(x1 > 0 && x2 > 0);
+    const F: u32 = 24;
+    let (k1, f1) = mitchell_log2(x1, F);
+    let (k2, f2) = mitchell_log2(x2, F);
+    let kd = k1 as i64 - k2 as i64;
+    let fd = f1 as i64 - f2 as i64;
+    // Eq. (5): borrow from the characteristic when the fraction is negative
+    let (kq, mant) = if fd < 0 {
+        (kd - 1, (2i64 << F) + fd) // 2 + (x1 - x2), in Q(F)
+    } else {
+        (kd, (1i64 << F) + fd) // 1 + (x1 - x2)
+    };
+    let shift = kq + out_frac as i64 - F as i64;
+    if shift >= 0 {
+        (mant as u64) << shift
+    } else if shift > -64 {
+        (mant as u64) >> (-shift)
+    } else {
+        0
+    }
+}
+
+/// A value in Q(int.frac) notation used by the unit models for
+/// self-describing intermediates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Q {
+    pub raw: i64,
+    pub frac: u32,
+}
+
+impl Q {
+    pub fn from_f64(v: f64, frac: u32) -> Q {
+        Q { raw: (v * (1i64 << frac) as f64).round() as i64, frac }
+    }
+
+    pub fn to_f64(self) -> f64 {
+        self.raw as f64 / (1i64 << self.frac) as f64
+    }
+
+    /// Rescale to a different fraction width (floor on narrowing).
+    pub fn rescale(self, frac: u32) -> Q {
+        let raw = if frac >= self.frac {
+            self.raw << (frac - self.frac)
+        } else {
+            self.raw >> (self.frac - frac)
+        };
+        Q { raw, frac }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn asr_is_floor() {
+        assert_eq!(asr(-7, 1), -4); // floor(-3.5)
+        assert_eq!(asr(7, 1), 3);
+        assert_eq!(asr(-1, 4), -1);
+    }
+
+    #[test]
+    fn round_half_up() {
+        assert_eq!(round_half_up_shift(7, 1), 4); // 3.5 -> 4
+        assert_eq!(round_half_up_shift(5, 1), 3); // 2.5 -> 3
+        assert_eq!(round_half_up_shift(4, 2), 1); // 1.0 -> 1
+        assert_eq!(round_half_up_shift(5, 2), 1); // 1.25 -> 1
+        assert_eq!(round_half_up_shift(6, 2), 2); // 1.5 -> 2
+    }
+
+    #[test]
+    fn lod() {
+        assert_eq!(leading_one(1), 0);
+        assert_eq!(leading_one(2), 1);
+        assert_eq!(leading_one(3), 1);
+        assert_eq!(leading_one(1 << 40), 40);
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(sat_u(300, 8), 255);
+        assert_eq!(sat_u(-5, 8), 0);
+        assert_eq!(sat_s(200, 8), 127);
+        assert_eq!(sat_s(-200, 8), -128);
+    }
+
+    #[test]
+    fn mitchell_log_exact_at_powers() {
+        for k in 0..40 {
+            let (kk, x) = mitchell_log2(1u64 << k, 16);
+            assert_eq!((kk, x), (k, 0));
+        }
+    }
+
+    #[test]
+    fn mitchell_roundtrip_error_bounded() {
+        check("mitchell-roundtrip", 200, 11, |rng| {
+            let v = rng.range_i64(1, 1 << 40) as u64;
+            let (k, x) = mitchell_log2(v, 24);
+            let back = mitchell_exp2(k, x, 24);
+            // exact up to the mantissa truncation: one LSB at 2^(k-frac)
+            let lsb = 1i64 << (k as i64 - 24).max(0);
+            let err = (back as i64 - v as i64).abs();
+            assert!(err <= lsb, "v={v} back={back} lsb={lsb}");
+        });
+    }
+
+    #[test]
+    fn mitchell_div_error_within_known_bound() {
+        // Mitchell's division relative error is bounded by ~11% on either
+        // side (two +-8.6% log approximations partially cancel)
+        check("mitchell-div", 500, 13, |rng| {
+            let a = rng.range_i64(1, 1 << 30) as u64;
+            let b = rng.range_i64(1, 1 << 30) as u64;
+            let q = mitchell_div(a, b, 24) as f64 / (1u64 << 24) as f64;
+            let exact = a as f64 / b as f64;
+            let rel = q / exact - 1.0;
+            assert!((-0.14..=0.14).contains(&rel), "a={a} b={b} rel={rel}");
+        });
+    }
+
+    #[test]
+    fn q_format_roundtrip() {
+        let q = Q::from_f64(1.636, 23);
+        assert!((q.to_f64() - 1.636).abs() < 1e-6);
+        let r = q.rescale(8);
+        assert!((r.to_f64() - 1.636).abs() < 0.01);
+        assert_eq!(r.rescale(23).frac, 23);
+    }
+}

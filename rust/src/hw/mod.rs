@@ -1,0 +1,13 @@
+//! Hardware evaluation substrate (DESIGN.md §5 items 7-8): the 28 nm cost
+//! library, the cycle-accurate two-stage pipeline model, the four custom
+//! unit models Table III compares, and the analytical 2080Ti baseline.
+
+pub mod cost;
+pub mod gpu;
+pub mod pipeline;
+pub mod units;
+
+pub use pipeline::{Cycles, Pipeline};
+pub use units::{
+    AiLayerNormUnit, AreaBk, E2SoftmaxUnit, EnergyBk, HwUnit, NnLutLayerNormUnit, SoftermaxUnit,
+};

@@ -1,0 +1,97 @@
+//! Two-stage ping-pong pipeline cycle model.
+//!
+//! Both SOLE units (and the re-implemented baselines) share the dataflow of
+//! Fig. 4/5: stage 1 streams V-element slices of each row through the
+//! compute datapath while stage 2 drains the *previous* row from the
+//! ping-pong buffer.  With R rows of L elements and V lanes at `freq_ghz`:
+//!
+//!   cycles/stage/row = ceil(L / V) (+ a small per-row overhead)
+//!   pipelined total  = (R + 1) * max(stage1, stage2) (steady-state overlap)
+
+/// Static description of one unit's pipeline.
+#[derive(Debug, Clone, Copy)]
+pub struct Pipeline {
+    /// Vector lanes (the paper's vector size, 32).
+    pub lanes: usize,
+    /// Extra cycles per row per stage (drain/latch, reduction tree depth).
+    pub row_overhead: usize,
+    /// Clock (GHz) — the paper synthesizes at 1 GHz.
+    pub freq_ghz: f64,
+}
+
+impl Default for Pipeline {
+    fn default() -> Self {
+        Pipeline { lanes: 32, row_overhead: 4, freq_ghz: 1.0 }
+    }
+}
+
+/// Cycle counts for an (R rows x L elements) workload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Cycles {
+    pub per_row_stage: u64,
+    pub total: u64,
+}
+
+impl Pipeline {
+    /// Cycles for one stage over one row.
+    pub fn stage_cycles(&self, elems_per_row: usize) -> u64 {
+        (elems_per_row.div_ceil(self.lanes) + self.row_overhead) as u64
+    }
+
+    /// Total cycles for R rows with both stages overlapped (ping-pong).
+    pub fn run(&self, rows: usize, elems_per_row: usize) -> Cycles {
+        let per = self.stage_cycles(elems_per_row);
+        let total = per * (rows as u64 + 1); // +1: fill/drain of the pipeline
+        Cycles { per_row_stage: per, total }
+    }
+
+    /// Wall-clock seconds for R rows of L elements on `units` parallel
+    /// units (the paper scales to 32 units for the GPU comparison).
+    pub fn seconds(&self, rows: usize, elems_per_row: usize, units: usize) -> f64 {
+        let rows_per_unit = rows.div_ceil(units.max(1));
+        self.run(rows_per_unit, elems_per_row).total as f64 * 1e-9 / self.freq_ghz
+    }
+
+    /// Element throughput (elements/s) at steady state on one unit.
+    pub fn throughput(&self, elems_per_row: usize) -> f64 {
+        let per = self.stage_cycles(elems_per_row) as f64;
+        elems_per_row as f64 / per * self.freq_ghz * 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_cycles_ceil() {
+        let p = Pipeline { lanes: 32, row_overhead: 0, freq_ghz: 1.0 };
+        assert_eq!(p.stage_cycles(32), 1);
+        assert_eq!(p.stage_cycles(33), 2);
+        assert_eq!(p.stage_cycles(785), 25);
+    }
+
+    #[test]
+    fn pipelining_overlaps_stages() {
+        let p = Pipeline { lanes: 32, row_overhead: 0, freq_ghz: 1.0 };
+        let c = p.run(100, 64);
+        // 2 cycles/row, 100 rows -> ~202 total, NOT 2 stages * 200
+        assert_eq!(c.total, 2 * 101);
+    }
+
+    #[test]
+    fn units_scale_seconds_down() {
+        let p = Pipeline::default();
+        let t1 = p.seconds(32_000, 785, 1);
+        let t32 = p.seconds(32_000, 785, 32);
+        assert!(t1 / t32 > 30.0 && t1 / t32 < 33.0);
+    }
+
+    #[test]
+    fn throughput_matches_hand_calc() {
+        let p = Pipeline { lanes: 32, row_overhead: 4, freq_ghz: 1.0 };
+        // 785 elems -> 25+4 = 29 cycles -> 785/29 G elem/s
+        let t = p.throughput(785);
+        assert!((t - 785.0 / 29.0 * 1e9).abs() / t < 1e-12);
+    }
+}

@@ -1,0 +1,239 @@
+//! AILayerNorm — Algorithm 2, bit-exact integer model.
+//!
+//! Stage 1 (statistic calculation): signed codes D_i = (X_i - zp) << a_i
+//! accumulate E_x; magnitudes are dynamically compressed, squared via the
+//! 16-entry LUT, decompressed by << 4s, PTF-shifted by << 2a, and the
+//! reduced sum takes the deferred << 4.  Stage 2 (affine): A = gamma *
+//! std_inv, Y = A (D - mu) + B.  Matches `ref.ailayernorm_int`.
+
+use super::compress::{compressed_square, COMPRESSED_SQUARE_TABLE};
+use super::config::DEFAULT_ZP;
+use super::rsqrt::rsqrt_hw;
+
+/// Per-row output with the intermediates the golden tests pin.
+#[derive(Debug, Clone)]
+pub struct AiLayerNormOut {
+    pub ex: i64,
+    pub ex2: i64,
+    pub mean: f64,
+    pub std_inv: f64,
+    pub y: Vec<f64>,
+}
+
+/// AILayerNorm over u8 codes with per-channel PTF factors.
+pub struct AiLayerNorm {
+    pub zp: i64,
+}
+
+impl Default for AiLayerNorm {
+    fn default() -> Self {
+        AiLayerNorm { zp: DEFAULT_ZP }
+    }
+}
+
+impl AiLayerNorm {
+    /// Full-introspection forward over one row of C channels.
+    pub fn forward_introspect(
+        &self,
+        codes: &[u8],
+        alpha: &[u8],
+        gamma: &[f32],
+        beta: &[f32],
+    ) -> AiLayerNormOut {
+        let c = codes.len();
+        assert!(c > 0 && alpha.len() == c && gamma.len() == c && beta.len() == c);
+        let mut ex: i64 = 0;
+        let mut ex2: i64 = 0;
+        for i in 0..c {
+            let xi = codes[i] as i64 - self.zp;
+            let a = alpha[i] as u32;
+            ex += xi << a;
+            let mag = xi.unsigned_abs().min(255) as u8;
+            ex2 += compressed_square(mag) << (2 * a);
+        }
+        ex2 <<= 4; // deferred common decompress shift
+        let var_num = ex2 as i128 * c as i128 - (ex as i128) * (ex as i128);
+        let mean = ex as f64 / c as f64;
+        let std_inv = if var_num > 0 {
+            rsqrt_hw(var_num as u128, (c as u128) * (c as u128))
+        } else {
+            0.0
+        };
+        let mut y = Vec::with_capacity(c);
+        for i in 0..c {
+            let d = ((codes[i] as i64 - self.zp) << alpha[i]) as f64;
+            y.push(gamma[i] as f64 * std_inv * (d - mean) + beta[i] as f64);
+        }
+        AiLayerNormOut { ex, ex2, mean, std_inv, y }
+    }
+
+    /// Hot path: writes f32 outputs into `out`, no allocation.
+    pub fn forward_row_f32(
+        &self,
+        codes: &[u8],
+        alpha: &[u8],
+        gamma: &[f32],
+        beta: &[f32],
+        out: &mut [f32],
+    ) {
+        let c = codes.len();
+        debug_assert!(out.len() == c && alpha.len() == c);
+        let sq_table = &*COMPRESSED_SQUARE_TABLE;
+        let mut ex: i64 = 0;
+        let mut ex2: i64 = 0;
+        for i in 0..c {
+            let xi = codes[i] as i64 - self.zp;
+            let a = alpha[i] as u32;
+            ex += xi << a;
+            let mag = xi.unsigned_abs().min(255) as usize;
+            ex2 += sq_table[mag] << (2 * a);
+        }
+        ex2 <<= 4;
+        let var_num = ex2 as i128 * c as i128 - (ex as i128) * (ex as i128);
+        let mean = ex as f64 / c as f64;
+        let std_inv = if var_num > 0 {
+            rsqrt_hw(var_num as u128, (c as u128) * (c as u128))
+        } else {
+            0.0
+        };
+        for i in 0..c {
+            let d = ((codes[i] as i64 - self.zp) << alpha[i]) as f64;
+            out[i] = (gamma[i] as f64 * std_inv * (d - mean) + beta[i] as f64) as f32;
+        }
+    }
+
+    /// Quantize a real-valued row with PTF (scale s * 2^alpha, zp) and run.
+    pub fn forward_real(
+        &self,
+        x: &[f32],
+        alpha: &[u8],
+        s: f64,
+        gamma: &[f32],
+        beta: &[f32],
+    ) -> Vec<f64> {
+        let codes: Vec<u8> = x
+            .iter()
+            .zip(alpha)
+            .map(|(&v, &a)| {
+                let scale = s * 2f64.powi(a as i32);
+                ((v as f64 / scale).round() as i64 + self.zp).clamp(0, 255) as u8
+            })
+            .collect();
+        self.forward_introspect(&codes, alpha, gamma, beta).y
+    }
+}
+
+/// Exact f64 LayerNorm baseline.
+pub fn layernorm_exact(x: &[f32], gamma: &[f32], beta: &[f32], eps: f64) -> Vec<f64> {
+    let c = x.len() as f64;
+    let mean = x.iter().map(|&v| v as f64).sum::<f64>() / c;
+    let var = x.iter().map(|&v| (v as f64 - mean) * (v as f64 - mean)).sum::<f64>() / c;
+    let inv = 1.0 / (var + eps).sqrt();
+    x.iter()
+        .zip(gamma.iter().zip(beta))
+        .map(|(&v, (&g, &b))| g as f64 * (v as f64 - mean) * inv + b as f64)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, size};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn constant_row_gives_beta() {
+        let c = 32;
+        let ln = AiLayerNorm::default();
+        let alpha = vec![0u8; c];
+        let gamma = vec![1f32; c];
+        let beta = vec![0.25f32; c];
+        // codes == zp: ex = ex2 = 0 -> std_inv = 0 -> y = beta
+        let o = ln.forward_introspect(&vec![128u8; c], &alpha, &gamma, &beta);
+        assert_eq!(o.std_inv, 0.0);
+        // constant but nonzero deviation: the rounded compression sees a
+        // positive pseudo-variance, but D - mean = 0 still gives y = beta
+        let o = ln.forward_introspect(&vec![130u8; c], &alpha, &gamma, &beta);
+        for v in o.y {
+            assert!((v - 0.25).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn mean_of_output_near_zero() {
+        check("ai-centered", 60, 61, |rng| {
+            let c = size(rng, 256).max(8);
+            let codes: Vec<u8> = (0..c).map(|_| rng.range_i64(0, 256) as u8).collect();
+            let alpha: Vec<u8> = (0..c).map(|_| rng.range_i64(0, 4) as u8).collect();
+            let gamma = vec![1f32; c];
+            let beta = vec![0f32; c];
+            let o = AiLayerNorm::default().forward_introspect(&codes, &alpha, &gamma, &beta);
+            if o.std_inv > 0.0 {
+                let m: f64 = o.y.iter().sum::<f64>() / c as f64;
+                assert!(m.abs() < 0.05, "mean {m}");
+            }
+        });
+    }
+
+    #[test]
+    fn output_std_near_one_for_spread_inputs() {
+        let mut rng = Rng::new(3);
+        let c = 192;
+        let codes: Vec<u8> = (0..c).map(|_| rng.range_i64(0, 256) as u8).collect();
+        let alpha = vec![0u8; c];
+        let gamma = vec![1f32; c];
+        let beta = vec![0f32; c];
+        let o = AiLayerNorm::default().forward_introspect(&codes, &alpha, &gamma, &beta);
+        let m: f64 = o.y.iter().sum::<f64>() / c as f64;
+        let sd = (o.y.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / c as f64).sqrt();
+        assert!((sd - 1.0).abs() < 0.05, "sd {sd}");
+    }
+
+    #[test]
+    fn tracks_exact_layernorm() {
+        let mut rng = Rng::new(7);
+        let c = 128;
+        // inter-channel variation: a few channels 6x larger
+        let x: Vec<f32> = (0..c)
+            .map(|i| (rng.normal() * if i % 13 == 0 { 6.0 } else { 1.0 }) as f32)
+            .collect();
+        let r_max = x.iter().map(|v| v.abs()).fold(0f32, f32::max) as f64;
+        let base = x.iter().map(|v| v.abs() as f64).fold(f64::INFINITY, f64::min).max(r_max / 32.0);
+        let alpha: Vec<u8> = x
+            .iter()
+            .map(|v| ((v.abs() as f64 / base).log2().round().clamp(0.0, 5.0)) as u8)
+            .collect();
+        let s = x
+            .iter()
+            .zip(&alpha)
+            .map(|(v, &a)| v.abs() as f64 / 2f64.powi(a as i32))
+            .fold(0.0, f64::max)
+            / 127.0;
+        let gamma = vec![1f32; c];
+        let beta = vec![0f32; c];
+        let approx = AiLayerNorm::default().forward_real(&x, &alpha, s, &gamma, &beta);
+        let exact = layernorm_exact(&x, &gamma, &beta, 1e-9);
+        let rms_e: f64 = exact.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let rms_d: f64 =
+            approx.iter().zip(&exact).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+        assert!(rms_d / rms_e < 0.25, "rel rms {}", rms_d / rms_e);
+    }
+
+    #[test]
+    fn hot_path_matches_introspect() {
+        check("ai-hotpath", 50, 71, |rng| {
+            let c = size(rng, 384).max(4);
+            let codes: Vec<u8> = (0..c).map(|_| rng.range_i64(0, 256) as u8).collect();
+            let alpha: Vec<u8> = (0..c).map(|_| rng.range_i64(0, 6) as u8).collect();
+            let gamma: Vec<f32> = (0..c).map(|_| 1.0 + 0.2 * rng.normal() as f32).collect();
+            let beta: Vec<f32> = (0..c).map(|_| 0.2 * rng.normal() as f32).collect();
+            let ln = AiLayerNorm::default();
+            let gold = ln.forward_introspect(&codes, &alpha, &gamma, &beta);
+            let mut out = vec![0f32; c];
+            ln.forward_row_f32(&codes, &alpha, &gamma, &beta, &mut out);
+            for (a, b) in out.iter().zip(&gold.y) {
+                assert!((*a as f64 - b).abs() < 1e-5);
+            }
+        });
+    }
+}

@@ -1,0 +1,44 @@
+//! I-BERT integer LayerNorm — the arithmetic core of the NN-LUT baseline
+//! unit (NN-LUT replaces the non-linear pieces with NN-learned PWL tables
+//! but keeps INT32 statistics; for LayerNorm the dominant cost is the
+//! 32-bit multiply per element in the variance — exactly what this model
+//! reproduces and what Table III's Statistic Unit row measures).
+
+/// I-BERT LayerNorm over real inputs at quantization `scale`.
+pub fn ibert_layernorm(x: &[f32], gamma: &[f32], beta: &[f32], scale: f64) -> Vec<f64> {
+    let c = x.len();
+    let q: Vec<f64> = x.iter().map(|&v| (v as f64 / scale).floor()).collect();
+    let mu = (q.iter().sum::<f64>() / c as f64).floor();
+    let var = (q.iter().map(|&v| (v - mu) * (v - mu)).sum::<f64>() / c as f64).floor();
+    let std = var.sqrt().floor() + 1.0;
+    q.iter()
+        .zip(gamma.iter().zip(beta))
+        .map(|(&v, (&g, &b))| g as f64 * (v - mu) / std + b as f64)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::layernorm::ai::layernorm_exact;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tracks_exact() {
+        let mut rng = Rng::new(9);
+        let c = 128;
+        let x: Vec<f32> = (0..c).map(|_| (rng.normal() * 1.5) as f32).collect();
+        let gamma = vec![1f32; c];
+        let beta = vec![0f32; c];
+        let a = ibert_layernorm(&x, &gamma, &beta, 1.0 / 64.0);
+        let b = layernorm_exact(&x, &gamma, &beta, 1e-9);
+        let rms: f64 = a
+            .iter()
+            .zip(&b)
+            .map(|(p, q)| (p - q) * (p - q))
+            .sum::<f64>()
+            .sqrt()
+            / (c as f64).sqrt();
+        assert!(rms < 0.1, "rms {rms}");
+    }
+}

@@ -1,0 +1,117 @@
+//! Dynamic compression — Eq. (15) region of Algorithm 2.
+//!
+//! 8-bit magnitude -> 4-bit code + 1-bit shift select; recovery is
+//! x ~ y << (2 + 2s).  The square then needs only the 16-entry LUT plus a
+//! decompress shift — this is what removes the 12-bit multiplier from the
+//! statistic path.
+
+/// The 16-entry square LUT (y^2 for y in 0..16) — in hardware a ROM.
+pub const SQUARE_LUT: [i64; 16] =
+    [0, 1, 4, 9, 16, 25, 36, 49, 64, 81, 100, 121, 144, 169, 196, 225];
+
+#[inline]
+pub fn square_lut(y: u8) -> i64 {
+    SQUARE_LUT[y as usize]
+}
+
+/// DynamicCompress(x): (y, s) with y in [0,15], s in {0,1}.
+/// x >= 64 keeps the top nibble (s=1, shift 4); smaller values keep bits
+/// [5:2] (s=0, shift 2).  Rounding is to-nearest (half-LSB carry before
+/// the bit-select): truncation would bias E(x^2) by ~8% while the paper
+/// claims ~0.2% — only the rounding variant meets that, at the cost of a
+/// carry adder.
+#[inline]
+pub fn dynamic_compress(x: u8) -> (u8, u8) {
+    if x >= 64 {
+        ((((x as u16 + 8) >> 4) as u8).min(15), 1)
+    } else {
+        ((((x as u16 + 2) >> 2) as u8).min(15), 0)
+    }
+}
+
+/// Compressed square with decompression shift applied (the `<< 4` common
+/// factor is deferred to the reduced sum — DESIGN.md §2 erratum note):
+/// returns y^2 << (4 s) ~ x^2 >> 4.
+#[inline]
+pub fn compressed_square(x: u8) -> i64 {
+    let (y, s) = dynamic_compress(x);
+    square_lut(y) << (4 * s)
+}
+
+/// Software hot path: the full 256-entry compress->square->decompress map,
+/// precomputed (a pure function of the 8-bit magnitude).  Semantically
+/// identical to `compressed_square` (tested); the hardware keeps the
+/// 16-entry LUT, this table exists only so the L3 software service isn't
+/// artificially slow.
+pub static COMPRESSED_SQUARE_TABLE: std::sync::LazyLock<[i64; 256]> =
+    std::sync::LazyLock::new(|| {
+        let mut t = [0i64; 256];
+        for (x, slot) in t.iter_mut().enumerate() {
+            *slot = compressed_square(x as u8);
+        }
+        t
+    });
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reconstruction_within_half_lsb() {
+        for x in 0u8..=255 {
+            let (y, s) = dynamic_compress(x);
+            assert!(y <= 15);
+            let rec = (y as i64) << (2 + 2 * s);
+            let lsb = 1i64 << (2 + 2 * s);
+            // round-to-nearest: |x - rec| <= lsb/2, except where y clamps
+            // at 15 (x in [62,64) for s=0, x >= 248 for s=1)
+            let clamped = (s == 0 && x >= 62) || (s == 1 && x >= 248);
+            let bound = if clamped { lsb } else { lsb / 2 };
+            assert!(((x as i64) - rec).abs() <= bound, "x={x} rec={rec}");
+        }
+    }
+
+    #[test]
+    fn boundary_at_64() {
+        assert_eq!(dynamic_compress(63), (15, 0)); // min((63+2)>>2, 15)
+        assert_eq!(dynamic_compress(64), (4, 1)); // (64+8)>>4
+        assert_eq!(dynamic_compress(255), (15, 1)); // clamped
+        assert_eq!(dynamic_compress(0), (0, 0));
+    }
+
+    #[test]
+    fn paper_error_claim_uniform_inputs() {
+        // ~0.2% error on E(x^2) and ~0.4% on sigma for uniform u8 data.
+        let mut rng = Rng::new(21);
+        let n = 200_000;
+        let (mut se, mut sr, mut sx) = (0f64, 0f64, 0f64);
+        for _ in 0..n {
+            let x = rng.range_i64(0, 256) as u8;
+            se += (x as f64) * (x as f64);
+            sr += (compressed_square(x) << 4) as f64;
+            sx += x as f64;
+        }
+        let (ex2, rx2, ex) = (se / n as f64, sr / n as f64, sx / n as f64);
+        let rel = (rx2 - ex2).abs() / ex2;
+        assert!(rel < 0.01, "E(x^2) rel err {rel}");
+        let sd_t = (ex2 - ex * ex).sqrt();
+        let sd_r = (rx2 - ex * ex).max(0.0).sqrt();
+        assert!((sd_r - sd_t).abs() / sd_t < 0.015, "sigma err");
+    }
+
+    #[test]
+    fn table_matches_function() {
+        for x in 0u8..=255 {
+            assert_eq!(COMPRESSED_SQUARE_TABLE[x as usize], compressed_square(x));
+        }
+    }
+
+    #[test]
+    fn small_values_matter_less() {
+        // Eq. (14): the squared-share of a small value is below its linear
+        // share, so truncating small x hurts x^2 sums less than x sums.
+        let (x1, x2) = (10f64, 100f64);
+        assert!(x1 * x1 / (x1 * x1 + x2 * x2) < x1 / (x1 + x2));
+    }
+}

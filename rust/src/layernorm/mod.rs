@@ -1,0 +1,22 @@
+//! LayerNorm algorithms: the paper's AILayerNorm (bit-exact integer model
+//! of Algorithm 2), the exact baseline, and the I-BERT/NN-LUT integer
+//! comparator.
+
+pub mod ai;
+pub mod baselines;
+pub mod compress;
+pub mod rsqrt;
+
+pub use ai::{AiLayerNorm, AiLayerNormOut};
+pub use compress::{dynamic_compress, square_lut, SQUARE_LUT};
+pub use rsqrt::{rsqrt_hw, RSQRT_LUT};
+
+/// Contract constants shared with python/compile/kernels/ref.py.
+pub mod config {
+    /// 64-entry x^-0.5 LUT.
+    pub const RSQRT_LUT_BITS: u32 = 6;
+    /// Q(.16) LUT entries.
+    pub const RSQRT_LUT_Q: u32 = 16;
+    /// Layer-wise zero point (u8 symmetric).
+    pub const DEFAULT_ZP: i64 = 128;
+}

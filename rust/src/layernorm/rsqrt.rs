@@ -1,0 +1,82 @@
+//! The x^-0.5 Unit: a 64-entry Q(.16) LUT over the normalized mantissa
+//! v in [1,4) plus a power-of-four shift.  Bit-exact twin of
+//! `ref.rsqrt_hw` (exact-rational normalization).
+
+use std::sync::OnceLock;
+
+use super::config::{RSQRT_LUT_BITS, RSQRT_LUT_Q};
+
+/// The LUT contents: round(2^16 / sqrt(1 + (i + 0.5) * 3/64)).
+pub fn rsqrt_lut() -> &'static [i64; 64] {
+    static LUT: OnceLock<[i64; 64]> = OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = [0i64; 64];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let v = 1.0 + (i as f64 + 0.5) * 3.0 / (1u64 << RSQRT_LUT_BITS) as f64;
+            *slot = ((1u64 << RSQRT_LUT_Q) as f64 / v.sqrt()).round() as i64;
+        }
+        t
+    })
+}
+
+/// Public alias used in docs/tests.
+pub static RSQRT_LUT: fn() -> &'static [i64; 64] = rsqrt_lut;
+
+/// Hardware x^-0.5 of the exact rational var = num/den (> 0):
+/// normalize to 4^k * v with v in [1,4), LUT the mantissa, shift by k.
+pub fn rsqrt_hw(var_num: u128, var_den: u128) -> f64 {
+    assert!(var_num > 0 && var_den > 0);
+    let mut k: i32 = 0;
+    let mut num = var_num;
+    let mut den = var_den;
+    while num >= 4 * den {
+        den *= 4;
+        k += 1;
+    }
+    while num < den {
+        num *= 4;
+        k -= 1;
+    }
+    // v = var/4^k in [1,4); index floor((v-1) * 64/3)
+    let idx = (((num - den) << RSQRT_LUT_BITS) / (3 * den)) as usize;
+    let idx = idx.min((1 << RSQRT_LUT_BITS) - 1);
+    rsqrt_lut()[idx] as f64 / (1u64 << RSQRT_LUT_Q) as f64 * 2f64.powi(-k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn lut_is_monotone_decreasing() {
+        let lut = rsqrt_lut();
+        for w in lut.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        assert!(lut[0] <= 1 << 16); // 1/sqrt(1+eps) < 1
+    }
+
+    #[test]
+    fn exact_at_powers_of_four() {
+        // var = 4^k exactly normalizes to v = 1 (bucket 0)
+        for k in -3i32..6 {
+            let (num, den) = if k >= 0 { (4u128.pow(k as u32), 1u128) } else { (1u128, 4u128.pow(-k as u32)) };
+            let got = rsqrt_hw(num, den);
+            let exact = 2f64.powi(-k);
+            assert!((got / exact - 1.0).abs() < 0.012, "k={k}");
+        }
+    }
+
+    #[test]
+    fn relative_error_below_lut_bound() {
+        check("rsqrt-bound", 400, 51, |rng| {
+            let num = rng.range_i64(1, 1 << 40) as u128;
+            let den = rng.range_i64(1, 1 << 20) as u128;
+            let got = rsqrt_hw(num, den);
+            let exact = 1.0 / ((num as f64 / den as f64).sqrt());
+            let rel = (got / exact - 1.0).abs();
+            assert!(rel < 0.012, "num={num} den={den} rel={rel}");
+        });
+    }
+}

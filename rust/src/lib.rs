@@ -1,0 +1,32 @@
+//! # SOLE — Hardware-Software Co-design of Softmax and LayerNorm
+//!
+//! Full-system reproduction of *SOLE: Hardware-Software Co-design of
+//! Softmax and LayerNorm for Efficient Transformer Inference* (Wang et
+//! al.) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1/2 (build-time Python)** — the E2Softmax / AILayerNorm
+//!   Pallas kernels and the transformer models that embed them, AOT-lowered
+//!   to HLO text under `artifacts/`.
+//! * **Layer 3 (this crate)** — the inference coordinator (request router,
+//!   dynamic batcher, PJRT runtime), the bit-exact integer models of both
+//!   algorithms, the hardware evaluation substrate (28nm cost model,
+//!   cycle-accurate unit models, analytical GPU baseline), and one
+//!   experiment generator per table/figure of the paper.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod coordinator;
+pub mod experiments;
+pub mod fixedpoint;
+pub mod hw;
+pub mod layernorm;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod softmax;
+pub mod tensor;
+pub mod util;
+
+/// Crate version, surfaced by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,168 @@
+//! `sole` — the leader binary: experiment harness + serving CLI.
+//!
+//! ```text
+//! sole experiment <fig1a|fig3|fig6a|fig6b|table1|table2|table3|compress-error|ablation|all>
+//!      [--artifacts DIR] [--samples N] [--batches 1,2,4,8,16]
+//! sole serve [--artifacts DIR] [--model deit_t] [--variant fp32_sole]
+//!      [--requests N] [--rate R] [--max-wait-ms W] [--workers K]
+//! sole info [--artifacts DIR]
+//! ```
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use sole::coordinator::{BatchPolicy, Coordinator, PjrtBackend};
+use sole::experiments::{self, ExperimentOut};
+use sole::runtime::Engine;
+use sole::tensor::Bundle;
+use sole::util::cli::Args;
+use sole::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("experiment") => cmd_experiment(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "sole {} — SOLE reproduction CLI\n\
+                 usage:\n  sole experiment <fig1a|fig3|fig6a|fig6b|table1|table2|table3|compress-error|ablation|all>\n\
+                 \x20 sole serve [--model deit_t] [--variant fp32_sole] [--requests 64] [--rate 8]\n\
+                 \x20 sole info",
+                sole::VERSION
+            );
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_path(args: &Args) -> PathBuf {
+    PathBuf::from(args.opt_str("artifacts", "artifacts"))
+}
+
+fn parse_batches(args: &Args) -> Vec<usize> {
+    args.opt_str("batches", "1,2,4,8,16")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect()
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let artifacts = artifacts_path(args);
+    let samples = args.opt_usize("samples", 512);
+    let batches = parse_batches(args);
+
+    let mut outs: Vec<ExperimentOut> = Vec::new();
+    let needs_engine = matches!(which, "table1" | "table2" | "all");
+    let engine = if needs_engine {
+        Some(Engine::open(&artifacts).context("experiments table1/table2 need artifacts")?)
+    } else {
+        None
+    };
+
+    match which {
+        "fig1a" => outs.push(experiments::fig1::run(args.opt_usize("batch", 8))),
+        "fig3" => outs.push(experiments::fig3::run(&artifacts)?),
+        "fig6a" => outs.push(experiments::fig6::run_a(&batches)),
+        "fig6b" => outs.push(experiments::fig6::run_b(&batches)),
+        "table3" => outs.push(experiments::table3::run()),
+        "compress-error" => outs.push(experiments::compress_error::run()),
+        "ablation" => outs.push(experiments::ablation::run()),
+        "table1" => {
+            outs.push(experiments::accuracy::table1(engine.as_ref().unwrap(), &artifacts, samples)?)
+        }
+        "table2" => {
+            outs.push(experiments::accuracy::table2(engine.as_ref().unwrap(), &artifacts, samples)?)
+        }
+        "all" => {
+            outs.push(experiments::fig1::run(8));
+            if let Ok(f3) = experiments::fig3::run(&artifacts) {
+                outs.push(f3);
+            }
+            outs.push(experiments::fig6::run_a(&batches));
+            outs.push(experiments::fig6::run_b(&batches));
+            outs.push(experiments::table3::run());
+            outs.push(experiments::compress_error::run());
+            outs.push(experiments::ablation::run());
+            let e = engine.as_ref().unwrap();
+            outs.push(experiments::accuracy::table1(e, &artifacts, samples)?);
+            outs.push(experiments::accuracy::table2(e, &artifacts, samples)?);
+        }
+        other => bail!("unknown experiment '{other}'"),
+    }
+    for o in &outs {
+        o.print();
+        o.save(&artifacts)?;
+    }
+    println!("results saved under {}/results/", artifacts.display());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let artifacts = artifacts_path(args);
+    let model = args.opt_str("model", "deit_t").to_string();
+    let variant = args.opt_str("variant", "fp32_sole").to_string();
+    let n_requests = args.opt_usize("requests", 64);
+    let rate = args.opt_f64("rate", 16.0); // req/s (Poisson arrivals)
+    let max_wait = Duration::from_millis(args.opt_usize("max-wait-ms", 20) as u64);
+    let workers = args.opt_usize("workers", 1);
+
+    let engine = Engine::open(&artifacts)?;
+    println!("platform {}; loading {model}/{variant} buckets ...", engine.platform());
+    let backend = Arc::new(PjrtBackend::from_family(&engine, &model, &variant)?);
+    let (buckets, item_len) = {
+        use sole::coordinator::Backend as _;
+        (backend.buckets().to_vec(), backend.item_input_len())
+    };
+    println!("buckets: {buckets:?}");
+    let co = Coordinator::start(backend, BatchPolicy { max_wait, max_batch: 16 }, workers);
+    let client = co.client();
+
+    // drive a Poisson-arrival open-loop workload from the eval set
+    let data = Bundle::load(&artifacts.join("data/cv_eval"))?;
+    let xs = data.get("x")?.as_f32()?;
+    let mut rng = Rng::new(1234);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..n_requests {
+        let start = (i * item_len) % (xs.len() - item_len);
+        pending.push(client.submit(xs[start..start + item_len].to_vec())?);
+        std::thread::sleep(Duration::from_secs_f64(rng.exponential(rate)));
+    }
+    for rx in pending {
+        let _ = rx.recv()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("served {n_requests} requests in {wall:.2}s ({:.1} req/s)", n_requests as f64 / wall);
+    println!("{}", co.metrics.summary());
+    co.shutdown();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let artifacts = artifacts_path(args);
+    let engine = Engine::open(&artifacts)?;
+    println!("platform: {}", engine.platform());
+    println!("artifacts: {}", artifacts.display());
+    println!("models:");
+    for m in engine.manifest.models() {
+        let variants: Vec<String> = engine
+            .manifest
+            .entries
+            .values()
+            .filter(|e| e.model.as_deref() == Some(&m))
+            .map(|e| format!("{}@b{}", e.variant.clone().unwrap_or_default(), e.batch))
+            .collect();
+        println!("  {m}: {}", variants.join(", "));
+    }
+    println!("ops:");
+    for e in engine.manifest.entries.values().filter(|e| e.model.is_none()) {
+        println!("  {} {:?} -> {:?}", e.id, e.input_shape, e.output_shape);
+    }
+    Ok(())
+}

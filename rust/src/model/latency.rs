@@ -1,0 +1,181 @@
+//! End-to-end latency composition: GPU matmuls + nonlinear ops on either
+//! the GPU or the SOLE units.  Drives Fig 1(a) and Fig 6(b).
+
+use crate::hw::gpu;
+use crate::hw::units::HwUnit;
+use crate::hw::{AiLayerNormUnit, E2SoftmaxUnit};
+
+use super::PaperModel;
+
+/// Where each op class executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Everything FP32 on the GPU.
+    Fp32Gpu,
+    /// INT8 matmuls on tensor cores; Softmax/LayerNorm still FP32 on GPU
+    /// (the paper's "INT8" bars — the non-linear bottleneck remains).
+    Int8Gpu,
+    /// INT8 matmuls + Softmax/LayerNorm offloaded to the SOLE units.
+    Int8Sole,
+}
+
+/// Latency breakdown in seconds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Breakdown {
+    pub matmul: f64,
+    pub softmax: f64,
+    pub layernorm: f64,
+    pub elementwise: f64,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> f64 {
+        self.matmul + self.softmax + self.layernorm + self.elementwise
+    }
+
+    pub fn nonlinear_share(&self) -> f64 {
+        (self.softmax + self.layernorm) / self.total()
+    }
+}
+
+/// Number of SOLE units in the scaled-up comparison (paper: 32, to match
+/// a 32-lane MAC datapath's throughput).
+pub const SOLE_UNITS: usize = 32;
+
+/// Compose the end-to-end latency of `model` at `batch` under `mode`.
+pub fn latency(model: &PaperModel, batch: usize, mode: ExecMode) -> Breakdown {
+    let int8 = mode != ExecMode::Fp32Gpu;
+    let mut b = Breakdown::default();
+
+    for (m, n, k, count) in model.gemms(batch) {
+        b.matmul += gpu::gemm_time(m, n, k, int8) * count as f64;
+    }
+    b.elementwise = gpu::elementwise_time(model.elementwise_elems(batch), 2.0);
+
+    match mode {
+        ExecMode::Fp32Gpu | ExecMode::Int8Gpu => {
+            for w in model.softmax_work(batch) {
+                b.softmax += gpu::softmax_time(w.rows, w.len) * w.kernels as f64;
+            }
+            for w in model.layernorm_work(batch) {
+                b.layernorm += gpu::layernorm_time(w.rows, w.len) * w.kernels as f64;
+            }
+        }
+        ExecMode::Int8Sole => {
+            let sm = E2SoftmaxUnit::default();
+            let ln = AiLayerNormUnit::default();
+            for w in model.softmax_work(batch) {
+                b.softmax += sm.seconds(w.rows, w.len, SOLE_UNITS) * w.kernels as f64;
+            }
+            for w in model.layernorm_work(batch) {
+                b.layernorm += ln.seconds(w.rows, w.len, SOLE_UNITS) * w.kernels as f64;
+            }
+        }
+    }
+    b
+}
+
+/// Standalone nonlinear-op comparison for Fig 6(a): (gpu_time, sole_time).
+pub fn softmax_gpu_vs_sole(model: &PaperModel, batch: usize) -> (f64, f64) {
+    let sm = E2SoftmaxUnit::default();
+    let mut tg = 0.0;
+    let mut ts = 0.0;
+    for w in model.softmax_work(batch) {
+        tg += gpu::softmax_time(w.rows, w.len) * w.kernels as f64;
+        ts += sm.seconds(w.rows, w.len, SOLE_UNITS) * w.kernels as f64;
+    }
+    (tg, ts)
+}
+
+pub fn layernorm_gpu_vs_sole(model: &PaperModel, batch: usize) -> (f64, f64) {
+    let ln = AiLayerNormUnit::default();
+    let mut tg = 0.0;
+    let mut ts = 0.0;
+    for w in model.layernorm_work(batch) {
+        tg += gpu::layernorm_time(w.rows, w.len) * w.kernels as f64;
+        ts += ln.seconds(w.rows, w.len, SOLE_UNITS) * w.kernels as f64;
+    }
+    (tg, ts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn deit_t() -> PaperModel {
+        PaperModel::deit("deit_t", 192, 3)
+    }
+
+    #[test]
+    fn int8_speedup_band_matches_paper() {
+        // paper Fig 6(b): INT8 over FP32 only 1.10-1.28x
+        for batch in [1usize, 4, 8, 16] {
+            let f = latency(&deit_t(), batch, ExecMode::Fp32Gpu).total();
+            let i = latency(&deit_t(), batch, ExecMode::Int8Gpu).total();
+            let s = f / i;
+            assert!(s > 1.02 && s < 1.45, "batch {batch}: int8 speedup {s}");
+        }
+    }
+
+    #[test]
+    fn sole_speedup_band_matches_paper() {
+        // paper Fig 6(b): INT8+SOLE reaches 1.50-2.09x over FP32
+        for batch in [1usize, 4, 8, 16] {
+            let f = latency(&deit_t(), batch, ExecMode::Fp32Gpu).total();
+            let s = latency(&deit_t(), batch, ExecMode::Int8Sole).total();
+            let sp = f / s;
+            assert!(sp > 1.3 && sp < 2.6, "batch {batch}: sole speedup {sp}");
+        }
+    }
+
+    #[test]
+    fn nonlinear_share_grows_under_int8() {
+        // Fig 1(a): quantizing matmuls inflates the Softmax/LN share
+        let f = latency(&deit_t(), 8, ExecMode::Fp32Gpu);
+        let i = latency(&deit_t(), 8, ExecMode::Int8Gpu);
+        assert!(i.nonlinear_share() > f.nonlinear_share());
+        assert!(i.nonlinear_share() > 0.25, "share {}", i.nonlinear_share());
+    }
+
+    #[test]
+    fn standalone_softmax_speedup_in_paper_band() {
+        // paper Fig 6(a): 29.3-57.5x for softmax across batch 1..16
+        for batch in [1usize, 2, 4, 8, 16] {
+            let (g, s) = softmax_gpu_vs_sole(&deit_t(), batch);
+            let sp = g / s;
+            assert!(sp > 15.0 && sp < 90.0, "batch {batch}: {sp}");
+        }
+    }
+
+    #[test]
+    fn standalone_layernorm_speedup_in_paper_band() {
+        // paper Fig 6(a): 38.4-86.8x for layernorm
+        for batch in [1usize, 2, 4, 8, 16] {
+            let (g, s) = layernorm_gpu_vs_sole(&deit_t(), batch);
+            let sp = g / s;
+            assert!(sp > 15.0 && sp < 140.0, "batch {batch}: {sp}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod calib_probe {
+    use super::*;
+
+    #[test]
+    fn probe_breakdowns() {
+        let m = PaperModel::deit("deit_t", 192, 3);
+        for batch in [1usize, 4, 8, 16] {
+            let f = latency(&m, batch, ExecMode::Fp32Gpu);
+            let i = latency(&m, batch, ExecMode::Int8Gpu);
+            let s = latency(&m, batch, ExecMode::Int8Sole);
+            println!(
+                "b={batch:2} fp32: mm={:.2}ms sm={:.2}ms ln={:.2}ms ew={:.2}ms share={:.2} | int8 {:.2}x | sole {:.2}x",
+                f.matmul * 1e3, f.softmax * 1e3, f.layernorm * 1e3, f.elementwise * 1e3,
+                f.nonlinear_share(),
+                f.total() / i.total(),
+                f.total() / s.total()
+            );
+        }
+    }
+}

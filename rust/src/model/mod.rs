@@ -1,0 +1,199 @@
+//! Transformer workload descriptions (DESIGN.md §5 item 9).
+//!
+//! The *paper-shape* model zoo: DeiT-T/S/B at 448x448 (785 tokens — the
+//! Fig 1/6 setting), Swin-T/S/B (stage pyramid, 7x7 = 49-token windows)
+//! and BERT-Base.  These drive the hardware evaluation (op inventories,
+//! softmax/LN row counts, latency composition); the *accuracy* surrogates
+//! live on the Python side (artifacts/manifest.json).
+
+pub mod latency;
+
+/// One pipeline stage of an encoder (plain ViT/BERT models have one).
+#[derive(Debug, Clone, Copy)]
+pub struct Stage {
+    pub depth: usize,
+    pub dim: usize,
+    pub heads: usize,
+    pub tokens: usize,
+    /// Softmax row length: `tokens` for global attention, window size for
+    /// Swin-style windowed attention.
+    pub attn_len: usize,
+}
+
+/// A transformer's workload description.
+#[derive(Debug, Clone)]
+pub struct PaperModel {
+    pub name: &'static str,
+    pub stages: Vec<Stage>,
+}
+
+/// One op-level workload item for the nonlinear units.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RowWork {
+    /// Number of rows (per batch element).
+    pub rows: usize,
+    /// Elements per row.
+    pub len: usize,
+    /// Kernels launched on GPU for this work (one per layer).
+    pub kernels: usize,
+}
+
+impl PaperModel {
+    /// DeiT at 448x448 (patch 16 -> 28x28 + cls = 785 tokens).
+    pub fn deit(name: &'static str, dim: usize, heads: usize) -> PaperModel {
+        PaperModel {
+            name,
+            stages: vec![Stage { depth: 12, dim, heads, tokens: 785, attn_len: 785 }],
+        }
+    }
+
+    /// Swin at 224x224: stage pyramid with 7x7 windows.
+    pub fn swin(name: &'static str, base_dim: usize, depths: [usize; 4], base_heads: usize) -> PaperModel {
+        let tokens = [3136, 784, 196, 49];
+        let stages = (0..4)
+            .map(|i| Stage {
+                depth: depths[i],
+                dim: base_dim << i,
+                heads: base_heads << i,
+                tokens: tokens[i],
+                attn_len: 49,
+            })
+            .collect();
+        PaperModel { name, stages }
+    }
+
+    pub fn bert_base(seq: usize) -> PaperModel {
+        PaperModel {
+            name: "bert_base",
+            stages: vec![Stage { depth: 12, dim: 768, heads: 12, tokens: seq, attn_len: seq }],
+        }
+    }
+
+    /// The paper's evaluation zoo.
+    pub fn zoo() -> Vec<PaperModel> {
+        vec![
+            PaperModel::deit("deit_t", 192, 3),
+            PaperModel::deit("deit_s", 384, 6),
+            PaperModel::deit("deit_b", 768, 12),
+            PaperModel::swin("swin_t", 96, [2, 2, 6, 2], 3),
+            PaperModel::swin("swin_s", 96, [2, 2, 18, 2], 3),
+            PaperModel::swin("swin_b", 128, [2, 2, 18, 2], 4),
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<PaperModel> {
+        match name {
+            "deit_t" => Some(PaperModel::deit("deit_t", 192, 3)),
+            "deit_s" => Some(PaperModel::deit("deit_s", 384, 6)),
+            "deit_b" => Some(PaperModel::deit("deit_b", 768, 12)),
+            "swin_t" => Some(PaperModel::swin("swin_t", 96, [2, 2, 6, 2], 3)),
+            "swin_s" => Some(PaperModel::swin("swin_s", 96, [2, 2, 18, 2], 3)),
+            "swin_b" => Some(PaperModel::swin("swin_b", 128, [2, 2, 18, 2], 4)),
+            "bert_base" => Some(PaperModel::bert_base(128)),
+            _ => None,
+        }
+    }
+
+    /// Softmax work per batch element: rows of attn_len per layer.
+    pub fn softmax_work(&self, batch: usize) -> Vec<RowWork> {
+        self.stages
+            .iter()
+            .map(|s| {
+                let windows = s.tokens / s.attn_len;
+                RowWork {
+                    rows: batch * s.heads * windows * s.attn_len,
+                    len: s.attn_len,
+                    kernels: s.depth,
+                }
+            })
+            .collect()
+    }
+
+    /// LayerNorm work per batch element: 2 LNs per layer, rows = tokens,
+    /// row length = dim.
+    pub fn layernorm_work(&self, batch: usize) -> Vec<RowWork> {
+        self.stages
+            .iter()
+            .map(|s| RowWork { rows: batch * s.tokens, len: s.dim, kernels: 2 * s.depth })
+            .collect()
+    }
+
+    /// GEMM inventory per layer of each stage:
+    /// (m, n, k) x count, per batch element.
+    pub fn gemms(&self, batch: usize) -> Vec<(usize, usize, usize, usize)> {
+        let mut out = Vec::new();
+        for s in &self.stages {
+            let t = s.tokens * batch;
+            let d = s.dim;
+            // qkv, attn-logits, attn-v, proj, mlp-in, mlp-out per layer
+            out.push((t, 3 * d, d, s.depth));
+            out.push((t, s.attn_len, d, s.depth)); // q k^T (per-head folded)
+            out.push((t, d, s.attn_len, s.depth)); // probs v
+            out.push((t, d, d, s.depth));
+            out.push((t, 4 * d, d, s.depth));
+            out.push((t, d, 4 * d, s.depth));
+        }
+        out
+    }
+
+    /// Elementwise element count per batch element (GELU + residuals).
+    pub fn elementwise_elems(&self, batch: usize) -> usize {
+        self.stages
+            .iter()
+            .map(|s| batch * s.tokens * s.dim * s.depth * 6)
+            .sum()
+    }
+
+    pub fn total_softmax_rows(&self, batch: usize) -> usize {
+        self.softmax_work(batch).iter().map(|w| w.rows * w.kernels).sum()
+    }
+
+    pub fn total_layernorm_rows(&self, batch: usize) -> usize {
+        self.layernorm_work(batch).iter().map(|w| w.rows * w.kernels).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deit_t_shapes_match_paper() {
+        let m = PaperModel::deit("deit_t", 192, 3);
+        let sw = m.softmax_work(1);
+        assert_eq!(sw.len(), 1);
+        assert_eq!(sw[0].rows, 3 * 785); // heads x tokens
+        assert_eq!(sw[0].len, 785);
+        assert_eq!(sw[0].kernels, 12);
+        let lw = m.layernorm_work(1);
+        assert_eq!(lw[0].rows, 785);
+        assert_eq!(lw[0].len, 192);
+        assert_eq!(lw[0].kernels, 24);
+    }
+
+    #[test]
+    fn swin_windows_shrink_rows() {
+        let m = PaperModel::swin("swin_t", 96, [2, 2, 6, 2], 3);
+        let sw = m.softmax_work(1);
+        assert_eq!(sw.len(), 4);
+        // stage 0: 3136 tokens in 64 windows of 49
+        assert_eq!(sw[0].len, 49);
+        assert_eq!(sw[0].rows, 3 * 64 * 49);
+        // deepest stage: 1 window
+        assert_eq!(sw[3].rows, 24 * 49);
+    }
+
+    #[test]
+    fn batch_scales_rows_linearly() {
+        let m = PaperModel::bert_base(128);
+        assert_eq!(m.total_softmax_rows(4), 4 * m.total_softmax_rows(1));
+        assert_eq!(m.total_layernorm_rows(8), 8 * m.total_layernorm_rows(1));
+    }
+
+    #[test]
+    fn zoo_all_resolvable() {
+        for m in PaperModel::zoo() {
+            assert!(PaperModel::by_name(m.name).is_some());
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Quantization substrate: affine INT8 + PTF calibration (FQ-ViT style).
+//!
+//! The Python side calibrates at build time; this Rust twin exists so the
+//! coordinator can (re)calibrate on live tensors (e.g. the software
+//! fallback path of `examples/op_offload.rs`) and so the behaviour is
+//! testable without Python.
+
+use crate::layernorm::config::DEFAULT_ZP;
+
+/// Per-tensor symmetric INT8 parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct QParams {
+    pub scale: f64,
+    pub zp: i64,
+}
+
+/// Symmetric per-tensor calibration: scale = max|x| / 127.
+pub fn calibrate_symmetric(x: &[f32]) -> QParams {
+    let m = x.iter().fold(0f32, |a, &v| a.max(v.abs())) as f64;
+    QParams { scale: (m / 127.0).max(1e-12), zp: 0 }
+}
+
+pub fn quantize_i8(x: &[f32], p: QParams) -> Vec<i8> {
+    x.iter()
+        .map(|&v| ((v as f64 / p.scale).round() as i64 + p.zp).clamp(-128, 127) as i8)
+        .collect()
+}
+
+pub fn dequantize_i8(q: &[i8], p: QParams) -> Vec<f32> {
+    q.iter().map(|&v| ((v as i64 - p.zp) as f64 * p.scale) as f32).collect()
+}
+
+/// PTF calibration result for one LayerNorm instance.
+#[derive(Debug, Clone)]
+pub struct PtfCalib {
+    /// Per-channel power-of-two factors.
+    pub alpha: Vec<u8>,
+    /// Layer-wise scale.
+    pub s: f64,
+    /// Layer-wise zero point (u8).
+    pub zp: i64,
+}
+
+/// Fit PTF over rows x channels samples (rows-major), Eq. (6):
+/// alpha_c = round(log2(range_c / base)) clipped to [0, alpha_max]; the
+/// base is the 10th-percentile channel range, s covers the largest
+/// post-shift channel.
+pub fn ptf_calibrate(samples: &[f32], channels: usize, alpha_max: u8) -> PtfCalib {
+    assert!(channels > 0 && samples.len() % channels == 0);
+    let rows = samples.len() / channels;
+    let mut r = vec![0f64; channels];
+    for row in 0..rows {
+        for c in 0..channels {
+            let v = samples[row * channels + c].abs() as f64;
+            if v > r[c] {
+                r[c] = v;
+            }
+        }
+    }
+    for v in r.iter_mut() {
+        *v += 1e-12;
+    }
+    let mut sorted = r.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let base = sorted[(channels as f64 * 0.10) as usize].max(1e-9);
+    let alpha: Vec<u8> = r
+        .iter()
+        .map(|&rc| ((rc / base).log2().round()).clamp(0.0, alpha_max as f64) as u8)
+        .collect();
+    let s = r
+        .iter()
+        .zip(&alpha)
+        .map(|(&rc, &a)| rc / 2f64.powi(a as i32))
+        .fold(0.0, f64::max)
+        / 127.0;
+    PtfCalib { alpha, s, zp: DEFAULT_ZP }
+}
+
+/// PTF-quantize one row with a calibration.
+pub fn ptf_quantize(x: &[f32], cal: &PtfCalib) -> Vec<u8> {
+    x.iter()
+        .zip(&cal.alpha)
+        .map(|(&v, &a)| {
+            let scale = cal.s * 2f64.powi(a as i32);
+            ((v as f64 / scale).round() as i64 + cal.zp).clamp(0, 255) as u8
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn symmetric_roundtrip_error_bounded() {
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..256).map(|_| (rng.normal() * 3.0) as f32).collect();
+        let p = calibrate_symmetric(&x);
+        let back = dequantize_i8(&quantize_i8(&x, p), p);
+        for (a, b) in x.iter().zip(&back) {
+            assert!((a - b).abs() as f64 <= p.scale * 0.5 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn ptf_assigns_bigger_alpha_to_bigger_channels() {
+        let mut rng = Rng::new(2);
+        let channels = 32;
+        let rows = 64;
+        let mut samples = vec![0f32; rows * channels];
+        for row in 0..rows {
+            for c in 0..channels {
+                let scale = if c == 5 { 16.0 } else { 1.0 };
+                samples[row * channels + c] = (rng.normal() * scale) as f32;
+            }
+        }
+        let cal = ptf_calibrate(&samples, channels, 5);
+        let a5 = cal.alpha[5];
+        let amed = {
+            let mut v = cal.alpha.clone();
+            v.sort_unstable();
+            v[channels / 2]
+        };
+        assert!(a5 > amed, "alpha[5]={a5} median={amed}");
+    }
+
+    #[test]
+    fn ptf_quantize_in_code_range() {
+        let mut rng = Rng::new(3);
+        let channels = 16;
+        let samples: Vec<f32> = (0..channels * 8).map(|_| rng.normal() as f32).collect();
+        let cal = ptf_calibrate(&samples, channels, 5);
+        let q = ptf_quantize(&samples[..channels], &cal);
+        assert!(q.iter().all(|&c| (0..=255).contains(&(c as i64))));
+    }
+
+    #[test]
+    fn ptf_reconstruction_decent() {
+        let mut rng = Rng::new(4);
+        let channels = 64;
+        let rows = 32;
+        let mut samples = vec![0f32; rows * channels];
+        for (i, v) in samples.iter_mut().enumerate() {
+            let c = i % channels;
+            let scale = if c % 11 == 0 { 8.0 } else { 1.0 };
+            *v = (rng.normal() * scale) as f32;
+        }
+        let cal = ptf_calibrate(&samples, channels, 5);
+        let row = &samples[..channels];
+        let q = ptf_quantize(row, &cal);
+        let mut err = 0f64;
+        let mut sig = 0f64;
+        for c in 0..channels {
+            let scale = cal.s * 2f64.powi(cal.alpha[c] as i32);
+            let back = (q[c] as i64 - cal.zp) as f64 * scale;
+            err += (back - row[c] as f64).powi(2);
+            sig += (row[c] as f64).powi(2);
+        }
+        assert!((err / sig).sqrt() < 0.05, "rel {}", (err / sig).sqrt());
+    }
+}

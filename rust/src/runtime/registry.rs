@@ -1,0 +1,153 @@
+//! Artifact registry: parses `artifacts/manifest.json` (written by
+//! python/compile/aot.py) into typed metadata.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One artifact's metadata (a lowered HLO graph + its data dependencies).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub id: String,
+    pub hlo: String,
+    /// Parameter names in HLO order (weights then calib); empty for op graphs.
+    pub params: Vec<String>,
+    pub input_dtype: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub batch: usize,
+    pub model: Option<String>,
+    pub variant: Option<String>,
+    pub weights: Option<String>,
+    pub calib: Option<String>,
+}
+
+/// One exported dataset (tensor bundle with `x` and `y`).
+#[derive(Debug, Clone)]
+pub struct DatasetMeta {
+    pub id: String,
+    pub path: String,
+    pub n: usize,
+}
+
+/// The whole manifest.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub entries: BTreeMap<String, ArtifactMeta>,
+    pub datasets: BTreeMap<String, DatasetMeta>,
+}
+
+fn parse_entry(e: &Json) -> Result<ArtifactMeta> {
+    let id = e.get_str("id").context("artifact missing id")?.to_string();
+    let input = e.get("input").context("missing input")?;
+    let output = e.get("output").context("missing output")?;
+    let shape = |j: &Json| -> Result<Vec<usize>> {
+        Ok(j.get_vec_i64("shape").context("missing shape")?.into_iter().map(|v| v as usize).collect())
+    };
+    let params = e
+        .get("params")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(|p| p.as_str().map(str::to_string)).collect())
+        .unwrap_or_default();
+    let input_shape = shape(input)?;
+    Ok(ArtifactMeta {
+        batch: e.get_i64("batch").unwrap_or(input_shape.first().copied().unwrap_or(1) as i64) as usize,
+        id,
+        hlo: e.get_str("hlo").context("missing hlo")?.to_string(),
+        params,
+        input_dtype: input.get_str("dtype").unwrap_or("f32").to_string(),
+        input_shape,
+        output_shape: shape(output)?,
+        model: e.get_str("model").map(str::to_string),
+        variant: e.get_str("variant").map(str::to_string),
+        weights: e.get_str("weights").map(str::to_string),
+        calib: e.get_str("calib").map(str::to_string),
+    })
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let root = json::parse(&text).context("parsing manifest.json")?;
+        let mut out = Manifest::default();
+        for key in ["models", "ops"] {
+            if let Some(arr) = root.get(key).and_then(Json::as_arr) {
+                for e in arr {
+                    let meta = parse_entry(e)?;
+                    out.entries.insert(meta.id.clone(), meta);
+                }
+            }
+        }
+        if let Some(arr) = root.get("datasets").and_then(Json::as_arr) {
+            for e in arr {
+                let id = e.get_str("id").context("dataset id")?.to_string();
+                out.datasets.insert(
+                    id.clone(),
+                    DatasetMeta {
+                        id,
+                        path: e.get_str("path").context("dataset path")?.to_string(),
+                        n: e.get_i64("n").unwrap_or(0) as usize,
+                    },
+                );
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, id: &str) -> Option<&ArtifactMeta> {
+        self.entries.get(id)
+    }
+
+    /// All distinct model names with lowered accuracy artifacts.
+    pub fn models(&self) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .entries
+            .values()
+            .filter_map(|m| m.model.clone())
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join(format!("sole-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"models": [{"id": "m_fp32_b4", "hlo": "m.hlo.txt", "model": "m",
+                 "variant": "fp32", "batch": 4, "params": ["w1", "calib/a/alpha"],
+                 "weights": "weights/m", "calib": "calib/m",
+                 "input": {"dtype": "f32", "shape": [4, 8]},
+                 "output": {"dtype": "f32", "shape": [4, 2]}}],
+                "ops": [{"id": "op_x", "hlo": "op.hlo.txt", "params": [],
+                 "input": {"dtype": "f32", "shape": [2, 2]},
+                 "output": {"dtype": "f32", "shape": [2, 2]}}],
+                "datasets": [{"id": "d", "path": "data/d", "n": 7}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let a = m.get("m_fp32_b4").unwrap();
+        assert_eq!(a.batch, 4);
+        assert_eq!(a.params.len(), 2);
+        assert_eq!(a.input_shape, vec![4, 8]);
+        assert_eq!(m.datasets["d"].n, 7);
+        assert_eq!(m.models(), vec!["m"]);
+        // op entries default batch from the leading input dim
+        assert_eq!(m.get("op_x").unwrap().batch, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

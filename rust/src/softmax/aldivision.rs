@@ -1,0 +1,98 @@
+//! Approximate Log-based Divider — Eq. (13)/(17).
+//!
+//! Divides 2^-k_y by the online reduced sum using: a leading-one detector,
+//! one subtraction, a 1-bit mantissa probe (the bit below the leading one),
+//! a two-way mux between the unbiased constants 1.636/1.136, and a shifter.
+//! Bit-exact twin of `ref.aldivision_int`.
+
+use super::config::{ALDIV_C0, ALDIV_C1, ALDIV_Q, OUT_FRAC, SUM_FRAC};
+use crate::fixedpoint::leading_one;
+
+/// Divider output: the Q(.23) value and the 8-bit output code (scale 2^-8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AldivOut {
+    pub q23: i64,
+    pub u8code: u8,
+}
+
+/// `k_y`: log2-domain numerator exponent (>= 0); `sum_q15`: reduced sum in
+/// Q(.15), > 0 (the global max always contributes 2^0 = 1 << 15).
+#[inline]
+pub fn aldivision(k_y: i64, sum_q15: u64) -> AldivOut {
+    debug_assert!(sum_q15 > 0);
+    debug_assert!(k_y >= 0);
+    let msb = leading_one(sum_q15) as i64;
+    let k_s = msb - SUM_FRAC as i64;
+    let s1 = if msb >= 1 { (sum_q15 >> (msb - 1)) & 1 } else { 0 };
+    let c = if s1 == 1 { ALDIV_C1 } else { ALDIV_C0 };
+    let shift = k_y + k_s + 1;
+    let q23 = if shift >= 64 {
+        0
+    } else if shift >= 0 {
+        c >> shift
+    } else {
+        c << -shift
+    };
+    // round-half-up to the 8-bit output code
+    let code = ((q23 + (1 << (ALDIV_Q - OUT_FRAC - 1))) >> (ALDIV_Q - OUT_FRAC)).min(255);
+    AldivOut { q23, u8code: code as u8 }
+}
+
+/// The Q23 value as f64 (scale 2^-23).
+#[inline]
+pub fn q23_to_f64(q23: i64) -> f64 {
+    q23 as f64 / (1i64 << ALDIV_Q) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn eq17_constants() {
+        // sum = 2^15 exactly (single max element), k_y = 0 -> 1.636/2 = 0.818
+        let o = aldivision(0, 1 << 15);
+        assert!((q23_to_f64(o.q23) - 0.818).abs() < 1e-3);
+        // s' = 1 branch -> 0.568
+        let o = aldivision(0, (1 << 15) | (1 << 14));
+        assert!((q23_to_f64(o.q23) - 0.568).abs() < 1e-3);
+    }
+
+    #[test]
+    fn deep_shift_underflows_to_zero() {
+        let o = aldivision(60, 1 << 20);
+        assert_eq!(o.q23, 0);
+        assert_eq!(o.u8code, 0);
+    }
+
+    #[test]
+    fn code_is_rounded_q23() {
+        check("aldiv-code", 300, 23, |rng| {
+            let k_y = rng.range_i64(0, 31);
+            let s = rng.range_i64(1 << 15, 1 << 26) as u64;
+            let o = aldivision(k_y, s);
+            let expect = ((o.q23 + (1 << 14)) >> 15).min(255);
+            assert_eq!(o.u8code as i64, expect);
+        });
+    }
+
+    #[test]
+    fn bounded_relative_error_and_unbiased() {
+        // |rel err| < 25% pointwise; mean ~ 0 (the paper's -0.636/2 fix)
+        let mut sum_rel = 0.0;
+        let mut n = 0.0;
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..4000 {
+            let k_y = rng.range_i64(0, 8);
+            let s = rng.range_i64(1 << 15, 1 << 20) as u64;
+            let o = aldivision(k_y, s);
+            let exact = 2f64.powi(-k_y as i32) / (s as f64 / (1u64 << 15) as f64);
+            let rel = q23_to_f64(o.q23) / exact - 1.0;
+            assert!(rel.abs() < 0.25, "rel={rel}");
+            sum_rel += rel;
+            n += 1.0;
+        }
+        assert!((sum_rel / n).abs() < 0.03, "bias {}", sum_rel / n);
+    }
+}

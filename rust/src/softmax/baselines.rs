@@ -1,0 +1,87 @@
+//! Prior-work softmax comparators (functional models, twins of ref.py):
+//! Softermax (Stevens et al., DAC'21) and I-BERT i-exp (Kim et al.,
+//! ICML'21).  Used for the accuracy ablations and as the algorithmic side
+//! of the Table III baseline units.
+
+/// Softermax: base-2 softmax with 2^-frac_bits quantized un-normalized
+/// intermediates (the 16-bit buffer of the Softermax unit).
+pub fn softermax(x: &[f32], frac_bits: u32) -> Vec<f64> {
+    let scale = (1u64 << frac_bits) as f64;
+    let ln2 = std::f64::consts::LN_2;
+    let z: Vec<f64> = x.iter().map(|&v| (v as f64 / ln2 * scale).floor() / scale).collect();
+    let zmax = z.iter().cloned().fold(f64::NEG_INFINITY, f64::max).ceil();
+    let q: Vec<f64> = z
+        .iter()
+        .map(|&v| ((v - zmax).exp2() * scale).floor() / scale)
+        .collect();
+    let s: f64 = q.iter().sum();
+    let s = if s > 0.0 { s } else { 1.0 };
+    q.iter().map(|v| v / s).collect()
+}
+
+/// I-BERT i-exp softmax: integer polynomial 0.3585(p + 1.353)^2 + 0.344
+/// after range reduction x~ = -z ln2 + p, all in the integer pipeline at
+/// input scale `scale`.
+pub fn ibert_softmax(x: &[f32], scale: f64) -> Vec<f64> {
+    let q: Vec<f64> = x.iter().map(|&v| (v as f64 / scale).floor()).collect();
+    let qmax = q.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let ln2_q = (std::f64::consts::LN_2 / scale).floor();
+    let qb = (1.353 / scale).floor();
+    let qc = (0.344 / (0.3585 * scale * scale)).floor();
+    let mut qexp = Vec::with_capacity(x.len());
+    for &qi in &q {
+        let d = qi - qmax;
+        let z = (-d / ln2_q).floor();
+        let p = d + z * ln2_q;
+        let qout = (p + qb) * (p + qb) + qc;
+        qexp.push((qout / 2f64.powf(z)).floor());
+    }
+    let s: f64 = qexp.iter().sum();
+    let s = if s > 0.0 { s } else { 1.0 };
+    qexp.iter().map(|v| v / s).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::softmax::e2::softmax_exact;
+    use crate::util::rng::Rng;
+
+    fn gen(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() * 2.0) as f32).collect()
+    }
+
+    #[test]
+    fn softermax_close_to_exact() {
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let x = gen(&mut rng, 64);
+            let a = softermax(&x, 8);
+            let b = softmax_exact(&x);
+            let worst = a.iter().zip(&b).map(|(p, q)| (p - q).abs()).fold(0.0, f64::max);
+            assert!(worst < 0.08, "worst {worst}");
+        }
+    }
+
+    #[test]
+    fn ibert_close_to_exact() {
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            let x = gen(&mut rng, 64);
+            let a = ibert_softmax(&x, 1.0 / 16.0);
+            let b = softmax_exact(&x);
+            let worst = a.iter().zip(&b).map(|(p, q)| (p - q).abs()).fold(0.0, f64::max);
+            assert!(worst < 0.05, "worst {worst}");
+        }
+    }
+
+    #[test]
+    fn both_normalize() {
+        let mut rng = Rng::new(3);
+        let x = gen(&mut rng, 128);
+        let s1: f64 = softermax(&x, 8).iter().sum();
+        let s2: f64 = ibert_softmax(&x, 1.0 / 16.0).iter().sum();
+        assert!((s1 - 1.0).abs() < 1e-9);
+        assert!((s2 - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,284 @@
+//! E2Softmax — Algorithm 1, bit-exact integer model.
+//!
+//! Single pass (stage 1): running max + Log2Exp + online sum with shift
+//! rescaling; stage 2: per-element correction + Approximate Log-based
+//! Division.  `chunk = 1` is Algorithm 1 verbatim; `chunk = V` models the
+//! V-lane E2Softmax Unit (local max per slice via the comparison tree) and
+//! matches the Pallas kernel.
+//!
+//! This is also the coordinator's software hot path (bench_softmax), so the
+//! row kernel is allocation-free given a reusable scratch.
+
+use super::aldivision::{aldivision, q23_to_f64};
+use super::config::{DEFAULT_E, SUM_FRAC};
+use super::log2exp::log2exp;
+
+/// Configuration of the E2Softmax datapath.
+#[derive(Debug, Clone, Copy)]
+pub struct E2SoftmaxConfig {
+    /// Power-of-two input scale exponent: input real value = code * 2^-e.
+    pub e: u32,
+    /// Lane count of the simulated unit (1 = Algorithm 1 verbatim,
+    /// 32 = the paper's vector size).
+    pub chunk: usize,
+}
+
+impl Default for E2SoftmaxConfig {
+    fn default() -> Self {
+        E2SoftmaxConfig { e: DEFAULT_E, chunk: 32 }
+    }
+}
+
+/// Full per-row output with intermediates (golden tests pin all of them).
+#[derive(Debug, Clone)]
+pub struct E2SoftmaxOut {
+    /// 4-bit Log2Exp codes per element.
+    pub k: Vec<i64>,
+    /// Running max (the slice's reference max) per element.
+    pub running_max: Vec<i64>,
+    /// Final reduced sum, Q(.15).
+    pub sum_q15: u64,
+    /// Q(.23) output values.
+    pub out_q23: Vec<i64>,
+    /// 8-bit output codes (scale 2^-8).
+    pub out_u8: Vec<u8>,
+}
+
+impl E2SoftmaxOut {
+    pub fn out_f64(&self) -> Vec<f64> {
+        self.out_q23.iter().map(|&v| q23_to_f64(v)).collect()
+    }
+}
+
+/// Reusable scratch for the allocation-free row kernel.
+#[derive(Debug, Default)]
+pub struct E2Scratch {
+    k: Vec<i64>,
+    m: Vec<i64>,
+}
+
+/// The paper's system: one softmax row over integer codes.
+pub struct E2Softmax {
+    pub cfg: E2SoftmaxConfig,
+}
+
+impl E2Softmax {
+    pub fn new(cfg: E2SoftmaxConfig) -> Self {
+        E2Softmax { cfg }
+    }
+
+    /// Full-introspection version (tests, golden vectors).
+    pub fn forward_introspect(&self, q: &[i64]) -> E2SoftmaxOut {
+        assert!(!q.is_empty());
+        let chunk = self.cfg.chunk.max(1);
+        let e = self.cfg.e;
+        let n = q.len();
+        let mut ks = Vec::with_capacity(n);
+        let mut ms = Vec::with_capacity(n);
+        let mut sum: u64 = 0;
+        let mut m_prev: Option<i64> = None;
+        for sl in q.chunks(chunk) {
+            let local = *sl.iter().max().unwrap();
+            let m_new = match m_prev {
+                Some(m) => m.max(local),
+                None => local,
+            };
+            if let Some(m) = m_prev {
+                if m != m_new {
+                    let sub = log2exp(m - m_new, e);
+                    sum >>= sub as u32;
+                }
+            }
+            for &qi in sl {
+                let k = log2exp(qi - m_new, e);
+                sum += 1u64 << (SUM_FRAC as i64 - k);
+                ks.push(k);
+                ms.push(m_new);
+            }
+            m_prev = Some(m_new);
+        }
+        let m_final = m_prev.unwrap();
+        let mut out_q23 = Vec::with_capacity(n);
+        let mut out_u8 = Vec::with_capacity(n);
+        for i in 0..n {
+            let sub = log2exp(ms[i] - m_final, e);
+            let o = aldivision(ks[i] + sub, sum);
+            out_q23.push(o.q23);
+            out_u8.push(o.u8code);
+        }
+        E2SoftmaxOut { k: ks, running_max: ms, sum_q15: sum, out_q23, out_u8 }
+    }
+
+    /// Hot path: writes Q23-grid f32 probabilities into `out`, reusing
+    /// `scratch`.  No allocation after warmup.
+    pub fn forward_row_f32(&self, q: &[i64], out: &mut [f32], scratch: &mut E2Scratch) {
+        debug_assert_eq!(q.len(), out.len());
+        let chunk = self.cfg.chunk.max(1);
+        let e = self.cfg.e;
+        let n = q.len();
+        scratch.k.clear();
+        scratch.k.reserve(n);
+        scratch.m.clear();
+        scratch.m.reserve(n);
+        let mut sum: u64 = 0;
+        let mut m_prev = i64::MIN;
+        for sl in q.chunks(chunk) {
+            let mut local = sl[0];
+            for &v in &sl[1..] {
+                local = local.max(v);
+            }
+            let m_new = if m_prev == i64::MIN { local } else { m_prev.max(local) };
+            if m_prev != i64::MIN && m_prev != m_new {
+                sum >>= log2exp(m_prev - m_new, e) as u32;
+            }
+            for &qi in sl {
+                let k = log2exp(qi - m_new, e);
+                sum += 1u64 << (SUM_FRAC as i64 - k);
+                scratch.k.push(k);
+                scratch.m.push(m_new);
+            }
+            m_prev = m_new;
+        }
+        let m_final = m_prev;
+        // ALDivision's LOD / mantissa-probe / constant-select depend only on
+        // the reduced sum — per-row constants, hoisted out of the element
+        // loop (the hardware does the same: one LOD per row, Fig. 4).
+        let msb = crate::fixedpoint::leading_one(sum) as i64;
+        let k_s = msb - super::config::SUM_FRAC as i64;
+        let s1 = if msb >= 1 { (sum >> (msb - 1)) & 1 } else { 0 };
+        let c = if s1 == 1 { super::config::ALDIV_C1 } else { super::config::ALDIV_C0 };
+        let inv = 1.0f32 / (1i64 << super::config::ALDIV_Q) as f32;
+        let base_shift = k_s + 1;
+        for i in 0..n {
+            let sub = log2exp(scratch.m[i] - m_final, e);
+            let shift = scratch.k[i] + sub + base_shift;
+            let q23 = if shift >= 64 { 0 } else if shift >= 0 { c >> shift } else { c << -shift };
+            out[i] = q23 as f32 * inv;
+        }
+    }
+
+    /// Quantize real logits to codes and run; convenience for the
+    /// coordinator and the accuracy cross-checks.
+    pub fn forward_logits(&self, x: &[f32]) -> Vec<f64> {
+        let scale = (1u64 << self.cfg.e) as f64;
+        let xmax = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let q: Vec<i64> = x
+            .iter()
+            .map(|&v| (((v as f64 - xmax) * scale).round() as i64).clamp(-255, 0))
+            .collect();
+        self.forward_introspect(&q).out_f64()
+    }
+}
+
+/// Exact f64 softmax (baseline for error measurements).
+pub fn softmax_exact(x: &[f32]) -> Vec<f64> {
+    let m = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let e: Vec<f64> = x.iter().map(|&v| ((v as f64) - m).exp()).collect();
+    let s: f64 = e.iter().sum();
+    e.iter().map(|v| v / s).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, size};
+    use crate::util::rng::Rng;
+
+    fn codes(rng: &mut Rng, n: usize) -> Vec<i64> {
+        (0..n).map(|_| -rng.range_i64(0, 256)).collect()
+    }
+
+    #[test]
+    fn single_element_row() {
+        let sm = E2Softmax::new(E2SoftmaxConfig::default());
+        let o = sm.forward_introspect(&[0]);
+        assert_eq!(o.sum_q15, 1 << 15);
+        assert!((o.out_f64()[0] - 0.818).abs() < 1e-3);
+    }
+
+    #[test]
+    fn outputs_in_range_and_sum_reasonable() {
+        check("e2-range", 100, 31, |rng| {
+            let n = size(rng, 200);
+            let q = codes(rng, n);
+            let chunk = if rng.f64() < 0.5 { 1 } else { 32 };
+            let sm = E2Softmax::new(E2SoftmaxConfig { e: 4, chunk });
+            let o = sm.forward_introspect(&q);
+            assert!(o.sum_q15 >= 1 << 15);
+            for (&k, &v) in o.k.iter().zip(&o.out_q23) {
+                assert!((0..=15).contains(&k));
+                assert!(v >= 0);
+                assert!(q23_to_f64(v) <= 0.818 + 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn monotone_in_input() {
+        check("e2-monotone", 60, 37, |rng| {
+            let n = size(rng, 100).max(2);
+            let q = codes(rng, n);
+            let sm = E2Softmax::new(E2SoftmaxConfig { e: 4, chunk: 1 });
+            let o = sm.forward_introspect(&q);
+            // the online scheme rounds k_i and the stage-2 correction
+            // separately (and both saturate at 15), so one-step inversions
+            // are possible and the saturated tail (p < ~1e-3) can reorder
+            // freely; anything beyond that would be a real bug.
+            let tail = 1 << 13; // ~1e-3 in Q23
+            for i in 0..n {
+                for j in 0..n {
+                    if q[i] > q[j] && o.out_q23[j] >= tail {
+                        assert!(
+                            2 * o.out_q23[i] >= o.out_q23[j],
+                            "i={i} j={j} {} {}",
+                            o.out_q23[i],
+                            o.out_q23[j]
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn close_to_exact_softmax() {
+        let mut rng = Rng::new(5);
+        let mut worst: f64 = 0.0;
+        for _ in 0..50 {
+            let x: Vec<f32> = (0..64).map(|_| (rng.normal() * 2.0) as f32).collect();
+            let exact = softmax_exact(&x);
+            let sm = E2Softmax::new(E2SoftmaxConfig::default());
+            let approx = sm.forward_logits(&x);
+            for (a, b) in approx.iter().zip(&exact) {
+                worst = worst.max((a - b).abs());
+            }
+        }
+        assert!(worst < 0.16, "worst {worst}");
+    }
+
+    #[test]
+    fn hot_path_matches_introspect() {
+        check("e2-hotpath", 50, 41, |rng| {
+            let n = size(rng, 300);
+            let q = codes(rng, n);
+            let sm = E2Softmax::new(E2SoftmaxConfig::default());
+            let gold = sm.forward_introspect(&q);
+            let mut out = vec![0f32; n];
+            let mut scratch = E2Scratch::default();
+            sm.forward_row_f32(&q, &mut out, &mut scratch);
+            for (i, &v) in out.iter().enumerate() {
+                assert_eq!(v as f64, q23_to_f64(gold.out_q23[i]));
+            }
+        });
+    }
+
+    #[test]
+    fn descending_rows_chunk_invariant() {
+        let mut q: Vec<i64> = (0..96).map(|i| -(i as i64 * 2)).collect();
+        q.sort_unstable_by(|a, b| b.cmp(a));
+        let a = E2Softmax::new(E2SoftmaxConfig { e: 4, chunk: 1 }).forward_introspect(&q);
+        let b = E2Softmax::new(E2SoftmaxConfig { e: 4, chunk: 32 }).forward_introspect(&q);
+        assert_eq!(a.out_q23, b.out_q23);
+        assert_eq!(a.sum_q15, b.sum_q15);
+    }
+}

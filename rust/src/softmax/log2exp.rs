@@ -1,0 +1,89 @@
+//! Log2Exp Unit — Eq. (7)/(8): k = clip(round(-x/ln2), 0, 15) implemented
+//! as the shift-add datapath `x + x>>1 - x>>4` (1/ln2 ~ 1.4375).
+//!
+//! Bit-exact twin of `ref.log2exp_int`; the hardware unit is two shifters,
+//! two adders and a rounder — no LUT, no multiplier.
+
+use super::config::{K_MAX, LOG2EXP_F};
+
+/// Log2Exp on an integer code difference `d <= 0` whose real value is
+/// `d * 2^-e`.  Returns k in [0, 15] with exp(d * 2^-e) ~ 2^-k.
+#[inline]
+pub fn log2exp(d: i64, e: u32) -> i64 {
+    debug_assert!(d <= 0, "Log2Exp domain is (-inf, 0], got {d}");
+    let f = LOG2EXP_F;
+    let v = d << f;
+    // v * 1.4375 with arithmetic (floor) shifts, exactly as the RTL would
+    let t = v + (v >> 1) - (v >> 4);
+    // round-half-up of (-t) / 2^(f+e)
+    let k = (-t + (1 << (f + e - 1))) >> (f + e);
+    k.min(K_MAX)
+}
+
+/// Vectorized helper used by the coordinator's software-fallback path.
+pub fn log2exp_slice(out: &mut [i64], d: &[i64], e: u32) {
+    debug_assert_eq!(out.len(), d.len());
+    for (o, &di) in out.iter_mut().zip(d) {
+        *o = log2exp(di, e);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn zero_maps_to_zero() {
+        assert_eq!(log2exp(0, 4), 0);
+    }
+
+    #[test]
+    fn saturates_at_15() {
+        assert_eq!(log2exp(-255, 4), 15);
+        assert_eq!(log2exp(-1000, 4), 15);
+    }
+
+    #[test]
+    fn known_values_e4() {
+        // d = -16 -> x = -1.0 -> -x/ln2 ~ 1.4427, shift-add gives 1.4375 -> k=1
+        assert_eq!(log2exp(-16, 4), 1);
+        // d = -8 -> x = -0.5 -> ~0.72 -> rounds to 1
+        assert_eq!(log2exp(-8, 4), 1);
+        // d = -1 -> x = -1/16 -> 0.0899 -> rounds to 0
+        assert_eq!(log2exp(-1, 4), 0);
+    }
+
+    #[test]
+    fn monotone_nonincreasing_input_nondecreasing_k() {
+        let mut last = 0;
+        for d in 0..=255 {
+            let k = log2exp(-d, 4);
+            assert!(k >= last, "d={d}");
+            last = k;
+        }
+    }
+
+    #[test]
+    fn within_one_of_ideal() {
+        check("log2exp-vs-ideal", 300, 17, |rng| {
+            let d = -rng.range_i64(0, 256);
+            let e = rng.range_i64(3, 7) as u32;
+            let k = log2exp(d, e);
+            let ideal = (-(d as f64) * 2f64.powi(-(e as i32)) / std::f64::consts::LN_2)
+                .round()
+                .clamp(0.0, 15.0) as i64;
+            assert!((k - ideal).abs() <= 1, "d={d} e={e} k={k} ideal={ideal}");
+        });
+    }
+
+    #[test]
+    fn slice_matches_scalar() {
+        let d: Vec<i64> = (0..64).map(|i| -(i * 3) % 256).collect();
+        let mut out = vec![0i64; 64];
+        log2exp_slice(&mut out, &d, 4);
+        for (i, &di) in d.iter().enumerate() {
+            assert_eq!(out[i], log2exp(di, 4));
+        }
+    }
+}

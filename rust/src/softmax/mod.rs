@@ -1,0 +1,46 @@
+//! Softmax algorithms: the paper's E2Softmax (bit-exact integer model of
+//! Algorithm 1) plus the exact baseline and the prior-work comparators
+//! (Softermax, I-BERT) used in Table III and the accuracy ablations.
+
+pub mod aldivision;
+pub mod baselines;
+pub mod e2;
+pub mod log2exp;
+
+pub use aldivision::{aldivision, AldivOut};
+pub use e2::{E2Softmax, E2SoftmaxConfig, E2SoftmaxOut};
+pub use log2exp::log2exp;
+
+/// Contract constants shared with python/compile/kernels/ref.py — see
+/// DESIGN.md §6.  Changing any of these invalidates the golden vectors.
+pub mod config {
+    /// Internal fraction bits of the Log2Exp shift-add datapath.
+    pub const LOG2EXP_F: u32 = 8;
+    /// 4-bit log2-quantized exponent output: k in [0, K_MAX].
+    pub const K_MAX: i64 = 15;
+    /// Q(.15) online sum accumulator.
+    pub const SUM_FRAC: u32 = 15;
+    /// Q(.23) ALDivision constants (chosen to stay f32-exact for the
+    /// Pallas twin).
+    pub const ALDIV_Q: u32 = 23;
+    /// round(1.636 * 2^23) — the unbiased constant, s' = 0 branch.
+    pub const ALDIV_C0: i64 = 13723763;
+    /// round(1.136 * 2^23) — s' = 1 branch.
+    pub const ALDIV_C1: i64 = 9529459;
+    /// 8-bit softmax output code, scale 2^-8.
+    pub const OUT_FRAC: u32 = 8;
+    /// Default power-of-two input scale exponent (input scale 2^-e).
+    pub const DEFAULT_E: u32 = 4;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::config::*;
+
+    #[test]
+    fn constants_match_ref_py() {
+        assert_eq!(ALDIV_C0, (1.636f64 * (1u64 << ALDIV_Q) as f64).round() as i64);
+        assert_eq!(ALDIV_C1, (1.136f64 * (1u64 << ALDIV_Q) as f64).round() as i64);
+        assert_eq!(K_MAX, (1 << 4) - 1);
+    }
+}

@@ -1,0 +1,217 @@
+//! Tensor bundle reader/writer — the python<->rust interchange format
+//! (see python/compile/tensor_io.py): `<stem>.json` manifest + `<stem>.bin`
+//! raw little-endian data.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Element type of a stored tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U8,
+}
+
+impl DType {
+    pub fn from_str(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u8" => DType::U8,
+            other => bail!("unsupported dtype {other}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::U8 => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::U8 => "u8",
+        }
+    }
+}
+
+/// An in-memory tensor (data always held as the original raw bytes plus a
+/// typed view accessor — avoids copies for the PJRT literal path).
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn from_f32(name: &str, shape: Vec<usize>, vals: &[f32]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>().max(1), vals.len());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { name: name.to_string(), dtype: DType::F32, shape, data }
+    }
+
+    pub fn from_i32(name: &str, shape: Vec<usize>, vals: &[i32]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>().max(1), vals.len());
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor { name: name.to_string(), dtype: DType::I32, shape, data }
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            bail!("{}: not f32", self.name);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        if self.dtype != DType::I32 {
+            bail!("{}: not i32", self.name);
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// A named collection of tensors backed by one manifest + blob pair.
+#[derive(Debug, Default)]
+pub struct Bundle {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Bundle {
+    /// Load `<stem>.json` + `<stem>.bin`.
+    pub fn load(stem: &Path) -> Result<Bundle> {
+        let jpath = stem.with_extension("json");
+        let bpath = stem.with_extension("bin");
+        let text = fs::read_to_string(&jpath)
+            .with_context(|| format!("reading {}", jpath.display()))?;
+        let manifest = json::parse(&text).with_context(|| format!("parsing {}", jpath.display()))?;
+        let blob = fs::read(&bpath).with_context(|| format!("reading {}", bpath.display()))?;
+        let mut tensors = BTreeMap::new();
+        let entries = manifest
+            .get("tensors")
+            .and_then(Json::as_arr)
+            .context("manifest missing 'tensors'")?;
+        for e in entries {
+            let name = e.get_str("name").context("tensor missing name")?.to_string();
+            let dtype = DType::from_str(e.get_str("dtype").context("missing dtype")?)?;
+            let shape: Vec<usize> = e
+                .get_vec_i64("shape")
+                .context("missing shape")?
+                .into_iter()
+                .map(|v| v as usize)
+                .collect();
+            let offset = e.get_i64("offset").context("missing offset")? as usize;
+            let nbytes = e.get_i64("nbytes").context("missing nbytes")? as usize;
+            if offset + nbytes > blob.len() {
+                bail!("{name}: extent {}..{} beyond blob ({})", offset, offset + nbytes, blob.len());
+            }
+            let expect = shape.iter().product::<usize>().max(1) * dtype.size();
+            if expect != nbytes {
+                bail!("{name}: shape {shape:?} x {} != {nbytes} bytes", dtype.size());
+            }
+            tensors.insert(
+                name.clone(),
+                Tensor { name, dtype, shape, data: blob[offset..offset + nbytes].to_vec() },
+            );
+        }
+        Ok(Bundle { tensors })
+    }
+
+    /// Write `<stem>.json` + `<stem>.bin` (used by tests / the examples).
+    pub fn save(&self, stem: &Path) -> Result<()> {
+        if let Some(parent) = stem.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut blob = Vec::new();
+        let mut entries = Vec::new();
+        for t in self.tensors.values() {
+            entries.push(json::obj(vec![
+                ("name", Json::Str(t.name.clone())),
+                ("dtype", Json::Str(t.dtype.name().to_string())),
+                ("shape", Json::Arr(t.shape.iter().map(|&d| Json::Int(d as i64)).collect())),
+                ("offset", Json::Int(blob.len() as i64)),
+                ("nbytes", Json::Int(t.data.len() as i64)),
+            ]));
+            blob.extend_from_slice(&t.data);
+        }
+        let manifest = json::obj(vec![
+            ("version", Json::Int(1)),
+            ("tensors", Json::Arr(entries)),
+            ("total_bytes", Json::Int(blob.len() as i64)),
+        ]);
+        fs::write(stem.with_extension("json"), manifest.to_string_compact())?;
+        fs::write(stem.with_extension("bin"), &blob)?;
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("bundle missing tensor '{name}'"))
+    }
+
+    pub fn insert(&mut self, t: Tensor) {
+        self.tensors.insert(t.name.clone(), t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("sole-tensor-{}", std::process::id()));
+        let stem = dir.join("bundle");
+        let mut b = Bundle::default();
+        b.insert(Tensor::from_f32("a", vec![2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]));
+        b.insert(Tensor::from_i32("b/c", vec![4], &[-1, 0, 1, 7]));
+        b.save(&stem).unwrap();
+        let back = Bundle::load(&stem).unwrap();
+        assert_eq!(back.get("a").unwrap().as_f32().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(back.get("a").unwrap().shape, vec![2, 3]);
+        assert_eq!(back.get("b/c").unwrap().as_i32().unwrap(), vec![-1, 0, 1, 7]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let b = Bundle::default();
+        assert!(b.get("nope").is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let t = Tensor::from_f32("x", vec![1], &[1.0]);
+        assert!(t.as_i32().is_err());
+    }
+}

@@ -1,0 +1,84 @@
+//! Wall-clock micro-benchmark harness (offline substrate — `criterion` is
+//! not vendored).  Warmup + timed iterations, reports mean / p50 / p99 /
+//! throughput; used by every target in `rust/benches/`.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean.as_secs_f64() > 0.0 { 1.0 / self.mean.as_secs_f64() } else { 0.0 }
+    }
+}
+
+/// Benchmark `f`, auto-scaling iteration count to ~`target` total runtime.
+pub fn bench<F: FnMut()>(name: &str, target: Duration, mut f: F) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let iters = ((target.as_secs_f64() / once.as_secs_f64()).ceil() as usize).clamp(5, 100_000);
+    for _ in 0..(iters / 10).clamp(1, 50) {
+        f(); // warmup
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: total / iters as u32,
+        p50: samples[iters / 2],
+        p99: samples[(iters * 99 / 100).min(iters - 1)],
+        min: samples[0],
+    }
+}
+
+/// Print one result row (keeps all bench binaries uniform).
+pub fn report(r: &BenchResult) {
+    println!(
+        "{:<48} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} p99  ({} iters, {:>12.1}/s)",
+        r.name, r.mean, r.p50, r.p99, r.iters, r.per_sec()
+    );
+}
+
+/// Run + report in one call; returns the result for further table building.
+pub fn run<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    let r = bench(name, Duration::from_millis(400), f);
+    report(&r);
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleepless_work() {
+        let mut acc = 0u64;
+        let r = bench("spin", Duration::from_millis(20), || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.p50 <= r.p99);
+        assert!(r.min <= r.p50);
+        std::hint::black_box(acc);
+    }
+}

@@ -1,0 +1,11 @@
+//! In-tree substrates (this build environment is offline: only the `xla`
+//! crate's dependency closure is vendored, so JSON, CLI parsing, RNG,
+//! stats, benchmarking and property testing are implemented here —
+//! DESIGN.md §5 item 13).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

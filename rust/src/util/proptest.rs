@@ -1,0 +1,65 @@
+//! Micro property-testing driver (offline substrate — `proptest` is not
+//! vendored).  Runs a closure over N seeded RNGs; on failure reports the
+//! seed so the case is replayable.  No shrinking — cases are generated
+//! small-biased instead (generators draw sizes log-uniformly).
+
+use super::rng::Rng;
+
+/// Run `case(rng)` for `n` deterministic seeds (derived from `base_seed`).
+/// Panics with the failing seed on the first assertion failure.
+pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, n: usize, base_seed: u64, case: F) {
+    for i in 0..n {
+        let seed = base_seed.wrapping_mul(0x100000001b3).wrapping_add(i as u64);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            case(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property '{name}' failed at case {i} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Log-uniform size in [1, max] — biases toward small cases like shrinking
+/// would find.
+pub fn size(rng: &mut Rng, max: usize) -> usize {
+    let lg = (max as f64).ln();
+    ((rng.f64() * lg).exp() as usize).clamp(1, max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("add-commutes", 50, 1, |rng| {
+            let a = rng.range_i64(-1000, 1000);
+            let b = rng.range_i64(-1000, 1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failures() {
+        check("always-fails", 10, 2, |rng| {
+            let x = rng.range_i64(0, 10);
+            assert!(x < 0, "x was {x}");
+        });
+    }
+
+    #[test]
+    fn size_in_bounds() {
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            let s = size(&mut rng, 64);
+            assert!((1..=64).contains(&s));
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! Golden-vector cross-language contract: replays artifacts/golden/*.json
+//! (emitted by python/compile/gen_golden.py from ref.py) against the Rust
+//! bit-exact models and asserts exact equality at every pinned stage.
+
+use std::path::PathBuf;
+
+use sole::layernorm::{dynamic_compress, rsqrt_hw, AiLayerNorm};
+use sole::softmax::{aldivision, log2exp, E2Softmax, E2SoftmaxConfig};
+use sole::util::json::{self, Json};
+
+fn golden(name: &str) -> Option<Json> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden").join(name);
+    let Ok(text) = std::fs::read_to_string(&p) else {
+        eprintln!("skipping: {} missing (run `make artifacts`)", p.display());
+        return None;
+    };
+    Some(json::parse(&text).unwrap())
+}
+
+#[test]
+fn log2exp_golden() {
+    let Some(doc) = golden("log2exp.json") else { return };
+    let cases = doc.get("cases").unwrap().as_arr().unwrap();
+    assert!(cases.len() >= 500);
+    for c in cases {
+        let d = c.get_i64("d").unwrap();
+        let e = c.get_i64("e").unwrap() as u32;
+        let k = c.get_i64("k").unwrap();
+        assert_eq!(log2exp(d, e), k, "d={d} e={e}");
+    }
+}
+
+#[test]
+fn aldivision_golden() {
+    let Some(doc) = golden("aldivision.json") else { return };
+    for c in doc.get("cases").unwrap().as_arr().unwrap() {
+        let k_y = c.get_i64("k_y").unwrap();
+        let s = c.get_i64("sum_q15").unwrap() as u64;
+        let o = aldivision(k_y, s);
+        assert_eq!(o.q23, c.get_i64("out_q23").unwrap(), "k_y={k_y} s={s}");
+        assert_eq!(o.u8code as i64, c.get_i64("out_u8").unwrap());
+    }
+}
+
+#[test]
+fn e2softmax_golden() {
+    let Some(doc) = golden("e2softmax.json") else { return };
+    for c in doc.get("cases").unwrap().as_arr().unwrap() {
+        let q = c.get_vec_i64("q").unwrap();
+        let e = c.get_i64("e").unwrap() as u32;
+        let chunk = c.get_i64("chunk").unwrap() as usize;
+        let sm = E2Softmax::new(E2SoftmaxConfig { e, chunk });
+        let out = sm.forward_introspect(&q);
+        assert_eq!(out.k, c.get_vec_i64("k").unwrap(), "chunk={chunk} q={q:?}");
+        assert_eq!(out.sum_q15 as i64, c.get_i64("sum_q15").unwrap());
+        assert_eq!(out.out_q23, c.get_vec_i64("out_q23").unwrap());
+        let u8s: Vec<i64> = out.out_u8.iter().map(|&v| v as i64).collect();
+        assert_eq!(u8s, c.get_vec_i64("out_u8").unwrap());
+    }
+}
+
+#[test]
+fn compress_golden() {
+    let Some(doc) = golden("compress.json") else { return };
+    let cases = doc.get("cases").unwrap().as_arr().unwrap();
+    assert_eq!(cases.len(), 256);
+    for c in cases {
+        let x = c.get_i64("x").unwrap() as u8;
+        let (y, s) = dynamic_compress(x);
+        assert_eq!(y as i64, c.get_i64("y").unwrap(), "x={x}");
+        assert_eq!(s as i64, c.get_i64("s").unwrap(), "x={x}");
+    }
+}
+
+#[test]
+fn rsqrt_golden() {
+    let Some(doc) = golden("rsqrt.json") else { return };
+    // the LUT itself
+    let lut = doc.get_vec_i64("lut").unwrap();
+    let ours = sole::layernorm::rsqrt::rsqrt_lut();
+    assert_eq!(lut.len(), 64);
+    for (i, (&a, &b)) in lut.iter().zip(ours.iter()).enumerate() {
+        assert_eq!(a, b, "lut[{i}]");
+    }
+    for c in doc.get("cases").unwrap().as_arr().unwrap() {
+        let num = c.get_i64("num").unwrap() as u128;
+        let den = c.get_i64("den").unwrap() as u128;
+        let want = c.get_f64("out").unwrap();
+        let got = rsqrt_hw(num, den);
+        assert!((got - want).abs() <= want.abs() * 1e-12, "num={num} den={den}");
+    }
+}
+
+#[test]
+fn ailayernorm_golden() {
+    let Some(doc) = golden("ailayernorm.json") else { return };
+    let ln = AiLayerNorm::default();
+    for c in doc.get("cases").unwrap().as_arr().unwrap() {
+        let codes: Vec<u8> =
+            c.get_vec_i64("codes").unwrap().into_iter().map(|v| v as u8).collect();
+        let alpha: Vec<u8> =
+            c.get_vec_i64("alpha").unwrap().into_iter().map(|v| v as u8).collect();
+        let gamma: Vec<f32> =
+            c.get_vec_f64("gamma").unwrap().into_iter().map(|v| v as f32).collect();
+        let beta: Vec<f32> =
+            c.get_vec_f64("beta").unwrap().into_iter().map(|v| v as f32).collect();
+        let out = ln.forward_introspect(&codes, &alpha, &gamma, &beta);
+        assert_eq!(out.ex, c.get_i64("ex").unwrap());
+        assert_eq!(out.ex2, c.get_i64("ex2").unwrap());
+        let want_std = c.get_f64("std_inv").unwrap();
+        assert!((out.std_inv - want_std).abs() <= want_std.abs() * 1e-12 + 1e-15);
+        let want_y = c.get_vec_f64("y").unwrap();
+        for (i, (got, want)) in out.y.iter().zip(&want_y).enumerate() {
+            // gamma/beta crossed f32 casts on both sides; the remaining
+            // difference is float-print noise in the JSON
+            assert!((got - want).abs() < 1e-6, "y[{i}] {got} vs {want}");
+        }
+    }
+}

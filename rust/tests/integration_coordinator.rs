@@ -1,0 +1,88 @@
+//! Integration: the serving coordinator over the real PJRT backend
+//! (bucketed deit_t fp32_sole artifacts).  Skips without artifacts.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use sole::coordinator::{Backend, BatchPolicy, Coordinator, PjrtBackend};
+use sole::runtime::Engine;
+use sole::tensor::Bundle;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn serves_images_through_bucketed_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::open(&dir).unwrap();
+    let backend = Arc::new(PjrtBackend::from_family(&engine, "deit_t", "fp32_sole").unwrap());
+    // serving buckets 1/4/8/16 plus the b64 eval artifact
+    assert!(backend.buckets().contains(&1));
+    assert!(backend.buckets().contains(&16));
+    let item = backend.item_input_len();
+    assert_eq!(item, 32 * 32);
+
+    let co = Coordinator::start(
+        backend,
+        BatchPolicy { max_wait: Duration::from_millis(10), max_batch: 16 },
+        1,
+    );
+    let cl = co.client();
+
+    let data = Bundle::load(&dir.join("data/cv_eval")).unwrap();
+    let xs = data.get("x").unwrap().as_f32().unwrap();
+    let y = data.get("y").unwrap().as_i32().unwrap();
+
+    let n = 24;
+    let rxs: Vec<_> = (0..n)
+        .map(|i| cl.submit(xs[i * item..(i + 1) * item].to_vec()).unwrap())
+        .collect();
+    let mut correct = 0;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv().unwrap();
+        assert_eq!(r.output.len(), 10);
+        let pred = r
+            .output
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred as i32 == y[i] {
+            correct += 1;
+        }
+    }
+    // trained surrogate: well above chance through the full serving path
+    assert!(correct as f64 / n as f64 > 0.6, "correct {correct}/{n}");
+    assert_eq!(co.metrics.completed() as usize, n);
+    assert_eq!(co.metrics.errors(), 0);
+    // batching happened: mean batch should exceed 1 given a burst of 24
+    assert!(co.metrics.mean_batch() >= 1.0);
+    co.shutdown();
+}
+
+#[test]
+fn single_request_uses_small_bucket() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::open(&dir).unwrap();
+    let backend = Arc::new(PjrtBackend::from_family(&engine, "deit_t", "fp32_sole").unwrap());
+    let item = backend.item_input_len();
+    let co = Coordinator::start(
+        backend,
+        BatchPolicy { max_wait: Duration::from_millis(1), max_batch: 16 },
+        1,
+    );
+    let cl = co.client();
+    let r = cl.infer(vec![0.25; item]).unwrap();
+    assert_eq!(r.batch_size, 1);
+    assert_eq!(r.output.len(), 10);
+    co.shutdown();
+}

@@ -1,0 +1,103 @@
+//! Integration: the whole build pipeline hangs together — manifest,
+//! datasets, weight/calib bundles, python-side accuracy cross-check.
+
+use std::path::PathBuf;
+
+use sole::runtime::Engine;
+use sole::tensor::Bundle;
+use sole::util::json;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_covers_all_tables() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::open(&dir).unwrap();
+    let models = engine.manifest.models();
+    // Table I surrogates
+    for m in ["deit_t", "deit_s", "swin_t"] {
+        assert!(models.iter().any(|x| x == m), "missing {m}");
+        for v in ["fp32", "fp32_sole", "int8", "int8_sole"] {
+            assert!(!engine.find(m, v).is_empty(), "{m}/{v}");
+        }
+    }
+    // Table II surrogates: all eight GLUE/SQuAD analogues
+    for t in ["cola", "mrpc", "sst2", "qqp", "mnli", "qnli", "rte", "squad"] {
+        assert!(models.iter().any(|x| x == &format!("bert_{t}")), "missing bert_{t}");
+    }
+    // serving buckets
+    let sole_ids = engine.find("deit_t", "fp32_sole");
+    for b in [1usize, 4, 8, 16] {
+        assert!(sole_ids.iter().any(|i| i.ends_with(&format!("_b{b}"))), "bucket {b}");
+    }
+    // op graphs
+    for op in ["op_e2softmax", "op_softmax_exact", "op_ailayernorm", "op_layernorm_exact"] {
+        assert!(engine.manifest.get(op).is_some(), "{op}");
+    }
+}
+
+#[test]
+fn datasets_match_manifest_metadata() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::open(&dir).unwrap();
+    for ds in engine.manifest.datasets.values() {
+        let b = Bundle::load(&dir.join(&ds.path)).unwrap();
+        let x = b.get("x").unwrap();
+        let y = b.get("y").unwrap();
+        assert_eq!(x.shape[0], ds.n, "{}", ds.id);
+        assert_eq!(y.shape[0], ds.n, "{}", ds.id);
+        // labels are sane class ids
+        let labels = y.as_i32().unwrap();
+        assert!(labels.iter().all(|&v| (0..10).contains(&v)));
+    }
+}
+
+#[test]
+fn weight_bundles_complete_for_every_artifact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::open(&dir).unwrap();
+    for meta in engine.manifest.entries.values() {
+        if meta.params.is_empty() {
+            continue;
+        }
+        let weights = Bundle::load(&dir.join(meta.weights.as_ref().unwrap())).unwrap();
+        let calib = meta.calib.as_ref().map(|c| Bundle::load(&dir.join(c)).unwrap());
+        for p in &meta.params {
+            if p.starts_with("calib/") {
+                assert!(calib.as_ref().unwrap().get(p).is_ok(), "{}: {p}", meta.id);
+            } else {
+                assert!(weights.get(p).is_ok(), "{}: {p}", meta.id);
+            }
+        }
+    }
+}
+
+#[test]
+fn rust_eval_matches_python_accuracy_crosscheck() {
+    // accuracy_py.json was computed with the jnp twins (use_pallas=False);
+    // the artifacts contain the pallas kernels.  The two paths are the
+    // same algorithm in different formulations: accuracies must agree
+    // within a few percentage points on the same eval set.
+    let Some(dir) = artifacts_dir() else { return };
+    let Ok(text) = std::fs::read_to_string(dir.join("accuracy_py.json")) else { return };
+    let py = json::parse(&text).unwrap();
+    let engine = Engine::open(&dir).unwrap();
+    let model = "deit_t";
+    for variant in ["fp32", "fp32_sole"] {
+        let rust_acc =
+            sole::experiments::accuracy::eval_model(&engine, &dir, model, variant, 256).unwrap();
+        let py_acc = py.get(model).unwrap().get_f64(variant).unwrap();
+        assert!(
+            (rust_acc - py_acc).abs() < 0.05,
+            "{model}/{variant}: rust {rust_acc} vs python {py_acc}"
+        );
+    }
+}

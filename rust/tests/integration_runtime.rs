@@ -1,0 +1,190 @@
+//! Integration: PJRT runtime over the real AOT artifacts.
+//!
+//! Requires `make artifacts` to have run (skips politely otherwise).
+//! Validates: HLO-text loading, compilation, weight/calib literal binding,
+//! op graphs vs the Rust bit-exact models, model-variant coherence.
+
+use std::path::PathBuf;
+
+use sole::runtime::Engine;
+use sole::softmax::{E2Softmax, E2SoftmaxConfig};
+use sole::tensor::Bundle;
+use sole::util::rng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn engine_opens_and_lists_models() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::open(&dir).unwrap();
+    let models = engine.manifest.models();
+    assert!(models.iter().any(|m| m == "deit_t"), "models: {models:?}");
+    assert!(models.iter().any(|m| m.starts_with("bert_")));
+}
+
+#[test]
+fn op_e2softmax_matches_rust_bit_exact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::open(&dir).unwrap();
+    let m = engine.load("op_e2softmax").unwrap();
+    let (rows, length) = (m.meta.input_shape[0], m.meta.input_shape[1]);
+    let mut rng = Rng::new(7);
+    let mut x = vec![0f32; rows * length];
+    rng.fill_normal(&mut x, 0.0, 2.0);
+    let out = m.run_f32(&x).unwrap();
+    assert_eq!(out.len(), rows * length);
+
+    // the pallas kernel inside the HLO is the chunked-online algorithm;
+    // our Rust model must agree bit-for-bit on the Q23 grid
+    let sm = E2Softmax::new(E2SoftmaxConfig { e: 4, chunk: 32 });
+    for r in 0..rows {
+        let row = &x[r * length..(r + 1) * length];
+        let rowmax = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let q: Vec<i64> = row
+            .iter()
+            .map(|&v| (((v - rowmax) as f64 * 16.0).round() as i64).clamp(-255, 0))
+            .collect();
+        let gold = sm.forward_introspect(&q);
+        let gold_f = gold.out_f64();
+        for (i, (&got, want)) in out[r * length..(r + 1) * length].iter().zip(&gold_f).enumerate() {
+            assert_eq!(got as f64, *want, "row {r} col {i}");
+        }
+    }
+}
+
+#[test]
+fn op_exact_softmax_is_ieee() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::open(&dir).unwrap();
+    let m = engine.load("op_softmax_exact").unwrap();
+    let (rows, length) = (m.meta.input_shape[0], m.meta.input_shape[1]);
+    let mut rng = Rng::new(9);
+    let mut x = vec![0f32; rows * length];
+    rng.fill_normal(&mut x, 0.0, 1.5);
+    let out = m.run_f32(&x).unwrap();
+    for r in 0..rows {
+        let row = &x[r * length..(r + 1) * length];
+        let want = sole::softmax::e2::softmax_exact(row);
+        for (got, w) in out[r * length..(r + 1) * length].iter().zip(&want) {
+            assert!((*got as f64 - w).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn op_ailayernorm_runs_and_normalizes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::open(&dir).unwrap();
+    let m = engine.load("op_ailayernorm").unwrap();
+    let (rows, c) = (m.meta.input_shape[0], m.meta.input_shape[1]);
+    let mut rng = Rng::new(11);
+    // u8 codes as f32
+    let x: Vec<f32> = (0..rows * c).map(|_| rng.range_i64(0, 256) as f32).collect();
+    let out = m.run_f32(&x).unwrap();
+    assert_eq!(out.len(), rows * c);
+    // alpha=0, gamma=1, beta=0 artifact: rows should be ~standardized
+    for r in 0..rows {
+        let row = &out[r * c..(r + 1) * c];
+        let mean: f32 = row.iter().sum::<f32>() / c as f32;
+        assert!(mean.abs() < 0.1, "row {r} mean {mean}");
+    }
+}
+
+#[test]
+fn model_artifact_end_to_end_accuracy_sane() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::open(&dir).unwrap();
+    let ids = engine.find("deit_t", "fp32");
+    let id = ids.iter().find(|i| i.ends_with("b64")).expect("b64 artifact");
+    let m = engine.load(id).unwrap();
+    let data = Bundle::load(&dir.join("data/cv_eval")).unwrap();
+    let x = data.get("x").unwrap();
+    let y = data.get("y").unwrap().as_i32().unwrap();
+    let xs = x.as_f32().unwrap();
+    let item: usize = x.shape[1..].iter().product();
+    let b = m.batch();
+    let ncls = m.meta.output_shape[1];
+    let mut correct = 0usize;
+    let n_batches = 2; // smoke: 128 samples
+    for bi in 0..n_batches {
+        let xb = &xs[bi * b * item..(bi + 1) * b * item];
+        let logits = m.run_f32(xb).unwrap();
+        for i in 0..b {
+            let row = &logits[i * ncls..(i + 1) * ncls];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred as i32 == y[bi * b + i] {
+                correct += 1;
+            }
+        }
+    }
+    let acc = correct as f64 / (n_batches * b) as f64;
+    assert!(acc > 0.5, "trained model should beat chance by far, got {acc}");
+}
+
+#[test]
+fn sole_variant_tracks_fp32_predictions() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::open(&dir).unwrap();
+    let fid = engine.find("deit_t", "fp32");
+    let sid = engine.find("deit_t", "fp32_sole");
+    let fid = fid.iter().find(|i| i.ends_with("b64")).unwrap();
+    let sid = sid.iter().find(|i| i.ends_with("b64")).unwrap();
+    let f = engine.load(fid).unwrap();
+    let s = engine.load(sid).unwrap();
+    let data = Bundle::load(&dir.join("data/cv_eval")).unwrap();
+    let xs = data.get("x").unwrap().as_f32().unwrap();
+    let item = 32 * 32;
+    let b = f.batch();
+    let xb = &xs[..b * item];
+    let lf = f.run_f32(xb).unwrap();
+    let ls = s.run_f32(xb).unwrap();
+    let ncls = f.meta.output_shape[1];
+    let am = |v: &[f32]| v.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+    let mut agree = 0;
+    for i in 0..b {
+        if am(&lf[i * ncls..(i + 1) * ncls]) == am(&ls[i * ncls..(i + 1) * ncls]) {
+            agree += 1;
+        }
+    }
+    // SOLE is a drop-in approximation: predictions should mostly agree
+    assert!(agree as f64 / b as f64 > 0.9, "agreement {agree}/{b}");
+}
+
+#[test]
+fn bert_artifact_runs_on_tokens() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::open(&dir).unwrap();
+    let ids = engine.find("bert_sst2", "int8_sole");
+    let Some(id) = ids.first() else {
+        eprintln!("skipping: no bert_sst2 artifacts");
+        return;
+    };
+    let m = engine.load(id).unwrap();
+    let data = Bundle::load(&dir.join("data/bert_sst2_eval")).unwrap();
+    let x = data.get("x").unwrap().as_i32().unwrap();
+    let b = m.batch();
+    let seq = m.meta.input_shape[1];
+    let out = m.run_i32(&x[..b * seq]).unwrap();
+    assert_eq!(out.len(), b * m.meta.output_shape[1]);
+    assert!(out.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn unknown_artifact_errors() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::open(&dir).unwrap();
+    assert!(engine.load("no_such_artifact").is_err());
+}

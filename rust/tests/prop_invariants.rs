@@ -1,0 +1,200 @@
+//! Cross-module property tests: coordinator routing/batching/state
+//! invariants and algorithm-level laws that hold across random workloads.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use sole::coordinator::{Backend, BatchPolicy, Batcher, Coordinator, SoftwareSoftmaxBackend};
+use sole::layernorm::AiLayerNorm;
+use sole::softmax::{E2Softmax, E2SoftmaxConfig};
+use sole::util::proptest::{check, size};
+
+// ---------------------------------------------------------------------------
+// Batcher invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn batcher_bucket_always_covers_or_caps() {
+    check("bucket-covers", 300, 1, |rng| {
+        let mut buckets: Vec<usize> = (0..size(rng, 5)).map(|_| 1 << rng.range_i64(0, 6)).collect();
+        buckets.push(1);
+        let max_batch = rng.range_usize(1, 64);
+        let b = Batcher::new(
+            BatchPolicy { max_wait: Duration::from_millis(5), max_batch },
+            buckets.clone(),
+        );
+        let n = rng.range_usize(1, 128);
+        let pick = b.pick_bucket(n);
+        assert!(buckets.contains(&pick));
+        // covering: the pick is >= n unless capped
+        let cap = buckets.iter().filter(|&&x| x <= max_batch).max().copied()
+            .unwrap_or(*buckets.iter().min().unwrap());
+        assert!(pick >= n.min(cap));
+    });
+}
+
+#[test]
+fn batcher_dispatch_monotone_in_time_and_queue() {
+    check("dispatch-monotone", 200, 2, |rng| {
+        let b = Batcher::new(
+            BatchPolicy { max_wait: Duration::from_millis(rng.range_i64(1, 50) as u64), max_batch: 16 },
+            vec![1, 4, 8, 16],
+        );
+        let n = rng.range_usize(1, 32);
+        let t = Duration::from_millis(rng.range_i64(0, 100) as u64);
+        if b.should_dispatch(n, t) {
+            // more queue or more waiting can never flip the decision off
+            assert!(b.should_dispatch(n + 1, t));
+            assert!(b.should_dispatch(n, t + Duration::from_millis(10)));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator state: every submitted request is answered exactly once,
+// outputs are routed to their own request (no cross-talk)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn coordinator_routes_outputs_to_correct_requests() {
+    // Each request's row has a unique argmax position; E2Softmax preserves
+    // the argmax (monotone), so response routing errors would be visible.
+    let l = 64;
+    let be = Arc::new(SoftwareSoftmaxBackend::new(l, vec![1, 4, 8]));
+    let co = Coordinator::start(be, BatchPolicy { max_wait: Duration::from_millis(3), max_batch: 8 }, 2);
+    let cl = co.client();
+    let rxs: Vec<_> = (0..64)
+        .map(|i| {
+            let mut row = vec![0f32; l];
+            row[i % l] = 8.0; // unique peak
+            (i % l, cl.submit(row).unwrap())
+        })
+        .collect();
+    for (peak, rx) in rxs {
+        let r = rx.recv().unwrap();
+        let am = r
+            .output
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(am, peak, "response routed to wrong request");
+    }
+    assert_eq!(co.metrics.completed(), 64);
+    co.shutdown();
+}
+
+#[test]
+fn coordinator_conserves_requests_under_concurrency() {
+    check("conserve-requests", 10, 3, |rng| {
+        let l = 32;
+        let be = Arc::new(SoftwareSoftmaxBackend::new(l, vec![1, 2, 4, 8]));
+        let workers = rng.range_usize(1, 4);
+        let co = Coordinator::start(
+            be,
+            BatchPolicy { max_wait: Duration::from_millis(rng.range_i64(0, 4) as u64), max_batch: 8 },
+            workers,
+        );
+        let cl = co.client();
+        let n = rng.range_usize(1, 40);
+        let rxs: Vec<_> = (0..n).map(|_| cl.submit(vec![0.1; l]).unwrap()).collect();
+        let mut got = 0;
+        for rx in rxs {
+            if rx.recv().is_ok() {
+                got += 1;
+            }
+        }
+        assert_eq!(got, n);
+        assert_eq!(co.metrics.completed() as usize, n);
+        co.shutdown();
+    });
+}
+
+#[test]
+fn backend_padding_never_leaks_into_real_outputs() {
+    // run bucket 8 with only 3 real rows; padded rows are zeros — the
+    // per-row softmax of real rows must match bucket-1 runs exactly
+    let l = 48;
+    let be = SoftwareSoftmaxBackend::new(l, vec![1, 8]);
+    let mut rows = vec![0f32; 8 * l];
+    let mut rng = sole::util::rng::Rng::new(9);
+    rng.fill_normal(&mut rows[..3 * l], 0.0, 2.0);
+    let out8 = be.run(8, &rows).unwrap();
+    for r in 0..3 {
+        let single = be.run(1, &rows[r * l..(r + 1) * l]).unwrap();
+        assert_eq!(&out8[r * l..(r + 1) * l], &single[..], "row {r}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Algorithm laws across random inputs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn e2softmax_shift_invariance() {
+    // softmax(x + c) == softmax(x): adding a constant code offset must not
+    // change any output (the algorithm only sees q - max)
+    check("e2-shift-invariant", 150, 5, |rng| {
+        let n = size(rng, 128);
+        let q: Vec<i64> = (0..n).map(|_| -rng.range_i64(0, 256)).collect();
+        let c = rng.range_i64(-1000, 1000);
+        let shifted: Vec<i64> = q.iter().map(|&v| v + c).collect();
+        let sm = E2Softmax::new(E2SoftmaxConfig::default());
+        assert_eq!(
+            sm.forward_introspect(&q).out_q23,
+            sm.forward_introspect(&shifted).out_q23
+        );
+    });
+}
+
+#[test]
+fn e2softmax_uniform_rows_give_uniform_outputs() {
+    check("e2-uniform-rows", 100, 6, |rng| {
+        let n = size(rng, 256);
+        let v = -rng.range_i64(0, 200);
+        let q = vec![v; n];
+        let sm = E2Softmax::new(E2SoftmaxConfig::default());
+        let out = sm.forward_introspect(&q).out_q23;
+        assert!(out.windows(2).all(|w| w[0] == w[1]));
+    });
+}
+
+#[test]
+fn ailayernorm_gamma_scaling_law() {
+    // scaling gamma by t scales (y - beta) by t exactly
+    check("ai-gamma-scale", 100, 7, |rng| {
+        let c = size(rng, 256).max(4);
+        let codes: Vec<u8> = (0..c).map(|_| rng.range_i64(0, 256) as u8).collect();
+        let alpha: Vec<u8> = (0..c).map(|_| rng.range_i64(0, 4) as u8).collect();
+        let g1 = vec![1f32; c];
+        let g2 = vec![2f32; c];
+        let beta = vec![0.5f32; c];
+        let ln = AiLayerNorm::default();
+        let y1 = ln.forward_introspect(&codes, &alpha, &g1, &beta).y;
+        let y2 = ln.forward_introspect(&codes, &alpha, &g2, &beta).y;
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!(((b - 0.5) - 2.0 * (a - 0.5)).abs() < 1e-9);
+        }
+    });
+}
+
+#[test]
+fn ailayernorm_alpha_shift_consistency() {
+    // alpha uniformly +1 doubles every D and sigma: output unchanged up to
+    // the rsqrt LUT's bucket quantization of the 4x-scaled variance
+    check("ai-alpha-shift", 100, 8, |rng| {
+        let c = size(rng, 200).max(8);
+        let codes: Vec<u8> = (0..c).map(|_| rng.range_i64(0, 256) as u8).collect();
+        let a0 = vec![0u8; c];
+        let a1 = vec![1u8; c];
+        let g = vec![1f32; c];
+        let b = vec![0f32; c];
+        let ln = AiLayerNorm::default();
+        let y0 = ln.forward_introspect(&codes, &a0, &g, &b).y;
+        let y1 = ln.forward_introspect(&codes, &a1, &g, &b).y;
+        for (p, q) in y0.iter().zip(&y1) {
+            assert!((p - q).abs() < 0.02 * p.abs().max(1.0), "{p} vs {q}");
+        }
+    });
+}
