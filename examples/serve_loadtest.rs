@@ -1,11 +1,18 @@
-//! End-to-end serving driver (EXPERIMENTS.md §Serving): loads the bucketed
-//! deit_t SOLE artifacts, serves Poisson-arrival requests through the
-//! dynamic batcher, and reports latency/throughput per offered load.
+//! End-to-end serving driver (EXPERIMENTS.md §Serving): serves
+//! Poisson-arrival requests through the dynamic batcher and reports
+//! latency/throughput per offered load.
+//!
+//! With artifacts present it loads the bucketed deit_t SOLE artifacts
+//! (PJRT backend, top-1 accuracy reported); without them it falls back to
+//! the bit-exact software E2Softmax op-service so the serving stack is
+//! drivable everywhere.  `--queue-cap N` bounds the request queue and
+//! switches submission to `try_submit`, reporting shed load.
 //!
 //! ```
 //! cargo run --release --offline --example serve_loadtest -- \
 //!     [--artifacts DIR] [--model deit_t] [--variant fp32_sole] \
-//!     [--requests 96] [--rates 4,16,64] [--max-wait-ms 20]
+//!     [--requests 96] [--rates 4,16,64] [--max-wait-ms 20] \
+//!     [--workers 1] [--queue-cap 0] [--len 128]
 //! ```
 
 use std::path::PathBuf;
@@ -13,7 +20,9 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
-use sole::coordinator::{Backend, BatchPolicy, Coordinator, PjrtBackend};
+use sole::coordinator::{
+    Backend, BatchPolicy, Coordinator, PjrtBackend, SoftwareSoftmaxBackend, TrySubmit,
+};
 use sole::runtime::Engine;
 use sole::tensor::Bundle;
 use sole::util::cli::Args;
@@ -25,61 +34,104 @@ fn main() -> Result<()> {
     let model = args.opt_str("model", "deit_t");
     let variant = args.opt_str("variant", "fp32_sole");
     let n = args.opt_usize("requests", 96);
+    let workers = args.opt_usize("workers", 1);
+    let queue_cap = match args.opt_usize("queue-cap", 0) {
+        0 => None,
+        cap => Some(cap),
+    };
     let rates: Vec<f64> = args
         .opt_str("rates", "4,16,64")
         .split(',')
         .filter_map(|s| s.trim().parse().ok())
         .collect();
     let max_wait = Duration::from_millis(args.opt_usize("max-wait-ms", 20) as u64);
+    let policy = BatchPolicy { max_wait, max_batch: 16, queue_cap };
 
-    let engine = Engine::open(&dir)?;
-    println!("loading {model}/{variant} buckets ...");
-    let backend = Arc::new(PjrtBackend::from_family(&engine, model, variant)?);
+    // pick the backend: real artifacts when present AND executable (pjrt
+    // feature on), software op-service otherwise (same coordinator, same
+    // batcher, same metrics)
+    let have_artifacts = dir.join("manifest.json").exists();
+    if have_artifacts && !cfg!(feature = "pjrt") {
+        println!("artifacts found but built without --features pjrt — using the software backend");
+    }
+    let (backend, xs, labels): (Arc<dyn Backend>, Vec<f32>, Option<Vec<i32>>) =
+        if have_artifacts && cfg!(feature = "pjrt") {
+            let engine = Engine::open(&dir)?;
+            println!("loading {model}/{variant} buckets ...");
+            let be = PjrtBackend::from_family(&engine, model, variant)?;
+            let data = Bundle::load(&dir.join("data/cv_eval"))?;
+            let xs = data.get("x")?.as_f32()?;
+            let y = data.get("y")?.as_i32()?;
+            (Arc::new(be) as Arc<dyn Backend>, xs, Some(y))
+        } else {
+            let l = args.opt_usize("len", 128);
+            println!("no artifacts under {} — software E2Softmax rows of {l}", dir.display());
+            let mut rng = Rng::new(99);
+            let mut xs = vec![0f32; 256 * l];
+            rng.fill_normal(&mut xs, 0.0, 2.0);
+            let be = SoftwareSoftmaxBackend::new(l, vec![1, 4, 8, 16]);
+            (Arc::new(be) as Arc<dyn Backend>, xs, None)
+        };
     let item = backend.item_input_len();
-    println!("buckets {:?}, item {} f32", backend.buckets(), item);
+    println!("buckets {:?}, item {} f32, workers {workers}, queue_cap {queue_cap:?}", backend.buckets(), item);
 
-    let data = Bundle::load(&dir.join("data/cv_eval"))?;
-    let xs = data.get("x")?.as_f32()?;
-    let y = data.get("y")?.as_i32()?;
-
-    println!("\n{:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>8}", "rate req/s", "achieved",
-             "p50 ms", "p99 ms", "mean ms", "avg batch", "top-1");
+    println!(
+        "\n{:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>6} {:>8}",
+        "rate req/s", "achieved", "p50 ms", "p99 ms", "mean ms", "avg batch", "shed", "top-1"
+    );
     for &rate in &rates {
-        let co = Coordinator::start(backend.clone(), BatchPolicy { max_wait, max_batch: 16 }, 1);
+        let co = Coordinator::start(backend.clone(), policy.clone(), workers);
         let cl = co.client();
         let mut rng = Rng::new(7);
         let t0 = Instant::now();
         let mut pending = Vec::new();
+        let mut shed = 0usize;
         for i in 0..n {
             let idx = i % (xs.len() / item);
-            pending.push((idx, cl.submit(xs[idx * item..(idx + 1) * item].to_vec())?));
+            let input = xs[idx * item..(idx + 1) * item].to_vec();
+            if queue_cap.is_some() {
+                match cl.try_submit(input)? {
+                    TrySubmit::Accepted(rx) => pending.push((idx, rx)),
+                    TrySubmit::Full(_) => shed += 1,
+                }
+            } else {
+                pending.push((idx, cl.submit(input)?));
+            }
             std::thread::sleep(Duration::from_secs_f64(rng.exponential(rate)));
         }
         let mut correct = 0usize;
+        let served = pending.len();
         for (idx, rx) in pending {
             let r = rx.recv()?;
-            let pred = r
-                .output
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0;
-            if pred as i32 == y[idx] {
-                correct += 1;
+            if let Some(y) = &labels {
+                let pred = r
+                    .output
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred as i32 == y[idx] {
+                    correct += 1;
+                }
             }
         }
         let wall = t0.elapsed().as_secs_f64();
         let (p50, p99, mean) = co.metrics.total_latency();
+        let top1 = match &labels {
+            Some(_) if served > 0 => format!("{:.1}%", 100.0 * correct as f64 / served as f64),
+            _ => "-".to_string(),
+        };
         println!(
-            "{:>10.1} {:>10.1} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>7.1}%",
+            "{:>10.1} {:>10.1} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>6} {:>8}",
             rate,
-            n as f64 / wall,
+            served as f64 / wall,
             p50 * 1e3,
             p99 * 1e3,
             mean * 1e3,
             co.metrics.mean_batch(),
-            100.0 * correct as f64 / n as f64,
+            shed,
+            top1,
         );
         co.shutdown();
     }

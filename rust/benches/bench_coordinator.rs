@@ -1,20 +1,123 @@
 //! Coordinator hot path: submit->batch->execute->respond over the software
-//! backend (no PJRT), isolating router/batcher overhead.
+//! backends (no PJRT), isolating router/batcher overhead — plus a heap
+//! allocation audit proving the arena execution path is allocation-free at
+//! steady state (the whole point of the per-worker scratch redesign).
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use sole::coordinator::{BatchPolicy, Coordinator, SoftwareSoftmaxBackend};
+use sole::coordinator::{
+    Backend, BatchPolicy, Coordinator, SoftwareLayerNormBackend, SoftwareSoftmaxBackend,
+};
+use sole::softmax::{E2Softmax, E2SoftmaxConfig};
 use sole::util::bench::{bench, report};
 
-fn main() {
-    println!("bench_coordinator — routing + batching overhead (software backend)");
-    for &(wait_ms, nreq) in &[(0u64, 256usize), (2, 256), (5, 256)] {
+/// Counting allocator: every heap allocation bumps a global counter, so the
+/// steady-state audit below can assert "0 allocs per batch" empirically
+/// rather than by inspection.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Allocations observed across `iters` runs of `f`, after warmup.
+fn count_allocs<F: FnMut()>(mut f: F, iters: u64) -> u64 {
+    f();
+    f(); // warm the reusable buffers
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..iters {
+        f();
+    }
+    ALLOCS.load(Ordering::SeqCst) - before
+}
+
+fn alloc_audit() {
+    const L: usize = 128;
+    const BUCKET: usize = 16;
+    let be = SoftwareSoftmaxBackend::new(L, vec![1, 4, 8, 16]);
+    let mut rng = sole::util::rng::Rng::new(1);
+    let mut inputs = vec![0f32; BUCKET * L];
+    rng.fill_normal(&mut inputs, 0.0, 2.0);
+
+    println!("\nallocation audit — {BUCKET}x{L} softmax batch, 100 batches after warmup");
+
+    // legacy path: what SoftwareSoftmaxBackend::run used to do before the
+    // arena redesign — forward_logits per row (introspect vectors + output
+    // collection allocate every call)
+    let sm = E2Softmax::new(E2SoftmaxConfig::default());
+    let mut sink = 0f64;
+    let legacy = count_allocs(
+        || {
+            for row in inputs.chunks(L) {
+                let out = sm.forward_logits(row);
+                sink += out[0];
+            }
+        },
+        100,
+    );
+
+    // arena path: the coordinator's actual steady state — reused codes
+    // buffer, E2Scratch, and output staging
+    let mut scratch = be.make_scratch();
+    let mut out = vec![0f32; BUCKET * L];
+    let arena = count_allocs(
+        || {
+            be.run(BUCKET, &inputs, &mut out, &mut scratch).unwrap();
+        },
+        100,
+    );
+    std::hint::black_box(sink);
+
+    println!(
+        "  legacy forward_logits path: {legacy:>6} allocs / 100 batches ({:.1} per row)",
+        legacy as f64 / (100.0 * BUCKET as f64)
+    );
+    println!(
+        "  arena forward_row_f32 path: {arena:>6} allocs / 100 batches ({:.1} per row)",
+        arena as f64 / (100.0 * BUCKET as f64)
+    );
+    assert_eq!(arena, 0, "steady-state backend execution must not allocate");
+
+    // same audit for the layernorm service
+    let ln = SoftwareLayerNormBackend::new(L, vec![1, 4, 8, 16]);
+    let mut ln_scratch = ln.make_scratch();
+    let ln_allocs = count_allocs(
+        || {
+            ln.run(BUCKET, &inputs, &mut out, &mut ln_scratch).unwrap();
+        },
+        100,
+    );
+    println!("  layernorm arena path:       {ln_allocs:>6} allocs / 100 batches");
+    assert_eq!(ln_allocs, 0, "steady-state layernorm execution must not allocate");
+}
+
+fn throughput_sweep() {
+    println!("\nthroughput — routing + batching overhead (software softmax backend)");
+    for &(wait_ms, workers, nreq) in &[(0u64, 1usize, 256usize), (2, 1, 256), (2, 2, 256), (2, 4, 256), (5, 2, 256)] {
         let be = Arc::new(SoftwareSoftmaxBackend::new(128, vec![1, 4, 8, 16]));
         let co = Coordinator::start(
             be,
-            BatchPolicy { max_wait: Duration::from_millis(wait_ms), max_batch: 16 },
-            2,
+            BatchPolicy {
+                max_wait: Duration::from_millis(wait_ms),
+                max_batch: 16,
+                ..BatchPolicy::default()
+            },
+            workers,
         );
         let cl = co.client();
         let t0 = Instant::now();
@@ -24,15 +127,47 @@ fn main() {
         }
         let dt = t0.elapsed();
         println!(
-            "max_wait={wait_ms}ms: {nreq} reqs in {dt:?} ({:.0} req/s), {}",
+            "max_wait={wait_ms}ms workers={workers}: {nreq} reqs in {dt:?} ({:.0} req/s), {}",
             nreq as f64 / dt.as_secs_f64(),
             co.metrics.summary()
         );
         co.shutdown();
     }
+
+    println!("\nthroughput — software layernorm backend, 4 workers");
+    let be = Arc::new(SoftwareLayerNormBackend::new(192, vec![1, 4, 8, 16]));
+    let co = Coordinator::start(
+        be,
+        BatchPolicy { max_wait: Duration::from_millis(2), max_batch: 16, ..BatchPolicy::default() },
+        4,
+    );
+    let cl = co.client();
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..256).map(|_| cl.submit(vec![0.4; 192]).unwrap()).collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    let dt = t0.elapsed();
+    println!(
+        "layernorm: 256 reqs in {dt:?} ({:.0} req/s), {}",
+        256.0 / dt.as_secs_f64(),
+        co.metrics.summary()
+    );
+    co.shutdown();
+}
+
+fn main() {
+    println!("bench_coordinator — serving hot path (software backends)");
+    alloc_audit();
+    throughput_sweep();
+
     // raw single-request round-trip latency
     let be = Arc::new(SoftwareSoftmaxBackend::new(128, vec![1]));
-    let co = Coordinator::start(be, BatchPolicy { max_wait: Duration::ZERO, max_batch: 1 }, 1);
+    let co = Coordinator::start(
+        be,
+        BatchPolicy { max_wait: Duration::ZERO, max_batch: 1, ..BatchPolicy::default() },
+        1,
+    );
     let cl = co.client();
     report(&bench("single-request round trip", Duration::from_millis(400), || {
         cl.infer(vec![0.3; 128]).unwrap();

@@ -3,16 +3,31 @@
 //! * `PjrtBackend` — the real path: bucketed AOT artifacts through the
 //!   PJRT runtime (one `LoadedModel` per batch size).
 //! * `SoftwareSoftmaxBackend` — the bit-exact Rust E2Softmax as a
-//!   row-service; lets the coordinator be tested and benchmarked without
-//!   artifacts, and doubles as the op-offload path of `examples/op_offload`.
+//!   row-service over the allocation-free `forward_row_f32` hot path.
+//! * `SoftwareLayerNormBackend` — the bit-exact AILayerNorm as a
+//!   row-service (PTF-quantized f32 rows through `forward_row_f32`).
+//!
+//! Execution is arena-style: the worker owns the packed input buffer, the
+//! staged output buffer, and an opaque per-worker scratch created by
+//! `Backend::make_scratch`.  A backend writes results into the provided
+//! `out` slice and keeps every temporary inside its scratch, so the
+//! steady-state batch loop performs no heap allocation.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::layernorm::{config::DEFAULT_ZP, AiLayerNorm};
+use crate::quant::{ptf_quantize_into, PtfCalib};
 use crate::runtime::{Engine, LoadedModel};
+use crate::softmax::e2::{quantize_logits_into, E2Scratch};
 use crate::softmax::{E2Softmax, E2SoftmaxConfig};
+
+/// Opaque per-worker scratch arena.  Each worker thread creates one via
+/// `Backend::make_scratch` and hands it back on every `run`, so backends
+/// can reuse buffers without interior mutability or locks.
+pub type BackendScratch = Box<dyn std::any::Any + Send>;
 
 /// Executes packed, padded batches at one of the advertised bucket sizes.
 pub trait Backend: Send + Sync {
@@ -22,8 +37,33 @@ pub trait Backend: Send + Sync {
     fn item_output_len(&self) -> usize;
     /// Available batch sizes, ascending.
     fn buckets(&self) -> &[usize];
-    /// Run a `bucket`-sized batch (`inputs.len() == bucket * item_input_len`).
-    fn run(&self, bucket: usize, inputs: &[f32]) -> Result<Vec<f32>>;
+
+    /// Create the per-worker scratch arena (stateless backends keep the
+    /// default).
+    fn make_scratch(&self) -> BackendScratch {
+        Box::new(())
+    }
+
+    /// Run a `bucket`-sized batch: `inputs.len() == bucket * item_input_len`,
+    /// writing `bucket * item_output_len` f32s into `out`.  Implementations
+    /// must keep every temporary in `scratch` so steady-state execution is
+    /// allocation-free.
+    fn run(
+        &self,
+        bucket: usize,
+        inputs: &[f32],
+        out: &mut [f32],
+        scratch: &mut BackendScratch,
+    ) -> Result<()>;
+
+    /// Convenience wrapper allocating fresh output + scratch (tests and
+    /// one-shot callers; the serving hot path never uses this).
+    fn run_alloc(&self, bucket: usize, inputs: &[f32]) -> Result<Vec<f32>> {
+        let mut out = vec![0f32; bucket * self.item_output_len()];
+        let mut scratch = self.make_scratch();
+        self.run(bucket, inputs, &mut out, &mut scratch)?;
+        Ok(out)
+    }
 }
 
 /// Real serving: one compiled artifact per bucket size.
@@ -65,12 +105,26 @@ impl Backend for PjrtBackend {
         &self.buckets
     }
 
-    fn run(&self, bucket: usize, inputs: &[f32]) -> Result<Vec<f32>> {
+    fn run(
+        &self,
+        bucket: usize,
+        inputs: &[f32],
+        out: &mut [f32],
+        _scratch: &mut BackendScratch,
+    ) -> Result<()> {
         let m = self
             .models
             .get(&bucket)
             .with_context(|| format!("no artifact for bucket {bucket}"))?;
-        m.run_f32(inputs)
+        let res = m.run_f32(inputs)?;
+        anyhow::ensure!(
+            res.len() == out.len(),
+            "artifact returned {} f32s, expected {}",
+            res.len(),
+            out.len()
+        );
+        out.copy_from_slice(&res);
+        Ok(())
     }
 }
 
@@ -82,8 +136,16 @@ pub struct SoftwareSoftmaxBackend {
     sm: E2Softmax,
 }
 
+/// Per-worker arena of the softmax service: the logit->code quantization
+/// buffer plus the E2Softmax row scratch.
+struct SoftmaxScratch {
+    codes: Vec<i64>,
+    e2: E2Scratch,
+}
+
 impl SoftwareSoftmaxBackend {
     pub fn new(l: usize, mut buckets: Vec<usize>) -> SoftwareSoftmaxBackend {
+        assert!(l > 0, "softmax rows must be non-empty");
         buckets.sort_unstable();
         SoftwareSoftmaxBackend { l, buckets, sm: E2Softmax::new(E2SoftmaxConfig::default()) }
     }
@@ -102,13 +164,109 @@ impl Backend for SoftwareSoftmaxBackend {
         &self.buckets
     }
 
-    fn run(&self, bucket: usize, inputs: &[f32]) -> Result<Vec<f32>> {
+    fn make_scratch(&self) -> BackendScratch {
+        Box::new(SoftmaxScratch { codes: Vec::with_capacity(self.l), e2: E2Scratch::default() })
+    }
+
+    fn run(
+        &self,
+        bucket: usize,
+        inputs: &[f32],
+        out: &mut [f32],
+        scratch: &mut BackendScratch,
+    ) -> Result<()> {
         anyhow::ensure!(inputs.len() == bucket * self.l);
-        let mut out = Vec::with_capacity(inputs.len());
-        for row in inputs.chunks(self.l) {
-            out.extend(self.sm.forward_logits(row).into_iter().map(|v| v as f32));
+        anyhow::ensure!(out.len() == bucket * self.l);
+        let s = scratch
+            .downcast_mut::<SoftmaxScratch>()
+            .context("softmax backend handed a foreign scratch arena")?;
+        for (row, row_out) in inputs.chunks(self.l).zip(out.chunks_mut(self.l)) {
+            quantize_logits_into(row, self.sm.cfg.e, &mut s.codes);
+            self.sm.forward_row_f32(&s.codes, row_out, &mut s.e2);
         }
-        Ok(out)
+        Ok(())
+    }
+}
+
+/// Software op-service for AILayerNorm: each item is one f32 row of `c`
+/// channels, PTF-quantized with the backend's calibration and normalized
+/// by the bit-exact hot path.
+pub struct SoftwareLayerNormBackend {
+    c: usize,
+    buckets: Vec<usize>,
+    ln: AiLayerNorm,
+    cal: PtfCalib,
+    gamma: Vec<f32>,
+    beta: Vec<f32>,
+}
+
+/// Per-worker arena of the layernorm service: the PTF code buffer.
+struct LayerNormScratch {
+    codes: Vec<u8>,
+}
+
+impl SoftwareLayerNormBackend {
+    /// Identity-affine service (alpha = 0, gamma = 1, beta = 0) with a
+    /// layer scale that maps roughly N(0, 4) inputs onto the u8 code grid.
+    pub fn new(c: usize, buckets: Vec<usize>) -> SoftwareLayerNormBackend {
+        let cal = PtfCalib { alpha: vec![0u8; c], s: 1.0 / 32.0, zp: DEFAULT_ZP };
+        SoftwareLayerNormBackend::with_calibration(c, buckets, cal, vec![1f32; c], vec![0f32; c])
+            .expect("identity calibration is always well-formed")
+    }
+
+    /// Fully-specified service: a PTF calibration plus affine parameters.
+    pub fn with_calibration(
+        c: usize,
+        mut buckets: Vec<usize>,
+        cal: PtfCalib,
+        gamma: Vec<f32>,
+        beta: Vec<f32>,
+    ) -> Result<SoftwareLayerNormBackend> {
+        anyhow::ensure!(c > 0, "layernorm rows must be non-empty");
+        anyhow::ensure!(
+            cal.alpha.len() == c && gamma.len() == c && beta.len() == c,
+            "calibration lengths must match {c} channels"
+        );
+        buckets.sort_unstable();
+        let ln = AiLayerNorm { zp: cal.zp };
+        Ok(SoftwareLayerNormBackend { c, buckets, ln, cal, gamma, beta })
+    }
+}
+
+impl Backend for SoftwareLayerNormBackend {
+    fn item_input_len(&self) -> usize {
+        self.c
+    }
+
+    fn item_output_len(&self) -> usize {
+        self.c
+    }
+
+    fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+
+    fn make_scratch(&self) -> BackendScratch {
+        Box::new(LayerNormScratch { codes: Vec::with_capacity(self.c) })
+    }
+
+    fn run(
+        &self,
+        bucket: usize,
+        inputs: &[f32],
+        out: &mut [f32],
+        scratch: &mut BackendScratch,
+    ) -> Result<()> {
+        anyhow::ensure!(inputs.len() == bucket * self.c);
+        anyhow::ensure!(out.len() == bucket * self.c);
+        let s = scratch
+            .downcast_mut::<LayerNormScratch>()
+            .context("layernorm backend handed a foreign scratch arena")?;
+        for (row, row_out) in inputs.chunks(self.c).zip(out.chunks_mut(self.c)) {
+            ptf_quantize_into(row, &self.cal, &mut s.codes);
+            self.ln.forward_row_f32(&s.codes, &self.cal.alpha, &self.gamma, &self.beta, row_out);
+        }
+        Ok(())
     }
 }
 
@@ -120,7 +278,7 @@ mod tests {
     fn software_backend_shapes() {
         let be = SoftwareSoftmaxBackend::new(32, vec![4, 1, 2]);
         assert_eq!(be.buckets(), &[1, 2, 4]);
-        let out = be.run(2, &vec![0.5; 64]).unwrap();
+        let out = be.run_alloc(2, &vec![0.5; 64]).unwrap();
         assert_eq!(out.len(), 64);
         // uniform logits -> near-uniform probabilities
         let spread = out.iter().cloned().fold(f32::MIN, f32::max)
@@ -131,6 +289,89 @@ mod tests {
     #[test]
     fn software_backend_rejects_bad_len() {
         let be = SoftwareSoftmaxBackend::new(32, vec![1]);
-        assert!(be.run(1, &vec![0.0; 31]).is_err());
+        assert!(be.run_alloc(1, &vec![0.0; 31]).is_err());
+    }
+
+    #[test]
+    fn softmax_backend_matches_forward_logits() {
+        // the arena hot path must be bit-identical to the reference
+        // forward_logits pipeline it replaced
+        let l = 48;
+        let be = SoftwareSoftmaxBackend::new(l, vec![1, 4]);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let mut rows = vec![0f32; 4 * l];
+        rng.fill_normal(&mut rows, 0.0, 2.0);
+        let got = be.run_alloc(4, &rows).unwrap();
+        let sm = E2Softmax::new(E2SoftmaxConfig::default());
+        for r in 0..4 {
+            let want: Vec<f32> =
+                sm.forward_logits(&rows[r * l..(r + 1) * l]).into_iter().map(|v| v as f32).collect();
+            assert_eq!(&got[r * l..(r + 1) * l], &want[..], "row {r}");
+        }
+    }
+
+    #[test]
+    fn softmax_scratch_reuse_is_stable() {
+        // same inputs through one reused scratch arena: identical outputs
+        let l = 64;
+        let be = SoftwareSoftmaxBackend::new(l, vec![1, 8]);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let mut rows = vec![0f32; 8 * l];
+        rng.fill_normal(&mut rows, 0.0, 1.5);
+        let mut scratch = be.make_scratch();
+        let mut out1 = vec![0f32; 8 * l];
+        let mut out2 = vec![0f32; 8 * l];
+        be.run(8, &rows, &mut out1, &mut scratch).unwrap();
+        be.run(8, &rows, &mut out2, &mut scratch).unwrap();
+        assert_eq!(out1, out2);
+    }
+
+    #[test]
+    fn layernorm_backend_matches_direct_kernel() {
+        let c = 96;
+        let be = SoftwareLayerNormBackend::new(c, vec![1, 4]);
+        let mut rng = crate::util::rng::Rng::new(7);
+        let mut rows = vec![0f32; 4 * c];
+        rng.fill_normal(&mut rows, 0.0, 2.0);
+        let got = be.run_alloc(4, &rows).unwrap();
+        // direct kernel invocation with the same identity calibration
+        let cal = PtfCalib { alpha: vec![0u8; c], s: 1.0 / 32.0, zp: DEFAULT_ZP };
+        let ln = AiLayerNorm { zp: cal.zp };
+        let gamma = vec![1f32; c];
+        let beta = vec![0f32; c];
+        let mut codes = Vec::new();
+        let mut want = vec![0f32; c];
+        for r in 0..4 {
+            ptf_quantize_into(&rows[r * c..(r + 1) * c], &cal, &mut codes);
+            ln.forward_row_f32(&codes, &cal.alpha, &gamma, &beta, &mut want);
+            assert_eq!(&got[r * c..(r + 1) * c], &want[..], "row {r}");
+        }
+    }
+
+    #[test]
+    fn layernorm_backend_normalizes_rows() {
+        let c = 192;
+        let be = SoftwareLayerNormBackend::new(c, vec![1]);
+        let mut rng = crate::util::rng::Rng::new(11);
+        let mut row = vec![0f32; c];
+        rng.fill_normal(&mut row, 0.5, 2.0);
+        let out = be.run_alloc(1, &row).unwrap();
+        let mean: f32 = out.iter().sum::<f32>() / c as f32;
+        let sd = (out.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / c as f32).sqrt();
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((sd - 1.0).abs() < 0.1, "sd {sd}");
+    }
+
+    #[test]
+    fn layernorm_backend_rejects_mismatched_calibration() {
+        let cal = PtfCalib { alpha: vec![0u8; 4], s: 1.0, zp: DEFAULT_ZP };
+        assert!(SoftwareLayerNormBackend::with_calibration(
+            8,
+            vec![1],
+            cal,
+            vec![1f32; 8],
+            vec![0f32; 8]
+        )
+        .is_err());
     }
 }

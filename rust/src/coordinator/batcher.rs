@@ -5,18 +5,23 @@
 
 use std::time::Duration;
 
-/// Tunables for the batcher.
+/// Tunables for the batcher and the request queue.
 #[derive(Debug, Clone)]
 pub struct BatchPolicy {
     /// Longest a request may wait for companions before dispatch.
     pub max_wait: Duration,
     /// Hard cap on batch size (<= largest lowered bucket).
     pub max_batch: usize,
+    /// Bounded-queue backpressure: when set, `Client::submit` blocks while
+    /// the queue holds this many requests and `Client::try_submit` returns
+    /// the input back instead of enqueueing.  `None` = unbounded (the
+    /// seed's behavior).
+    pub queue_cap: Option<usize>,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_wait: Duration::from_millis(5), max_batch: 16 }
+        BatchPolicy { max_wait: Duration::from_millis(5), max_batch: 16, queue_cap: None }
     }
 }
 
@@ -80,7 +85,11 @@ mod tests {
 
     fn mk(max_wait_ms: u64, max_batch: usize, buckets: &[usize]) -> Batcher {
         Batcher::new(
-            BatchPolicy { max_wait: Duration::from_millis(max_wait_ms), max_batch },
+            BatchPolicy {
+                max_wait: Duration::from_millis(max_wait_ms),
+                max_batch,
+                ..BatchPolicy::default()
+            },
             buckets.to_vec(),
         )
     }

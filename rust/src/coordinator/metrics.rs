@@ -1,4 +1,10 @@
-//! Serving metrics: latency histograms + counters, shared across workers.
+//! Serving metrics: latency histograms + counters, sharded per worker.
+//!
+//! Counters are plain atomics.  The histogram/streaming state lives in one
+//! shard per worker (`record_shard`), so concurrent workers never contend
+//! on a lock in the hot path; readers (`summary`, `total_latency`,
+//! `mean_batch`) merge the shards on demand — reads are rare and cheap,
+//! writes are per-request and must not serialize the pool.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -6,12 +12,11 @@ use std::time::Duration;
 
 use crate::util::stats::{LatencyHist, Streaming};
 
-/// Aggregated serving metrics (interior-mutable, worker-shared).
-#[derive(Default)]
+/// Aggregated serving metrics (interior-mutable, worker-sharded).
 pub struct Metrics {
     completed: AtomicU64,
     errors: AtomicU64,
-    inner: Mutex<Inner>,
+    shards: Vec<Mutex<Inner>>,
 }
 
 #[derive(Default)]
@@ -23,14 +28,53 @@ struct Inner {
     padding_waste: Streaming,
 }
 
+impl Inner {
+    fn merge_from(&mut self, other: &Inner) {
+        self.queue_hist.merge(&other.queue_hist);
+        self.exec_hist.merge(&other.exec_hist);
+        self.total_hist.merge(&other.total_hist);
+        self.batch_sizes.merge(&other.batch_sizes);
+        self.padding_waste.merge(&other.padding_waste);
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::with_shards(1)
+    }
+}
+
 impl Metrics {
     pub fn new() -> Metrics {
         Metrics::default()
     }
 
+    /// One shard per worker; the coordinator sizes this to its pool.
+    pub fn with_shards(n: usize) -> Metrics {
+        Metrics {
+            completed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            shards: (0..n.max(1)).map(|_| Mutex::new(Inner::default())).collect(),
+        }
+    }
+
+    /// Record into shard 0 (single-writer callers).
     pub fn record(&self, queue: Duration, exec: Duration, bucket: usize, actual: usize) {
+        self.record_shard(0, queue, exec, bucket, actual);
+    }
+
+    /// Record one completed request from worker `shard` — lock-free with
+    /// respect to every other worker.
+    pub fn record_shard(
+        &self,
+        shard: usize,
+        queue: Duration,
+        exec: Duration,
+        bucket: usize,
+        actual: usize,
+    ) {
         self.completed.fetch_add(1, Ordering::Relaxed);
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.shards[shard % self.shards.len()].lock().unwrap();
         g.queue_hist.record(queue.as_secs_f64());
         g.exec_hist.record(exec.as_secs_f64());
         g.total_hist.record((queue + exec).as_secs_f64());
@@ -50,9 +94,23 @@ impl Metrics {
         self.errors.load(Ordering::Relaxed)
     }
 
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Merge every shard into one view (exact for the histograms, parallel
+    /// Welford for the streaming stats).
+    fn merged(&self) -> Inner {
+        let mut acc = Inner::default();
+        for s in &self.shards {
+            acc.merge_from(&s.lock().unwrap());
+        }
+        acc
+    }
+
     /// One-line summary for the CLI / examples.
     pub fn summary(&self) -> String {
-        let g = self.inner.lock().unwrap();
+        let g = self.merged();
         format!(
             "completed={} errors={} | total p50={:.2}ms p99={:.2}ms mean={:.2}ms | \
              exec p50={:.2}ms | queue p50={:.2}ms | avg_batch={:.2} pad_waste={:.0}%",
@@ -68,14 +126,14 @@ impl Metrics {
         )
     }
 
-    /// (p50, p99, mean) of end-to-end latency in seconds.
+    /// (p50, p99, mean) of end-to-end latency in seconds, over all shards.
     pub fn total_latency(&self) -> (f64, f64, f64) {
-        let g = self.inner.lock().unwrap();
+        let g = self.merged();
         (g.total_hist.p50(), g.total_hist.p99(), g.total_hist.mean())
     }
 
     pub fn mean_batch(&self) -> f64 {
-        self.inner.lock().unwrap().batch_sizes.mean()
+        self.merged().batch_sizes.mean()
     }
 }
 
@@ -102,5 +160,44 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("completed=100"));
         assert!(m.mean_batch() > 1.0);
+    }
+
+    #[test]
+    fn sharded_recording_merges_to_single_shard_view() {
+        let sharded = Metrics::with_shards(4);
+        let single = Metrics::with_shards(1);
+        assert_eq!(sharded.shard_count(), 4);
+        for i in 1..=200u64 {
+            let q = Duration::from_micros(i * 7);
+            let e = Duration::from_micros(i * 31);
+            let actual = (i % 8 + 1) as usize;
+            sharded.record_shard(i as usize % 4, q, e, 8, actual);
+            single.record(q, e, 8, actual);
+        }
+        assert_eq!(sharded.completed(), single.completed());
+        let (sp50, sp99, smean) = sharded.total_latency();
+        let (gp50, gp99, gmean) = single.total_latency();
+        // histogram merge is exact; streaming means agree to fp rounding
+        assert_eq!(sp50, gp50);
+        assert_eq!(sp99, gp99);
+        assert!((smean - gmean).abs() < 1e-12);
+        assert!((sharded.mean_batch() - single.mean_batch()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shard_index_wraps() {
+        let m = Metrics::with_shards(2);
+        // worker ids beyond the shard count must not panic
+        m.record_shard(7, Duration::from_micros(5), Duration::from_micros(9), 4, 2);
+        assert_eq!(m.completed(), 1);
+        assert!(m.mean_batch() > 0.0);
+    }
+
+    #[test]
+    fn zero_shards_clamps_to_one() {
+        let m = Metrics::with_shards(0);
+        assert_eq!(m.shard_count(), 1);
+        m.record(Duration::from_micros(1), Duration::from_micros(1), 1, 1);
+        assert_eq!(m.completed(), 1);
     }
 }

@@ -5,10 +5,16 @@
 //! coordinator is the serving shell that makes it deployable: requests
 //! arrive one item at a time, the batcher packs them into the bucketed
 //! batch sizes the AOT artifacts were lowered for (1/4/8/16), a worker
-//! executes the compiled PJRT model, and per-request latency is tracked
-//! through a lock-free-enough metrics layer.  Everything is std::thread —
-//! no async runtime exists in the offline vendor set, and a thread-per-
-//! worker design is the right shape for PJRT's blocking execute anyway.
+//! executes the compiled PJRT model (or one of the bit-exact software
+//! op-services), and per-request latency is tracked through per-worker
+//! metrics shards.  Everything is std::thread — no async runtime exists in
+//! the offline vendor set, and a thread-per-worker design is the right
+//! shape for PJRT's blocking execute anyway.
+//!
+//! The execution hot path is arena-style: every worker owns a packed input
+//! buffer, a staged output buffer, and the backend's opaque scratch, all
+//! reused across batches, so steady-state batch execution performs no heap
+//! allocation beyond handing each caller its owned `Response`.
 
 pub mod backend;
 pub mod batcher;
@@ -21,11 +27,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-pub use backend::{Backend, PjrtBackend, SoftwareSoftmaxBackend};
+pub use backend::{
+    Backend, BackendScratch, PjrtBackend, SoftwareLayerNormBackend, SoftwareSoftmaxBackend,
+};
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::Metrics;
 
-/// One inference request: a flat f32 item (e.g. one image).
+/// One inference request: a flat f32 item (e.g. one image or one row).
 pub struct Request {
     pub id: u64,
     pub input: Vec<f32>,
@@ -43,10 +51,22 @@ pub struct Response {
     pub batch_size: usize,
 }
 
+/// Outcome of a non-blocking submission attempt.
+pub enum TrySubmit {
+    /// Enqueued; the receiver yields the response.
+    Accepted(mpsc::Receiver<Response>),
+    /// The bounded queue was full; the input is handed back for retry.
+    Full(Vec<f32>),
+}
+
 struct Shared {
     queue: Mutex<std::collections::VecDeque<Request>>,
+    /// Signals workers: a request arrived (or shutdown began).
     available: Condvar,
+    /// Signals bounded-queue submitters: the queue drained (or shutdown).
+    space: Condvar,
     shutdown: AtomicBool,
+    queue_cap: Option<usize>,
 }
 
 /// Handle for submitting requests.
@@ -58,21 +78,59 @@ pub struct Client {
 }
 
 impl Client {
-    /// Submit one item; returns the receiver for its response.
+    /// Submit one item; returns the receiver for its response.  With a
+    /// bounded queue (`BatchPolicy::queue_cap`) this blocks until space
+    /// frees up, and errors if the coordinator shuts down first.
     pub fn submit(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        match self.enqueue(input, true)? {
+            TrySubmit::Accepted(rx) => Ok(rx),
+            TrySubmit::Full(_) => unreachable!("blocking enqueue never reports Full"),
+        }
+    }
+
+    /// Non-blocking submit: `Full(input)` hands the item back when the
+    /// bounded queue is at capacity (always accepts when unbounded).
+    pub fn try_submit(&self, input: Vec<f32>) -> Result<TrySubmit> {
+        self.enqueue(input, false)
+    }
+
+    fn enqueue(&self, input: Vec<f32>, block: bool) -> Result<TrySubmit> {
         anyhow::ensure!(input.len() == self.item_len, "item len {} != {}", input.len(), self.item_len);
+        let mut q = self.shared.queue.lock().unwrap();
+        // checked under the queue lock: workers only exit once the flag is
+        // set AND the queue is empty, so anything enqueued before the flag
+        // is still drained, and nothing can be enqueued after it
+        anyhow::ensure!(
+            !self.shared.shutdown.load(Ordering::SeqCst),
+            "coordinator is shutting down"
+        );
+        if let Some(cap) = self.shared.queue_cap {
+            while q.len() >= cap {
+                anyhow::ensure!(
+                    !self.shared.shutdown.load(Ordering::SeqCst),
+                    "coordinator is shutting down"
+                );
+                if !block {
+                    return Ok(TrySubmit::Full(input));
+                }
+                let (guard, _t) = self
+                    .shared
+                    .space
+                    .wait_timeout(q, Duration::from_millis(50))
+                    .unwrap();
+                q = guard;
+            }
+        }
         let (tx, rx) = mpsc::channel();
-        let req = Request {
+        q.push_back(Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             input,
             submitted: Instant::now(),
             resp: tx,
-        };
-        let mut q = self.shared.queue.lock().unwrap();
-        q.push_back(req);
+        });
         drop(q);
         self.shared.available.notify_one();
-        Ok(rx)
+        Ok(TrySubmit::Accepted(rx))
     }
 
     /// Blocking one-shot convenience.
@@ -91,17 +149,22 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start `n_workers` workers over a shared backend.
+    /// Start `n_workers` workers over a shared backend.  Each worker gets
+    /// its own scratch arena (`Backend::make_scratch`) and its own metrics
+    /// shard, so workers never contend outside the request queue itself.
     pub fn start(backend: Arc<dyn Backend>, policy: BatchPolicy, n_workers: usize) -> Coordinator {
+        let n_workers = n_workers.max(1);
         let shared = Arc::new(Shared {
             queue: Mutex::new(std::collections::VecDeque::new()),
             available: Condvar::new(),
+            space: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            queue_cap: policy.queue_cap,
         });
-        let metrics = Arc::new(Metrics::new());
+        let metrics = Arc::new(Metrics::with_shards(n_workers));
         let item_len = backend.item_input_len();
         let mut workers = Vec::new();
-        for wid in 0..n_workers.max(1) {
+        for wid in 0..n_workers {
             let sh = shared.clone();
             let be = backend.clone();
             let mt = metrics.clone();
@@ -115,27 +178,48 @@ impl Coordinator {
         Client { shared: self.shared.clone(), next_id: self.next_id.clone(), item_len: self.item_len }
     }
 
-    /// Graceful shutdown: drains nothing, drops pending requests' senders.
+    /// Graceful shutdown: **drains the queue** — every request already
+    /// accepted receives its response (or observes a send-side drop on
+    /// backend error) before the workers exit.  Submitters blocked on a
+    /// full bounded queue error out instead of enqueueing.
     pub fn shutdown(mut self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.available.notify_all();
+        self.shared.space.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
+/// Per-worker reusable buffers: the packed input, the staged output, the
+/// drained batch, and the backend's opaque scratch.  Everything keeps its
+/// capacity across batches, so the steady state allocates nothing here.
+struct WorkerArena {
+    inputs: Vec<f32>,
+    outputs: Vec<f32>,
+    batch: Vec<Request>,
+    scratch: BackendScratch,
+}
+
 fn worker_loop(
-    _wid: usize,
+    wid: usize,
     shared: Arc<Shared>,
     backend: Arc<dyn Backend>,
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
 ) {
     let batcher = Batcher::new(policy, backend.buckets().to_vec());
+    let mut arena = WorkerArena {
+        inputs: Vec::new(),
+        outputs: Vec::new(),
+        batch: Vec::new(),
+        scratch: backend.make_scratch(),
+    };
     loop {
-        // collect a batch (blocks until at least one request or shutdown)
-        let batch = {
+        // collect a batch (blocks until at least one request or shutdown);
+        // the bucket is picked exactly once, here, and passed down
+        let bucket = {
             let mut q = shared.queue.lock().unwrap();
             loop {
                 if shared.shutdown.load(Ordering::SeqCst) && q.is_empty() {
@@ -169,34 +253,49 @@ fn worker_loop(
             }
             let bucket = batcher.pick_bucket(q.len());
             let take = bucket.min(q.len());
-            q.drain(..take).collect::<Vec<_>>()
+            arena.batch.clear();
+            arena.batch.extend(q.drain(..take));
+            bucket
         };
-        if batch.is_empty() {
+        if arena.batch.is_empty() {
             continue;
         }
-        execute_batch(&*backend, &batcher, batch, &metrics);
+        // bounded-queue submitters may proceed now that the queue drained
+        shared.space.notify_all();
+        execute_batch(&*backend, bucket, &metrics, wid, &mut arena);
     }
 }
 
-fn execute_batch(backend: &dyn Backend, batcher: &Batcher, batch: Vec<Request>, metrics: &Metrics) {
-    let n = batch.len();
-    let bucket = batcher.pick_bucket(n);
+/// Execute one batch at the pre-picked `bucket` size out of the worker's
+/// arena.  Pack + zero-pad into `arena.inputs`, run the backend into
+/// `arena.outputs`, then hand each caller its slice.
+fn execute_batch(
+    backend: &dyn Backend,
+    bucket: usize,
+    metrics: &Metrics,
+    shard: usize,
+    arena: &mut WorkerArena,
+) {
+    let n = arena.batch.len();
+    debug_assert!(n <= bucket, "batch {n} exceeds bucket {bucket}");
     let item_in = backend.item_input_len();
     let item_out = backend.item_output_len();
-    // pack + zero-pad to the bucket shape
-    let mut inputs = vec![0f32; bucket * item_in];
-    for (i, r) in batch.iter().enumerate() {
-        inputs[i * item_in..(i + 1) * item_in].copy_from_slice(&r.input);
+    arena.inputs.clear();
+    arena.inputs.resize(bucket * item_in, 0f32);
+    for (i, r) in arena.batch.iter().enumerate() {
+        arena.inputs[i * item_in..(i + 1) * item_in].copy_from_slice(&r.input);
     }
+    arena.outputs.clear();
+    arena.outputs.resize(bucket * item_out, 0f32);
     let t0 = Instant::now();
-    let result = backend.run(bucket, &inputs);
+    let result = backend.run(bucket, &arena.inputs, &mut arena.outputs, &mut arena.scratch);
     let exec = t0.elapsed();
     match result {
-        Ok(out) => {
-            for (i, r) in batch.into_iter().enumerate() {
-                let slice = out[i * item_out..(i + 1) * item_out].to_vec();
+        Ok(()) => {
+            for (i, r) in arena.batch.drain(..).enumerate() {
+                let slice = arena.outputs[i * item_out..(i + 1) * item_out].to_vec();
                 let queue_time = t0.duration_since(r.submitted);
-                metrics.record(queue_time, exec, bucket, n);
+                metrics.record_shard(shard, queue_time, exec, bucket, n);
                 let _ = r.resp.send(Response {
                     id: r.id,
                     output: slice,
@@ -210,7 +309,7 @@ fn execute_batch(backend: &dyn Backend, batcher: &Batcher, batch: Vec<Request>, 
             metrics.record_error();
             // drop senders -> callers observe RecvError
             eprintln!("batch execution failed: {e:#}");
-            drop(batch);
+            arena.batch.clear();
         }
     }
 }
@@ -225,9 +324,17 @@ mod tests {
         Coordinator::start(be, policy, 1)
     }
 
+    fn policy(max_wait_ms: u64, max_batch: usize) -> BatchPolicy {
+        BatchPolicy {
+            max_wait: Duration::from_millis(max_wait_ms),
+            max_batch,
+            ..BatchPolicy::default()
+        }
+    }
+
     #[test]
     fn single_request_roundtrip() {
-        let co = start_sw(BatchPolicy { max_wait: Duration::from_millis(1), max_batch: 8 });
+        let co = start_sw(policy(1, 8));
         let cl = co.client();
         let x: Vec<f32> = (0..64).map(|i| i as f32 * 0.1).collect();
         let resp = cl.infer(x).unwrap();
@@ -239,7 +346,7 @@ mod tests {
 
     #[test]
     fn many_requests_all_answered() {
-        let co = start_sw(BatchPolicy { max_wait: Duration::from_millis(2), max_batch: 8 });
+        let co = start_sw(policy(2, 8));
         let cl = co.client();
         let rxs: Vec<_> = (0..50)
             .map(|i| cl.submit(vec![(i % 7) as f32; 64]).unwrap())
@@ -254,7 +361,7 @@ mod tests {
 
     #[test]
     fn batching_actually_batches() {
-        let co = start_sw(BatchPolicy { max_wait: Duration::from_millis(30), max_batch: 8 });
+        let co = start_sw(policy(30, 8));
         let cl = co.client();
         let rxs: Vec<_> = (0..8).map(|_| cl.submit(vec![1.0; 64]).unwrap()).collect();
         let sizes: Vec<usize> = rxs.into_iter().map(|rx| rx.recv().unwrap().batch_size).collect();
@@ -273,11 +380,124 @@ mod tests {
 
     #[test]
     fn shutdown_idempotent_under_load() {
-        let co = start_sw(BatchPolicy { max_wait: Duration::from_millis(1), max_batch: 4 });
+        let co = start_sw(policy(1, 4));
         let cl = co.client();
         for _ in 0..10 {
             let _ = cl.submit(vec![0.5; 64]);
         }
         co.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn shutdown_drains_pending_requests() {
+        // the documented contract: every accepted request is answered even
+        // when shutdown lands while the queue is deep and the batcher is
+        // still waiting for companions
+        let co = start_sw(policy(250, 8));
+        let cl = co.client();
+        let rxs: Vec<_> = (0..30).map(|_| cl.submit(vec![0.25; 64]).unwrap()).collect();
+        co.shutdown();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv().unwrap_or_else(|e| panic!("request {i} dropped: {e}"));
+            assert_eq!(r.output.len(), 64);
+        }
+    }
+
+    #[test]
+    fn multi_worker_answers_everything() {
+        let be = Arc::new(SoftwareSoftmaxBackend::new(64, vec![1, 4, 8]));
+        let co = Coordinator::start(be, policy(1, 8), 4);
+        let cl = co.client();
+        let rxs: Vec<_> = (0..120).map(|_| cl.submit(vec![0.5; 64]).unwrap()).collect();
+        for rx in rxs {
+            assert!(rx.recv().is_ok());
+        }
+        assert_eq!(co.metrics.completed(), 120);
+        assert_eq!(co.metrics.shard_count(), 4);
+        co.shutdown();
+    }
+
+    /// Slow test backend: copies input to output after a fixed delay.
+    struct SlowEcho {
+        l: usize,
+        buckets: Vec<usize>,
+        delay: Duration,
+    }
+
+    impl Backend for SlowEcho {
+        fn item_input_len(&self) -> usize {
+            self.l
+        }
+        fn item_output_len(&self) -> usize {
+            self.l
+        }
+        fn buckets(&self) -> &[usize] {
+            &self.buckets
+        }
+        fn run(
+            &self,
+            _bucket: usize,
+            inputs: &[f32],
+            out: &mut [f32],
+            _scratch: &mut BackendScratch,
+        ) -> Result<()> {
+            std::thread::sleep(self.delay);
+            out.copy_from_slice(inputs);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn bounded_queue_try_submit_reports_full() {
+        let be = Arc::new(SlowEcho { l: 4, buckets: vec![1], delay: Duration::from_millis(300) });
+        let co = Coordinator::start(
+            be,
+            BatchPolicy {
+                max_wait: Duration::ZERO,
+                max_batch: 1,
+                queue_cap: Some(1),
+            },
+            1,
+        );
+        let cl = co.client();
+        // first request: the worker picks it up and sleeps on it
+        let rx1 = cl.submit(vec![1.0; 4]).unwrap();
+        std::thread::sleep(Duration::from_millis(50));
+        // second request parks in the queue (cap 1 -> queue now full)
+        let rx2 = cl.submit(vec![2.0; 4]).unwrap();
+        // third must bounce with its input handed back
+        match cl.try_submit(vec![3.0; 4]).unwrap() {
+            TrySubmit::Full(input) => assert_eq!(input, vec![3.0; 4]),
+            TrySubmit::Accepted(_) => panic!("queue should be full"),
+        }
+        // blocking submit waits for space and eventually lands
+        let rx3 = cl.submit(vec![4.0; 4]).unwrap();
+        for rx in [rx1, rx2, rx3] {
+            assert!(rx.recv().is_ok());
+        }
+        co.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors() {
+        // the drain contract's flip side: once shutdown is initiated no new
+        // request can be accepted (it would never be drained)
+        let co = start_sw(policy(1, 8));
+        let cl = co.client();
+        co.shutdown();
+        assert!(cl.submit(vec![0.0; 64]).is_err());
+        assert!(cl.try_submit(vec![0.0; 64]).is_err());
+        assert!(cl.infer(vec![0.0; 64]).is_err());
+    }
+
+    #[test]
+    fn unbounded_try_submit_always_accepts() {
+        let co = start_sw(policy(1, 8));
+        let cl = co.client();
+        match cl.try_submit(vec![0.0; 64]).unwrap() {
+            TrySubmit::Accepted(rx) => assert!(rx.recv().is_ok()),
+            TrySubmit::Full(_) => panic!("unbounded queue can never be full"),
+        }
+        co.shutdown();
     }
 }

@@ -4,7 +4,7 @@
 //! sole experiment <fig1a|fig3|fig6a|fig6b|table1|table2|table3|compress-error|ablation|all>
 //!      [--artifacts DIR] [--samples N] [--batches 1,2,4,8,16]
 //! sole serve [--artifacts DIR] [--model deit_t] [--variant fp32_sole]
-//!      [--requests N] [--rate R] [--max-wait-ms W] [--workers K]
+//!      [--requests N] [--rate R] [--max-wait-ms W] [--workers K] [--queue-cap N]
 //! sole info [--artifacts DIR]
 //! ```
 
@@ -111,6 +111,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let rate = args.opt_f64("rate", 16.0); // req/s (Poisson arrivals)
     let max_wait = Duration::from_millis(args.opt_usize("max-wait-ms", 20) as u64);
     let workers = args.opt_usize("workers", 1);
+    let queue_cap = match args.opt_usize("queue-cap", 0) {
+        0 => None,
+        cap => Some(cap),
+    };
 
     let engine = Engine::open(&artifacts)?;
     println!("platform {}; loading {model}/{variant} buckets ...", engine.platform());
@@ -120,7 +124,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         (backend.buckets().to_vec(), backend.item_input_len())
     };
     println!("buckets: {buckets:?}");
-    let co = Coordinator::start(backend, BatchPolicy { max_wait, max_batch: 16 }, workers);
+    let co =
+        Coordinator::start(backend, BatchPolicy { max_wait, max_batch: 16, queue_cap }, workers);
     let client = co.client();
 
     // drive a Poisson-arrival open-loop workload from the eval set

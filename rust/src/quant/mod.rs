@@ -78,13 +78,20 @@ pub fn ptf_calibrate(samples: &[f32], channels: usize, alpha_max: u8) -> PtfCali
 
 /// PTF-quantize one row with a calibration.
 pub fn ptf_quantize(x: &[f32], cal: &PtfCalib) -> Vec<u8> {
-    x.iter()
-        .zip(&cal.alpha)
-        .map(|(&v, &a)| {
-            let scale = cal.s * 2f64.powi(a as i32);
-            ((v as f64 / scale).round() as i64 + cal.zp).clamp(0, 255) as u8
-        })
-        .collect()
+    let mut out = Vec::with_capacity(x.len());
+    ptf_quantize_into(x, cal, &mut out);
+    out
+}
+
+/// PTF-quantize one row into a reusable buffer — the coordinator's
+/// software layernorm backend uses this so steady-state quantization
+/// allocates nothing.
+pub fn ptf_quantize_into(x: &[f32], cal: &PtfCalib, out: &mut Vec<u8>) {
+    out.clear();
+    out.extend(x.iter().zip(&cal.alpha).map(|(&v, &a)| {
+        let scale = cal.s * 2f64.powi(a as i32);
+        ((v as f64 / scale).round() as i64 + cal.zp).clamp(0, 255) as u8
+    }));
 }
 
 #[cfg(test)]

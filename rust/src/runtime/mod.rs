@@ -7,166 +7,266 @@
 //! reassigns ids (see /opt/xla-example/README.md).  Python never runs at
 //! serving time: the weights arrive through `tensor::Bundle` and become
 //! PJRT literals once at load.
+//!
+//! The `xla` crate lives only in the vendored registry of the artifact
+//! build image, so execution is gated behind the `pjrt` cargo feature.
+//! Without it, an API-identical stub keeps the rest of the stack (manifest
+//! inspection, `find`, the software backends, every artifact-free test)
+//! building and running; only `Engine::load` / `LoadedModel::run_*` error.
 
 pub mod registry;
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
 
-use anyhow::{bail, Context, Result};
+    use anyhow::{bail, Context, Result};
 
-use crate::tensor::{Bundle, DType};
-use registry::{ArtifactMeta, Manifest};
+    use super::registry::{ArtifactMeta, Manifest};
+    use crate::tensor::{Bundle, DType};
 
-/// A compiled model plus its resident parameter literals.
-pub struct LoadedModel {
-    pub meta: ArtifactMeta,
-    exe: xla::PjRtLoadedExecutable,
-    /// Weight + calib literals in the exact parameter order the HLO wants.
-    params: Vec<xla::Literal>,
-}
-
-// The xla crate's handles are raw pointers into the PJRT C API; executions
-// are internally synchronized on the CPU client.  We additionally serialize
-// at the coordinator level (one worker owns one model).
-unsafe impl Send for LoadedModel {}
-unsafe impl Sync for LoadedModel {}
-
-impl LoadedModel {
-    /// Run on f32 input data (images / logits); returns flat f32 output.
-    pub fn run_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
-        let dims: Vec<i64> = self.meta.input_shape.iter().map(|&d| d as i64).collect();
-        let expect: usize = self.meta.input_shape.iter().product();
-        if input.len() != expect {
-            bail!("{}: input len {} != shape {:?}", self.meta.id, input.len(), self.meta.input_shape);
-        }
-        let lit = xla::Literal::vec1(input).reshape(&dims)?;
-        self.execute_with(lit)
+    /// A compiled model plus its resident parameter literals.
+    pub struct LoadedModel {
+        pub meta: ArtifactMeta,
+        exe: xla::PjRtLoadedExecutable,
+        /// Weight + calib literals in the exact parameter order the HLO wants.
+        params: Vec<xla::Literal>,
     }
 
-    /// Run on i32 input data (token ids).
-    pub fn run_i32(&self, input: &[i32]) -> Result<Vec<f32>> {
-        let dims: Vec<i64> = self.meta.input_shape.iter().map(|&d| d as i64).collect();
-        let expect: usize = self.meta.input_shape.iter().product();
-        if input.len() != expect {
-            bail!("{}: input len {} != shape {:?}", self.meta.id, input.len(), self.meta.input_shape);
-        }
-        let lit = xla::Literal::vec1(input).reshape(&dims)?;
-        self.execute_with(lit)
-    }
+    // The xla crate's handles are raw pointers into the PJRT C API; executions
+    // are internally synchronized on the CPU client.  We additionally serialize
+    // at the coordinator level (one worker owns one model).
+    unsafe impl Send for LoadedModel {}
+    unsafe impl Sync for LoadedModel {}
 
-    fn execute_with(&self, input: xla::Literal) -> Result<Vec<f32>> {
-        let mut args: Vec<&xla::Literal> = self.params.iter().collect();
-        args.push(&input);
-        let result = self.exe.execute::<&xla::Literal>(&args)?;
-        let lit = result[0][0].to_literal_sync()?;
-        let out = lit.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
-    }
-
-    pub fn output_len(&self) -> usize {
-        self.meta.output_shape.iter().product()
-    }
-
-    pub fn batch(&self) -> usize {
-        self.meta.batch
-    }
-}
-
-/// The engine: one PJRT CPU client + a cache of compiled models.
-pub struct Engine {
-    client: xla::PjRtClient,
-    root: PathBuf,
-    pub manifest: Manifest,
-    cache: Mutex<HashMap<String, std::sync::Arc<LoadedModel>>>,
-}
-
-unsafe impl Send for Engine {}
-unsafe impl Sync for Engine {}
-
-impl Engine {
-    /// Open the artifacts directory (expects `manifest.json` inside).
-    pub fn open(artifacts_dir: &Path) -> Result<Engine> {
-        let manifest = Manifest::load(artifacts_dir)
-            .with_context(|| format!("loading manifest from {}", artifacts_dir.display()))?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine {
-            client,
-            root: artifacts_dir.to_path_buf(),
-            manifest,
-            cache: Mutex::new(HashMap::new()),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load (compile + bind weights) one artifact by id; cached.
-    pub fn load(&self, id: &str) -> Result<std::sync::Arc<LoadedModel>> {
-        if let Some(m) = self.cache.lock().unwrap().get(id) {
-            return Ok(m.clone());
-        }
-        let meta = self
-            .manifest
-            .get(id)
-            .with_context(|| format!("artifact '{id}' not in manifest"))?
-            .clone();
-        let hlo_path = self.root.join(&meta.hlo);
-        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
-            .with_context(|| format!("parsing {}", hlo_path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).with_context(|| format!("compiling {id}"))?;
-
-        let params = self.build_params(&meta)?;
-        let model = std::sync::Arc::new(LoadedModel { meta, exe, params });
-        self.cache.lock().unwrap().insert(id.to_string(), model.clone());
-        Ok(model)
-    }
-
-    /// Assemble the parameter literals (weights then calib) in manifest
-    /// order from the tensor bundles.
-    fn build_params(&self, meta: &ArtifactMeta) -> Result<Vec<xla::Literal>> {
-        if meta.params.is_empty() {
-            return Ok(Vec::new());
-        }
-        let weights = Bundle::load(&self.root.join(meta.weights.as_ref().context("weights")?))?;
-        let calib = match &meta.calib {
-            Some(c) if meta.params.iter().any(|p| p.starts_with("calib/")) => {
-                Some(Bundle::load(&self.root.join(c))?)
+    impl LoadedModel {
+        /// Run on f32 input data (images / logits); returns flat f32 output.
+        pub fn run_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
+            let dims: Vec<i64> = self.meta.input_shape.iter().map(|&d| d as i64).collect();
+            let expect: usize = self.meta.input_shape.iter().product();
+            if input.len() != expect {
+                bail!("{}: input len {} != shape {:?}", self.meta.id, input.len(), self.meta.input_shape);
             }
-            _ => None,
-        };
-        let mut out = Vec::with_capacity(meta.params.len());
-        for name in &meta.params {
-            let t = if name.starts_with("calib/") {
-                let cb = calib.as_ref().with_context(|| format!("calib bundle for {name}"))?;
-                cb.get(name)?
-            } else {
-                weights.get(name)?
+            let lit = xla::Literal::vec1(input).reshape(&dims)?;
+            self.execute_with(lit)
+        }
+
+        /// Run on i32 input data (token ids).
+        pub fn run_i32(&self, input: &[i32]) -> Result<Vec<f32>> {
+            let dims: Vec<i64> = self.meta.input_shape.iter().map(|&d| d as i64).collect();
+            let expect: usize = self.meta.input_shape.iter().product();
+            if input.len() != expect {
+                bail!("{}: input len {} != shape {:?}", self.meta.id, input.len(), self.meta.input_shape);
+            }
+            let lit = xla::Literal::vec1(input).reshape(&dims)?;
+            self.execute_with(lit)
+        }
+
+        fn execute_with(&self, input: xla::Literal) -> Result<Vec<f32>> {
+            let mut args: Vec<&xla::Literal> = self.params.iter().collect();
+            args.push(&input);
+            let result = self.exe.execute::<&xla::Literal>(&args)?;
+            let lit = result[0][0].to_literal_sync()?;
+            let out = lit.to_tuple1()?;
+            Ok(out.to_vec::<f32>()?)
+        }
+
+        pub fn output_len(&self) -> usize {
+            self.meta.output_shape.iter().product()
+        }
+
+        pub fn batch(&self) -> usize {
+            self.meta.batch
+        }
+    }
+
+    /// The engine: one PJRT CPU client + a cache of compiled models.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        root: PathBuf,
+        pub manifest: Manifest,
+        cache: Mutex<HashMap<String, std::sync::Arc<LoadedModel>>>,
+    }
+
+    unsafe impl Send for Engine {}
+    unsafe impl Sync for Engine {}
+
+    impl Engine {
+        /// Open the artifacts directory (expects `manifest.json` inside).
+        pub fn open(artifacts_dir: &Path) -> Result<Engine> {
+            let manifest = Manifest::load(artifacts_dir)
+                .with_context(|| format!("loading manifest from {}", artifacts_dir.display()))?;
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Engine {
+                client,
+                root: artifacts_dir.to_path_buf(),
+                manifest,
+                cache: Mutex::new(HashMap::new()),
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load (compile + bind weights) one artifact by id; cached.
+        pub fn load(&self, id: &str) -> Result<std::sync::Arc<LoadedModel>> {
+            if let Some(m) = self.cache.lock().unwrap().get(id) {
+                return Ok(m.clone());
+            }
+            let meta = self
+                .manifest
+                .get(id)
+                .with_context(|| format!("artifact '{id}' not in manifest"))?
+                .clone();
+            let hlo_path = self.root.join(&meta.hlo);
+            let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+                .with_context(|| format!("parsing {}", hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).with_context(|| format!("compiling {id}"))?;
+
+            let params = self.build_params(&meta)?;
+            let model = std::sync::Arc::new(LoadedModel { meta, exe, params });
+            self.cache.lock().unwrap().insert(id.to_string(), model.clone());
+            Ok(model)
+        }
+
+        /// Assemble the parameter literals (weights then calib) in manifest
+        /// order from the tensor bundles.
+        fn build_params(&self, meta: &ArtifactMeta) -> Result<Vec<xla::Literal>> {
+            if meta.params.is_empty() {
+                return Ok(Vec::new());
+            }
+            let weights = Bundle::load(&self.root.join(meta.weights.as_ref().context("weights")?))?;
+            let calib = match &meta.calib {
+                Some(c) if meta.params.iter().any(|p| p.starts_with("calib/")) => {
+                    Some(Bundle::load(&self.root.join(c))?)
+                }
+                _ => None,
             };
-            if t.dtype != DType::F32 {
-                bail!("{name}: expected f32 params, got {:?}", t.dtype);
+            let mut out = Vec::with_capacity(meta.params.len());
+            for name in &meta.params {
+                let t = if name.starts_with("calib/") {
+                    let cb = calib.as_ref().with_context(|| format!("calib bundle for {name}"))?;
+                    cb.get(name)?
+                } else {
+                    weights.get(name)?
+                };
+                if t.dtype != DType::F32 {
+                    bail!("{name}: expected f32 params, got {:?}", t.dtype);
+                }
+                let vals = t.as_f32()?;
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(&vals).reshape(&dims)?;
+                out.push(lit);
             }
-            let vals = t.as_f32()?;
-            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(&vals).reshape(&dims)?;
-            out.push(lit);
+            Ok(out)
         }
-        Ok(out)
-    }
 
-    /// Artifact ids for a given (model, variant) family.
-    pub fn find(&self, model: &str, variant: &str) -> Vec<String> {
-        let mut v: Vec<String> = self
-            .manifest
-            .entries
-            .values()
-            .filter(|m| m.model.as_deref() == Some(model) && m.variant.as_deref() == Some(variant))
-            .map(|m| m.id.clone())
-            .collect();
-        v.sort();
-        v
+        /// Artifact ids for a given (model, variant) family.
+        pub fn find(&self, model: &str, variant: &str) -> Vec<String> {
+            let mut v: Vec<String> = self
+                .manifest
+                .entries
+                .values()
+                .filter(|m| m.model.as_deref() == Some(model) && m.variant.as_deref() == Some(variant))
+                .map(|m| m.id.clone())
+                .collect();
+            v.sort();
+            v
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_impl {
+    use std::path::{Path, PathBuf};
+
+    use anyhow::{Context, Result};
+
+    use super::registry::{ArtifactMeta, Manifest};
+
+    /// Artifact metadata handle; execution requires the `pjrt` feature.
+    pub struct LoadedModel {
+        pub meta: ArtifactMeta,
+    }
+
+    impl LoadedModel {
+        pub fn run_f32(&self, _input: &[f32]) -> Result<Vec<f32>> {
+            anyhow::bail!(
+                "cannot execute artifact '{}': built without the `pjrt` feature \
+                 (the xla crate is only vendored in the artifact-build image)",
+                self.meta.id
+            )
+        }
+
+        pub fn run_i32(&self, _input: &[i32]) -> Result<Vec<f32>> {
+            anyhow::bail!(
+                "cannot execute artifact '{}': built without the `pjrt` feature \
+                 (the xla crate is only vendored in the artifact-build image)",
+                self.meta.id
+            )
+        }
+
+        pub fn output_len(&self) -> usize {
+            self.meta.output_shape.iter().product()
+        }
+
+        pub fn batch(&self) -> usize {
+            self.meta.batch
+        }
+    }
+
+    /// Manifest-only engine: inspection works, execution errors.
+    pub struct Engine {
+        root: PathBuf,
+        pub manifest: Manifest,
+    }
+
+    impl Engine {
+        /// Open the artifacts directory (expects `manifest.json` inside).
+        pub fn open(artifacts_dir: &Path) -> Result<Engine> {
+            let manifest = Manifest::load(artifacts_dir)
+                .with_context(|| format!("loading manifest from {}", artifacts_dir.display()))?;
+            Ok(Engine { root: artifacts_dir.to_path_buf(), manifest })
+        }
+
+        pub fn platform(&self) -> String {
+            "stub (build with --features pjrt to execute artifacts)".to_string()
+        }
+
+        /// Resolve an artifact id; always errors (no PJRT client available).
+        pub fn load(&self, id: &str) -> Result<std::sync::Arc<LoadedModel>> {
+            let meta = self
+                .manifest
+                .get(id)
+                .with_context(|| format!("artifact '{id}' not in manifest"))?
+                .clone();
+            anyhow::bail!(
+                "cannot compile artifact '{}' from {}: built without the `pjrt` feature",
+                meta.id,
+                self.root.display()
+            )
+        }
+
+        /// Artifact ids for a given (model, variant) family.
+        pub fn find(&self, model: &str, variant: &str) -> Vec<String> {
+            let mut v: Vec<String> = self
+                .manifest
+                .entries
+                .values()
+                .filter(|m| m.model.as_deref() == Some(model) && m.variant.as_deref() == Some(variant))
+                .map(|m| m.id.clone())
+                .collect();
+            v.sort();
+            v
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{Engine, LoadedModel};
+#[cfg(not(feature = "pjrt"))]
+pub use stub_impl::{Engine, LoadedModel};

@@ -157,17 +157,25 @@ impl E2Softmax {
         }
     }
 
-    /// Quantize real logits to codes and run; convenience for the
-    /// coordinator and the accuracy cross-checks.
+    /// Quantize real logits to codes and run; convenience for the accuracy
+    /// cross-checks.  The serving path uses `quantize_logits_into` +
+    /// `forward_row_f32` instead, which allocate nothing at steady state.
     pub fn forward_logits(&self, x: &[f32]) -> Vec<f64> {
-        let scale = (1u64 << self.cfg.e) as f64;
-        let xmax = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
-        let q: Vec<i64> = x
-            .iter()
-            .map(|&v| (((v as f64 - xmax) * scale).round() as i64).clamp(-255, 0))
-            .collect();
+        let mut q = Vec::with_capacity(x.len());
+        quantize_logits_into(x, self.cfg.e, &mut q);
         self.forward_introspect(&q).out_f64()
     }
+}
+
+/// Quantize real logits to the integer code grid (row-max referenced,
+/// scale 2^-e, clamped to the 8-bit code range) into a reusable buffer.
+/// Shared by `forward_logits` and the coordinator's software backend so
+/// both paths see bit-identical codes.
+pub fn quantize_logits_into(x: &[f32], e: u32, out: &mut Vec<i64>) {
+    let scale = (1u64 << e) as f64;
+    let xmax = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    out.clear();
+    out.extend(x.iter().map(|&v| (((v as f64 - xmax) * scale).round() as i64).clamp(-255, 0)));
 }
 
 /// Exact f64 softmax (baseline for error measurements).
@@ -256,20 +264,83 @@ mod tests {
         assert!(worst < 0.16, "worst {worst}");
     }
 
+    fn assert_hot_path_matches(n: usize, chunk: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let q = codes(&mut rng, n);
+        let sm = E2Softmax::new(E2SoftmaxConfig { e: DEFAULT_E_TEST, chunk });
+        let gold = sm.forward_introspect(&q);
+        let mut out = vec![0f32; n];
+        let mut scratch = E2Scratch::default();
+        sm.forward_row_f32(&q, &mut out, &mut scratch);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v as f64, q23_to_f64(gold.out_q23[i]), "n={n} chunk={chunk} i={i}");
+        }
+        // reuse the same scratch for a second row: warm buffers must not
+        // leak state between rows
+        let q2 = codes(&mut rng, n);
+        let gold2 = sm.forward_introspect(&q2);
+        sm.forward_row_f32(&q2, &mut out, &mut scratch);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v as f64, q23_to_f64(gold2.out_q23[i]), "reuse n={n} chunk={chunk} i={i}");
+        }
+    }
+
+    const DEFAULT_E_TEST: u32 = 4;
+
     #[test]
     fn hot_path_matches_introspect() {
+        // random sweep over sizes and chunk widths (1 = Algorithm 1
+        // verbatim, 32 = the unit's vector size, 7 = an uneven tail slice)
         check("e2-hotpath", 50, 41, |rng| {
             let n = size(rng, 300);
+            let chunk = [1usize, 7, 32][rng.range_usize(0, 3)];
             let q = codes(rng, n);
-            let sm = E2Softmax::new(E2SoftmaxConfig::default());
+            let sm = E2Softmax::new(E2SoftmaxConfig { e: 4, chunk });
             let gold = sm.forward_introspect(&q);
             let mut out = vec![0f32; n];
             let mut scratch = E2Scratch::default();
             sm.forward_row_f32(&q, &mut out, &mut scratch);
             for (i, &v) in out.iter().enumerate() {
-                assert_eq!(v as f64, q23_to_f64(gold.out_q23[i]));
+                assert_eq!(v as f64, q23_to_f64(gold.out_q23[i]), "chunk={chunk}");
             }
         });
+    }
+
+    #[test]
+    fn hot_path_matches_introspect_edge_shapes() {
+        // the paper-edge shapes the random sweep can miss: single-element
+        // rows, chunk=1, and rows beyond the unit's 1024-element buffer
+        for &(n, chunk) in &[
+            (1usize, 1usize),
+            (1, 32),
+            (2, 1),
+            (31, 32),
+            (33, 32),
+            (300, 1),
+            (1024, 32),
+            (1025, 32),
+            (1500, 32),
+            (2048, 1),
+        ] {
+            assert_hot_path_matches(n, chunk, 0x5150 + n as u64);
+        }
+    }
+
+    #[test]
+    fn quantize_into_matches_forward_logits_codes() {
+        let mut rng = Rng::new(13);
+        let x: Vec<f32> = (0..64).map(|_| (rng.normal() * 2.0) as f32).collect();
+        let sm = E2Softmax::new(E2SoftmaxConfig::default());
+        let mut q = Vec::new();
+        quantize_logits_into(&x, sm.cfg.e, &mut q);
+        assert_eq!(q.len(), x.len());
+        assert!(q.iter().all(|&v| (-255..=0).contains(&v)));
+        // the max logit quantizes to code 0
+        assert!(q.contains(&0));
+        // the full path through forward_logits agrees with quantize+introspect
+        let via_logits = sm.forward_logits(&x);
+        let via_codes = sm.forward_introspect(&q).out_f64();
+        assert_eq!(via_logits, via_codes);
     }
 
     #[test]

@@ -8,7 +8,7 @@ pub mod e2;
 pub mod log2exp;
 
 pub use aldivision::{aldivision, AldivOut};
-pub use e2::{E2Softmax, E2SoftmaxConfig, E2SoftmaxOut};
+pub use e2::{quantize_logits_into, E2Scratch, E2Softmax, E2SoftmaxConfig, E2SoftmaxOut};
 pub use log2exp::log2exp;
 
 /// Contract constants shared with python/compile/kernels/ref.py — see

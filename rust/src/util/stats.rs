@@ -47,6 +47,25 @@ impl Streaming {
     pub fn max(&self) -> f64 {
         self.max
     }
+
+    /// Fold another accumulator into this one (Chan et al. parallel
+    /// Welford) — the metrics shard-merge path.
+    pub fn merge(&mut self, other: &Streaming) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.mean += d * other.n as f64 / n as f64;
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
 }
 
 /// Log-bucketed latency histogram: buckets are `base * 2^(i/4)` seconds —
@@ -117,6 +136,16 @@ impl LatencyHist {
     pub fn p99(&self) -> f64 {
         self.quantile(0.99)
     }
+
+    /// Fold another histogram into this one (same fixed bucketing, so the
+    /// merge is exact) — the metrics shard-merge path.
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+    }
 }
 
 #[cfg(test)]
@@ -156,5 +185,55 @@ mod tests {
         let h = LatencyHist::new();
         assert_eq!(h.quantile(0.5), 0.0);
         assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn streaming_merge_matches_single_pass() {
+        let xs: Vec<f64> = (0..200).map(|i| (i as f64 * 0.37).sin() * 5.0 + 2.0).collect();
+        let mut whole = Streaming::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        let mut a = Streaming::new();
+        let mut b = Streaming::new();
+        for (i, &x) in xs.iter().enumerate() {
+            if i % 3 == 0 {
+                a.push(x);
+            } else {
+                b.push(x);
+            }
+        }
+        let mut merged = Streaming::new();
+        merged.merge(&a);
+        merged.merge(&b);
+        assert_eq!(merged.count(), whole.count());
+        assert!((merged.mean() - whole.mean()).abs() < 1e-9);
+        assert!((merged.var() - whole.var()).abs() < 1e-9);
+        assert_eq!(merged.min(), whole.min());
+        assert_eq!(merged.max(), whole.max());
+        // merging an empty accumulator is a no-op
+        merged.merge(&Streaming::new());
+        assert_eq!(merged.count(), whole.count());
+    }
+
+    #[test]
+    fn hist_merge_is_exact() {
+        let mut whole = LatencyHist::new();
+        let mut a = LatencyHist::new();
+        let mut b = LatencyHist::new();
+        for i in 1..=1000 {
+            let v = i as f64 * 1e-5;
+            whole.record(v);
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.p50(), whole.p50());
+        assert_eq!(a.p99(), whole.p99());
+        assert!((a.mean() - whole.mean()).abs() < 1e-12);
     }
 }

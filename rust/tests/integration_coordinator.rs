@@ -1,13 +1,22 @@
-//! Integration: the serving coordinator over the real PJRT backend
-//! (bucketed deit_t fp32_sole artifacts).  Skips without artifacts.
+//! Integration: the serving coordinator end to end — over the software
+//! op-services (always run, pinned bit-exact against direct kernel
+//! invocation) and over the real PJRT backend (bucketed deit_t fp32_sole
+//! artifacts; skips without artifacts).
 
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
-use sole::coordinator::{Backend, BatchPolicy, Coordinator, PjrtBackend};
+use sole::coordinator::{
+    Backend, BatchPolicy, Coordinator, PjrtBackend, SoftwareLayerNormBackend,
+    SoftwareSoftmaxBackend,
+};
+use sole::layernorm::{config::DEFAULT_ZP, AiLayerNorm};
+use sole::quant::{ptf_quantize_into, PtfCalib};
 use sole::runtime::Engine;
+use sole::softmax::{quantize_logits_into, E2Scratch, E2Softmax, E2SoftmaxConfig};
 use sole::tensor::Bundle;
+use sole::util::rng::Rng;
 
 fn artifacts_dir() -> Option<PathBuf> {
     let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -18,6 +27,132 @@ fn artifacts_dir() -> Option<PathBuf> {
         None
     }
 }
+
+fn policy(max_wait_ms: u64, max_batch: usize) -> BatchPolicy {
+    BatchPolicy {
+        max_wait: Duration::from_millis(max_wait_ms),
+        max_batch,
+        ..BatchPolicy::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Software op-services through the coordinator (no artifacts needed)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn softmax_coordinator_matches_direct_kernel() {
+    // responses routed through submit -> batcher -> worker arena must be
+    // bit-identical to quantize + forward_row_f32 called directly
+    let l = 96;
+    let be = Arc::new(SoftwareSoftmaxBackend::new(l, vec![1, 4, 8]));
+    let co = Coordinator::start(be, policy(5, 8), 4);
+    let cl = co.client();
+    let mut rng = Rng::new(17);
+    let rows: Vec<Vec<f32>> = (0..48)
+        .map(|_| {
+            let mut r = vec![0f32; l];
+            rng.fill_normal(&mut r, 0.0, 2.0);
+            r
+        })
+        .collect();
+    let rxs: Vec<_> = rows.iter().map(|r| cl.submit(r.clone()).unwrap()).collect();
+    let sm = E2Softmax::new(E2SoftmaxConfig::default());
+    let mut codes = Vec::new();
+    let mut scratch = E2Scratch::default();
+    let mut want = vec![0f32; l];
+    for (i, (row, rx)) in rows.iter().zip(rxs).enumerate() {
+        let resp = rx.recv().unwrap();
+        quantize_logits_into(row, sm.cfg.e, &mut codes);
+        sm.forward_row_f32(&codes, &mut want, &mut scratch);
+        assert_eq!(resp.output, want, "request {i}");
+    }
+    assert_eq!(co.metrics.completed(), 48);
+    assert_eq!(co.metrics.errors(), 0);
+    co.shutdown();
+}
+
+#[test]
+fn layernorm_coordinator_matches_direct_kernel() {
+    let c = 192;
+    let cal = PtfCalib { alpha: vec![0u8; c], s: 1.0 / 32.0, zp: DEFAULT_ZP };
+    let gamma = vec![1f32; c];
+    let beta = vec![0f32; c];
+    let be = Arc::new(
+        SoftwareLayerNormBackend::with_calibration(
+            c,
+            vec![1, 4, 8],
+            cal.clone(),
+            gamma.clone(),
+            beta.clone(),
+        )
+        .unwrap(),
+    );
+    let co = Coordinator::start(be, policy(5, 8), 4);
+    let cl = co.client();
+    let mut rng = Rng::new(23);
+    let rows: Vec<Vec<f32>> = (0..48)
+        .map(|_| {
+            let mut r = vec![0f32; c];
+            rng.fill_normal(&mut r, 0.2, 1.5);
+            r
+        })
+        .collect();
+    let rxs: Vec<_> = rows.iter().map(|r| cl.submit(r.clone()).unwrap()).collect();
+    let ln = AiLayerNorm { zp: cal.zp };
+    let mut codes = Vec::new();
+    let mut want = vec![0f32; c];
+    for (i, (row, rx)) in rows.iter().zip(rxs).enumerate() {
+        let resp = rx.recv().unwrap();
+        ptf_quantize_into(row, &cal, &mut codes);
+        ln.forward_row_f32(&codes, &cal.alpha, &gamma, &beta, &mut want);
+        assert_eq!(resp.output, want, "request {i}");
+    }
+    assert_eq!(co.metrics.completed(), 48);
+    co.shutdown();
+}
+
+#[test]
+fn both_operators_serve_through_the_same_batcher_shape() {
+    // the coordinator is operator-agnostic: the same policy drives either
+    // op-service and metrics stay coherent
+    let sm: Arc<dyn Backend> = Arc::new(SoftwareSoftmaxBackend::new(64, vec![1, 4, 8]));
+    let ln: Arc<dyn Backend> = Arc::new(SoftwareLayerNormBackend::new(64, vec![1, 4, 8]));
+    for be in [sm, ln] {
+        let co = Coordinator::start(be, policy(2, 8), 2);
+        let cl = co.client();
+        let rxs: Vec<_> = (0..40).map(|_| cl.submit(vec![0.3; 64]).unwrap()).collect();
+        for rx in rxs {
+            assert_eq!(rx.recv().unwrap().output.len(), 64);
+        }
+        assert_eq!(co.metrics.completed(), 40);
+        co.shutdown();
+    }
+}
+
+#[test]
+fn metrics_shards_merge_under_four_workers() {
+    let be = Arc::new(SoftwareSoftmaxBackend::new(32, vec![1, 2, 4, 8]));
+    let co = Coordinator::start(be, policy(1, 8), 4);
+    assert_eq!(co.metrics.shard_count(), 4);
+    let cl = co.client();
+    let rxs: Vec<_> = (0..200).map(|_| cl.submit(vec![0.1; 32]).unwrap()).collect();
+    for rx in rxs {
+        rx.recv().unwrap();
+    }
+    assert_eq!(co.metrics.completed(), 200);
+    // the merged view must account for every request recorded across shards
+    let (p50, p99, mean) = co.metrics.total_latency();
+    assert!(p50 > 0.0 && p99 >= p50 && mean > 0.0, "p50={p50} p99={p99} mean={mean}");
+    assert!(co.metrics.mean_batch() >= 1.0);
+    let s = co.metrics.summary();
+    assert!(s.contains("completed=200"), "{s}");
+    co.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend (skips without artifacts)
+// ---------------------------------------------------------------------------
 
 #[test]
 fn serves_images_through_bucketed_artifacts() {
@@ -30,11 +165,7 @@ fn serves_images_through_bucketed_artifacts() {
     let item = backend.item_input_len();
     assert_eq!(item, 32 * 32);
 
-    let co = Coordinator::start(
-        backend,
-        BatchPolicy { max_wait: Duration::from_millis(10), max_batch: 16 },
-        1,
-    );
+    let co = Coordinator::start(backend, policy(10, 16), 1);
     let cl = co.client();
 
     let data = Bundle::load(&dir.join("data/cv_eval")).unwrap();
@@ -75,11 +206,7 @@ fn single_request_uses_small_bucket() {
     let engine = Engine::open(&dir).unwrap();
     let backend = Arc::new(PjrtBackend::from_family(&engine, "deit_t", "fp32_sole").unwrap());
     let item = backend.item_input_len();
-    let co = Coordinator::start(
-        backend,
-        BatchPolicy { max_wait: Duration::from_millis(1), max_batch: 16 },
-        1,
-    );
+    let co = Coordinator::start(backend, policy(1, 16), 1);
     let cl = co.client();
     let r = cl.infer(vec![0.25; item]).unwrap();
     assert_eq!(r.batch_size, 1);

@@ -20,7 +20,7 @@ fn batcher_bucket_always_covers_or_caps() {
         buckets.push(1);
         let max_batch = rng.range_usize(1, 64);
         let b = Batcher::new(
-            BatchPolicy { max_wait: Duration::from_millis(5), max_batch },
+            BatchPolicy { max_wait: Duration::from_millis(5), max_batch, ..BatchPolicy::default() },
             buckets.clone(),
         );
         let n = rng.range_usize(1, 128);
@@ -37,7 +37,11 @@ fn batcher_bucket_always_covers_or_caps() {
 fn batcher_dispatch_monotone_in_time_and_queue() {
     check("dispatch-monotone", 200, 2, |rng| {
         let b = Batcher::new(
-            BatchPolicy { max_wait: Duration::from_millis(rng.range_i64(1, 50) as u64), max_batch: 16 },
+            BatchPolicy {
+                max_wait: Duration::from_millis(rng.range_i64(1, 50) as u64),
+                max_batch: 16,
+                ..BatchPolicy::default()
+            },
             vec![1, 4, 8, 16],
         );
         let n = rng.range_usize(1, 32);
@@ -61,7 +65,11 @@ fn coordinator_routes_outputs_to_correct_requests() {
     // the argmax (monotone), so response routing errors would be visible.
     let l = 64;
     let be = Arc::new(SoftwareSoftmaxBackend::new(l, vec![1, 4, 8]));
-    let co = Coordinator::start(be, BatchPolicy { max_wait: Duration::from_millis(3), max_batch: 8 }, 2);
+    let co = Coordinator::start(
+        be,
+        BatchPolicy { max_wait: Duration::from_millis(3), max_batch: 8, ..BatchPolicy::default() },
+        2,
+    );
     let cl = co.client();
     let rxs: Vec<_> = (0..64)
         .map(|i| {
@@ -93,7 +101,11 @@ fn coordinator_conserves_requests_under_concurrency() {
         let workers = rng.range_usize(1, 4);
         let co = Coordinator::start(
             be,
-            BatchPolicy { max_wait: Duration::from_millis(rng.range_i64(0, 4) as u64), max_batch: 8 },
+            BatchPolicy {
+                max_wait: Duration::from_millis(rng.range_i64(0, 4) as u64),
+                max_batch: 8,
+                ..BatchPolicy::default()
+            },
             workers,
         );
         let cl = co.client();
@@ -120,9 +132,9 @@ fn backend_padding_never_leaks_into_real_outputs() {
     let mut rows = vec![0f32; 8 * l];
     let mut rng = sole::util::rng::Rng::new(9);
     rng.fill_normal(&mut rows[..3 * l], 0.0, 2.0);
-    let out8 = be.run(8, &rows).unwrap();
+    let out8 = be.run_alloc(8, &rows).unwrap();
     for r in 0..3 {
-        let single = be.run(1, &rows[r * l..(r + 1) * l]).unwrap();
+        let single = be.run_alloc(1, &rows[r * l..(r + 1) * l]).unwrap();
         assert_eq!(&out8[r * l..(r + 1) * l], &single[..], "row {r}");
     }
 }
