@@ -11,8 +11,8 @@ use std::time::{Duration, Instant};
 use sole::coordinator::{
     Backend, BatchPolicy, Coordinator, SoftwareLayerNormBackend, SoftwareSoftmaxBackend,
 };
-use sole::softmax::{E2Softmax, E2SoftmaxConfig};
-use sole::util::bench::{bench, report};
+use sole::softmax::{quantize_logits_batch_into, E2Scratch, E2Softmax, E2SoftmaxConfig};
+use sole::util::bench::{bench, quick_mode, report};
 
 /// Counting allocator: every heap allocation bumps a global counter, so the
 /// steady-state audit below can assert "0 allocs per batch" empirically
@@ -72,7 +72,7 @@ fn alloc_audit() {
     );
 
     // arena path: the coordinator's actual steady state — reused codes
-    // buffer, E2Scratch, and output staging
+    // buffer, E2Scratch, and output staging, one batch-kernel call per run
     let mut scratch = be.make_scratch();
     let mut out = vec![0f32; BUCKET * L];
     let arena = count_allocs(
@@ -81,17 +81,32 @@ fn alloc_audit() {
         },
         100,
     );
+
+    // raw batch kernel, below the backend layer: packed quantization +
+    // forward_batch_f32 against a reused scratch must also be alloc-free
+    let sm2 = E2Softmax::new(E2SoftmaxConfig::default());
+    let mut codes: Vec<i64> = Vec::new();
+    let mut e2 = E2Scratch::default();
+    let kernel = count_allocs(
+        || {
+            quantize_logits_batch_into(&inputs, L, sm2.cfg().e, &mut codes);
+            sm2.forward_batch_f32(&codes, L, &mut out, &mut e2);
+        },
+        100,
+    );
     std::hint::black_box(sink);
 
     println!(
-        "  legacy forward_logits path: {legacy:>6} allocs / 100 batches ({:.1} per row)",
+        "  legacy forward_logits path:  {legacy:>6} allocs / 100 batches ({:.1} per row)",
         legacy as f64 / (100.0 * BUCKET as f64)
     );
     println!(
-        "  arena forward_row_f32 path: {arena:>6} allocs / 100 batches ({:.1} per row)",
+        "  arena batch-kernel path:     {arena:>6} allocs / 100 batches ({:.1} per row)",
         arena as f64 / (100.0 * BUCKET as f64)
     );
+    println!("  raw forward_batch_f32 path:  {kernel:>6} allocs / 100 batches");
     assert_eq!(arena, 0, "steady-state backend execution must not allocate");
+    assert_eq!(kernel, 0, "steady-state batch kernel must not allocate");
 
     // same audit for the layernorm service
     let ln = SoftwareLayerNormBackend::new(L, vec![1, 4, 8, 16]);
@@ -107,8 +122,11 @@ fn alloc_audit() {
 }
 
 fn throughput_sweep() {
+    // quick mode (CI smoke): shrink the request counts, keep every path
+    let n = if quick_mode() { 32 } else { 256 };
     println!("\nthroughput — routing + batching overhead (software softmax backend)");
-    for &(wait_ms, workers, nreq) in &[(0u64, 1usize, 256usize), (2, 1, 256), (2, 2, 256), (2, 4, 256), (5, 2, 256)] {
+    let sweeps = [(0u64, 1usize, n), (2, 1, n), (2, 2, n), (2, 4, n), (5, 2, n)];
+    for &(wait_ms, workers, nreq) in &sweeps {
         let be = Arc::new(SoftwareSoftmaxBackend::new(128, vec![1, 4, 8, 16]));
         let co = Coordinator::start(
             be,
@@ -143,14 +161,14 @@ fn throughput_sweep() {
     );
     let cl = co.client();
     let t0 = Instant::now();
-    let rxs: Vec<_> = (0..256).map(|_| cl.submit(vec![0.4; 192]).unwrap()).collect();
+    let rxs: Vec<_> = (0..n).map(|_| cl.submit(vec![0.4; 192]).unwrap()).collect();
     for rx in rxs {
         rx.recv().unwrap();
     }
     let dt = t0.elapsed();
     println!(
-        "layernorm: 256 reqs in {dt:?} ({:.0} req/s), {}",
-        256.0 / dt.as_secs_f64(),
+        "layernorm: {n} reqs in {dt:?} ({:.0} req/s), {}",
+        n as f64 / dt.as_secs_f64(),
         co.metrics.summary()
     );
     co.shutdown();

@@ -1,0 +1,319 @@
+//! Old-vs-new operator kernel throughput at the paper's shapes, with a
+//! machine-readable record (`BENCH_kernels.json`) so every future PR has a
+//! perf trajectory to beat.
+//!
+//! The "legacy" implementations are verbatim copies of the pre-planar row
+//! kernels (per-element `log2exp` shift-add calls, push-based scratch, f64
+//! stage 2 in AILayerNorm), kept here so the recorded speedup is measured
+//! against real code, not a strawman.  Correctness of the comparison is
+//! asserted before timing: the planar softmax kernel must match legacy
+//! bit-for-bit, the layernorm kernel within f32-rounding tolerance.
+//!
+//! Flags: `--json` writes the JSON artifact (default path
+//! `<repo>/BENCH_kernels.json`, override with `--out <path>`); `--quick`
+//! is the CI smoke mode (equivalent to `SOLE_BENCH_QUICK=1`: numbers are
+//! meaningless, the point is that every code path executes).
+
+use std::time::Duration;
+
+use sole::fixedpoint::leading_one;
+use sole::layernorm::compress::COMPRESSED_SQUARE_TABLE;
+use sole::layernorm::rsqrt::rsqrt_hw;
+use sole::layernorm::AiLayerNorm;
+use sole::softmax::{config, log2exp, E2Scratch, E2Softmax, E2SoftmaxConfig};
+use sole::util::bench::{bench, quick_mode, report, BenchResult};
+use sole::util::cli::Args;
+use sole::util::json::{obj, Json};
+use sole::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Legacy kernels (pre-planar state, PR 1) — the old-vs-new baseline
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct LegacyE2Scratch {
+    k: Vec<i64>,
+    m: Vec<i64>,
+}
+
+/// The old `E2Softmax::forward_row_f32`: per-element shift-add `log2exp`
+/// in both stages, per-element running-max storage, push-based scratch.
+fn legacy_softmax_row(cfg: &E2SoftmaxConfig, q: &[i64], out: &mut [f32], s: &mut LegacyE2Scratch) {
+    let chunk = cfg.chunk.max(1);
+    let e = cfg.e;
+    let n = q.len();
+    s.k.clear();
+    s.k.reserve(n);
+    s.m.clear();
+    s.m.reserve(n);
+    let mut sum: u64 = 0;
+    let mut m_prev = i64::MIN;
+    for sl in q.chunks(chunk) {
+        let mut local = sl[0];
+        for &v in &sl[1..] {
+            local = local.max(v);
+        }
+        let m_new = if m_prev == i64::MIN { local } else { m_prev.max(local) };
+        if m_prev != i64::MIN && m_prev != m_new {
+            sum >>= log2exp(m_prev - m_new, e) as u32;
+        }
+        for &qi in sl {
+            let k = log2exp(qi - m_new, e);
+            sum += 1u64 << (config::SUM_FRAC as i64 - k);
+            s.k.push(k);
+            s.m.push(m_new);
+        }
+        m_prev = m_new;
+    }
+    let m_final = m_prev;
+    let msb = leading_one(sum) as i64;
+    let k_s = msb - config::SUM_FRAC as i64;
+    let s1 = if msb >= 1 { (sum >> (msb - 1)) & 1 } else { 0 };
+    let c = if s1 == 1 { config::ALDIV_C1 } else { config::ALDIV_C0 };
+    let inv = 1.0f32 / (1i64 << config::ALDIV_Q) as f32;
+    let base_shift = k_s + 1;
+    for i in 0..n {
+        let sub = log2exp(s.m[i] - m_final, e);
+        let shift = s.k[i] + sub + base_shift;
+        let q23 = if shift >= 64 {
+            0
+        } else if shift >= 0 {
+            c >> shift
+        } else {
+            c << -shift
+        };
+        out[i] = q23 as f32 * inv;
+    }
+}
+
+/// The old `AiLayerNorm::forward_row_f32`: i64 stage 1, but two f64
+/// multiplies and an f64 add per element in stage 2.
+fn legacy_layernorm_row(
+    zp: i64,
+    codes: &[u8],
+    alpha: &[u8],
+    gamma: &[f32],
+    beta: &[f32],
+    out: &mut [f32],
+) {
+    let c = codes.len();
+    let sq_table = &*COMPRESSED_SQUARE_TABLE;
+    let mut ex: i64 = 0;
+    let mut ex2: i64 = 0;
+    for i in 0..c {
+        let xi = codes[i] as i64 - zp;
+        let a = alpha[i] as u32;
+        ex += xi << a;
+        let mag = xi.unsigned_abs().min(255) as usize;
+        ex2 += sq_table[mag] << (2 * a);
+    }
+    ex2 <<= 4;
+    let var_num = ex2 as i128 * c as i128 - (ex as i128) * (ex as i128);
+    let mean = ex as f64 / c as f64;
+    let std_inv = if var_num > 0 {
+        rsqrt_hw(var_num as u128, (c as u128) * (c as u128))
+    } else {
+        0.0
+    };
+    for i in 0..c {
+        let d = ((codes[i] as i64 - zp) << alpha[i]) as f64;
+        out[i] = (gamma[i] as f64 * std_inv * (d - mean) + beta[i] as f64) as f32;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Harness
+// ---------------------------------------------------------------------------
+
+const TARGET: Duration = Duration::from_millis(300);
+
+fn record(
+    op: &str,
+    l: usize,
+    b: usize,
+    impl_name: &str,
+    r: &BenchResult,
+    speedup: Option<f64>,
+) -> Json {
+    let rows_per_sec = b as f64 * r.per_sec();
+    let melem_per_sec = (b * l) as f64 * r.per_sec() / 1e6;
+    let mut fields = vec![
+        ("op", Json::Str(op.to_string())),
+        ("l", Json::Int(l as i64)),
+        ("batch", Json::Int(b as i64)),
+        ("impl", Json::Str(impl_name.to_string())),
+        ("mean_ns", Json::Int(r.mean.as_nanos() as i64)),
+        ("p50_ns", Json::Int(r.p50.as_nanos() as i64)),
+        ("p99_ns", Json::Int(r.p99.as_nanos() as i64)),
+        ("rows_per_sec", Json::Num(rows_per_sec)),
+        ("melem_per_sec", Json::Num(melem_per_sec)),
+    ];
+    if let Some(s) = speedup {
+        fields.push(("speedup_vs_legacy", Json::Num(s)));
+    }
+    obj(fields)
+}
+
+fn main() {
+    let args = Args::from_env();
+    if args.flag("quick") {
+        std::env::set_var("SOLE_BENCH_QUICK", "1");
+    }
+    println!(
+        "bench_kernels — old-vs-new operator kernels at the paper's shapes{}",
+        if quick_mode() { " [QUICK smoke mode — numbers meaningless]" } else { "" }
+    );
+
+    let mut rng = Rng::new(0xBE7C);
+    let mut results: Vec<Json> = Vec::new();
+    // the acceptance shape: single-row E2Softmax at L=1024
+    let mut accept_speedup = f64::NAN;
+
+    println!("\ne2softmax — legacy per-row shift-add vs planar LUT batch kernel");
+    for &l in &[49usize, 128, 785, 1024] {
+        for &b in &[1usize, 8, 16] {
+            let q: Vec<i64> = (0..b * l).map(|_| -rng.range_i64(0, 256)).collect();
+            let cfg = E2SoftmaxConfig::default();
+            let sm = E2Softmax::new(cfg);
+            let mut out_legacy = vec![0f32; b * l];
+            let mut out_new = vec![0f32; b * l];
+            let mut ls = LegacyE2Scratch::default();
+            let mut ns = E2Scratch::default();
+            // correctness of the comparison: bit-exact old vs new
+            for (row, row_out) in q.chunks(l).zip(out_legacy.chunks_mut(l)) {
+                legacy_softmax_row(&cfg, row, row_out, &mut ls);
+            }
+            sm.forward_batch_f32(&q, l, &mut out_new, &mut ns);
+            assert_eq!(out_legacy, out_new, "planar kernel diverged at L={l} B={b}");
+
+            let rl = bench(&format!("e2softmax legacy  L={l:<4} B={b:<2}"), TARGET, || {
+                for (row, row_out) in
+                    std::hint::black_box(&q).chunks(l).zip(out_legacy.chunks_mut(l))
+                {
+                    legacy_softmax_row(&cfg, row, row_out, &mut ls);
+                }
+            });
+            report(&rl);
+            let rn = bench(&format!("e2softmax planar  L={l:<4} B={b:<2}"), TARGET, || {
+                sm.forward_batch_f32(std::hint::black_box(&q), l, &mut out_new, &mut ns);
+            });
+            report(&rn);
+            let speedup = rl.mean.as_secs_f64() / rn.mean.as_secs_f64();
+            println!(
+                "    -> {:.1} Melem/s legacy, {:.1} Melem/s planar ({speedup:.2}x)",
+                (b * l) as f64 * rl.per_sec() / 1e6,
+                (b * l) as f64 * rn.per_sec() / 1e6,
+            );
+            if l == 1024 && b == 1 {
+                accept_speedup = speedup;
+            }
+            results.push(record("e2softmax", l, b, "legacy_row", &rl, None));
+            results.push(record("e2softmax", l, b, "planar_batch", &rn, Some(speedup)));
+        }
+    }
+
+    println!("\nailayernorm — legacy f64 stage 2 vs fused f32 batch kernel");
+    for &c in &[192usize, 384, 768] {
+        for &b in &[1usize, 8, 16] {
+            let codes: Vec<u8> = (0..b * c).map(|_| rng.range_i64(0, 256) as u8).collect();
+            let alpha: Vec<u8> = (0..c).map(|_| rng.range_i64(0, 4) as u8).collect();
+            let gamma: Vec<f32> = (0..c).map(|_| 1.0 + 0.1 * rng.normal() as f32).collect();
+            let beta: Vec<f32> = (0..c).map(|_| 0.2 * rng.normal() as f32).collect();
+            let ln = AiLayerNorm::default();
+            let mut out_legacy = vec![0f32; b * c];
+            let mut out_new = vec![0f32; b * c];
+            for (row, row_out) in codes.chunks(c).zip(out_legacy.chunks_mut(c)) {
+                legacy_layernorm_row(ln.zp, row, &alpha, &gamma, &beta, row_out);
+            }
+            ln.forward_batch_f32(&codes, &alpha, &gamma, &beta, &mut out_new);
+            for (i, (a, w)) in out_new.iter().zip(&out_legacy).enumerate() {
+                assert!(
+                    (a - w).abs() < 1e-4 * (1.0 + w.abs()),
+                    "fused kernel diverged at C={c} B={b} i={i}: {a} vs {w}"
+                );
+            }
+
+            let rl = bench(&format!("ailayernorm legacy C={c:<4} B={b:<2}"), TARGET, || {
+                for (row, row_out) in
+                    std::hint::black_box(&codes).chunks(c).zip(out_legacy.chunks_mut(c))
+                {
+                    legacy_layernorm_row(ln.zp, row, &alpha, &gamma, &beta, row_out);
+                }
+            });
+            report(&rl);
+            let rn = bench(&format!("ailayernorm fused  C={c:<4} B={b:<2}"), TARGET, || {
+                ln.forward_batch_f32(
+                    std::hint::black_box(&codes),
+                    &alpha,
+                    &gamma,
+                    &beta,
+                    &mut out_new,
+                );
+            });
+            report(&rn);
+            let speedup = rl.mean.as_secs_f64() / rn.mean.as_secs_f64();
+            println!(
+                "    -> {:.1} Melem/s legacy, {:.1} Melem/s fused ({speedup:.2}x)",
+                (b * c) as f64 * rl.per_sec() / 1e6,
+                (b * c) as f64 * rn.per_sec() / 1e6,
+            );
+            results.push(record("ailayernorm", c, b, "legacy_row", &rl, None));
+            results.push(record("ailayernorm", c, b, "fused_batch", &rn, Some(speedup)));
+        }
+    }
+
+    let pass = accept_speedup >= 2.0;
+    println!(
+        "\nacceptance: e2softmax L=1024 B=1 planar-vs-legacy speedup {accept_speedup:.2}x \
+         (required >= 2.0x) -> {}",
+        if quick_mode() { "SKIPPED (quick mode)" } else if pass { "PASS" } else { "FAIL" }
+    );
+
+    if args.flag("json") {
+        let default_out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json");
+        if quick_mode() && args.opt("out").is_none() {
+            // never let ~2ms smoke numbers silently replace the committed
+            // perf trajectory; smoke runs must name an explicit path
+            println!(
+                "quick mode: refusing to overwrite {default_out} with smoke numbers \
+                 (pass --out <path> to write them elsewhere)"
+            );
+            return;
+        }
+        let path = args.opt_str("out", default_out);
+        let doc = obj(vec![
+            ("bench", Json::Str("bench_kernels".to_string())),
+            ("quick", Json::Bool(quick_mode())),
+            (
+                "units",
+                obj(vec![
+                    ("mean_ns", Json::Str("mean wall-clock per kernel call, ns".to_string())),
+                    ("rows_per_sec", Json::Str("batch rows completed per second".to_string())),
+                    ("melem_per_sec", Json::Str("million elements per second".to_string())),
+                ]),
+            ),
+            (
+                "acceptance",
+                obj(vec![
+                    ("shape", Json::Str("e2softmax L=1024 B=1".to_string())),
+                    ("required_speedup", Json::Num(2.0)),
+                    ("measured_speedup", Json::Num(accept_speedup)),
+                    ("pass", Json::Bool(pass && !quick_mode())),
+                ]),
+            ),
+            ("results", Json::Arr(results)),
+        ]);
+        let mut text = doc.to_string_compact();
+        text.push('\n');
+        std::fs::write(path, text).expect("write BENCH_kernels.json");
+        println!("wrote {path}");
+    }
+
+    if !quick_mode() {
+        assert!(
+            pass,
+            "acceptance regression: planar E2Softmax must be >= 2x legacy at L=1024 B=1 \
+             (measured {accept_speedup:.2}x)"
+        );
+    }
+}

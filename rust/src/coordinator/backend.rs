@@ -3,15 +3,18 @@
 //! * `PjrtBackend` — the real path: bucketed AOT artifacts through the
 //!   PJRT runtime (one `LoadedModel` per batch size).
 //! * `SoftwareSoftmaxBackend` — the bit-exact Rust E2Softmax as a
-//!   row-service over the allocation-free `forward_row_f32` hot path.
+//!   row-service: the whole packed batch is quantized in one pass and
+//!   executed by one `forward_batch_f32` kernel call.
 //! * `SoftwareLayerNormBackend` — the bit-exact AILayerNorm as a
-//!   row-service (PTF-quantized f32 rows through `forward_row_f32`).
+//!   row-service (PTF batch quantization + one `forward_batch_f32` call).
 //!
 //! Execution is arena-style: the worker owns the packed input buffer, the
 //! staged output buffer, and an opaque per-worker scratch created by
 //! `Backend::make_scratch`.  A backend writes results into the provided
 //! `out` slice and keeps every temporary inside its scratch, so the
-//! steady-state batch loop performs no heap allocation.
+//! steady-state batch loop performs no heap allocation — and, since the
+//! planar-kernel rewrite, no per-row dispatch either: each `run` is a
+//! single batch-kernel invocation over the packed buffer.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -19,9 +22,9 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::layernorm::{config::DEFAULT_ZP, AiLayerNorm};
-use crate::quant::{ptf_quantize_into, PtfCalib};
+use crate::quant::{ptf_quantize_batch_into, PtfCalib};
 use crate::runtime::{Engine, LoadedModel};
-use crate::softmax::e2::{quantize_logits_into, E2Scratch};
+use crate::softmax::e2::{quantize_logits_batch_into, E2Scratch};
 use crate::softmax::{E2Softmax, E2SoftmaxConfig};
 
 /// Opaque per-worker scratch arena.  Each worker thread creates one via
@@ -129,15 +132,16 @@ impl Backend for PjrtBackend {
 }
 
 /// Software op-service: each item is one softmax row of length `l`,
-/// computed by the bit-exact E2Softmax hot path.  Any bucket size works.
+/// computed by the bit-exact E2Softmax batch kernel.  Any bucket size
+/// works.
 pub struct SoftwareSoftmaxBackend {
     l: usize,
     buckets: Vec<usize>,
     sm: E2Softmax,
 }
 
-/// Per-worker arena of the softmax service: the logit->code quantization
-/// buffer plus the E2Softmax row scratch.
+/// Per-worker arena of the softmax service: the packed logit->code
+/// quantization buffer plus the E2Softmax kernel scratch.
 struct SoftmaxScratch {
     codes: Vec<i64>,
     e2: E2Scratch,
@@ -180,10 +184,10 @@ impl Backend for SoftwareSoftmaxBackend {
         let s = scratch
             .downcast_mut::<SoftmaxScratch>()
             .context("softmax backend handed a foreign scratch arena")?;
-        for (row, row_out) in inputs.chunks(self.l).zip(out.chunks_mut(self.l)) {
-            quantize_logits_into(row, self.sm.cfg.e, &mut s.codes);
-            self.sm.forward_row_f32(&s.codes, row_out, &mut s.e2);
-        }
+        // one pass of per-row-max quantization over the packed batch, then
+        // one batch-kernel call — no per-row dispatch
+        quantize_logits_batch_into(inputs, self.l, self.sm.cfg().e, &mut s.codes);
+        self.sm.forward_batch_f32(&s.codes, self.l, out, &mut s.e2);
         Ok(())
     }
 }
@@ -200,7 +204,7 @@ pub struct SoftwareLayerNormBackend {
     beta: Vec<f32>,
 }
 
-/// Per-worker arena of the layernorm service: the PTF code buffer.
+/// Per-worker arena of the layernorm service: the packed PTF code buffer.
 struct LayerNormScratch {
     codes: Vec<u8>,
 }
@@ -262,10 +266,8 @@ impl Backend for SoftwareLayerNormBackend {
         let s = scratch
             .downcast_mut::<LayerNormScratch>()
             .context("layernorm backend handed a foreign scratch arena")?;
-        for (row, row_out) in inputs.chunks(self.c).zip(out.chunks_mut(self.c)) {
-            ptf_quantize_into(row, &self.cal, &mut s.codes);
-            self.ln.forward_row_f32(&s.codes, &self.cal.alpha, &self.gamma, &self.beta, row_out);
-        }
+        ptf_quantize_batch_into(inputs, &self.cal, &mut s.codes);
+        self.ln.forward_batch_f32(&s.codes, &self.cal.alpha, &self.gamma, &self.beta, out);
         Ok(())
     }
 }
@@ -273,6 +275,7 @@ impl Backend for SoftwareLayerNormBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::ptf_quantize_into;
 
     #[test]
     fn software_backend_shapes() {
@@ -308,6 +311,23 @@ mod tests {
                 sm.forward_logits(&rows[r * l..(r + 1) * l]).into_iter().map(|v| v as f32).collect();
             assert_eq!(&got[r * l..(r + 1) * l], &want[..], "row {r}");
         }
+    }
+
+    #[test]
+    fn softmax_backend_survives_nan_logits() {
+        // a NaN-poisoned request must not corrupt its own row beyond the
+        // NaN slots (they quantize to the bottom code) nor its batchmates
+        let l = 16;
+        let be = SoftwareSoftmaxBackend::new(l, vec![2]);
+        let mut rows = vec![0.5f32; 2 * l];
+        rows[3] = f32::NAN;
+        let got = be.run_alloc(2, &rows).unwrap();
+        assert!(got.iter().all(|v| v.is_finite()));
+        // the clean second row matches a clean single-row run exactly
+        let clean = be.run_alloc(2, &vec![0.5f32; 2 * l]).unwrap();
+        assert_eq!(&got[l..], &clean[l..]);
+        // the NaN slot gets the smallest probability in its row
+        assert!(got[3] <= got[0]);
     }
 
     #[test]

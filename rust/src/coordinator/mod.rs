@@ -14,7 +14,10 @@
 //! The execution hot path is arena-style: every worker owns a packed input
 //! buffer, a staged output buffer, and the backend's opaque scratch, all
 //! reused across batches, so steady-state batch execution performs no heap
-//! allocation beyond handing each caller its owned `Response`.
+//! allocation beyond handing each caller its owned `Response`.  The
+//! software op-services execute the packed buffer with a single
+//! batch-kernel call (`forward_batch_f32`) — the per-row loop lives inside
+//! the planar kernel, not in the dispatch layer.
 
 pub mod backend;
 pub mod batcher;

@@ -83,15 +83,49 @@ pub fn ptf_quantize(x: &[f32], cal: &PtfCalib) -> Vec<u8> {
     out
 }
 
+/// Exact 2^-a as f64 via exponent-bit construction (a <= 255 stays far
+/// above the subnormal range) — the hot-path stand-in for
+/// `2f64.powi(-(a as i32))`: two integer ops, no libm call.
+#[inline]
+fn pow2_neg(a: u8) -> f64 {
+    f64::from_bits((1023 - a as u64) << 52)
+}
+
+/// One row of PTF quantization appended to `out`.  The per-element work is
+/// two multiplies: the layer-scale reciprocal is hoisted out of the loop
+/// (one extra rounding vs a direct divide — codes can differ from the
+/// pre-hoist ones only when `v/s` lands within an ulp of a .5 rounding
+/// boundary, and every consumer quantizes through this same function), and
+/// scaling by 2^-a is exact.
+fn ptf_append_row(x: &[f32], cal: &PtfCalib, out: &mut Vec<u8>) {
+    let inv_s = 1.0 / cal.s;
+    out.extend(x.iter().zip(&cal.alpha).map(|(&v, &a)| {
+        let q = v as f64 * inv_s * pow2_neg(a);
+        (q.round() as i64 + cal.zp).clamp(0, 255) as u8
+    }));
+}
+
 /// PTF-quantize one row into a reusable buffer — the coordinator's
 /// software layernorm backend uses this so steady-state quantization
 /// allocates nothing.
 pub fn ptf_quantize_into(x: &[f32], cal: &PtfCalib, out: &mut Vec<u8>) {
     out.clear();
-    out.extend(x.iter().zip(&cal.alpha).map(|(&v, &a)| {
-        let scale = cal.s * 2f64.powi(a as i32);
-        ((v as f64 / scale).round() as i64 + cal.zp).clamp(0, 255) as u8
-    }));
+    ptf_append_row(x, cal, out);
+}
+
+/// Batch variant: `x` is a packed planar batch of rows, each
+/// `cal.alpha.len()` channels; row-for-row identical to
+/// `ptf_quantize_into` (the calibration is per-channel, so batching is
+/// pure layout).
+pub fn ptf_quantize_batch_into(x: &[f32], cal: &PtfCalib, out: &mut Vec<u8>) {
+    let c = cal.alpha.len();
+    assert!(c > 0, "calibration must cover at least one channel");
+    assert!(x.len() % c == 0, "packed batch len {} is not a multiple of {c}", x.len());
+    out.clear();
+    out.reserve(x.len());
+    for row in x.chunks_exact(c) {
+        ptf_append_row(row, cal, out);
+    }
 }
 
 #[cfg(test)]
@@ -140,6 +174,31 @@ mod tests {
         let cal = ptf_calibrate(&samples, channels, 5);
         let q = ptf_quantize(&samples[..channels], &cal);
         assert!(q.iter().all(|&c| (0..=255).contains(&(c as i64))));
+    }
+
+    #[test]
+    fn pow2_neg_matches_powi() {
+        for a in 0u8..=255 {
+            assert_eq!(pow2_neg(a), 2f64.powi(-(a as i32)), "a={a}");
+        }
+    }
+
+    #[test]
+    fn ptf_batch_matches_per_row() {
+        let mut rng = Rng::new(6);
+        let channels = 24;
+        let rows = 5;
+        let samples: Vec<f32> =
+            (0..channels * rows).map(|_| (rng.normal() * 2.0) as f32).collect();
+        let cal = ptf_calibrate(&samples, channels, 5);
+        let mut batch = Vec::new();
+        ptf_quantize_batch_into(&samples, &cal, &mut batch);
+        assert_eq!(batch.len(), samples.len());
+        let mut row = Vec::new();
+        for r in 0..rows {
+            ptf_quantize_into(&samples[r * channels..(r + 1) * channels], &cal, &mut row);
+            assert_eq!(&batch[r * channels..(r + 1) * channels], &row[..], "row {r}");
+        }
     }
 
     #[test]

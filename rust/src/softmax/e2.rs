@@ -6,12 +6,19 @@
 //! V-lane E2Softmax Unit (local max per slice via the comparison tree) and
 //! matches the Pallas kernel.
 //!
-//! This is also the coordinator's software hot path (bench_softmax), so the
-//! row kernel is allocation-free given a reusable scratch.
+//! This is also the coordinator's software hot path, so next to the
+//! introspection model there is a planar, LUT-driven kernel
+//! (`forward_row_f32` / `forward_batch_f32`): stage 1 is one indexed load
+//! per element out of the precomputed [`Log2ExpTable`] (k and the Q(.15)
+//! summand together), the running max is stored per *slice* rather than
+//! per element, and stage 2 collapses to `val[k[i] + sub_slice]` against a
+//! per-row table of the ≤ 31 reachable ALDivision outputs.  Both kernels
+//! are allocation-free given a reusable [`E2Scratch`] and bit-exact to
+//! `forward_introspect` (enforced by tests at every shape).
 
 use super::aldivision::{aldivision, q23_to_f64};
 use super::config::{DEFAULT_E, SUM_FRAC};
-use super::log2exp::log2exp;
+use super::log2exp::{log2exp, Log2ExpTable};
 
 /// Configuration of the E2Softmax datapath.
 #[derive(Debug, Clone, Copy)]
@@ -50,24 +57,47 @@ impl E2SoftmaxOut {
     }
 }
 
-/// Reusable scratch for the allocation-free row kernel.
+/// Stage 2 indexes `val[k + sub]` with k, sub in [0, 15]: 31 reachable
+/// entries, padded to 32.
+const VAL_TABLE_LEN: usize = 32;
+
+/// Reusable scratch for the allocation-free kernels.  Buffers are
+/// `resize`d to the row at hand, so capacity grows to the largest row seen
+/// and then stays put across varying row lengths.
 #[derive(Debug, Default)]
 pub struct E2Scratch {
-    k: Vec<i64>,
-    m: Vec<i64>,
+    /// Per-element 4-bit Log2Exp codes (byte-packed for memory traffic).
+    k: Vec<u8>,
+    /// Per-slice running max (constant within a slice by construction).
+    slice_m: Vec<i64>,
 }
 
 /// The paper's system: one softmax row over integer codes.
+///
+/// The configuration is frozen at construction — the Log2Exp table is
+/// built from `cfg.e` in `new`, so a mutable `cfg` would let the LUT
+/// kernels silently desync from `forward_introspect`.  Read it via
+/// [`E2Softmax::cfg`].
 pub struct E2Softmax {
-    pub cfg: E2SoftmaxConfig,
+    cfg: E2SoftmaxConfig,
+    /// Precomputed Log2Exp for the `[-255, 0]` delta range at `cfg.e`
+    /// (built once in `new`; the generator is the bit-exact `log2exp`).
+    table: Log2ExpTable,
 }
 
 impl E2Softmax {
     pub fn new(cfg: E2SoftmaxConfig) -> Self {
-        E2Softmax { cfg }
+        E2Softmax { table: Log2ExpTable::new(cfg.e), cfg }
     }
 
-    /// Full-introspection version (tests, golden vectors).
+    /// The (construction-frozen) datapath configuration.
+    pub fn cfg(&self) -> E2SoftmaxConfig {
+        self.cfg
+    }
+
+    /// Full-introspection version (tests, golden vectors).  Deliberately
+    /// table-free: this is the independent reference the LUT-driven
+    /// kernels are pinned against.
     pub fn forward_introspect(&self, q: &[i64]) -> E2SoftmaxOut {
         assert!(!q.is_empty());
         let chunk = self.cfg.chunk.max(1);
@@ -113,47 +143,101 @@ impl E2Softmax {
     /// `scratch`.  No allocation after warmup.
     pub fn forward_row_f32(&self, q: &[i64], out: &mut [f32], scratch: &mut E2Scratch) {
         debug_assert_eq!(q.len(), out.len());
+        self.row_kernel(q, out, scratch);
+    }
+
+    /// Batch hot path: `q` is a packed planar batch of rows, each `l`
+    /// codes; one call, one reused scratch.  Bit-exact to per-row
+    /// `forward_row_f32` (the rows go through the same kernel).
+    pub fn forward_batch_f32(&self, q: &[i64], l: usize, out: &mut [f32], scratch: &mut E2Scratch) {
+        assert!(l > 0, "softmax rows must be non-empty");
+        assert!(q.len() % l == 0, "packed batch len {} is not a multiple of {l}", q.len());
+        assert!(q.len() == out.len(), "out len {} != batch len {}", out.len(), q.len());
+        for (row, row_out) in q.chunks_exact(l).zip(out.chunks_exact_mut(l)) {
+            self.row_kernel(row, row_out, scratch);
+        }
+    }
+
+    /// The planar LUT-driven row kernel behind both f32 entry points.
+    fn row_kernel(&self, q: &[i64], out: &mut [f32], scratch: &mut E2Scratch) {
+        debug_assert!(!q.is_empty());
         let chunk = self.cfg.chunk.max(1);
-        let e = self.cfg.e;
+        let t = &self.table;
+        debug_assert_eq!(t.e(), self.cfg.e, "cfg.e mutated after construction; table is stale");
         let n = q.len();
-        scratch.k.clear();
-        scratch.k.reserve(n);
-        scratch.m.clear();
-        scratch.m.reserve(n);
+        scratch.k.resize(n, 0);
+        scratch.slice_m.resize(n.div_ceil(chunk), 0);
+
+        // Stage 1: per-slice local max, then a branch-free element loop —
+        // one table load yields both k and the Q(.15) summand.  The row's
+        // max k is tracked so stage 2 builds only the reachable slice of
+        // the divider table (a 1-element row needs 1 entry, not 32).
         let mut sum: u64 = 0;
         let mut m_prev = i64::MIN;
-        for sl in q.chunks(chunk) {
+        let mut k_row_max: u8 = 0;
+        for (sl, (ks, ms)) in q
+            .chunks(chunk)
+            .zip(scratch.k.chunks_mut(chunk).zip(scratch.slice_m.iter_mut()))
+        {
             let mut local = sl[0];
             for &v in &sl[1..] {
                 local = local.max(v);
             }
             let m_new = if m_prev == i64::MIN { local } else { m_prev.max(local) };
             if m_prev != i64::MIN && m_prev != m_new {
-                sum >>= log2exp(m_prev - m_new, e) as u32;
+                sum >>= t.k(m_prev - m_new) as u32;
             }
-            for &qi in sl {
-                let k = log2exp(qi - m_new, e);
-                sum += 1u64 << (SUM_FRAC as i64 - k);
-                scratch.k.push(k);
-                scratch.m.push(m_new);
+            for (ko, &qi) in ks.iter_mut().zip(sl) {
+                let (k, pow) = t.k_pow(qi - m_new);
+                sum += pow;
+                k_row_max = k_row_max.max(k);
+                *ko = k;
             }
+            *ms = m_new;
             m_prev = m_new;
         }
         let m_final = m_prev;
+
         // ALDivision's LOD / mantissa-probe / constant-select depend only on
         // the reduced sum — per-row constants, hoisted out of the element
-        // loop (the hardware does the same: one LOD per row, Fig. 4).
+        // loop (the hardware does the same: one LOD per row, Fig. 4).  The
+        // total shift is k_i + sub + k_s + 1 with k_i, sub in [0, 15], so
+        // every reachable divider output fits a ≤ 31-entry per-row table.
         let msb = crate::fixedpoint::leading_one(sum) as i64;
-        let k_s = msb - super::config::SUM_FRAC as i64;
+        let k_s = msb - SUM_FRAC as i64;
         let s1 = if msb >= 1 { (sum >> (msb - 1)) & 1 } else { 0 };
         let c = if s1 == 1 { super::config::ALDIV_C1 } else { super::config::ALDIV_C0 };
         let inv = 1.0f32 / (1i64 << super::config::ALDIV_Q) as f32;
+        // base_shift >= 1: the global max contributes 2^SUM_FRAC, so
+        // msb >= SUM_FRAC and the divider never left-shifts here.
         let base_shift = k_s + 1;
-        for i in 0..n {
-            let sub = log2exp(scratch.m[i] - m_final, e);
-            let shift = scratch.k[i] + sub + base_shift;
-            let q23 = if shift >= 64 { 0 } else if shift >= 0 { c >> shift } else { c << -shift };
-            out[i] = q23 as f32 * inv;
+        // build only the reachable entries: every stage-2 index is
+        // k_i + sub_s <= k_row_max + sub_max (both capped at K_MAX = 15)
+        let mut sub_max: i64 = 0;
+        for &m_sl in scratch.slice_m.iter() {
+            sub_max = sub_max.max(t.k(m_sl - m_final));
+        }
+        let val_len = (k_row_max as i64 + sub_max + 1) as usize;
+        debug_assert!(val_len <= VAL_TABLE_LEN);
+        let mut val = [0f32; VAL_TABLE_LEN];
+        for (ti, v) in val[..val_len].iter_mut().enumerate() {
+            let shift = ti as i64 + base_shift;
+            let q23 = if shift >= 64 { 0 } else { c >> shift };
+            *v = q23 as f32 * inv;
+        }
+
+        // Stage 2: the correction sub = k(m_slice - m_final) is constant
+        // per slice — hoist it, leaving a pure table[k] -> scale pipeline.
+        for ((ks, os), &m_sl) in scratch
+            .k
+            .chunks(chunk)
+            .zip(out.chunks_mut(chunk))
+            .zip(scratch.slice_m.iter())
+        {
+            let sub = t.k(m_sl - m_final);
+            for (o, &k) in os.iter_mut().zip(ks) {
+                *o = val[(k as i64 + sub) as usize];
+            }
         }
     }
 
@@ -167,15 +251,45 @@ impl E2Softmax {
     }
 }
 
-/// Quantize real logits to the integer code grid (row-max referenced,
-/// scale 2^-e, clamped to the 8-bit code range) into a reusable buffer.
-/// Shared by `forward_logits` and the coordinator's software backend so
-/// both paths see bit-identical codes.
-pub fn quantize_logits_into(x: &[f32], e: u32, out: &mut Vec<i64>) {
+/// One row of max-referenced quantization appended to `out`.  NaN logits
+/// cannot participate in the row max (`f32::max` ignores them), and are
+/// clamped to the bottom code `-255` — i.e. treated as -inf, receiving the
+/// smallest representable probability instead of poisoning the row by
+/// casting to code 0 (the row max).
+fn append_row_codes(x: &[f32], e: u32, out: &mut Vec<i64>) {
     let scale = (1u64 << e) as f64;
     let xmax = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    out.extend(x.iter().map(|&v| {
+        if v.is_nan() {
+            -255
+        } else {
+            (((v as f64 - xmax) * scale).round() as i64).clamp(-255, 0)
+        }
+    }));
+}
+
+/// Quantize real logits to the integer code grid (row-max referenced,
+/// scale 2^-e, clamped to the 8-bit code range `[-255, 0]`) into a
+/// reusable buffer.  Shared by `forward_logits` and the coordinator's
+/// software backend so both paths see bit-identical codes.  NaN logits map
+/// to the bottom code `-255` (see `append_row_codes`); an all-equal row
+/// quantizes to all zeros (every element *is* the row max).
+pub fn quantize_logits_into(x: &[f32], e: u32, out: &mut Vec<i64>) {
     out.clear();
-    out.extend(x.iter().map(|&v| (((v as f64 - xmax) * scale).round() as i64).clamp(-255, 0)));
+    append_row_codes(x, e, out);
+}
+
+/// Batch variant: `x` is a packed planar batch of rows of length `l`; each
+/// row is max-referenced independently, exactly as `quantize_logits_into`
+/// would do row by row.
+pub fn quantize_logits_batch_into(x: &[f32], l: usize, e: u32, out: &mut Vec<i64>) {
+    assert!(l > 0, "rows must be non-empty");
+    assert!(x.len() % l == 0, "packed batch len {} is not a multiple of {l}", x.len());
+    out.clear();
+    out.reserve(x.len());
+    for row in x.chunks_exact(l) {
+        append_row_codes(row, e, out);
+    }
 }
 
 /// Exact f64 softmax (baseline for error measurements).
@@ -327,12 +441,49 @@ mod tests {
     }
 
     #[test]
+    fn scratch_capacity_stable_across_varying_row_lengths() {
+        // resize-based reuse: after the largest row, smaller and larger
+        // rows must not force reallocation churn (capacity only ratchets)
+        let sm = E2Softmax::new(E2SoftmaxConfig::default());
+        let mut scratch = E2Scratch::default();
+        let mut rng = Rng::new(77);
+        let mut out = vec![0f32; 1024];
+        let q = codes(&mut rng, 1024);
+        sm.forward_row_f32(&q, &mut out[..1024], &mut scratch);
+        let cap_k = scratch.k.capacity();
+        let cap_m = scratch.slice_m.capacity();
+        for &n in &[17usize, 1024, 64, 513, 1] {
+            let q = codes(&mut rng, n);
+            sm.forward_row_f32(&q, &mut out[..n], &mut scratch);
+            assert_eq!(scratch.k.capacity(), cap_k, "n={n}");
+            assert_eq!(scratch.slice_m.capacity(), cap_m, "n={n}");
+        }
+    }
+
+    #[test]
+    fn batch_matches_rows_bitwise() {
+        let l = 96;
+        let b = 5;
+        let mut rng = Rng::new(23);
+        let q = codes(&mut rng, b * l);
+        let sm = E2Softmax::new(E2SoftmaxConfig::default());
+        let mut batch_out = vec![0f32; b * l];
+        let mut scratch = E2Scratch::default();
+        sm.forward_batch_f32(&q, l, &mut batch_out, &mut scratch);
+        let mut row_out = vec![0f32; l];
+        for r in 0..b {
+            sm.forward_row_f32(&q[r * l..(r + 1) * l], &mut row_out, &mut scratch);
+            assert_eq!(&batch_out[r * l..(r + 1) * l], &row_out[..], "row {r}");
+        }
+    }
+
+    #[test]
     fn quantize_into_matches_forward_logits_codes() {
         let mut rng = Rng::new(13);
         let x: Vec<f32> = (0..64).map(|_| (rng.normal() * 2.0) as f32).collect();
         let sm = E2Softmax::new(E2SoftmaxConfig::default());
         let mut q = Vec::new();
-        quantize_logits_into(&x, sm.cfg.e, &mut q);
+        quantize_logits_into(&x, sm.cfg().e, &mut q);
         assert_eq!(q.len(), x.len());
         assert!(q.iter().all(|&v| (-255..=0).contains(&v)));
         // the max logit quantizes to code 0
@@ -341,6 +492,71 @@ mod tests {
         let via_logits = sm.forward_logits(&x);
         let via_codes = sm.forward_introspect(&q).out_f64();
         assert_eq!(via_logits, via_codes);
+    }
+
+    #[test]
+    fn quantize_all_equal_row_is_all_zero_codes() {
+        let mut q = Vec::new();
+        quantize_logits_into(&[1.25f32; 17], DEFAULT_E, &mut q);
+        assert_eq!(q, vec![0i64; 17]);
+        // and the softmax of it is exactly uniform on the code grid
+        let sm = E2Softmax::new(E2SoftmaxConfig::default());
+        let o = sm.forward_introspect(&q);
+        assert!(o.out_q23.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn quantize_nan_logits_get_bottom_code() {
+        let x = [0.5f32, f32::NAN, 2.0, -1.0, f32::NAN];
+        let mut q = Vec::new();
+        quantize_logits_into(&x, DEFAULT_E, &mut q);
+        // NaN cannot shift the row max (2.0) nor become the max code
+        assert_eq!(q[1], -255);
+        assert_eq!(q[4], -255);
+        assert_eq!(q[2], 0);
+        // the non-NaN codes are identical to the NaN-free row
+        let x_clean = [0.5f32, 2.0, -1.0];
+        let mut q_clean = Vec::new();
+        quantize_logits_into(&x_clean, DEFAULT_E, &mut q_clean);
+        assert_eq!(q[0], q_clean[0]);
+        assert_eq!(q[2], q_clean[1]);
+        assert_eq!(q[3], q_clean[2]);
+        // downstream softmax stays finite and the NaN slots get the floor
+        let sm = E2Softmax::new(E2SoftmaxConfig::default());
+        let o = sm.forward_introspect(&q);
+        for &v in &o.out_q23 {
+            assert!(v >= 0);
+        }
+        assert!(o.out_q23[1] <= o.out_q23[2]);
+    }
+
+    #[test]
+    fn quantize_all_nan_row_is_uniform_floor() {
+        let mut q = Vec::new();
+        quantize_logits_into(&[f32::NAN; 8], DEFAULT_E, &mut q);
+        assert_eq!(q, vec![-255i64; 8]);
+        // max-referenced softmax still works (codes are all equal)
+        let sm = E2Softmax::new(E2SoftmaxConfig::default());
+        let o = sm.forward_introspect(&q);
+        assert!(o.out_q23.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn quantize_batch_matches_per_row() {
+        let mut rng = Rng::new(31);
+        let l = 48;
+        let b = 4;
+        let mut x = vec![0f32; b * l];
+        rng.fill_normal(&mut x, 0.0, 2.0);
+        x[l + 3] = f32::NAN; // NaN guard must apply per row in the batch too
+        let mut batch = Vec::new();
+        quantize_logits_batch_into(&x, l, DEFAULT_E, &mut batch);
+        assert_eq!(batch.len(), b * l);
+        let mut row = Vec::new();
+        for r in 0..b {
+            quantize_logits_into(&x[r * l..(r + 1) * l], DEFAULT_E, &mut row);
+            assert_eq!(&batch[r * l..(r + 1) * l], &row[..], "row {r}");
+        }
     }
 
     #[test]

@@ -8,8 +8,11 @@ pub mod e2;
 pub mod log2exp;
 
 pub use aldivision::{aldivision, AldivOut};
-pub use e2::{quantize_logits_into, E2Scratch, E2Softmax, E2SoftmaxConfig, E2SoftmaxOut};
-pub use log2exp::log2exp;
+pub use e2::{
+    quantize_logits_batch_into, quantize_logits_into, E2Scratch, E2Softmax, E2SoftmaxConfig,
+    E2SoftmaxOut,
+};
+pub use log2exp::{log2exp, Log2ExpTable};
 
 /// Contract constants shared with python/compile/kernels/ref.py — see
 /// DESIGN.md §6.  Changing any of these invalidates the golden vectors.

@@ -20,8 +20,17 @@ impl BenchResult {
     }
 }
 
+/// True when `SOLE_BENCH_QUICK` is set: every bench target shrinks to a
+/// smoke-test length so CI can execute all of them cheaply (the numbers
+/// are meaningless in this mode — it exists so bench code cannot rot
+/// uncompiled or un-run).
+pub fn quick_mode() -> bool {
+    std::env::var_os("SOLE_BENCH_QUICK").is_some()
+}
+
 /// Benchmark `f`, auto-scaling iteration count to ~`target` total runtime.
 pub fn bench<F: FnMut()>(name: &str, target: Duration, mut f: F) -> BenchResult {
+    let target = if quick_mode() { Duration::from_millis(2).min(target) } else { target };
     // warmup + calibration
     let t0 = Instant::now();
     f();

@@ -1,0 +1,196 @@
+//! Batch-vs-row-vs-introspect equivalence for the planar LUT-driven
+//! kernels, across the edge shapes (B=1, L=1, uneven chunk tails, rows
+//! past the unit's 1024-element buffer) plus a proptest sweep.
+//!
+//! Contract: `forward_batch_f32` is bit-identical to per-row
+//! `forward_row_f32`; the E2Softmax f32 kernels are bit-exact to
+//! `forward_introspect` on the Q23 grid; the AILayerNorm f32 kernels track
+//! the f64 introspection within f32-rounding tolerance.
+
+use sole::layernorm::AiLayerNorm;
+use sole::quant::{ptf_quantize_batch_into, ptf_quantize_into, PtfCalib};
+use sole::softmax::aldivision::q23_to_f64;
+use sole::softmax::{
+    quantize_logits_batch_into, quantize_logits_into, E2Scratch, E2Softmax, E2SoftmaxConfig,
+};
+use sole::util::proptest::{check, size};
+use sole::util::rng::Rng;
+
+fn codes(rng: &mut Rng, n: usize) -> Vec<i64> {
+    (0..n).map(|_| -rng.range_i64(0, 256)).collect()
+}
+
+/// One full three-way check: batch == row (bitwise) == introspect (Q23).
+fn assert_e2_equivalence(b: usize, l: usize, chunk: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let q = codes(&mut rng, b * l);
+    let sm = E2Softmax::new(E2SoftmaxConfig { e: 4, chunk });
+    let mut batch_out = vec![0f32; b * l];
+    let mut scratch = E2Scratch::default();
+    sm.forward_batch_f32(&q, l, &mut batch_out, &mut scratch);
+    let mut row_out = vec![0f32; l];
+    for r in 0..b {
+        let row = &q[r * l..(r + 1) * l];
+        sm.forward_row_f32(row, &mut row_out, &mut scratch);
+        let gold = sm.forward_introspect(row);
+        for i in 0..l {
+            let bv = batch_out[r * l + i];
+            assert_eq!(
+                bv.to_bits(),
+                row_out[i].to_bits(),
+                "batch != row at b={b} l={l} chunk={chunk} r={r} i={i}"
+            );
+            assert_eq!(
+                bv as f64,
+                q23_to_f64(gold.out_q23[i]),
+                "kernel != introspect at b={b} l={l} chunk={chunk} r={r} i={i}"
+            );
+        }
+    }
+}
+
+#[test]
+fn e2softmax_three_way_equivalence_edge_shapes() {
+    for &(b, l, chunk) in &[
+        (1usize, 1usize, 1usize), // minimal everything
+        (1, 1, 32),               // single element, wide unit
+        (4, 1, 32),               // batch of single-element rows
+        (1, 49, 32),              // DeiT-T attention row, uneven tail (49 = 32 + 17)
+        (3, 7, 7),                // slice == row
+        (2, 31, 32),              // row shorter than one slice
+        (8, 128, 32),             // bucketed serving shape
+        (5, 300, 1),              // Algorithm 1 verbatim
+        (2, 785, 32),             // ViT-B/8 attention row, uneven tail
+        (2, 1024, 32),            // the unit's full buffer
+        (1, 1025, 32),            // one past the buffer
+        (1, 1500, 7),             // uneven everything
+        (16, 33, 32),             // max bucket, tail of 1
+    ] {
+        assert_e2_equivalence(b, l, chunk, 0xA11CE + (b * 31 + l) as u64);
+    }
+}
+
+#[test]
+fn e2softmax_three_way_equivalence_sweep() {
+    check("batch-e2-sweep", 40, 97, |rng| {
+        let b = size(rng, 6);
+        let l = size(rng, 200);
+        let chunk = [1usize, 7, 32][rng.range_usize(0, 3)];
+        assert_e2_equivalence(b, l, chunk, rng.range_i64(0, 1 << 30) as u64);
+    });
+}
+
+#[test]
+fn e2softmax_batch_through_quantization_matches_row_path() {
+    // the full serving pipeline: packed f32 logits -> batch quantize ->
+    // batch kernel must equal the per-row pipeline bit-for-bit
+    let mut rng = Rng::new(0xF00D);
+    let l = 96;
+    let b = 7;
+    let mut x = vec![0f32; b * l];
+    rng.fill_normal(&mut x, 0.0, 2.0);
+    x[2 * l + 5] = f32::NAN; // NaN guard must behave identically in both paths
+    let sm = E2Softmax::new(E2SoftmaxConfig::default());
+    let mut q_batch = Vec::new();
+    quantize_logits_batch_into(&x, l, sm.cfg().e, &mut q_batch);
+    let mut batch_out = vec![0f32; b * l];
+    let mut scratch = E2Scratch::default();
+    sm.forward_batch_f32(&q_batch, l, &mut batch_out, &mut scratch);
+    let mut q_row = Vec::new();
+    let mut row_out = vec![0f32; l];
+    for r in 0..b {
+        quantize_logits_into(&x[r * l..(r + 1) * l], sm.cfg().e, &mut q_row);
+        assert_eq!(&q_batch[r * l..(r + 1) * l], &q_row[..], "codes row {r}");
+        sm.forward_row_f32(&q_row, &mut row_out, &mut scratch);
+        assert_eq!(&batch_out[r * l..(r + 1) * l], &row_out[..], "outputs row {r}");
+    }
+}
+
+fn ln_params(rng: &mut Rng, c: usize) -> (Vec<u8>, Vec<f32>, Vec<f32>) {
+    let alpha: Vec<u8> = (0..c).map(|_| rng.range_i64(0, 6) as u8).collect();
+    let gamma: Vec<f32> = (0..c).map(|_| 1.0 + 0.2 * rng.normal() as f32).collect();
+    let beta: Vec<f32> = (0..c).map(|_| 0.3 * rng.normal() as f32).collect();
+    (alpha, gamma, beta)
+}
+
+fn assert_ln_equivalence(b: usize, c: usize, seed: u64) {
+    let mut rng = Rng::new(seed);
+    let codes: Vec<u8> = (0..b * c).map(|_| rng.range_i64(0, 256) as u8).collect();
+    let (alpha, gamma, beta) = ln_params(&mut rng, c);
+    let ln = AiLayerNorm::default();
+    let mut batch_out = vec![0f32; b * c];
+    ln.forward_batch_f32(&codes, &alpha, &gamma, &beta, &mut batch_out);
+    let mut row_out = vec![0f32; c];
+    for r in 0..b {
+        let row = &codes[r * c..(r + 1) * c];
+        ln.forward_row_f32(row, &alpha, &gamma, &beta, &mut row_out);
+        let gold = ln.forward_introspect(row, &alpha, &gamma, &beta);
+        for i in 0..c {
+            let bv = batch_out[r * c + i];
+            assert_eq!(
+                bv.to_bits(),
+                row_out[i].to_bits(),
+                "batch != row at b={b} c={c} r={r} i={i}"
+            );
+            let tol = 1e-4 * (1.0 + gold.y[i].abs());
+            assert!(
+                (bv as f64 - gold.y[i]).abs() < tol,
+                "kernel != introspect at b={b} c={c} r={r} i={i}: {bv} vs {}",
+                gold.y[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn ailayernorm_three_way_equivalence_edge_shapes() {
+    for &(b, c) in &[
+        (1usize, 1usize), // single channel: var_num = 0 -> y = beta exactly
+        (1, 2),
+        (4, 1),
+        (1, 192),  // DeiT-T
+        (8, 384),  // Swin-T
+        (16, 768), // BERT-base
+        (2, 1023), // uneven large row
+    ] {
+        assert_ln_equivalence(b, c, 0xBEEF + (b * 37 + c) as u64);
+    }
+}
+
+#[test]
+fn ailayernorm_three_way_equivalence_sweep() {
+    check("batch-ln-sweep", 40, 101, |rng| {
+        let b = size(rng, 6);
+        let c = size(rng, 300);
+        assert_ln_equivalence(b, c, rng.range_i64(0, 1 << 30) as u64);
+    });
+}
+
+#[test]
+fn ailayernorm_batch_through_ptf_matches_row_path() {
+    let mut rng = Rng::new(0xCAFE);
+    let c = 64;
+    let b = 5;
+    let mut x = vec![0f32; b * c];
+    rng.fill_normal(&mut x, 0.0, 2.0);
+    let cal = PtfCalib {
+        alpha: (0..c).map(|_| rng.range_i64(0, 4) as u8).collect(),
+        s: 1.0 / 24.0,
+        zp: 128,
+    };
+    let ln = AiLayerNorm { zp: cal.zp };
+    let gamma = vec![1f32; c];
+    let beta = vec![0f32; c];
+    let mut codes_batch = Vec::new();
+    ptf_quantize_batch_into(&x, &cal, &mut codes_batch);
+    let mut batch_out = vec![0f32; b * c];
+    ln.forward_batch_f32(&codes_batch, &cal.alpha, &gamma, &beta, &mut batch_out);
+    let mut codes_row = Vec::new();
+    let mut row_out = vec![0f32; c];
+    for r in 0..b {
+        ptf_quantize_into(&x[r * c..(r + 1) * c], &cal, &mut codes_row);
+        assert_eq!(&codes_batch[r * c..(r + 1) * c], &codes_row[..], "codes row {r}");
+        ln.forward_row_f32(&codes_row, &cal.alpha, &gamma, &beta, &mut row_out);
+        assert_eq!(&batch_out[r * c..(r + 1) * c], &row_out[..], "outputs row {r}");
+    }
+}

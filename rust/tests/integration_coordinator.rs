@@ -63,7 +63,7 @@ fn softmax_coordinator_matches_direct_kernel() {
     let mut want = vec![0f32; l];
     for (i, (row, rx)) in rows.iter().zip(rxs).enumerate() {
         let resp = rx.recv().unwrap();
-        quantize_logits_into(row, sm.cfg.e, &mut codes);
+        quantize_logits_into(row, sm.cfg().e, &mut codes);
         sm.forward_row_f32(&codes, &mut want, &mut scratch);
         assert_eq!(resp.output, want, "request {i}");
     }
