@@ -1,18 +1,20 @@
-//! End-to-end serving driver (EXPERIMENTS.md §Serving): serves
-//! Poisson-arrival requests through the dynamic batcher and reports
-//! latency/throughput per offered load.
+//! End-to-end serving driver (EXPERIMENTS.md §Serving): one
+//! `ServiceRouter` process serving the paper's full mixed workload —
+//! E2Softmax at L ∈ {49, 128, 785, 1024} plus AILayerNorm at C = 768 —
+//! under Poisson arrivals, reporting latency/throughput per service and
+//! merged, per offered load.
 //!
-//! With artifacts present it loads the bucketed deit_t SOLE artifacts
-//! (PJRT backend, top-1 accuracy reported); without them it falls back to
-//! the bit-exact software E2Softmax op-service so the serving stack is
-//! drivable everywhere.  `--queue-cap N` bounds the request queue and
-//! switches submission to `try_submit`, reporting shed load.
+//! With artifacts present (and the `pjrt` feature) the bucketed
+//! `--model/--variant` family joins the mix as an extra service and its
+//! top-1 accuracy is reported.  `--queue-cap N` bounds each service's
+//! request queue and switches submission to `try_submit`, reporting shed
+//! load per service.
 //!
 //! ```
 //! cargo run --release --offline --example serve_loadtest -- \
 //!     [--artifacts DIR] [--model deit_t] [--variant fp32_sole] \
-//!     [--requests 96] [--rates 4,16,64] [--max-wait-ms 20] \
-//!     [--workers 1] [--queue-cap 0] [--len 128]
+//!     [--requests 150] [--rates 8,32,128] [--max-wait-ms 20] \
+//!     [--workers 8] [--queue-cap 0]
 //! ```
 
 use std::path::PathBuf;
@@ -21,89 +23,120 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use sole::coordinator::{
-    Backend, BatchPolicy, Coordinator, PjrtBackend, SoftwareSoftmaxBackend, TrySubmit,
+    paper_services, Backend, BatchPolicy, PjrtBackend, ServiceRouter, TrySubmit,
 };
 use sole::runtime::Engine;
 use sole::tensor::Bundle;
 use sole::util::cli::Args;
 use sole::util::rng::Rng;
 
+/// One service's slice of the mixed workload: pre-generated inputs plus
+/// (for the PJRT family) labels for top-1.
+struct Lane {
+    name: String,
+    inputs: Vec<f32>,
+    item: usize,
+    labels: Option<Vec<i32>>,
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
     let dir = PathBuf::from(args.opt_str("artifacts", "artifacts"));
     let model = args.opt_str("model", "deit_t");
     let variant = args.opt_str("variant", "fp32_sole");
-    let n = args.opt_usize("requests", 96);
-    let workers = args.opt_usize("workers", 1);
+    let n = args.opt_usize("requests", 150);
+    let workers = args.opt_usize("workers", 8); // total budget over all services
     let queue_cap = match args.opt_usize("queue-cap", 0) {
         0 => None,
         cap => Some(cap),
     };
     let rates: Vec<f64> = args
-        .opt_str("rates", "4,16,64")
+        .opt_str("rates", "8,32,128")
         .split(',')
         .filter_map(|s| s.trim().parse().ok())
         .collect();
     let max_wait = Duration::from_millis(args.opt_usize("max-wait-ms", 20) as u64);
     let policy = BatchPolicy { max_wait, max_batch: 16, queue_cap };
 
-    // pick the backend: real artifacts when present AND executable (pjrt
-    // feature on), software op-service otherwise (same coordinator, same
-    // batcher, same metrics)
+    // the mixed paper workload is always served; the PJRT family joins it
+    // when artifacts exist AND the build can execute them
+    let services = paper_services();
     let have_artifacts = dir.join("manifest.json").exists();
     if have_artifacts && !cfg!(feature = "pjrt") {
-        println!("artifacts found but built without --features pjrt — using the software backend");
+        println!("artifacts found but built without --features pjrt — software services only");
     }
-    let (backend, xs, labels): (Arc<dyn Backend>, Vec<f32>, Option<Vec<i32>>) =
-        if have_artifacts && cfg!(feature = "pjrt") {
-            let engine = Engine::open(&dir)?;
-            println!("loading {model}/{variant} buckets ...");
-            let be = PjrtBackend::from_family(&engine, model, variant)?;
-            let data = Bundle::load(&dir.join("data/cv_eval"))?;
-            let xs = data.get("x")?.as_f32()?;
-            let y = data.get("y")?.as_i32()?;
-            (Arc::new(be) as Arc<dyn Backend>, xs, Some(y))
-        } else {
-            let l = args.opt_usize("len", 128);
-            println!("no artifacts under {} — software E2Softmax rows of {l}", dir.display());
-            let mut rng = Rng::new(99);
-            let mut xs = vec![0f32; 256 * l];
-            rng.fill_normal(&mut xs, 0.0, 2.0);
-            let be = SoftwareSoftmaxBackend::new(l, vec![1, 4, 8, 16]);
-            (Arc::new(be) as Arc<dyn Backend>, xs, None)
-        };
-    let item = backend.item_input_len();
-    println!("buckets {:?}, item {} f32, workers {workers}, queue_cap {queue_cap:?}", backend.buckets(), item);
 
+    // pre-generate each software lane's inputs once (64 normal rows each)
+    let mut rng = Rng::new(99);
+    let mut lanes: Vec<Lane> = services
+        .iter()
+        .map(|(name, be)| {
+            let item = be.item_input_len();
+            let mut inputs = vec![0f32; 64 * item];
+            rng.fill_normal(&mut inputs, 0.0, 2.0);
+            Lane { name: name.clone(), inputs, item, labels: None }
+        })
+        .collect();
+    // the eval set moves into its lane (it is the largest buffer here);
+    // only (name, backend) is kept for per-rate registration
+    let pjrt_family = if have_artifacts && cfg!(feature = "pjrt") {
+        let engine = Engine::open(&dir)?;
+        println!("loading {model}/{variant} buckets ...");
+        let be = Arc::new(PjrtBackend::from_family(&engine, model, variant)?);
+        let data = Bundle::load(&dir.join("data/cv_eval"))?;
+        let name = format!("{model}/{variant}");
+        lanes.push(Lane {
+            name: name.clone(),
+            inputs: data.get("x")?.as_f32()?,
+            item: be.item_input_len(),
+            labels: Some(data.get("y")?.as_i32()?),
+        });
+        Some((name, be))
+    } else {
+        None
+    };
     println!(
-        "\n{:>10} {:>10} {:>10} {:>10} {:>10} {:>10} {:>6} {:>8}",
-        "rate req/s", "achieved", "p50 ms", "p99 ms", "mean ms", "avg batch", "shed", "top-1"
+        "mixed workload: {} services, {workers} total workers, queue_cap {queue_cap:?}",
+        lanes.len()
     );
+
     for &rate in &rates {
-        let co = Coordinator::start(backend.clone(), policy.clone(), workers);
-        let cl = co.client();
+        // a fresh router per offered load keeps the metrics per-rate
+        let mut builder = ServiceRouter::builder(workers).default_policy(policy.clone());
+        for (name, be) in &services {
+            builder = builder.service(name, be.clone());
+        }
+        if let Some((name, be)) = &pjrt_family {
+            builder = builder.hot_service(name, be.clone(), 2);
+        }
+        let router = builder.start()?;
+        let cl = router.client();
+
         let mut rng = Rng::new(7);
         let t0 = Instant::now();
         let mut pending = Vec::new();
-        let mut shed = 0usize;
+        let mut shed = vec![0usize; lanes.len()];
         for i in 0..n {
-            let idx = i % (xs.len() / item);
-            let input = xs[idx * item..(idx + 1) * item].to_vec();
+            let lane_idx = i % lanes.len();
+            let lane = &lanes[lane_idx];
+            let row = i / lanes.len() % (lane.inputs.len() / lane.item);
+            let input = lane.inputs[row * lane.item..(row + 1) * lane.item].to_vec();
             if queue_cap.is_some() {
-                match cl.try_submit(input)? {
-                    TrySubmit::Accepted(rx) => pending.push((idx, rx)),
-                    TrySubmit::Full(_) => shed += 1,
+                match cl.try_submit(&lane.name, input)? {
+                    TrySubmit::Accepted(rx) => pending.push((lane_idx, row, rx)),
+                    TrySubmit::Full(_) => shed[lane_idx] += 1,
                 }
             } else {
-                pending.push((idx, cl.submit(input)?));
+                pending.push((lane_idx, row, cl.submit(&lane.name, input)?));
             }
             std::thread::sleep(Duration::from_secs_f64(rng.exponential(rate)));
         }
-        let mut correct = 0usize;
         let served = pending.len();
-        for (idx, rx) in pending {
+        let mut correct = 0usize;
+        let mut labeled = 0usize;
+        for (lane_idx, row, rx) in pending {
             let r = rx.recv()?;
-            if let Some(y) = &labels {
+            if let Some(y) = &lanes[lane_idx].labels {
                 let pred = r
                     .output
                     .iter()
@@ -111,29 +144,42 @@ fn main() -> Result<()> {
                     .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
                     .unwrap()
                     .0;
-                if pred as i32 == y[idx] {
+                labeled += 1;
+                if pred as i32 == y[row] {
                     correct += 1;
                 }
             }
         }
         let wall = t0.elapsed().as_secs_f64();
-        let (p50, p99, mean) = co.metrics.total_latency();
-        let top1 = match &labels {
-            Some(_) if served > 0 => format!("{:.1}%", 100.0 * correct as f64 / served as f64),
-            _ => "-".to_string(),
-        };
-        println!(
-            "{:>10.1} {:>10.1} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>6} {:>8}",
-            rate,
+
+        println!("\noffered {rate:.0} req/s: served {served} in {wall:.2}s ({:.1} req/s){}",
             served as f64 / wall,
-            p50 * 1e3,
-            p99 * 1e3,
-            mean * 1e3,
-            co.metrics.mean_batch(),
-            shed,
-            top1,
+            if labeled > 0 {
+                format!(", top-1 {:.1}%", 100.0 * correct as f64 / labeled as f64)
+            } else {
+                String::new()
+            }
         );
-        co.shutdown();
+        println!(
+            "{:>16} {:>4} {:>10} {:>10} {:>10} {:>10} {:>6}",
+            "service", "wrk", "p50 ms", "p99 ms", "mean ms", "avg batch", "shed"
+        );
+        for (lane_idx, lane) in lanes.iter().enumerate() {
+            let m = router.metrics(&lane.name).expect("registered lane");
+            let (p50, p99, mean) = m.total_latency();
+            println!(
+                "{:>16} {:>4} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>6}",
+                lane.name,
+                router.workers(&lane.name).unwrap_or(0),
+                p50 * 1e3,
+                p99 * 1e3,
+                mean * 1e3,
+                m.mean_batch(),
+                shed[lane_idx],
+            );
+        }
+        println!("merged: {}", router.merged_summary());
+        router.shutdown();
     }
     Ok(())
 }

@@ -1,0 +1,185 @@
+//! Mixed-load serving throughput through the `ServiceRouter` at the
+//! paper's shapes, with a machine-readable record (`BENCH_serving.json`)
+//! so the serving stack has a perf trajectory alongside the kernel one.
+//!
+//! One router process serves the full mixed workload — E2Softmax at
+//! L ∈ {49, 128, 785, 1024} and AILayerNorm at C = 768 — under an
+//! open-loop interleaved burst; per-service throughput and p50/p99/mean
+//! latency come from each service's own metrics shards, the merged view
+//! from the router's merge-on-read.  Request conservation
+//! (`completed + errors == accepted`, errors == 0) is asserted before
+//! anything is recorded.
+//!
+//! Flags: `--json` writes the JSON artifact (default path
+//! `<repo>/BENCH_serving.json`, override with `--out <path>`); `--quick`
+//! is the CI smoke mode (equivalent to `SOLE_BENCH_QUICK=1`: numbers are
+//! meaningless, the point is that every code path executes).
+
+use std::time::Instant;
+
+use sole::coordinator::{paper_services, Backend, BatchPolicy, ServiceRouter};
+use sole::util::bench::quick_mode;
+use sole::util::cli::Args;
+use sole::util::json::{obj, Json};
+use sole::util::rng::Rng;
+
+// one worker per paper service: the min-one-per-service floor makes any
+// smaller budget silently run 5 threads anyway, and the recorded
+// total_workers must match the threads that actually served the load
+const TOTAL_WORKERS: usize = 5;
+
+fn main() {
+    let args = Args::from_env();
+    if args.flag("quick") {
+        std::env::set_var("SOLE_BENCH_QUICK", "1");
+    }
+    let per_service = if quick_mode() { 48 } else { 2048 };
+    println!(
+        "bench_serving — mixed paper workload through the ServiceRouter \
+         ({TOTAL_WORKERS} workers, {per_service} requests/service){}",
+        if quick_mode() { " [QUICK smoke mode — numbers meaningless]" } else { "" }
+    );
+
+    let services = paper_services();
+    let policy =
+        BatchPolicy { max_wait: std::time::Duration::from_millis(1), ..BatchPolicy::default() };
+    let mut builder = ServiceRouter::builder(TOTAL_WORKERS).default_policy(policy);
+    for (name, be) in &services {
+        builder = builder.service(name, be.clone());
+    }
+    let router = builder.start().expect("router start");
+    let client = router.client();
+
+    // pre-generate one block of normal rows per service
+    let mut rng = Rng::new(0x501E);
+    let lanes: Vec<(String, usize, Vec<f32>)> = services
+        .iter()
+        .map(|(name, be)| {
+            let item = be.item_input_len();
+            let mut inputs = vec![0f32; 32 * item];
+            rng.fill_normal(&mut inputs, 0.0, 2.0);
+            (name.clone(), item, inputs)
+        })
+        .collect();
+
+    // open-loop interleaved burst: every service submits `per_service`
+    // requests, round-robin, as fast as the submitter can go
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(per_service * lanes.len());
+    for i in 0..per_service {
+        for (name, item, inputs) in &lanes {
+            let row = i % (inputs.len() / item);
+            let input = inputs[row * item..(row + 1) * item].to_vec();
+            pending.push(client.submit(name, input).expect("submit"));
+        }
+    }
+    for rx in pending {
+        rx.recv().expect("response");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let submitted = (per_service * lanes.len()) as u64;
+
+    // conservation before anything is recorded: every accepted request
+    // completed, nothing errored, nothing lost
+    let mut results: Vec<Json> = Vec::new();
+    let mut total_completed = 0u64;
+    println!(
+        "\n{:>16} {:>4} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "service", "wrk", "rows/s", "p50 ms", "p99 ms", "mean ms", "avg batch"
+    );
+    for (name, item, _) in &lanes {
+        let m = router.metrics(name).expect("registered service");
+        assert_eq!(m.accepted(), per_service as u64, "{name}: accepted");
+        assert_eq!(m.errors(), 0, "{name}: errors");
+        assert_eq!(m.completed() + m.errors(), m.accepted(), "{name}: conservation");
+        total_completed += m.completed();
+        let (p50, p99, mean) = m.total_latency();
+        let rows_per_sec = m.completed() as f64 / wall;
+        println!(
+            "{:>16} {:>4} {:>10.0} {:>10.2} {:>10.2} {:>10.2} {:>10.2}",
+            name,
+            router.workers(name).unwrap_or(0),
+            rows_per_sec,
+            p50 * 1e3,
+            p99 * 1e3,
+            mean * 1e3,
+            m.mean_batch(),
+        );
+        results.push(obj(vec![
+            ("service", Json::Str(name.clone())),
+            ("item_len", Json::Int(*item as i64)),
+            ("workers", Json::Int(router.workers(name).unwrap_or(0) as i64)),
+            ("completed", Json::Int(m.completed() as i64)),
+            ("rows_per_sec", Json::Num(rows_per_sec)),
+            ("p50_ms", Json::Num(p50 * 1e3)),
+            ("p99_ms", Json::Num(p99 * 1e3)),
+            ("mean_ms", Json::Num(mean * 1e3)),
+            ("mean_batch", Json::Num(m.mean_batch())),
+        ]));
+    }
+    assert_eq!(total_completed, submitted, "merged conservation");
+    // the recorded budget is the actual thread count (floor-one split)
+    let worker_sum: usize = lanes.iter().filter_map(|(n, _, _)| router.workers(n)).sum();
+    assert_eq!(worker_sum, TOTAL_WORKERS, "budget must match the served thread count");
+    let (mp50, mp99, mmean) = router.merged_latency();
+    let merged_rows_per_sec = submitted as f64 / wall;
+    println!(
+        "\nmerged: {submitted} requests in {wall:.2}s ({merged_rows_per_sec:.0} rows/s), \
+         p50 {:.2}ms p99 {:.2}ms mean {:.2}ms",
+        mp50 * 1e3,
+        mp99 * 1e3,
+        mmean * 1e3
+    );
+    println!("{}", router.summary());
+    router.shutdown();
+
+    if args.flag("json") {
+        let default_out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json");
+        if quick_mode() && args.opt("out").is_none() {
+            // never let smoke numbers silently replace the committed perf
+            // trajectory; smoke runs must name an explicit path
+            println!(
+                "quick mode: refusing to overwrite {default_out} with smoke numbers \
+                 (pass --out <path> to write them elsewhere)"
+            );
+            return;
+        }
+        let path = args.opt_str("out", default_out);
+        let doc = obj(vec![
+            ("bench", Json::Str("bench_serving".to_string())),
+            ("quick", Json::Bool(quick_mode())),
+            ("total_workers", Json::Int(TOTAL_WORKERS as i64)),
+            ("requests_per_service", Json::Int(per_service as i64)),
+            (
+                "units",
+                obj(vec![
+                    (
+                        "rows_per_sec",
+                        Json::Str("requests completed per wall second, mixed load".to_string()),
+                    ),
+                    (
+                        "p50_ms",
+                        Json::Str("median end-to-end latency (queue + exec), ms".to_string()),
+                    ),
+                    ("p99_ms", Json::Str("p99 end-to-end latency, ms".to_string())),
+                ]),
+            ),
+            (
+                "merged",
+                obj(vec![
+                    ("wall_s", Json::Num(wall)),
+                    ("completed", Json::Int(submitted as i64)),
+                    ("rows_per_sec", Json::Num(merged_rows_per_sec)),
+                    ("p50_ms", Json::Num(mp50 * 1e3)),
+                    ("p99_ms", Json::Num(mp99 * 1e3)),
+                    ("mean_ms", Json::Num(mmean * 1e3)),
+                ]),
+            ),
+            ("results", Json::Arr(results)),
+        ]);
+        let mut text = doc.to_string_compact();
+        text.push('\n');
+        std::fs::write(path, text).expect("write BENCH_serving.json");
+        println!("wrote {path}");
+    }
+}

@@ -21,6 +21,7 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use super::batcher::normalize_buckets;
 use crate::layernorm::{config::DEFAULT_ZP, AiLayerNorm};
 use crate::quant::{ptf_quantize_batch_into, PtfCalib};
 use crate::runtime::{Engine, LoadedModel};
@@ -87,7 +88,8 @@ impl PjrtBackend {
             let m = engine.load(id)?;
             models.insert(m.batch(), m);
         }
-        let buckets: Vec<usize> = models.keys().copied().collect();
+        let buckets = normalize_buckets(models.keys().copied().collect())
+            .with_context(|| format!("artifact family {model}/{variant}"))?;
         let any = models.values().next().unwrap();
         let item_in = any.meta.input_shape.iter().skip(1).product::<usize>();
         let item_out = any.meta.output_shape.iter().skip(1).product::<usize>();
@@ -119,15 +121,9 @@ impl Backend for PjrtBackend {
             .models
             .get(&bucket)
             .with_context(|| format!("no artifact for bucket {bucket}"))?;
-        let res = m.run_f32(inputs)?;
-        anyhow::ensure!(
-            res.len() == out.len(),
-            "artifact returned {} f32s, expected {}",
-            res.len(),
-            out.len()
-        );
-        out.copy_from_slice(&res);
-        Ok(())
+        // run-into-caller-buffer path: the output transfer lands directly
+        // in the worker's staged arena, no intermediate Vec at this layer
+        m.run_f32_into(inputs, out)
     }
 }
 
@@ -148,10 +144,19 @@ struct SoftmaxScratch {
 }
 
 impl SoftwareSoftmaxBackend {
-    pub fn new(l: usize, mut buckets: Vec<usize>) -> SoftwareSoftmaxBackend {
-        assert!(l > 0, "softmax rows must be non-empty");
-        buckets.sort_unstable();
-        SoftwareSoftmaxBackend { l, buckets, sm: E2Softmax::new(E2SoftmaxConfig::default()) }
+    /// Infallible constructor for known-good configs; panics with the
+    /// validation error otherwise (see `try_new`).
+    pub fn new(l: usize, buckets: Vec<usize>) -> SoftwareSoftmaxBackend {
+        SoftwareSoftmaxBackend::try_new(l, buckets)
+            .unwrap_or_else(|e| panic!("invalid SoftwareSoftmaxBackend config: {e}"))
+    }
+
+    /// Validating constructor: row length and bucket list are checked here,
+    /// on the caller's thread, not later inside a worker's `Batcher::new`.
+    pub fn try_new(l: usize, buckets: Vec<usize>) -> Result<SoftwareSoftmaxBackend> {
+        anyhow::ensure!(l > 0, "softmax rows must be non-empty");
+        let buckets = normalize_buckets(buckets).context("softmax service buckets")?;
+        Ok(SoftwareSoftmaxBackend { l, buckets, sm: E2Softmax::new(E2SoftmaxConfig::default()) })
     }
 }
 
@@ -212,16 +217,20 @@ struct LayerNormScratch {
 impl SoftwareLayerNormBackend {
     /// Identity-affine service (alpha = 0, gamma = 1, beta = 0) with a
     /// layer scale that maps roughly N(0, 4) inputs onto the u8 code grid.
+    /// Panics with the validation error on a bad bucket list (see
+    /// `with_calibration` for the error-returning path).
     pub fn new(c: usize, buckets: Vec<usize>) -> SoftwareLayerNormBackend {
         let cal = PtfCalib { alpha: vec![0u8; c], s: 1.0 / 32.0, zp: DEFAULT_ZP };
         SoftwareLayerNormBackend::with_calibration(c, buckets, cal, vec![1f32; c], vec![0f32; c])
-            .expect("identity calibration is always well-formed")
+            .unwrap_or_else(|e| panic!("invalid SoftwareLayerNormBackend config: {e}"))
     }
 
     /// Fully-specified service: a PTF calibration plus affine parameters.
+    /// Channel counts and the bucket list are validated here, on the
+    /// caller's thread, not later inside a worker's `Batcher::new`.
     pub fn with_calibration(
         c: usize,
-        mut buckets: Vec<usize>,
+        buckets: Vec<usize>,
         cal: PtfCalib,
         gamma: Vec<f32>,
         beta: Vec<f32>,
@@ -231,7 +240,7 @@ impl SoftwareLayerNormBackend {
             cal.alpha.len() == c && gamma.len() == c && beta.len() == c,
             "calibration lengths must match {c} channels"
         );
-        buckets.sort_unstable();
+        let buckets = normalize_buckets(buckets).context("layernorm service buckets")?;
         let ln = AiLayerNorm { zp: cal.zp };
         Ok(SoftwareLayerNormBackend { c, buckets, ln, cal, gamma, beta })
     }
@@ -293,6 +302,43 @@ mod tests {
     fn software_backend_rejects_bad_len() {
         let be = SoftwareSoftmaxBackend::new(32, vec![1]);
         assert!(be.run_alloc(1, &vec![0.0; 31]).is_err());
+    }
+
+    #[test]
+    fn constructors_reject_bad_bucket_lists() {
+        // empty and zero-sized bucket lists used to slip through and panic
+        // later inside Batcher::new on a worker thread; now they fail at
+        // construction with a clear error
+        assert!(SoftwareSoftmaxBackend::try_new(32, vec![]).is_err());
+        let err = SoftwareSoftmaxBackend::try_new(32, vec![4, 0]).unwrap_err();
+        assert!(format!("{err:#}").contains("zero"), "{err:#}");
+        assert!(SoftwareSoftmaxBackend::try_new(0, vec![1]).is_err());
+
+        let cal = PtfCalib { alpha: vec![0u8; 8], s: 1.0, zp: DEFAULT_ZP };
+        assert!(SoftwareLayerNormBackend::with_calibration(
+            8,
+            vec![],
+            cal.clone(),
+            vec![1f32; 8],
+            vec![0f32; 8]
+        )
+        .is_err());
+        assert!(SoftwareLayerNormBackend::with_calibration(
+            8,
+            vec![0, 2],
+            cal,
+            vec![1f32; 8],
+            vec![0f32; 8]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn constructors_dedup_and_sort_buckets() {
+        let be = SoftwareSoftmaxBackend::try_new(16, vec![8, 1, 8, 4]).unwrap();
+        assert_eq!(be.buckets(), &[1, 4, 8]);
+        let ln = SoftwareLayerNormBackend::new(16, vec![4, 4, 1]);
+        assert_eq!(ln.buckets(), &[1, 4]);
     }
 
     #[test]

@@ -25,6 +25,22 @@ impl Default for BatchPolicy {
     }
 }
 
+/// Validate + canonicalize a backend's bucket list at construction time:
+/// non-empty, no zero-sized bucket, sorted ascending, deduped.  Backends
+/// call this from their constructors so a bad list fails right there with
+/// a clear error instead of panicking later inside `Batcher::new` on a
+/// worker thread (where the panic is invisible to the caller).
+pub fn normalize_buckets(mut buckets: Vec<usize>) -> anyhow::Result<Vec<usize>> {
+    anyhow::ensure!(!buckets.is_empty(), "bucket list is empty: need at least one batch size");
+    anyhow::ensure!(
+        !buckets.contains(&0),
+        "bucket list {buckets:?} contains a zero batch size"
+    );
+    buckets.sort_unstable();
+    buckets.dedup();
+    Ok(buckets)
+}
+
 /// Pure decision logic (separated from the queue for testability).
 #[derive(Debug, Clone)]
 pub struct Batcher {
@@ -138,5 +154,18 @@ mod tests {
     fn buckets_deduped_and_sorted() {
         let b = mk(5, 16, &[8, 1, 8, 4]);
         assert_eq!(b.pick_bucket(3), 4);
+    }
+
+    #[test]
+    fn normalize_buckets_canonicalizes() {
+        assert_eq!(normalize_buckets(vec![8, 1, 8, 4]).unwrap(), vec![1, 4, 8]);
+        assert_eq!(normalize_buckets(vec![16]).unwrap(), vec![16]);
+    }
+
+    #[test]
+    fn normalize_buckets_rejects_empty_and_zero() {
+        assert!(normalize_buckets(vec![]).is_err());
+        let err = normalize_buckets(vec![4, 0, 8]).unwrap_err().to_string();
+        assert!(err.contains("zero"), "{err}");
     }
 }

@@ -5,6 +5,14 @@
 //! on a lock in the hot path; readers (`summary`, `total_latency`,
 //! `mean_batch`) merge the shards on demand — reads are rare and cheap,
 //! writes are per-request and must not serialize the pool.
+//!
+//! The counters pin the request-conservation invariant: every request the
+//! client enqueues bumps `accepted`, and eventually bumps exactly one of
+//! `completed` (response delivered) or `errors` (dropped by a failed
+//! batch), so `completed + errors == accepted` once the queue is drained.
+//!
+//! One `Metrics` instance covers one service; the router's cross-service
+//! view is merge-on-read too (`merged_summary` / `total_latency_of`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -14,6 +22,7 @@ use crate::util::stats::{LatencyHist, Streaming};
 
 /// Aggregated serving metrics (interior-mutable, worker-sharded).
 pub struct Metrics {
+    accepted: AtomicU64,
     completed: AtomicU64,
     errors: AtomicU64,
     shards: Vec<Mutex<Inner>>,
@@ -52,10 +61,17 @@ impl Metrics {
     /// One shard per worker; the coordinator sizes this to its pool.
     pub fn with_shards(n: usize) -> Metrics {
         Metrics {
+            accepted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             shards: (0..n.max(1)).map(|_| Mutex::new(Inner::default())).collect(),
         }
+    }
+
+    /// Record one request entering the queue (counted at enqueue, so
+    /// `completed + errors == accepted` holds once the queue drains).
+    pub fn record_accepted(&self) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record into shard 0 (single-writer callers).
@@ -83,7 +99,17 @@ impl Metrics {
     }
 
     pub fn record_error(&self) {
-        self.errors.fetch_add(1, Ordering::Relaxed);
+        self.record_errors(1);
+    }
+
+    /// Record `n` dropped requests at once (a failed batch drops every
+    /// request it carried — one error each, not one per batch).
+    pub fn record_errors(&self, n: u64) {
+        self.errors.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn accepted(&self) -> u64 {
+        self.accepted.load(Ordering::Relaxed)
     }
 
     pub fn completed(&self) -> u64 {
@@ -108,22 +134,17 @@ impl Metrics {
         acc
     }
 
-    /// One-line summary for the CLI / examples.
+    /// One-line summary for the CLI / examples (this service's view).
     pub fn summary(&self) -> String {
-        let g = self.merged();
-        format!(
-            "completed={} errors={} | total p50={:.2}ms p99={:.2}ms mean={:.2}ms | \
-             exec p50={:.2}ms | queue p50={:.2}ms | avg_batch={:.2} pad_waste={:.0}%",
-            self.completed(),
-            self.errors(),
-            g.total_hist.p50() * 1e3,
-            g.total_hist.p99() * 1e3,
-            g.total_hist.mean() * 1e3,
-            g.exec_hist.p50() * 1e3,
-            g.queue_hist.p50() * 1e3,
-            g.batch_sizes.mean(),
-            g.padding_waste.mean() * 100.0,
-        )
+        format_summary(self.accepted(), self.completed(), self.errors(), &self.merged())
+    }
+
+    /// One-line summary merged across many services' metrics — the
+    /// router's cross-service view (exact histogram merge, parallel
+    /// Welford for the streaming stats, summed counters).
+    pub fn merged_summary<'a, I: IntoIterator<Item = &'a Metrics>>(all: I) -> String {
+        let (accepted, completed, errors, g) = merge_all(all);
+        format_summary(accepted, completed, errors, &g)
     }
 
     /// (p50, p99, mean) of end-to-end latency in seconds, over all shards.
@@ -132,9 +153,44 @@ impl Metrics {
         (g.total_hist.p50(), g.total_hist.p99(), g.total_hist.mean())
     }
 
+    /// (p50, p99, mean) of end-to-end latency merged across many services
+    /// (the router's cross-service latency view).
+    pub fn total_latency_of<'a, I: IntoIterator<Item = &'a Metrics>>(all: I) -> (f64, f64, f64) {
+        let (_, _, _, g) = merge_all(all);
+        (g.total_hist.p50(), g.total_hist.p99(), g.total_hist.mean())
+    }
+
     pub fn mean_batch(&self) -> f64 {
         self.merged().batch_sizes.mean()
     }
+}
+
+/// Sum the counters and merge the shard state of many metrics instances.
+fn merge_all<'a, I: IntoIterator<Item = &'a Metrics>>(all: I) -> (u64, u64, u64, Inner) {
+    let (mut accepted, mut completed, mut errors) = (0, 0, 0);
+    let mut acc = Inner::default();
+    for m in all {
+        accepted += m.accepted();
+        completed += m.completed();
+        errors += m.errors();
+        acc.merge_from(&m.merged());
+    }
+    (accepted, completed, errors, acc)
+}
+
+fn format_summary(accepted: u64, completed: u64, errors: u64, g: &Inner) -> String {
+    format!(
+        "accepted={accepted} completed={completed} errors={errors} | \
+         total p50={:.2}ms p99={:.2}ms mean={:.2}ms | \
+         exec p50={:.2}ms | queue p50={:.2}ms | avg_batch={:.2} pad_waste={:.0}%",
+        g.total_hist.p50() * 1e3,
+        g.total_hist.p99() * 1e3,
+        g.total_hist.mean() * 1e3,
+        g.exec_hist.p50() * 1e3,
+        g.queue_hist.p50() * 1e3,
+        g.batch_sizes.mean(),
+        g.padding_waste.mean() * 100.0,
+    )
 }
 
 #[cfg(test)]
@@ -191,6 +247,46 @@ mod tests {
         m.record_shard(7, Duration::from_micros(5), Duration::from_micros(9), 4, 2);
         assert_eq!(m.completed(), 1);
         assert!(m.mean_batch() > 0.0);
+    }
+
+    #[test]
+    fn error_batches_count_per_request() {
+        let m = Metrics::new();
+        for _ in 0..10 {
+            m.record_accepted();
+        }
+        for _ in 0..7 {
+            m.record(Duration::from_micros(3), Duration::from_micros(5), 4, 4);
+        }
+        m.record_errors(3); // one failed 3-request batch
+        assert_eq!(m.accepted(), 10);
+        assert_eq!(m.completed() + m.errors(), m.accepted());
+        let s = m.summary();
+        assert!(s.contains("accepted=10"), "{s}");
+        assert!(s.contains("errors=3"), "{s}");
+    }
+
+    #[test]
+    fn merged_views_sum_across_services() {
+        let a = Metrics::new();
+        let b = Metrics::with_shards(2);
+        for i in 1..=50u64 {
+            a.record_accepted();
+            a.record(Duration::from_micros(i), Duration::from_micros(2 * i), 8, 4);
+            b.record_accepted();
+            let (q, e) = (Duration::from_micros(3 * i), Duration::from_micros(i));
+            b.record_shard(i as usize % 2, q, e, 8, 2);
+        }
+        b.record_accepted();
+        b.record_error();
+        let s = Metrics::merged_summary([&a, &b]);
+        assert!(s.contains("accepted=101"), "{s}");
+        assert!(s.contains("completed=100"), "{s}");
+        assert!(s.contains("errors=1"), "{s}");
+        let (p50, p99, mean) = Metrics::total_latency_of([&a, &b]);
+        assert!(p50 > 0.0 && p99 >= p50 && mean > 0.0);
+        // merging one instance reproduces its own view exactly
+        assert_eq!(Metrics::total_latency_of([&a]), a.total_latency());
     }
 
     #[test]

@@ -18,10 +18,15 @@
 //! software op-services execute the packed buffer with a single
 //! batch-kernel call (`forward_batch_f32`) — the per-row loop lives inside
 //! the planar kernel, not in the dispatch layer.
+//!
+//! One `Coordinator` serves one backend at one item length; `router`
+//! (DESIGN.md §5.1) stacks many of them behind named services so a single
+//! process serves the paper's full mixed-op, mixed-shape workload.
 
 pub mod backend;
 pub mod batcher;
 pub mod metrics;
+pub mod router;
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -33,8 +38,9 @@ use anyhow::Result;
 pub use backend::{
     Backend, BackendScratch, PjrtBackend, SoftwareLayerNormBackend, SoftwareSoftmaxBackend,
 };
-pub use batcher::{BatchPolicy, Batcher};
+pub use batcher::{normalize_buckets, BatchPolicy, Batcher};
 pub use metrics::Metrics;
+pub use router::{paper_services, RouterClient, ServiceRouter, ServiceRouterBuilder, ServiceSpec};
 
 /// One inference request: a flat f32 item (e.g. one image or one row).
 pub struct Request {
@@ -77,6 +83,7 @@ struct Shared {
 pub struct Client {
     shared: Arc<Shared>,
     next_id: Arc<AtomicU64>,
+    metrics: Arc<Metrics>,
     item_len: usize,
 }
 
@@ -131,6 +138,10 @@ impl Client {
             submitted: Instant::now(),
             resp: tx,
         });
+        // counted under the queue lock: once enqueued the request is owned
+        // by the coordinator and will resolve as exactly one completion or
+        // one error, so completed + errors == accepted after a drain
+        self.metrics.record_accepted();
         drop(q);
         self.shared.available.notify_one();
         Ok(TrySubmit::Accepted(rx))
@@ -139,6 +150,11 @@ impl Client {
     /// Blocking one-shot convenience.
     pub fn infer(&self, input: Vec<f32>) -> Result<Response> {
         Ok(self.submit(input)?.recv()?)
+    }
+
+    /// Flat f32 length this client's service expects per item.
+    pub fn item_len(&self) -> usize {
+        self.item_len
     }
 }
 
@@ -178,7 +194,17 @@ impl Coordinator {
     }
 
     pub fn client(&self) -> Client {
-        Client { shared: self.shared.clone(), next_id: self.next_id.clone(), item_len: self.item_len }
+        Client {
+            shared: self.shared.clone(),
+            next_id: self.next_id.clone(),
+            metrics: self.metrics.clone(),
+            item_len: self.item_len,
+        }
+    }
+
+    /// Flat f32 length of one item this coordinator's backend expects.
+    pub fn item_len(&self) -> usize {
+        self.item_len
     }
 
     /// Graceful shutdown: **drains the queue** — every request already
@@ -237,22 +263,27 @@ fn worker_loop(
                     .unwrap();
                 q = guard;
             }
-            // first request's age decides whether we keep waiting for more
-            let oldest = q.front().unwrap().submitted;
-            let mut q = q;
+            // the *current* front's age decides whether we keep waiting for
+            // more — re-read it after every wake: the lock is released
+            // inside wait_timeout, so a peer worker may dispatch the request
+            // this iteration started from, and a dead request's age must not
+            // drive should_dispatch / remaining_wait (it would dispatch a
+            // fresh request prematurely or mis-size the sleep)
             loop {
-                let n = q.len();
-                if batcher.should_dispatch(n, oldest.elapsed()) {
+                if q.is_empty() {
+                    break; // a peer drained everything while we slept
+                }
+                let oldest_wait = q.front().unwrap().submitted.elapsed();
+                if batcher.should_dispatch(q.len(), oldest_wait)
+                    || shared.shutdown.load(Ordering::SeqCst)
+                {
                     break;
                 }
-                let (guard, timeout) = shared
+                let (guard, _t) = shared
                     .available
-                    .wait_timeout(q, batcher.remaining_wait(oldest.elapsed()))
+                    .wait_timeout(q, batcher.remaining_wait(oldest_wait))
                     .unwrap();
                 q = guard;
-                if timeout.timed_out() || shared.shutdown.load(Ordering::SeqCst) {
-                    break;
-                }
             }
             let bucket = batcher.pick_bucket(q.len());
             let take = bucket.min(q.len());
@@ -309,9 +340,12 @@ fn execute_batch(
             }
         }
         Err(e) => {
-            metrics.record_error();
+            // a failed batch drops every request it carried: count one
+            // error per dropped request, not one per batch, so that
+            // completed + errors always accounts for every accepted request
+            metrics.record_errors(n as u64);
             // drop senders -> callers observe RecvError
-            eprintln!("batch execution failed: {e:#}");
+            eprintln!("batch execution failed ({n} requests dropped): {e:#}");
             arena.batch.clear();
         }
     }
@@ -448,6 +482,112 @@ mod tests {
             out.copy_from_slice(inputs);
             Ok(())
         }
+    }
+
+    #[test]
+    fn stale_front_age_does_not_dispatch_fresh_requests_prematurely() {
+        // regression (stale dispatch age): a worker used to capture the
+        // front request's `submitted` once before its condvar loop; when a
+        // peer dispatched that request, the stale age made should_dispatch
+        // fire immediately for the *next* (fresh) request, breaking up
+        // batches.  With the fix, a fresh burst must batch.
+        let be = Arc::new(SlowEcho { l: 4, buckets: vec![1, 8], delay: Duration::from_millis(1) });
+        let co = Coordinator::start(be, policy(150, 8), 2);
+        let cl = co.client();
+        for round in 0..3 {
+            // an aging solo request: one worker dispatches it at ~150ms,
+            // leaving any peer sitting in the batching wait with its age
+            let lone = cl.submit(vec![0.0; 4]).unwrap();
+            std::thread::sleep(Duration::from_millis(200));
+            // a fresh burst that fills a whole bucket: no request in it has
+            // waited anywhere near max_wait, so none may dispatch solo
+            let fresh: Vec<_> = (0..8).map(|_| cl.submit(vec![1.0; 4]).unwrap()).collect();
+            lone.recv().unwrap();
+            for rx in fresh {
+                let r = rx.recv().unwrap();
+                assert!(
+                    r.batch_size > 1 || r.queue_time >= Duration::from_millis(100),
+                    "round {round}: fresh request dispatched solo after only {:?}",
+                    r.queue_time
+                );
+            }
+        }
+        co.shutdown();
+    }
+
+    /// Backend that fails any batch carrying the poison sentinel; clean
+    /// batches echo their input.
+    struct PoisonEcho {
+        l: usize,
+        buckets: Vec<usize>,
+    }
+
+    impl Backend for PoisonEcho {
+        fn item_input_len(&self) -> usize {
+            self.l
+        }
+        fn item_output_len(&self) -> usize {
+            self.l
+        }
+        fn buckets(&self) -> &[usize] {
+            &self.buckets
+        }
+        fn run(
+            &self,
+            _bucket: usize,
+            inputs: &[f32],
+            out: &mut [f32],
+            _scratch: &mut BackendScratch,
+        ) -> Result<()> {
+            anyhow::ensure!(!inputs.contains(&POISON), "poisoned batch");
+            out.copy_from_slice(inputs);
+            Ok(())
+        }
+    }
+
+    const POISON: f32 = -1e30;
+
+    #[test]
+    fn failing_backend_counts_one_error_per_dropped_request() {
+        // regression (error accounting): a failed batch used to record ONE
+        // error while dropping n requests, so completed + errors
+        // undercounted accepted.  Pin the conservation invariant, and that
+        // batches after a failure are still served.
+        let be = Arc::new(PoisonEcho { l: 4, buckets: vec![1, 4] });
+        let co = Coordinator::start(be, policy(2, 4), 2);
+        let cl = co.client();
+        let rxs: Vec<_> = (0..40)
+            .map(|i| {
+                let v = if i % 5 == 0 { POISON } else { 0.5 };
+                cl.submit(vec![v; 4]).unwrap()
+            })
+            .collect();
+        let (mut oks, mut drops) = (0u64, 0u64);
+        for rx in rxs {
+            match rx.recv() {
+                Ok(r) => {
+                    assert_eq!(r.output, vec![0.5; 4]);
+                    oks += 1;
+                }
+                Err(_) => drops += 1, // sender dropped by the failed batch
+            }
+        }
+        // poison hit at least its own 8 requests; clean singleton batches
+        // may still have served some of the rest
+        assert!(drops >= 8, "drops {drops}");
+        // the pool keeps serving after failures: a clean request succeeds
+        let tail = cl.infer(vec![0.25; 4]).unwrap();
+        assert_eq!(tail.output, vec![0.25; 4]);
+        oks += 1;
+        assert_eq!(co.metrics.accepted(), 41);
+        assert_eq!(co.metrics.completed(), oks);
+        assert_eq!(co.metrics.errors(), drops);
+        assert_eq!(
+            co.metrics.completed() + co.metrics.errors(),
+            co.metrics.accepted(),
+            "conservation: completed + errors == accepted"
+        );
+        co.shutdown();
     }
 
     #[test]

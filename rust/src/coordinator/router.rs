@@ -1,0 +1,367 @@
+//! ServiceRouter: one serving process, many op/shape services.
+//!
+//! SOLE's point is serving *both* E2Softmax and AILayerNorm — at the
+//! paper's mixed shapes (softmax L ∈ {49, 128, 785, 1024}, layernorm at
+//! transformer channel widths) — from one inference stack.  A single
+//! `Coordinator` serves exactly one backend at one item length, so the
+//! router layers a registry of named services on top: each service owns a
+//! full coordinator (bucketed queue, worker pool, metrics shards) and the
+//! `RouterClient` routes a request to its service by name, validating the
+//! item length against that service's contract.
+//!
+//! The worker budget is shared: `total_workers` is split across services
+//! by weight (largest-remainder, minimum one worker each), so hot
+//! services — the shapes carrying most of the traffic — can be given a
+//! larger share without starving the rest.  Metrics stay per-service
+//! (each coordinator keeps its own sharded `Metrics`) and merge on read
+//! for the cross-service view (`Metrics::merged_summary`).
+
+use std::collections::BTreeMap;
+use std::sync::{mpsc, Arc};
+
+use anyhow::{Context, Result};
+
+use super::backend::{Backend, SoftwareLayerNormBackend, SoftwareSoftmaxBackend};
+use super::batcher::BatchPolicy;
+use super::metrics::Metrics;
+use super::{Client, Coordinator, Response, TrySubmit};
+
+/// Declarative description of one named service before the router starts.
+pub struct ServiceSpec {
+    pub name: String,
+    pub backend: Arc<dyn Backend>,
+    pub policy: BatchPolicy,
+    /// Worker-budget weight: the service's share of `total_workers` is
+    /// proportional to this (every service keeps at least one worker).
+    pub weight: usize,
+}
+
+/// Builder: register services, then `start()` the per-service pools.
+pub struct ServiceRouterBuilder {
+    total_workers: usize,
+    default_policy: BatchPolicy,
+    specs: Vec<ServiceSpec>,
+}
+
+impl ServiceRouterBuilder {
+    /// Policy applied to services registered without an explicit one.
+    pub fn default_policy(mut self, policy: BatchPolicy) -> Self {
+        self.default_policy = policy;
+        self
+    }
+
+    /// Register a service under the default policy, weight 1.
+    pub fn service(self, name: &str, backend: Arc<dyn Backend>) -> Self {
+        let policy = self.default_policy.clone();
+        self.spec(ServiceSpec { name: name.to_string(), backend, policy, weight: 1 })
+    }
+
+    /// Register a hot service: default policy, `weight`x worker share.
+    pub fn hot_service(self, name: &str, backend: Arc<dyn Backend>, weight: usize) -> Self {
+        let policy = self.default_policy.clone();
+        self.spec(ServiceSpec { name: name.to_string(), backend, policy, weight })
+    }
+
+    /// Register a fully-specified service.
+    pub fn spec(mut self, spec: ServiceSpec) -> Self {
+        self.specs.push(spec);
+        self
+    }
+
+    /// Split the worker budget and start every service's pool.
+    pub fn start(self) -> Result<ServiceRouter> {
+        anyhow::ensure!(!self.specs.is_empty(), "router needs at least one service");
+        // validate every name before spawning anything: a failure after
+        // Coordinator::start would leak running worker pools
+        {
+            let mut seen = std::collections::BTreeSet::new();
+            for spec in &self.specs {
+                anyhow::ensure!(!spec.name.is_empty(), "service name must be non-empty");
+                anyhow::ensure!(seen.insert(&spec.name), "duplicate service name '{}'", spec.name);
+            }
+        }
+        let weights: Vec<usize> = self.specs.iter().map(|s| s.weight.max(1)).collect();
+        let shares = split_workers(self.total_workers, &weights);
+        let mut services = BTreeMap::new();
+        for (spec, workers) in self.specs.into_iter().zip(shares) {
+            let coordinator = Coordinator::start(spec.backend, spec.policy, workers);
+            services.insert(spec.name, Service { coordinator, workers });
+        }
+        Ok(ServiceRouter { services })
+    }
+}
+
+/// One running service: a coordinator with its own queue, worker pool and
+/// metrics shards.
+struct Service {
+    coordinator: Coordinator,
+    workers: usize,
+}
+
+/// The registry of running services behind one process.
+pub struct ServiceRouter {
+    services: BTreeMap<String, Service>,
+}
+
+impl ServiceRouter {
+    /// Start building a router over a shared worker budget.
+    pub fn builder(total_workers: usize) -> ServiceRouterBuilder {
+        ServiceRouterBuilder {
+            total_workers: total_workers.max(1),
+            default_policy: BatchPolicy::default(),
+            specs: Vec::new(),
+        }
+    }
+
+    /// Registered service names, ascending.
+    pub fn services(&self) -> Vec<&str> {
+        self.services.keys().map(String::as_str).collect()
+    }
+
+    /// This service's metrics (None for an unknown name).
+    pub fn metrics(&self, service: &str) -> Option<&Arc<Metrics>> {
+        self.services.get(service).map(|s| &s.coordinator.metrics)
+    }
+
+    /// Workers assigned to this service by the budget split.
+    pub fn workers(&self, service: &str) -> Option<usize> {
+        self.services.get(service).map(|s| s.workers)
+    }
+
+    /// A cloneable handle routing requests by service name.
+    pub fn client(&self) -> RouterClient {
+        RouterClient {
+            routes: Arc::new(
+                self.services
+                    .iter()
+                    .map(|(name, s)| (name.clone(), s.coordinator.client()))
+                    .collect(),
+            ),
+        }
+    }
+
+    /// Cross-service merged metrics line.
+    pub fn merged_summary(&self) -> String {
+        Metrics::merged_summary(self.services.values().map(|s| &*s.coordinator.metrics))
+    }
+
+    /// Cross-service merged (p50, p99, mean) end-to-end latency, seconds.
+    pub fn merged_latency(&self) -> (f64, f64, f64) {
+        Metrics::total_latency_of(self.services.values().map(|s| &*s.coordinator.metrics))
+    }
+
+    /// Multi-line report: one line per service plus the merged view.
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for (name, s) in &self.services {
+            let line = format!("{name} [{}w]: {}\n", s.workers, s.coordinator.metrics.summary());
+            out.push_str(&line);
+        }
+        out.push_str(&format!("merged: {}", self.merged_summary()));
+        out
+    }
+
+    /// Graceful shutdown of every service — each coordinator drains its
+    /// queue, so every accepted request is answered first.
+    pub fn shutdown(self) {
+        for (_, s) in self.services {
+            s.coordinator.shutdown();
+        }
+    }
+}
+
+/// Routing handle: validates the service name, then defers to that
+/// service's `Client` (which validates the per-service item length).
+#[derive(Clone)]
+pub struct RouterClient {
+    routes: Arc<BTreeMap<String, Client>>,
+}
+
+impl RouterClient {
+    fn route(&self, service: &str) -> Result<&Client> {
+        self.routes.get(service).with_context(|| {
+            let known: Vec<&str> = self.routes.keys().map(String::as_str).collect();
+            format!("unknown service '{service}' (registered: {})", known.join(", "))
+        })
+    }
+
+    /// Registered service names, ascending.
+    pub fn services(&self) -> Vec<&str> {
+        self.routes.keys().map(String::as_str).collect()
+    }
+
+    /// Flat f32 item length `service` expects.
+    pub fn item_len(&self, service: &str) -> Result<usize> {
+        Ok(self.route(service)?.item_len())
+    }
+
+    /// Submit one item to `service`; returns the response receiver.
+    pub fn submit(&self, service: &str, input: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        self.route(service)?.submit(input).with_context(|| format!("service '{service}'"))
+    }
+
+    /// Non-blocking submit to `service` (see `Client::try_submit`).
+    pub fn try_submit(&self, service: &str, input: Vec<f32>) -> Result<TrySubmit> {
+        self.route(service)?.try_submit(input).with_context(|| format!("service '{service}'"))
+    }
+
+    /// Blocking one-shot convenience.
+    pub fn infer(&self, service: &str, input: Vec<f32>) -> Result<Response> {
+        self.route(service)?.infer(input).with_context(|| format!("service '{service}'"))
+    }
+}
+
+/// Largest-remainder split of `total` workers across `weights`, minimum
+/// one worker per service (so the sum exceeds `total` when there are more
+/// services than workers).  Deterministic: remainder ties break by index.
+fn split_workers(total: usize, weights: &[usize]) -> Vec<usize> {
+    let sum: usize = weights.iter().sum::<usize>().max(1);
+    let mut shares: Vec<usize> = weights.iter().map(|&w| total * w / sum).collect();
+    let assigned: usize = shares.iter().sum();
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by_key(|&i| (std::cmp::Reverse(total * weights[i] % sum), i));
+    for &i in order.iter().take(total.saturating_sub(assigned)) {
+        shares[i] += 1;
+    }
+    for s in &mut shares {
+        *s = (*s).max(1);
+    }
+    shares
+}
+
+/// The paper's mixed software workload as a ready-to-register service
+/// list: bit-exact E2Softmax row services at the evaluated sequence
+/// lengths L ∈ {49, 128, 785, 1024} and the AILayerNorm service at the
+/// transformer channel width C = 768, all bucketed 1/4/8/16.
+pub fn paper_services() -> Vec<(String, Arc<dyn Backend>)> {
+    let mut v: Vec<(String, Arc<dyn Backend>)> = Vec::new();
+    for &l in &[49usize, 128, 785, 1024] {
+        v.push((
+            format!("softmax/L{l}"),
+            Arc::new(SoftwareSoftmaxBackend::new(l, vec![1, 4, 8, 16])) as Arc<dyn Backend>,
+        ));
+    }
+    v.push((
+        "layernorm/C768".to_string(),
+        Arc::new(SoftwareLayerNormBackend::new(768, vec![1, 4, 8, 16])) as Arc<dyn Backend>,
+    ));
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn quick_policy() -> BatchPolicy {
+        BatchPolicy { max_wait: Duration::from_millis(1), max_batch: 8, queue_cap: None }
+    }
+
+    fn two_service_router(total_workers: usize) -> ServiceRouter {
+        ServiceRouter::builder(total_workers)
+            .default_policy(quick_policy())
+            .service("softmax/L32", Arc::new(SoftwareSoftmaxBackend::new(32, vec![1, 4, 8])))
+            .service("layernorm/C64", Arc::new(SoftwareLayerNormBackend::new(64, vec![1, 4, 8])))
+            .start()
+            .unwrap()
+    }
+
+    #[test]
+    fn routes_by_service_name_and_answers() {
+        let router = two_service_router(2);
+        assert_eq!(router.services(), vec!["layernorm/C64", "softmax/L32"]);
+        let cl = router.client();
+        let sm = cl.infer("softmax/L32", vec![0.5; 32]).unwrap();
+        assert_eq!(sm.output.len(), 32);
+        let ln = cl.infer("layernorm/C64", vec![0.5; 64]).unwrap();
+        assert_eq!(ln.output.len(), 64);
+        assert_eq!(router.metrics("softmax/L32").unwrap().completed(), 1);
+        assert_eq!(router.metrics("layernorm/C64").unwrap().completed(), 1);
+        router.shutdown();
+    }
+
+    #[test]
+    fn unknown_service_and_wrong_len_error_clearly() {
+        let router = two_service_router(2);
+        let cl = router.client();
+        let err = format!("{:#}", cl.infer("softmax/L999", vec![0.0; 32]).unwrap_err());
+        assert!(err.contains("unknown service"), "{err}");
+        assert!(err.contains("softmax/L32"), "listing registered names: {err}");
+        // per-service item-length validation names the service
+        let err = format!("{:#}", cl.submit("softmax/L32", vec![0.0; 31]).unwrap_err());
+        assert!(err.contains("softmax/L32"), "{err}");
+        assert!(err.contains("31"), "{err}");
+        router.shutdown();
+    }
+
+    #[test]
+    fn builder_rejects_duplicates_and_empty() {
+        assert!(ServiceRouter::builder(2).start().is_err());
+        let dup = ServiceRouter::builder(2)
+            .service("a", Arc::new(SoftwareSoftmaxBackend::new(8, vec![1])))
+            .service("a", Arc::new(SoftwareSoftmaxBackend::new(8, vec![1])))
+            .start();
+        assert!(dup.is_err());
+        let unnamed = ServiceRouter::builder(2)
+            .service("", Arc::new(SoftwareSoftmaxBackend::new(8, vec![1])))
+            .start();
+        assert!(unnamed.is_err());
+    }
+
+    #[test]
+    fn worker_budget_split_is_weighted_with_floor_one() {
+        // equal weights: 8 workers over 4 services -> 2 each
+        assert_eq!(split_workers(8, &[1, 1, 1, 1]), vec![2, 2, 2, 2]);
+        // hot service takes its share, everyone keeps >= 1
+        assert_eq!(split_workers(6, &[1, 1, 4]), vec![1, 1, 4]);
+        // more services than workers: floor of one each
+        assert_eq!(split_workers(2, &[1, 1, 1]), vec![1, 1, 1]);
+        // largest remainder gets the leftover, ties by index
+        assert_eq!(split_workers(5, &[1, 1, 1]), vec![2, 2, 1]);
+        let total: usize = split_workers(16, &[3, 1, 1, 1]).iter().sum();
+        assert_eq!(total, 16);
+    }
+
+    #[test]
+    fn hot_service_receives_larger_pool() {
+        let router = ServiceRouter::builder(6)
+            .default_policy(quick_policy())
+            .hot_service("hot", Arc::new(SoftwareSoftmaxBackend::new(16, vec![1, 4])), 4)
+            .service("cold", Arc::new(SoftwareSoftmaxBackend::new(16, vec![1, 4])))
+            .start()
+            .unwrap();
+        assert!(router.workers("hot").unwrap() > router.workers("cold").unwrap());
+        assert_eq!(router.metrics("hot").unwrap().shard_count(), router.workers("hot").unwrap());
+        router.shutdown();
+    }
+
+    #[test]
+    fn summary_reports_per_service_and_merged() {
+        let router = two_service_router(2);
+        let cl = router.client();
+        for _ in 0..5 {
+            cl.infer("softmax/L32", vec![0.1; 32]).unwrap();
+            cl.infer("layernorm/C64", vec![0.1; 64]).unwrap();
+        }
+        let s = router.summary();
+        assert!(s.contains("softmax/L32"), "{s}");
+        assert!(s.contains("layernorm/C64"), "{s}");
+        assert!(s.contains("merged: accepted=10 completed=10"), "{s}");
+        router.shutdown();
+    }
+
+    #[test]
+    fn paper_services_cover_the_evaluated_shapes() {
+        let svcs = paper_services();
+        let names: Vec<&str> = svcs.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["softmax/L49", "softmax/L128", "softmax/L785", "softmax/L1024", "layernorm/C768"]
+        );
+        for (name, be) in &svcs {
+            let l: usize = name.rsplit(['L', 'C']).next().unwrap().parse().unwrap();
+            assert_eq!(be.item_input_len(), l, "{name}");
+            assert_eq!(be.buckets(), &[1, 4, 8, 16], "{name}");
+        }
+    }
+}

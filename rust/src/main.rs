@@ -3,18 +3,26 @@
 //! ```text
 //! sole experiment <fig1a|fig3|fig6a|fig6b|table1|table2|table3|compress-error|ablation|all>
 //!      [--artifacts DIR] [--samples N] [--batches 1,2,4,8,16]
-//! sole serve [--artifacts DIR] [--model deit_t] [--variant fp32_sole]
+//! sole serve [--artifacts DIR] [--model deit_t] [--variant fp32_sole] [--all-families]
 //!      [--requests N] [--rate R] [--max-wait-ms W] [--workers K] [--queue-cap N]
 //! sole info [--artifacts DIR]
 //! ```
+//!
+//! `serve` runs one `ServiceRouter` process.  With artifacts (and the
+//! `pjrt` feature) it discovers the manifest's (model, variant) families
+//! and serves the requested one — or every family with `--all-families` —
+//! as named services; without artifacts it serves the paper's mixed
+//! software workload (softmax L ∈ {49, 128, 785, 1024} + layernorm
+//! C = 768).  `--workers` is the *total* worker budget, split across
+//! services (hot service weighted up, minimum one each).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use sole::coordinator::{BatchPolicy, Coordinator, PjrtBackend};
+use sole::coordinator::{paper_services, Backend, BatchPolicy, PjrtBackend, ServiceRouter};
 use sole::experiments::{self, ExperimentOut};
 use sole::runtime::Engine;
 use sole::tensor::Bundle;
@@ -31,7 +39,8 @@ fn main() -> Result<()> {
             eprintln!(
                 "sole {} — SOLE reproduction CLI\n\
                  usage:\n  sole experiment <fig1a|fig3|fig6a|fig6b|table1|table2|table3|compress-error|ablation|all>\n\
-                 \x20 sole serve [--model deit_t] [--variant fp32_sole] [--requests 64] [--rate 8]\n\
+                 \x20 sole serve [--model deit_t] [--variant fp32_sole] [--all-families] \
+                 [--requests 64] [--rate 8] [--workers 4]\n\
                  \x20 sole info",
                 sole::VERSION
             );
@@ -105,38 +114,81 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let artifacts = artifacts_path(args);
-    let model = args.opt_str("model", "deit_t").to_string();
-    let variant = args.opt_str("variant", "fp32_sole").to_string();
     let n_requests = args.opt_usize("requests", 64);
     let rate = args.opt_f64("rate", 16.0); // req/s (Poisson arrivals)
     let max_wait = Duration::from_millis(args.opt_usize("max-wait-ms", 20) as u64);
-    let workers = args.opt_usize("workers", 1);
+    let workers = args.opt_usize("workers", 4); // total budget, split across services
     let queue_cap = match args.opt_usize("queue-cap", 0) {
         0 => None,
         cap => Some(cap),
     };
+    let policy = BatchPolicy { max_wait, max_batch: 16, queue_cap };
 
-    let engine = Engine::open(&artifacts)?;
-    println!("platform {}; loading {model}/{variant} buckets ...", engine.platform());
-    let backend = Arc::new(PjrtBackend::from_family(&engine, &model, &variant)?);
-    let (buckets, item_len) = {
-        use sole::coordinator::Backend as _;
-        (backend.buckets().to_vec(), backend.item_input_len())
-    };
-    println!("buckets: {buckets:?}");
-    let co =
-        Coordinator::start(backend, BatchPolicy { max_wait, max_batch: 16, queue_cap }, workers);
-    let client = co.client();
+    let have_artifacts = artifacts.join("manifest.json").exists();
+    if have_artifacts && cfg!(feature = "pjrt") {
+        serve_artifact_families(args, &artifacts, n_requests, rate, workers, policy)
+    } else {
+        if have_artifacts {
+            println!(
+                "artifacts found but built without --features pjrt — \
+                 serving the software op-services instead"
+            );
+        }
+        serve_software_mix(n_requests, rate, workers, policy)
+    }
+}
+
+/// Artifact path: discover the manifest's (model, variant) families,
+/// register them as router services, drive the eval-set workload against
+/// the requested (hot) one.
+fn serve_artifact_families(
+    args: &Args,
+    artifacts: &Path,
+    n_requests: usize,
+    rate: f64,
+    workers: usize,
+    policy: BatchPolicy,
+) -> Result<()> {
+    let model = args.opt_str("model", "deit_t").to_string();
+    let variant = args.opt_str("variant", "fp32_sole").to_string();
+    let target = format!("{model}/{variant}");
+    let engine = Engine::open(artifacts)?;
+    println!("platform {}", engine.platform());
+
+    let families = engine.manifest.families();
+    let names: Vec<String> = families.iter().map(|f| f.service_name()).collect();
+    anyhow::ensure!(
+        names.iter().any(|n| n == &target),
+        "no artifacts for {target} (families: {})",
+        names.join(", ")
+    );
+    let mut builder = ServiceRouter::builder(workers).default_policy(policy);
+    for fam in &families {
+        let name = fam.service_name();
+        if !args.flag("all-families") && name != target {
+            continue;
+        }
+        let backend = Arc::new(PjrtBackend::from_family(&engine, &fam.model, &fam.variant)?);
+        println!("service {name}: buckets {:?}, item {} f32", fam.buckets, fam.item_len);
+        builder = if name == target {
+            builder.hot_service(&name, backend, 2) // the driven family gets 2x share
+        } else {
+            builder.service(&name, backend)
+        };
+    }
+    let router = builder.start()?;
+    let client = router.client();
+    let item_len = client.item_len(&target)?;
 
     // drive a Poisson-arrival open-loop workload from the eval set
     let data = Bundle::load(&artifacts.join("data/cv_eval"))?;
     let xs = data.get("x")?.as_f32()?;
     let mut rng = Rng::new(1234);
-    let t0 = std::time::Instant::now();
+    let t0 = Instant::now();
     let mut pending = Vec::new();
     for i in 0..n_requests {
         let start = (i * item_len) % (xs.len() - item_len);
-        pending.push(client.submit(xs[start..start + item_len].to_vec())?);
+        pending.push(client.submit(&target, xs[start..start + item_len].to_vec())?);
         std::thread::sleep(Duration::from_secs_f64(rng.exponential(rate)));
     }
     for rx in pending {
@@ -144,8 +196,55 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     println!("served {n_requests} requests in {wall:.2}s ({:.1} req/s)", n_requests as f64 / wall);
-    println!("{}", co.metrics.summary());
-    co.shutdown();
+    println!("{}", router.summary());
+    router.shutdown();
+    Ok(())
+}
+
+/// Software path (no artifacts needed): the paper's full mixed workload —
+/// softmax at L ∈ {49, 128, 785, 1024} and layernorm at C = 768 — through
+/// one router, requests interleaved round-robin across services.
+fn serve_software_mix(
+    n_requests: usize,
+    rate: f64,
+    workers: usize,
+    policy: BatchPolicy,
+) -> Result<()> {
+    println!("serving the paper's mixed software workload ({workers} total workers)");
+    let services = paper_services();
+    let mut builder = ServiceRouter::builder(workers).default_policy(policy);
+    for (name, backend) in &services {
+        builder = builder.service(name, backend.clone());
+    }
+    let router = builder.start()?;
+    let client = router.client();
+
+    let mut rng = Rng::new(1234);
+    let inputs: Vec<(String, Vec<f32>)> = services
+        .iter()
+        .map(|(name, backend)| {
+            let mut row = vec![0f32; backend.item_input_len()];
+            rng.fill_normal(&mut row, 0.0, 2.0);
+            (name.clone(), row)
+        })
+        .collect();
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..n_requests {
+        let (name, row) = &inputs[i % inputs.len()];
+        pending.push(client.submit(name, row.clone())?);
+        std::thread::sleep(Duration::from_secs_f64(rng.exponential(rate)));
+    }
+    for rx in pending {
+        let _ = rx.recv()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "served {n_requests} mixed requests in {wall:.2}s ({:.1} req/s)",
+        n_requests as f64 / wall
+    );
+    println!("{}", router.summary());
+    router.shutdown();
     Ok(())
 }
 
@@ -154,16 +253,9 @@ fn cmd_info(args: &Args) -> Result<()> {
     let engine = Engine::open(&artifacts)?;
     println!("platform: {}", engine.platform());
     println!("artifacts: {}", artifacts.display());
-    println!("models:");
-    for m in engine.manifest.models() {
-        let variants: Vec<String> = engine
-            .manifest
-            .entries
-            .values()
-            .filter(|e| e.model.as_deref() == Some(&m))
-            .map(|e| format!("{}@b{}", e.variant.clone().unwrap_or_default(), e.batch))
-            .collect();
-        println!("  {m}: {}", variants.join(", "));
+    println!("serving families (register as router services):");
+    for f in engine.manifest.families() {
+        println!("  {}: buckets {:?}, item {} f32", f.service_name(), f.buckets, f.item_len);
     }
     println!("ops:");
     for e in engine.manifest.entries.values().filter(|e| e.model.is_none()) {

@@ -44,13 +44,30 @@ mod pjrt_impl {
     impl LoadedModel {
         /// Run on f32 input data (images / logits); returns flat f32 output.
         pub fn run_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
+            let mut out = vec![0f32; self.output_len()];
+            self.run_f32_into(input, &mut out)?;
+            Ok(out)
+        }
+
+        /// Run on f32 input, writing the flat f32 output into the caller's
+        /// buffer (the coordinator's staged per-worker arena).  This is the
+        /// Backend-trait-shaped entry point: callers own the output
+        /// allocation.  The vendored xla 0.5.1 literal API only exposes
+        /// owned-`Vec` extraction, so the PJRT leg still materializes one
+        /// transfer vector inside `execute_into` before the copy lands in
+        /// `out` — replace with a raw-buffer copy if a later vendored xla
+        /// grows one; the call sites are already shaped for it.
+        pub fn run_f32_into(&self, input: &[f32], out: &mut [f32]) -> Result<()> {
             let dims: Vec<i64> = self.meta.input_shape.iter().map(|&d| d as i64).collect();
             let expect: usize = self.meta.input_shape.iter().product();
             if input.len() != expect {
                 bail!("{}: input len {} != shape {:?}", self.meta.id, input.len(), self.meta.input_shape);
             }
+            if out.len() != self.output_len() {
+                bail!("{}: output buffer len {} != shape {:?}", self.meta.id, out.len(), self.meta.output_shape);
+            }
             let lit = xla::Literal::vec1(input).reshape(&dims)?;
-            self.execute_with(lit)
+            self.execute_into(lit, out)
         }
 
         /// Run on i32 input data (token ids).
@@ -71,6 +88,15 @@ mod pjrt_impl {
             let lit = result[0][0].to_literal_sync()?;
             let out = lit.to_tuple1()?;
             Ok(out.to_vec::<f32>()?)
+        }
+
+        fn execute_into(&self, input: xla::Literal, out: &mut [f32]) -> Result<()> {
+            let vals = self.execute_with(input)?;
+            if vals.len() != out.len() {
+                bail!("{}: artifact returned {} f32s, expected {}", self.meta.id, vals.len(), out.len());
+            }
+            out.copy_from_slice(&vals);
+            Ok(())
         }
 
         pub fn output_len(&self) -> usize {
@@ -195,6 +221,16 @@ mod stub_impl {
 
     impl LoadedModel {
         pub fn run_f32(&self, _input: &[f32]) -> Result<Vec<f32>> {
+            anyhow::bail!(
+                "cannot execute artifact '{}': built without the `pjrt` feature \
+                 (the xla crate is only vendored in the artifact-build image)",
+                self.meta.id
+            )
+        }
+
+        /// Into-caller-buffer twin of `run_f32` (the Backend hot path);
+        /// like every execution entry point it errors without `pjrt`.
+        pub fn run_f32_into(&self, _input: &[f32], _out: &mut [f32]) -> Result<()> {
             anyhow::bail!(
                 "cannot execute artifact '{}': built without the `pjrt` feature \
                  (the xla crate is only vendored in the artifact-build image)",

@@ -26,6 +26,28 @@ pub struct ArtifactMeta {
     pub calib: Option<String>,
 }
 
+/// One lowered (model, variant) artifact family: the bucketed artifacts
+/// the serving layer loads as one `PjrtBackend` and registers as one
+/// router service (service discovery for the PJRT path).
+#[derive(Debug, Clone)]
+pub struct Family {
+    pub model: String,
+    pub variant: String,
+    /// Artifact ids, ascending by lowered batch size.
+    pub ids: Vec<String>,
+    /// Lowered batch sizes (the serving buckets), ascending.
+    pub buckets: Vec<usize>,
+    /// Flat f32 length of one item (input shape beyond the batch dim).
+    pub item_len: usize,
+}
+
+impl Family {
+    /// The router service name this family registers under.
+    pub fn service_name(&self) -> String {
+        format!("{}/{}", self.model, self.variant)
+    }
+}
+
 /// One exported dataset (tensor bundle with `x` and `y`).
 #[derive(Debug, Clone)]
 pub struct DatasetMeta {
@@ -104,6 +126,32 @@ impl Manifest {
         self.entries.get(id)
     }
 
+    /// Group the model artifacts into (model, variant) families — every
+    /// service the manifest can back, with its bucket sizes ascending.
+    /// Op graphs (no model/variant) are not families; they stay reachable
+    /// by id.
+    pub fn families(&self) -> Vec<Family> {
+        let mut groups: BTreeMap<(String, String), Vec<&ArtifactMeta>> = BTreeMap::new();
+        for m in self.entries.values() {
+            if let (Some(model), Some(variant)) = (&m.model, &m.variant) {
+                groups.entry((model.clone(), variant.clone())).or_default().push(m);
+            }
+        }
+        groups
+            .into_iter()
+            .map(|((model, variant), mut metas)| {
+                metas.sort_by_key(|m| m.batch);
+                Family {
+                    item_len: metas[0].input_shape.iter().skip(1).product(),
+                    ids: metas.iter().map(|m| m.id.clone()).collect(),
+                    buckets: metas.iter().map(|m| m.batch).collect(),
+                    model,
+                    variant,
+                }
+            })
+            .collect()
+    }
+
     /// All distinct model names with lowered accuracy artifacts.
     pub fn models(&self) -> Vec<String> {
         let mut v: Vec<String> = self
@@ -148,6 +196,36 @@ mod tests {
         assert_eq!(m.models(), vec!["m"]);
         // op entries default batch from the leading input dim
         assert_eq!(m.get("op_x").unwrap().batch, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn families_group_bucketed_artifacts() {
+        let dir = std::env::temp_dir().join(format!("sole-families-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"models": [
+                 {"id": "m_fp32_b8", "hlo": "a.hlo.txt", "model": "m", "variant": "fp32",
+                  "batch": 8, "input": {"shape": [8, 12]}, "output": {"shape": [8, 2]}},
+                 {"id": "m_fp32_b1", "hlo": "b.hlo.txt", "model": "m", "variant": "fp32",
+                  "batch": 1, "input": {"shape": [1, 12]}, "output": {"shape": [1, 2]}},
+                 {"id": "m_sole_b4", "hlo": "c.hlo.txt", "model": "m", "variant": "sole",
+                  "batch": 4, "input": {"shape": [4, 12]}, "output": {"shape": [4, 2]}}],
+                "ops": [{"id": "op_x", "hlo": "op.hlo.txt",
+                 "input": {"shape": [2, 2]}, "output": {"shape": [2, 2]}}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let fams = m.families();
+        // two families, sorted by (model, variant); op graphs excluded
+        assert_eq!(fams.len(), 2);
+        assert_eq!(fams[0].service_name(), "m/fp32");
+        assert_eq!(fams[0].buckets, vec![1, 8]); // ascending by batch
+        assert_eq!(fams[0].ids, vec!["m_fp32_b1", "m_fp32_b8"]);
+        assert_eq!(fams[0].item_len, 12);
+        assert_eq!(fams[1].service_name(), "m/sole");
+        assert_eq!(fams[1].buckets, vec![4]);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,157 @@
+//! Integration: the ServiceRouter end to end — the paper's full mixed
+//! workload (E2Softmax at L ∈ {49, 128, 785, 1024} + AILayerNorm at
+//! C = 768) through one process, pinned bit-exact against direct kernel
+//! invocation per service, plus a mixed-op soak with interleaved clients.
+
+use std::time::Duration;
+
+use sole::coordinator::{paper_services, BatchPolicy, ServiceRouter};
+use sole::layernorm::{config::DEFAULT_ZP, AiLayerNorm};
+use sole::quant::{ptf_quantize_into, PtfCalib};
+use sole::softmax::{quantize_logits_into, E2Scratch, E2Softmax, E2SoftmaxConfig};
+use sole::util::rng::Rng;
+
+fn start_paper_router(total_workers: usize, max_wait_ms: u64) -> ServiceRouter {
+    let mut builder = ServiceRouter::builder(total_workers).default_policy(BatchPolicy {
+        max_wait: Duration::from_millis(max_wait_ms),
+        max_batch: 16,
+        queue_cap: None,
+    });
+    for (name, be) in paper_services() {
+        builder = builder.service(&name, be);
+    }
+    builder.start().unwrap()
+}
+
+#[test]
+fn every_softmax_service_matches_direct_kernel_at_paper_shapes() {
+    // responses routed by service name through the shared-budget pools
+    // must be bit-identical to quantize + forward_row_f32 called directly
+    let router = start_paper_router(8, 3);
+    let cl = router.client();
+    let sm = E2Softmax::new(E2SoftmaxConfig::default());
+    let mut rng = Rng::new(41);
+    for &l in &[49usize, 128, 785, 1024] {
+        let service = format!("softmax/L{l}");
+        assert_eq!(cl.item_len(&service).unwrap(), l);
+        let rows: Vec<Vec<f32>> = (0..12)
+            .map(|_| {
+                let mut r = vec![0f32; l];
+                rng.fill_normal(&mut r, 0.0, 2.0);
+                r
+            })
+            .collect();
+        let rxs: Vec<_> = rows.iter().map(|r| cl.submit(&service, r.clone()).unwrap()).collect();
+        let mut codes = Vec::new();
+        let mut scratch = E2Scratch::default();
+        let mut want = vec![0f32; l];
+        for (i, (row, rx)) in rows.iter().zip(rxs).enumerate() {
+            let resp = rx.recv().unwrap();
+            quantize_logits_into(row, sm.cfg().e, &mut codes);
+            sm.forward_row_f32(&codes, &mut want, &mut scratch);
+            assert_eq!(resp.output, want, "{service} request {i}");
+        }
+        assert_eq!(router.metrics(&service).unwrap().completed(), 12, "{service}");
+    }
+    router.shutdown();
+}
+
+#[test]
+fn layernorm_service_matches_direct_kernel_at_c768() {
+    let c = 768;
+    let router = start_paper_router(8, 3);
+    let cl = router.client();
+    // the same identity calibration SoftwareLayerNormBackend::new uses
+    let cal = PtfCalib { alpha: vec![0u8; c], s: 1.0 / 32.0, zp: DEFAULT_ZP };
+    let ln = AiLayerNorm { zp: cal.zp };
+    let gamma = vec![1f32; c];
+    let beta = vec![0f32; c];
+    let mut rng = Rng::new(43);
+    let rows: Vec<Vec<f32>> = (0..16)
+        .map(|_| {
+            let mut r = vec![0f32; c];
+            rng.fill_normal(&mut r, 0.3, 1.5);
+            r
+        })
+        .collect();
+    let rxs: Vec<_> =
+        rows.iter().map(|r| cl.submit("layernorm/C768", r.clone()).unwrap()).collect();
+    let mut codes = Vec::new();
+    let mut want = vec![0f32; c];
+    for (i, (row, rx)) in rows.iter().zip(rxs).enumerate() {
+        let resp = rx.recv().unwrap();
+        ptf_quantize_into(row, &cal, &mut codes);
+        ln.forward_row_f32(&codes, &cal.alpha, &gamma, &beta, &mut want);
+        assert_eq!(resp.output, want, "request {i}");
+    }
+    assert_eq!(router.metrics("layernorm/C768").unwrap().completed(), 16);
+    router.shutdown();
+}
+
+#[test]
+fn mixed_op_soak_interleaved_clients_answer_everything() {
+    // several client threads interleave every service; all requests must
+    // be answered, per-service metrics populated, and the conservation
+    // invariant hold everywhere (no errors on the software services)
+    const CLIENTS: usize = 4;
+    const PER_CLIENT: usize = 60; // 12 per service per client
+    let router = start_paper_router(6, 2);
+    let names: Vec<String> = router.services().iter().map(|s| s.to_string()).collect();
+    assert_eq!(names.len(), 5);
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|cid| {
+            let cl = router.client();
+            let names = names.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + cid as u64);
+                let mut pending = Vec::new();
+                for i in 0..PER_CLIENT {
+                    let service = &names[(cid + i) % names.len()];
+                    let mut row = vec![0f32; cl.item_len(service).unwrap()];
+                    rng.fill_normal(&mut row, 0.0, 2.0);
+                    pending.push((service.clone(), cl.submit(service, row).unwrap()));
+                }
+                for (service, rx) in pending {
+                    let r = rx.recv().unwrap_or_else(|e| panic!("{service} dropped: {e}"));
+                    assert!(!r.output.is_empty());
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let per_service = (CLIENTS * PER_CLIENT / names.len()) as u64;
+    let mut total = 0u64;
+    for name in &names {
+        let m = router.metrics(name).unwrap();
+        assert_eq!(m.accepted(), per_service, "{name}: accepted");
+        assert_eq!(m.completed(), per_service, "{name}: completed");
+        assert_eq!(m.errors(), 0, "{name}: errors");
+        let (p50, p99, _) = m.total_latency();
+        assert!(p50 > 0.0 && p99 >= p50, "{name}: latency populated");
+        assert!(m.mean_batch() >= 1.0, "{name}: batch stats populated");
+        total += m.completed();
+    }
+    assert_eq!(total, (CLIENTS * PER_CLIENT) as u64);
+    let merged = router.merged_summary();
+    assert!(merged.contains(&format!("completed={total}")), "{merged}");
+    let s = router.summary();
+    for name in &names {
+        assert!(s.contains(name.as_str()), "summary missing {name}: {s}");
+    }
+    router.shutdown();
+}
+
+#[test]
+fn router_rejects_cross_service_shapes() {
+    // a request sized for one service must not slip into another
+    let router = start_paper_router(5, 1);
+    let cl = router.client();
+    let err = format!("{:#}", cl.submit("softmax/L49", vec![0.0; 128]).unwrap_err());
+    assert!(err.contains("softmax/L49"), "{err}");
+    // correct sizes still round-trip on both ops
+    assert_eq!(cl.infer("softmax/L128", vec![0.1; 128]).unwrap().output.len(), 128);
+    assert_eq!(cl.infer("layernorm/C768", vec![0.1; 768]).unwrap().output.len(), 768);
+    router.shutdown();
+}
