@@ -14,11 +14,11 @@ use sole::model::PaperModel;
 use sole::util::cli::Args;
 use sole::util::rng::Rng;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let model = args.opt_str("model", "deit_t");
-    let n_requests = args.opt_usize("requests", 512);
-    let mean_batch = args.opt_f64("mean-batch", 6.0);
+    let n_requests = args.opt_usize("requests", 512)?;
+    let mean_batch = args.opt_f64("mean-batch", 6.0)?;
 
     let m = PaperModel::by_name(model).expect("unknown model (see model::PaperModel::zoo)");
     let sm = E2SoftmaxUnit::default();
@@ -54,4 +54,5 @@ fn main() {
         gpu_j / sole_j,
         gpu_s / sole_s
     );
+    Ok(())
 }

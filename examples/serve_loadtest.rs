@@ -44,23 +44,26 @@ fn main() -> Result<()> {
     let dir = PathBuf::from(args.opt_str("artifacts", "artifacts"));
     let model = args.opt_str("model", "deit_t");
     let variant = args.opt_str("variant", "fp32_sole");
-    let n = args.opt_usize("requests", 150);
-    let workers = args.opt_usize("workers", 8); // total budget over all services
-    let queue_cap = match args.opt_usize("queue-cap", 0) {
+    let n = args.opt_usize("requests", 150)?;
+    let workers = args.opt_usize("workers", 8)?; // total budget over all services
+    let queue_cap = match args.opt_usize("queue-cap", 0)? {
         0 => None,
         cap => Some(cap),
     };
-    let rates: Vec<f64> = args
-        .opt_str("rates", "8,32,128")
-        .split(',')
-        .filter_map(|s| s.trim().parse().ok())
-        .collect();
-    let max_wait = Duration::from_millis(args.opt_usize("max-wait-ms", 20) as u64);
+    // strict: a typo'd rate is an error naming the flag, not a dropped
+    // entry, and a non-positive rate would panic later in the Poisson
+    // inter-arrival Duration
+    let rates: Vec<f64> = args.opt_list("rates", "8,32,128")?;
+    anyhow::ensure!(
+        rates.iter().all(|&r| r > 0.0),
+        "--rates: rates must be positive, got {rates:?}"
+    );
+    let max_wait = Duration::from_millis(args.opt_usize("max-wait-ms", 20)? as u64);
     let policy = BatchPolicy { max_wait, max_batch: 16, queue_cap };
 
     // the mixed paper workload is always served; the PJRT family joins it
     // when artifacts exist AND the build can execute them
-    let services = paper_services();
+    let services = paper_services()?;
     let have_artifacts = dir.join("manifest.json").exists();
     if have_artifacts && !cfg!(feature = "pjrt") {
         println!("artifacts found but built without --features pjrt — software services only");

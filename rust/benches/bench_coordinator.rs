@@ -8,9 +8,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use sole::coordinator::{
-    Backend, BatchPolicy, Coordinator, SoftwareLayerNormBackend, SoftwareSoftmaxBackend,
-};
+use sole::coordinator::{Backend, BatchPolicy, Coordinator, OpBackend};
+use sole::ops::{AiLayerNormOp, E2SoftmaxOp};
 use sole::softmax::{quantize_logits_batch_into, E2Scratch, E2Softmax, E2SoftmaxConfig};
 use sole::util::bench::{bench, quick_mode, report};
 
@@ -46,17 +45,27 @@ fn count_allocs<F: FnMut()>(mut f: F, iters: u64) -> u64 {
     ALLOCS.load(Ordering::SeqCst) - before
 }
 
+fn softmax_backend(l: usize, buckets: Vec<usize>) -> OpBackend {
+    OpBackend::try_new(Arc::new(E2SoftmaxOp::try_new(l).expect("row len")), buckets)
+        .expect("bucket list")
+}
+
+fn layernorm_backend(c: usize, buckets: Vec<usize>) -> OpBackend {
+    OpBackend::try_new(Arc::new(AiLayerNormOp::try_new(c).expect("channels")), buckets)
+        .expect("bucket list")
+}
+
 fn alloc_audit() {
     const L: usize = 128;
     const BUCKET: usize = 16;
-    let be = SoftwareSoftmaxBackend::new(L, vec![1, 4, 8, 16]);
+    let be = softmax_backend(L, vec![1, 4, 8, 16]);
     let mut rng = sole::util::rng::Rng::new(1);
     let mut inputs = vec![0f32; BUCKET * L];
     rng.fill_normal(&mut inputs, 0.0, 2.0);
 
     println!("\nallocation audit — {BUCKET}x{L} softmax batch, 100 batches after warmup");
 
-    // legacy path: what SoftwareSoftmaxBackend::run used to do before the
+    // legacy path: what the softmax backend's run used to do before the
     // arena redesign — forward_logits per row (introspect vectors + output
     // collection allocate every call)
     let sm = E2Softmax::new(E2SoftmaxConfig::default());
@@ -109,7 +118,7 @@ fn alloc_audit() {
     assert_eq!(kernel, 0, "steady-state batch kernel must not allocate");
 
     // same audit for the layernorm service
-    let ln = SoftwareLayerNormBackend::new(L, vec![1, 4, 8, 16]);
+    let ln = layernorm_backend(L, vec![1, 4, 8, 16]);
     let mut ln_scratch = ln.make_scratch();
     let ln_allocs = count_allocs(
         || {
@@ -127,7 +136,7 @@ fn throughput_sweep() {
     println!("\nthroughput — routing + batching overhead (software softmax backend)");
     let sweeps = [(0u64, 1usize, n), (2, 1, n), (2, 2, n), (2, 4, n), (5, 2, n)];
     for &(wait_ms, workers, nreq) in &sweeps {
-        let be = Arc::new(SoftwareSoftmaxBackend::new(128, vec![1, 4, 8, 16]));
+        let be = Arc::new(softmax_backend(128, vec![1, 4, 8, 16]));
         let co = Coordinator::start(
             be,
             BatchPolicy {
@@ -153,7 +162,7 @@ fn throughput_sweep() {
     }
 
     println!("\nthroughput — software layernorm backend, 4 workers");
-    let be = Arc::new(SoftwareLayerNormBackend::new(192, vec![1, 4, 8, 16]));
+    let be = Arc::new(layernorm_backend(192, vec![1, 4, 8, 16]));
     let co = Coordinator::start(
         be,
         BatchPolicy { max_wait: Duration::from_millis(2), max_batch: 16, ..BatchPolicy::default() },
@@ -180,7 +189,7 @@ fn main() {
     throughput_sweep();
 
     // raw single-request round-trip latency
-    let be = Arc::new(SoftwareSoftmaxBackend::new(128, vec![1]));
+    let be = Arc::new(softmax_backend(128, vec![1]));
     let co = Coordinator::start(
         be,
         BatchPolicy { max_wait: Duration::ZERO, max_batch: 1, ..BatchPolicy::default() },

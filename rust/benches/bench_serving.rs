@@ -1,14 +1,17 @@
-//! Mixed-load serving throughput through the `ServiceRouter` at the
-//! paper's shapes, with a machine-readable record (`BENCH_serving.json`)
-//! so the serving stack has a perf trajectory alongside the kernel one.
+//! Serving throughput through the `ServiceRouter` for EVERY registered
+//! operator, with a machine-readable record (`BENCH_serving.json`) so the
+//! serving stack has a perf trajectory alongside the kernel one — and so
+//! SOLE's comparative claim is measured, not asserted: the same table
+//! holds `e2softmax` next to `softmax-exact`, `softermax` and
+//! `ibert-softmax`, and `ailayernorm` next to `layernorm-exact` and
+//! `ibert-layernorm`.
 //!
-//! One router process serves the full mixed workload — E2Softmax at
-//! L ∈ {49, 128, 785, 1024} and AILayerNorm at C = 768 — under an
-//! open-loop interleaved burst; per-service throughput and p50/p99/mean
-//! latency come from each service's own metrics shards, the merged view
-//! from the router's merge-on-read.  Request conservation
-//! (`completed + errors == accepted`, errors == 0) is asserted before
-//! anything is recorded.
+//! One router process serves one service per registry op at its canonical
+//! spec (`<op>/<DIM><default-len>`) under an open-loop interleaved burst;
+//! per-op throughput and p50/p99/mean latency come from each service's
+//! own metrics shards, the merged view from the router's merge-on-read.
+//! Request conservation (`completed + errors == accepted`, errors == 0)
+//! is asserted before anything is recorded.
 //!
 //! Flags: `--json` writes the JSON artifact (default path
 //! `<repo>/BENCH_serving.json`, override with `--out <path>`); `--quick`
@@ -17,48 +20,54 @@
 
 use std::time::Instant;
 
-use sole::coordinator::{paper_services, Backend, BatchPolicy, ServiceRouter};
+use sole::coordinator::{BatchPolicy, ServiceRouter};
+use sole::ops::OpRegistry;
 use sole::util::bench::quick_mode;
 use sole::util::cli::Args;
 use sole::util::json::{obj, Json};
 use sole::util::rng::Rng;
-
-// one worker per paper service: the min-one-per-service floor makes any
-// smaller budget silently run 5 threads anyway, and the recorded
-// total_workers must match the threads that actually served the load
-const TOTAL_WORKERS: usize = 5;
 
 fn main() {
     let args = Args::from_env();
     if args.flag("quick") {
         std::env::set_var("SOLE_BENCH_QUICK", "1");
     }
-    let per_service = if quick_mode() { 48 } else { 2048 };
+    let per_service = if quick_mode() { 48 } else { 1024 };
+
+    let registry = OpRegistry::builtin();
+    // one worker per registered op: the min-one-per-service floor makes
+    // any smaller budget silently run that many threads anyway, and the
+    // recorded total_workers must match the threads that actually served
+    let specs: Vec<String> = registry
+        .names()
+        .iter()
+        .map(|n| registry.canonical_spec(n).expect("registered op").to_string())
+        .collect();
+    let total_workers = specs.len();
     println!(
-        "bench_serving — mixed paper workload through the ServiceRouter \
-         ({TOTAL_WORKERS} workers, {per_service} requests/service){}",
+        "bench_serving — every registered op through the ServiceRouter \
+         ({total_workers} workers, {per_service} requests/op){}",
         if quick_mode() { " [QUICK smoke mode — numbers meaningless]" } else { "" }
     );
 
-    let services = paper_services();
     let policy =
         BatchPolicy { max_wait: std::time::Duration::from_millis(1), ..BatchPolicy::default() };
-    let mut builder = ServiceRouter::builder(TOTAL_WORKERS).default_policy(policy);
-    for (name, be) in &services {
-        builder = builder.service(name, be.clone());
+    let mut builder = ServiceRouter::builder(total_workers).default_policy(policy);
+    for spec in &specs {
+        builder = builder.op_service(&registry, spec, vec![1, 4, 8, 16]).expect("registry spec");
     }
     let router = builder.start().expect("router start");
     let client = router.client();
 
     // pre-generate one block of normal rows per service
     let mut rng = Rng::new(0x501E);
-    let lanes: Vec<(String, usize, Vec<f32>)> = services
+    let lanes: Vec<(String, usize, Vec<f32>)> = specs
         .iter()
-        .map(|(name, be)| {
-            let item = be.item_input_len();
+        .map(|spec| {
+            let item = client.item_len(spec).expect("registered service");
             let mut inputs = vec![0f32; 32 * item];
             rng.fill_normal(&mut inputs, 0.0, 2.0);
-            (name.clone(), item, inputs)
+            (spec.clone(), item, inputs)
         })
         .collect();
 
@@ -84,8 +93,8 @@ fn main() {
     let mut results: Vec<Json> = Vec::new();
     let mut total_completed = 0u64;
     println!(
-        "\n{:>16} {:>4} {:>10} {:>10} {:>10} {:>10} {:>10}",
-        "service", "wrk", "rows/s", "p50 ms", "p99 ms", "mean ms", "avg batch"
+        "\n{:>20} {:>4} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "op service", "wrk", "rows/s", "p50 ms", "p99 ms", "mean ms", "avg batch"
     );
     for (name, item, _) in &lanes {
         let m = router.metrics(name).expect("registered service");
@@ -96,7 +105,7 @@ fn main() {
         let (p50, p99, mean) = m.total_latency();
         let rows_per_sec = m.completed() as f64 / wall;
         println!(
-            "{:>16} {:>4} {:>10.0} {:>10.2} {:>10.2} {:>10.2} {:>10.2}",
+            "{:>20} {:>4} {:>10.0} {:>10.2} {:>10.2} {:>10.2} {:>10.2}",
             name,
             router.workers(name).unwrap_or(0),
             rows_per_sec,
@@ -105,8 +114,10 @@ fn main() {
             mean * 1e3,
             m.mean_batch(),
         );
+        let op = name.split('/').next().unwrap_or(name.as_str()).to_string();
         results.push(obj(vec![
-            ("service", Json::Str(name.clone())),
+            ("op", Json::Str(op)),
+            ("spec", Json::Str(name.clone())),
             ("item_len", Json::Int(*item as i64)),
             ("workers", Json::Int(router.workers(name).unwrap_or(0) as i64)),
             ("completed", Json::Int(m.completed() as i64)),
@@ -120,7 +131,7 @@ fn main() {
     assert_eq!(total_completed, submitted, "merged conservation");
     // the recorded budget is the actual thread count (floor-one split)
     let worker_sum: usize = lanes.iter().filter_map(|(n, _, _)| router.workers(n)).sum();
-    assert_eq!(worker_sum, TOTAL_WORKERS, "budget must match the served thread count");
+    assert_eq!(worker_sum, total_workers, "budget must match the served thread count");
     let (mp50, mp99, mmean) = router.merged_latency();
     let merged_rows_per_sec = submitted as f64 / wall;
     println!(
@@ -148,7 +159,7 @@ fn main() {
         let doc = obj(vec![
             ("bench", Json::Str("bench_serving".to_string())),
             ("quick", Json::Bool(quick_mode())),
-            ("total_workers", Json::Int(TOTAL_WORKERS as i64)),
+            ("total_workers", Json::Int(total_workers as i64)),
             ("requests_per_service", Json::Int(per_service as i64)),
             (
                 "units",

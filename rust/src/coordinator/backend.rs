@@ -2,19 +2,18 @@
 //!
 //! * `PjrtBackend` — the real path: bucketed AOT artifacts through the
 //!   PJRT runtime (one `LoadedModel` per batch size).
-//! * `SoftwareSoftmaxBackend` — the bit-exact Rust E2Softmax as a
-//!   row-service: the whole packed batch is quantized in one pass and
-//!   executed by one `forward_batch_f32` kernel call.
-//! * `SoftwareLayerNormBackend` — the bit-exact AILayerNorm as a
-//!   row-service (PTF batch quantization + one `forward_batch_f32` call).
+//! * `OpBackend` — the software path: ANY [`Op`] (E2Softmax, AILayerNorm,
+//!   the exact baselines, the prior-work comparators — everything the
+//!   `OpRegistry` can construct) wrapped with shared bucket validation
+//!   and per-worker scratch.  One generic struct serves every software
+//!   operator, so a new operator needs zero backend code.
 //!
 //! Execution is arena-style: the worker owns the packed input buffer, the
 //! staged output buffer, and an opaque per-worker scratch created by
 //! `Backend::make_scratch`.  A backend writes results into the provided
 //! `out` slice and keeps every temporary inside its scratch, so the
-//! steady-state batch loop performs no heap allocation — and, since the
-//! planar-kernel rewrite, no per-row dispatch either: each `run` is a
-//! single batch-kernel invocation over the packed buffer.
+//! steady-state batch loop performs no heap allocation — and each `run`
+//! is a single batch-kernel invocation over the packed buffer.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -22,11 +21,8 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use super::batcher::normalize_buckets;
-use crate::layernorm::{config::DEFAULT_ZP, AiLayerNorm};
-use crate::quant::{ptf_quantize_batch_into, PtfCalib};
+use crate::ops::{Op, OpRegistry, OpScratch};
 use crate::runtime::{Engine, LoadedModel};
-use crate::softmax::e2::{quantize_logits_batch_into, E2Scratch};
-use crate::softmax::{E2Softmax, E2SoftmaxConfig};
 
 /// Opaque per-worker scratch arena.  Each worker thread creates one via
 /// `Backend::make_scratch` and hands it back on every `run`, so backends
@@ -127,46 +123,44 @@ impl Backend for PjrtBackend {
     }
 }
 
-/// Software op-service: each item is one softmax row of length `l`,
-/// computed by the bit-exact E2Softmax batch kernel.  Any bucket size
-/// works.
-pub struct SoftwareSoftmaxBackend {
-    l: usize,
+/// The generic software op-service: wraps any `Arc<dyn Op>` as a bucketed
+/// backend.  Bucket-list validation happens once here (construction
+/// time, caller's thread) and the per-batch shape checks are shared —
+/// operator implementations only provide the kernel call.
+pub struct OpBackend {
+    op: Arc<dyn Op>,
     buckets: Vec<usize>,
-    sm: E2Softmax,
 }
 
-/// Per-worker arena of the softmax service: the packed logit->code
-/// quantization buffer plus the E2Softmax kernel scratch.
-struct SoftmaxScratch {
-    codes: Vec<i64>,
-    e2: E2Scratch,
-}
-
-impl SoftwareSoftmaxBackend {
-    /// Infallible constructor for known-good configs; panics with the
-    /// validation error otherwise (see `try_new`).
-    pub fn new(l: usize, buckets: Vec<usize>) -> SoftwareSoftmaxBackend {
-        SoftwareSoftmaxBackend::try_new(l, buckets)
-            .unwrap_or_else(|e| panic!("invalid SoftwareSoftmaxBackend config: {e}"))
+impl OpBackend {
+    /// Wrap an op with a validated bucket list.  The only construction
+    /// path — there is deliberately no panicking `new`.
+    pub fn try_new(op: Arc<dyn Op>, buckets: Vec<usize>) -> Result<OpBackend> {
+        anyhow::ensure!(op.item_len() > 0, "op '{}' has an empty item", op.name());
+        let buckets = normalize_buckets(buckets)
+            .with_context(|| format!("op '{}' service buckets", op.name()))?;
+        Ok(OpBackend { op, buckets })
     }
 
-    /// Validating constructor: row length and bucket list are checked here,
-    /// on the caller's thread, not later inside a worker's `Batcher::new`.
-    pub fn try_new(l: usize, buckets: Vec<usize>) -> Result<SoftwareSoftmaxBackend> {
-        anyhow::ensure!(l > 0, "softmax rows must be non-empty");
-        let buckets = normalize_buckets(buckets).context("softmax service buckets")?;
-        Ok(SoftwareSoftmaxBackend { l, buckets, sm: E2Softmax::new(E2SoftmaxConfig::default()) })
+    /// Registry path: construct the op named by `spec` and wrap it.
+    pub fn from_spec(registry: &OpRegistry, spec: &str, buckets: Vec<usize>) -> Result<OpBackend> {
+        let (_, op) = registry.build(spec)?;
+        OpBackend::try_new(op, buckets)
+    }
+
+    /// The wrapped operator (its `spec()` is the canonical service name).
+    pub fn op(&self) -> &Arc<dyn Op> {
+        &self.op
     }
 }
 
-impl Backend for SoftwareSoftmaxBackend {
+impl Backend for OpBackend {
     fn item_input_len(&self) -> usize {
-        self.l
+        self.op.item_len()
     }
 
     fn item_output_len(&self) -> usize {
-        self.l
+        self.op.item_len()
     }
 
     fn buckets(&self) -> &[usize] {
@@ -174,7 +168,9 @@ impl Backend for SoftwareSoftmaxBackend {
     }
 
     fn make_scratch(&self) -> BackendScratch {
-        Box::new(SoftmaxScratch { codes: Vec::with_capacity(self.l), e2: E2Scratch::default() })
+        // the op's own scratch rides inside the backend-level box; `run`
+        // unwraps exactly one layer before handing it to `run_batch`
+        Box::new(self.op.make_scratch())
     }
 
     fn run(
@@ -184,112 +180,40 @@ impl Backend for SoftwareSoftmaxBackend {
         out: &mut [f32],
         scratch: &mut BackendScratch,
     ) -> Result<()> {
-        anyhow::ensure!(inputs.len() == bucket * self.l);
-        anyhow::ensure!(out.len() == bucket * self.l);
+        // the builtin ops re-check via ops::check_batch, but this is the
+        // serving boundary: an externally registered op that forgets its
+        // own checks must still never see a mis-sized worker buffer
+        crate::ops::check_batch(&*self.op, bucket, inputs, out)?;
         let s = scratch
-            .downcast_mut::<SoftmaxScratch>()
-            .context("softmax backend handed a foreign scratch arena")?;
-        // one pass of per-row-max quantization over the packed batch, then
-        // one batch-kernel call — no per-row dispatch
-        quantize_logits_batch_into(inputs, self.l, self.sm.cfg().e, &mut s.codes);
-        self.sm.forward_batch_f32(&s.codes, self.l, out, &mut s.e2);
-        Ok(())
-    }
-}
-
-/// Software op-service for AILayerNorm: each item is one f32 row of `c`
-/// channels, PTF-quantized with the backend's calibration and normalized
-/// by the bit-exact hot path.
-pub struct SoftwareLayerNormBackend {
-    c: usize,
-    buckets: Vec<usize>,
-    ln: AiLayerNorm,
-    cal: PtfCalib,
-    gamma: Vec<f32>,
-    beta: Vec<f32>,
-}
-
-/// Per-worker arena of the layernorm service: the packed PTF code buffer.
-struct LayerNormScratch {
-    codes: Vec<u8>,
-}
-
-impl SoftwareLayerNormBackend {
-    /// Identity-affine service (alpha = 0, gamma = 1, beta = 0) with a
-    /// layer scale that maps roughly N(0, 4) inputs onto the u8 code grid.
-    /// Panics with the validation error on a bad bucket list (see
-    /// `with_calibration` for the error-returning path).
-    pub fn new(c: usize, buckets: Vec<usize>) -> SoftwareLayerNormBackend {
-        let cal = PtfCalib { alpha: vec![0u8; c], s: 1.0 / 32.0, zp: DEFAULT_ZP };
-        SoftwareLayerNormBackend::with_calibration(c, buckets, cal, vec![1f32; c], vec![0f32; c])
-            .unwrap_or_else(|e| panic!("invalid SoftwareLayerNormBackend config: {e}"))
-    }
-
-    /// Fully-specified service: a PTF calibration plus affine parameters.
-    /// Channel counts and the bucket list are validated here, on the
-    /// caller's thread, not later inside a worker's `Batcher::new`.
-    pub fn with_calibration(
-        c: usize,
-        buckets: Vec<usize>,
-        cal: PtfCalib,
-        gamma: Vec<f32>,
-        beta: Vec<f32>,
-    ) -> Result<SoftwareLayerNormBackend> {
-        anyhow::ensure!(c > 0, "layernorm rows must be non-empty");
-        anyhow::ensure!(
-            cal.alpha.len() == c && gamma.len() == c && beta.len() == c,
-            "calibration lengths must match {c} channels"
-        );
-        let buckets = normalize_buckets(buckets).context("layernorm service buckets")?;
-        let ln = AiLayerNorm { zp: cal.zp };
-        Ok(SoftwareLayerNormBackend { c, buckets, ln, cal, gamma, beta })
-    }
-}
-
-impl Backend for SoftwareLayerNormBackend {
-    fn item_input_len(&self) -> usize {
-        self.c
-    }
-
-    fn item_output_len(&self) -> usize {
-        self.c
-    }
-
-    fn buckets(&self) -> &[usize] {
-        &self.buckets
-    }
-
-    fn make_scratch(&self) -> BackendScratch {
-        Box::new(LayerNormScratch { codes: Vec::with_capacity(self.c) })
-    }
-
-    fn run(
-        &self,
-        bucket: usize,
-        inputs: &[f32],
-        out: &mut [f32],
-        scratch: &mut BackendScratch,
-    ) -> Result<()> {
-        anyhow::ensure!(inputs.len() == bucket * self.c);
-        anyhow::ensure!(out.len() == bucket * self.c);
-        let s = scratch
-            .downcast_mut::<LayerNormScratch>()
-            .context("layernorm backend handed a foreign scratch arena")?;
-        ptf_quantize_batch_into(inputs, &self.cal, &mut s.codes);
-        self.ln.forward_batch_f32(&s.codes, &self.cal.alpha, &self.gamma, &self.beta, out);
-        Ok(())
+            .downcast_mut::<OpScratch>()
+            .with_context(|| format!("op '{}' handed a foreign scratch arena", self.op.name()))?;
+        self.op.run_batch(bucket, inputs, out, s)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::ptf_quantize_into;
+    use crate::layernorm::config::DEFAULT_ZP;
+    use crate::layernorm::AiLayerNorm;
+    use crate::ops::ailayernorm::identity_calibration;
+    use crate::ops::{AiLayerNormOp, E2SoftmaxOp};
+    use crate::quant::{ptf_quantize_into, PtfCalib};
+    use crate::softmax::{E2Softmax, E2SoftmaxConfig};
+
+    fn softmax_backend(l: usize, buckets: Vec<usize>) -> OpBackend {
+        OpBackend::try_new(Arc::new(E2SoftmaxOp::try_new(l).unwrap()), buckets).unwrap()
+    }
+
+    fn layernorm_backend(c: usize, buckets: Vec<usize>) -> OpBackend {
+        OpBackend::try_new(Arc::new(AiLayerNormOp::try_new(c).unwrap()), buckets).unwrap()
+    }
 
     #[test]
-    fn software_backend_shapes() {
-        let be = SoftwareSoftmaxBackend::new(32, vec![4, 1, 2]);
+    fn op_backend_shapes() {
+        let be = softmax_backend(32, vec![4, 1, 2]);
         assert_eq!(be.buckets(), &[1, 2, 4]);
+        assert_eq!(be.op().spec().to_string(), "e2softmax/L32");
         let out = be.run_alloc(2, &vec![0.5; 64]).unwrap();
         assert_eq!(out.len(), 64);
         // uniform logits -> near-uniform probabilities
@@ -299,46 +223,39 @@ mod tests {
     }
 
     #[test]
-    fn software_backend_rejects_bad_len() {
-        let be = SoftwareSoftmaxBackend::new(32, vec![1]);
+    fn op_backend_rejects_bad_len() {
+        let be = softmax_backend(32, vec![1]);
         assert!(be.run_alloc(1, &vec![0.0; 31]).is_err());
     }
 
     #[test]
     fn constructors_reject_bad_bucket_lists() {
-        // empty and zero-sized bucket lists used to slip through and panic
-        // later inside Batcher::new on a worker thread; now they fail at
-        // construction with a clear error
-        assert!(SoftwareSoftmaxBackend::try_new(32, vec![]).is_err());
-        let err = SoftwareSoftmaxBackend::try_new(32, vec![4, 0]).unwrap_err();
+        // empty and zero-sized bucket lists fail at construction with a
+        // clear error, not later inside Batcher::new on a worker thread
+        let op = || Arc::new(E2SoftmaxOp::try_new(32).unwrap()) as Arc<dyn Op>;
+        assert!(OpBackend::try_new(op(), vec![]).is_err());
+        let err = OpBackend::try_new(op(), vec![4, 0]).unwrap_err();
         assert!(format!("{err:#}").contains("zero"), "{err:#}");
-        assert!(SoftwareSoftmaxBackend::try_new(0, vec![1]).is_err());
-
-        let cal = PtfCalib { alpha: vec![0u8; 8], s: 1.0, zp: DEFAULT_ZP };
-        assert!(SoftwareLayerNormBackend::with_calibration(
-            8,
-            vec![],
-            cal.clone(),
-            vec![1f32; 8],
-            vec![0f32; 8]
-        )
-        .is_err());
-        assert!(SoftwareLayerNormBackend::with_calibration(
-            8,
-            vec![0, 2],
-            cal,
-            vec![1f32; 8],
-            vec![0f32; 8]
-        )
-        .is_err());
+        // a zero item length dies in the op constructor itself
+        assert!(E2SoftmaxOp::try_new(0).is_err());
+        assert!(AiLayerNormOp::try_new(0).is_err());
     }
 
     #[test]
     fn constructors_dedup_and_sort_buckets() {
-        let be = SoftwareSoftmaxBackend::try_new(16, vec![8, 1, 8, 4]).unwrap();
+        let be = softmax_backend(16, vec![8, 1, 8, 4]);
         assert_eq!(be.buckets(), &[1, 4, 8]);
-        let ln = SoftwareLayerNormBackend::new(16, vec![4, 4, 1]);
+        let ln = layernorm_backend(16, vec![4, 4, 1]);
         assert_eq!(ln.buckets(), &[1, 4]);
+    }
+
+    #[test]
+    fn from_spec_builds_and_rejects() {
+        let reg = OpRegistry::builtin();
+        let be = OpBackend::from_spec(&reg, "e2softmax/L48", vec![1, 4]).unwrap();
+        assert_eq!(be.item_input_len(), 48);
+        assert!(OpBackend::from_spec(&reg, "nosuchop/L48", vec![1]).is_err());
+        assert!(OpBackend::from_spec(&reg, "e2softmax/L48", vec![0]).is_err());
     }
 
     #[test]
@@ -346,7 +263,7 @@ mod tests {
         // the arena hot path must be bit-identical to the reference
         // forward_logits pipeline it replaced
         let l = 48;
-        let be = SoftwareSoftmaxBackend::new(l, vec![1, 4]);
+        let be = softmax_backend(l, vec![1, 4]);
         let mut rng = crate::util::rng::Rng::new(3);
         let mut rows = vec![0f32; 4 * l];
         rng.fill_normal(&mut rows, 0.0, 2.0);
@@ -364,7 +281,7 @@ mod tests {
         // a NaN-poisoned request must not corrupt its own row beyond the
         // NaN slots (they quantize to the bottom code) nor its batchmates
         let l = 16;
-        let be = SoftwareSoftmaxBackend::new(l, vec![2]);
+        let be = softmax_backend(l, vec![2]);
         let mut rows = vec![0.5f32; 2 * l];
         rows[3] = f32::NAN;
         let got = be.run_alloc(2, &rows).unwrap();
@@ -380,7 +297,7 @@ mod tests {
     fn softmax_scratch_reuse_is_stable() {
         // same inputs through one reused scratch arena: identical outputs
         let l = 64;
-        let be = SoftwareSoftmaxBackend::new(l, vec![1, 8]);
+        let be = softmax_backend(l, vec![1, 8]);
         let mut rng = crate::util::rng::Rng::new(5);
         let mut rows = vec![0f32; 8 * l];
         rng.fill_normal(&mut rows, 0.0, 1.5);
@@ -395,13 +312,13 @@ mod tests {
     #[test]
     fn layernorm_backend_matches_direct_kernel() {
         let c = 96;
-        let be = SoftwareLayerNormBackend::new(c, vec![1, 4]);
+        let be = layernorm_backend(c, vec![1, 4]);
         let mut rng = crate::util::rng::Rng::new(7);
         let mut rows = vec![0f32; 4 * c];
         rng.fill_normal(&mut rows, 0.0, 2.0);
         let got = be.run_alloc(4, &rows).unwrap();
         // direct kernel invocation with the same identity calibration
-        let cal = PtfCalib { alpha: vec![0u8; c], s: 1.0 / 32.0, zp: DEFAULT_ZP };
+        let cal = identity_calibration(c);
         let ln = AiLayerNorm { zp: cal.zp };
         let gamma = vec![1f32; c];
         let beta = vec![0f32; c];
@@ -417,7 +334,7 @@ mod tests {
     #[test]
     fn layernorm_backend_normalizes_rows() {
         let c = 192;
-        let be = SoftwareLayerNormBackend::new(c, vec![1]);
+        let be = layernorm_backend(c, vec![1]);
         let mut rng = crate::util::rng::Rng::new(11);
         let mut row = vec![0f32; c];
         rng.fill_normal(&mut row, 0.5, 2.0);
@@ -429,15 +346,8 @@ mod tests {
     }
 
     #[test]
-    fn layernorm_backend_rejects_mismatched_calibration() {
+    fn layernorm_op_rejects_mismatched_calibration() {
         let cal = PtfCalib { alpha: vec![0u8; 4], s: 1.0, zp: DEFAULT_ZP };
-        assert!(SoftwareLayerNormBackend::with_calibration(
-            8,
-            vec![1],
-            cal,
-            vec![1f32; 8],
-            vec![0f32; 8]
-        )
-        .is_err());
+        assert!(AiLayerNormOp::with_calibration(8, cal, vec![1f32; 8], vec![0f32; 8]).is_err());
     }
 }

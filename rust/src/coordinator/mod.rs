@@ -35,12 +35,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-pub use backend::{
-    Backend, BackendScratch, PjrtBackend, SoftwareLayerNormBackend, SoftwareSoftmaxBackend,
-};
+pub use backend::{Backend, BackendScratch, OpBackend, PjrtBackend};
 pub use batcher::{normalize_buckets, BatchPolicy, Batcher};
 pub use metrics::Metrics;
-pub use router::{paper_services, RouterClient, ServiceRouter, ServiceRouterBuilder, ServiceSpec};
+pub use router::{
+    paper_service_specs, paper_services, RouterClient, ServiceRouter, ServiceRouterBuilder,
+    ServiceSpec,
+};
 
 /// One inference request: a flat f32 item (e.g. one image or one row).
 pub struct Request {
@@ -354,11 +355,15 @@ fn execute_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::backend::SoftwareSoftmaxBackend;
+    use crate::coordinator::backend::OpBackend;
+    use crate::ops::E2SoftmaxOp;
+
+    fn softmax_backend(l: usize, buckets: Vec<usize>) -> Arc<OpBackend> {
+        Arc::new(OpBackend::try_new(Arc::new(E2SoftmaxOp::try_new(l).unwrap()), buckets).unwrap())
+    }
 
     fn start_sw(policy: BatchPolicy) -> Coordinator {
-        let be = Arc::new(SoftwareSoftmaxBackend::new(64, vec![1, 4, 8]));
-        Coordinator::start(be, policy, 1)
+        Coordinator::start(softmax_backend(64, vec![1, 4, 8]), policy, 1)
     }
 
     fn policy(max_wait_ms: u64, max_batch: usize) -> BatchPolicy {
@@ -442,8 +447,7 @@ mod tests {
 
     #[test]
     fn multi_worker_answers_everything() {
-        let be = Arc::new(SoftwareSoftmaxBackend::new(64, vec![1, 4, 8]));
-        let co = Coordinator::start(be, policy(1, 8), 4);
+        let co = Coordinator::start(softmax_backend(64, vec![1, 4, 8]), policy(1, 8), 4);
         let cl = co.client();
         let rxs: Vec<_> = (0..120).map(|_| cl.submit(vec![0.5; 64]).unwrap()).collect();
         for rx in rxs {

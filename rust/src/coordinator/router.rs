@@ -21,10 +21,11 @@ use std::sync::{mpsc, Arc};
 
 use anyhow::{Context, Result};
 
-use super::backend::{Backend, SoftwareLayerNormBackend, SoftwareSoftmaxBackend};
+use super::backend::{Backend, OpBackend};
 use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
 use super::{Client, Coordinator, Response, TrySubmit};
+use crate::ops::OpRegistry;
 
 /// Declarative description of one named service before the router starts.
 pub struct ServiceSpec {
@@ -66,6 +67,33 @@ impl ServiceRouterBuilder {
     pub fn spec(mut self, spec: ServiceSpec) -> Self {
         self.specs.push(spec);
         self
+    }
+
+    /// Register a software op-service from a registry spec string
+    /// (`e2softmax/L128`, `softmax-exact/L49`, …): the canonical spec is
+    /// the service name, the backend is an `OpBackend` over the
+    /// constructed op, weight 1 under the default policy.
+    pub fn op_service(
+        self,
+        registry: &OpRegistry,
+        spec: &str,
+        buckets: Vec<usize>,
+    ) -> Result<Self> {
+        self.weighted_op_service(registry, spec, buckets, 1)
+    }
+
+    /// `op_service` with an explicit worker-budget weight.
+    pub fn weighted_op_service(
+        self,
+        registry: &OpRegistry,
+        spec: &str,
+        buckets: Vec<usize>,
+        weight: usize,
+    ) -> Result<Self> {
+        let (parsed, op) = registry.build(spec)?;
+        let backend = Arc::new(OpBackend::try_new(op, buckets)?);
+        let policy = self.default_policy.clone();
+        Ok(self.spec(ServiceSpec { name: parsed.to_string(), backend, policy, weight }))
     }
 
     /// Split the worker budget and start every service's pool.
@@ -229,39 +257,52 @@ fn split_workers(total: usize, weights: &[usize]) -> Vec<usize> {
     shares
 }
 
-/// The paper's mixed software workload as a ready-to-register service
-/// list: bit-exact E2Softmax row services at the evaluated sequence
-/// lengths L ∈ {49, 128, 785, 1024} and the AILayerNorm service at the
-/// transformer channel width C = 768, all bucketed 1/4/8/16.
-pub fn paper_services() -> Vec<(String, Arc<dyn Backend>)> {
-    let mut v: Vec<(String, Arc<dyn Backend>)> = Vec::new();
-    for &l in &[49usize, 128, 785, 1024] {
-        v.push((
-            format!("softmax/L{l}"),
-            Arc::new(SoftwareSoftmaxBackend::new(l, vec![1, 4, 8, 16])) as Arc<dyn Backend>,
-        ));
-    }
-    v.push((
-        "layernorm/C768".to_string(),
-        Arc::new(SoftwareLayerNormBackend::new(768, vec![1, 4, 8, 16])) as Arc<dyn Backend>,
-    ));
+/// The paper's mixed software workload as registry spec strings: bit-exact
+/// E2Softmax at the evaluated sequence lengths L ∈ {49, 128, 785, 1024}
+/// plus AILayerNorm at the transformer channel width C = 768.
+pub fn paper_service_specs() -> Vec<String> {
+    let mut v: Vec<String> =
+        [49usize, 128, 785, 1024].iter().map(|l| format!("e2softmax/L{l}")).collect();
+    v.push("ailayernorm/C768".to_string());
     v
+}
+
+/// The paper workload as ready-to-register (name, backend) pairs, built
+/// purely through the `OpRegistry` spec path, all bucketed 1/4/8/16.
+pub fn paper_services() -> Result<Vec<(String, Arc<dyn Backend>)>> {
+    let registry = OpRegistry::builtin();
+    paper_service_specs()
+        .iter()
+        .map(|s| {
+            let (spec, op) = registry.build(s)?;
+            let be = Arc::new(OpBackend::try_new(op, vec![1, 4, 8, 16])?) as Arc<dyn Backend>;
+            Ok((spec.to_string(), be))
+        })
+        .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ops::E2SoftmaxOp;
     use std::time::Duration;
 
     fn quick_policy() -> BatchPolicy {
         BatchPolicy { max_wait: Duration::from_millis(1), max_batch: 8, queue_cap: None }
     }
 
+    fn softmax_backend(l: usize, buckets: Vec<usize>) -> Arc<OpBackend> {
+        Arc::new(OpBackend::try_new(Arc::new(E2SoftmaxOp::try_new(l).unwrap()), buckets).unwrap())
+    }
+
     fn two_service_router(total_workers: usize) -> ServiceRouter {
+        let registry = OpRegistry::builtin();
         ServiceRouter::builder(total_workers)
             .default_policy(quick_policy())
-            .service("softmax/L32", Arc::new(SoftwareSoftmaxBackend::new(32, vec![1, 4, 8])))
-            .service("layernorm/C64", Arc::new(SoftwareLayerNormBackend::new(64, vec![1, 4, 8])))
+            .op_service(&registry, "e2softmax/L32", vec![1, 4, 8])
+            .unwrap()
+            .op_service(&registry, "ailayernorm/C64", vec![1, 4, 8])
+            .unwrap()
             .start()
             .unwrap()
     }
@@ -269,14 +310,14 @@ mod tests {
     #[test]
     fn routes_by_service_name_and_answers() {
         let router = two_service_router(2);
-        assert_eq!(router.services(), vec!["layernorm/C64", "softmax/L32"]);
+        assert_eq!(router.services(), vec!["ailayernorm/C64", "e2softmax/L32"]);
         let cl = router.client();
-        let sm = cl.infer("softmax/L32", vec![0.5; 32]).unwrap();
+        let sm = cl.infer("e2softmax/L32", vec![0.5; 32]).unwrap();
         assert_eq!(sm.output.len(), 32);
-        let ln = cl.infer("layernorm/C64", vec![0.5; 64]).unwrap();
+        let ln = cl.infer("ailayernorm/C64", vec![0.5; 64]).unwrap();
         assert_eq!(ln.output.len(), 64);
-        assert_eq!(router.metrics("softmax/L32").unwrap().completed(), 1);
-        assert_eq!(router.metrics("layernorm/C64").unwrap().completed(), 1);
+        assert_eq!(router.metrics("e2softmax/L32").unwrap().completed(), 1);
+        assert_eq!(router.metrics("ailayernorm/C64").unwrap().completed(), 1);
         router.shutdown();
     }
 
@@ -284,12 +325,12 @@ mod tests {
     fn unknown_service_and_wrong_len_error_clearly() {
         let router = two_service_router(2);
         let cl = router.client();
-        let err = format!("{:#}", cl.infer("softmax/L999", vec![0.0; 32]).unwrap_err());
+        let err = format!("{:#}", cl.infer("e2softmax/L999", vec![0.0; 32]).unwrap_err());
         assert!(err.contains("unknown service"), "{err}");
-        assert!(err.contains("softmax/L32"), "listing registered names: {err}");
+        assert!(err.contains("e2softmax/L32"), "listing registered names: {err}");
         // per-service item-length validation names the service
-        let err = format!("{:#}", cl.submit("softmax/L32", vec![0.0; 31]).unwrap_err());
-        assert!(err.contains("softmax/L32"), "{err}");
+        let err = format!("{:#}", cl.submit("e2softmax/L32", vec![0.0; 31]).unwrap_err());
+        assert!(err.contains("e2softmax/L32"), "{err}");
         assert!(err.contains("31"), "{err}");
         router.shutdown();
     }
@@ -298,14 +339,17 @@ mod tests {
     fn builder_rejects_duplicates_and_empty() {
         assert!(ServiceRouter::builder(2).start().is_err());
         let dup = ServiceRouter::builder(2)
-            .service("a", Arc::new(SoftwareSoftmaxBackend::new(8, vec![1])))
-            .service("a", Arc::new(SoftwareSoftmaxBackend::new(8, vec![1])))
+            .service("a", softmax_backend(8, vec![1]))
+            .service("a", softmax_backend(8, vec![1]))
             .start();
         assert!(dup.is_err());
-        let unnamed = ServiceRouter::builder(2)
-            .service("", Arc::new(SoftwareSoftmaxBackend::new(8, vec![1])))
-            .start();
+        let unnamed = ServiceRouter::builder(2).service("", softmax_backend(8, vec![1])).start();
         assert!(unnamed.is_err());
+        // an op spec that fails to parse surfaces at registration time
+        let registry = OpRegistry::builtin();
+        assert!(ServiceRouter::builder(2)
+            .op_service(&registry, "e2softmax/Lnope", vec![1])
+            .is_err());
     }
 
     #[test]
@@ -326,8 +370,8 @@ mod tests {
     fn hot_service_receives_larger_pool() {
         let router = ServiceRouter::builder(6)
             .default_policy(quick_policy())
-            .hot_service("hot", Arc::new(SoftwareSoftmaxBackend::new(16, vec![1, 4])), 4)
-            .service("cold", Arc::new(SoftwareSoftmaxBackend::new(16, vec![1, 4])))
+            .hot_service("hot", softmax_backend(16, vec![1, 4]), 4)
+            .service("cold", softmax_backend(16, vec![1, 4]))
             .start()
             .unwrap();
         assert!(router.workers("hot").unwrap() > router.workers("cold").unwrap());
@@ -340,24 +384,31 @@ mod tests {
         let router = two_service_router(2);
         let cl = router.client();
         for _ in 0..5 {
-            cl.infer("softmax/L32", vec![0.1; 32]).unwrap();
-            cl.infer("layernorm/C64", vec![0.1; 64]).unwrap();
+            cl.infer("e2softmax/L32", vec![0.1; 32]).unwrap();
+            cl.infer("ailayernorm/C64", vec![0.1; 64]).unwrap();
         }
         let s = router.summary();
-        assert!(s.contains("softmax/L32"), "{s}");
-        assert!(s.contains("layernorm/C64"), "{s}");
+        assert!(s.contains("e2softmax/L32"), "{s}");
+        assert!(s.contains("ailayernorm/C64"), "{s}");
         assert!(s.contains("merged: accepted=10 completed=10"), "{s}");
         router.shutdown();
     }
 
     #[test]
     fn paper_services_cover_the_evaluated_shapes() {
-        let svcs = paper_services();
+        let svcs = paper_services().unwrap();
         let names: Vec<&str> = svcs.iter().map(|(n, _)| n.as_str()).collect();
         assert_eq!(
             names,
-            vec!["softmax/L49", "softmax/L128", "softmax/L785", "softmax/L1024", "layernorm/C768"]
+            vec![
+                "e2softmax/L49",
+                "e2softmax/L128",
+                "e2softmax/L785",
+                "e2softmax/L1024",
+                "ailayernorm/C768"
+            ]
         );
+        assert_eq!(names, paper_service_specs());
         for (name, be) in &svcs {
             let l: usize = name.rsplit(['L', 'C']).next().unwrap().parse().unwrap();
             assert_eq!(be.item_input_len(), l, "{name}");

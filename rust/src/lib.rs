@@ -8,10 +8,13 @@
 //!   Pallas kernels and the transformer models that embed them, AOT-lowered
 //!   to HLO text under `artifacts/`.
 //! * **Layer 3 (this crate)** — the inference coordinator (request router,
-//!   dynamic batcher, PJRT runtime), the bit-exact integer models of both
-//!   algorithms, the hardware evaluation substrate (28nm cost model,
-//!   cycle-accurate unit models, analytical GPU baseline), and one
-//!   experiment generator per table/figure of the paper.
+//!   dynamic batcher, PJRT runtime), the unified operator layer (`ops`:
+//!   one `Op` trait + `OpRegistry` serving SOLE's kernels, the exact
+//!   baselines and the prior-work comparators behind spec strings), the
+//!   bit-exact integer models of both algorithms, the hardware evaluation
+//!   substrate (28nm cost model, cycle-accurate unit models, analytical
+//!   GPU baseline), and one experiment generator per table/figure of the
+//!   paper.
 //!
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! paper-vs-measured record.
@@ -22,6 +25,7 @@ pub mod fixedpoint;
 pub mod hw;
 pub mod layernorm;
 pub mod model;
+pub mod ops;
 pub mod quant;
 pub mod runtime;
 pub mod softmax;

@@ -4,16 +4,21 @@
 //! sole experiment <fig1a|fig3|fig6a|fig6b|table1|table2|table3|compress-error|ablation|all>
 //!      [--artifacts DIR] [--samples N] [--batches 1,2,4,8,16]
 //! sole serve [--artifacts DIR] [--model deit_t] [--variant fp32_sole] [--all-families]
-//!      [--requests N] [--rate R] [--max-wait-ms W] [--workers K] [--queue-cap N]
+//!      [--ops <spec,...>] [--requests N] [--rate R] [--max-wait-ms W] [--workers K]
+//!      [--queue-cap N]
+//! sole ops
 //! sole info [--artifacts DIR]
 //! ```
 //!
 //! `serve` runs one `ServiceRouter` process.  With artifacts (and the
 //! `pjrt` feature) it discovers the manifest's (model, variant) families
 //! and serves the requested one — or every family with `--all-families` —
-//! as named services; without artifacts it serves the paper's mixed
-//! software workload (softmax L ∈ {49, 128, 785, 1024} + layernorm
-//! C = 768).  `--workers` is the *total* worker budget, split across
+//! as named services; otherwise it serves software op-services built from
+//! registry spec strings: `--ops e2softmax/L256,softmax-exact/L256,...`
+//! picks them explicitly, the default is the paper's mixed workload
+//! (`e2softmax` at L ∈ {49, 128, 785, 1024} + `ailayernorm` at C = 768).
+//! `sole ops` lists every registered operator family with its spec
+//! grammar.  `--workers` is the *total* worker budget, split across
 //! services (hot service weighted up, minimum one each).
 
 use std::path::{Path, PathBuf};
@@ -22,8 +27,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use sole::coordinator::{paper_services, Backend, BatchPolicy, PjrtBackend, ServiceRouter};
+use sole::coordinator::{paper_service_specs, BatchPolicy, PjrtBackend, ServiceRouter};
 use sole::experiments::{self, ExperimentOut};
+use sole::ops::OpRegistry;
 use sole::runtime::Engine;
 use sole::tensor::Bundle;
 use sole::util::cli::Args;
@@ -34,13 +40,16 @@ fn main() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("experiment") => cmd_experiment(&args),
         Some("serve") => cmd_serve(&args),
+        Some("ops") => cmd_ops(),
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
                 "sole {} — SOLE reproduction CLI\n\
                  usage:\n  sole experiment <fig1a|fig3|fig6a|fig6b|table1|table2|table3|compress-error|ablation|all>\n\
                  \x20 sole serve [--model deit_t] [--variant fp32_sole] [--all-families] \
+                 [--ops e2softmax/L128,softmax-exact/L128] \
                  [--requests 64] [--rate 8] [--workers 4]\n\
+                 \x20 sole ops\n\
                  \x20 sole info",
                 sole::VERSION
             );
@@ -53,18 +62,19 @@ fn artifacts_path(args: &Args) -> PathBuf {
     PathBuf::from(args.opt_str("artifacts", "artifacts"))
 }
 
-fn parse_batches(args: &Args) -> Vec<usize> {
-    args.opt_str("batches", "1,2,4,8,16")
-        .split(',')
-        .filter_map(|s| s.trim().parse().ok())
-        .collect()
+/// `--batches 1,2,4,8,16`.  Strict: an unparsable entry is an error
+/// naming the flag (it used to be silently dropped by a `filter_map`).
+fn parse_batches(args: &Args) -> Result<Vec<usize>> {
+    let batches: Vec<usize> = args.opt_list("batches", "1,2,4,8,16")?;
+    anyhow::ensure!(!batches.contains(&0), "--batches: batch sizes must be positive");
+    Ok(batches)
 }
 
 fn cmd_experiment(args: &Args) -> Result<()> {
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
     let artifacts = artifacts_path(args);
-    let samples = args.opt_usize("samples", 512);
-    let batches = parse_batches(args);
+    let samples = args.opt_usize("samples", 512)?;
+    let batches = parse_batches(args)?;
 
     let mut outs: Vec<ExperimentOut> = Vec::new();
     let needs_engine = matches!(which, "table1" | "table2" | "all");
@@ -75,7 +85,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     };
 
     match which {
-        "fig1a" => outs.push(experiments::fig1::run(args.opt_usize("batch", 8))),
+        "fig1a" => outs.push(experiments::fig1::run(args.opt_usize("batch", 8)?)),
         "fig3" => outs.push(experiments::fig3::run(&artifacts)?),
         "fig6a" => outs.push(experiments::fig6::run_a(&batches)),
         "fig6b" => outs.push(experiments::fig6::run_b(&batches)),
@@ -114,28 +124,57 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let artifacts = artifacts_path(args);
-    let n_requests = args.opt_usize("requests", 64);
-    let rate = args.opt_f64("rate", 16.0); // req/s (Poisson arrivals)
-    let max_wait = Duration::from_millis(args.opt_usize("max-wait-ms", 20) as u64);
-    let workers = args.opt_usize("workers", 4); // total budget, split across services
-    let queue_cap = match args.opt_usize("queue-cap", 0) {
+    let n_requests = args.opt_usize("requests", 64)?;
+    let rate = args.opt_f64("rate", 16.0)?; // req/s (Poisson arrivals)
+    anyhow::ensure!(rate > 0.0, "--rate: must be positive, got {rate}");
+    let max_wait = Duration::from_millis(args.opt_usize("max-wait-ms", 20)? as u64);
+    let workers = args.opt_usize("workers", 4)?; // total budget, split across services
+    let queue_cap = match args.opt_usize("queue-cap", 0)? {
         0 => None,
         cap => Some(cap),
     };
     let policy = BatchPolicy { max_wait, max_batch: 16, queue_cap };
 
+    // --ops pins the workload to explicit registry specs (software path)
+    let specs: Vec<String> = match args.opt("ops") {
+        Some(raw) => raw.split(',').map(|s| s.trim().to_string()).collect(),
+        None => paper_service_specs(),
+    };
+
     let have_artifacts = artifacts.join("manifest.json").exists();
-    if have_artifacts && cfg!(feature = "pjrt") {
+    if args.opt("ops").is_none() && have_artifacts && cfg!(feature = "pjrt") {
         serve_artifact_families(args, &artifacts, n_requests, rate, workers, policy)
     } else {
-        if have_artifacts {
+        if args.opt("ops").is_none() && have_artifacts {
             println!(
                 "artifacts found but built without --features pjrt — \
                  serving the software op-services instead"
             );
         }
-        serve_software_mix(n_requests, rate, workers, policy)
+        serve_software_ops(&specs, n_requests, rate, workers, policy)
     }
+}
+
+/// `sole ops` — list every registered operator family: what `--ops`
+/// accepts and what the spec grammar looks like.
+fn cmd_ops() -> Result<()> {
+    let registry = OpRegistry::builtin();
+    println!("registered ops (spec grammar: <op>/<DIM><len>, e.g. e2softmax/L128):\n");
+    println!("{:<18} {:>4} {:>12}  {}", "op", "dim", "default", "summary");
+    for l in registry.listings() {
+        println!(
+            "{:<18} {:>4} {:>12}  {}",
+            l.name,
+            l.dim,
+            format!("{}{}", l.dim, l.default_len),
+            l.summary
+        );
+    }
+    println!(
+        "\nserve them with e.g.:\n  sole serve --ops {}",
+        paper_service_specs().join(",")
+    );
+    Ok(())
 }
 
 /// Artifact path: discover the manifest's (model, variant) families,
@@ -201,33 +240,41 @@ fn serve_artifact_families(
     Ok(())
 }
 
-/// Software path (no artifacts needed): the paper's full mixed workload —
-/// softmax at L ∈ {49, 128, 785, 1024} and layernorm at C = 768 — through
-/// one router, requests interleaved round-robin across services.
-fn serve_software_mix(
+/// Software path (no artifacts needed): serve the requested op specs —
+/// by default the paper's full mixed workload — through one router,
+/// requests interleaved round-robin across services.
+fn serve_software_ops(
+    specs: &[String],
     n_requests: usize,
     rate: f64,
     workers: usize,
     policy: BatchPolicy,
 ) -> Result<()> {
-    println!("serving the paper's mixed software workload ({workers} total workers)");
-    let services = paper_services();
+    anyhow::ensure!(!specs.is_empty(), "--ops: need at least one op spec");
+    println!(
+        "serving software op-services [{}] ({workers} total workers)",
+        specs.join(", ")
+    );
+    let registry = OpRegistry::builtin();
     let mut builder = ServiceRouter::builder(workers).default_policy(policy);
-    for (name, backend) in &services {
-        builder = builder.service(name, backend.clone());
+    let mut names = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let name = registry.parse_spec(spec)?.to_string();
+        builder = builder.op_service(&registry, &name, vec![1, 4, 8, 16])?;
+        names.push(name);
     }
     let router = builder.start()?;
     let client = router.client();
 
     let mut rng = Rng::new(1234);
-    let inputs: Vec<(String, Vec<f32>)> = services
+    let inputs: Vec<(String, Vec<f32>)> = names
         .iter()
-        .map(|(name, backend)| {
-            let mut row = vec![0f32; backend.item_input_len()];
+        .map(|name| {
+            let mut row = vec![0f32; client.item_len(name)?];
             rng.fill_normal(&mut row, 0.0, 2.0);
-            (name.clone(), row)
+            Ok((name.clone(), row))
         })
-        .collect();
+        .collect::<Result<_>>()?;
     let t0 = Instant::now();
     let mut pending = Vec::new();
     for i in 0..n_requests {

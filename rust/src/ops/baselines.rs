@@ -1,0 +1,164 @@
+//! Prior-work comparators as [`Op`]s: Softermax (DAC'21) and the I-BERT
+//! integer softmax/layernorm.  These wrap the functional models in
+//! `softmax/baselines.rs` / `layernorm/baselines.rs` so the router can
+//! serve them side by side with SOLE for accuracy/throughput comparison.
+//!
+//! Comparator ops call the reference functions row by row and therefore
+//! allocate per row — they are measurement baselines, not hot paths; the
+//! allocation-free contract applies to the ops actually optimized
+//! (`e2softmax`, `ailayernorm`).
+
+use anyhow::Result;
+
+use super::{check_batch, Op, OpScratch};
+use crate::layernorm::baselines::ibert_layernorm;
+use crate::softmax::baselines::{ibert_softmax, softermax};
+
+/// Fraction bits of the registered `softermax` service (the 16-bit
+/// Softermax unit's buffer format).
+pub const SOFTERMAX_FRAC_BITS: u32 = 8;
+
+/// Input scale of the registered `ibert-softmax` service.
+pub const IBERT_SOFTMAX_SCALE: f64 = 1.0 / 16.0;
+
+/// Input scale of the registered `ibert-layernorm` service.
+pub const IBERT_LAYERNORM_SCALE: f64 = 1.0 / 64.0;
+
+/// Softermax rows of length `l` (spec `softermax/L<l>`).
+pub struct SoftermaxOp {
+    l: usize,
+    frac_bits: u32,
+}
+
+impl SoftermaxOp {
+    pub fn try_new(l: usize) -> Result<SoftermaxOp> {
+        anyhow::ensure!(l > 0, "softermax rows must be non-empty");
+        Ok(SoftermaxOp { l, frac_bits: SOFTERMAX_FRAC_BITS })
+    }
+}
+
+impl Op for SoftermaxOp {
+    fn name(&self) -> &str {
+        "softermax"
+    }
+
+    fn dim(&self) -> char {
+        'L'
+    }
+
+    fn item_len(&self) -> usize {
+        self.l
+    }
+
+    fn run_batch(
+        &self,
+        rows: usize,
+        input: &[f32],
+        out: &mut [f32],
+        _scratch: &mut OpScratch,
+    ) -> Result<()> {
+        check_batch(self, rows, input, out)?;
+        for (row, row_out) in input.chunks_exact(self.l).zip(out.chunks_exact_mut(self.l)) {
+            for (o, v) in row_out.iter_mut().zip(softermax(row, self.frac_bits)) {
+                *o = v as f32;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// I-BERT i-exp softmax rows of length `l` (spec `ibert-softmax/L<l>`).
+pub struct IbertSoftmaxOp {
+    l: usize,
+    scale: f64,
+}
+
+impl IbertSoftmaxOp {
+    pub fn try_new(l: usize) -> Result<IbertSoftmaxOp> {
+        anyhow::ensure!(l > 0, "ibert-softmax rows must be non-empty");
+        Ok(IbertSoftmaxOp { l, scale: IBERT_SOFTMAX_SCALE })
+    }
+}
+
+impl Op for IbertSoftmaxOp {
+    fn name(&self) -> &str {
+        "ibert-softmax"
+    }
+
+    fn dim(&self) -> char {
+        'L'
+    }
+
+    fn item_len(&self) -> usize {
+        self.l
+    }
+
+    fn run_batch(
+        &self,
+        rows: usize,
+        input: &[f32],
+        out: &mut [f32],
+        _scratch: &mut OpScratch,
+    ) -> Result<()> {
+        check_batch(self, rows, input, out)?;
+        for (row, row_out) in input.chunks_exact(self.l).zip(out.chunks_exact_mut(self.l)) {
+            for (o, v) in row_out.iter_mut().zip(ibert_softmax(row, self.scale)) {
+                *o = v as f32;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// I-BERT integer layernorm over `c` channels (spec
+/// `ibert-layernorm/C<c>`), identity affine like the other registered
+/// layernorm services.
+pub struct IbertLayerNormOp {
+    c: usize,
+    scale: f64,
+    gamma: Vec<f32>,
+    beta: Vec<f32>,
+}
+
+impl IbertLayerNormOp {
+    pub fn try_new(c: usize) -> Result<IbertLayerNormOp> {
+        anyhow::ensure!(c > 0, "ibert-layernorm rows must be non-empty");
+        Ok(IbertLayerNormOp {
+            c,
+            scale: IBERT_LAYERNORM_SCALE,
+            gamma: vec![1f32; c],
+            beta: vec![0f32; c],
+        })
+    }
+}
+
+impl Op for IbertLayerNormOp {
+    fn name(&self) -> &str {
+        "ibert-layernorm"
+    }
+
+    fn dim(&self) -> char {
+        'C'
+    }
+
+    fn item_len(&self) -> usize {
+        self.c
+    }
+
+    fn run_batch(
+        &self,
+        rows: usize,
+        input: &[f32],
+        out: &mut [f32],
+        _scratch: &mut OpScratch,
+    ) -> Result<()> {
+        check_batch(self, rows, input, out)?;
+        for (row, row_out) in input.chunks_exact(self.c).zip(out.chunks_exact_mut(self.c)) {
+            let y = ibert_layernorm(row, &self.gamma, &self.beta, self.scale);
+            for (o, v) in row_out.iter_mut().zip(y) {
+                *o = v as f32;
+            }
+        }
+        Ok(())
+    }
+}

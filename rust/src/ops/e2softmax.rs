@@ -1,0 +1,71 @@
+//! The paper's E2Softmax as an [`Op`]: quantize-to-codes + the planar
+//! LUT-driven batch kernel, packaged behind the one operator API.
+
+use anyhow::{Context, Result};
+
+use super::{check_batch, Op, OpScratch};
+use crate::softmax::e2::{quantize_logits_batch_into, E2Scratch};
+use crate::softmax::{E2Softmax, E2SoftmaxConfig};
+
+/// Bit-exact E2Softmax over f32 logit rows of length `l` (spec
+/// `e2softmax/L<l>`): one pass of per-row-max quantization over the packed
+/// batch, then one `forward_batch_f32` kernel call.
+pub struct E2SoftmaxOp {
+    l: usize,
+    sm: E2Softmax,
+}
+
+/// Per-worker arena: the packed logit->code buffer plus the E2Softmax
+/// kernel scratch.
+struct Scratch {
+    codes: Vec<i64>,
+    e2: E2Scratch,
+}
+
+impl E2SoftmaxOp {
+    /// Row length `l` at the default datapath configuration.
+    pub fn try_new(l: usize) -> Result<E2SoftmaxOp> {
+        E2SoftmaxOp::with_config(l, E2SoftmaxConfig::default())
+    }
+
+    /// Fully-specified construction (ablations pick non-default `e`/lane
+    /// counts); the serving registry uses `try_new`.
+    pub fn with_config(l: usize, cfg: E2SoftmaxConfig) -> Result<E2SoftmaxOp> {
+        anyhow::ensure!(l > 0, "e2softmax rows must be non-empty");
+        Ok(E2SoftmaxOp { l, sm: E2Softmax::new(cfg) })
+    }
+}
+
+impl Op for E2SoftmaxOp {
+    fn name(&self) -> &str {
+        "e2softmax"
+    }
+
+    fn dim(&self) -> char {
+        'L'
+    }
+
+    fn item_len(&self) -> usize {
+        self.l
+    }
+
+    fn make_scratch(&self) -> OpScratch {
+        Box::new(Scratch { codes: Vec::with_capacity(self.l), e2: E2Scratch::default() })
+    }
+
+    fn run_batch(
+        &self,
+        rows: usize,
+        input: &[f32],
+        out: &mut [f32],
+        scratch: &mut OpScratch,
+    ) -> Result<()> {
+        check_batch(self, rows, input, out)?;
+        let s = scratch
+            .downcast_mut::<Scratch>()
+            .context("e2softmax op handed a foreign scratch arena")?;
+        quantize_logits_batch_into(input, self.l, self.sm.cfg().e, &mut s.codes);
+        self.sm.forward_batch_f32(&s.codes, self.l, out, &mut s.e2);
+        Ok(())
+    }
+}

@@ -1,0 +1,109 @@
+//! Exact f64 baselines as [`Op`]s — the reference points every SOLE
+//! number is compared against, finally servable through the same router.
+//!
+//! Both ops call the reference kernels (`softmax::e2::softmax_exact`,
+//! `layernorm::ai::layernorm_exact`) row by row and cast to f32 at the
+//! output, so the served values can never drift from the functions the
+//! accuracy experiments use.  Like the prior-work comparators they
+//! allocate per row — baselines are measurement points, not hot paths.
+
+use anyhow::Result;
+
+use super::{check_batch, Op, OpScratch};
+use crate::layernorm::ai::layernorm_exact;
+use crate::softmax::e2::softmax_exact;
+
+/// Epsilon of the exact-layernorm baseline (the value every accuracy
+/// cross-check in the repo uses with `layernorm_exact`).
+pub const EXACT_LN_EPS: f64 = 1e-9;
+
+/// Exact f64 softmax over f32 logit rows of length `l` (spec
+/// `softmax-exact/L<l>`) — the accuracy ceiling and the throughput floor
+/// E2Softmax is measured against.
+pub struct ExactSoftmaxOp {
+    l: usize,
+}
+
+impl ExactSoftmaxOp {
+    pub fn try_new(l: usize) -> Result<ExactSoftmaxOp> {
+        anyhow::ensure!(l > 0, "softmax-exact rows must be non-empty");
+        Ok(ExactSoftmaxOp { l })
+    }
+}
+
+impl Op for ExactSoftmaxOp {
+    fn name(&self) -> &str {
+        "softmax-exact"
+    }
+
+    fn dim(&self) -> char {
+        'L'
+    }
+
+    fn item_len(&self) -> usize {
+        self.l
+    }
+
+    fn run_batch(
+        &self,
+        rows: usize,
+        input: &[f32],
+        out: &mut [f32],
+        _scratch: &mut OpScratch,
+    ) -> Result<()> {
+        check_batch(self, rows, input, out)?;
+        for (row, row_out) in input.chunks_exact(self.l).zip(out.chunks_exact_mut(self.l)) {
+            for (o, v) in row_out.iter_mut().zip(softmax_exact(row)) {
+                *o = v as f32;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Exact f64 layernorm over f32 rows of `c` channels (spec
+/// `layernorm-exact/C<c>`), identity affine (gamma = 1, beta = 0) to
+/// mirror the registry-default `ailayernorm` service.
+pub struct ExactLayerNormOp {
+    c: usize,
+    gamma: Vec<f32>,
+    beta: Vec<f32>,
+}
+
+impl ExactLayerNormOp {
+    pub fn try_new(c: usize) -> Result<ExactLayerNormOp> {
+        anyhow::ensure!(c > 0, "layernorm-exact rows must be non-empty");
+        Ok(ExactLayerNormOp { c, gamma: vec![1f32; c], beta: vec![0f32; c] })
+    }
+}
+
+impl Op for ExactLayerNormOp {
+    fn name(&self) -> &str {
+        "layernorm-exact"
+    }
+
+    fn dim(&self) -> char {
+        'C'
+    }
+
+    fn item_len(&self) -> usize {
+        self.c
+    }
+
+    fn run_batch(
+        &self,
+        rows: usize,
+        input: &[f32],
+        out: &mut [f32],
+        _scratch: &mut OpScratch,
+    ) -> Result<()> {
+        check_batch(self, rows, input, out)?;
+        for (row, row_out) in input.chunks_exact(self.c).zip(out.chunks_exact_mut(self.c)) {
+            let y = layernorm_exact(row, &self.gamma, &self.beta, EXACT_LN_EPS);
+            for (o, v) in row_out.iter_mut().zip(y) {
+                *o = v as f32;
+            }
+        }
+        Ok(())
+    }
+}

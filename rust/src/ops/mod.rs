@@ -1,0 +1,111 @@
+//! The operator layer: one `Op` trait from kernel to router.
+//!
+//! SOLE's claim is comparative — E2Softmax and AILayerNorm versus exact
+//! and prior approximations — so the serving stack must treat "which
+//! operator" as data, not as a hand-rolled backend struct per algorithm.
+//! Everything that computes a row-wise operator implements [`Op`]:
+//!
+//! * `name()` / `dim()` / `item_len()` — identity and shape, rendered as
+//!   the spec string `<name>/<DIM><len>` ([`OpSpec`], e.g.
+//!   `e2softmax/L128`) that the registry, router, CLI and benches speak;
+//! * `make_scratch()` — an opaque per-worker scratch arena so hot ops
+//!   stay allocation-free at steady state without interior mutability;
+//! * `run_batch(rows, input, out, scratch)` — one call over a packed
+//!   planar batch, writing into caller buffers.
+//!
+//! [`OpRegistry`] maps family names to fallible constructors, so a new
+//! variant (a ConSmax-style softmax, a fused GELU) is one trait impl plus
+//! one `register` call — the coordinator (`OpBackend`), `ServiceRouter`,
+//! `sole serve --ops`, `sole ops` and `bench_serving` pick it up with no
+//! further plumbing.  Construction is fallible end to end: there is no
+//! panicking constructor anywhere in this layer.
+//!
+//! Registered families: the paper pair (`e2softmax`, `ailayernorm`), the
+//! exact baselines (`softmax-exact`, `layernorm-exact`), and the
+//! prior-work comparators from `softmax/baselines.rs` /
+//! `layernorm/baselines.rs` (`softermax`, `ibert-softmax`,
+//! `ibert-layernorm`) — every one servable side by side for
+//! accuracy/throughput comparison.  A shared conformance suite
+//! (`tests/op_conformance.rs`) pins each registered op bit-exact to its
+//! direct kernel.
+
+pub mod ailayernorm;
+pub mod baselines;
+pub mod e2softmax;
+pub mod exact;
+pub mod registry;
+pub mod spec;
+
+use anyhow::Result;
+
+pub use ailayernorm::AiLayerNormOp;
+pub use baselines::{IbertLayerNormOp, IbertSoftmaxOp, SoftermaxOp};
+pub use e2softmax::E2SoftmaxOp;
+pub use exact::{ExactLayerNormOp, ExactSoftmaxOp};
+pub use registry::OpRegistry;
+pub use spec::OpSpec;
+
+/// Opaque per-worker scratch arena.  A worker creates one per op via
+/// [`Op::make_scratch`] and hands it back on every `run_batch`, so ops
+/// reuse buffers without locks; stateless ops keep the default `()`.
+pub type OpScratch = Box<dyn std::any::Any + Send>;
+
+/// One row-wise operator: the single API every kernel is served through.
+///
+/// Input and output items are the same flat f32 length (`item_len`) — all
+/// of the paper's nonlinear ops are shape-preserving row transforms.
+pub trait Op: Send + Sync {
+    /// Registry family name, e.g. `e2softmax` (no `/`).
+    fn name(&self) -> &str;
+
+    /// Dimension letter of the spec grammar (`L` rows, `C` channels).
+    fn dim(&self) -> char;
+
+    /// Flat f32 length of one item (input and output).
+    fn item_len(&self) -> usize;
+
+    /// Canonical spec of this instance; `OpSpec::parse` round-trips it.
+    fn spec(&self) -> OpSpec {
+        OpSpec { op: self.name().to_string(), dim: self.dim(), len: self.item_len() }
+    }
+
+    /// Create the per-worker scratch arena (stateless ops keep the
+    /// default).
+    fn make_scratch(&self) -> OpScratch {
+        Box::new(())
+    }
+
+    /// Run `rows` items: `input.len() == rows * item_len()`, writing the
+    /// same number of f32s into `out`.  Hot-path implementations keep
+    /// every temporary in `scratch` so steady-state execution is
+    /// allocation-free; baseline/comparator ops may allocate.
+    fn run_batch(
+        &self,
+        rows: usize,
+        input: &[f32],
+        out: &mut [f32],
+        scratch: &mut OpScratch,
+    ) -> Result<()>;
+}
+
+/// Shared shape validation every `run_batch` implementation starts with
+/// (public so operators registered from outside this crate can enforce
+/// the same contract; `OpBackend` also checks it at the serving
+/// boundary, so a forgetful impl still cannot read a mis-sized buffer).
+pub fn check_batch(op: &dyn Op, rows: usize, input: &[f32], out: &[f32]) -> Result<()> {
+    let item = op.item_len();
+    anyhow::ensure!(rows > 0, "op '{}': batch must contain at least one row", op.name());
+    anyhow::ensure!(
+        input.len() == rows * item,
+        "op '{}': input len {} != {rows} rows * {item}",
+        op.name(),
+        input.len()
+    );
+    anyhow::ensure!(
+        out.len() == rows * item,
+        "op '{}': out len {} != {rows} rows * {item}",
+        op.name(),
+        out.len()
+    );
+    Ok(())
+}

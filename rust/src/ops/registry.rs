@@ -1,0 +1,308 @@
+//! `OpRegistry`: spec strings -> operator constructors.
+//!
+//! The registry is the single place "which operators exist" is recorded.
+//! Each family registers a dimension letter (so `e2softmax/C768` is a
+//! caught error, not a silently weird service), a default item length
+//! (what `sole ops` advertises and `bench_serving` drives), a one-line
+//! summary, and a fallible constructor from a parsed [`OpSpec`].
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::{
+    AiLayerNormOp, E2SoftmaxOp, ExactLayerNormOp, ExactSoftmaxOp, IbertLayerNormOp,
+    IbertSoftmaxOp, Op, OpSpec, SoftermaxOp,
+};
+
+/// Constructor from a validated spec (the registry checks the dimension
+/// letter and positive length before calling it).
+type OpCtor = Box<dyn Fn(&OpSpec) -> Result<Arc<dyn Op>> + Send + Sync>;
+
+struct OpEntry {
+    dim: char,
+    default_len: usize,
+    summary: String,
+    ctor: OpCtor,
+}
+
+/// What `sole ops` prints per family.
+#[derive(Debug, Clone)]
+pub struct OpListing {
+    pub name: String,
+    pub dim: char,
+    pub default_len: usize,
+    pub summary: String,
+}
+
+/// Registry of operator families, keyed by spec name.
+pub struct OpRegistry {
+    entries: BTreeMap<String, OpEntry>,
+}
+
+impl OpRegistry {
+    /// An empty registry (tests, downstream embedders).
+    pub fn empty() -> OpRegistry {
+        OpRegistry { entries: BTreeMap::new() }
+    }
+
+    /// Every in-tree operator: the paper pair, the exact baselines, and
+    /// the prior-work comparators.
+    pub fn builtin() -> OpRegistry {
+        let mut r = OpRegistry::empty();
+        // registering a literal name twice is a programmer error; the
+        // expect keeps builtin() infallible for callers
+        let mut add = |name: &str, dim, default_len, summary: &str, ctor: OpCtor| {
+            r.register(name, dim, default_len, summary, ctor)
+                .unwrap_or_else(|e| panic!("builtin registry: {e:#}"))
+        };
+        add(
+            "e2softmax",
+            'L',
+            128,
+            "SOLE E2Softmax (Algorithm 1): bit-exact integer softmax, planar LUT kernel",
+            Box::new(|spec: &OpSpec| Ok(Arc::new(E2SoftmaxOp::try_new(spec.len)?) as Arc<dyn Op>)),
+        );
+        add(
+            "softmax-exact",
+            'L',
+            128,
+            "exact f64 softmax baseline on f32 logit rows",
+            Box::new(|spec: &OpSpec| {
+                Ok(Arc::new(ExactSoftmaxOp::try_new(spec.len)?) as Arc<dyn Op>)
+            }),
+        );
+        add(
+            "softermax",
+            'L',
+            128,
+            "Softermax (DAC'21) base-2 comparator, 8 fraction bits",
+            Box::new(|spec: &OpSpec| Ok(Arc::new(SoftermaxOp::try_new(spec.len)?) as Arc<dyn Op>)),
+        );
+        add(
+            "ibert-softmax",
+            'L',
+            128,
+            "I-BERT i-exp integer softmax comparator, input scale 1/16",
+            Box::new(|spec: &OpSpec| {
+                Ok(Arc::new(IbertSoftmaxOp::try_new(spec.len)?) as Arc<dyn Op>)
+            }),
+        );
+        add(
+            "ailayernorm",
+            'C',
+            768,
+            "SOLE AILayerNorm (Algorithm 2): bit-exact integer layernorm, PTF-quantized",
+            Box::new(|spec: &OpSpec| {
+                Ok(Arc::new(AiLayerNormOp::try_new(spec.len)?) as Arc<dyn Op>)
+            }),
+        );
+        add(
+            "layernorm-exact",
+            'C',
+            768,
+            "exact f64 layernorm baseline, identity affine",
+            Box::new(|spec: &OpSpec| {
+                Ok(Arc::new(ExactLayerNormOp::try_new(spec.len)?) as Arc<dyn Op>)
+            }),
+        );
+        add(
+            "ibert-layernorm",
+            'C',
+            768,
+            "I-BERT integer layernorm comparator, input scale 1/64",
+            Box::new(|spec: &OpSpec| {
+                Ok(Arc::new(IbertLayerNormOp::try_new(spec.len)?) as Arc<dyn Op>)
+            }),
+        );
+        r
+    }
+
+    /// Register a family.  Errors on an invalid name or a duplicate —
+    /// silently replacing an operator would invalidate every spec string
+    /// already handed out.
+    pub fn register(
+        &mut self,
+        name: &str,
+        dim: char,
+        default_len: usize,
+        summary: &str,
+        ctor: OpCtor,
+    ) -> Result<()> {
+        anyhow::ensure!(!name.is_empty(), "op name must be non-empty");
+        anyhow::ensure!(
+            !name.contains('/') && !name.contains(char::is_whitespace),
+            "op name '{name}' must not contain '/' or whitespace"
+        );
+        anyhow::ensure!(
+            dim.is_ascii_uppercase(),
+            "op '{name}': dimension letter must be uppercase"
+        );
+        anyhow::ensure!(default_len > 0, "op '{name}': default length must be positive");
+        anyhow::ensure!(
+            !self.entries.contains_key(name),
+            "op '{name}' is already registered"
+        );
+        self.entries.insert(
+            name.to_string(),
+            OpEntry { dim, default_len, summary: summary.to_string(), ctor },
+        );
+        Ok(())
+    }
+
+    /// Registered family names, ascending.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.keys().map(String::as_str).collect()
+    }
+
+    /// One listing per family, ascending by name (the `sole ops` view).
+    pub fn listings(&self) -> Vec<OpListing> {
+        self.entries
+            .iter()
+            .map(|(name, e)| OpListing {
+                name: name.clone(),
+                dim: e.dim,
+                default_len: e.default_len,
+                summary: e.summary.clone(),
+            })
+            .collect()
+    }
+
+    fn entry(&self, op: &str) -> Result<&OpEntry> {
+        self.entries.get(op).with_context(|| {
+            format!("unknown op '{op}' (registered: {})", self.names().join(", "))
+        })
+    }
+
+    /// The family's spec at its default item length.
+    pub fn canonical_spec(&self, op: &str) -> Result<OpSpec> {
+        let e = self.entry(op)?;
+        Ok(OpSpec { op: op.to_string(), dim: e.dim, len: e.default_len })
+    }
+
+    /// Parse a spec string and validate it against the registry: known
+    /// family, matching dimension letter.
+    pub fn parse_spec(&self, s: &str) -> Result<OpSpec> {
+        let spec = OpSpec::parse(s)?;
+        let e = self.entry(&spec.op)?;
+        anyhow::ensure!(
+            spec.dim == e.dim,
+            "op spec '{s}': '{}' takes {}<len>, not {}<len>",
+            spec.op,
+            e.dim,
+            spec.dim
+        );
+        Ok(spec)
+    }
+
+    /// Parse, validate and construct: the one call sites use.  The
+    /// returned spec is canonical (`spec.to_string()` is the service
+    /// name).
+    pub fn build(&self, s: &str) -> Result<(OpSpec, Arc<dyn Op>)> {
+        let spec = self.parse_spec(s)?;
+        let op = (self.entry(&spec.op)?.ctor)(&spec)
+            .with_context(|| format!("constructing op '{spec}'"))?;
+        // the spec string is the service name, so a constructor that
+        // renames or resizes the op would advertise a contract the op
+        // does not honor — reject it at registration time
+        anyhow::ensure!(
+            op.name() == spec.op,
+            "op '{spec}': constructor returned an op named '{}'",
+            op.name()
+        );
+        anyhow::ensure!(
+            op.item_len() == spec.len,
+            "op '{spec}': constructor returned item length {}",
+            op.item_len()
+        );
+        Ok((spec, op))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_covers_paper_baselines_and_comparators() {
+        let r = OpRegistry::builtin();
+        assert_eq!(
+            r.names(),
+            vec![
+                "ailayernorm",
+                "e2softmax",
+                "ibert-layernorm",
+                "ibert-softmax",
+                "layernorm-exact",
+                "softermax",
+                "softmax-exact",
+            ]
+        );
+        for listing in r.listings() {
+            assert!(!listing.summary.is_empty(), "{}", listing.name);
+            let spec = r.canonical_spec(&listing.name).unwrap();
+            assert_eq!(spec.dim, listing.dim);
+            assert_eq!(spec.len, listing.default_len);
+        }
+    }
+
+    #[test]
+    fn build_constructs_every_builtin_at_its_canonical_spec() {
+        let r = OpRegistry::builtin();
+        for name in r.names() {
+            let s = r.canonical_spec(name).unwrap().to_string();
+            let (spec, op) = r.build(&s).unwrap();
+            assert_eq!(op.name(), spec.op, "{s}");
+            assert_eq!(op.item_len(), spec.len, "{s}");
+            assert_eq!(op.spec(), spec, "{s}");
+        }
+    }
+
+    #[test]
+    fn unknown_op_error_lists_registered_names() {
+        let r = OpRegistry::builtin();
+        let err = format!("{:#}", r.build("consmax/L64").unwrap_err());
+        assert!(err.contains("unknown op 'consmax'"), "{err}");
+        assert!(err.contains("e2softmax"), "{err}");
+    }
+
+    #[test]
+    fn wrong_dimension_letter_is_caught() {
+        let r = OpRegistry::builtin();
+        let err = format!("{:#}", r.build("e2softmax/C768").unwrap_err());
+        assert!(err.contains("takes L<len>"), "{err}");
+        assert!(r.build("ailayernorm/L49").is_err());
+    }
+
+    #[test]
+    fn zero_length_spec_is_rejected() {
+        let r = OpRegistry::builtin();
+        assert!(r.build("e2softmax/L0").is_err());
+    }
+
+    #[test]
+    fn register_rejects_duplicates_and_bad_names() {
+        let mut r = OpRegistry::builtin();
+        let dup = r.register(
+            "e2softmax",
+            'L',
+            64,
+            "dup",
+            Box::new(|spec: &OpSpec| Ok(Arc::new(E2SoftmaxOp::try_new(spec.len)?) as Arc<dyn Op>)),
+        );
+        assert!(dup.is_err());
+        for bad in ["", "a/b", "a b"] {
+            let got = r.register(
+                bad,
+                'L',
+                64,
+                "bad",
+                Box::new(|spec: &OpSpec| {
+                    Ok(Arc::new(E2SoftmaxOp::try_new(spec.len)?) as Arc<dyn Op>)
+                }),
+            );
+            assert!(got.is_err(), "'{bad}' should be rejected");
+        }
+    }
+}

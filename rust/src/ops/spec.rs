@@ -1,0 +1,97 @@
+//! Operator spec strings: the one grammar every layer speaks.
+//!
+//! A spec names an operator family plus its item shape in a single
+//! routable token: `<op>/<DIM><len>`, e.g. `e2softmax/L256`,
+//! `softmax-exact/L49`, `ailayernorm/C768`, `layernorm-exact/C768`.
+//! `<op>` is the registry family name (no `/`), `<DIM>` is one uppercase
+//! dimension letter (by convention `L` for softmax row length, `C` for
+//! layernorm channel count), `<len>` is the positive flat f32 item length.
+//! The canonical rendering round-trips: `parse(format(spec)) == spec`.
+
+use anyhow::{Context, Result};
+
+/// A parsed operator spec: family name, dimension letter, item length.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OpSpec {
+    /// Registry family name, e.g. `e2softmax`.
+    pub op: String,
+    /// Dimension letter the family uses (`L` rows, `C` channels).
+    pub dim: char,
+    /// Flat f32 length of one item.
+    pub len: usize,
+}
+
+impl OpSpec {
+    /// Parse `<op>/<DIM><len>`.  Every failure names the offending spec —
+    /// this string is the user-facing API of `sole serve --ops`.
+    pub fn parse(s: &str) -> Result<OpSpec> {
+        let (op, shape) = s.rsplit_once('/').with_context(|| {
+            format!("op spec '{s}': expected '<op>/<DIM><len>' (e.g. e2softmax/L128)")
+        })?;
+        anyhow::ensure!(!op.is_empty(), "op spec '{s}': empty op name before '/'");
+        anyhow::ensure!(!op.contains('/'), "op spec '{s}': op name must not contain '/'");
+        let mut chars = shape.chars();
+        let dim = chars
+            .next()
+            .with_context(|| format!("op spec '{s}': missing '<DIM><len>' after '/'"))?;
+        anyhow::ensure!(
+            dim.is_ascii_uppercase(),
+            "op spec '{s}': shape must start with an uppercase dimension letter \
+             (L rows, C channels)"
+        );
+        let len_str = chars.as_str();
+        let len: usize = len_str
+            .parse()
+            .map_err(|_| anyhow::anyhow!("op spec '{s}': invalid item length '{len_str}'"))?;
+        anyhow::ensure!(len > 0, "op spec '{s}': item length must be positive");
+        Ok(OpSpec { op: op.to_string(), dim, len })
+    }
+}
+
+impl std::fmt::Display for OpSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}{}", self.op, self.dim, self.len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_paper_specs() {
+        for (s, op, dim, len) in [
+            ("e2softmax/L256", "e2softmax", 'L', 256),
+            ("softmax-exact/L49", "softmax-exact", 'L', 49),
+            ("ailayernorm/C768", "ailayernorm", 'C', 768),
+            ("layernorm-exact/C768", "layernorm-exact", 'C', 768),
+        ] {
+            let spec = OpSpec::parse(s).unwrap();
+            assert_eq!(spec.op, op);
+            assert_eq!(spec.dim, dim);
+            assert_eq!(spec.len, len);
+            // canonical round trip
+            assert_eq!(spec.to_string(), s);
+            assert_eq!(OpSpec::parse(&spec.to_string()).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_specs_naming_the_spec() {
+        let bad_specs = [
+            "",
+            "e2softmax",
+            "e2softmax/",
+            "/L12",
+            "e2softmax/l12",
+            "e2softmax/L",
+            "e2softmax/Lx",
+            "e2softmax/L0",
+            "a/b/L4",
+        ];
+        for bad in bad_specs {
+            let err = format!("{:#}", OpSpec::parse(bad).unwrap_err());
+            assert!(err.contains(&format!("'{bad}'")), "'{bad}' -> {err}");
+        }
+    }
+}

@@ -1,8 +1,12 @@
 //! Tiny CLI argument parser (offline substrate — `clap` is not vendored).
 //!
 //! Supports `binary <subcommand> [--flag] [--key value] [positional...]`.
+//! Typed accessors are fallible: a malformed value (`--workers=abc`) is an
+//! error naming the flag, never a silent fall-through to the default.
 
 use std::collections::BTreeMap;
+
+use anyhow::Result;
 
 #[derive(Debug, Clone, Default)]
 pub struct Args {
@@ -48,12 +52,42 @@ impl Args {
         self.options.get(name).map(|s| s.as_str())
     }
 
-    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
-        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    /// `--name N` as usize; `default` when absent, an error naming the
+    /// flag when present but malformed (`--workers=abc` used to silently
+    /// become the default).
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name}: expected an unsigned integer, got '{s}'")),
+        }
     }
 
-    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
-        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    /// `--name X` as f64; same contract as `opt_usize`.
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => {
+                s.parse().map_err(|_| anyhow::anyhow!("--{name}: expected a number, got '{s}'"))
+            }
+        }
+    }
+
+    /// `--name a,b,c` as a comma-separated list of `T` (`default` uses
+    /// the same syntax).  Any unparsable entry is an error naming the
+    /// flag, never a silently dropped element.
+    pub fn opt_list<T: std::str::FromStr>(&self, name: &str, default: &str) -> Result<Vec<T>> {
+        let raw = self.opt(name).unwrap_or(default);
+        let mut out = Vec::new();
+        for tok in raw.split(',') {
+            let tok = tok.trim();
+            match tok.parse() {
+                Ok(v) => out.push(v),
+                Err(_) => anyhow::bail!("--{name}: invalid entry '{tok}' in '{raw}'"),
+            }
+        }
+        Ok(out)
     }
 
     pub fn opt_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
@@ -81,16 +115,46 @@ mod tests {
     #[test]
     fn equals_syntax() {
         let a = parse(&["serve", "--port=8080"]);
-        assert_eq!(a.opt_usize("port", 0), 8080);
+        assert_eq!(a.opt_usize("port", 0).unwrap(), 8080);
     }
 
     #[test]
     fn defaults() {
         let a = parse(&["x"]);
-        assert_eq!(a.opt_usize("n", 7), 7);
-        assert_eq!(a.opt_f64("r", 1.5), 1.5);
+        assert_eq!(a.opt_usize("n", 7).unwrap(), 7);
+        assert_eq!(a.opt_f64("r", 1.5).unwrap(), 1.5);
         assert_eq!(a.opt_str("s", "d"), "d");
         assert!(!a.flag("q"));
+    }
+
+    #[test]
+    fn malformed_values_error_naming_the_flag() {
+        // the old behavior silently fell back to the default — a typo'd
+        // `--workers=abc` ran with 4 workers and nobody noticed
+        let a = parse(&["serve", "--workers=abc", "--rate", "fast"]);
+        let err = a.opt_usize("workers", 4).unwrap_err().to_string();
+        assert!(err.contains("--workers"), "{err}");
+        assert!(err.contains("abc"), "{err}");
+        let err = a.opt_f64("rate", 16.0).unwrap_err().to_string();
+        assert!(err.contains("--rate"), "{err}");
+        // a negative count is malformed for a usize flag, not clamped
+        let a = parse(&["serve", "--workers=-2"]);
+        assert!(a.opt_usize("workers", 4).is_err());
+    }
+
+    #[test]
+    fn list_values_parse_strictly() {
+        let a = parse(&["bench", "--batches", "1, 2,16"]);
+        let got: Vec<usize> = a.opt_list("batches", "4,8").unwrap();
+        assert_eq!(got, vec![1, 2, 16]);
+        // absent flag falls back to the default list
+        let dflt: Vec<usize> = a.opt_list("rates", "4,8").unwrap();
+        assert_eq!(dflt, vec![4, 8]);
+        // a bad entry is an error naming the flag, not a dropped element
+        let a = parse(&["bench", "--batches", "1,two,4"]);
+        let err = a.opt_list::<usize>("batches", "1").unwrap_err().to_string();
+        assert!(err.contains("--batches"), "{err}");
+        assert!(err.contains("'two'"), "{err}");
     }
 
     #[test]

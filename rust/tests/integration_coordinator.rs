@@ -7,16 +7,22 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
-use sole::coordinator::{
-    Backend, BatchPolicy, Coordinator, PjrtBackend, SoftwareLayerNormBackend,
-    SoftwareSoftmaxBackend,
-};
+use sole::coordinator::{Backend, BatchPolicy, Coordinator, OpBackend, PjrtBackend};
 use sole::layernorm::{config::DEFAULT_ZP, AiLayerNorm};
+use sole::ops::{AiLayerNormOp, E2SoftmaxOp};
 use sole::quant::{ptf_quantize_into, PtfCalib};
 use sole::runtime::Engine;
 use sole::softmax::{quantize_logits_into, E2Scratch, E2Softmax, E2SoftmaxConfig};
 use sole::tensor::Bundle;
 use sole::util::rng::Rng;
+
+fn softmax_backend(l: usize, buckets: Vec<usize>) -> Arc<OpBackend> {
+    Arc::new(OpBackend::try_new(Arc::new(E2SoftmaxOp::try_new(l).unwrap()), buckets).unwrap())
+}
+
+fn layernorm_backend(c: usize, buckets: Vec<usize>) -> Arc<OpBackend> {
+    Arc::new(OpBackend::try_new(Arc::new(AiLayerNormOp::try_new(c).unwrap()), buckets).unwrap())
+}
 
 fn artifacts_dir() -> Option<PathBuf> {
     let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -45,8 +51,7 @@ fn softmax_coordinator_matches_direct_kernel() {
     // responses routed through submit -> batcher -> worker arena must be
     // bit-identical to quantize + forward_row_f32 called directly
     let l = 96;
-    let be = Arc::new(SoftwareSoftmaxBackend::new(l, vec![1, 4, 8]));
-    let co = Coordinator::start(be, policy(5, 8), 4);
+    let co = Coordinator::start(softmax_backend(l, vec![1, 4, 8]), policy(5, 8), 4);
     let cl = co.client();
     let mut rng = Rng::new(17);
     let rows: Vec<Vec<f32>> = (0..48)
@@ -78,16 +83,8 @@ fn layernorm_coordinator_matches_direct_kernel() {
     let cal = PtfCalib { alpha: vec![0u8; c], s: 1.0 / 32.0, zp: DEFAULT_ZP };
     let gamma = vec![1f32; c];
     let beta = vec![0f32; c];
-    let be = Arc::new(
-        SoftwareLayerNormBackend::with_calibration(
-            c,
-            vec![1, 4, 8],
-            cal.clone(),
-            gamma.clone(),
-            beta.clone(),
-        )
-        .unwrap(),
-    );
+    let op = AiLayerNormOp::with_calibration(c, cal.clone(), gamma.clone(), beta.clone()).unwrap();
+    let be = Arc::new(OpBackend::try_new(Arc::new(op), vec![1, 4, 8]).unwrap());
     let co = Coordinator::start(be, policy(5, 8), 4);
     let cl = co.client();
     let mut rng = Rng::new(23);
@@ -116,8 +113,8 @@ fn layernorm_coordinator_matches_direct_kernel() {
 fn both_operators_serve_through_the_same_batcher_shape() {
     // the coordinator is operator-agnostic: the same policy drives either
     // op-service and metrics stay coherent
-    let sm: Arc<dyn Backend> = Arc::new(SoftwareSoftmaxBackend::new(64, vec![1, 4, 8]));
-    let ln: Arc<dyn Backend> = Arc::new(SoftwareLayerNormBackend::new(64, vec![1, 4, 8]));
+    let sm: Arc<dyn Backend> = softmax_backend(64, vec![1, 4, 8]);
+    let ln: Arc<dyn Backend> = layernorm_backend(64, vec![1, 4, 8]);
     for be in [sm, ln] {
         let co = Coordinator::start(be, policy(2, 8), 2);
         let cl = co.client();
@@ -132,8 +129,7 @@ fn both_operators_serve_through_the_same_batcher_shape() {
 
 #[test]
 fn metrics_shards_merge_under_four_workers() {
-    let be = Arc::new(SoftwareSoftmaxBackend::new(32, vec![1, 2, 4, 8]));
-    let co = Coordinator::start(be, policy(1, 8), 4);
+    let co = Coordinator::start(softmax_backend(32, vec![1, 2, 4, 8]), policy(1, 8), 4);
     assert_eq!(co.metrics.shard_count(), 4);
     let cl = co.client();
     let rxs: Vec<_> = (0..200).map(|_| cl.submit(vec![0.1; 32]).unwrap()).collect();

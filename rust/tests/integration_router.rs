@@ -1,13 +1,19 @@
 //! Integration: the ServiceRouter end to end — the paper's full mixed
 //! workload (E2Softmax at L ∈ {49, 128, 785, 1024} + AILayerNorm at
-//! C = 768) through one process, pinned bit-exact against direct kernel
-//! invocation per service, plus a mixed-op soak with interleaved clients.
+//! C = 768) through one process, registered purely via registry spec
+//! strings, pinned bit-exact against direct kernel invocation per
+//! service, plus a mixed-op soak with interleaved clients and the exact
+//! baselines served side by side with SOLE.
 
 use std::time::Duration;
 
 use sole::coordinator::{paper_services, BatchPolicy, ServiceRouter};
+use sole::layernorm::ai::layernorm_exact;
 use sole::layernorm::{config::DEFAULT_ZP, AiLayerNorm};
+use sole::ops::exact::EXACT_LN_EPS;
+use sole::ops::OpRegistry;
 use sole::quant::{ptf_quantize_into, PtfCalib};
+use sole::softmax::e2::softmax_exact;
 use sole::softmax::{quantize_logits_into, E2Scratch, E2Softmax, E2SoftmaxConfig};
 use sole::util::rng::Rng;
 
@@ -17,7 +23,7 @@ fn start_paper_router(total_workers: usize, max_wait_ms: u64) -> ServiceRouter {
         max_batch: 16,
         queue_cap: None,
     });
-    for (name, be) in paper_services() {
+    for (name, be) in paper_services().unwrap() {
         builder = builder.service(&name, be);
     }
     builder.start().unwrap()
@@ -32,7 +38,7 @@ fn every_softmax_service_matches_direct_kernel_at_paper_shapes() {
     let sm = E2Softmax::new(E2SoftmaxConfig::default());
     let mut rng = Rng::new(41);
     for &l in &[49usize, 128, 785, 1024] {
-        let service = format!("softmax/L{l}");
+        let service = format!("e2softmax/L{l}");
         assert_eq!(cl.item_len(&service).unwrap(), l);
         let rows: Vec<Vec<f32>> = (0..12)
             .map(|_| {
@@ -61,7 +67,7 @@ fn layernorm_service_matches_direct_kernel_at_c768() {
     let c = 768;
     let router = start_paper_router(8, 3);
     let cl = router.client();
-    // the same identity calibration SoftwareLayerNormBackend::new uses
+    // the same identity calibration AiLayerNormOp::try_new uses
     let cal = PtfCalib { alpha: vec![0u8; c], s: 1.0 / 32.0, zp: DEFAULT_ZP };
     let ln = AiLayerNorm { zp: cal.zp };
     let gamma = vec![1f32; c];
@@ -75,7 +81,7 @@ fn layernorm_service_matches_direct_kernel_at_c768() {
         })
         .collect();
     let rxs: Vec<_> =
-        rows.iter().map(|r| cl.submit("layernorm/C768", r.clone()).unwrap()).collect();
+        rows.iter().map(|r| cl.submit("ailayernorm/C768", r.clone()).unwrap()).collect();
     let mut codes = Vec::new();
     let mut want = vec![0f32; c];
     for (i, (row, rx)) in rows.iter().zip(rxs).enumerate() {
@@ -84,7 +90,7 @@ fn layernorm_service_matches_direct_kernel_at_c768() {
         ln.forward_row_f32(&codes, &cal.alpha, &gamma, &beta, &mut want);
         assert_eq!(resp.output, want, "request {i}");
     }
-    assert_eq!(router.metrics("layernorm/C768").unwrap().completed(), 16);
+    assert_eq!(router.metrics("ailayernorm/C768").unwrap().completed(), 16);
     router.shutdown();
 }
 
@@ -148,10 +154,64 @@ fn router_rejects_cross_service_shapes() {
     // a request sized for one service must not slip into another
     let router = start_paper_router(5, 1);
     let cl = router.client();
-    let err = format!("{:#}", cl.submit("softmax/L49", vec![0.0; 128]).unwrap_err());
-    assert!(err.contains("softmax/L49"), "{err}");
+    let err = format!("{:#}", cl.submit("e2softmax/L49", vec![0.0; 128]).unwrap_err());
+    assert!(err.contains("e2softmax/L49"), "{err}");
     // correct sizes still round-trip on both ops
-    assert_eq!(cl.infer("softmax/L128", vec![0.1; 128]).unwrap().output.len(), 128);
-    assert_eq!(cl.infer("layernorm/C768", vec![0.1; 768]).unwrap().output.len(), 768);
+    assert_eq!(cl.infer("e2softmax/L128", vec![0.1; 128]).unwrap().output.len(), 128);
+    assert_eq!(cl.infer("ailayernorm/C768", vec![0.1; 768]).unwrap().output.len(), 768);
+    router.shutdown();
+}
+
+#[test]
+fn exact_baselines_serve_through_router_via_spec_strings() {
+    // the acceptance bar of the Op redesign: the exact softmax/layernorm
+    // baselines become servable purely by naming their registry specs,
+    // side by side with the SOLE kernels, bit-exact to the direct kernels
+    let registry = OpRegistry::builtin();
+    let router = ServiceRouter::builder(4)
+        .default_policy(BatchPolicy {
+            max_wait: Duration::from_millis(2),
+            max_batch: 16,
+            queue_cap: None,
+        })
+        .op_service(&registry, "e2softmax/L49", vec![1, 4, 8])
+        .unwrap()
+        .op_service(&registry, "softmax-exact/L49", vec![1, 4, 8])
+        .unwrap()
+        .op_service(&registry, "ailayernorm/C96", vec![1, 4, 8])
+        .unwrap()
+        .op_service(&registry, "layernorm-exact/C96", vec![1, 4, 8])
+        .unwrap()
+        .start()
+        .unwrap();
+    let cl = router.client();
+    assert_eq!(
+        router.services(),
+        vec!["ailayernorm/C96", "e2softmax/L49", "layernorm-exact/C96", "softmax-exact/L49"]
+    );
+
+    let mut rng = Rng::new(71);
+    for i in 0..8 {
+        let mut sm_row = vec![0f32; 49];
+        rng.fill_normal(&mut sm_row, 0.0, 2.0);
+        let got = cl.infer("softmax-exact/L49", sm_row.clone()).unwrap().output;
+        let want: Vec<f32> = softmax_exact(&sm_row).into_iter().map(|v| v as f32).collect();
+        assert_eq!(got, want, "softmax-exact request {i}");
+
+        let mut ln_row = vec![0f32; 96];
+        rng.fill_normal(&mut ln_row, 0.3, 1.5);
+        let got = cl.infer("layernorm-exact/C96", ln_row.clone()).unwrap().output;
+        let gamma = vec![1f32; 96];
+        let beta = vec![0f32; 96];
+        let want: Vec<f32> = layernorm_exact(&ln_row, &gamma, &beta, EXACT_LN_EPS)
+            .into_iter()
+            .map(|v| v as f32)
+            .collect();
+        assert_eq!(got, want, "layernorm-exact request {i}");
+
+        // the SOLE services keep serving the same traffic in the same mix
+        assert_eq!(cl.infer("e2softmax/L49", sm_row).unwrap().output.len(), 49);
+        assert_eq!(cl.infer("ailayernorm/C96", ln_row).unwrap().output.len(), 96);
+    }
     router.shutdown();
 }

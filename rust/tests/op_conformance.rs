@@ -1,0 +1,192 @@
+//! Shared conformance suite for the `Op` layer: every operator the
+//! builtin `OpRegistry` can construct is held to the same contract —
+//!
+//! * bit-exact to its direct kernel (the registry path adds routing and
+//!   scratch management, never arithmetic);
+//! * correct at the edge shapes rows ∈ {1, cap};
+//! * deterministic under scratch reuse (no state leaks between batches);
+//! * spec round-trip: `parse(format(spec)) == spec`.
+//!
+//! A newly registered op joins every check automatically — only
+//! `reference_row` needs a matching arm (and the suite fails loudly,
+//! naming the op, if it is missing).
+
+use sole::coordinator::{Backend, OpBackend};
+use sole::layernorm::ai::layernorm_exact;
+use sole::layernorm::baselines::ibert_layernorm;
+use sole::layernorm::AiLayerNorm;
+use sole::ops::ailayernorm::identity_calibration;
+use sole::ops::baselines::{IBERT_LAYERNORM_SCALE, IBERT_SOFTMAX_SCALE, SOFTERMAX_FRAC_BITS};
+use sole::ops::exact::EXACT_LN_EPS;
+use sole::ops::{Op, OpRegistry, OpSpec};
+use sole::quant::ptf_quantize_into;
+use sole::softmax::baselines::{ibert_softmax, softermax};
+use sole::softmax::e2::softmax_exact;
+use sole::softmax::{quantize_logits_into, E2Scratch, E2Softmax, E2SoftmaxConfig};
+use sole::util::rng::Rng;
+
+/// The registered op's direct kernel, invoked without any Op machinery.
+fn reference_row(op: &str, row: &[f32]) -> Vec<f32> {
+    match op {
+        "e2softmax" => {
+            let sm = E2Softmax::new(E2SoftmaxConfig::default());
+            let mut codes = Vec::new();
+            quantize_logits_into(row, sm.cfg().e, &mut codes);
+            let mut out = vec![0f32; row.len()];
+            let mut scratch = E2Scratch::default();
+            sm.forward_row_f32(&codes, &mut out, &mut scratch);
+            out
+        }
+        "softmax-exact" => softmax_exact(row).into_iter().map(|v| v as f32).collect(),
+        "softermax" => softermax(row, SOFTERMAX_FRAC_BITS).into_iter().map(|v| v as f32).collect(),
+        "ibert-softmax" => {
+            ibert_softmax(row, IBERT_SOFTMAX_SCALE).into_iter().map(|v| v as f32).collect()
+        }
+        "ailayernorm" => {
+            let c = row.len();
+            let cal = identity_calibration(c);
+            let ln = AiLayerNorm { zp: cal.zp };
+            let mut codes = Vec::new();
+            ptf_quantize_into(row, &cal, &mut codes);
+            let mut out = vec![0f32; c];
+            ln.forward_row_f32(&codes, &cal.alpha, &vec![1f32; c], &vec![0f32; c], &mut out);
+            out
+        }
+        "layernorm-exact" => {
+            let c = row.len();
+            layernorm_exact(row, &vec![1f32; c], &vec![0f32; c], EXACT_LN_EPS)
+                .into_iter()
+                .map(|v| v as f32)
+                .collect()
+        }
+        "ibert-layernorm" => {
+            let c = row.len();
+            ibert_layernorm(row, &vec![1f32; c], &vec![0f32; c], IBERT_LAYERNORM_SCALE)
+                .into_iter()
+                .map(|v| v as f32)
+                .collect()
+        }
+        other => panic!("op '{other}' has no reference kernel — extend the conformance suite"),
+    }
+}
+
+/// Each op at its canonical length plus a small off-default length, so
+/// the conformance sweep covers more than one shape per family.
+fn conformance_specs(registry: &OpRegistry) -> Vec<OpSpec> {
+    let mut specs = Vec::new();
+    for name in registry.names() {
+        let canon = registry.canonical_spec(name).unwrap();
+        let small = OpSpec { len: 17, ..canon.clone() };
+        specs.push(canon);
+        specs.push(small);
+    }
+    specs
+}
+
+fn rows_for(rng: &mut Rng, len: usize, rows: usize) -> Vec<f32> {
+    let mut v = vec![0f32; rows * len];
+    rng.fill_normal(&mut v, 0.1, 1.5);
+    v
+}
+
+const CAP: usize = 16;
+
+#[test]
+fn every_registered_op_is_bit_exact_to_its_direct_kernel() {
+    let registry = OpRegistry::builtin();
+    let mut rng = Rng::new(0x0C0F);
+    for spec in conformance_specs(&registry) {
+        let (parsed, op) = registry.build(&spec.to_string()).unwrap();
+        assert_eq!(parsed, spec);
+        let rows = 4;
+        let input = rows_for(&mut rng, spec.len, rows);
+        let mut out = vec![0f32; rows * spec.len];
+        let mut scratch = op.make_scratch();
+        op.run_batch(rows, &input, &mut out, &mut scratch).unwrap();
+        for r in 0..rows {
+            let row = &input[r * spec.len..(r + 1) * spec.len];
+            let want = reference_row(&spec.op, row);
+            assert_eq!(&out[r * spec.len..(r + 1) * spec.len], &want[..], "{spec} row {r}");
+        }
+    }
+}
+
+#[test]
+fn every_registered_op_handles_edge_shapes_through_the_backend() {
+    // rows = 1 and rows = cap through OpBackend, the exact wrapper the
+    // router serves: bucket validation + scratch unwrap included
+    let registry = OpRegistry::builtin();
+    let mut rng = Rng::new(0x0C1F);
+    for spec in conformance_specs(&registry) {
+        let be =
+            OpBackend::from_spec(&registry, &spec.to_string(), vec![1, CAP]).unwrap();
+        for rows in [1usize, CAP] {
+            let input = rows_for(&mut rng, spec.len, rows);
+            let out = be.run_alloc(rows, &input).unwrap();
+            for r in 0..rows {
+                let row = &input[r * spec.len..(r + 1) * spec.len];
+                let want = reference_row(&spec.op, row);
+                let got = &out[r * spec.len..(r + 1) * spec.len];
+                assert_eq!(got, &want[..], "{spec} rows={rows} r={r}");
+            }
+        }
+    }
+}
+
+#[test]
+fn every_registered_op_is_deterministic_under_scratch_reuse() {
+    // one scratch arena across three batches: run A, run B, run A again —
+    // the second A must be bit-identical to the first (warm buffers carry
+    // no state between batches)
+    let registry = OpRegistry::builtin();
+    let mut rng = Rng::new(0x0C2F);
+    for name in registry.names() {
+        let spec = registry.canonical_spec(name).unwrap();
+        let (_, op) = registry.build(&spec.to_string()).unwrap();
+        let rows = 8;
+        let a = rows_for(&mut rng, spec.len, rows);
+        let b = rows_for(&mut rng, spec.len, rows);
+        let mut scratch = op.make_scratch();
+        let mut out1 = vec![0f32; rows * spec.len];
+        let mut out2 = vec![0f32; rows * spec.len];
+        let mut out3 = vec![0f32; rows * spec.len];
+        op.run_batch(rows, &a, &mut out1, &mut scratch).unwrap();
+        op.run_batch(rows, &b, &mut out2, &mut scratch).unwrap();
+        op.run_batch(rows, &a, &mut out3, &mut scratch).unwrap();
+        assert_eq!(out1, out3, "{spec}: scratch reuse changed the result");
+        assert_ne!(a, b, "{spec}: degenerate test inputs");
+    }
+}
+
+#[test]
+fn every_registered_op_round_trips_its_spec() {
+    let registry = OpRegistry::builtin();
+    for spec in conformance_specs(&registry) {
+        let rendered = spec.to_string();
+        assert_eq!(OpSpec::parse(&rendered).unwrap(), spec, "{rendered}");
+        // and through the registry-validated path
+        assert_eq!(registry.parse_spec(&rendered).unwrap(), spec, "{rendered}");
+        // the constructed op renders the same canonical spec
+        let (_, op) = registry.build(&rendered).unwrap();
+        assert_eq!(op.spec(), spec, "{rendered}");
+    }
+}
+
+#[test]
+fn every_registered_op_rejects_malformed_batches() {
+    let registry = OpRegistry::builtin();
+    for name in registry.names() {
+        let spec = registry.canonical_spec(name).unwrap();
+        let (_, op) = registry.build(&spec.to_string()).unwrap();
+        let mut scratch = op.make_scratch();
+        let mut out = vec![0f32; spec.len];
+        // short input
+        let short = vec![0f32; spec.len - 1];
+        assert!(op.run_batch(1, &short, &mut out, &mut scratch).is_err(), "{spec}: short input");
+        // mismatched output
+        let input = vec![0f32; 2 * spec.len];
+        assert!(op.run_batch(2, &input, &mut out, &mut scratch).is_err(), "{spec}: short out");
+        // zero rows
+        assert!(op.run_batch(0, &[], &mut [], &mut scratch).is_err(), "{spec}: zero rows");
+    }
+}

@@ -4,10 +4,15 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use sole::coordinator::{Backend, BatchPolicy, Batcher, Coordinator, SoftwareSoftmaxBackend};
+use sole::coordinator::{Backend, BatchPolicy, Batcher, Coordinator, OpBackend};
 use sole::layernorm::AiLayerNorm;
+use sole::ops::E2SoftmaxOp;
 use sole::softmax::{E2Softmax, E2SoftmaxConfig};
 use sole::util::proptest::{check, size};
+
+fn softmax_backend(l: usize, buckets: Vec<usize>) -> Arc<OpBackend> {
+    Arc::new(OpBackend::try_new(Arc::new(E2SoftmaxOp::try_new(l).unwrap()), buckets).unwrap())
+}
 
 // ---------------------------------------------------------------------------
 // Batcher invariants
@@ -64,9 +69,8 @@ fn coordinator_routes_outputs_to_correct_requests() {
     // Each request's row has a unique argmax position; E2Softmax preserves
     // the argmax (monotone), so response routing errors would be visible.
     let l = 64;
-    let be = Arc::new(SoftwareSoftmaxBackend::new(l, vec![1, 4, 8]));
     let co = Coordinator::start(
-        be,
+        softmax_backend(l, vec![1, 4, 8]),
         BatchPolicy { max_wait: Duration::from_millis(3), max_batch: 8, ..BatchPolicy::default() },
         2,
     );
@@ -97,10 +101,9 @@ fn coordinator_routes_outputs_to_correct_requests() {
 fn coordinator_conserves_requests_under_concurrency() {
     check("conserve-requests", 10, 3, |rng| {
         let l = 32;
-        let be = Arc::new(SoftwareSoftmaxBackend::new(l, vec![1, 2, 4, 8]));
         let workers = rng.range_usize(1, 4);
         let co = Coordinator::start(
-            be,
+            softmax_backend(l, vec![1, 2, 4, 8]),
             BatchPolicy {
                 max_wait: Duration::from_millis(rng.range_i64(0, 4) as u64),
                 max_batch: 8,
@@ -128,7 +131,7 @@ fn backend_padding_never_leaks_into_real_outputs() {
     // run bucket 8 with only 3 real rows; padded rows are zeros — the
     // per-row softmax of real rows must match bucket-1 runs exactly
     let l = 48;
-    let be = SoftwareSoftmaxBackend::new(l, vec![1, 8]);
+    let be = softmax_backend(l, vec![1, 8]);
     let mut rows = vec![0f32; 8 * l];
     let mut rng = sole::util::rng::Rng::new(9);
     rng.fill_normal(&mut rows[..3 * l], 0.0, 2.0);
