@@ -9,6 +9,13 @@
 //! asserted before timing: the planar softmax kernel must match legacy
 //! bit-for-bit, the layernorm kernel within f32-rounding tolerance.
 //!
+//! A third section measures the fused attention pipeline (A·V consuming
+//! packed log2 codes, `impl = fused_codes`) against the staged pipeline
+//! that materializes the f32 probability matrix (`impl = staged_f32`);
+//! for those rows `l` is the sequence length (head dim 64) and
+//! `speedup_vs_legacy` is the fused-over-staged ratio.  The two are
+//! asserted bit-identical before timing.
+//!
 //! Flags: `--json` writes the JSON artifact (default path
 //! `<repo>/BENCH_kernels.json`, override with `--out <path>`); `--quick`
 //! is the CI smoke mode (equivalent to `SOLE_BENCH_QUICK=1`: numbers are
@@ -20,6 +27,8 @@ use sole::fixedpoint::leading_one;
 use sole::layernorm::compress::COMPRESSED_SQUARE_TABLE;
 use sole::layernorm::rsqrt::rsqrt_hw;
 use sole::layernorm::AiLayerNorm;
+use sole::ops::attention::{fused_pipeline, unfused_pipeline};
+use sole::ops::Op;
 use sole::softmax::{config, log2exp, E2Scratch, E2Softmax, E2SoftmaxConfig};
 use sole::util::bench::{bench, quick_mode, report, BenchResult};
 use sole::util::cli::Args;
@@ -127,16 +136,22 @@ fn legacy_layernorm_row(
 
 const TARGET: Duration = Duration::from_millis(300);
 
+/// One JSON row.  `l` is the shape label (row length / channels /
+/// sequence length); `row_elems` is the number of f32 input elements one
+/// row actually consumes, which `melem_per_sec` is computed from — for
+/// the row ops they coincide, for attention a row is a whole `[Q|K|V]`
+/// item (3·L·D), keeping `melem_per_sec` comparable across all rows.
 fn record(
     op: &str,
     l: usize,
+    row_elems: usize,
     b: usize,
     impl_name: &str,
     r: &BenchResult,
     speedup: Option<f64>,
 ) -> Json {
     let rows_per_sec = b as f64 * r.per_sec();
-    let melem_per_sec = (b * l) as f64 * r.per_sec() / 1e6;
+    let melem_per_sec = (b * row_elems) as f64 * r.per_sec() / 1e6;
     let mut fields = vec![
         ("op", Json::Str(op.to_string())),
         ("l", Json::Int(l as i64)),
@@ -207,8 +222,8 @@ fn main() {
             if l == 1024 && b == 1 {
                 accept_speedup = speedup;
             }
-            results.push(record("e2softmax", l, b, "legacy_row", &rl, None));
-            results.push(record("e2softmax", l, b, "planar_batch", &rn, Some(speedup)));
+            results.push(record("e2softmax", l, l, b, "legacy_row", &rl, None));
+            results.push(record("e2softmax", l, l, b, "planar_batch", &rn, Some(speedup)));
         }
     }
 
@@ -257,8 +272,54 @@ fn main() {
                 (b * c) as f64 * rl.per_sec() / 1e6,
                 (b * c) as f64 * rn.per_sec() / 1e6,
             );
-            results.push(record("ailayernorm", c, b, "legacy_row", &rl, None));
-            results.push(record("ailayernorm", c, b, "fused_batch", &rn, Some(speedup)));
+            results.push(record("ailayernorm", c, c, b, "legacy_row", &rl, None));
+            results.push(record("ailayernorm", c, c, b, "fused_batch", &rn, Some(speedup)));
+        }
+    }
+
+    // Fused attention (DESIGN.md §3.2): the pipeline consuming packed
+    // log2 codes directly in A·V vs the same arithmetic staged through a
+    // materialized f32 probability buffer.  Bit-exactness is asserted
+    // before timing (also pinned by tests/op_conformance.rs), so the
+    // speedup measures fusion alone — skipped probability store/reload —
+    // not a numerics change.  Head dim is the transformer-standard 64.
+    println!("\nattention — fused shift-accumulate A·V over log2 codes vs staged e2softmax + matmul");
+    const HEAD_D: usize = 64;
+    for &l in &[49usize, 128] {
+        for &b in &[1usize, 8] {
+            let fused = fused_pipeline(l, HEAD_D).expect("fused attention pipeline");
+            let staged = unfused_pipeline(l, HEAD_D).expect("staged attention pipeline");
+            let mut input = vec![0f32; b * fused.item_len()];
+            rng.fill_normal(&mut input, 0.0, 1.0);
+            let mut out_fused = vec![0f32; b * fused.out_len()];
+            let mut out_staged = vec![0f32; b * staged.out_len()];
+            let mut fs = fused.make_scratch();
+            let mut ss = staged.make_scratch();
+            fused.run_batch(b, &input, &mut out_fused, &mut fs).expect("fused run");
+            staged.run_batch(b, &input, &mut out_staged, &mut ss).expect("staged run");
+            assert_eq!(out_fused, out_staged, "fused A·V diverged at L={l} D={HEAD_D} B={b}");
+
+            let rs = bench(&format!("attention staged  L={l:<4} B={b:<2}"), TARGET, || {
+                staged
+                    .run_batch(b, std::hint::black_box(&input), &mut out_staged, &mut ss)
+                    .expect("staged run");
+            });
+            report(&rs);
+            let rf = bench(&format!("attention fused   L={l:<4} B={b:<2}"), TARGET, || {
+                fused
+                    .run_batch(b, std::hint::black_box(&input), &mut out_fused, &mut fs)
+                    .expect("fused run");
+            });
+            report(&rf);
+            let speedup = rs.mean.as_secs_f64() / rf.mean.as_secs_f64();
+            println!(
+                "    -> {:.1} items/s staged, {:.1} items/s fused ({speedup:.2}x)",
+                b as f64 * rs.per_sec(),
+                b as f64 * rf.per_sec(),
+            );
+            let row_elems = fused.item_len();
+            results.push(record("attention", l, row_elems, b, "staged_f32", &rs, None));
+            results.push(record("attention", l, row_elems, b, "fused_codes", &rf, Some(speedup)));
         }
     }
 
@@ -289,7 +350,14 @@ fn main() {
                 obj(vec![
                     ("mean_ns", Json::Str("mean wall-clock per kernel call, ns".to_string())),
                     ("rows_per_sec", Json::Str("batch rows completed per second".to_string())),
-                    ("melem_per_sec", Json::Str("million elements per second".to_string())),
+                    (
+                        "melem_per_sec",
+                        Json::Str(
+                            "million input f32 elements per second (attention rows count \
+                             the whole [Q|K|V] item, 3*L*D)"
+                                .to_string(),
+                        ),
+                    ),
                 ]),
             ),
             (

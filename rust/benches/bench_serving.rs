@@ -7,9 +7,13 @@
 //! `ibert-layernorm`.
 //!
 //! One router process serves one service per registry op at its canonical
-//! spec (`<op>/<DIM><default-len>`) under an open-loop interleaved burst;
-//! per-op throughput and p50/p99/mean latency come from each service's
-//! own metrics shards, the merged view from the router's merge-on-read.
+//! spec (`<op>/<DIM><default-len>`) under an open-loop interleaved burst —
+//! which now includes the attention pipelines (`attention/L128xD64` fused,
+//! `attention-exact/L128xD64`), joined by a second fused shape
+//! (`attention/L49xD64`, the paper's DeiT sequence length) so the table
+//! carries an attention row *family*, not a single point.  Per-op
+//! throughput and p50/p99/mean latency come from each service's own
+//! metrics shards, the merged view from the router's merge-on-read.
 //! Request conservation (`completed + errors == accepted`, errors == 0)
 //! is asserted before anything is recorded.
 //!
@@ -35,14 +39,17 @@ fn main() {
     let per_service = if quick_mode() { 48 } else { 1024 };
 
     let registry = OpRegistry::builtin();
-    // one worker per registered op: the min-one-per-service floor makes
-    // any smaller budget silently run that many threads anyway, and the
+    // one worker per service: the min-one-per-service floor makes any
+    // smaller budget silently run that many threads anyway, and the
     // recorded total_workers must match the threads that actually served
-    let specs: Vec<String> = registry
+    let mut specs: Vec<String> = registry
         .names()
         .iter()
         .map(|n| registry.canonical_spec(n).expect("registered op").to_string())
         .collect();
+    // the attention row family: the canonical fused + exact pipelines are
+    // already in the registry sweep; add the paper's DeiT sequence length
+    specs.push("attention/L49xD64".to_string());
     let total_workers = specs.len();
     println!(
         "bench_serving — every registered op through the ServiceRouter \

@@ -160,7 +160,9 @@ impl Backend for OpBackend {
     }
 
     fn item_output_len(&self) -> usize {
-        self.op.item_len()
+        // pipelines (e.g. attention) consume one shape and produce
+        // another; shape-preserving row ops report item_len here
+        self.op.out_len()
     }
 
     fn buckets(&self) -> &[usize] {
@@ -256,6 +258,24 @@ mod tests {
         assert_eq!(be.item_input_len(), 48);
         assert!(OpBackend::from_spec(&reg, "nosuchop/L48", vec![1]).is_err());
         assert!(OpBackend::from_spec(&reg, "e2softmax/L48", vec![0]).is_err());
+    }
+
+    #[test]
+    fn pipeline_backend_reports_asymmetric_item_lens() {
+        // the attention pipeline consumes [Q|K|V] (3*L*D) and produces
+        // O (L*D): the backend must advertise both lengths so the
+        // coordinator sizes its arenas and response slices correctly
+        let reg = OpRegistry::builtin();
+        let be = OpBackend::from_spec(&reg, "attention/L8xD4", vec![1, 2]).unwrap();
+        assert_eq!(be.item_input_len(), 3 * 8 * 4);
+        assert_eq!(be.item_output_len(), 8 * 4);
+        let mut rng = crate::util::rng::Rng::new(17);
+        let mut items = vec![0f32; 2 * be.item_input_len()];
+        rng.fill_normal(&mut items, 0.0, 1.0);
+        let out = be.run_alloc(2, &items).unwrap();
+        assert_eq!(out.len(), 2 * 8 * 4);
+        // each context row is a convex-ish combination of V rows: finite
+        assert!(out.iter().all(|v| v.is_finite()));
     }
 
     #[test]

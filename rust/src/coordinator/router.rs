@@ -2,7 +2,8 @@
 //!
 //! SOLE's point is serving *both* E2Softmax and AILayerNorm — at the
 //! paper's mixed shapes (softmax L ∈ {49, 128, 785, 1024}, layernorm at
-//! transformer channel widths) — from one inference stack.  A single
+//! transformer channel widths, plus the fused attention pipeline the
+//! softmax unit was co-designed for) — from one inference stack.  A single
 //! `Coordinator` serves exactly one backend at one item length, so the
 //! router layers a registry of named services on top: each service owns a
 //! full coordinator (bucketed queue, worker pool, metrics shards) and the
@@ -258,12 +259,15 @@ fn split_workers(total: usize, weights: &[usize]) -> Vec<usize> {
 }
 
 /// The paper's mixed software workload as registry spec strings: bit-exact
-/// E2Softmax at the evaluated sequence lengths L ∈ {49, 128, 785, 1024}
-/// plus AILayerNorm at the transformer channel width C = 768.
+/// E2Softmax at the evaluated sequence lengths L ∈ {49, 128, 785, 1024},
+/// AILayerNorm at the transformer channel width C = 768, and the fused
+/// attention pipeline at the transformer head shape L = 128, D = 64 —
+/// the first multi-op pipeline the system serves end to end.
 pub fn paper_service_specs() -> Vec<String> {
     let mut v: Vec<String> =
         [49usize, 128, 785, 1024].iter().map(|l| format!("e2softmax/L{l}")).collect();
     v.push("ailayernorm/C768".to_string());
+    v.push("attention/L128xD64".to_string());
     v
 }
 
@@ -284,7 +288,7 @@ pub fn paper_services() -> Result<Vec<(String, Arc<dyn Backend>)>> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ops::E2SoftmaxOp;
+    use crate::ops::{E2SoftmaxOp, Op};
     use std::time::Duration;
 
     fn quick_policy() -> BatchPolicy {
@@ -405,14 +409,21 @@ mod tests {
                 "e2softmax/L128",
                 "e2softmax/L785",
                 "e2softmax/L1024",
-                "ailayernorm/C768"
+                "ailayernorm/C768",
+                "attention/L128xD64",
             ]
         );
         assert_eq!(names, paper_service_specs());
+        let registry = OpRegistry::builtin();
         for (name, be) in &svcs {
-            let l: usize = name.rsplit(['L', 'C']).next().unwrap().parse().unwrap();
-            assert_eq!(be.item_input_len(), l, "{name}");
+            let (_, op) = registry.build(name).unwrap();
+            assert_eq!(be.item_input_len(), op.item_len(), "{name}");
+            assert_eq!(be.item_output_len(), op.out_len(), "{name}");
             assert_eq!(be.buckets(), &[1, 4, 8, 16], "{name}");
         }
+        // the attention service has asymmetric item lengths
+        let attn = &svcs.last().unwrap().1;
+        assert_eq!(attn.item_input_len(), 3 * 128 * 64);
+        assert_eq!(attn.item_output_len(), 128 * 64);
     }
 }

@@ -14,9 +14,10 @@
 //! `pjrt` feature) it discovers the manifest's (model, variant) families
 //! and serves the requested one — or every family with `--all-families` —
 //! as named services; otherwise it serves software op-services built from
-//! registry spec strings: `--ops e2softmax/L256,softmax-exact/L256,...`
+//! registry spec strings: `--ops e2softmax/L256,attention/L128xD64,...`
 //! picks them explicitly, the default is the paper's mixed workload
-//! (`e2softmax` at L ∈ {49, 128, 785, 1024} + `ailayernorm` at C = 768).
+//! (`e2softmax` at L ∈ {49, 128, 785, 1024}, `ailayernorm` at C = 768,
+//! plus the fused `attention` pipeline at L = 128, D = 64).
 //! `sole ops` lists every registered operator family with its spec
 //! grammar.  `--workers` is the *total* worker budget, split across
 //! services (hot service weighted up, minimum one each).
@@ -47,7 +48,7 @@ fn main() -> Result<()> {
                 "sole {} — SOLE reproduction CLI\n\
                  usage:\n  sole experiment <fig1a|fig3|fig6a|fig6b|table1|table2|table3|compress-error|ablation|all>\n\
                  \x20 sole serve [--model deit_t] [--variant fp32_sole] [--all-families] \
-                 [--ops e2softmax/L128,softmax-exact/L128] \
+                 [--ops e2softmax/L128,attention/L128xD64] \
                  [--requests 64] [--rate 8] [--workers 4]\n\
                  \x20 sole ops\n\
                  \x20 sole info",
@@ -159,14 +160,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// accepts and what the spec grammar looks like.
 fn cmd_ops() -> Result<()> {
     let registry = OpRegistry::builtin();
-    println!("registered ops (spec grammar: <op>/<DIM><len>, e.g. e2softmax/L128):\n");
-    println!("{:<18} {:>4} {:>12}  {}", "op", "dim", "default", "summary");
+    println!(
+        "registered ops (spec grammar: <op>/<DIM><len>[x<DIM><len>...], \
+         e.g. e2softmax/L128, attention/L128xD64):\n"
+    );
+    println!("{:<18} {:>14} {:>12}  {}", "op", "shape", "default", "summary");
     for l in registry.listings() {
         println!(
-            "{:<18} {:>4} {:>12}  {}",
+            "{:<18} {:>14} {:>12}  {}",
             l.name,
-            l.dim,
-            format!("{}{}", l.dim, l.default_len),
+            l.signature(),
+            l.canonical().shape(),
             l.summary
         );
     }

@@ -1,0 +1,455 @@
+//! Attention pipelines: S = QKᵀ-scaled logits → softmax → A·V, as
+//! [`PipelineOp`]s (DESIGN.md §3.2).
+//!
+//! This is the workload E2Softmax was co-designed for: the paper stores
+//! attention probabilities as log2-quantized codes precisely so the
+//! downstream A·V product degenerates into shift-and-accumulate instead
+//! of full-width multiplies.  Three variants of the same datapath:
+//!
+//! * **`attention/L<len>xD<dim>`** (registered, fused) — [`AttnLogitsOp`]
+//!   then [`AttnE2AvOp`]: the A·V stage consumes the packed 5-bit shift
+//!   codes from [`E2Softmax::forward_batch_codes`] directly, dequantizing
+//!   each weight through the row's ≤ 32-entry shifted-constant table
+//!   inside the accumulation loop — the probability matrix is never
+//!   materialized at f32 width.
+//! * **`attention-unfused`** (unregistered comparator, built by
+//!   [`unfused_pipeline`]) — [`AttnLogitsOp`] → [`AttnSoftmaxOp`] over
+//!   [`E2SoftmaxOp`] → [`AttnAvOp`]: the same arithmetic staged through a
+//!   full f32 probability buffer.  Bit-identical to the fused pipeline
+//!   (pinned by `tests/op_conformance.rs`): both dequantize through the
+//!   same table and accumulate in the same order, the fused path just
+//!   never stores the f32s.
+//! * **`attention-exact/L<len>xD<dim>`** (registered) — the same chain
+//!   over [`ExactSoftmaxOp`], the error/latency reference.
+//!
+//! One item is one attention head instance, packed `[Q | K | V]` with
+//! each of Q, K, V a row-major `L x D` block (item length `3·L·D`); the
+//! output item is the `L x D` context block `O = softmax(QKᵀ/√D)·V`.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::{check_batch, E2SoftmaxOp, ExactSoftmaxOp, Op, OpScratch, OpSpec, PipelineOp};
+use crate::softmax::e2::quantize_logits_batch_into;
+use crate::softmax::{E2Scratch, E2Softmax, E2SoftmaxConfig, VAL_TABLE_LEN};
+
+/// The canonical spec of an attention-family pipeline:
+/// `<op>/L<len>xD<dim>`.
+pub fn attention_spec(op: &str, l: usize, d: usize) -> OpSpec {
+    OpSpec { op: op.to_string(), dim: 'L', len: l, extra: vec![('D', d)] }
+}
+
+/// The fused pipeline behind the registered `attention/L<len>xD<dim>`
+/// spec: logits, then shift-accumulate A·V over E2Softmax log2 codes.
+pub fn fused_pipeline(l: usize, d: usize) -> Result<PipelineOp> {
+    PipelineOp::try_new(
+        attention_spec("attention", l, d),
+        vec![Arc::new(AttnLogitsOp::try_new(l, d)?), Arc::new(AttnE2AvOp::try_new(l, d)?)],
+    )
+}
+
+/// The staged comparator (`attention-unfused`, not registered): the same
+/// E2Softmax arithmetic through a materialized f32 probability buffer.
+/// Bit-identical to [`fused_pipeline`]; exists so benches and tests can
+/// measure exactly what fusing buys.
+pub fn unfused_pipeline(l: usize, d: usize) -> Result<PipelineOp> {
+    PipelineOp::try_new(
+        attention_spec("attention-unfused", l, d),
+        vec![
+            Arc::new(AttnLogitsOp::try_new(l, d)?),
+            Arc::new(AttnSoftmaxOp::try_new(l, d, Arc::new(E2SoftmaxOp::try_new(l)?))?),
+            Arc::new(AttnAvOp::try_new(l, d)?),
+        ],
+    )
+}
+
+/// The exact-softmax pipeline behind the registered
+/// `attention-exact/L<len>xD<dim>` spec: the error/latency reference the
+/// fused pipeline is compared against.
+pub fn exact_pipeline(l: usize, d: usize) -> Result<PipelineOp> {
+    PipelineOp::try_new(
+        attention_spec("attention-exact", l, d),
+        vec![
+            Arc::new(AttnLogitsOp::try_new(l, d)?),
+            Arc::new(AttnSoftmaxOp::try_new(l, d, Arc::new(ExactSoftmaxOp::try_new(l)?))?),
+            Arc::new(AttnAvOp::try_new(l, d)?),
+        ],
+    )
+}
+
+fn ensure_shape(name: &str, l: usize, d: usize) -> Result<()> {
+    anyhow::ensure!(l > 0, "{name}: sequence length must be positive");
+    anyhow::ensure!(d > 0, "{name}: head dimension must be positive");
+    Ok(())
+}
+
+/// Stage 1 of every attention pipeline: `[Q | K | V]` (each `L x D`) →
+/// `[S | V]` where `S = (QKᵀ)/√D` is the `L x L` logit block and V
+/// passes through untouched for the downstream A·V stage.
+pub struct AttnLogitsOp {
+    l: usize,
+    d: usize,
+    scale: f32,
+}
+
+impl AttnLogitsOp {
+    /// Sequence length `l`, head dimension `d`; the logit scale is the
+    /// standard `1/√d`.
+    pub fn try_new(l: usize, d: usize) -> Result<AttnLogitsOp> {
+        ensure_shape("attn-logits", l, d)?;
+        Ok(AttnLogitsOp { l, d, scale: 1.0 / (d as f32).sqrt() })
+    }
+}
+
+impl Op for AttnLogitsOp {
+    fn name(&self) -> &str {
+        "attn-logits"
+    }
+
+    fn dim(&self) -> char {
+        'L'
+    }
+
+    fn item_len(&self) -> usize {
+        3 * self.l * self.d
+    }
+
+    fn out_len(&self) -> usize {
+        self.l * self.l + self.l * self.d
+    }
+
+    fn run_batch(
+        &self,
+        rows: usize,
+        input: &[f32],
+        out: &mut [f32],
+        _scratch: &mut OpScratch,
+    ) -> Result<()> {
+        check_batch(self, rows, input, out)?;
+        let ld = self.l * self.d;
+        for (item, out_item) in
+            input.chunks_exact(self.item_len()).zip(out.chunks_exact_mut(self.out_len()))
+        {
+            let (q, rest) = item.split_at(ld);
+            let (k, v) = rest.split_at(ld);
+            let (s_out, v_out) = out_item.split_at_mut(self.l * self.l);
+            for (qi, s_row) in q.chunks_exact(self.d).zip(s_out.chunks_exact_mut(self.l)) {
+                for (kj, s_elem) in k.chunks_exact(self.d).zip(s_row.iter_mut()) {
+                    let mut acc = 0f32;
+                    for (&x, &y) in qi.iter().zip(kj) {
+                        acc += x * y;
+                    }
+                    *s_elem = acc * self.scale;
+                }
+            }
+            v_out.copy_from_slice(v);
+        }
+        Ok(())
+    }
+}
+
+/// The staged softmax stage: applies any row softmax [`Op`] (item length
+/// `l`) to the `L x L` logit block of `[S | V]`, passing V through.
+/// Shape-preserving: `[S | V]` → `[P | V]`.
+pub struct AttnSoftmaxOp {
+    l: usize,
+    d: usize,
+    inner: Arc<dyn Op>,
+}
+
+/// Per-worker arena: the wrapped softmax op's own scratch.
+struct SoftmaxScratch {
+    inner: OpScratch,
+}
+
+impl AttnSoftmaxOp {
+    /// Wrap `inner` (a shape-preserving row softmax of item length `l`)
+    /// as the softmax stage of an `L x D` attention pipeline.
+    pub fn try_new(l: usize, d: usize, inner: Arc<dyn Op>) -> Result<AttnSoftmaxOp> {
+        ensure_shape("attn-softmax", l, d)?;
+        anyhow::ensure!(
+            inner.item_len() == l && inner.out_len() == l,
+            "attn-softmax: inner op '{}' is {}->{} f32/item, need {l}->{l}",
+            inner.name(),
+            inner.item_len(),
+            inner.out_len()
+        );
+        Ok(AttnSoftmaxOp { l, d, inner })
+    }
+}
+
+impl Op for AttnSoftmaxOp {
+    fn name(&self) -> &str {
+        "attn-softmax"
+    }
+
+    fn dim(&self) -> char {
+        'L'
+    }
+
+    fn item_len(&self) -> usize {
+        self.l * self.l + self.l * self.d
+    }
+
+    fn make_scratch(&self) -> OpScratch {
+        Box::new(SoftmaxScratch { inner: self.inner.make_scratch() })
+    }
+
+    fn run_batch(
+        &self,
+        rows: usize,
+        input: &[f32],
+        out: &mut [f32],
+        scratch: &mut OpScratch,
+    ) -> Result<()> {
+        check_batch(self, rows, input, out)?;
+        let s = scratch
+            .downcast_mut::<SoftmaxScratch>()
+            .context("attn-softmax handed a foreign scratch arena")?;
+        let area = self.item_len();
+        for (item, out_item) in input.chunks_exact(area).zip(out.chunks_exact_mut(area)) {
+            let (s_in, v_in) = item.split_at(self.l * self.l);
+            let (s_out, v_out) = out_item.split_at_mut(self.l * self.l);
+            self.inner.run_batch(self.l, s_in, s_out, &mut s.inner)?;
+            v_out.copy_from_slice(v_in);
+        }
+        Ok(())
+    }
+}
+
+/// The staged A·V stage: `[P | V]` → `O`, a plain f32 matmul
+/// `O[i] = Σ_j P[i,j]·V[j]`.  The j-then-d accumulation order is the
+/// contract [`AttnE2AvOp`] mirrors for bit-exactness.
+pub struct AttnAvOp {
+    l: usize,
+    d: usize,
+}
+
+impl AttnAvOp {
+    /// Sequence length `l`, head dimension `d`.
+    pub fn try_new(l: usize, d: usize) -> Result<AttnAvOp> {
+        ensure_shape("attn-av", l, d)?;
+        Ok(AttnAvOp { l, d })
+    }
+}
+
+impl Op for AttnAvOp {
+    fn name(&self) -> &str {
+        "attn-av"
+    }
+
+    fn dim(&self) -> char {
+        'L'
+    }
+
+    fn item_len(&self) -> usize {
+        self.l * self.l + self.l * self.d
+    }
+
+    fn out_len(&self) -> usize {
+        self.l * self.d
+    }
+
+    fn run_batch(
+        &self,
+        rows: usize,
+        input: &[f32],
+        out: &mut [f32],
+        _scratch: &mut OpScratch,
+    ) -> Result<()> {
+        check_batch(self, rows, input, out)?;
+        for (item, out_item) in
+            input.chunks_exact(self.item_len()).zip(out.chunks_exact_mut(self.out_len()))
+        {
+            let (p, v) = item.split_at(self.l * self.l);
+            for (p_row, o_row) in p.chunks_exact(self.l).zip(out_item.chunks_exact_mut(self.d)) {
+                o_row.fill(0.0);
+                for (&pij, v_row) in p_row.iter().zip(v.chunks_exact(self.d)) {
+                    for (o, &vv) in o_row.iter_mut().zip(v_row) {
+                        *o += pij * vv;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The fused softmax + A·V stage: `[S | V]` → `O` without ever storing
+/// the probability matrix as f32.  Each item's logit rows are quantized
+/// to the 8-bit code grid and run through
+/// [`E2Softmax::forward_batch_codes`], which yields one packed 5-bit
+/// total-shift code per attention weight plus a ≤ 32-entry per-row table
+/// of reachable divider outputs (shifted copies of one constant — the
+/// software model of the hardware shift network).  The accumulation
+/// `O[i] += table[code]·V[j]` then reads 1 byte per weight instead of 4,
+/// and is bit-identical to [`AttnAvOp`] over [`E2SoftmaxOp`] output
+/// because both paths dequantize through the same table in the same
+/// order.
+pub struct AttnE2AvOp {
+    l: usize,
+    d: usize,
+    sm: E2Softmax,
+}
+
+/// Per-worker arena: quantized logit codes, packed shift codes, per-row
+/// divider tables, and the E2Softmax kernel scratch.
+struct E2AvScratch {
+    q: Vec<i64>,
+    codes: Vec<u8>,
+    val: Vec<f32>,
+    e2: E2Scratch,
+}
+
+impl AttnE2AvOp {
+    /// Sequence length `l`, head dimension `d`, at the same default
+    /// E2Softmax datapath configuration the registered `e2softmax`
+    /// family serves.
+    pub fn try_new(l: usize, d: usize) -> Result<AttnE2AvOp> {
+        ensure_shape("attn-e2av", l, d)?;
+        Ok(AttnE2AvOp { l, d, sm: E2Softmax::new(E2SoftmaxConfig::default()) })
+    }
+}
+
+impl Op for AttnE2AvOp {
+    fn name(&self) -> &str {
+        "attn-e2av"
+    }
+
+    fn dim(&self) -> char {
+        'L'
+    }
+
+    fn item_len(&self) -> usize {
+        self.l * self.l + self.l * self.d
+    }
+
+    fn out_len(&self) -> usize {
+        self.l * self.d
+    }
+
+    fn make_scratch(&self) -> OpScratch {
+        Box::new(E2AvScratch {
+            q: Vec::new(),
+            codes: Vec::new(),
+            val: Vec::new(),
+            e2: E2Scratch::default(),
+        })
+    }
+
+    fn run_batch(
+        &self,
+        rows: usize,
+        input: &[f32],
+        out: &mut [f32],
+        scratch: &mut OpScratch,
+    ) -> Result<()> {
+        check_batch(self, rows, input, out)?;
+        let s = scratch
+            .downcast_mut::<E2AvScratch>()
+            .context("attn-e2av handed a foreign scratch arena")?;
+        for (item, out_item) in
+            input.chunks_exact(self.item_len()).zip(out.chunks_exact_mut(self.out_len()))
+        {
+            let (s_in, v) = item.split_at(self.l * self.l);
+            quantize_logits_batch_into(s_in, self.l, self.sm.cfg().e, &mut s.q);
+            self.sm.forward_batch_codes(&s.q, self.l, &mut s.codes, &mut s.val, &mut s.e2);
+            for ((code_row, val_row), o_row) in s
+                .codes
+                .chunks_exact(self.l)
+                .zip(s.val.chunks_exact(VAL_TABLE_LEN))
+                .zip(out_item.chunks_exact_mut(self.d))
+            {
+                o_row.fill(0.0);
+                for (&code, v_row) in code_row.iter().zip(v.chunks_exact(self.d)) {
+                    let pij = val_row[code as usize];
+                    for (o, &vv) in o_row.iter_mut().zip(v_row) {
+                        *o += pij * vv;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn attention_items(rng: &mut Rng, l: usize, d: usize, rows: usize) -> Vec<f32> {
+        let mut v = vec![0f32; rows * 3 * l * d];
+        rng.fill_normal(&mut v, 0.0, 1.0);
+        v
+    }
+
+    fn run(op: &dyn Op, rows: usize, input: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; rows * op.out_len()];
+        let mut scratch = op.make_scratch();
+        op.run_batch(rows, input, &mut out, &mut scratch).unwrap();
+        out
+    }
+
+    #[test]
+    fn fused_is_bit_exact_to_unfused() {
+        let mut rng = Rng::new(0xA77);
+        for &(l, d) in &[(1usize, 4usize), (7, 3), (32, 16)] {
+            let fused = fused_pipeline(l, d).unwrap();
+            let unfused = unfused_pipeline(l, d).unwrap();
+            let input = attention_items(&mut rng, l, d, 3);
+            assert_eq!(run(&fused, 3, &input), run(&unfused, 3, &input), "L{l}xD{d}");
+        }
+    }
+
+    #[test]
+    fn fused_tracks_exact_softmax_attention() {
+        // the e2 pipeline approximates the exact one: context vectors stay
+        // close because softmax rows are near each other elementwise
+        let (l, d) = (24, 8);
+        let mut rng = Rng::new(0xA78);
+        let input = attention_items(&mut rng, l, d, 4);
+        let fused = run(&fused_pipeline(l, d).unwrap(), 4, &input);
+        let exact = run(&exact_pipeline(l, d).unwrap(), 4, &input);
+        let mut worst = 0f32;
+        for (a, b) in fused.iter().zip(&exact) {
+            worst = worst.max((a - b).abs());
+        }
+        // per-weight softmax error is < 0.16 (see e2 tests); the L-term
+        // context sum over unit-normal V keeps the same order of
+        // magnitude, far below the O(L) blowup a broken A·V would show
+        assert!(worst < 1.0, "worst {worst}");
+        assert!(worst > 0.0, "degenerate comparison");
+    }
+
+    #[test]
+    fn pipeline_spec_and_shapes_advertise_the_contract() {
+        let p = fused_pipeline(49, 64).unwrap();
+        assert_eq!(p.spec().to_string(), "attention/L49xD64");
+        assert_eq!(p.item_len(), 3 * 49 * 64);
+        assert_eq!(p.out_len(), 49 * 64);
+        assert_eq!(p.stages().len(), 2);
+        let u = unfused_pipeline(49, 64).unwrap();
+        assert_eq!(u.stages().len(), 3);
+        assert_eq!(u.item_len(), p.item_len());
+        assert_eq!(u.out_len(), p.out_len());
+    }
+
+    #[test]
+    fn mismatched_stage_chain_is_rejected_at_construction() {
+        let bad = PipelineOp::try_new(
+            attention_spec("attention", 8, 4),
+            vec![
+                Arc::new(AttnLogitsOp::try_new(8, 4).unwrap()),
+                Arc::new(AttnAvOp::try_new(16, 4).unwrap()), // wrong L
+            ],
+        );
+        let err = format!("{:#}", bad.unwrap_err());
+        assert!(err.contains("attn-logits"), "{err}");
+        assert!(err.contains("attn-av"), "{err}");
+        // degenerate shapes die in the stage constructors
+        assert!(AttnLogitsOp::try_new(0, 4).is_err());
+        assert!(AttnE2AvOp::try_new(4, 0).is_err());
+    }
+}

@@ -31,6 +31,7 @@ pub struct SoftermaxOp {
 }
 
 impl SoftermaxOp {
+    /// Row length `l` at the registered fraction-bit width.
     pub fn try_new(l: usize) -> Result<SoftermaxOp> {
         anyhow::ensure!(l > 0, "softermax rows must be non-empty");
         Ok(SoftermaxOp { l, frac_bits: SOFTERMAX_FRAC_BITS })
@@ -74,6 +75,7 @@ pub struct IbertSoftmaxOp {
 }
 
 impl IbertSoftmaxOp {
+    /// Row length `l` at the registered input scale.
     pub fn try_new(l: usize) -> Result<IbertSoftmaxOp> {
         anyhow::ensure!(l > 0, "ibert-softmax rows must be non-empty");
         Ok(IbertSoftmaxOp { l, scale: IBERT_SOFTMAX_SCALE })
@@ -121,6 +123,7 @@ pub struct IbertLayerNormOp {
 }
 
 impl IbertLayerNormOp {
+    /// Channel count `c`, identity affine, registered input scale.
     pub fn try_new(c: usize) -> Result<IbertLayerNormOp> {
         anyhow::ensure!(c > 0, "ibert-layernorm rows must be non-empty");
         Ok(IbertLayerNormOp {

@@ -25,6 +25,7 @@ pub struct ExactSoftmaxOp {
 }
 
 impl ExactSoftmaxOp {
+    /// Row length `l`.
     pub fn try_new(l: usize) -> Result<ExactSoftmaxOp> {
         anyhow::ensure!(l > 0, "softmax-exact rows must be non-empty");
         Ok(ExactSoftmaxOp { l })
@@ -71,6 +72,7 @@ pub struct ExactLayerNormOp {
 }
 
 impl ExactLayerNormOp {
+    /// Channel count `c`, identity affine (gamma = 1, beta = 0).
     pub fn try_new(c: usize) -> Result<ExactLayerNormOp> {
         anyhow::ensure!(c > 0, "layernorm-exact rows must be non-empty");
         Ok(ExactLayerNormOp { c, gamma: vec![1f32; c], beta: vec![0f32; c] })

@@ -1,13 +1,15 @@
+#![warn(missing_docs)]
 //! The operator layer: one `Op` trait from kernel to router.
 //!
 //! SOLE's claim is comparative — E2Softmax and AILayerNorm versus exact
 //! and prior approximations — so the serving stack must treat "which
 //! operator" as data, not as a hand-rolled backend struct per algorithm.
-//! Everything that computes a row-wise operator implements [`Op`]:
+//! Everything that computes a batch-of-items operator implements [`Op`]:
 //!
-//! * `name()` / `dim()` / `item_len()` — identity and shape, rendered as
-//!   the spec string `<name>/<DIM><len>` ([`OpSpec`], e.g.
-//!   `e2softmax/L128`) that the registry, router, CLI and benches speak;
+//! * `name()` / `dim()` / `item_len()` / `out_len()` — identity and
+//!   shape, rendered as the spec string `<op>/<DIM><len>[x<DIM><len>...]`
+//!   ([`OpSpec`], e.g. `e2softmax/L128`, `attention/L128xD64`) that the
+//!   registry, router, CLI and benches speak;
 //! * `make_scratch()` — an opaque per-worker scratch arena so hot ops
 //!   stay allocation-free at steady state without interior mutability;
 //! * `run_batch(rows, input, out, scratch)` — one call over a packed
@@ -21,18 +23,44 @@
 //! panicking constructor anywhere in this layer.
 //!
 //! Registered families: the paper pair (`e2softmax`, `ailayernorm`), the
-//! exact baselines (`softmax-exact`, `layernorm-exact`), and the
-//! prior-work comparators from `softmax/baselines.rs` /
-//! `layernorm/baselines.rs` (`softermax`, `ibert-softmax`,
-//! `ibert-layernorm`) — every one servable side by side for
-//! accuracy/throughput comparison.  A shared conformance suite
+//! exact baselines (`softmax-exact`, `layernorm-exact`), the prior-work
+//! comparators from `softmax/baselines.rs` / `layernorm/baselines.rs`
+//! (`softermax`, `ibert-softmax`, `ibert-layernorm`), and the multi-stage
+//! attention pipelines (`attention`, `attention-exact` — [`PipelineOp`]s
+//! built in [`attention`], DESIGN.md §3.2) — every one servable side by
+//! side for accuracy/throughput comparison.  A shared conformance suite
 //! (`tests/op_conformance.rs`) pins each registered op bit-exact to its
 //! direct kernel.
+//!
+//! ## Spec parsing
+//!
+//! ```
+//! use sole::ops::{Op, OpRegistry, OpSpec};
+//!
+//! // the grammar alone: <op>/<DIM><len>[x<DIM><len>...]
+//! let spec = OpSpec::parse("attention/L128xD64")?;
+//! assert_eq!(spec.op, "attention");
+//! assert_eq!((spec.dim, spec.len), ('L', 128));
+//! assert_eq!(spec.extra, vec![('D', 64)]);
+//! assert_eq!(spec.to_string(), "attention/L128xD64");
+//!
+//! // the registry-validated path used by `sole serve --ops`: unknown
+//! // families and wrong dimension letters are errors, and `build`
+//! // returns the constructed operator alongside its canonical spec
+//! let registry = OpRegistry::builtin();
+//! let (spec, op) = registry.build("e2softmax/L49")?;
+//! assert_eq!(spec.to_string(), "e2softmax/L49");
+//! assert_eq!(op.item_len(), 49);
+//! assert!(registry.build("e2softmax/C49").is_err());
+//! # Ok::<(), anyhow::Error>(())
+//! ```
 
 pub mod ailayernorm;
+pub mod attention;
 pub mod baselines;
 pub mod e2softmax;
 pub mod exact;
+pub mod pipeline;
 pub mod registry;
 pub mod spec;
 
@@ -42,6 +70,7 @@ pub use ailayernorm::AiLayerNormOp;
 pub use baselines::{IbertLayerNormOp, IbertSoftmaxOp, SoftermaxOp};
 pub use e2softmax::E2SoftmaxOp;
 pub use exact::{ExactLayerNormOp, ExactSoftmaxOp};
+pub use pipeline::PipelineOp;
 pub use registry::OpRegistry;
 pub use spec::OpSpec;
 
@@ -50,23 +79,38 @@ pub use spec::OpSpec;
 /// reuse buffers without locks; stateless ops keep the default `()`.
 pub type OpScratch = Box<dyn std::any::Any + Send>;
 
-/// One row-wise operator: the single API every kernel is served through.
+/// One batch operator: the single API every kernel is served through.
 ///
-/// Input and output items are the same flat f32 length (`item_len`) — all
-/// of the paper's nonlinear ops are shape-preserving row transforms.
+/// Most of the paper's nonlinear ops are shape-preserving row transforms
+/// (`out_len() == item_len()`, the default); pipelines such as the fused
+/// attention op consume one shape and produce another.
 pub trait Op: Send + Sync {
     /// Registry family name, e.g. `e2softmax` (no `/`).
     fn name(&self) -> &str;
 
-    /// Dimension letter of the spec grammar (`L` rows, `C` channels).
+    /// Primary dimension letter of the spec grammar (`L` rows,
+    /// `C` channels).
     fn dim(&self) -> char;
 
-    /// Flat f32 length of one item (input and output).
+    /// Flat f32 length of one input item.
     fn item_len(&self) -> usize;
 
+    /// Flat f32 length of one output item.  Defaults to `item_len()`
+    /// (shape-preserving row transforms); pipelines override.
+    fn out_len(&self) -> usize {
+        self.item_len()
+    }
+
     /// Canonical spec of this instance; `OpSpec::parse` round-trips it.
+    /// The default covers one-dimensional ops; multi-dimensional ops
+    /// (pipelines) override with their full shape.
     fn spec(&self) -> OpSpec {
-        OpSpec { op: self.name().to_string(), dim: self.dim(), len: self.item_len() }
+        OpSpec {
+            op: self.name().to_string(),
+            dim: self.dim(),
+            len: self.item_len(),
+            extra: vec![],
+        }
     }
 
     /// Create the per-worker scratch arena (stateless ops keep the
@@ -75,8 +119,8 @@ pub trait Op: Send + Sync {
         Box::new(())
     }
 
-    /// Run `rows` items: `input.len() == rows * item_len()`, writing the
-    /// same number of f32s into `out`.  Hot-path implementations keep
+    /// Run `rows` items: `input.len() == rows * item_len()`, writing
+    /// `rows * out_len()` f32s into `out`.  Hot-path implementations keep
     /// every temporary in `scratch` so steady-state execution is
     /// allocation-free; baseline/comparator ops may allocate.
     fn run_batch(
@@ -94,6 +138,7 @@ pub trait Op: Send + Sync {
 /// boundary, so a forgetful impl still cannot read a mis-sized buffer).
 pub fn check_batch(op: &dyn Op, rows: usize, input: &[f32], out: &[f32]) -> Result<()> {
     let item = op.item_len();
+    let out_item = op.out_len();
     anyhow::ensure!(rows > 0, "op '{}': batch must contain at least one row", op.name());
     anyhow::ensure!(
         input.len() == rows * item,
@@ -102,8 +147,8 @@ pub fn check_batch(op: &dyn Op, rows: usize, input: &[f32], out: &[f32]) -> Resu
         input.len()
     );
     anyhow::ensure!(
-        out.len() == rows * item,
-        "op '{}': out len {} != {rows} rows * {item}",
+        out.len() == rows * out_item,
+        "op '{}': out len {} != {rows} rows * {out_item}",
         op.name(),
         out.len()
     );

@@ -1,0 +1,150 @@
+//! `PipelineOp`: chain [`Op`] stages behind the same one-op contract.
+//!
+//! A pipeline is itself an `Op`, so everything that serves single ops —
+//! `OpBackend`, the `ServiceRouter`, `sole serve --ops`, the benches —
+//! serves multi-stage computations with zero extra plumbing.  Stage
+//! boundaries are staged through two ping-pong buffers living in the
+//! pipeline's scratch arena (resize-based reuse, so capacity ratchets to
+//! the largest batch seen and steady-state execution allocates nothing),
+//! and each stage keeps its own scratch inside the same arena.  Stage
+//! shapes are validated once at construction: stage `i`'s `out_len` must
+//! equal stage `i+1`'s `item_len`.
+//!
+//! The in-tree pipelines are the attention datapaths built in
+//! [`super::attention`] (`attention/L<len>xD<dim>`, DESIGN.md §3.2).
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::{check_batch, Op, OpScratch, OpSpec};
+
+/// A chain of [`Op`] stages executed as one op: the output batch of
+/// stage `i` is the input batch of stage `i+1`.
+pub struct PipelineOp {
+    spec: OpSpec,
+    stages: Vec<Arc<dyn Op>>,
+}
+
+/// Per-worker arena: one scratch per stage plus the two ping-pong
+/// staging buffers for the intermediate batches.
+struct Scratch {
+    stages: Vec<OpScratch>,
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+impl PipelineOp {
+    /// Chain `stages` under the canonical `spec` (the spec is what the
+    /// registry advertises; `spec.op` is the pipeline's name).  Errors if
+    /// the chain is empty or any stage boundary disagrees on item shape.
+    pub fn try_new(spec: OpSpec, stages: Vec<Arc<dyn Op>>) -> Result<PipelineOp> {
+        anyhow::ensure!(!stages.is_empty(), "pipeline '{spec}' needs at least one stage");
+        for pair in stages.windows(2) {
+            anyhow::ensure!(
+                pair[0].out_len() == pair[1].item_len(),
+                "pipeline '{spec}': stage '{}' outputs {} f32/item but stage '{}' expects {}",
+                pair[0].name(),
+                pair[0].out_len(),
+                pair[1].name(),
+                pair[1].item_len()
+            );
+        }
+        Ok(PipelineOp { spec, stages })
+    }
+
+    /// The chained stages, in execution order.
+    pub fn stages(&self) -> &[Arc<dyn Op>] {
+        &self.stages
+    }
+}
+
+impl Op for PipelineOp {
+    fn name(&self) -> &str {
+        &self.spec.op
+    }
+
+    fn dim(&self) -> char {
+        self.spec.dim
+    }
+
+    fn item_len(&self) -> usize {
+        self.stages[0].item_len()
+    }
+
+    fn out_len(&self) -> usize {
+        self.stages[self.stages.len() - 1].out_len()
+    }
+
+    fn spec(&self) -> OpSpec {
+        self.spec.clone()
+    }
+
+    fn make_scratch(&self) -> OpScratch {
+        Box::new(Scratch {
+            stages: self.stages.iter().map(|s| s.make_scratch()).collect(),
+            a: Vec::new(),
+            b: Vec::new(),
+        })
+    }
+
+    fn run_batch(
+        &self,
+        rows: usize,
+        input: &[f32],
+        out: &mut [f32],
+        scratch: &mut OpScratch,
+    ) -> Result<()> {
+        check_batch(self, rows, input, out)?;
+        let s = scratch
+            .downcast_mut::<Scratch>()
+            .with_context(|| format!("pipeline '{}' handed a foreign scratch arena", self.spec))?;
+        anyhow::ensure!(
+            s.stages.len() == self.stages.len(),
+            "pipeline '{}' scratch arena has {} stage slots, expected {}",
+            self.spec,
+            s.stages.len(),
+            self.stages.len()
+        );
+        let Scratch { stages: scr, a, b } = s;
+        let last = self.stages.len() - 1;
+        // ping-pong through a/b: stage i reads the buffer stage i-1 wrote
+        // (or `input` for stage 0), and writes the other buffer (or `out`
+        // for the last stage).  Plain resize (no clear) so a warm buffer
+        // is not re-zeroed every batch: the `Op` contract requires each
+        // stage to write every one of its `rows * out_len()` output f32s,
+        // so stale content from a previous batch is never observable
+        // (pinned per registered pipeline by the scratch-reuse
+        // determinism conformance test).
+        let mut src_is_a = false;
+        for (i, stage) in self.stages.iter().enumerate() {
+            let sc = &mut scr[i];
+            let result = if i == last {
+                let src: &[f32] = if i == 0 {
+                    input
+                } else if src_is_a {
+                    &a[..]
+                } else {
+                    &b[..]
+                };
+                stage.run_batch(rows, src, out, sc)
+            } else if i == 0 {
+                a.resize(rows * stage.out_len(), 0.0);
+                src_is_a = true;
+                stage.run_batch(rows, input, &mut a[..], sc)
+            } else if src_is_a {
+                b.resize(rows * stage.out_len(), 0.0);
+                src_is_a = false;
+                stage.run_batch(rows, &a[..], &mut b[..], sc)
+            } else {
+                a.resize(rows * stage.out_len(), 0.0);
+                src_is_a = true;
+                stage.run_batch(rows, &b[..], &mut a[..], sc)
+            };
+            result.with_context(|| {
+                format!("pipeline '{}' stage {} ('{}')", self.spec, i, stage.name())
+            })?;
+        }
+        Ok(())
+    }
+}

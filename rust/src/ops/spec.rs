@@ -1,56 +1,95 @@
 //! Operator spec strings: the one grammar every layer speaks.
 //!
 //! A spec names an operator family plus its item shape in a single
-//! routable token: `<op>/<DIM><len>`, e.g. `e2softmax/L256`,
-//! `softmax-exact/L49`, `ailayernorm/C768`, `layernorm-exact/C768`.
-//! `<op>` is the registry family name (no `/`), `<DIM>` is one uppercase
-//! dimension letter (by convention `L` for softmax row length, `C` for
-//! layernorm channel count), `<len>` is the positive flat f32 item length.
-//! The canonical rendering round-trips: `parse(format(spec)) == spec`.
+//! routable token: `<op>/<DIM><len>[x<DIM><len>...]`.  Examples:
+//! `e2softmax/L256`, `softmax-exact/L49`, `ailayernorm/C768`,
+//! `attention/L128xD64`.  `<op>` is the registry family name (no `/`),
+//! each `<DIM>` is one uppercase dimension letter (by convention `L` for
+//! sequence/row length, `C` for layernorm channel count, `D` for
+//! attention head dimension), `<len>` is a positive integer, and extra
+//! dimensions are separated by a lowercase `x` (unambiguous: dimension
+//! letters are uppercase).  Most families are one-dimensional; pipelines
+//! like `attention` carry the extra dimensions their stages need.  The
+//! canonical rendering round-trips: `parse(format(spec)) == spec`.
 
 use anyhow::{Context, Result};
 
-/// A parsed operator spec: family name, dimension letter, item length.
+/// A parsed operator spec: family name, primary dimension, item length,
+/// plus any trailing dimensions.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct OpSpec {
     /// Registry family name, e.g. `e2softmax`.
     pub op: String,
-    /// Dimension letter the family uses (`L` rows, `C` channels).
+    /// Primary dimension letter (`L` rows, `C` channels).
     pub dim: char,
-    /// Flat f32 length of one item.
+    /// Primary dimension length (for one-dimensional ops this is the
+    /// flat f32 item length; pipelines derive their item length from the
+    /// full shape).
     pub len: usize,
+    /// Trailing dimensions after the primary one, in spec order — e.g.
+    /// `[('D', 64)]` in `attention/L128xD64`.  Empty for the
+    /// one-dimensional families.
+    pub extra: Vec<(char, usize)>,
 }
 
 impl OpSpec {
-    /// Parse `<op>/<DIM><len>`.  Every failure names the offending spec —
-    /// this string is the user-facing API of `sole serve --ops`.
+    /// Parse `<op>/<DIM><len>[x<DIM><len>...]`.  Every failure names the
+    /// offending spec — this string is the user-facing API of
+    /// `sole serve --ops`.
     pub fn parse(s: &str) -> Result<OpSpec> {
         let (op, shape) = s.rsplit_once('/').with_context(|| {
             format!("op spec '{s}': expected '<op>/<DIM><len>' (e.g. e2softmax/L128)")
         })?;
         anyhow::ensure!(!op.is_empty(), "op spec '{s}': empty op name before '/'");
         anyhow::ensure!(!op.contains('/'), "op spec '{s}': op name must not contain '/'");
-        let mut chars = shape.chars();
-        let dim = chars
-            .next()
-            .with_context(|| format!("op spec '{s}': missing '<DIM><len>' after '/'"))?;
-        anyhow::ensure!(
-            dim.is_ascii_uppercase(),
-            "op spec '{s}': shape must start with an uppercase dimension letter \
-             (L rows, C channels)"
-        );
-        let len_str = chars.as_str();
-        let len: usize = len_str
-            .parse()
-            .map_err(|_| anyhow::anyhow!("op spec '{s}': invalid item length '{len_str}'"))?;
-        anyhow::ensure!(len > 0, "op spec '{s}': item length must be positive");
-        Ok(OpSpec { op: op.to_string(), dim, len })
+        let mut segments = shape.split('x');
+        let (dim, len) = parse_segment(s, segments.next().unwrap_or(""))?;
+        let extra = segments.map(|seg| parse_segment(s, seg)).collect::<Result<Vec<_>>>()?;
+        Ok(OpSpec { op: op.to_string(), dim, len, extra })
     }
+
+    /// Dimension letters in spec order, primary first (`['L', 'D']` for
+    /// `attention/L128xD64`); the registry validates these against the
+    /// family's registered signature.
+    pub fn letters(&self) -> Vec<char> {
+        std::iter::once(self.dim).chain(self.extra.iter().map(|&(d, _)| d)).collect()
+    }
+
+    /// The shape part of the canonical rendering (`L128xD64`), without
+    /// the op name.
+    pub fn shape(&self) -> String {
+        let mut out = format!("{}{}", self.dim, self.len);
+        for (d, l) in &self.extra {
+            out.push('x');
+            out.push(*d);
+            out.push_str(&l.to_string());
+        }
+        out
+    }
+}
+
+/// One `<DIM><len>` segment of the shape part.
+fn parse_segment(s: &str, seg: &str) -> Result<(char, usize)> {
+    let mut chars = seg.chars();
+    let dim = chars
+        .next()
+        .with_context(|| format!("op spec '{s}': missing '<DIM><len>' after '/'"))?;
+    anyhow::ensure!(
+        dim.is_ascii_uppercase(),
+        "op spec '{s}': each dimension must start with an uppercase letter \
+         (L rows, C channels, D head dim)"
+    );
+    let len_str = chars.as_str();
+    let len: usize = len_str
+        .parse()
+        .map_err(|_| anyhow::anyhow!("op spec '{s}': invalid item length '{len_str}'"))?;
+    anyhow::ensure!(len > 0, "op spec '{s}': item length must be positive");
+    Ok((dim, len))
 }
 
 impl std::fmt::Display for OpSpec {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "{}/{}{}", self.op, self.dim, self.len)
+        write!(f, "{}/{}", self.op, self.shape())
     }
 }
 
@@ -70,10 +109,26 @@ mod tests {
             assert_eq!(spec.op, op);
             assert_eq!(spec.dim, dim);
             assert_eq!(spec.len, len);
+            assert!(spec.extra.is_empty());
             // canonical round trip
             assert_eq!(spec.to_string(), s);
             assert_eq!(OpSpec::parse(&spec.to_string()).unwrap(), spec);
         }
+    }
+
+    #[test]
+    fn parses_multi_dimensional_pipeline_specs() {
+        let spec = OpSpec::parse("attention/L128xD64").unwrap();
+        assert_eq!(spec.op, "attention");
+        assert_eq!((spec.dim, spec.len), ('L', 128));
+        assert_eq!(spec.extra, vec![('D', 64)]);
+        assert_eq!(spec.letters(), vec!['L', 'D']);
+        assert_eq!(spec.shape(), "L128xD64");
+        assert_eq!(spec.to_string(), "attention/L128xD64");
+        assert_eq!(OpSpec::parse(&spec.to_string()).unwrap(), spec);
+        // arbitrary depth parses (the registry enforces family signatures)
+        let deep = OpSpec::parse("x/A1xB2xC3").unwrap();
+        assert_eq!(deep.extra, vec![('B', 2), ('C', 3)]);
     }
 
     #[test]
@@ -88,6 +143,10 @@ mod tests {
             "e2softmax/Lx",
             "e2softmax/L0",
             "a/b/L4",
+            "attention/L128x",
+            "attention/L128xd64",
+            "attention/L128xD0",
+            "attention/xD64",
         ];
         for bad in bad_specs {
             let err = format!("{:#}", OpSpec::parse(bad).unwrap_err());

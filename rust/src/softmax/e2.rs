@@ -58,8 +58,11 @@ impl E2SoftmaxOut {
 }
 
 /// Stage 2 indexes `val[k + sub]` with k, sub in [0, 15]: 31 reachable
-/// entries, padded to 32.
-const VAL_TABLE_LEN: usize = 32;
+/// entries, padded to 32.  This is also the per-row stride of the `val`
+/// buffer that [`E2Softmax::forward_batch_codes`] hands to fused
+/// consumers: one packed code per element plus one `VAL_TABLE_LEN`-entry
+/// dequantization table per row.
+pub const VAL_TABLE_LEN: usize = 32;
 
 /// Reusable scratch for the allocation-free kernels.  Buffers are
 /// `resize`d to the row at hand, so capacity grows to the largest row seen
@@ -158,8 +161,99 @@ impl E2Softmax {
         }
     }
 
-    /// The planar LUT-driven row kernel behind both f32 entry points.
+    /// Batch code path for fused consumers (DESIGN.md §3.2): instead of
+    /// dequantizing to f32, expose what the hardware actually stores —
+    /// one packed 5-bit *total shift* code per element (`k_i + sub_slice`,
+    /// the full index into the row's divider table) plus each row's
+    /// ≤ 32-entry table of reachable ALDivision outputs (`val`, stride
+    /// [`VAL_TABLE_LEN`] per row; entries are shifted copies of one
+    /// per-row constant, so indexing it is the software model of a shift
+    /// network).  `val[row][code]` is bit-identical to the f32 value
+    /// `forward_batch_f32` would have written for that element — both
+    /// paths share one stage-1/val-table kernel — so a fused A·V consumer
+    /// that multiplies `val[code] * v` in the same order as an unfused
+    /// f32 matmul produces bit-identical output while never materializing
+    /// the probability matrix at full width.
+    pub fn forward_batch_codes(
+        &self,
+        q: &[i64],
+        l: usize,
+        codes: &mut Vec<u8>,
+        val: &mut Vec<f32>,
+        scratch: &mut E2Scratch,
+    ) {
+        assert!(l > 0, "softmax rows must be non-empty");
+        assert!(q.len() % l == 0, "packed batch len {} is not a multiple of {l}", q.len());
+        let rows = q.len() / l;
+        // plain resize (no clear): every element is overwritten below —
+        // codes by the exact-cover chunks_exact_mut, val by full-stride
+        // copies — so a warm buffer is not re-zeroed every call
+        codes.resize(q.len(), 0);
+        val.resize(rows * VAL_TABLE_LEN, 0.0);
+        for ((row, row_codes), row_val) in q
+            .chunks_exact(l)
+            .zip(codes.chunks_exact_mut(l))
+            .zip(val.chunks_exact_mut(VAL_TABLE_LEN))
+        {
+            let v = self.row_codes(row, row_codes, scratch);
+            row_val.copy_from_slice(&v);
+        }
+    }
+
+    /// The planar LUT-driven row kernel behind both f32 entry points:
+    /// shared stage 1 + divider table, then the f32 dequant loop.
     fn row_kernel(&self, q: &[i64], out: &mut [f32], scratch: &mut E2Scratch) {
+        let (val, m_final) = self.row_prepare(q, scratch);
+        let chunk = self.cfg.chunk.max(1);
+        let t = &self.table;
+        // Stage 2: the correction sub = k(m_slice - m_final) is constant
+        // per slice — hoist it, leaving a pure table[k] -> scale pipeline.
+        for ((ks, os), &m_sl) in scratch
+            .k
+            .chunks(chunk)
+            .zip(out.chunks_mut(chunk))
+            .zip(scratch.slice_m.iter())
+        {
+            let sub = t.k(m_sl - m_final);
+            for (o, &k) in os.iter_mut().zip(ks) {
+                *o = val[(k as i64 + sub) as usize];
+            }
+        }
+    }
+
+    /// Code twin of `row_kernel`: identical stage 1 + divider table, but
+    /// stage 2 stores each element's total shift `k_i + sub_slice` (the
+    /// index `forward_batch_f32` would have dequantized through) instead
+    /// of the dequantized f32, and returns the row's table.
+    fn row_codes(
+        &self,
+        q: &[i64],
+        codes: &mut [u8],
+        scratch: &mut E2Scratch,
+    ) -> [f32; VAL_TABLE_LEN] {
+        debug_assert_eq!(q.len(), codes.len());
+        let (val, m_final) = self.row_prepare(q, scratch);
+        let chunk = self.cfg.chunk.max(1);
+        let t = &self.table;
+        for ((ks, cs), &m_sl) in scratch
+            .k
+            .chunks(chunk)
+            .zip(codes.chunks_mut(chunk))
+            .zip(scratch.slice_m.iter())
+        {
+            let sub = t.k(m_sl - m_final);
+            for (c, &k) in cs.iter_mut().zip(ks) {
+                *c = (k as i64 + sub) as u8;
+            }
+        }
+        val
+    }
+
+    /// Stage 1 + divider-table construction shared by `row_kernel` and
+    /// `row_codes`: fills `scratch.k` (4-bit k codes) and
+    /// `scratch.slice_m` (per-slice running max), returns the per-row
+    /// table of reachable ALDivision outputs and the row's final max.
+    fn row_prepare(&self, q: &[i64], scratch: &mut E2Scratch) -> ([f32; VAL_TABLE_LEN], i64) {
         debug_assert!(!q.is_empty());
         let chunk = self.cfg.chunk.max(1);
         let t = &self.table;
@@ -225,20 +319,7 @@ impl E2Softmax {
             let q23 = if shift >= 64 { 0 } else { c >> shift };
             *v = q23 as f32 * inv;
         }
-
-        // Stage 2: the correction sub = k(m_slice - m_final) is constant
-        // per slice — hoist it, leaving a pure table[k] -> scale pipeline.
-        for ((ks, os), &m_sl) in scratch
-            .k
-            .chunks(chunk)
-            .zip(out.chunks_mut(chunk))
-            .zip(scratch.slice_m.iter())
-        {
-            let sub = t.k(m_sl - m_final);
-            for (o, &k) in os.iter_mut().zip(ks) {
-                *o = val[(k as i64 + sub) as usize];
-            }
-        }
+        (val, m_final)
     }
 
     /// Quantize real logits to codes and run; convenience for the accuracy
@@ -557,6 +638,58 @@ mod tests {
             quantize_logits_into(&x[r * l..(r + 1) * l], DEFAULT_E, &mut row);
             assert_eq!(&batch[r * l..(r + 1) * l], &row[..], "row {r}");
         }
+    }
+
+    #[test]
+    fn batch_codes_dequantize_bitwise_to_batch_f32() {
+        // the fused-consumer contract: val[row][code] must be the exact
+        // f32 the dequantizing kernel writes, at every shape and chunk
+        check("e2-codes", 60, 47, |rng| {
+            let l = size(rng, 200);
+            let b = 1 + rng.range_usize(0, 4);
+            let chunk = [1usize, 7, 32][rng.range_usize(0, 3)];
+            let q = codes(rng, b * l);
+            let sm = E2Softmax::new(E2SoftmaxConfig { e: 4, chunk });
+            let mut out = vec![0f32; b * l];
+            let mut scratch = E2Scratch::default();
+            sm.forward_batch_f32(&q, l, &mut out, &mut scratch);
+            let mut packed = Vec::new();
+            let mut val = Vec::new();
+            sm.forward_batch_codes(&q, l, &mut packed, &mut val, &mut scratch);
+            assert_eq!(packed.len(), b * l);
+            assert_eq!(val.len(), b * VAL_TABLE_LEN);
+            for r in 0..b {
+                let row_val = &val[r * VAL_TABLE_LEN..(r + 1) * VAL_TABLE_LEN];
+                for i in 0..l {
+                    let code = packed[r * l + i] as usize;
+                    assert!(code < VAL_TABLE_LEN, "code {code} out of table");
+                    assert_eq!(
+                        row_val[code],
+                        out[r * l + i],
+                        "row {r} elem {i} chunk {chunk}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn batch_codes_scratch_reuse_is_deterministic() {
+        // the same scratch (and the same codes/val buffers) across calls
+        // must not leak state between batches
+        let l = 96;
+        let mut rng = Rng::new(61);
+        let q1 = codes(&mut rng, 3 * l);
+        let q2 = codes(&mut rng, 5 * l);
+        let sm = E2Softmax::new(E2SoftmaxConfig::default());
+        let mut scratch = E2Scratch::default();
+        let (mut c1, mut v1) = (Vec::new(), Vec::new());
+        sm.forward_batch_codes(&q1, l, &mut c1, &mut v1, &mut scratch);
+        let (first_c, first_v) = (c1.clone(), v1.clone());
+        sm.forward_batch_codes(&q2, l, &mut c1, &mut v1, &mut scratch);
+        sm.forward_batch_codes(&q1, l, &mut c1, &mut v1, &mut scratch);
+        assert_eq!(c1, first_c);
+        assert_eq!(v1, first_v);
     }
 
     #[test]

@@ -1,9 +1,10 @@
 //! Integration: the ServiceRouter end to end — the paper's full mixed
-//! workload (E2Softmax at L ∈ {49, 128, 785, 1024} + AILayerNorm at
-//! C = 768) through one process, registered purely via registry spec
-//! strings, pinned bit-exact against direct kernel invocation per
-//! service, plus a mixed-op soak with interleaved clients and the exact
-//! baselines served side by side with SOLE.
+//! workload (E2Softmax at L ∈ {49, 128, 785, 1024}, AILayerNorm at
+//! C = 768, and the fused attention pipeline at L128xD64) through one
+//! process, registered purely via registry spec strings, pinned
+//! bit-exact against direct kernel invocation per service, plus a
+//! mixed-op soak with interleaved clients and the exact baselines
+//! served side by side with SOLE.
 
 use std::time::Duration;
 
@@ -11,7 +12,7 @@ use sole::coordinator::{paper_services, BatchPolicy, ServiceRouter};
 use sole::layernorm::ai::layernorm_exact;
 use sole::layernorm::{config::DEFAULT_ZP, AiLayerNorm};
 use sole::ops::exact::EXACT_LN_EPS;
-use sole::ops::OpRegistry;
+use sole::ops::{attention, Op, OpRegistry};
 use sole::quant::{ptf_quantize_into, PtfCalib};
 use sole::softmax::e2::softmax_exact;
 use sole::softmax::{quantize_logits_into, E2Scratch, E2Softmax, E2SoftmaxConfig};
@@ -95,15 +96,46 @@ fn layernorm_service_matches_direct_kernel_at_c768() {
 }
 
 #[test]
+fn attention_service_matches_direct_pipeline_invocation() {
+    // the served fused pipeline must be bit-identical to running the
+    // PipelineOp directly: routing, batching and arena staging add no
+    // arithmetic
+    let router = start_paper_router(8, 3);
+    let cl = router.client();
+    let service = "attention/L128xD64";
+    let item_in = 3 * 128 * 64;
+    assert_eq!(cl.item_len(service).unwrap(), item_in);
+    let pipeline = attention::fused_pipeline(128, 64).unwrap();
+    let mut rng = Rng::new(47);
+    let items: Vec<Vec<f32>> = (0..6)
+        .map(|_| {
+            let mut it = vec![0f32; item_in];
+            rng.fill_normal(&mut it, 0.0, 1.0);
+            it
+        })
+        .collect();
+    let rxs: Vec<_> = items.iter().map(|it| cl.submit(service, it.clone()).unwrap()).collect();
+    let mut scratch = pipeline.make_scratch();
+    let mut want = vec![0f32; 128 * 64];
+    for (i, (item, rx)) in items.iter().zip(rxs).enumerate() {
+        let resp = rx.recv().unwrap();
+        pipeline.run_batch(1, item, &mut want, &mut scratch).unwrap();
+        assert_eq!(resp.output, want, "{service} request {i}");
+    }
+    assert_eq!(router.metrics(service).unwrap().completed(), 6);
+    router.shutdown();
+}
+
+#[test]
 fn mixed_op_soak_interleaved_clients_answer_everything() {
     // several client threads interleave every service; all requests must
     // be answered, per-service metrics populated, and the conservation
     // invariant hold everywhere (no errors on the software services)
     const CLIENTS: usize = 4;
-    const PER_CLIENT: usize = 60; // 12 per service per client
+    const PER_CLIENT: usize = 60; // 10 per service per client
     let router = start_paper_router(6, 2);
     let names: Vec<String> = router.services().iter().map(|s| s.to_string()).collect();
-    assert_eq!(names.len(), 5);
+    assert_eq!(names.len(), 6);
     let handles: Vec<_> = (0..CLIENTS)
         .map(|cid| {
             let cl = router.client();

@@ -2,20 +2,25 @@
 //! builtin `OpRegistry` can construct is held to the same contract —
 //!
 //! * bit-exact to its direct kernel (the registry path adds routing and
-//!   scratch management, never arithmetic);
+//!   scratch management, never arithmetic) — for the attention pipelines
+//!   the direct kernel is the stage math composed from the raw kernels;
 //! * correct at the edge shapes rows ∈ {1, cap};
 //! * deterministic under scratch reuse (no state leaks between batches);
 //! * spec round-trip: `parse(format(spec)) == spec`.
 //!
 //! A newly registered op joins every check automatically — only
-//! `reference_row` needs a matching arm (and the suite fails loudly,
-//! naming the op, if it is missing).
+//! `reference_item` needs a matching arm (and the suite fails loudly,
+//! naming the op, if it is missing).  The fused attention pipeline is
+//! additionally pinned bit-exact against composing its stages as
+//! *separate services* through `OpBackend` — the acceptance bar for the
+//! shift-accumulate A·V path.
 
 use sole::coordinator::{Backend, OpBackend};
 use sole::layernorm::ai::layernorm_exact;
 use sole::layernorm::baselines::ibert_layernorm;
 use sole::layernorm::AiLayerNorm;
 use sole::ops::ailayernorm::identity_calibration;
+use sole::ops::attention::{AttnAvOp, AttnLogitsOp};
 use sole::ops::baselines::{IBERT_LAYERNORM_SCALE, IBERT_SOFTMAX_SCALE, SOFTERMAX_FRAC_BITS};
 use sole::ops::exact::EXACT_LN_EPS;
 use sole::ops::{Op, OpRegistry, OpSpec};
@@ -25,7 +30,7 @@ use sole::softmax::e2::softmax_exact;
 use sole::softmax::{quantize_logits_into, E2Scratch, E2Softmax, E2SoftmaxConfig};
 use sole::util::rng::Rng;
 
-/// The registered op's direct kernel, invoked without any Op machinery.
+/// One row through the direct kernel of a shape-preserving family.
 fn reference_row(op: &str, row: &[f32]) -> Vec<f32> {
     match op {
         "e2softmax" => {
@@ -70,8 +75,50 @@ fn reference_row(op: &str, row: &[f32]) -> Vec<f32> {
     }
 }
 
-/// Each op at its canonical length plus a small off-default length, so
-/// the conformance sweep covers more than one shape per family.
+/// Attention stage math composed from direct kernels, mirroring the
+/// pipeline's accumulation order exactly: QKᵀ-scaled logits, the named
+/// softmax row kernel, then the j-then-d A·V accumulation.
+fn attention_reference(l: usize, d: usize, item: &[f32], softmax_op: &str) -> Vec<f32> {
+    let ld = l * d;
+    let (q, rest) = item.split_at(ld);
+    let (k, v) = rest.split_at(ld);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut s = vec![0f32; l * l];
+    for (qi, s_row) in q.chunks_exact(d).zip(s.chunks_exact_mut(l)) {
+        for (kj, s_elem) in k.chunks_exact(d).zip(s_row.iter_mut()) {
+            let mut acc = 0f32;
+            for (&x, &y) in qi.iter().zip(kj) {
+                acc += x * y;
+            }
+            *s_elem = acc * scale;
+        }
+    }
+    let mut out = vec![0f32; l * d];
+    for (s_row, o_row) in s.chunks_exact(l).zip(out.chunks_exact_mut(d)) {
+        let p_row = reference_row(softmax_op, s_row);
+        for (&pij, v_row) in p_row.iter().zip(v.chunks_exact(d)) {
+            for (o, &vv) in o_row.iter_mut().zip(v_row) {
+                *o += pij * vv;
+            }
+        }
+    }
+    out
+}
+
+/// One item through the direct kernel of any registered family.
+fn reference_item(spec: &OpSpec, item: &[f32]) -> Vec<f32> {
+    match spec.op.as_str() {
+        "attention" => attention_reference(spec.len, spec.extra[0].1, item, "e2softmax"),
+        "attention-exact" => {
+            attention_reference(spec.len, spec.extra[0].1, item, "softmax-exact")
+        }
+        _ => reference_row(&spec.op, item),
+    }
+}
+
+/// Each op at its canonical shape plus a small off-default primary
+/// length, so the conformance sweep covers more than one shape per
+/// family (pipelines keep their extra dimensions at the default).
 fn conformance_specs(registry: &OpRegistry) -> Vec<OpSpec> {
     let mut specs = Vec::new();
     for name in registry.names() {
@@ -98,15 +145,16 @@ fn every_registered_op_is_bit_exact_to_its_direct_kernel() {
     for spec in conformance_specs(&registry) {
         let (parsed, op) = registry.build(&spec.to_string()).unwrap();
         assert_eq!(parsed, spec);
+        let (item_in, item_out) = (op.item_len(), op.out_len());
         let rows = 4;
-        let input = rows_for(&mut rng, spec.len, rows);
-        let mut out = vec![0f32; rows * spec.len];
+        let input = rows_for(&mut rng, item_in, rows);
+        let mut out = vec![0f32; rows * item_out];
         let mut scratch = op.make_scratch();
         op.run_batch(rows, &input, &mut out, &mut scratch).unwrap();
         for r in 0..rows {
-            let row = &input[r * spec.len..(r + 1) * spec.len];
-            let want = reference_row(&spec.op, row);
-            assert_eq!(&out[r * spec.len..(r + 1) * spec.len], &want[..], "{spec} row {r}");
+            let item = &input[r * item_in..(r + 1) * item_in];
+            let want = reference_item(&spec, item);
+            assert_eq!(&out[r * item_out..(r + 1) * item_out], &want[..], "{spec} row {r}");
         }
     }
 }
@@ -118,15 +166,15 @@ fn every_registered_op_handles_edge_shapes_through_the_backend() {
     let registry = OpRegistry::builtin();
     let mut rng = Rng::new(0x0C1F);
     for spec in conformance_specs(&registry) {
-        let be =
-            OpBackend::from_spec(&registry, &spec.to_string(), vec![1, CAP]).unwrap();
+        let be = OpBackend::from_spec(&registry, &spec.to_string(), vec![1, CAP]).unwrap();
+        let (item_in, item_out) = (be.item_input_len(), be.item_output_len());
         for rows in [1usize, CAP] {
-            let input = rows_for(&mut rng, spec.len, rows);
+            let input = rows_for(&mut rng, item_in, rows);
             let out = be.run_alloc(rows, &input).unwrap();
             for r in 0..rows {
-                let row = &input[r * spec.len..(r + 1) * spec.len];
-                let want = reference_row(&spec.op, row);
-                let got = &out[r * spec.len..(r + 1) * spec.len];
+                let item = &input[r * item_in..(r + 1) * item_in];
+                let want = reference_item(&spec, item);
+                let got = &out[r * item_out..(r + 1) * item_out];
                 assert_eq!(got, &want[..], "{spec} rows={rows} r={r}");
             }
         }
@@ -144,12 +192,12 @@ fn every_registered_op_is_deterministic_under_scratch_reuse() {
         let spec = registry.canonical_spec(name).unwrap();
         let (_, op) = registry.build(&spec.to_string()).unwrap();
         let rows = 8;
-        let a = rows_for(&mut rng, spec.len, rows);
-        let b = rows_for(&mut rng, spec.len, rows);
+        let a = rows_for(&mut rng, op.item_len(), rows);
+        let b = rows_for(&mut rng, op.item_len(), rows);
         let mut scratch = op.make_scratch();
-        let mut out1 = vec![0f32; rows * spec.len];
-        let mut out2 = vec![0f32; rows * spec.len];
-        let mut out3 = vec![0f32; rows * spec.len];
+        let mut out1 = vec![0f32; rows * op.out_len()];
+        let mut out2 = vec![0f32; rows * op.out_len()];
+        let mut out3 = vec![0f32; rows * op.out_len()];
         op.run_batch(rows, &a, &mut out1, &mut scratch).unwrap();
         op.run_batch(rows, &b, &mut out2, &mut scratch).unwrap();
         op.run_batch(rows, &a, &mut out3, &mut scratch).unwrap();
@@ -179,14 +227,80 @@ fn every_registered_op_rejects_malformed_batches() {
         let spec = registry.canonical_spec(name).unwrap();
         let (_, op) = registry.build(&spec.to_string()).unwrap();
         let mut scratch = op.make_scratch();
-        let mut out = vec![0f32; spec.len];
+        let mut out = vec![0f32; op.out_len()];
         // short input
-        let short = vec![0f32; spec.len - 1];
+        let short = vec![0f32; op.item_len() - 1];
         assert!(op.run_batch(1, &short, &mut out, &mut scratch).is_err(), "{spec}: short input");
         // mismatched output
-        let input = vec![0f32; 2 * spec.len];
+        let input = vec![0f32; 2 * op.item_len()];
         assert!(op.run_batch(2, &input, &mut out, &mut scratch).is_err(), "{spec}: short out");
         // zero rows
         assert!(op.run_batch(0, &[], &mut [], &mut scratch).is_err(), "{spec}: zero rows");
     }
+}
+
+#[test]
+fn fused_attention_is_bit_exact_vs_separate_stage_services() {
+    // THE acceptance pin of the fused path: the registered attention
+    // pipeline (shift-accumulate A·V over packed log2 codes) must equal,
+    // bit for bit, composing its stages as three separate OpBackend
+    // services — logits, a plain e2softmax service over the L×L block,
+    // and the f32 A·V matmul — exactly how a non-fused deployment would
+    // chain them
+    let registry = OpRegistry::builtin();
+    let mut rng = Rng::new(0x0C3F);
+    for &(l, d) in &[(16usize, 8usize), (128, 64)] {
+        let fused =
+            OpBackend::from_spec(&registry, &format!("attention/L{l}xD{d}"), vec![1, CAP])
+                .unwrap();
+        let logits = OpBackend::try_new(
+            std::sync::Arc::new(AttnLogitsOp::try_new(l, d).unwrap()),
+            vec![1, CAP],
+        )
+        .unwrap();
+        let softmax =
+            OpBackend::from_spec(&registry, &format!("e2softmax/L{l}"), vec![l]).unwrap();
+        let av = OpBackend::try_new(
+            std::sync::Arc::new(AttnAvOp::try_new(l, d).unwrap()),
+            vec![1, CAP],
+        )
+        .unwrap();
+        for rows in [1usize, CAP] {
+            let input = rows_for(&mut rng, 3 * l * d, rows);
+            let got = fused.run_alloc(rows, &input).unwrap();
+            // stage 1: [Q|K|V] -> [S|V]
+            let staged = logits.run_alloc(rows, &input).unwrap();
+            // stage 2: e2softmax over each item's L×L logit block, served
+            // as its own L-row service; V passes through untouched
+            let area = l * l + l * d;
+            let mut probs = staged.clone();
+            for item in probs.chunks_exact_mut(area) {
+                let p = softmax.run_alloc(l, &item[..l * l]).unwrap();
+                item[..l * l].copy_from_slice(&p);
+            }
+            // stage 3: [P|V] -> O
+            let want = av.run_alloc(rows, &probs).unwrap();
+            assert_eq!(got, want, "L{l}xD{d} rows={rows}");
+        }
+    }
+}
+
+#[test]
+fn attention_specs_reject_malformed_shapes() {
+    let registry = OpRegistry::builtin();
+    for bad in [
+        "attention/L128",        // missing head dimension
+        "attention/L128xC64",    // wrong letter
+        "attention/D64xL128",    // wrong order
+        "attention/L128xD0",     // zero length
+        "attention/L128xD64xD2", // too many dimensions
+        "attention/L128xd64",    // lowercase letter
+        "e2softmax/L128xD64",    // extra dims on a 1-D family
+    ] {
+        let err = OpBackend::from_spec(&registry, bad, vec![1, 4]);
+        assert!(err.is_err(), "'{bad}' should be rejected");
+    }
+    // the error names the expected signature
+    let err = format!("{:#}", registry.parse_spec("attention/L128").unwrap_err());
+    assert!(err.contains("L<len>xD<len>"), "{err}");
 }
