@@ -14,7 +14,11 @@
 //! that materializes the f32 probability matrix (`impl = staged_f32`);
 //! for those rows `l` is the sequence length (head dim 64) and
 //! `speedup_vs_legacy` is the fused-over-staged ratio.  The two are
-//! asserted bit-identical before timing.
+//! asserted bit-identical before timing, and the attention rows also
+//! report `staging_bytes_per_item` — what one item's probability matrix
+//! costs at the softmax→A·V stage boundary (the paper's low bit-width
+//! storage claim): the code port must stay ≤ 1/3 of the f32-staged
+//! bytes, asserted against `PipelineOp::staging_bytes_per_item()`.
 //!
 //! Flags: `--json` writes the JSON artifact (default path
 //! `<repo>/BENCH_kernels.json`, override with `--out <path>`); `--quick`
@@ -29,7 +33,7 @@ use sole::layernorm::rsqrt::rsqrt_hw;
 use sole::layernorm::AiLayerNorm;
 use sole::ops::attention::{fused_pipeline, unfused_pipeline};
 use sole::ops::Op;
-use sole::softmax::{config, log2exp, E2Scratch, E2Softmax, E2SoftmaxConfig};
+use sole::softmax::{config, log2exp, E2Scratch, E2Softmax, E2SoftmaxConfig, CODE_SIDE_LEN};
 use sole::util::bench::{bench, quick_mode, report, BenchResult};
 use sole::util::cli::Args;
 use sole::util::json::{obj, Json};
@@ -141,6 +145,8 @@ const TARGET: Duration = Duration::from_millis(300);
 /// row actually consumes, which `melem_per_sec` is computed from — for
 /// the row ops they coincide, for attention a row is a whole `[Q|K|V]`
 /// item (3·L·D), keeping `melem_per_sec` comparable across all rows.
+// one flat row-builder call per bench result beats a builder struct here
+#[allow(clippy::too_many_arguments)]
 fn record(
     op: &str,
     l: usize,
@@ -149,6 +155,7 @@ fn record(
     impl_name: &str,
     r: &BenchResult,
     speedup: Option<f64>,
+    staging_bytes: Option<usize>,
 ) -> Json {
     let rows_per_sec = b as f64 * r.per_sec();
     let melem_per_sec = (b * row_elems) as f64 * r.per_sec() / 1e6;
@@ -165,6 +172,9 @@ fn record(
     ];
     if let Some(s) = speedup {
         fields.push(("speedup_vs_legacy", Json::Num(s)));
+    }
+    if let Some(bytes) = staging_bytes {
+        fields.push(("staging_bytes_per_item", Json::Int(bytes as i64)));
     }
     obj(fields)
 }
@@ -222,8 +232,8 @@ fn main() {
             if l == 1024 && b == 1 {
                 accept_speedup = speedup;
             }
-            results.push(record("e2softmax", l, l, b, "legacy_row", &rl, None));
-            results.push(record("e2softmax", l, l, b, "planar_batch", &rn, Some(speedup)));
+            results.push(record("e2softmax", l, l, b, "legacy_row", &rl, None, None));
+            results.push(record("e2softmax", l, l, b, "planar_batch", &rn, Some(speedup), None));
         }
     }
 
@@ -272,8 +282,8 @@ fn main() {
                 (b * c) as f64 * rl.per_sec() / 1e6,
                 (b * c) as f64 * rn.per_sec() / 1e6,
             );
-            results.push(record("ailayernorm", c, c, b, "legacy_row", &rl, None));
-            results.push(record("ailayernorm", c, c, b, "fused_batch", &rn, Some(speedup)));
+            results.push(record("ailayernorm", c, c, b, "legacy_row", &rl, None, None));
+            results.push(record("ailayernorm", c, c, b, "fused_batch", &rn, Some(speedup), None));
         }
     }
 
@@ -299,6 +309,23 @@ fn main() {
             staged.run_batch(b, &input, &mut out_staged, &mut ss).expect("staged run");
             assert_eq!(out_fused, out_staged, "fused A·V diverged at L={l} D={HEAD_D} B={b}");
 
+            // the storage claim, asserted before timing like bit-exactness:
+            // one item's probability matrix at the softmax->A·V boundary
+            // costs 1 byte/weight + the 2-f32 row headers on the code port
+            // vs 4 bytes/weight staged — the V passthrough block is
+            // byte-identical on both paths and excluded from the ratio
+            let staged_pq = 4 * l * l;
+            let fused_pq = l * l + 4 * CODE_SIDE_LEN * l;
+            assert!(
+                fused_pq * 3 <= staged_pq,
+                "code-port staging must be <= 1/3 of f32 at L={l}: {fused_pq} vs {staged_pq} bytes"
+            );
+            // cross-check against the pipeline's own boundary accounting
+            // (which includes the V block on both sides)
+            let v_bytes = 4 * l * HEAD_D;
+            assert_eq!(fused.staging_bytes_per_item()[1], fused_pq + v_bytes);
+            assert_eq!(staged.staging_bytes_per_item()[1], staged_pq + v_bytes);
+
             let rs = bench(&format!("attention staged  L={l:<4} B={b:<2}"), TARGET, || {
                 staged
                     .run_batch(b, std::hint::black_box(&input), &mut out_staged, &mut ss)
@@ -318,8 +345,26 @@ fn main() {
                 b as f64 * rf.per_sec(),
             );
             let row_elems = fused.item_len();
-            results.push(record("attention", l, row_elems, b, "staged_f32", &rs, None));
-            results.push(record("attention", l, row_elems, b, "fused_codes", &rf, Some(speedup)));
+            results.push(record(
+                "attention",
+                l,
+                row_elems,
+                b,
+                "staged_f32",
+                &rs,
+                None,
+                Some(staged_pq),
+            ));
+            results.push(record(
+                "attention",
+                l,
+                row_elems,
+                b,
+                "fused_codes",
+                &rf,
+                Some(speedup),
+                Some(fused_pq),
+            ));
         }
     }
 
@@ -355,6 +400,16 @@ fn main() {
                         Json::Str(
                             "million input f32 elements per second (attention rows count \
                              the whole [Q|K|V] item, 3*L*D)"
+                                .to_string(),
+                        ),
+                    ),
+                    (
+                        "staging_bytes_per_item",
+                        Json::Str(
+                            "attention only: bytes one item's probability matrix occupies \
+                             at the softmax->A*V stage boundary (code/f32 payload plus \
+                             header sidecar; the V passthrough block, byte-identical on \
+                             both paths, excluded)"
                                 .to_string(),
                         ),
                     ),

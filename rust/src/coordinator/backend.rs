@@ -137,6 +137,18 @@ impl OpBackend {
     /// path — there is deliberately no panicking `new`.
     pub fn try_new(op: Arc<dyn Op>, buckets: Vec<usize>) -> Result<OpBackend> {
         anyhow::ensure!(op.item_len() > 0, "op '{}' has an empty item", op.name());
+        // the serving edge speaks f32 only: an op with a quantized outer
+        // port must be wrapped in a PipelineOp, which dequantizes its
+        // tail and rejects quantized entry stages
+        anyhow::ensure!(
+            op.in_port() == crate::ops::PortType::F32
+                && op.out_port() == crate::ops::PortType::F32,
+            "op '{}' exposes a {} -> {} port pair; router-facing edges are f32 \
+             (wrap quantized ports in a PipelineOp)",
+            op.name(),
+            op.in_port(),
+            op.out_port()
+        );
         let buckets = normalize_buckets(buckets)
             .with_context(|| format!("op '{}' service buckets", op.name()))?;
         Ok(OpBackend { op, buckets })
@@ -241,6 +253,20 @@ mod tests {
         // a zero item length dies in the op constructor itself
         assert!(E2SoftmaxOp::try_new(0).is_err());
         assert!(AiLayerNormOp::try_new(0).is_err());
+    }
+
+    #[test]
+    fn quantized_port_edges_are_rejected_at_the_serving_boundary() {
+        use crate::ops::PortType;
+        let op: Arc<dyn Op> =
+            Arc::new(E2SoftmaxOp::with_out_port(32, PortType::Log2Code5).unwrap());
+        let err = format!("{:#}", OpBackend::try_new(op, vec![1]).unwrap_err());
+        assert!(err.contains("router-facing edges are f32"), "{err}");
+        // the registered ailayernorm-ptf family wraps the same port in a
+        // pipeline, so it serves fine
+        let reg = OpRegistry::builtin();
+        let be = OpBackend::from_spec(&reg, "ailayernorm-ptf/C64", vec![1]).unwrap();
+        assert_eq!((be.item_input_len(), be.item_output_len()), (64, 64));
     }
 
     #[test]

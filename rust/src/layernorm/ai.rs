@@ -158,6 +158,57 @@ impl AiLayerNorm {
         }
     }
 
+    /// Batch hot path with a quantized output (the op layer's `PtfU8`
+    /// port, `ops/port.rs`): each row is normalized by the same fused
+    /// `row_kernel` as `forward_batch_f32`, then collapsed to u8 codes
+    /// with one per-row scale by `quant::q8_quantize_row_into` — what the
+    /// paper's datapath stores between blocks instead of f32.  `row` is a
+    /// reusable f32 scratch (resized to one row, capacity ratchets);
+    /// `out_codes` gets one code per input element and `out_scale` one
+    /// scale per row.  Dequantizing with `quant::q8_dequantize` is
+    /// bit-identical to quantize-roundtripping `forward_batch_f32`'s
+    /// output row by row through the same codec.
+    #[allow(clippy::too_many_arguments)] // mirrors forward_batch_f32 plus the split quantized output planes
+    pub fn forward_batch_q8(
+        &self,
+        codes: &[u8],
+        alpha: &[u8],
+        gamma: &[f32],
+        beta: &[f32],
+        row: &mut Vec<f32>,
+        out_codes: &mut [u8],
+        out_scale: &mut [f32],
+    ) {
+        let c = alpha.len();
+        assert!(c > 0, "layernorm rows must be non-empty");
+        assert!(
+            gamma.len() == c && beta.len() == c,
+            "affine parameter lengths must match {c} channels"
+        );
+        assert!(codes.len() % c == 0, "packed batch len {} is not a multiple of {c}", codes.len());
+        assert!(
+            out_codes.len() == codes.len(),
+            "out codes len {} != batch len {}",
+            out_codes.len(),
+            codes.len()
+        );
+        let rows = codes.len() / c;
+        assert!(
+            out_scale.len() == rows,
+            "out scale len {} != {rows} rows",
+            out_scale.len()
+        );
+        row.resize(c, 0.0);
+        for ((in_row, out_row), scale) in codes
+            .chunks_exact(c)
+            .zip(out_codes.chunks_exact_mut(c))
+            .zip(out_scale.iter_mut())
+        {
+            self.row_kernel(in_row, alpha, gamma, beta, row);
+            *scale = crate::quant::q8_quantize_row_into(row, out_row);
+        }
+    }
+
     /// Quantize a real-valued row with PTF (scale s * 2^alpha, zp) and run.
     pub fn forward_real(
         &self,
@@ -325,6 +376,37 @@ mod tests {
                 assert!((*o as f64 - g).abs() < tol, "c={c} a={a} i={i}: {o} vs {g}");
             }
         }
+    }
+
+    #[test]
+    fn batch_q8_is_the_f32_batch_through_the_row_codec() {
+        // the PtfU8 out-port contract: forward_batch_q8 == forward_batch_f32
+        // followed by q8_quantize_row_into per row, bit for bit
+        let mut rng = Rng::new(53);
+        let c = 96;
+        let b = 5;
+        let codes: Vec<u8> = (0..b * c).map(|_| rng.range_i64(0, 256) as u8).collect();
+        let alpha: Vec<u8> = (0..c).map(|_| rng.range_i64(0, 5) as u8).collect();
+        let gamma: Vec<f32> = (0..c).map(|_| 1.0 + 0.1 * rng.normal() as f32).collect();
+        let beta: Vec<f32> = (0..c).map(|_| 0.3 * rng.normal() as f32).collect();
+        let ln = AiLayerNorm::default();
+        let mut f32_out = vec![0f32; b * c];
+        ln.forward_batch_f32(&codes, &alpha, &gamma, &beta, &mut f32_out);
+        let mut q8_codes = vec![0u8; b * c];
+        let mut q8_scale = vec![0f32; b];
+        let mut row = Vec::new();
+        ln.forward_batch_q8(&codes, &alpha, &gamma, &beta, &mut row, &mut q8_codes, &mut q8_scale);
+        let mut want_codes = vec![0u8; c];
+        for r in 0..b {
+            let want_scale =
+                crate::quant::q8_quantize_row_into(&f32_out[r * c..(r + 1) * c], &mut want_codes);
+            assert_eq!(q8_scale[r].to_bits(), want_scale.to_bits(), "row {r} scale");
+            assert_eq!(&q8_codes[r * c..(r + 1) * c], &want_codes[..], "row {r} codes");
+        }
+        // scratch reuse across a second call stays deterministic
+        let first = (q8_codes.clone(), q8_scale.clone());
+        ln.forward_batch_q8(&codes, &alpha, &gamma, &beta, &mut row, &mut q8_codes, &mut q8_scale);
+        assert_eq!((q8_codes, q8_scale), first);
     }
 
     #[test]

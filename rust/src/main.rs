@@ -30,7 +30,7 @@ use anyhow::{bail, Context, Result};
 
 use sole::coordinator::{paper_service_specs, BatchPolicy, PjrtBackend, ServiceRouter};
 use sole::experiments::{self, ExperimentOut};
-use sole::ops::OpRegistry;
+use sole::ops::{Op, OpRegistry};
 use sole::runtime::Engine;
 use sole::tensor::Bundle;
 use sole::util::cli::Args;
@@ -157,20 +157,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 /// `sole ops` — list every registered operator family: what `--ops`
-/// accepts and what the spec grammar looks like.
+/// accepts, what the spec grammar looks like, each family's in/out item
+/// lengths at the canonical spec, and the port chain its data crosses
+/// (outer edges are always f32; quantized entries are internal staging
+/// boundaries, DESIGN.md §3.3).
 fn cmd_ops() -> Result<()> {
     let registry = OpRegistry::builtin();
     println!(
         "registered ops (spec grammar: <op>/<DIM><len>[x<DIM><len>...], \
          e.g. e2softmax/L128, attention/L128xD64):\n"
     );
-    println!("{:<18} {:>14} {:>12}  {}", "op", "shape", "default", "summary");
+    println!(
+        "{:<18} {:>14} {:>12} {:>14}  {:<24} {}",
+        "op", "shape", "default", "in->out f32", "ports", "summary"
+    );
     for l in registry.listings() {
+        let (_, op) = registry.build(&l.canonical().to_string())?;
+        let mut ports = vec!["f32".to_string()];
+        ports.extend(op.boundary_ports().iter().map(|p| p.to_string()));
+        ports.push("f32".to_string());
         println!(
-            "{:<18} {:>14} {:>12}  {}",
+            "{:<18} {:>14} {:>12} {:>14}  {:<24} {}",
             l.name,
             l.signature(),
             l.canonical().shape(),
+            format!("{}->{}", op.item_len(), op.out_len()),
+            ports.join("->"),
             l.summary
         );
     }

@@ -1,8 +1,12 @@
 //! The paper's AILayerNorm as an [`Op`]: PTF batch quantization + the
 //! fused integer-statistics batch kernel behind the one operator API.
+//! With a `PtfU8` out-port the op stores its output as u8 codes plus one
+//! per-row scale — the low bit-width inter-block storage the paper
+//! claims — instead of widening back to f32 inside the kernel.
 
 use anyhow::{Context, Result};
 
+use super::port::{check_batch_ports, PortMut, PortRef, PortType};
 use super::{check_batch, Op, OpScratch};
 use crate::layernorm::{config::DEFAULT_ZP, AiLayerNorm};
 use crate::quant::{ptf_quantize_batch_into, PtfCalib};
@@ -16,11 +20,14 @@ pub struct AiLayerNormOp {
     cal: PtfCalib,
     gamma: Vec<f32>,
     beta: Vec<f32>,
+    out_port: PortType,
 }
 
-/// Per-worker arena: the packed PTF code buffer.
+/// Per-worker arena: the packed PTF code buffer plus the f32 row scratch
+/// the q8 out-port quantizes from.
 struct Scratch {
     codes: Vec<u8>,
+    row: Vec<f32>,
 }
 
 /// The registry-default calibration: alpha = 0 everywhere with a layer
@@ -32,7 +39,7 @@ pub fn identity_calibration(c: usize) -> PtfCalib {
 
 impl AiLayerNormOp {
     /// Identity-affine op (gamma = 1, beta = 0) over the
-    /// [`identity_calibration`].
+    /// [`identity_calibration`], plain f32 out-port.
     pub fn try_new(c: usize) -> Result<AiLayerNormOp> {
         AiLayerNormOp::with_calibration(c, identity_calibration(c), vec![1f32; c], vec![0f32; c])
     }
@@ -51,7 +58,22 @@ impl AiLayerNormOp {
             "calibration lengths must match {c} channels"
         );
         let ln = AiLayerNorm { zp: cal.zp };
-        Ok(AiLayerNormOp { c, ln, cal, gamma, beta })
+        Ok(AiLayerNormOp { c, ln, cal, gamma, beta, out_port: PortType::F32 })
+    }
+
+    /// Construction with an explicit out-port over the default
+    /// calibration: `PtfU8` makes the op emit one u8 code per channel
+    /// plus a single f32 row scale (`quant::q8_quantize_row_into`), for
+    /// a consumer — or the auto-inserted dequant adapter — to widen on
+    /// its own side of the boundary.
+    pub fn with_out_port(c: usize, port: PortType) -> Result<AiLayerNormOp> {
+        anyhow::ensure!(
+            port != PortType::Log2Code5,
+            "ailayernorm has no log2c5 out-port (its codes are affine u8, not log2 shifts)"
+        );
+        let mut op = AiLayerNormOp::try_new(c)?;
+        op.out_port = port;
+        Ok(op)
     }
 }
 
@@ -68,8 +90,19 @@ impl Op for AiLayerNormOp {
         self.c
     }
 
+    fn out_port(&self) -> PortType {
+        self.out_port
+    }
+
+    fn out_side_len(&self) -> usize {
+        match self.out_port {
+            PortType::PtfU8 => 1,
+            _ => 0,
+        }
+    }
+
     fn make_scratch(&self) -> OpScratch {
-        Box::new(Scratch { codes: Vec::with_capacity(self.c) })
+        Box::new(Scratch { codes: Vec::with_capacity(self.c), row: Vec::new() })
     }
 
     fn run_batch(
@@ -79,6 +112,11 @@ impl Op for AiLayerNormOp {
         out: &mut [f32],
         scratch: &mut OpScratch,
     ) -> Result<()> {
+        anyhow::ensure!(
+            self.out_port == PortType::F32,
+            "ailayernorm with a {} out-port must be driven through run_batch_ports",
+            self.out_port
+        );
         check_batch(self, rows, input, out)?;
         let s = scratch
             .downcast_mut::<Scratch>()
@@ -86,5 +124,100 @@ impl Op for AiLayerNormOp {
         ptf_quantize_batch_into(input, &self.cal, &mut s.codes);
         self.ln.forward_batch_f32(&s.codes, &self.cal.alpha, &self.gamma, &self.beta, out);
         Ok(())
+    }
+
+    fn run_batch_ports(
+        &self,
+        rows: usize,
+        input: PortRef<'_>,
+        out: PortMut<'_>,
+        scratch: &mut OpScratch,
+    ) -> Result<()> {
+        check_batch_ports(self, rows, &input, &out)?;
+        match (input, out) {
+            (PortRef::F32(input), PortMut::F32(out)) => self.run_batch(rows, input, out, scratch),
+            (PortRef::F32(input), PortMut::PtfU8 { codes, side }) => {
+                let s = scratch
+                    .downcast_mut::<Scratch>()
+                    .context("ailayernorm op handed a foreign scratch arena")?;
+                ptf_quantize_batch_into(input, &self.cal, &mut s.codes);
+                self.ln.forward_batch_q8(
+                    &s.codes,
+                    &self.cal.alpha,
+                    &self.gamma,
+                    &self.beta,
+                    &mut s.row,
+                    codes,
+                    side,
+                );
+                Ok(())
+            }
+            (input, out) => anyhow::bail!(
+                "ailayernorm: no {} -> {} path",
+                input.port(),
+                out.port()
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::q8_dequantize;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn q8_port_is_the_f32_op_through_the_row_codec() {
+        let c = 64;
+        let rows = 3;
+        let f32_op = AiLayerNormOp::try_new(c).unwrap();
+        let q8_op = AiLayerNormOp::with_out_port(c, PortType::PtfU8).unwrap();
+        assert_eq!(q8_op.out_port(), PortType::PtfU8);
+        assert_eq!((q8_op.out_side_len(), q8_op.out_code_rows()), (1, 1));
+        let mut rng = Rng::new(17);
+        let mut input = vec![0f32; rows * c];
+        rng.fill_normal(&mut input, 0.3, 1.5);
+        let mut want = vec![0f32; rows * c];
+        let mut s = f32_op.make_scratch();
+        f32_op.run_batch(rows, &input, &mut want, &mut s).unwrap();
+        let mut codes = vec![0u8; rows * c];
+        let mut side = vec![0f32; rows];
+        let mut s = q8_op.make_scratch();
+        q8_op
+            .run_batch_ports(
+                rows,
+                PortRef::F32(&input),
+                PortMut::PtfU8 { codes: &mut codes, side: &mut side },
+                &mut s,
+            )
+            .unwrap();
+        let mut want_codes = vec![0u8; c];
+        for r in 0..rows {
+            let want_scale =
+                crate::quant::q8_quantize_row_into(&want[r * c..(r + 1) * c], &mut want_codes);
+            assert_eq!(side[r].to_bits(), want_scale.to_bits(), "row {r} scale");
+            assert_eq!(&codes[r * c..(r + 1) * c], &want_codes[..], "row {r} codes");
+            // and the roundtrip error is within half a code step
+            for i in 0..c {
+                let back = q8_dequantize(codes[r * c + i], side[r]);
+                assert!(
+                    (back - want[r * c + i]).abs() <= side[r] * 0.5 + 1e-6,
+                    "row {r} ch {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn q8_port_refuses_the_f32_entry_point_and_log2_construction() {
+        let q8_op = AiLayerNormOp::with_out_port(8, PortType::PtfU8).unwrap();
+        let mut s = q8_op.make_scratch();
+        let err = q8_op.run_batch(1, &[0.0; 8], &mut [0.0; 8], &mut s).unwrap_err();
+        assert!(format!("{err:#}").contains("run_batch_ports"), "{err:#}");
+        let err = AiLayerNormOp::with_out_port(8, PortType::Log2Code5).unwrap_err();
+        assert!(format!("{err:#}").contains("no log2c5 out-port"), "{err:#}");
+        let op = AiLayerNormOp::with_out_port(8, PortType::F32).unwrap();
+        assert_eq!(op.out_port(), PortType::F32);
     }
 }

@@ -1,5 +1,5 @@
 //! Attention pipelines: S = QKᵀ-scaled logits → softmax → A·V, as
-//! [`PipelineOp`]s (DESIGN.md §3.2).
+//! [`PipelineOp`]s (DESIGN.md §3.2–3.3).
 //!
 //! This is the workload E2Softmax was co-designed for: the paper stores
 //! attention probabilities as log2-quantized codes precisely so the
@@ -7,32 +7,38 @@
 //! of full-width multiplies.  Three variants of the same datapath:
 //!
 //! * **`attention/L<len>xD<dim>`** (registered, fused) — [`AttnLogitsOp`]
-//!   then [`AttnE2AvOp`]: the A·V stage consumes the packed 5-bit shift
-//!   codes from [`E2Softmax::forward_batch_codes`] directly, dequantizing
-//!   each weight through the row's ≤ 32-entry shifted-constant table
-//!   inside the accumulation loop — the probability matrix is never
-//!   materialized at f32 width.
+//!   → [`AttnSoftmaxOp`] over a `Log2Code5`-ported [`E2SoftmaxOp`] →
+//!   [`AttnAvOp`] with a `Log2Code5` in-port: the softmax→A·V boundary is
+//!   staged as packed 5-bit shift codes plus each row's compact divider
+//!   header, and the A·V stage dequantizes each weight through the
+//!   expanded ≤ 32-entry shift table inside the accumulation loop — the
+//!   probability matrix is never materialized at f32 width.  The fusion
+//!   falls out of the typed port system (`ops/port.rs`) rather than a
+//!   bespoke fused op.
 //! * **`attention-unfused`** (unregistered comparator, built by
-//!   [`unfused_pipeline`]) — [`AttnLogitsOp`] → [`AttnSoftmaxOp`] over
-//!   [`E2SoftmaxOp`] → [`AttnAvOp`]: the same arithmetic staged through a
-//!   full f32 probability buffer.  Bit-identical to the fused pipeline
-//!   (pinned by `tests/op_conformance.rs`): both dequantize through the
-//!   same table and accumulate in the same order, the fused path just
-//!   never stores the f32s.
+//!   [`unfused_pipeline`]) — the same chain with an f32-ported
+//!   [`E2SoftmaxOp`] and the f32 [`AttnAvOp`]: identical arithmetic
+//!   staged through a full f32 probability buffer.  Bit-identical to the
+//!   fused pipeline (pinned by `tests/op_conformance.rs`): both
+//!   dequantize through the same table and accumulate in the same order,
+//!   the fused path just never stores the f32s.
 //! * **`attention-exact/L<len>xD<dim>`** (registered) — the same chain
 //!   over [`ExactSoftmaxOp`], the error/latency reference.
 //!
 //! One item is one attention head instance, packed `[Q | K | V]` with
 //! each of Q, K, V a row-major `L x D` block (item length `3·L·D`); the
-//! output item is the `L x D` context block `O = softmax(QKᵀ/√D)·V`.
+//! output item is the `L x D` context block `O = softmax(QKᵀ/√D)·V`.  On
+//! the code port, V rides the boundary as the sidecar's f32 passthrough
+//! tail — identical bytes either way; only the probability payload
+//! changes width.
 
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use super::port::{check_batch_ports, PortMut, PortRef, PortType};
 use super::{check_batch, E2SoftmaxOp, ExactSoftmaxOp, Op, OpScratch, OpSpec, PipelineOp};
-use crate::softmax::e2::quantize_logits_batch_into;
-use crate::softmax::{E2Scratch, E2Softmax, E2SoftmaxConfig, VAL_TABLE_LEN};
+use crate::softmax::e2::{expand_row_side, CODE_SIDE_LEN};
 
 /// The canonical spec of an attention-family pipeline:
 /// `<op>/L<len>xD<dim>`.
@@ -41,18 +47,28 @@ pub fn attention_spec(op: &str, l: usize, d: usize) -> OpSpec {
 }
 
 /// The fused pipeline behind the registered `attention/L<len>xD<dim>`
-/// spec: logits, then shift-accumulate A·V over E2Softmax log2 codes.
+/// spec: logits, softmax emitting the `Log2Code5` port, then
+/// shift-accumulate A·V consuming it — the probability matrix crosses
+/// the stage boundary at 1 byte per weight.
 pub fn fused_pipeline(l: usize, d: usize) -> Result<PipelineOp> {
     PipelineOp::try_new(
         attention_spec("attention", l, d),
-        vec![Arc::new(AttnLogitsOp::try_new(l, d)?), Arc::new(AttnE2AvOp::try_new(l, d)?)],
+        vec![
+            Arc::new(AttnLogitsOp::try_new(l, d)?),
+            Arc::new(AttnSoftmaxOp::try_new(
+                l,
+                d,
+                Arc::new(E2SoftmaxOp::with_out_port(l, PortType::Log2Code5)?),
+            )?),
+            Arc::new(AttnAvOp::with_in_port(l, d, PortType::Log2Code5)?),
+        ],
     )
 }
 
 /// The staged comparator (`attention-unfused`, not registered): the same
 /// E2Softmax arithmetic through a materialized f32 probability buffer.
 /// Bit-identical to [`fused_pipeline`]; exists so benches and tests can
-/// measure exactly what fusing buys.
+/// measure exactly what the code port buys.
 pub fn unfused_pipeline(l: usize, d: usize) -> Result<PipelineOp> {
     PipelineOp::try_new(
         attention_spec("attention-unfused", l, d),
@@ -149,13 +165,19 @@ impl Op for AttnLogitsOp {
     }
 }
 
-/// The staged softmax stage: applies any row softmax [`Op`] (item length
-/// `l`) to the `L x L` logit block of `[S | V]`, passing V through.
-/// Shape-preserving: `[S | V]` → `[P | V]`.
+/// The softmax stage: applies any row softmax [`Op`] (item length `l`)
+/// to the `L x L` logit block of `[S | V]`, passing V through.  The
+/// stage's out-port mirrors the inner op's: an f32 inner keeps the
+/// shape-preserving `[S | V]` → `[P | V]` contract; a `Log2Code5` inner
+/// emits the `L x L` probabilities as packed shift codes, with the `L`
+/// per-row divider headers and the untouched V block in the f32 sidecar.
 pub struct AttnSoftmaxOp {
     l: usize,
     d: usize,
     inner: Arc<dyn Op>,
+    /// Sidecar f32 the inner op emits per logit row (its per-item
+    /// `out_side_len`; 0 for an f32 inner).
+    side_per_row: usize,
 }
 
 /// Per-worker arena: the wrapped softmax op's own scratch.
@@ -164,8 +186,9 @@ struct SoftmaxScratch {
 }
 
 impl AttnSoftmaxOp {
-    /// Wrap `inner` (a shape-preserving row softmax of item length `l`)
-    /// as the softmax stage of an `L x D` attention pipeline.
+    /// Wrap `inner` (a row softmax of item length `l`, f32 or
+    /// `Log2Code5` out-port) as the softmax stage of an `L x D`
+    /// attention pipeline.
     pub fn try_new(l: usize, d: usize, inner: Arc<dyn Op>) -> Result<AttnSoftmaxOp> {
         ensure_shape("attn-softmax", l, d)?;
         anyhow::ensure!(
@@ -175,7 +198,28 @@ impl AttnSoftmaxOp {
             inner.item_len(),
             inner.out_len()
         );
-        Ok(AttnSoftmaxOp { l, d, inner })
+        anyhow::ensure!(
+            inner.in_port() == PortType::F32,
+            "attn-softmax: inner op '{}' wants a {} in-port, logits arrive as f32",
+            inner.name(),
+            inner.in_port()
+        );
+        anyhow::ensure!(
+            inner.out_port() != PortType::PtfU8,
+            "attn-softmax: inner op '{}' emits ptf-u8; attention consumes f32 or log2c5 \
+             probabilities",
+            inner.name()
+        );
+        if inner.out_port() == PortType::Log2Code5 {
+            anyhow::ensure!(
+                inner.out_code_rows() == 1,
+                "attn-softmax: inner op '{}' splits one row into {} code rows, need 1",
+                inner.name(),
+                inner.out_code_rows()
+            );
+        }
+        let side_per_row = inner.out_side_len();
+        Ok(AttnSoftmaxOp { l, d, inner, side_per_row })
     }
 }
 
@@ -192,6 +236,33 @@ impl Op for AttnSoftmaxOp {
         self.l * self.l + self.l * self.d
     }
 
+    fn out_len(&self) -> usize {
+        match self.inner.out_port() {
+            // shape-preserving [P | V]
+            PortType::F32 => self.item_len(),
+            // L x L probability codes; V moves to the sidecar tail
+            _ => self.l * self.l,
+        }
+    }
+
+    fn out_port(&self) -> PortType {
+        self.inner.out_port()
+    }
+
+    fn out_side_len(&self) -> usize {
+        match self.inner.out_port() {
+            PortType::F32 => 0,
+            _ => self.l * self.side_per_row + self.l * self.d,
+        }
+    }
+
+    fn out_code_rows(&self) -> usize {
+        match self.inner.out_port() {
+            PortType::F32 => 1,
+            _ => self.l,
+        }
+    }
+
     fn make_scratch(&self) -> OpScratch {
         Box::new(SoftmaxScratch { inner: self.inner.make_scratch() })
     }
@@ -203,6 +274,11 @@ impl Op for AttnSoftmaxOp {
         out: &mut [f32],
         scratch: &mut OpScratch,
     ) -> Result<()> {
+        anyhow::ensure!(
+            self.inner.out_port() == PortType::F32,
+            "attn-softmax over a {} inner must be driven through run_batch_ports",
+            self.inner.out_port()
+        );
         check_batch(self, rows, input, out)?;
         let s = scratch
             .downcast_mut::<SoftmaxScratch>()
@@ -216,21 +292,80 @@ impl Op for AttnSoftmaxOp {
         }
         Ok(())
     }
+
+    fn run_batch_ports(
+        &self,
+        rows: usize,
+        input: PortRef<'_>,
+        out: PortMut<'_>,
+        scratch: &mut OpScratch,
+    ) -> Result<()> {
+        check_batch_ports(self, rows, &input, &out)?;
+        match (input, out) {
+            (PortRef::F32(input), PortMut::F32(out)) => self.run_batch(rows, input, out, scratch),
+            (PortRef::F32(input), PortMut::Log2Code5 { codes, side }) => {
+                let s = scratch
+                    .downcast_mut::<SoftmaxScratch>()
+                    .context("attn-softmax handed a foreign scratch arena")?;
+                let area = self.item_len();
+                let ll = self.l * self.l;
+                let hdr = self.l * self.side_per_row;
+                for ((item, c_item), s_item) in input
+                    .chunks_exact(area)
+                    .zip(codes.chunks_exact_mut(ll))
+                    .zip(side.chunks_exact_mut(hdr + self.l * self.d))
+                {
+                    let (s_in, v_in) = item.split_at(ll);
+                    let (headers, v_out) = s_item.split_at_mut(hdr);
+                    self.inner.run_batch_ports(
+                        self.l,
+                        PortRef::F32(s_in),
+                        PortMut::Log2Code5 { codes: c_item, side: headers },
+                        &mut s.inner,
+                    )?;
+                    v_out.copy_from_slice(v_in);
+                }
+                Ok(())
+            }
+            (input, out) => anyhow::bail!(
+                "attn-softmax: no {} -> {} path",
+                input.port(),
+                out.port()
+            ),
+        }
+    }
 }
 
-/// The staged A·V stage: `[P | V]` → `O`, a plain f32 matmul
-/// `O[i] = Σ_j P[i,j]·V[j]`.  The j-then-d accumulation order is the
-/// contract [`AttnE2AvOp`] mirrors for bit-exactness.
+/// The A·V stage: probabilities × V → `O[i] = Σ_j P[i,j]·V[j]`, with the
+/// probabilities arriving on either port.  On f32 (`try_new`) the item
+/// is the staged `[P | V]` block and the stage is a plain matmul.  On
+/// `Log2Code5` ([`AttnAvOp::with_in_port`]) the item is the `L x L`
+/// packed shift codes, with divider headers and the V block in the
+/// sidecar: each weight dequantizes through the row's expanded shift
+/// table *inside* the accumulation loop — 1 byte read per weight — and
+/// the j-then-d accumulation order matches the f32 path exactly, so both
+/// ports produce bit-identical output.
 pub struct AttnAvOp {
     l: usize,
     d: usize,
+    in_port: PortType,
 }
 
 impl AttnAvOp {
-    /// Sequence length `l`, head dimension `d`.
+    /// Sequence length `l`, head dimension `d`, staged f32 `[P | V]`
+    /// in-port.
     pub fn try_new(l: usize, d: usize) -> Result<AttnAvOp> {
+        AttnAvOp::with_in_port(l, d, PortType::F32)
+    }
+
+    /// Construction with an explicit in-port (`F32` or `Log2Code5`).
+    pub fn with_in_port(l: usize, d: usize, port: PortType) -> Result<AttnAvOp> {
         ensure_shape("attn-av", l, d)?;
-        Ok(AttnAvOp { l, d })
+        anyhow::ensure!(
+            port != PortType::PtfU8,
+            "attn-av has no ptf-u8 in-port (attention probabilities are f32 or log2 codes)"
+        );
+        Ok(AttnAvOp { l, d, in_port: port })
     }
 }
 
@@ -244,11 +379,26 @@ impl Op for AttnAvOp {
     }
 
     fn item_len(&self) -> usize {
-        self.l * self.l + self.l * self.d
+        match self.in_port {
+            PortType::F32 => self.l * self.l + self.l * self.d,
+            // codes carry only the probability payload; V is sidecar
+            _ => self.l * self.l,
+        }
     }
 
     fn out_len(&self) -> usize {
         self.l * self.d
+    }
+
+    fn in_port(&self) -> PortType {
+        self.in_port
+    }
+
+    fn in_side_len(&self) -> usize {
+        match self.in_port {
+            PortType::F32 => 0,
+            _ => CODE_SIDE_LEN * self.l + self.l * self.d,
+        }
     }
 
     fn run_batch(
@@ -258,6 +408,11 @@ impl Op for AttnAvOp {
         out: &mut [f32],
         _scratch: &mut OpScratch,
     ) -> Result<()> {
+        anyhow::ensure!(
+            self.in_port == PortType::F32,
+            "attn-av with a {} in-port must be driven through run_batch_ports",
+            self.in_port
+        );
         check_batch(self, rows, input, out)?;
         for (item, out_item) in
             input.chunks_exact(self.item_len()).zip(out.chunks_exact_mut(self.out_len()))
@@ -274,103 +429,52 @@ impl Op for AttnAvOp {
         }
         Ok(())
     }
-}
 
-/// The fused softmax + A·V stage: `[S | V]` → `O` without ever storing
-/// the probability matrix as f32.  Each item's logit rows are quantized
-/// to the 8-bit code grid and run through
-/// [`E2Softmax::forward_batch_codes`], which yields one packed 5-bit
-/// total-shift code per attention weight plus a ≤ 32-entry per-row table
-/// of reachable divider outputs (shifted copies of one constant — the
-/// software model of the hardware shift network).  The accumulation
-/// `O[i] += table[code]·V[j]` then reads 1 byte per weight instead of 4,
-/// and is bit-identical to [`AttnAvOp`] over [`E2SoftmaxOp`] output
-/// because both paths dequantize through the same table in the same
-/// order.
-pub struct AttnE2AvOp {
-    l: usize,
-    d: usize,
-    sm: E2Softmax,
-}
-
-/// Per-worker arena: quantized logit codes, packed shift codes, per-row
-/// divider tables, and the E2Softmax kernel scratch.
-struct E2AvScratch {
-    q: Vec<i64>,
-    codes: Vec<u8>,
-    val: Vec<f32>,
-    e2: E2Scratch,
-}
-
-impl AttnE2AvOp {
-    /// Sequence length `l`, head dimension `d`, at the same default
-    /// E2Softmax datapath configuration the registered `e2softmax`
-    /// family serves.
-    pub fn try_new(l: usize, d: usize) -> Result<AttnE2AvOp> {
-        ensure_shape("attn-e2av", l, d)?;
-        Ok(AttnE2AvOp { l, d, sm: E2Softmax::new(E2SoftmaxConfig::default()) })
-    }
-}
-
-impl Op for AttnE2AvOp {
-    fn name(&self) -> &str {
-        "attn-e2av"
-    }
-
-    fn dim(&self) -> char {
-        'L'
-    }
-
-    fn item_len(&self) -> usize {
-        self.l * self.l + self.l * self.d
-    }
-
-    fn out_len(&self) -> usize {
-        self.l * self.d
-    }
-
-    fn make_scratch(&self) -> OpScratch {
-        Box::new(E2AvScratch {
-            q: Vec::new(),
-            codes: Vec::new(),
-            val: Vec::new(),
-            e2: E2Scratch::default(),
-        })
-    }
-
-    fn run_batch(
+    fn run_batch_ports(
         &self,
         rows: usize,
-        input: &[f32],
-        out: &mut [f32],
+        input: PortRef<'_>,
+        out: PortMut<'_>,
         scratch: &mut OpScratch,
     ) -> Result<()> {
-        check_batch(self, rows, input, out)?;
-        let s = scratch
-            .downcast_mut::<E2AvScratch>()
-            .context("attn-e2av handed a foreign scratch arena")?;
-        for (item, out_item) in
-            input.chunks_exact(self.item_len()).zip(out.chunks_exact_mut(self.out_len()))
-        {
-            let (s_in, v) = item.split_at(self.l * self.l);
-            quantize_logits_batch_into(s_in, self.l, self.sm.cfg().e, &mut s.q);
-            self.sm.forward_batch_codes(&s.q, self.l, &mut s.codes, &mut s.val, &mut s.e2);
-            for ((code_row, val_row), o_row) in s
-                .codes
-                .chunks_exact(self.l)
-                .zip(s.val.chunks_exact(VAL_TABLE_LEN))
-                .zip(out_item.chunks_exact_mut(self.d))
-            {
-                o_row.fill(0.0);
-                for (&code, v_row) in code_row.iter().zip(v.chunks_exact(self.d)) {
-                    let pij = val_row[code as usize];
-                    for (o, &vv) in o_row.iter_mut().zip(v_row) {
-                        *o += pij * vv;
+        check_batch_ports(self, rows, &input, &out)?;
+        match (input, out) {
+            (PortRef::F32(input), PortMut::F32(out)) => self.run_batch(rows, input, out, scratch),
+            (PortRef::Log2Code5 { codes, side }, PortMut::F32(out)) => {
+                let ll = self.l * self.l;
+                let hdr = CODE_SIDE_LEN * self.l;
+                for ((c_item, s_item), out_item) in codes
+                    .chunks_exact(ll)
+                    .zip(side.chunks_exact(hdr + self.l * self.d))
+                    .zip(out.chunks_exact_mut(self.l * self.d))
+                {
+                    let (headers, v) = s_item.split_at(hdr);
+                    for ((code_row, h), o_row) in c_item
+                        .chunks_exact(self.l)
+                        .zip(headers.chunks_exact(CODE_SIDE_LEN))
+                        .zip(out_item.chunks_exact_mut(self.d))
+                    {
+                        // the software model of the hardware shift
+                        // network: one table expansion per row, then a
+                        // 1-byte indexed load per weight
+                        let val = expand_row_side(h);
+                        o_row.fill(0.0);
+                        for (&code, v_row) in code_row.iter().zip(v.chunks_exact(self.d)) {
+                            let pij = val[code as usize];
+                            for (o, &vv) in o_row.iter_mut().zip(v_row) {
+                                *o += pij * vv;
+                            }
+                        }
                     }
                 }
+                Ok(())
             }
+            (input, out) => anyhow::bail!(
+                "attn-av: no {} -> {} path",
+                input.port(),
+                out.port()
+            ),
         }
-        Ok(())
     }
 }
 
@@ -429,11 +533,44 @@ mod tests {
         assert_eq!(p.spec().to_string(), "attention/L49xD64");
         assert_eq!(p.item_len(), 3 * 49 * 64);
         assert_eq!(p.out_len(), 49 * 64);
-        assert_eq!(p.stages().len(), 2);
+        // logits -> softmax -> A·V, no adapter: the code boundary is
+        // consumed natively, so nothing dequantizes in between
+        assert_eq!(p.stages().len(), 3);
+        assert_eq!(p.boundary_ports(), vec![PortType::F32, PortType::Log2Code5]);
+        assert_eq!((p.in_port(), p.out_port()), (PortType::F32, PortType::F32));
         let u = unfused_pipeline(49, 64).unwrap();
         assert_eq!(u.stages().len(), 3);
+        assert_eq!(u.boundary_ports(), vec![PortType::F32, PortType::F32]);
         assert_eq!(u.item_len(), p.item_len());
         assert_eq!(u.out_len(), p.out_len());
+    }
+
+    #[test]
+    fn code_port_stages_advertise_the_quantized_shapes() {
+        let (l, d) = (8, 4);
+        let sm = AttnSoftmaxOp::try_new(
+            l,
+            d,
+            Arc::new(E2SoftmaxOp::with_out_port(l, PortType::Log2Code5).unwrap()),
+        )
+        .unwrap();
+        assert_eq!(sm.out_port(), PortType::Log2Code5);
+        assert_eq!(sm.out_len(), l * l);
+        assert_eq!(sm.out_side_len(), l * CODE_SIDE_LEN + l * d);
+        assert_eq!(sm.out_code_rows(), l);
+        let av = AttnAvOp::with_in_port(l, d, PortType::Log2Code5).unwrap();
+        assert_eq!(av.in_port(), PortType::Log2Code5);
+        assert_eq!(av.item_len(), l * l);
+        assert_eq!(av.in_side_len(), l * CODE_SIDE_LEN + l * d);
+        assert_eq!(av.out_len(), l * d);
+        // both refuse the untyped f32 entry point
+        let mut s = sm.make_scratch();
+        let area = l * l + l * d;
+        let err = sm.run_batch(1, &vec![0.0; area], &mut vec![0.0; area], &mut s).unwrap_err();
+        assert!(format!("{err:#}").contains("run_batch_ports"), "{err:#}");
+        let mut s = av.make_scratch();
+        let err = av.run_batch(1, &vec![0.0; l * l], &mut vec![0.0; l * d], &mut s).unwrap_err();
+        assert!(format!("{err:#}").contains("run_batch_ports"), "{err:#}");
     }
 
     #[test]
@@ -450,6 +587,12 @@ mod tests {
         assert!(err.contains("attn-av"), "{err}");
         // degenerate shapes die in the stage constructors
         assert!(AttnLogitsOp::try_new(0, 4).is_err());
-        assert!(AttnE2AvOp::try_new(4, 0).is_err());
+        assert!(AttnAvOp::with_in_port(4, 0, PortType::Log2Code5).is_err());
+        // port constraints too: no ptf-u8 anywhere in attention
+        assert!(AttnAvOp::with_in_port(4, 4, PortType::PtfU8).is_err());
+        let ptf_inner =
+            Arc::new(crate::ops::AiLayerNormOp::with_out_port(8, PortType::PtfU8).unwrap());
+        let err = format!("{:#}", AttnSoftmaxOp::try_new(8, 4, ptf_inner).unwrap_err());
+        assert!(err.contains("ptf-u8"), "{err}");
     }
 }

@@ -1,18 +1,24 @@
 //! The paper's E2Softmax as an [`Op`]: quantize-to-codes + the planar
 //! LUT-driven batch kernel, packaged behind the one operator API.
+//! With a `Log2Code5` out-port the op emits what the hardware stores —
+//! packed 5-bit total-shift codes plus the compact per-row divider
+//! header — instead of dequantized f32.
 
 use anyhow::{Context, Result};
 
+use super::port::{check_batch_ports, PortMut, PortRef, PortType};
 use super::{check_batch, Op, OpScratch};
-use crate::softmax::e2::{quantize_logits_batch_into, E2Scratch};
+use crate::softmax::e2::{quantize_logits_batch_into, E2Scratch, CODE_SIDE_LEN};
 use crate::softmax::{E2Softmax, E2SoftmaxConfig};
 
 /// Bit-exact E2Softmax over f32 logit rows of length `l` (spec
 /// `e2softmax/L<l>`): one pass of per-row-max quantization over the packed
-/// batch, then one `forward_batch_f32` kernel call.
+/// batch, then one `forward_batch_f32` (or, on the code port,
+/// `forward_batch_codes`) kernel call.
 pub struct E2SoftmaxOp {
     l: usize,
     sm: E2Softmax,
+    out_port: PortType,
 }
 
 /// Per-worker arena: the packed logit->code buffer plus the E2Softmax
@@ -23,7 +29,8 @@ struct Scratch {
 }
 
 impl E2SoftmaxOp {
-    /// Row length `l` at the default datapath configuration.
+    /// Row length `l` at the default datapath configuration, plain f32
+    /// out-port.
     pub fn try_new(l: usize) -> Result<E2SoftmaxOp> {
         E2SoftmaxOp::with_config(l, E2SoftmaxConfig::default())
     }
@@ -32,7 +39,22 @@ impl E2SoftmaxOp {
     /// counts); the serving registry uses `try_new`.
     pub fn with_config(l: usize, cfg: E2SoftmaxConfig) -> Result<E2SoftmaxOp> {
         anyhow::ensure!(l > 0, "e2softmax rows must be non-empty");
-        Ok(E2SoftmaxOp { l, sm: E2Softmax::new(cfg) })
+        Ok(E2SoftmaxOp { l, sm: E2Softmax::new(cfg), out_port: PortType::F32 })
+    }
+
+    /// Construction with an explicit out-port: `Log2Code5` makes the op
+    /// emit one packed shift code per element plus the
+    /// [`CODE_SIDE_LEN`]-f32 divider header per row (the paper's 5-bit
+    /// storage claim), for a downstream consumer that dequantizes —
+    /// bit-exactly — on its own side of the boundary.
+    pub fn with_out_port(l: usize, port: PortType) -> Result<E2SoftmaxOp> {
+        anyhow::ensure!(
+            port != PortType::PtfU8,
+            "e2softmax has no ptf-u8 out-port (its codes are log2 shifts, not affine u8)"
+        );
+        let mut op = E2SoftmaxOp::with_config(l, E2SoftmaxConfig::default())?;
+        op.out_port = port;
+        Ok(op)
     }
 }
 
@@ -49,6 +71,17 @@ impl Op for E2SoftmaxOp {
         self.l
     }
 
+    fn out_port(&self) -> PortType {
+        self.out_port
+    }
+
+    fn out_side_len(&self) -> usize {
+        match self.out_port {
+            PortType::Log2Code5 => CODE_SIDE_LEN,
+            _ => 0,
+        }
+    }
+
     fn make_scratch(&self) -> OpScratch {
         Box::new(Scratch { codes: Vec::with_capacity(self.l), e2: E2Scratch::default() })
     }
@@ -60,6 +93,11 @@ impl Op for E2SoftmaxOp {
         out: &mut [f32],
         scratch: &mut OpScratch,
     ) -> Result<()> {
+        anyhow::ensure!(
+            self.out_port == PortType::F32,
+            "e2softmax with a {} out-port must be driven through run_batch_ports",
+            self.out_port
+        );
         check_batch(self, rows, input, out)?;
         let s = scratch
             .downcast_mut::<Scratch>()
@@ -67,5 +105,85 @@ impl Op for E2SoftmaxOp {
         quantize_logits_batch_into(input, self.l, self.sm.cfg().e, &mut s.codes);
         self.sm.forward_batch_f32(&s.codes, self.l, out, &mut s.e2);
         Ok(())
+    }
+
+    fn run_batch_ports(
+        &self,
+        rows: usize,
+        input: PortRef<'_>,
+        out: PortMut<'_>,
+        scratch: &mut OpScratch,
+    ) -> Result<()> {
+        check_batch_ports(self, rows, &input, &out)?;
+        match (input, out) {
+            (PortRef::F32(input), PortMut::F32(out)) => self.run_batch(rows, input, out, scratch),
+            (PortRef::F32(input), PortMut::Log2Code5 { codes, side }) => {
+                let s = scratch
+                    .downcast_mut::<Scratch>()
+                    .context("e2softmax op handed a foreign scratch arena")?;
+                quantize_logits_batch_into(input, self.l, self.sm.cfg().e, &mut s.codes);
+                self.sm.forward_batch_codes(&s.codes, self.l, codes, side, &mut s.e2);
+                Ok(())
+            }
+            (input, out) => anyhow::bail!(
+                "e2softmax: no {} -> {} path",
+                input.port(),
+                out.port()
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::softmax::e2::expand_row_side;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn code_port_dequantizes_bitwise_to_the_f32_op() {
+        let l = 49;
+        let rows = 4;
+        let f32_op = E2SoftmaxOp::try_new(l).unwrap();
+        let code_op = E2SoftmaxOp::with_out_port(l, PortType::Log2Code5).unwrap();
+        assert_eq!(code_op.out_port(), PortType::Log2Code5);
+        assert_eq!(code_op.out_side_len(), CODE_SIDE_LEN);
+        let mut rng = Rng::new(9);
+        let mut input = vec![0f32; rows * l];
+        rng.fill_normal(&mut input, 0.0, 2.0);
+        let mut want = vec![0f32; rows * l];
+        let mut s = f32_op.make_scratch();
+        f32_op.run_batch(rows, &input, &mut want, &mut s).unwrap();
+        let mut codes = vec![0u8; rows * l];
+        let mut side = vec![0f32; rows * CODE_SIDE_LEN];
+        let mut s = code_op.make_scratch();
+        code_op
+            .run_batch_ports(
+                rows,
+                PortRef::F32(&input),
+                PortMut::Log2Code5 { codes: &mut codes, side: &mut side },
+                &mut s,
+            )
+            .unwrap();
+        for r in 0..rows {
+            let val = expand_row_side(&side[r * CODE_SIDE_LEN..(r + 1) * CODE_SIDE_LEN]);
+            for i in 0..l {
+                assert_eq!(val[codes[r * l + i] as usize], want[r * l + i], "row {r} elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn code_port_refuses_the_f32_entry_point_and_ptf_construction() {
+        let code_op = E2SoftmaxOp::with_out_port(8, PortType::Log2Code5).unwrap();
+        let mut s = code_op.make_scratch();
+        let err = code_op.run_batch(1, &[0.0; 8], &mut [0.0; 8], &mut s).unwrap_err();
+        assert!(format!("{err:#}").contains("run_batch_ports"), "{err:#}");
+        let err = E2SoftmaxOp::with_out_port(8, PortType::PtfU8).unwrap_err();
+        assert!(format!("{err:#}").contains("no ptf-u8 out-port"), "{err:#}");
+        // an explicit f32 out-port is the plain op
+        let op = E2SoftmaxOp::with_out_port(8, PortType::F32).unwrap();
+        assert_eq!(op.out_port(), PortType::F32);
+        assert_eq!(op.out_side_len(), 0);
     }
 }

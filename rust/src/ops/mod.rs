@@ -13,7 +13,13 @@
 //! * `make_scratch()` — an opaque per-worker scratch arena so hot ops
 //!   stay allocation-free at steady state without interior mutability;
 //! * `run_batch(rows, input, out, scratch)` — one call over a packed
-//!   planar batch, writing into caller buffers.
+//!   planar batch, writing into caller buffers;
+//! * `in_port()` / `out_port()` / `run_batch_ports(...)` — the typed
+//!   inter-stage port system ([`port`], DESIGN.md §3.3): an op can
+//!   declare that it emits or consumes a quantized format
+//!   ([`PortType::Log2Code5`], [`PortType::PtfU8`]) instead of f32, and
+//!   `PipelineOp` stages it at that width.  Everything defaults to
+//!   [`PortType::F32`], so single-stage ops are untouched.
 //!
 //! [`OpRegistry`] maps family names to fallible constructors, so a new
 //! variant (a ConSmax-style softmax, a fused GELU) is one trait impl plus
@@ -25,12 +31,15 @@
 //! Registered families: the paper pair (`e2softmax`, `ailayernorm`), the
 //! exact baselines (`softmax-exact`, `layernorm-exact`), the prior-work
 //! comparators from `softmax/baselines.rs` / `layernorm/baselines.rs`
-//! (`softermax`, `ibert-softmax`, `ibert-layernorm`), and the multi-stage
+//! (`softermax`, `ibert-softmax`, `ibert-layernorm`), the multi-stage
 //! attention pipelines (`attention`, `attention-exact` — [`PipelineOp`]s
-//! built in [`attention`], DESIGN.md §3.2) — every one servable side by
-//! side for accuracy/throughput comparison.  A shared conformance suite
-//! (`tests/op_conformance.rs`) pins each registered op bit-exact to its
-//! direct kernel.
+//! built in [`attention`], DESIGN.md §3.2; the fused `attention` chains
+//! softmax→A·V through the `Log2Code5` port), and `ailayernorm-ptf`
+//! (AILayerNorm staged through its `PtfU8` out-port plus the
+//! auto-inserted [`port::DequantOp`] adapter) — every one servable side
+//! by side for accuracy/throughput comparison.  A shared conformance
+//! suite (`tests/op_conformance.rs`) pins each registered op bit-exact
+//! to its direct kernel.
 //!
 //! ## Spec parsing
 //!
@@ -61,6 +70,7 @@ pub mod baselines;
 pub mod e2softmax;
 pub mod exact;
 pub mod pipeline;
+pub mod port;
 pub mod registry;
 pub mod spec;
 
@@ -71,6 +81,7 @@ pub use baselines::{IbertLayerNormOp, IbertSoftmaxOp, SoftermaxOp};
 pub use e2softmax::E2SoftmaxOp;
 pub use exact::{ExactLayerNormOp, ExactSoftmaxOp};
 pub use pipeline::PipelineOp;
+pub use port::{check_batch_ports, DequantOp, PortMut, PortRef, PortType, StageBuf};
 pub use registry::OpRegistry;
 pub use spec::OpSpec;
 
@@ -113,6 +124,50 @@ pub trait Op: Send + Sync {
         }
     }
 
+    /// Numeric format of one input item — the port the previous stage
+    /// (or the router edge, which only speaks f32) must produce.
+    /// Defaults to [`PortType::F32`], so single-stage ops are untouched
+    /// by the port system.
+    fn in_port(&self) -> PortType {
+        PortType::F32
+    }
+
+    /// Numeric format of one output item.  Defaults to
+    /// [`PortType::F32`].
+    fn out_port(&self) -> PortType {
+        PortType::F32
+    }
+
+    /// f32 sidecar elements accompanying one *input* item on a quantized
+    /// in-port (per-code-row dequantization headers, then any f32
+    /// passthrough tail).  Always 0 for an `F32` in-port.
+    fn in_side_len(&self) -> usize {
+        0
+    }
+
+    /// f32 sidecar elements accompanying one *output* item on a
+    /// quantized out-port.  Always 0 for an `F32` out-port.
+    fn out_side_len(&self) -> usize {
+        0
+    }
+
+    /// On a quantized out-port: how many dequantization groups ("code
+    /// rows") one item's codes split into.  The sidecar leads with one
+    /// header per code row ([`PortType::side_per_code_row`] f32 each),
+    /// optionally followed by an f32 passthrough tail.  Irrelevant for
+    /// `F32` (default 1).
+    fn out_code_rows(&self) -> usize {
+        1
+    }
+
+    /// Port type at each *internal* stage boundary, in execution order —
+    /// empty for single-stage ops.  Pipelines override so callers (the
+    /// CLI listing, benches, the conformance quantized-boundary guard)
+    /// can see where quantized staging happens without downcasting.
+    fn boundary_ports(&self) -> Vec<PortType> {
+        Vec::new()
+    }
+
     /// Create the per-worker scratch arena (stateless ops keep the
     /// default).
     fn make_scratch(&self) -> OpScratch {
@@ -122,7 +177,10 @@ pub trait Op: Send + Sync {
     /// Run `rows` items: `input.len() == rows * item_len()`, writing
     /// `rows * out_len()` f32s into `out`.  Hot-path implementations keep
     /// every temporary in `scratch` so steady-state execution is
-    /// allocation-free; baseline/comparator ops may allocate.
+    /// allocation-free; baseline/comparator ops may allocate.  A
+    /// `rows == 0` batch (empty slices) is a no-op success.  Ops with a
+    /// quantized port error here and are driven through
+    /// [`Op::run_batch_ports`] instead.
     fn run_batch(
         &self,
         rows: usize,
@@ -130,16 +188,42 @@ pub trait Op: Send + Sync {
         out: &mut [f32],
         scratch: &mut OpScratch,
     ) -> Result<()>;
+
+    /// Typed-port twin of [`Op::run_batch`]: the same batch contract,
+    /// with input and output tagged by format.  The default handles the
+    /// all-f32 case by delegating to `run_batch`; ops with a quantized
+    /// port override.
+    fn run_batch_ports(
+        &self,
+        rows: usize,
+        input: PortRef<'_>,
+        out: PortMut<'_>,
+        scratch: &mut OpScratch,
+    ) -> Result<()> {
+        match (input, out) {
+            (PortRef::F32(input), PortMut::F32(out)) => self.run_batch(rows, input, out, scratch),
+            (input, out) => anyhow::bail!(
+                "op '{}': no {} -> {} path (op declares {} -> {}; override run_batch_ports)",
+                self.name(),
+                input.port(),
+                out.port(),
+                self.in_port(),
+                self.out_port()
+            ),
+        }
+    }
 }
 
 /// Shared shape validation every `run_batch` implementation starts with
 /// (public so operators registered from outside this crate can enforce
 /// the same contract; `OpBackend` also checks it at the serving
 /// boundary, so a forgetful impl still cannot read a mis-sized buffer).
+/// `rows == 0` with empty slices is valid — an empty batch is a no-op
+/// success for every op, not an error (pinned per registered op by the
+/// conformance suite).
 pub fn check_batch(op: &dyn Op, rows: usize, input: &[f32], out: &[f32]) -> Result<()> {
     let item = op.item_len();
     let out_item = op.out_len();
-    anyhow::ensure!(rows > 0, "op '{}': batch must contain at least one row", op.name());
     anyhow::ensure!(
         input.len() == rows * item,
         "op '{}': input len {} != {rows} rows * {item}",

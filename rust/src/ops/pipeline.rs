@@ -3,24 +3,39 @@
 //! A pipeline is itself an `Op`, so everything that serves single ops —
 //! `OpBackend`, the `ServiceRouter`, `sole serve --ops`, the benches —
 //! serves multi-stage computations with zero extra plumbing.  Stage
-//! boundaries are staged through two ping-pong buffers living in the
-//! pipeline's scratch arena (resize-based reuse, so capacity ratchets to
-//! the largest batch seen and steady-state execution allocates nothing),
-//! and each stage keeps its own scratch inside the same arena.  Stage
-//! shapes are validated once at construction: stage `i`'s `out_len` must
-//! equal stage `i+1`'s `item_len`.
+//! boundaries are staged through two ping-pong [`StageBuf`]s living in
+//! the pipeline's scratch arena: each stage writes the format its
+//! out-port declares (f32, packed `Log2Code5` shift codes, `PtfU8`
+//! codes — DESIGN.md §3.3), and the buffer is retagged in place so
+//! capacity ratchets to the largest batch seen and steady-state
+//! execution allocates nothing.  Each stage keeps its own scratch inside
+//! the same arena.
+//!
+//! Boundaries are validated once at construction, exactly like shape:
+//! stage `i`'s `out_len`/`out_side_len` must equal stage `i+1`'s
+//! `item_len`/`in_side_len`, and the ports must agree.  The one repair
+//! the constructor performs itself: where a quantized producer meets an
+//! f32 consumer (including the pipeline's own f32 output edge), it
+//! auto-inserts an explicit [`DequantOp`] adapter — a real, named,
+//! benchable stage, not hidden glue.  No other conversion is implied; a
+//! quantize step is always an op the caller chose.  Both outer edges of
+//! a pipeline are f32: that is what the router and `OpBackend` speak.
 //!
 //! The in-tree pipelines are the attention datapaths built in
-//! [`super::attention`] (`attention/L<len>xD<dim>`, DESIGN.md §3.2).
+//! [`super::attention`] (`attention/L<len>xD<dim>`, DESIGN.md §3.2) and
+//! the `ailayernorm-ptf` chain, whose quantized tail exists purely so
+//! the adapter path is served and benched.
 
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use super::port::{DequantOp, PortMut, PortRef, PortType, StageBuf};
 use super::{check_batch, Op, OpScratch, OpSpec};
 
 /// A chain of [`Op`] stages executed as one op: the output batch of
-/// stage `i` is the input batch of stage `i+1`.
+/// stage `i` is the input batch of stage `i+1`, staged at whatever port
+/// the boundary declares.
 pub struct PipelineOp {
     spec: OpSpec,
     stages: Vec<Arc<dyn Op>>,
@@ -30,32 +45,88 @@ pub struct PipelineOp {
 /// staging buffers for the intermediate batches.
 struct Scratch {
     stages: Vec<OpScratch>,
-    a: Vec<f32>,
-    b: Vec<f32>,
+    a: StageBuf,
+    b: StageBuf,
 }
 
 impl PipelineOp {
     /// Chain `stages` under the canonical `spec` (the spec is what the
-    /// registry advertises; `spec.op` is the pipeline's name).  Errors if
-    /// the chain is empty or any stage boundary disagrees on item shape.
+    /// registry advertises; `spec.op` is the pipeline's name).  Errors
+    /// if the chain is empty, the entry stage is not f32, any boundary
+    /// disagrees on item shape or sidecar length, or a boundary mixes
+    /// formats in a way no dequant adapter repairs.  Where a quantized
+    /// out-port meets an f32 in-port (or the final f32 output edge), the
+    /// matching [`DequantOp`] is inserted as an explicit stage.
     pub fn try_new(spec: OpSpec, stages: Vec<Arc<dyn Op>>) -> Result<PipelineOp> {
         anyhow::ensure!(!stages.is_empty(), "pipeline '{spec}' needs at least one stage");
-        for pair in stages.windows(2) {
-            anyhow::ensure!(
-                pair[0].out_len() == pair[1].item_len(),
-                "pipeline '{spec}': stage '{}' outputs {} f32/item but stage '{}' expects {}",
-                pair[0].name(),
-                pair[0].out_len(),
-                pair[1].name(),
-                pair[1].item_len()
-            );
+        anyhow::ensure!(
+            stages[0].in_port() == PortType::F32,
+            "pipeline '{spec}': entry stage '{}' wants a {} in-port; router-facing edges are f32",
+            stages[0].name(),
+            stages[0].in_port()
+        );
+        let mut chain: Vec<Arc<dyn Op>> = Vec::with_capacity(stages.len() + 1);
+        for stage in stages {
+            if let Some(prev) = chain.last() {
+                if prev.out_port() != stage.in_port() {
+                    anyhow::ensure!(
+                        stage.in_port() == PortType::F32,
+                        "pipeline '{spec}': no adapter from {} stage '{}' to {} stage '{}' — \
+                         only dequant-to-f32 boundaries auto-insert",
+                        prev.out_port(),
+                        prev.name(),
+                        stage.in_port(),
+                        stage.name()
+                    );
+                    let adapter = DequantOp::for_producer(prev.as_ref())
+                        .with_context(|| format!("pipeline '{spec}'"))?;
+                    chain.push(Arc::new(adapter));
+                }
+                let prev = chain.last().unwrap();
+                anyhow::ensure!(
+                    prev.out_len() == stage.item_len(),
+                    "pipeline '{spec}': stage '{}' outputs {} f32/item but stage '{}' expects {}",
+                    prev.name(),
+                    prev.out_len(),
+                    stage.name(),
+                    stage.item_len()
+                );
+                anyhow::ensure!(
+                    prev.out_side_len() == stage.in_side_len(),
+                    "pipeline '{spec}': stage '{}' emits {} sidecar f32/item but stage '{}' \
+                     expects {}",
+                    prev.name(),
+                    prev.out_side_len(),
+                    stage.name(),
+                    stage.in_side_len()
+                );
+            }
+            chain.push(stage);
         }
-        Ok(PipelineOp { spec, stages })
+        if chain.last().unwrap().out_port() != PortType::F32 {
+            let tail = DequantOp::for_producer(chain.last().unwrap().as_ref())
+                .with_context(|| format!("pipeline '{spec}'"))?;
+            chain.push(Arc::new(tail));
+        }
+        Ok(PipelineOp { spec, stages: chain })
     }
 
-    /// The chained stages, in execution order.
+    /// The chained stages, in execution order — auto-inserted dequant
+    /// adapters included.
     pub fn stages(&self) -> &[Arc<dyn Op>] {
         &self.stages
+    }
+
+    /// Bytes one item occupies in the staging buffer at each internal
+    /// boundary, in execution order (length `stages() - 1`): code bytes
+    /// at the port's width plus the f32 sidecar.  This is the number the
+    /// paper's storage claim lives in — `bench_kernels --json` reports
+    /// it per pipeline as `staging_bytes_per_item`.
+    pub fn staging_bytes_per_item(&self) -> Vec<usize> {
+        self.stages[..self.stages.len() - 1]
+            .iter()
+            .map(|s| s.out_port().bytes_per_elem() * s.out_len() + 4 * s.out_side_len())
+            .collect()
     }
 }
 
@@ -80,11 +151,15 @@ impl Op for PipelineOp {
         self.spec.clone()
     }
 
+    fn boundary_ports(&self) -> Vec<PortType> {
+        self.stages[..self.stages.len() - 1].iter().map(|s| s.out_port()).collect()
+    }
+
     fn make_scratch(&self) -> OpScratch {
         Box::new(Scratch {
             stages: self.stages.iter().map(|s| s.make_scratch()).collect(),
-            a: Vec::new(),
-            b: Vec::new(),
+            a: StageBuf::default(),
+            b: StageBuf::default(),
         })
     }
 
@@ -110,41 +185,134 @@ impl Op for PipelineOp {
         let last = self.stages.len() - 1;
         // ping-pong through a/b: stage i reads the buffer stage i-1 wrote
         // (or `input` for stage 0), and writes the other buffer (or `out`
-        // for the last stage).  Plain resize (no clear) so a warm buffer
-        // is not re-zeroed every batch: the `Op` contract requires each
-        // stage to write every one of its `rows * out_len()` output f32s,
-        // so stale content from a previous batch is never observable
-        // (pinned per registered pipeline by the scratch-reuse
-        // determinism conformance test).
+        // for the last stage) at stage i's declared out-port.  `prepare`
+        // resizes without clearing, so a warm buffer is not re-zeroed
+        // every batch: the `Op` contract requires each stage to write
+        // every code and sidecar f32 of its output, so stale content from
+        // a previous batch — even one staged at a different format — is
+        // never observable (pinned per registered pipeline by the
+        // scratch-reuse determinism conformance test).
         let mut src_is_a = false;
         for (i, stage) in self.stages.iter().enumerate() {
             let sc = &mut scr[i];
             let result = if i == last {
-                let src: &[f32] = if i == 0 {
-                    input
+                let src = if i == 0 {
+                    PortRef::F32(input)
                 } else if src_is_a {
-                    &a[..]
+                    a.as_port_ref()
                 } else {
-                    &b[..]
+                    b.as_port_ref()
                 };
-                stage.run_batch(rows, src, out, sc)
-            } else if i == 0 {
-                a.resize(rows * stage.out_len(), 0.0);
-                src_is_a = true;
-                stage.run_batch(rows, input, &mut a[..], sc)
-            } else if src_is_a {
-                b.resize(rows * stage.out_len(), 0.0);
-                src_is_a = false;
-                stage.run_batch(rows, &a[..], &mut b[..], sc)
+                stage.run_batch_ports(rows, src, PortMut::F32(out), sc)
             } else {
-                a.resize(rows * stage.out_len(), 0.0);
-                src_is_a = true;
-                stage.run_batch(rows, &b[..], &mut a[..], sc)
+                let elems = rows * stage.out_len();
+                let side = rows * stage.out_side_len();
+                let (src, dst) = if i == 0 {
+                    src_is_a = true;
+                    (PortRef::F32(input), a.prepare(stage.out_port(), elems, side))
+                } else if src_is_a {
+                    src_is_a = false;
+                    (a.as_port_ref(), b.prepare(stage.out_port(), elems, side))
+                } else {
+                    src_is_a = true;
+                    (b.as_port_ref(), a.prepare(stage.out_port(), elems, side))
+                };
+                stage.run_batch_ports(rows, src, dst, sc)
             };
             result.with_context(|| {
                 format!("pipeline '{}' stage {} ('{}')", self.spec, i, stage.name())
             })?;
         }
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::E2SoftmaxOp;
+    use crate::util::rng::Rng;
+
+    fn spec(text: &str) -> OpSpec {
+        OpSpec::parse(text).unwrap()
+    }
+
+    fn code_softmax(l: usize) -> Arc<dyn Op> {
+        Arc::new(E2SoftmaxOp::with_out_port(l, PortType::Log2Code5).unwrap())
+    }
+
+    #[test]
+    fn quantized_tail_gets_an_explicit_dequant_adapter() {
+        let l = 8;
+        let p = PipelineOp::try_new(spec("e2softmax/L8"), vec![code_softmax(l)]).unwrap();
+        assert_eq!(p.stages().len(), 2, "adapter must appear as a real stage");
+        assert_eq!(p.stages()[1].name(), "dequant-log2c5");
+        assert_eq!(p.boundary_ports(), vec![PortType::Log2Code5]);
+        // 1 byte/code + the 2-f32 header, vs 4 bytes/f32 staged
+        assert_eq!(p.staging_bytes_per_item(), vec![l + 4 * 2]);
+        // and the staged result is bit-identical to the plain f32 op
+        let plain = E2SoftmaxOp::try_new(l).unwrap();
+        let mut rng = Rng::new(0x9E2);
+        let mut input = vec![0f32; 5 * l];
+        rng.fill_normal(&mut input, 0.0, 2.0);
+        let (mut got, mut want) = (vec![0f32; 5 * l], vec![0f32; 5 * l]);
+        let mut sp = p.make_scratch();
+        p.run_batch(5, &input, &mut got, &mut sp).unwrap();
+        let mut ss = plain.make_scratch();
+        plain.run_batch(5, &input, &mut want, &mut ss).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn quantized_entry_and_unadaptable_boundaries_are_rejected() {
+        let consumer: Arc<dyn Op> =
+            Arc::new(DequantOp::for_producer(code_softmax(8).as_ref()).unwrap());
+        let err = format!(
+            "{:#}",
+            PipelineOp::try_new(spec("e2softmax/L8"), vec![consumer.clone()]).unwrap_err()
+        );
+        assert!(err.contains("router-facing edges are f32"), "{err}");
+        // f32 producer into a log2c5 consumer: nothing auto-inserts a
+        // quantize step
+        let f32_softmax: Arc<dyn Op> = Arc::new(E2SoftmaxOp::try_new(8).unwrap());
+        let err = format!(
+            "{:#}",
+            PipelineOp::try_new(spec("e2softmax/L8"), vec![f32_softmax, consumer]).unwrap_err()
+        );
+        assert!(err.contains("only dequant-to-f32 boundaries auto-insert"), "{err}");
+        assert!(PipelineOp::try_new(spec("e2softmax/L8"), vec![]).is_err());
+    }
+
+    #[test]
+    fn empty_batches_are_a_no_op_success() {
+        let p = PipelineOp::try_new(spec("e2softmax/L8"), vec![code_softmax(8)]).unwrap();
+        let mut s = p.make_scratch();
+        p.run_batch(0, &[], &mut [], &mut s).unwrap();
+    }
+
+    #[test]
+    fn foreign_scratch_arena_is_rejected() {
+        let p = PipelineOp::try_new(spec("e2softmax/L8"), vec![code_softmax(8)]).unwrap();
+        let mut wrong: OpScratch = Box::new(());
+        let err =
+            format!("{:#}", p.run_batch(1, &[0.0; 8], &mut [0.0; 8], &mut wrong).unwrap_err());
+        assert!(err.contains("foreign scratch arena"), "{err}");
+    }
+
+    #[test]
+    fn mismatched_stage_slot_count_is_rejected() {
+        // same Scratch type, wrong geometry: a 1-stage pipeline's arena
+        // handed to the adapted 2-stage one
+        let two = PipelineOp::try_new(spec("e2softmax/L8"), vec![code_softmax(8)]).unwrap();
+        let one = PipelineOp::try_new(
+            spec("e2softmax/L8"),
+            vec![Arc::new(E2SoftmaxOp::try_new(8).unwrap()) as Arc<dyn Op>],
+        )
+        .unwrap();
+        assert_eq!((two.stages().len(), one.stages().len()), (2, 1));
+        let mut arena = one.make_scratch();
+        let err =
+            format!("{:#}", two.run_batch(1, &[0.0; 8], &mut [0.0; 8], &mut arena).unwrap_err());
+        assert!(err.contains("1 stage slots, expected 2"), "{err}");
     }
 }

@@ -1,0 +1,662 @@
+//! Typed inter-stage ports: the numeric *format* flowing between pipeline
+//! stages, not just the shape.
+//!
+//! SOLE's second headline claim is low bit-width **storage** — E2Softmax
+//! emits 5-bit log2 shift codes, AILayerNorm's PTF stage emits u8 codes —
+//! yet an all-f32 staging arena would dequantize, re-materialize f32 and
+//! re-quantize at every stage boundary, paying 4x the memory traffic the
+//! paper's datapath pays.  A [`PortType`] names what one item actually
+//! looks like on the wire between two stages; [`PortRef`]/[`PortMut`] are
+//! the tagged views a stage reads/writes; [`StageBuf`] is the staging
+//! buffer `PipelineOp`'s ping-pong arena carries instead of `Vec<f32>`.
+//!
+//! Quantized ports carry two planes per batch:
+//!
+//! * **codes** — one `u8` per payload element (`Op::out_len` elements per
+//!   item).  `Log2Code5` stores the 5-bit total-shift code of E2Softmax;
+//!   `PtfU8` stores an 8-bit affine code around `DEFAULT_ZP`.
+//! * **side** — `Op::out_side_len` f32 per item: one small dequantization
+//!   header per *code row* (`Op::out_code_rows` rows per item —
+//!   `[c, base_shift]` for `Log2Code5`, one row scale for `PtfU8`),
+//!   optionally followed by an f32 passthrough tail for payload the
+//!   format does not touch (e.g. the V block riding through attention's
+//!   softmax stage).
+//!
+//! Boundaries that genuinely mix formats are bridged by [`DequantOp`], an
+//! explicit adapter stage `PipelineOp::try_new` auto-inserts (and the
+//! registry can serve/bench, e.g. `ailayernorm-ptf`): quantized ports are
+//! never silently widened — the adapter shows up in `stages()`, the CLI
+//! listing and the bench tables.  See DESIGN.md §3.3.
+
+use anyhow::Result;
+
+use super::{Op, OpScratch};
+use crate::quant::q8_dequantize;
+use crate::softmax::e2::{expand_row_side, CODE_SIDE_LEN};
+
+/// Numeric format of one item on a stage boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PortType {
+    /// Plain f32 payload, 4 bytes/element, no sidecar.  The only format
+    /// router-facing edges speak.
+    #[default]
+    F32,
+    /// E2Softmax total-shift codes: one u8 (5 significant bits) per
+    /// element plus a [`CODE_SIDE_LEN`]-f32 divider header per code row,
+    /// expanded by consumers via
+    /// [`expand_row_side`](crate::softmax::e2::expand_row_side).
+    Log2Code5,
+    /// Affine u8 codes around `DEFAULT_ZP` with one f32 scale per code
+    /// row (the degenerate per-row PTF of `quant::q8_quantize_row_into`).
+    PtfU8,
+}
+
+impl PortType {
+    /// Short stable label used by the CLI listing and bench tables.
+    pub fn label(self) -> &'static str {
+        match self {
+            PortType::F32 => "f32",
+            PortType::Log2Code5 => "log2c5",
+            PortType::PtfU8 => "ptf-u8",
+        }
+    }
+
+    /// Staging bytes one *payload* element costs in this format
+    /// (sidecar f32s are accounted separately: 4 bytes each).
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            PortType::F32 => 4,
+            PortType::Log2Code5 | PortType::PtfU8 => 1,
+        }
+    }
+
+    /// Sidecar header f32s per code row (0 for `F32`).
+    pub fn side_per_code_row(self) -> usize {
+        match self {
+            PortType::F32 => 0,
+            PortType::Log2Code5 => CODE_SIDE_LEN,
+            PortType::PtfU8 => 1,
+        }
+    }
+}
+
+impl std::fmt::Display for PortType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Read-only tagged view of one staged batch.
+#[derive(Debug, Clone, Copy)]
+pub enum PortRef<'a> {
+    /// `rows * item_len` plain f32.
+    F32(&'a [f32]),
+    /// E2Softmax shift codes + f32 sidecar (headers, then passthrough).
+    Log2Code5 {
+        /// `rows * item_len` packed total-shift codes.
+        codes: &'a [u8],
+        /// `rows * in_side_len` f32: per-code-row divider headers
+        /// followed by the passthrough tail.
+        side: &'a [f32],
+    },
+    /// PTF u8 codes + f32 sidecar (row scales, then passthrough).
+    PtfU8 {
+        /// `rows * item_len` affine u8 codes.
+        codes: &'a [u8],
+        /// `rows * in_side_len` f32: per-code-row scales followed by the
+        /// passthrough tail.
+        side: &'a [f32],
+    },
+}
+
+impl PortRef<'_> {
+    /// The format this view is tagged with.
+    pub fn port(&self) -> PortType {
+        match self {
+            PortRef::F32(_) => PortType::F32,
+            PortRef::Log2Code5 { .. } => PortType::Log2Code5,
+            PortRef::PtfU8 { .. } => PortType::PtfU8,
+        }
+    }
+
+    /// Payload elements in the view (f32 count or code count).
+    pub fn elems(&self) -> usize {
+        match self {
+            PortRef::F32(v) => v.len(),
+            PortRef::Log2Code5 { codes, .. } | PortRef::PtfU8 { codes, .. } => codes.len(),
+        }
+    }
+
+    /// Sidecar f32 elements in the view (0 for `F32`).
+    pub fn side_elems(&self) -> usize {
+        match self {
+            PortRef::F32(_) => 0,
+            PortRef::Log2Code5 { side, .. } | PortRef::PtfU8 { side, .. } => side.len(),
+        }
+    }
+}
+
+/// Mutable tagged view of one staged batch (what a stage writes).
+#[derive(Debug)]
+pub enum PortMut<'a> {
+    /// `rows * out_len` plain f32.
+    F32(&'a mut [f32]),
+    /// E2Softmax shift codes + f32 sidecar (headers, then passthrough).
+    Log2Code5 {
+        /// `rows * out_len` packed total-shift codes.
+        codes: &'a mut [u8],
+        /// `rows * out_side_len` f32: per-code-row divider headers
+        /// followed by the passthrough tail.
+        side: &'a mut [f32],
+    },
+    /// PTF u8 codes + f32 sidecar (row scales, then passthrough).
+    PtfU8 {
+        /// `rows * out_len` affine u8 codes.
+        codes: &'a mut [u8],
+        /// `rows * out_side_len` f32: per-code-row scales followed by the
+        /// passthrough tail.
+        side: &'a mut [f32],
+    },
+}
+
+impl PortMut<'_> {
+    /// The format this view is tagged with.
+    pub fn port(&self) -> PortType {
+        match self {
+            PortMut::F32(_) => PortType::F32,
+            PortMut::Log2Code5 { .. } => PortType::Log2Code5,
+            PortMut::PtfU8 { .. } => PortType::PtfU8,
+        }
+    }
+
+    /// Payload elements in the view (f32 count or code count).
+    pub fn elems(&self) -> usize {
+        match self {
+            PortMut::F32(v) => v.len(),
+            PortMut::Log2Code5 { codes, .. } | PortMut::PtfU8 { codes, .. } => codes.len(),
+        }
+    }
+
+    /// Sidecar f32 elements in the view (0 for `F32`).
+    pub fn side_elems(&self) -> usize {
+        match self {
+            PortMut::F32(_) => 0,
+            PortMut::Log2Code5 { side, .. } | PortMut::PtfU8 { side, .. } => side.len(),
+        }
+    }
+}
+
+/// One tagged staging buffer of `PipelineOp`'s ping-pong arena.  All
+/// three planes live side by side so switching a buffer between formats
+/// across batches (or across differently-typed boundaries) reuses
+/// capacity instead of reallocating — the same resize-no-clear contract
+/// the f32 arena had, now per plane.
+#[derive(Debug, Default)]
+pub struct StageBuf {
+    port: PortType,
+    f32s: Vec<f32>,
+    codes: Vec<u8>,
+    side: Vec<f32>,
+}
+
+impl StageBuf {
+    /// Retag the buffer as `port` sized for `elems` payload elements and
+    /// `side_elems` sidecar f32, and return the writable view.  Plain
+    /// resize, no clear: the `Op` contract requires the producing stage
+    /// to write every element, so stale content from a previous batch is
+    /// never observable.
+    pub fn prepare(&mut self, port: PortType, elems: usize, side_elems: usize) -> PortMut<'_> {
+        self.port = port;
+        match port {
+            PortType::F32 => {
+                debug_assert_eq!(side_elems, 0, "f32 ports carry no sidecar");
+                self.f32s.resize(elems, 0.0);
+                PortMut::F32(&mut self.f32s)
+            }
+            PortType::Log2Code5 => {
+                self.codes.resize(elems, 0);
+                self.side.resize(side_elems, 0.0);
+                PortMut::Log2Code5 { codes: &mut self.codes, side: &mut self.side }
+            }
+            PortType::PtfU8 => {
+                self.codes.resize(elems, 0);
+                self.side.resize(side_elems, 0.0);
+                PortMut::PtfU8 { codes: &mut self.codes, side: &mut self.side }
+            }
+        }
+    }
+
+    /// Read-only view of whatever `prepare` last staged here.
+    pub fn as_port_ref(&self) -> PortRef<'_> {
+        match self.port {
+            PortType::F32 => PortRef::F32(&self.f32s),
+            PortType::Log2Code5 => PortRef::Log2Code5 { codes: &self.codes, side: &self.side },
+            PortType::PtfU8 => PortRef::PtfU8 { codes: &self.codes, side: &self.side },
+        }
+    }
+}
+
+/// Shared port/shape validation for `run_batch_ports` implementations —
+/// the typed twin of [`check_batch`](super::check_batch): the views must
+/// carry the declared formats and exactly `rows` items of payload and
+/// sidecar.
+pub fn check_batch_ports(
+    op: &dyn Op,
+    rows: usize,
+    input: &PortRef<'_>,
+    out: &PortMut<'_>,
+) -> Result<()> {
+    anyhow::ensure!(
+        input.port() == op.in_port(),
+        "op '{}': {} input handed to a {} in-port",
+        op.name(),
+        input.port(),
+        op.in_port()
+    );
+    anyhow::ensure!(
+        out.port() == op.out_port(),
+        "op '{}': {} output buffer handed to a {} out-port",
+        op.name(),
+        out.port(),
+        op.out_port()
+    );
+    let item = op.item_len();
+    anyhow::ensure!(
+        input.elems() == rows * item,
+        "op '{}': input len {} != {rows} rows * {item}",
+        op.name(),
+        input.elems()
+    );
+    let in_side = op.in_side_len();
+    anyhow::ensure!(
+        input.side_elems() == rows * in_side,
+        "op '{}': input sidecar len {} != {rows} rows * {in_side}",
+        op.name(),
+        input.side_elems()
+    );
+    let out_item = op.out_len();
+    anyhow::ensure!(
+        out.elems() == rows * out_item,
+        "op '{}': out len {} != {rows} rows * {out_item}",
+        op.name(),
+        out.elems()
+    );
+    let out_side = op.out_side_len();
+    anyhow::ensure!(
+        out.side_elems() == rows * out_side,
+        "op '{}': out sidecar len {} != {rows} rows * {out_side}",
+        op.name(),
+        out.side_elems()
+    );
+    Ok(())
+}
+
+/// Explicit dequantization adapter: widens one quantized port back to
+/// f32, code row by code row, copying any f32 passthrough tail through
+/// unchanged.  `PipelineOp::try_new` auto-inserts one wherever a
+/// boundary genuinely mixes formats (quantized producer, f32 consumer —
+/// including the pipeline's own f32 tail edge); it is an ordinary
+/// [`Op`], so adapters show up in `stages()`, the CLI listing and the
+/// bench tables rather than hiding inside the arena.
+pub struct DequantOp {
+    name: &'static str,
+    dim: char,
+    in_port: PortType,
+    /// u8 code elements per item (= producer `out_len`).
+    elems: usize,
+    /// Dequantization groups per item (= producer `out_code_rows`).
+    code_rows: usize,
+    /// Total sidecar f32 per item (= producer `out_side_len`).
+    side: usize,
+    /// f32 passthrough elements at the sidecar tail, appended verbatim
+    /// after the widened codes.
+    tail: usize,
+}
+
+impl DequantOp {
+    /// Build the adapter matching `producer`'s out-port exactly.  Errors
+    /// if the producer already emits f32 or declares an inconsistent
+    /// code-row/sidecar layout.
+    pub fn for_producer(producer: &dyn Op) -> Result<DequantOp> {
+        let port = producer.out_port();
+        let name = match port {
+            PortType::F32 => anyhow::bail!(
+                "dequant adapter: producer '{}' already emits f32",
+                producer.name()
+            ),
+            PortType::Log2Code5 => "dequant-log2c5",
+            PortType::PtfU8 => "dequant-ptf-u8",
+        };
+        let elems = producer.out_len();
+        let code_rows = producer.out_code_rows();
+        let side = producer.out_side_len();
+        let headers = code_rows * port.side_per_code_row();
+        anyhow::ensure!(
+            elems > 0 && code_rows > 0 && elems % code_rows == 0,
+            "dequant adapter: producer '{}' splits {elems} codes into {code_rows} rows",
+            producer.name()
+        );
+        anyhow::ensure!(
+            side >= headers,
+            "dequant adapter: producer '{}' sidecar {side} f32/item is smaller than its \
+             {code_rows} row headers ({headers} f32)",
+            producer.name()
+        );
+        Ok(DequantOp {
+            name,
+            dim: producer.dim(),
+            in_port: port,
+            elems,
+            code_rows,
+            side,
+            tail: side - headers,
+        })
+    }
+
+    fn row_len(&self) -> usize {
+        self.elems / self.code_rows
+    }
+}
+
+impl Op for DequantOp {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn dim(&self) -> char {
+        self.dim
+    }
+
+    fn item_len(&self) -> usize {
+        self.elems
+    }
+
+    fn out_len(&self) -> usize {
+        self.elems + self.tail
+    }
+
+    fn in_port(&self) -> PortType {
+        self.in_port
+    }
+
+    fn in_side_len(&self) -> usize {
+        self.side
+    }
+
+    fn run_batch(
+        &self,
+        _rows: usize,
+        _input: &[f32],
+        _out: &mut [f32],
+        _scratch: &mut OpScratch,
+    ) -> Result<()> {
+        anyhow::bail!(
+            "op '{}' consumes a {} in-port; drive it through run_batch_ports",
+            self.name,
+            self.in_port
+        )
+    }
+
+    fn run_batch_ports(
+        &self,
+        rows: usize,
+        input: PortRef<'_>,
+        out: PortMut<'_>,
+        _scratch: &mut OpScratch,
+    ) -> Result<()> {
+        check_batch_ports(self, rows, &input, &out)?;
+        let headers_len = self.code_rows * self.in_port.side_per_code_row();
+        let (codes, side, o) = match (input, out) {
+            (PortRef::Log2Code5 { codes, side }, PortMut::F32(o))
+            | (PortRef::PtfU8 { codes, side }, PortMut::F32(o)) => (codes, side, o),
+            (i, o) => anyhow::bail!(
+                "op '{}': no {} -> {} path",
+                self.name,
+                i.port(),
+                o.port()
+            ),
+        };
+        for ((c_item, s_item), o_item) in codes
+            .chunks_exact(self.elems)
+            .zip(side.chunks_exact(self.side))
+            .zip(o.chunks_exact_mut(self.out_len()))
+        {
+            let (headers, tail) = s_item.split_at(headers_len);
+            let (o_codes, o_tail) = o_item.split_at_mut(self.elems);
+            match self.in_port {
+                PortType::Log2Code5 => {
+                    for ((code_row, hdr), o_row) in c_item
+                        .chunks_exact(self.row_len())
+                        .zip(headers.chunks_exact(CODE_SIDE_LEN))
+                        .zip(o_codes.chunks_exact_mut(self.row_len()))
+                    {
+                        let val = expand_row_side(hdr);
+                        for (o, &c) in o_row.iter_mut().zip(code_row) {
+                            *o = val[c as usize];
+                        }
+                    }
+                }
+                PortType::PtfU8 => {
+                    for ((code_row, hdr), o_row) in c_item
+                        .chunks_exact(self.row_len())
+                        .zip(headers.chunks_exact(1))
+                        .zip(o_codes.chunks_exact_mut(self.row_len()))
+                    {
+                        let scale = hdr[0];
+                        for (o, &c) in o_row.iter_mut().zip(code_row) {
+                            *o = q8_dequantize(c, scale);
+                        }
+                    }
+                }
+                PortType::F32 => unreachable!("for_producer rejects f32 producers"),
+            }
+            o_tail.copy_from_slice(tail);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::E2SoftmaxOp;
+    use crate::quant::q8_quantize_row_into;
+    use crate::softmax::config::ALDIV_C0;
+
+    #[test]
+    fn port_labels_and_byte_costs_are_pinned() {
+        // the CLI listing, bench tables and DESIGN.md §3.3 all print these
+        assert_eq!(PortType::F32.label(), "f32");
+        assert_eq!(PortType::Log2Code5.label(), "log2c5");
+        assert_eq!(PortType::PtfU8.label(), "ptf-u8");
+        assert_eq!(PortType::F32.bytes_per_elem(), 4);
+        assert_eq!(PortType::Log2Code5.bytes_per_elem(), 1);
+        assert_eq!(PortType::PtfU8.bytes_per_elem(), 1);
+        assert_eq!(PortType::Log2Code5.side_per_code_row(), CODE_SIDE_LEN);
+        assert_eq!(PortType::PtfU8.side_per_code_row(), 1);
+    }
+
+    #[test]
+    fn stage_buf_retags_and_reuses_capacity_across_formats() {
+        let mut buf = StageBuf::default();
+        match buf.prepare(PortType::F32, 64, 0) {
+            PortMut::F32(v) => {
+                assert_eq!(v.len(), 64);
+                v.fill(1.5);
+            }
+            other => panic!("expected f32 view, got {}", other.port()),
+        }
+        let cap_f32 = buf.f32s.capacity();
+        match buf.prepare(PortType::Log2Code5, 32, 2 * CODE_SIDE_LEN) {
+            PortMut::Log2Code5 { codes, side } => {
+                assert_eq!(codes.len(), 32);
+                assert_eq!(side.len(), 2 * CODE_SIDE_LEN);
+            }
+            other => panic!("expected code view, got {}", other.port()),
+        }
+        assert_eq!(buf.as_port_ref().port(), PortType::Log2Code5);
+        // switching back to a smaller f32 batch must not shrink capacity
+        match buf.prepare(PortType::F32, 8, 0) {
+            PortMut::F32(v) => assert_eq!(v.len(), 8),
+            other => panic!("expected f32 view, got {}", other.port()),
+        }
+        assert_eq!(buf.f32s.capacity(), cap_f32);
+        assert_eq!(buf.as_port_ref().elems(), 8);
+        assert_eq!(buf.as_port_ref().side_elems(), 0);
+    }
+
+    #[test]
+    fn check_batch_ports_rejects_format_and_shape_mismatches() {
+        let op = E2SoftmaxOp::try_new(8).unwrap(); // f32 -> f32
+        let input = vec![0f32; 16];
+        let mut out = vec![0f32; 16];
+        let codes = vec![0u8; 16];
+        let side = vec![0f32; 4];
+        // wrong input format
+        let err = check_batch_ports(
+            &op,
+            2,
+            &PortRef::Log2Code5 { codes: &codes, side: &side },
+            &PortMut::F32(&mut out),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("log2c5 input handed to a f32 in-port"), "{err:#}");
+        // wrong payload length
+        let err =
+            check_batch_ports(&op, 3, &PortRef::F32(&input), &PortMut::F32(&mut out)).unwrap_err();
+        assert!(format!("{err:#}").contains("input len 16 != 3 rows * 8"), "{err:#}");
+        // correct views pass
+        check_batch_ports(&op, 2, &PortRef::F32(&input), &PortMut::F32(&mut out)).unwrap();
+    }
+
+    #[test]
+    fn for_producer_rejects_f32_producers() {
+        let op = E2SoftmaxOp::try_new(8).unwrap();
+        let err = DequantOp::for_producer(&op).unwrap_err();
+        assert!(format!("{err:#}").contains("already emits f32"), "{err:#}");
+    }
+
+    #[test]
+    fn dequant_log2c5_expands_headers_and_copies_the_tail() {
+        // a hand-built producer layout: 2 code rows of 4 codes + a 3-f32
+        // passthrough tail per item
+        struct FakeCodes;
+        impl Op for FakeCodes {
+            fn name(&self) -> &str {
+                "fake-codes"
+            }
+            fn dim(&self) -> char {
+                'L'
+            }
+            fn item_len(&self) -> usize {
+                8
+            }
+            fn out_port(&self) -> PortType {
+                PortType::Log2Code5
+            }
+            fn out_code_rows(&self) -> usize {
+                2
+            }
+            fn out_side_len(&self) -> usize {
+                2 * CODE_SIDE_LEN + 3
+            }
+            fn run_batch(
+                &self,
+                _rows: usize,
+                _input: &[f32],
+                _out: &mut [f32],
+                _scratch: &mut OpScratch,
+            ) -> Result<()> {
+                unreachable!("test producer is never run")
+            }
+        }
+        let ad = DequantOp::for_producer(&FakeCodes).unwrap();
+        assert_eq!(ad.name(), "dequant-log2c5");
+        assert_eq!((ad.item_len(), ad.out_len()), (8, 8 + 3));
+        assert_eq!((ad.in_port(), ad.out_port()), (PortType::Log2Code5, PortType::F32));
+        assert_eq!(ad.in_side_len(), 2 * CODE_SIDE_LEN + 3);
+
+        let codes: Vec<u8> = vec![0, 1, 2, 3, 4, 3, 2, 1];
+        // two divider headers with different base shifts, then the tail
+        let side = [
+            ALDIV_C0 as f32,
+            1.0,
+            ALDIV_C0 as f32,
+            3.0,
+            10.0,
+            11.0,
+            12.0,
+        ];
+        let mut out = vec![0f32; 11];
+        let mut scratch = ad.make_scratch();
+        ad.run_batch_ports(
+            1,
+            PortRef::Log2Code5 { codes: &codes, side: &side },
+            PortMut::F32(&mut out),
+            &mut scratch,
+        )
+        .unwrap();
+        let t0 = expand_row_side(&side[0..2]);
+        let t1 = expand_row_side(&side[2..4]);
+        let want = [t0[0], t0[1], t0[2], t0[3], t1[4], t1[3], t1[2], t1[1], 10.0, 11.0, 12.0];
+        assert_eq!(out, want);
+        // the f32 entry point refuses: codes cannot arrive as f32
+        let err = ad.run_batch(1, &[0.0; 8], &mut out[..8], &mut scratch).unwrap_err();
+        assert!(format!("{err:#}").contains("run_batch_ports"), "{err:#}");
+    }
+
+    #[test]
+    fn dequant_ptf_u8_round_trips_the_q8_row_codec() {
+        struct FakePtf;
+        impl Op for FakePtf {
+            fn name(&self) -> &str {
+                "fake-ptf"
+            }
+            fn dim(&self) -> char {
+                'C'
+            }
+            fn item_len(&self) -> usize {
+                6
+            }
+            fn out_port(&self) -> PortType {
+                PortType::PtfU8
+            }
+            fn out_side_len(&self) -> usize {
+                1
+            }
+            fn run_batch(
+                &self,
+                _rows: usize,
+                _input: &[f32],
+                _out: &mut [f32],
+                _scratch: &mut OpScratch,
+            ) -> Result<()> {
+                unreachable!("test producer is never run")
+            }
+        }
+        let ad = DequantOp::for_producer(&FakePtf).unwrap();
+        assert_eq!(ad.name(), "dequant-ptf-u8");
+        let rows = [[0.5f32, -1.25, 2.0, 0.0, -0.125, 1.0], [3.0, 0.25, -3.0, 1.5, 0.75, -0.5]];
+        let mut codes = vec![0u8; 12];
+        let mut side = vec![0f32; 2];
+        for (r, row) in rows.iter().enumerate() {
+            side[r] = q8_quantize_row_into(row, &mut codes[r * 6..(r + 1) * 6]);
+        }
+        let mut out = vec![0f32; 12];
+        let mut scratch = ad.make_scratch();
+        ad.run_batch_ports(
+            2,
+            PortRef::PtfU8 { codes: &codes, side: &side },
+            PortMut::F32(&mut out),
+            &mut scratch,
+        )
+        .unwrap();
+        for (r, row) in rows.iter().enumerate() {
+            for (i, &v) in row.iter().enumerate() {
+                let got = out[r * 6 + i];
+                assert_eq!(got, q8_dequantize(codes[r * 6 + i], side[r]), "row {r} elem {i}");
+                assert!((got - v).abs() <= side[r] * 0.5 + 1e-6, "row {r} elem {i}: {got} vs {v}");
+            }
+        }
+    }
+}

@@ -14,7 +14,7 @@ use anyhow::{Context, Result};
 
 use super::{
     attention, AiLayerNormOp, E2SoftmaxOp, ExactLayerNormOp, ExactSoftmaxOp, IbertLayerNormOp,
-    IbertSoftmaxOp, Op, OpSpec, SoftermaxOp,
+    IbertSoftmaxOp, Op, OpSpec, PipelineOp, PortType, SoftermaxOp,
 };
 
 /// Constructor from a validated spec (the registry checks the dimension
@@ -113,6 +113,16 @@ impl OpRegistry {
             "SOLE AILayerNorm (Algorithm 2): bit-exact integer layernorm, PTF-quantized",
             Box::new(|spec: &OpSpec| {
                 Ok(Arc::new(AiLayerNormOp::try_new(spec.len)?) as Arc<dyn Op>)
+            }),
+        );
+        add(
+            "ailayernorm-ptf",
+            &[('C', 768)],
+            "AILayerNorm staged through its ptf-u8 out-port (u8 codes + one f32 row scale), \
+             widened back to f32 by the auto-inserted dequant adapter stage",
+            Box::new(|spec: &OpSpec| {
+                let ln = AiLayerNormOp::with_out_port(spec.len, PortType::PtfU8)?;
+                Ok(Arc::new(PipelineOp::try_new(spec.clone(), vec![Arc::new(ln)])?) as Arc<dyn Op>)
             }),
         );
         add(
@@ -278,6 +288,7 @@ mod tests {
             r.names(),
             vec![
                 "ailayernorm",
+                "ailayernorm-ptf",
                 "attention",
                 "attention-exact",
                 "e2softmax",

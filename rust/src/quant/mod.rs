@@ -113,6 +113,39 @@ pub fn ptf_quantize_into(x: &[f32], cal: &PtfCalib, out: &mut Vec<u8>) {
     ptf_append_row(x, cal, out);
 }
 
+/// Row codec of the op layer's `PtfU8` staging port (`ops/port.rs`): the
+/// degenerate per-row PTF — `alpha = 0` on every channel, zero point
+/// [`DEFAULT_ZP`] — with the layer scale fitted per row (`max|x| / 127`),
+/// so one normalized row spans the full u8 code range.  Writes one code
+/// per element and returns the row scale for the port's f32 sidecar.
+/// Degenerate rows get scale 0 and every code at the zero point
+/// (dequantizing back to exact zero): all-zero and all-NaN rows leave the
+/// NaN-ignoring max at 0, a row containing ±Inf makes it non-finite.
+pub fn q8_quantize_row_into(x: &[f32], codes: &mut [u8]) -> f32 {
+    assert_eq!(x.len(), codes.len(), "codes buffer must match the row");
+    let m = x.iter().fold(0f32, |a, &v| a.max(v.abs()));
+    if m == 0.0 || !m.is_finite() {
+        codes.fill(DEFAULT_ZP as u8);
+        return 0.0;
+    }
+    let scale = m / 127.0;
+    // hoisted reciprocal, f64 rounding: same policy as `ptf_append_row`
+    let inv_s = 1.0 / scale as f64;
+    for (c, &v) in codes.iter_mut().zip(x) {
+        let q = (v as f64 * inv_s).round() as i64 + DEFAULT_ZP;
+        *c = q.clamp(0, 255) as u8;
+    }
+    scale
+}
+
+/// Dequantize one `PtfU8`-port code with its row scale — the exact
+/// inverse grid of [`q8_quantize_row_into`], shared by the dequant
+/// adapter and the conformance references so every consumer widens
+/// through the same arithmetic.
+pub fn q8_dequantize(code: u8, scale: f32) -> f32 {
+    (code as i64 - DEFAULT_ZP) as f32 * scale
+}
+
 /// Batch variant: `x` is a packed planar batch of rows, each
 /// `cal.alpha.len()` channels; row-for-row identical to
 /// `ptf_quantize_into` (the calibration is per-channel, so batching is
@@ -199,6 +232,33 @@ mod tests {
             ptf_quantize_into(&samples[r * channels..(r + 1) * channels], &cal, &mut row);
             assert_eq!(&batch[r * channels..(r + 1) * channels], &row[..], "row {r}");
         }
+    }
+
+    #[test]
+    fn q8_row_codec_roundtrip_error_bounded() {
+        let mut rng = Rng::new(8);
+        let x: Vec<f32> = (0..96).map(|_| (rng.normal() * 2.5) as f32).collect();
+        let mut codes = vec![0u8; 96];
+        let scale = q8_quantize_row_into(&x, &mut codes);
+        assert!(scale > 0.0);
+        // the row max must hit the edge of the code range exactly
+        let m = x.iter().fold(0f32, |a, &v| a.max(v.abs()));
+        assert_eq!(scale, m / 127.0);
+        for (i, (&v, &c)) in x.iter().zip(&codes).enumerate() {
+            let back = q8_dequantize(c, scale);
+            assert!((v - back).abs() <= scale * 0.5 + 1e-6, "elem {i}: {v} vs {back}");
+        }
+    }
+
+    #[test]
+    fn q8_zero_and_nonfinite_rows_collapse_to_the_zero_point() {
+        let mut codes = vec![1u8; 8];
+        assert_eq!(q8_quantize_row_into(&[0.0; 8], &mut codes), 0.0);
+        assert!(codes.iter().all(|&c| c as i64 == DEFAULT_ZP));
+        assert!(codes.iter().all(|&c| q8_dequantize(c, 0.0) == 0.0));
+        let mut codes = vec![1u8; 4];
+        assert_eq!(q8_quantize_row_into(&[f32::NAN, f32::INFINITY, 1.0, -2.0], &mut codes), 0.0);
+        assert!(codes.iter().all(|&c| c as i64 == DEFAULT_ZP));
     }
 
     #[test]

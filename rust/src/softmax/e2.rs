@@ -58,11 +58,51 @@ impl E2SoftmaxOut {
 }
 
 /// Stage 2 indexes `val[k + sub]` with k, sub in [0, 15]: 31 reachable
-/// entries, padded to 32.  This is also the per-row stride of the `val`
-/// buffer that [`E2Softmax::forward_batch_codes`] hands to fused
-/// consumers: one packed code per element plus one `VAL_TABLE_LEN`-entry
-/// dequantization table per row.
+/// entries, padded to 32.  Consumers of the `Log2Code5` port rebuild
+/// this table per row from the compact [`CODE_SIDE_LEN`]-f32 divider
+/// header via [`expand_row_side`].
 pub const VAL_TABLE_LEN: usize = 32;
+
+/// f32 sidecar elements per code row on the `Log2Code5` port
+/// (`ops/port.rs`): the row's divider header `[c, base_shift]`.  Both
+/// round-trip f32 exactly — the ALDivision constants are < 2^24 and
+/// `base_shift` is a small positive integer — so shipping the header
+/// instead of the expanded [`VAL_TABLE_LEN`]-entry table loses nothing
+/// and shrinks the sidecar 16x.
+pub const CODE_SIDE_LEN: usize = 2;
+
+/// Per-row ALDivision constants: every reachable divider output is
+/// `(c >> (ti + base_shift)) * 2^-23` — the whole dequantization table
+/// in two small integers.
+#[derive(Clone, Copy)]
+struct RowDivider {
+    c: i64,
+    base_shift: i64,
+}
+
+/// Expand `(c, base_shift)` into the full shift table.  Shared by the
+/// f32 row kernel and every `Log2Code5` consumer, so both sides of the
+/// port dequantize through literally the same code.
+fn expand_table(c: i64, base_shift: i64) -> [f32; VAL_TABLE_LEN] {
+    let inv = 1.0f32 / (1i64 << super::config::ALDIV_Q) as f32;
+    let mut val = [0f32; VAL_TABLE_LEN];
+    for (ti, v) in val.iter_mut().enumerate() {
+        let shift = ti as i64 + base_shift;
+        let q23 = if shift >= 64 { 0 } else { c >> shift };
+        *v = q23 as f32 * inv;
+    }
+    val
+}
+
+/// Expand one row's `Log2Code5` divider header (`[c, base_shift]`, see
+/// [`CODE_SIDE_LEN`]) into its [`VAL_TABLE_LEN`]-entry shift table:
+/// `table[code]` is bit-identical to the f32 probability
+/// [`E2Softmax::forward_batch_f32`] writes for an element with that
+/// total-shift code, because both paths share one expansion kernel.
+pub fn expand_row_side(side: &[f32]) -> [f32; VAL_TABLE_LEN] {
+    assert_eq!(side.len(), CODE_SIDE_LEN, "divider header must be {CODE_SIDE_LEN} f32");
+    expand_table(side[0] as i64, side[1] as i64)
+}
 
 /// Reusable scratch for the allocation-free kernels.  Buffers are
 /// `resize`d to the row at hand, so capacity grows to the largest row seen
@@ -161,49 +201,55 @@ impl E2Softmax {
         }
     }
 
-    /// Batch code path for fused consumers (DESIGN.md §3.2): instead of
+    /// Batch code path for fused consumers (DESIGN.md §3.3): instead of
     /// dequantizing to f32, expose what the hardware actually stores —
     /// one packed 5-bit *total shift* code per element (`k_i + sub_slice`,
     /// the full index into the row's divider table) plus each row's
-    /// ≤ 32-entry table of reachable ALDivision outputs (`val`, stride
-    /// [`VAL_TABLE_LEN`] per row; entries are shifted copies of one
-    /// per-row constant, so indexing it is the software model of a shift
-    /// network).  `val[row][code]` is bit-identical to the f32 value
-    /// `forward_batch_f32` would have written for that element — both
-    /// paths share one stage-1/val-table kernel — so a fused A·V consumer
-    /// that multiplies `val[code] * v` in the same order as an unfused
-    /// f32 matmul produces bit-identical output while never materializing
-    /// the probability matrix at full width.
+    /// compact divider header (`side`, [`CODE_SIDE_LEN`] f32 per row:
+    /// `[c, base_shift]`, both exact in f32).  Consumers rebuild the
+    /// ≤ 32-entry shift table with [`expand_row_side`]; `table[code]` is
+    /// bit-identical to the f32 value `forward_batch_f32` would have
+    /// written for that element — both paths share one
+    /// stage-1/expansion kernel — so a fused A·V consumer that multiplies
+    /// `table[code] * v` in the same order as an unfused f32 matmul
+    /// produces bit-identical output while never materializing the
+    /// probability matrix at full width.  This is the producing side of
+    /// the op layer's `Log2Code5` port (`ops/port.rs`); the caller sizes
+    /// both slices (one code per element, one header per row).
     pub fn forward_batch_codes(
         &self,
         q: &[i64],
         l: usize,
-        codes: &mut Vec<u8>,
-        val: &mut Vec<f32>,
+        codes: &mut [u8],
+        side: &mut [f32],
         scratch: &mut E2Scratch,
     ) {
         assert!(l > 0, "softmax rows must be non-empty");
         assert!(q.len() % l == 0, "packed batch len {} is not a multiple of {l}", q.len());
+        assert!(codes.len() == q.len(), "codes len {} != batch len {}", codes.len(), q.len());
         let rows = q.len() / l;
-        // plain resize (no clear): every element is overwritten below —
-        // codes by the exact-cover chunks_exact_mut, val by full-stride
-        // copies — so a warm buffer is not re-zeroed every call
-        codes.resize(q.len(), 0);
-        val.resize(rows * VAL_TABLE_LEN, 0.0);
-        for ((row, row_codes), row_val) in q
+        assert!(
+            side.len() == rows * CODE_SIDE_LEN,
+            "side len {} != {rows} rows * {CODE_SIDE_LEN}",
+            side.len()
+        );
+        for ((row, row_codes), row_side) in q
             .chunks_exact(l)
             .zip(codes.chunks_exact_mut(l))
-            .zip(val.chunks_exact_mut(VAL_TABLE_LEN))
+            .zip(side.chunks_exact_mut(CODE_SIDE_LEN))
         {
-            let v = self.row_codes(row, row_codes, scratch);
-            row_val.copy_from_slice(&v);
+            let div = self.row_codes(row, row_codes, scratch);
+            row_side[0] = div.c as f32;
+            row_side[1] = div.base_shift as f32;
         }
     }
 
     /// The planar LUT-driven row kernel behind both f32 entry points:
-    /// shared stage 1 + divider table, then the f32 dequant loop.
+    /// shared stage 1 + divider constants, table expansion, then the f32
+    /// dequant loop.
     fn row_kernel(&self, q: &[i64], out: &mut [f32], scratch: &mut E2Scratch) {
-        let (val, m_final) = self.row_prepare(q, scratch);
+        let (div, m_final) = self.row_prepare(q, scratch);
+        let val = expand_table(div.c, div.base_shift);
         let chunk = self.cfg.chunk.max(1);
         let t = &self.table;
         // Stage 2: the correction sub = k(m_slice - m_final) is constant
@@ -221,18 +267,14 @@ impl E2Softmax {
         }
     }
 
-    /// Code twin of `row_kernel`: identical stage 1 + divider table, but
-    /// stage 2 stores each element's total shift `k_i + sub_slice` (the
-    /// index `forward_batch_f32` would have dequantized through) instead
-    /// of the dequantized f32, and returns the row's table.
-    fn row_codes(
-        &self,
-        q: &[i64],
-        codes: &mut [u8],
-        scratch: &mut E2Scratch,
-    ) -> [f32; VAL_TABLE_LEN] {
+    /// Code twin of `row_kernel`: identical stage 1 + divider constants,
+    /// but stage 2 stores each element's total shift `k_i + sub_slice`
+    /// (the index `forward_batch_f32` would have dequantized through)
+    /// instead of the dequantized f32, and returns the row's divider —
+    /// the table stays implicit until a consumer expands it.
+    fn row_codes(&self, q: &[i64], codes: &mut [u8], scratch: &mut E2Scratch) -> RowDivider {
         debug_assert_eq!(q.len(), codes.len());
-        let (val, m_final) = self.row_prepare(q, scratch);
+        let (div, m_final) = self.row_prepare(q, scratch);
         let chunk = self.cfg.chunk.max(1);
         let t = &self.table;
         for ((ks, cs), &m_sl) in scratch
@@ -246,14 +288,14 @@ impl E2Softmax {
                 *c = (k as i64 + sub) as u8;
             }
         }
-        val
+        div
     }
 
-    /// Stage 1 + divider-table construction shared by `row_kernel` and
+    /// Stage 1 + divider-constant selection shared by `row_kernel` and
     /// `row_codes`: fills `scratch.k` (4-bit k codes) and
-    /// `scratch.slice_m` (per-slice running max), returns the per-row
-    /// table of reachable ALDivision outputs and the row's final max.
-    fn row_prepare(&self, q: &[i64], scratch: &mut E2Scratch) -> ([f32; VAL_TABLE_LEN], i64) {
+    /// `scratch.slice_m` (per-slice running max), returns the row's
+    /// divider constants and its final max.
+    fn row_prepare(&self, q: &[i64], scratch: &mut E2Scratch) -> (RowDivider, i64) {
         debug_assert!(!q.is_empty());
         let chunk = self.cfg.chunk.max(1);
         let t = &self.table;
@@ -263,12 +305,9 @@ impl E2Softmax {
         scratch.slice_m.resize(n.div_ceil(chunk), 0);
 
         // Stage 1: per-slice local max, then a branch-free element loop —
-        // one table load yields both k and the Q(.15) summand.  The row's
-        // max k is tracked so stage 2 builds only the reachable slice of
-        // the divider table (a 1-element row needs 1 entry, not 32).
+        // one table load yields both k and the Q(.15) summand.
         let mut sum: u64 = 0;
         let mut m_prev = i64::MIN;
-        let mut k_row_max: u8 = 0;
         for (sl, (ks, ms)) in q
             .chunks(chunk)
             .zip(scratch.k.chunks_mut(chunk).zip(scratch.slice_m.iter_mut()))
@@ -284,7 +323,6 @@ impl E2Softmax {
             for (ko, &qi) in ks.iter_mut().zip(sl) {
                 let (k, pow) = t.k_pow(qi - m_new);
                 sum += pow;
-                k_row_max = k_row_max.max(k);
                 *ko = k;
             }
             *ms = m_new;
@@ -296,30 +334,15 @@ impl E2Softmax {
         // the reduced sum — per-row constants, hoisted out of the element
         // loop (the hardware does the same: one LOD per row, Fig. 4).  The
         // total shift is k_i + sub + k_s + 1 with k_i, sub in [0, 15], so
-        // every reachable divider output fits a ≤ 31-entry per-row table.
+        // every reachable divider output fits the ≤ 32-entry table
+        // `expand_table` rebuilds from these two constants.
         let msb = crate::fixedpoint::leading_one(sum) as i64;
         let k_s = msb - SUM_FRAC as i64;
         let s1 = if msb >= 1 { (sum >> (msb - 1)) & 1 } else { 0 };
         let c = if s1 == 1 { super::config::ALDIV_C1 } else { super::config::ALDIV_C0 };
-        let inv = 1.0f32 / (1i64 << super::config::ALDIV_Q) as f32;
         // base_shift >= 1: the global max contributes 2^SUM_FRAC, so
         // msb >= SUM_FRAC and the divider never left-shifts here.
-        let base_shift = k_s + 1;
-        // build only the reachable entries: every stage-2 index is
-        // k_i + sub_s <= k_row_max + sub_max (both capped at K_MAX = 15)
-        let mut sub_max: i64 = 0;
-        for &m_sl in scratch.slice_m.iter() {
-            sub_max = sub_max.max(t.k(m_sl - m_final));
-        }
-        let val_len = (k_row_max as i64 + sub_max + 1) as usize;
-        debug_assert!(val_len <= VAL_TABLE_LEN);
-        let mut val = [0f32; VAL_TABLE_LEN];
-        for (ti, v) in val[..val_len].iter_mut().enumerate() {
-            let shift = ti as i64 + base_shift;
-            let q23 = if shift >= 64 { 0 } else { c >> shift };
-            *v = q23 as f32 * inv;
-        }
-        (val, m_final)
+        (RowDivider { c, base_shift: k_s + 1 }, m_final)
     }
 
     /// Quantize real logits to codes and run; convenience for the accuracy
@@ -642,7 +665,8 @@ mod tests {
 
     #[test]
     fn batch_codes_dequantize_bitwise_to_batch_f32() {
-        // the fused-consumer contract: val[row][code] must be the exact
+        // the Log2Code5 port contract: expanding the compact divider
+        // header and indexing with the packed code must recover the exact
         // f32 the dequantizing kernel writes, at every shape and chunk
         check("e2-codes", 60, 47, |rng| {
             let l = size(rng, 200);
@@ -653,13 +677,20 @@ mod tests {
             let mut out = vec![0f32; b * l];
             let mut scratch = E2Scratch::default();
             sm.forward_batch_f32(&q, l, &mut out, &mut scratch);
-            let mut packed = Vec::new();
-            let mut val = Vec::new();
-            sm.forward_batch_codes(&q, l, &mut packed, &mut val, &mut scratch);
-            assert_eq!(packed.len(), b * l);
-            assert_eq!(val.len(), b * VAL_TABLE_LEN);
+            let mut packed = vec![0u8; b * l];
+            let mut side = vec![0f32; b * CODE_SIDE_LEN];
+            sm.forward_batch_codes(&q, l, &mut packed, &mut side, &mut scratch);
             for r in 0..b {
-                let row_val = &val[r * VAL_TABLE_LEN..(r + 1) * VAL_TABLE_LEN];
+                let hdr = &side[r * CODE_SIDE_LEN..(r + 1) * CODE_SIDE_LEN];
+                // the header is exact in f32: c is one of the two 24-bit
+                // ALDivision constants, base_shift a small positive integer
+                let c = hdr[0] as i64;
+                assert!(
+                    c == crate::softmax::config::ALDIV_C0 || c == crate::softmax::config::ALDIV_C1,
+                    "row {r}: c {c}"
+                );
+                assert!(hdr[1] >= 1.0 && hdr[1].fract() == 0.0, "row {r}: base_shift {}", hdr[1]);
+                let row_val = expand_row_side(hdr);
                 for i in 0..l {
                     let code = packed[r * l + i] as usize;
                     assert!(code < VAL_TABLE_LEN, "code {code} out of table");
@@ -675,7 +706,7 @@ mod tests {
 
     #[test]
     fn batch_codes_scratch_reuse_is_deterministic() {
-        // the same scratch (and the same codes/val buffers) across calls
+        // the same scratch (and the same codes/side buffers) across calls
         // must not leak state between batches
         let l = 96;
         let mut rng = Rng::new(61);
@@ -683,13 +714,15 @@ mod tests {
         let q2 = codes(&mut rng, 5 * l);
         let sm = E2Softmax::new(E2SoftmaxConfig::default());
         let mut scratch = E2Scratch::default();
-        let (mut c1, mut v1) = (Vec::new(), Vec::new());
-        sm.forward_batch_codes(&q1, l, &mut c1, &mut v1, &mut scratch);
-        let (first_c, first_v) = (c1.clone(), v1.clone());
+        let mut c1 = vec![0u8; 5 * l];
+        let mut v1 = vec![0f32; 5 * CODE_SIDE_LEN];
+        sm.forward_batch_codes(&q1, l, &mut c1[..3 * l], &mut v1[..3 * CODE_SIDE_LEN], &mut scratch);
+        let first_c = c1[..3 * l].to_vec();
+        let first_v = v1[..3 * CODE_SIDE_LEN].to_vec();
         sm.forward_batch_codes(&q2, l, &mut c1, &mut v1, &mut scratch);
-        sm.forward_batch_codes(&q1, l, &mut c1, &mut v1, &mut scratch);
-        assert_eq!(c1, first_c);
-        assert_eq!(v1, first_v);
+        sm.forward_batch_codes(&q1, l, &mut c1[..3 * l], &mut v1[..3 * CODE_SIDE_LEN], &mut scratch);
+        assert_eq!(&c1[..3 * l], &first_c[..]);
+        assert_eq!(&v1[..3 * CODE_SIDE_LEN], &first_v[..]);
     }
 
     #[test]

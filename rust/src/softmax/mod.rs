@@ -9,8 +9,8 @@ pub mod log2exp;
 
 pub use aldivision::{aldivision, AldivOut};
 pub use e2::{
-    quantize_logits_batch_into, quantize_logits_into, E2Scratch, E2Softmax, E2SoftmaxConfig,
-    E2SoftmaxOut, VAL_TABLE_LEN,
+    expand_row_side, quantize_logits_batch_into, quantize_logits_into, E2Scratch, E2Softmax,
+    E2SoftmaxConfig, E2SoftmaxOut, CODE_SIDE_LEN, VAL_TABLE_LEN,
 };
 pub use log2exp::{log2exp, Log2ExpTable};
 

@@ -4,9 +4,13 @@
 //! * bit-exact to its direct kernel (the registry path adds routing and
 //!   scratch management, never arithmetic) — for the attention pipelines
 //!   the direct kernel is the stage math composed from the raw kernels;
-//! * correct at the edge shapes rows ∈ {1, cap};
+//! * correct at the edge shapes rows ∈ {0, 1, cap} (rows = 0 is a no-op
+//!   success, not an error);
 //! * deterministic under scratch reuse (no state leaks between batches);
-//! * spec round-trip: `parse(format(spec)) == spec`.
+//! * spec round-trip: `parse(format(spec)) == spec`;
+//! * f32 outer edges: whatever quantized ports a pipeline stages
+//!   internally (DESIGN.md §3.3), its router-facing ports are f32, and
+//!   the families with quantized boundaries are pinned by name.
 //!
 //! A newly registered op joins every check automatically — only
 //! `reference_item` needs a matching arm (and the suite fails loudly,
@@ -23,8 +27,8 @@ use sole::ops::ailayernorm::identity_calibration;
 use sole::ops::attention::{AttnAvOp, AttnLogitsOp};
 use sole::ops::baselines::{IBERT_LAYERNORM_SCALE, IBERT_SOFTMAX_SCALE, SOFTERMAX_FRAC_BITS};
 use sole::ops::exact::EXACT_LN_EPS;
-use sole::ops::{Op, OpRegistry, OpSpec};
-use sole::quant::ptf_quantize_into;
+use sole::ops::{Op, OpRegistry, OpSpec, PortType};
+use sole::quant::{ptf_quantize_into, q8_dequantize, q8_quantize_row_into};
 use sole::softmax::baselines::{ibert_softmax, softermax};
 use sole::softmax::e2::softmax_exact;
 use sole::softmax::{quantize_logits_into, E2Scratch, E2Softmax, E2SoftmaxConfig};
@@ -56,6 +60,14 @@ fn reference_row(op: &str, row: &[f32]) -> Vec<f32> {
             let mut out = vec![0f32; c];
             ln.forward_row_f32(&codes, &cal.alpha, &vec![1f32; c], &vec![0f32; c], &mut out);
             out
+        }
+        "ailayernorm-ptf" => {
+            // the ailayernorm kernel, staged through the q8 row codec the
+            // PtfU8 port stores — what the dequant adapter reconstructs
+            let out = reference_row("ailayernorm", row);
+            let mut codes = vec![0u8; out.len()];
+            let scale = q8_quantize_row_into(&out, &mut codes);
+            codes.iter().map(|&c| q8_dequantize(c, scale)).collect()
         }
         "layernorm-exact" => {
             let c = row.len();
@@ -234,9 +246,45 @@ fn every_registered_op_rejects_malformed_batches() {
         // mismatched output
         let input = vec![0f32; 2 * op.item_len()];
         assert!(op.run_batch(2, &input, &mut out, &mut scratch).is_err(), "{spec}: short out");
-        // zero rows
-        assert!(op.run_batch(0, &[], &mut [], &mut scratch).is_err(), "{spec}: zero rows");
+        // zero rows with non-empty buffers is still a shape error
+        assert!(op.run_batch(0, &input, &mut out, &mut scratch).is_err(), "{spec}: 0 rows, data");
     }
+}
+
+#[test]
+fn every_registered_op_treats_an_empty_batch_as_a_no_op_success() {
+    // a drained queue can legitimately hand a worker zero rows; that is
+    // not an error for any registered op
+    let registry = OpRegistry::builtin();
+    for name in registry.names() {
+        let spec = registry.canonical_spec(name).unwrap();
+        let (_, op) = registry.build(&spec.to_string()).unwrap();
+        let mut scratch = op.make_scratch();
+        op.run_batch(0, &[], &mut [], &mut scratch)
+            .unwrap_or_else(|e| panic!("{spec}: empty batch should be a no-op: {e:#}"));
+        // and the scratch arena stays usable afterwards
+        let input = vec![0.25f32; op.item_len()];
+        let mut out = vec![0f32; op.out_len()];
+        op.run_batch(1, &input, &mut out, &mut scratch).unwrap();
+    }
+}
+
+#[test]
+fn quantized_boundaries_are_pinned_to_the_expected_families() {
+    // the port system is opt-in per stage boundary: the families staging
+    // a quantized format internally are pinned by name, and every
+    // registered op keeps f32 router-facing edges regardless
+    let registry = OpRegistry::builtin();
+    let mut quantized = Vec::new();
+    for name in registry.names() {
+        let spec = registry.canonical_spec(name).unwrap();
+        let (_, op) = registry.build(&spec.to_string()).unwrap();
+        assert_eq!((op.in_port(), op.out_port()), (PortType::F32, PortType::F32), "{spec}");
+        if op.boundary_ports().iter().any(|&p| p != PortType::F32) {
+            quantized.push(name.to_string());
+        }
+    }
+    assert_eq!(quantized, vec!["ailayernorm-ptf", "attention"]);
 }
 
 #[test]
