@@ -20,6 +20,15 @@
 //! storage claim): the code port must stay ≤ 1/3 of the f32-staged
 //! bytes, asserted against `PipelineOp::staging_bytes_per_item()`.
 //!
+//! A fourth section measures the lane-parallel kernel arms (DESIGN.md
+//! §3.4): the same planar kernels with dispatch pinned to `scalar` vs
+//! whatever `Dispatch::detect()` picks on this host.  The two arms are
+//! asserted bit-identical in every mode — including `--quick` — before
+//! any timing; when an AVX2 arm ran, the 1024-point shapes must come in
+//! at >= 2x scalar.  Every JSON row carries a `dispatch` field (and the
+//! document a top-level one) so trajectories from different machines
+//! stay comparable.
+//!
 //! Flags: `--json` writes the JSON artifact (default path
 //! `<repo>/BENCH_kernels.json`, override with `--out <path>`); `--quick`
 //! is the CI smoke mode (equivalent to `SOLE_BENCH_QUICK=1`: numbers are
@@ -31,10 +40,12 @@ use sole::fixedpoint::leading_one;
 use sole::layernorm::compress::COMPRESSED_SQUARE_TABLE;
 use sole::layernorm::rsqrt::rsqrt_hw;
 use sole::layernorm::AiLayerNorm;
-use sole::ops::attention::{fused_pipeline, unfused_pipeline};
-use sole::ops::Op;
+use sole::layernorm::config::DEFAULT_ZP;
+use sole::ops::attention::{fused_pipeline, unfused_pipeline, AttnAvOp};
+use sole::ops::{Op, PortMut, PortRef, PortType};
+use sole::simd::Dispatch;
 use sole::softmax::{config, log2exp, E2Scratch, E2Softmax, E2SoftmaxConfig, CODE_SIDE_LEN};
-use sole::util::bench::{bench, quick_mode, report, BenchResult};
+use sole::util::bench::{bench, quick_mode, report, set_quick_mode, BenchResult};
 use sole::util::cli::Args;
 use sole::util::json::{obj, Json};
 use sole::util::rng::Rng;
@@ -153,6 +164,7 @@ fn record(
     row_elems: usize,
     b: usize,
     impl_name: &str,
+    dispatch: &str,
     r: &BenchResult,
     speedup: Option<f64>,
     staging_bytes: Option<usize>,
@@ -164,6 +176,7 @@ fn record(
         ("l", Json::Int(l as i64)),
         ("batch", Json::Int(b as i64)),
         ("impl", Json::Str(impl_name.to_string())),
+        ("dispatch", Json::Str(dispatch.to_string())),
         ("mean_ns", Json::Int(r.mean.as_nanos() as i64)),
         ("p50_ns", Json::Int(r.p50.as_nanos() as i64)),
         ("p99_ns", Json::Int(r.p99.as_nanos() as i64)),
@@ -182,7 +195,7 @@ fn record(
 fn main() {
     let args = Args::from_env();
     if args.flag("quick") {
-        std::env::set_var("SOLE_BENCH_QUICK", "1");
+        set_quick_mode(true);
     }
     println!(
         "bench_kernels — old-vs-new operator kernels at the paper's shapes{}",
@@ -232,8 +245,18 @@ fn main() {
             if l == 1024 && b == 1 {
                 accept_speedup = speedup;
             }
-            results.push(record("e2softmax", l, l, b, "legacy_row", &rl, None, None));
-            results.push(record("e2softmax", l, l, b, "planar_batch", &rn, Some(speedup), None));
+            results.push(record("e2softmax", l, l, b, "legacy_row", "scalar", &rl, None, None));
+            results.push(record(
+                "e2softmax",
+                l,
+                l,
+                b,
+                "planar_batch",
+                sm.dispatch().as_str(),
+                &rn,
+                Some(speedup),
+                None,
+            ));
         }
     }
 
@@ -282,8 +305,18 @@ fn main() {
                 (b * c) as f64 * rl.per_sec() / 1e6,
                 (b * c) as f64 * rn.per_sec() / 1e6,
             );
-            results.push(record("ailayernorm", c, c, b, "legacy_row", &rl, None, None));
-            results.push(record("ailayernorm", c, c, b, "fused_batch", &rn, Some(speedup), None));
+            results.push(record("ailayernorm", c, c, b, "legacy_row", "scalar", &rl, None, None));
+            results.push(record(
+                "ailayernorm",
+                c,
+                c,
+                b,
+                "fused_batch",
+                ln.dispatch().as_str(),
+                &rn,
+                Some(speedup),
+                None,
+            ));
         }
     }
 
@@ -345,12 +378,15 @@ fn main() {
                 b as f64 * rf.per_sec(),
             );
             let row_elems = fused.item_len();
+            let staged_disp = staged.dispatch().map_or("-", |d| d.as_str());
+            let fused_disp = fused.dispatch().map_or("-", |d| d.as_str());
             results.push(record(
                 "attention",
                 l,
                 row_elems,
                 b,
                 "staged_f32",
+                staged_disp,
                 &rs,
                 None,
                 Some(staged_pq),
@@ -361,12 +397,208 @@ fn main() {
                 row_elems,
                 b,
                 "fused_codes",
+                fused_disp,
                 &rf,
                 Some(speedup),
                 Some(fused_pq),
             ));
         }
     }
+
+    // Lane-parallel kernels (DESIGN.md §3.4): the same planar kernels
+    // with the dispatch pinned to Scalar vs whatever this host detects.
+    // Bit-exactness of the AVX2 arm against the scalar arm is asserted
+    // in every mode — including quick — before any timing; the timing
+    // acceptance (>= 2x at the 1024 shapes) only applies when an AVX2
+    // arm actually ran.
+    let detected = Dispatch::detect();
+    let simd_active = detected != Dispatch::Scalar;
+    println!("\nsimd — forced-scalar vs runtime-dispatched kernels (detected: {detected})");
+    let mut accept_simd_sm = f64::NAN;
+    let mut accept_simd_ln = f64::NAN;
+
+    for &l in &[49usize, 128, 785, 1024] {
+        let b = 4usize;
+        let q: Vec<i64> = (0..b * l).map(|_| -rng.range_i64(0, 256)).collect();
+        let cfg = E2SoftmaxConfig::default();
+        let sm_scalar = E2Softmax::with_dispatch(cfg, Dispatch::Scalar);
+        let sm_auto = E2Softmax::new(cfg);
+        let mut out_scalar = vec![0f32; b * l];
+        let mut out_auto = vec![0f32; b * l];
+        let mut ss = E2Scratch::default();
+        let mut sa = E2Scratch::default();
+        sm_scalar.forward_batch_f32(&q, l, &mut out_scalar, &mut ss);
+        sm_auto.forward_batch_f32(&q, l, &mut out_auto, &mut sa);
+        assert_eq!(out_scalar, out_auto, "e2softmax {detected} arm diverged at L={l}");
+        let mut codes_s = vec![0u8; b * l];
+        let mut codes_a = vec![0u8; b * l];
+        let mut side_s = vec![0f32; b * CODE_SIDE_LEN];
+        let mut side_a = vec![0f32; b * CODE_SIDE_LEN];
+        sm_scalar.forward_batch_codes(&q, l, &mut codes_s, &mut side_s, &mut ss);
+        sm_auto.forward_batch_codes(&q, l, &mut codes_a, &mut side_a, &mut sa);
+        assert_eq!(codes_s, codes_a, "e2softmax {detected} code arm diverged at L={l}");
+        assert_eq!(side_s, side_a, "e2softmax {detected} side arm diverged at L={l}");
+
+        let rs = bench(&format!("e2softmax scalar  L={l:<4} B={b:<2}"), TARGET, || {
+            sm_scalar.forward_batch_f32(std::hint::black_box(&q), l, &mut out_scalar, &mut ss);
+        });
+        report(&rs);
+        let ra = bench(&format!("e2softmax {detected:<7} L={l:<4} B={b:<2}"), TARGET, || {
+            sm_auto.forward_batch_f32(std::hint::black_box(&q), l, &mut out_auto, &mut sa);
+        });
+        report(&ra);
+        let speedup = rs.mean.as_secs_f64() / ra.mean.as_secs_f64();
+        println!("    -> {speedup:.2}x {detected}-vs-scalar");
+        if l == 1024 {
+            accept_simd_sm = speedup;
+        }
+        results.push(record("e2softmax", l, l, b, "planar_batch", "scalar", &rs, None, None));
+        results.push(record(
+            "e2softmax",
+            l,
+            l,
+            b,
+            "planar_batch",
+            sm_auto.dispatch().as_str(),
+            &ra,
+            Some(speedup),
+            None,
+        ));
+    }
+
+    for &c in &[192usize, 768, 1024] {
+        let b = 4usize;
+        let codes: Vec<u8> = (0..b * c).map(|_| rng.range_i64(0, 256) as u8).collect();
+        let alpha: Vec<u8> = (0..c).map(|_| rng.range_i64(0, 4) as u8).collect();
+        let gamma: Vec<f32> = (0..c).map(|_| 1.0 + 0.1 * rng.normal() as f32).collect();
+        let beta: Vec<f32> = (0..c).map(|_| 0.2 * rng.normal() as f32).collect();
+        let ln_scalar = AiLayerNorm::with_dispatch(DEFAULT_ZP, Dispatch::Scalar);
+        let ln_auto = AiLayerNorm::new(DEFAULT_ZP);
+        let mut out_scalar = vec![0f32; b * c];
+        let mut out_auto = vec![0f32; b * c];
+        ln_scalar.forward_batch_f32(&codes, &alpha, &gamma, &beta, &mut out_scalar);
+        ln_auto.forward_batch_f32(&codes, &alpha, &gamma, &beta, &mut out_auto);
+        for (i, (a, w)) in out_auto.iter().zip(&out_scalar).enumerate() {
+            assert_eq!(a.to_bits(), w.to_bits(), "ailayernorm {detected} arm diverged C={c} i={i}");
+        }
+
+        let rs = bench(&format!("ailayernorm scalar  C={c:<4} B={b:<2}"), TARGET, || {
+            ln_scalar.forward_batch_f32(
+                std::hint::black_box(&codes),
+                &alpha,
+                &gamma,
+                &beta,
+                &mut out_scalar,
+            );
+        });
+        report(&rs);
+        let ra = bench(&format!("ailayernorm {detected:<7} C={c:<4} B={b:<2}"), TARGET, || {
+            ln_auto.forward_batch_f32(
+                std::hint::black_box(&codes),
+                &alpha,
+                &gamma,
+                &beta,
+                &mut out_auto,
+            );
+        });
+        report(&ra);
+        let speedup = rs.mean.as_secs_f64() / ra.mean.as_secs_f64();
+        println!("    -> {speedup:.2}x {detected}-vs-scalar");
+        if c == 1024 {
+            accept_simd_ln = speedup;
+        }
+        results.push(record("ailayernorm", c, c, b, "fused_batch", "scalar", &rs, None, None));
+        results.push(record(
+            "ailayernorm",
+            c,
+            c,
+            b,
+            "fused_batch",
+            ln_auto.dispatch().as_str(),
+            &ra,
+            Some(speedup),
+            None,
+        ));
+    }
+
+    {
+        // A·V over packed codes: synthetic in-grid codes plus valid
+        // per-row divider headers, driven through the typed code port.
+        let (l, d, b) = (128usize, 64usize, 4usize);
+        let av_scalar = AttnAvOp::with_dispatch(l, d, PortType::Log2Code5, Dispatch::Scalar)
+            .expect("scalar attn-av");
+        let av_auto = AttnAvOp::with_in_port(l, d, PortType::Log2Code5).expect("auto attn-av");
+        let codes: Vec<u8> = (0..b * l * l).map(|i| (i % 32) as u8).collect();
+        let side_item = CODE_SIDE_LEN * l + l * d;
+        let mut side = vec![0f32; b * side_item];
+        for item in side.chunks_exact_mut(side_item) {
+            let (headers, v) = item.split_at_mut(CODE_SIDE_LEN * l);
+            for h in headers.chunks_exact_mut(CODE_SIDE_LEN) {
+                h[0] = config::ALDIV_C0 as f32;
+                h[1] = 6.0;
+            }
+            rng.fill_normal(v, 0.0, 1.0);
+        }
+        let mut out_scalar = vec![0f32; b * l * d];
+        let mut out_auto = vec![0f32; b * l * d];
+        let mut ws = av_scalar.make_scratch();
+        let mut wa = av_auto.make_scratch();
+        let input = PortRef::Log2Code5 { codes: &codes, side: &side };
+        av_scalar
+            .run_batch_ports(b, input, PortMut::F32(&mut out_scalar), &mut ws)
+            .expect("scalar A·V");
+        let input = PortRef::Log2Code5 { codes: &codes, side: &side };
+        av_auto
+            .run_batch_ports(b, input, PortMut::F32(&mut out_auto), &mut wa)
+            .expect("auto A·V");
+        assert_eq!(out_scalar, out_auto, "attn-av {detected} arm diverged at L={l} D={d}");
+
+        let rs = bench(&format!("attn-av codes scalar  L={l:<4} B={b:<2}"), TARGET, || {
+            let input =
+                PortRef::Log2Code5 { codes: std::hint::black_box(&codes), side: &side };
+            av_scalar
+                .run_batch_ports(b, input, PortMut::F32(&mut out_scalar), &mut ws)
+                .expect("scalar A·V");
+        });
+        report(&rs);
+        let ra = bench(&format!("attn-av codes {detected:<7} L={l:<4} B={b:<2}"), TARGET, || {
+            let input =
+                PortRef::Log2Code5 { codes: std::hint::black_box(&codes), side: &side };
+            av_auto
+                .run_batch_ports(b, input, PortMut::F32(&mut out_auto), &mut wa)
+                .expect("auto A·V");
+        });
+        report(&ra);
+        let speedup = rs.mean.as_secs_f64() / ra.mean.as_secs_f64();
+        println!("    -> {speedup:.2}x {detected}-vs-scalar");
+        results.push(record("attn-av", l, l * l, b, "codes_port", "scalar", &rs, None, None));
+        results.push(record(
+            "attn-av",
+            l,
+            l * l,
+            b,
+            "codes_port",
+            av_auto.dispatch().map_or("-", |x| x.as_str()),
+            &ra,
+            Some(speedup),
+            None,
+        ));
+    }
+
+    let simd_pass = accept_simd_sm >= 2.0 && accept_simd_ln >= 2.0;
+    println!(
+        "\nacceptance (simd): e2softmax L=1024 {accept_simd_sm:.2}x, ailayernorm C=1024 \
+         {accept_simd_ln:.2}x {detected}-vs-scalar (required >= 2.0x) -> {}",
+        if quick_mode() {
+            "SKIPPED (quick mode)"
+        } else if !simd_active {
+            "SKIPPED (no simd arm on this host)"
+        } else if simd_pass {
+            "PASS"
+        } else {
+            "FAIL"
+        }
+    );
 
     let pass = accept_speedup >= 2.0;
     println!(
@@ -390,6 +622,7 @@ fn main() {
         let doc = obj(vec![
             ("bench", Json::Str("bench_kernels".to_string())),
             ("quick", Json::Bool(quick_mode())),
+            ("dispatch", Json::Str(detected.as_str().to_string())),
             (
                 "units",
                 obj(vec![
@@ -424,6 +657,20 @@ fn main() {
                     ("pass", Json::Bool(pass && !quick_mode())),
                 ]),
             ),
+            (
+                "acceptance_simd",
+                obj(vec![
+                    (
+                        "shape",
+                        Json::Str("e2softmax L=1024 B=4 + ailayernorm C=1024 B=4".to_string()),
+                    ),
+                    ("dispatch", Json::Str(detected.as_str().to_string())),
+                    ("required_speedup", Json::Num(2.0)),
+                    ("e2softmax_speedup", Json::Num(accept_simd_sm)),
+                    ("ailayernorm_speedup", Json::Num(accept_simd_ln)),
+                    ("pass", Json::Bool(simd_pass && simd_active && !quick_mode())),
+                ]),
+            ),
             ("results", Json::Arr(results)),
         ]);
         let mut text = doc.to_string_compact();
@@ -438,5 +685,12 @@ fn main() {
             "acceptance regression: planar E2Softmax must be >= 2x legacy at L=1024 B=1 \
              (measured {accept_speedup:.2}x)"
         );
+        if simd_active {
+            assert!(
+                simd_pass,
+                "acceptance regression: the {detected} arms must be >= 2x scalar at the 1024 \
+                 shapes (e2softmax {accept_simd_sm:.2}x, ailayernorm {accept_simd_ln:.2}x)"
+            );
+        }
     }
 }

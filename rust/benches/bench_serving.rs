@@ -15,7 +15,11 @@
 //! throughput and p50/p99/mean latency come from each service's own
 //! metrics shards, the merged view from the router's merge-on-read.
 //! Request conservation (`completed + errors == accepted`, errors == 0)
-//! is asserted before anything is recorded.
+//! is asserted before anything is recorded.  Every row carries a
+//! `dispatch` field — the SIMD kernel arm the served op selected at
+//! construction (DESIGN.md §3.4), `-` for ops with no vectorized kernel
+//! — and the document a top-level one, so records from different
+//! machines stay comparable.
 //!
 //! Flags: `--json` writes the JSON artifact (default path
 //! `<repo>/BENCH_serving.json`, override with `--out <path>`); `--quick`
@@ -26,7 +30,8 @@ use std::time::Instant;
 
 use sole::coordinator::{BatchPolicy, ServiceRouter};
 use sole::ops::OpRegistry;
-use sole::util::bench::quick_mode;
+use sole::simd::Dispatch;
+use sole::util::bench::{quick_mode, set_quick_mode};
 use sole::util::cli::Args;
 use sole::util::json::{obj, Json};
 use sole::util::rng::Rng;
@@ -34,7 +39,7 @@ use sole::util::rng::Rng;
 fn main() {
     let args = Args::from_env();
     if args.flag("quick") {
-        std::env::set_var("SOLE_BENCH_QUICK", "1");
+        set_quick_mode(true);
     }
     let per_service = if quick_mode() { 48 } else { 1024 };
 
@@ -66,15 +71,19 @@ fn main() {
     let router = builder.start().expect("router start");
     let client = router.client();
 
-    // pre-generate one block of normal rows per service
+    // pre-generate one block of normal rows per service; a throwaway
+    // registry build of the same spec reports which kernel arm the
+    // served instances dispatched to (construction is deterministic)
     let mut rng = Rng::new(0x501E);
-    let lanes: Vec<(String, usize, Vec<f32>)> = specs
+    let lanes: Vec<(String, usize, String, Vec<f32>)> = specs
         .iter()
         .map(|spec| {
             let item = client.item_len(spec).expect("registered service");
+            let (_, op) = registry.build(spec).expect("registered spec");
+            let dispatch = op.dispatch().map_or("-", |d| d.as_str()).to_string();
             let mut inputs = vec![0f32; 32 * item];
             rng.fill_normal(&mut inputs, 0.0, 2.0);
-            (spec.clone(), item, inputs)
+            (spec.clone(), item, dispatch, inputs)
         })
         .collect();
 
@@ -83,7 +92,7 @@ fn main() {
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(per_service * lanes.len());
     for i in 0..per_service {
-        for (name, item, inputs) in &lanes {
+        for (name, item, _, inputs) in &lanes {
             let row = i % (inputs.len() / item);
             let input = inputs[row * item..(row + 1) * item].to_vec();
             pending.push(client.submit(name, input).expect("submit"));
@@ -103,7 +112,7 @@ fn main() {
         "\n{:>20} {:>4} {:>10} {:>10} {:>10} {:>10} {:>10}",
         "op service", "wrk", "rows/s", "p50 ms", "p99 ms", "mean ms", "avg batch"
     );
-    for (name, item, _) in &lanes {
+    for (name, item, dispatch, _) in &lanes {
         let m = router.metrics(name).expect("registered service");
         assert_eq!(m.accepted(), per_service as u64, "{name}: accepted");
         assert_eq!(m.errors(), 0, "{name}: errors");
@@ -126,6 +135,7 @@ fn main() {
             ("op", Json::Str(op)),
             ("spec", Json::Str(name.clone())),
             ("item_len", Json::Int(*item as i64)),
+            ("dispatch", Json::Str(dispatch.clone())),
             ("workers", Json::Int(router.workers(name).unwrap_or(0) as i64)),
             ("completed", Json::Int(m.completed() as i64)),
             ("rows_per_sec", Json::Num(rows_per_sec)),
@@ -137,7 +147,7 @@ fn main() {
     }
     assert_eq!(total_completed, submitted, "merged conservation");
     // the recorded budget is the actual thread count (floor-one split)
-    let worker_sum: usize = lanes.iter().filter_map(|(n, _, _)| router.workers(n)).sum();
+    let worker_sum: usize = lanes.iter().filter_map(|(n, _, _, _)| router.workers(n)).sum();
     assert_eq!(worker_sum, total_workers, "budget must match the served thread count");
     let (mp50, mp99, mmean) = router.merged_latency();
     let merged_rows_per_sec = submitted as f64 / wall;
@@ -166,6 +176,7 @@ fn main() {
         let doc = obj(vec![
             ("bench", Json::Str("bench_serving".to_string())),
             ("quick", Json::Bool(quick_mode())),
+            ("dispatch", Json::Str(Dispatch::detect().as_str().to_string())),
             ("total_workers", Json::Int(total_workers as i64)),
             ("requests_per_service", Json::Int(per_service as i64)),
             (

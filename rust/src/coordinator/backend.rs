@@ -365,7 +365,7 @@ mod tests {
         let got = be.run_alloc(4, &rows).unwrap();
         // direct kernel invocation with the same identity calibration
         let cal = identity_calibration(c);
-        let ln = AiLayerNorm { zp: cal.zp };
+        let ln = AiLayerNorm::new(cal.zp);
         let gamma = vec![1f32; c];
         let beta = vec![0f32; c];
         let mut codes = Vec::new();

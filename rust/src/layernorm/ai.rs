@@ -17,6 +17,7 @@
 use super::compress::{compressed_square, COMPRESSED_SQUARE_TABLE};
 use super::config::DEFAULT_ZP;
 use super::rsqrt::rsqrt_hw;
+use crate::simd::Dispatch;
 
 /// Per-row output with the intermediates the golden tests pin.
 #[derive(Debug, Clone)]
@@ -30,16 +31,60 @@ pub struct AiLayerNormOut {
 
 /// AILayerNorm over u8 codes with per-channel PTF factors.
 pub struct AiLayerNorm {
+    /// Quantization zero point of the input codes.
     pub zp: i64,
+    /// Kernel arm for the planar hot paths, chosen once at construction
+    /// (DESIGN.md §3.4); `forward_introspect` is always scalar.
+    dispatch: Dispatch,
 }
 
 impl Default for AiLayerNorm {
     fn default() -> Self {
-        AiLayerNorm { zp: DEFAULT_ZP }
+        AiLayerNorm::new(DEFAULT_ZP)
     }
 }
 
+/// Per-batch eligibility of the AVX2 arms, computed once from the shared
+/// PTF factors (rows reuse it).  The vector arms assume a u8-grid zero
+/// point and PTF shifts that keep every intermediate in-lane; anything
+/// wider takes the scalar arm whole.
+#[derive(Clone, Copy)]
+struct SimdGate {
+    /// Stage 1 eligible: AVX2 arm, `zp ∈ [0, 255]`, all `alpha < 16`.
+    stats: bool,
+    /// Largest PTF shift seen — bounds the stage-2 i32 numerator check.
+    max_alpha: u32,
+}
+
+impl SimdGate {
+    const SCALAR: SimdGate = SimdGate { stats: false, max_alpha: 0 };
+}
+
 impl AiLayerNorm {
+    /// AILayerNorm with the given zero point, kernel arm auto-detected.
+    pub fn new(zp: i64) -> Self {
+        Self::with_dispatch(zp, Dispatch::detect())
+    }
+
+    /// Construction with an explicit kernel arm (tests and benches pin
+    /// arms to compare them); the request is clamped to what this host
+    /// can run.
+    pub fn with_dispatch(zp: i64, dispatch: Dispatch) -> Self {
+        AiLayerNorm { zp, dispatch: dispatch.sanitize() }
+    }
+
+    /// The kernel arm the planar hot paths run on.
+    pub fn dispatch(&self) -> Dispatch {
+        self.dispatch
+    }
+
+    fn gate(&self, alpha: &[u8]) -> SimdGate {
+        if self.dispatch != Dispatch::Avx2 || !(0..=255).contains(&self.zp) {
+            return SimdGate::SCALAR;
+        }
+        let max_alpha = alpha.iter().fold(0u8, |m, &a| m.max(a)) as u32;
+        SimdGate { stats: max_alpha < 16, max_alpha }
+    }
     /// Full-introspection forward over one row of C channels.
     pub fn forward_introspect(
         &self,
@@ -78,18 +123,25 @@ impl AiLayerNorm {
     /// Stage 1 shared by the f32 kernels: pure-i64 accumulation over the
     /// 256-entry compress-square table, then (E_x, std_inv).
     #[inline]
-    fn row_stats(&self, codes: &[u8], alpha: &[u8]) -> (i64, f64) {
+    fn row_stats(&self, codes: &[u8], alpha: &[u8], gate: SimdGate) -> (i64, f64) {
         let c = codes.len();
         let sq_table = &*COMPRESSED_SQUARE_TABLE;
-        let mut ex: i64 = 0;
-        let mut ex2: i64 = 0;
-        for (&code, &a) in codes.iter().zip(alpha) {
-            let xi = code as i64 - self.zp;
-            let a = a as u32;
-            ex += xi << a;
-            let mag = xi.unsigned_abs().min(255) as usize;
-            ex2 += sq_table[mag] << (2 * a);
-        }
+        let (ex, ex2) = if gate.stats {
+            // SAFETY: the Avx2 arm only exists after runtime detection
+            // (Dispatch::sanitize); the gate proved zp and alpha in-lane.
+            unsafe { crate::simd::ln::stats_avx2(self.zp as i32, codes, alpha, sq_table) }
+        } else {
+            let mut ex: i64 = 0;
+            let mut ex2: i64 = 0;
+            for (&code, &a) in codes.iter().zip(alpha) {
+                let xi = code as i64 - self.zp;
+                let a = a as u32;
+                ex += xi << a;
+                let mag = xi.unsigned_abs().min(255) as usize;
+                ex2 += sq_table[mag] << (2 * a);
+            }
+            (ex, ex2)
+        };
         let ex2 = ex2 << 4;
         let var_num = ex2 as i128 * c as i128 - (ex as i128) * (ex as i128);
         let std_inv = if var_num > 0 {
@@ -107,11 +159,33 @@ impl AiLayerNorm {
     /// no cancellation error even for near-constant rows with a large
     /// common-mode offset (and stays exact through the f32 conversion
     /// while `|C D_i - E_x| < 2^24`, which covers the paper shapes).
-    fn row_kernel(&self, codes: &[u8], alpha: &[u8], gamma: &[f32], beta: &[f32], out: &mut [f32]) {
+    #[allow(clippy::too_many_arguments)] // one row's planes plus the hoisted per-batch gate
+    fn row_kernel(
+        &self,
+        codes: &[u8],
+        alpha: &[u8],
+        gamma: &[f32],
+        beta: &[f32],
+        out: &mut [f32],
+        gate: SimdGate,
+    ) {
         let c = codes.len();
-        let (ex, std_inv) = self.row_stats(codes, alpha);
+        let (ex, std_inv) = self.row_stats(codes, alpha, gate);
         let si_over_c = (std_inv / c as f64) as f32;
         let zp = self.zp;
+        // The vector stage 2 builds C·D_i - E_x in i32 lanes; prove the
+        // whole row fits (|D_i| <= 255 << max_alpha by the stage-1 gate).
+        let num_bound =
+            (c as i64).saturating_mul(255i64 << gate.max_alpha).saturating_add(ex.abs());
+        if gate.stats && num_bound <= i32::MAX as i64 {
+            // SAFETY: detected arm; the bound above keeps every lane exact.
+            unsafe {
+                crate::simd::ln::stage2_avx2(
+                    zp as i32, c as i32, ex as i32, si_over_c, codes, alpha, gamma, beta, out,
+                );
+            }
+            return;
+        }
         for i in 0..c {
             let d = (codes[i] as i64 - zp) << alpha[i];
             let num = d * c as i64 - ex;
@@ -130,7 +204,8 @@ impl AiLayerNorm {
     ) {
         let c = codes.len();
         debug_assert!(c > 0 && out.len() == c && alpha.len() == c);
-        self.row_kernel(codes, alpha, gamma, beta, out);
+        let gate = self.gate(alpha);
+        self.row_kernel(codes, alpha, gamma, beta, out, gate);
     }
 
     /// Batch hot path: `codes` is a packed planar batch of rows, each
@@ -153,8 +228,9 @@ impl AiLayerNorm {
         );
         assert!(codes.len() % c == 0, "packed batch len {} is not a multiple of {c}", codes.len());
         assert!(codes.len() == out.len(), "out len {} != batch len {}", out.len(), codes.len());
+        let gate = self.gate(alpha); // one alpha scan for the whole batch
         for (row, row_out) in codes.chunks_exact(c).zip(out.chunks_exact_mut(c)) {
-            self.row_kernel(row, alpha, gamma, beta, row_out);
+            self.row_kernel(row, alpha, gamma, beta, row_out, gate);
         }
     }
 
@@ -199,12 +275,13 @@ impl AiLayerNorm {
             out_scale.len()
         );
         row.resize(c, 0.0);
+        let gate = self.gate(alpha); // one alpha scan for the whole batch
         for ((in_row, out_row), scale) in codes
             .chunks_exact(c)
             .zip(out_codes.chunks_exact_mut(c))
             .zip(out_scale.iter_mut())
         {
-            self.row_kernel(in_row, alpha, gamma, beta, row);
+            self.row_kernel(in_row, alpha, gamma, beta, row, gate);
             *scale = crate::quant::q8_quantize_row_into(row, out_row);
         }
     }

@@ -28,6 +28,7 @@ pub mod model;
 pub mod ops;
 pub mod quant;
 pub mod runtime;
+pub mod simd;
 pub mod softmax;
 pub mod tensor;
 pub mod util;

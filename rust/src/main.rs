@@ -165,11 +165,12 @@ fn cmd_ops() -> Result<()> {
     let registry = OpRegistry::builtin();
     println!(
         "registered ops (spec grammar: <op>/<DIM><len>[x<DIM><len>...], \
-         e.g. e2softmax/L128, attention/L128xD64):\n"
+         e.g. e2softmax/L128, attention/L128xD64; dispatch: the SIMD \
+         kernel arm selected on this host, - for ops with none):\n"
     );
     println!(
-        "{:<18} {:>14} {:>12} {:>14}  {:<24} {}",
-        "op", "shape", "default", "in->out f32", "ports", "summary"
+        "{:<18} {:>14} {:>12} {:>14} {:>8}  {:<24} {}",
+        "op", "shape", "default", "in->out f32", "dispatch", "ports", "summary"
     );
     for l in registry.listings() {
         let (_, op) = registry.build(&l.canonical().to_string())?;
@@ -177,11 +178,12 @@ fn cmd_ops() -> Result<()> {
         ports.extend(op.boundary_ports().iter().map(|p| p.to_string()));
         ports.push("f32".to_string());
         println!(
-            "{:<18} {:>14} {:>12} {:>14}  {:<24} {}",
+            "{:<18} {:>14} {:>12} {:>14} {:>8}  {:<24} {}",
             l.name,
             l.signature(),
             l.canonical().shape(),
             format!("{}->{}", op.item_len(), op.out_len()),
+            op.dispatch().map_or("-", |d| d.as_str()),
             ports.join("->"),
             l.summary
         );

@@ -57,7 +57,7 @@ impl AiLayerNormOp {
             cal.alpha.len() == c && gamma.len() == c && beta.len() == c,
             "calibration lengths must match {c} channels"
         );
-        let ln = AiLayerNorm { zp: cal.zp };
+        let ln = AiLayerNorm::new(cal.zp);
         Ok(AiLayerNormOp { c, ln, cal, gamma, beta, out_port: PortType::F32 })
     }
 
@@ -99,6 +99,10 @@ impl Op for AiLayerNormOp {
             PortType::PtfU8 => 1,
             _ => 0,
         }
+    }
+
+    fn dispatch(&self) -> Option<crate::simd::Dispatch> {
+        Some(self.ln.dispatch())
     }
 
     fn make_scratch(&self) -> OpScratch {

@@ -38,6 +38,7 @@ use anyhow::{Context, Result};
 
 use super::port::{check_batch_ports, PortMut, PortRef, PortType};
 use super::{check_batch, E2SoftmaxOp, ExactSoftmaxOp, Op, OpScratch, OpSpec, PipelineOp};
+use crate::simd::Dispatch;
 use crate::softmax::e2::{expand_row_side, CODE_SIDE_LEN};
 
 /// The canonical spec of an attention-family pipeline:
@@ -263,6 +264,10 @@ impl Op for AttnSoftmaxOp {
         }
     }
 
+    fn dispatch(&self) -> Option<Dispatch> {
+        self.inner.dispatch()
+    }
+
     fn make_scratch(&self) -> OpScratch {
         Box::new(SoftmaxScratch { inner: self.inner.make_scratch() })
     }
@@ -349,6 +354,10 @@ pub struct AttnAvOp {
     l: usize,
     d: usize,
     in_port: PortType,
+    /// Kernel arm of the accumulation loop, chosen once at construction
+    /// (DESIGN.md §3.4); the AVX2 arm vectorizes across the output lanes
+    /// so the per-lane `j` accumulation order stays scalar-identical.
+    dispatch: Dispatch,
 }
 
 impl AttnAvOp {
@@ -360,12 +369,19 @@ impl AttnAvOp {
 
     /// Construction with an explicit in-port (`F32` or `Log2Code5`).
     pub fn with_in_port(l: usize, d: usize, port: PortType) -> Result<AttnAvOp> {
+        AttnAvOp::with_dispatch(l, d, port, Dispatch::detect())
+    }
+
+    /// Construction with an explicit kernel arm (tests and benches pin
+    /// arms to compare them); the request is clamped to what this host
+    /// can run.
+    pub fn with_dispatch(l: usize, d: usize, port: PortType, dispatch: Dispatch) -> Result<AttnAvOp> {
         ensure_shape("attn-av", l, d)?;
         anyhow::ensure!(
             port != PortType::PtfU8,
             "attn-av has no ptf-u8 in-port (attention probabilities are f32 or log2 codes)"
         );
-        Ok(AttnAvOp { l, d, in_port: port })
+        Ok(AttnAvOp { l, d, in_port: port, dispatch: dispatch.sanitize() })
     }
 }
 
@@ -401,6 +417,10 @@ impl Op for AttnAvOp {
         }
     }
 
+    fn dispatch(&self) -> Option<Dispatch> {
+        Some(self.dispatch)
+    }
+
     fn run_batch(
         &self,
         rows: usize,
@@ -419,6 +439,12 @@ impl Op for AttnAvOp {
         {
             let (p, v) = item.split_at(self.l * self.l);
             for (p_row, o_row) in p.chunks_exact(self.l).zip(out_item.chunks_exact_mut(self.d)) {
+                if self.dispatch == Dispatch::Avx2 {
+                    // SAFETY: the Avx2 arm only exists after runtime
+                    // detection (Dispatch::sanitize); shapes checked above.
+                    unsafe { crate::simd::av::av_row_f32_avx2(p_row, v, self.d, o_row) };
+                    continue;
+                }
                 o_row.fill(0.0);
                 for (&pij, v_row) in p_row.iter().zip(v.chunks_exact(self.d)) {
                     for (o, &vv) in o_row.iter_mut().zip(v_row) {
@@ -458,6 +484,13 @@ impl Op for AttnAvOp {
                         // network: one table expansion per row, then a
                         // 1-byte indexed load per weight
                         let val = expand_row_side(h);
+                        if self.dispatch == Dispatch::Avx2 {
+                            // SAFETY: detected arm; shapes checked above.
+                            unsafe {
+                                crate::simd::av::av_row_codes_avx2(code_row, &val, v, self.d, o_row)
+                            };
+                            continue;
+                        }
                         o_row.fill(0.0);
                         for (&code, v_row) in code_row.iter().zip(v.chunks_exact(self.d)) {
                             let pij = val[code as usize];

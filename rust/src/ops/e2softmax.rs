@@ -82,6 +82,10 @@ impl Op for E2SoftmaxOp {
         }
     }
 
+    fn dispatch(&self) -> Option<crate::simd::Dispatch> {
+        Some(self.sm.dispatch())
+    }
+
     fn make_scratch(&self) -> OpScratch {
         Box::new(Scratch { codes: Vec::with_capacity(self.l), e2: E2Scratch::default() })
     }

@@ -168,6 +168,15 @@ pub trait Op: Send + Sync {
         Vec::new()
     }
 
+    /// The SIMD kernel arm this op's hot loops selected at construction
+    /// (`crate::simd::Dispatch`, DESIGN.md §3.4) — `None` for ops with
+    /// no vectorized kernel.  Surfaced by `sole ops` and both bench
+    /// records so trajectories from different machines stay comparable;
+    /// pipelines report their first dispatched stage.
+    fn dispatch(&self) -> Option<crate::simd::Dispatch> {
+        None
+    }
+
     /// Create the per-worker scratch arena (stateless ops keep the
     /// default).
     fn make_scratch(&self) -> OpScratch {

@@ -155,6 +155,10 @@ impl Op for PipelineOp {
         self.stages[..self.stages.len() - 1].iter().map(|s| s.out_port()).collect()
     }
 
+    fn dispatch(&self) -> Option<crate::simd::Dispatch> {
+        self.stages.iter().find_map(|s| s.dispatch())
+    }
+
     fn make_scratch(&self) -> OpScratch {
         Box::new(Scratch {
             stages: self.stages.iter().map(|s| s.make_scratch()).collect(),

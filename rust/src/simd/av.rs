@@ -1,0 +1,122 @@
+//! AVX2 arms of the shift-accumulate A·V stage (`ops/attention.rs`).
+//!
+//! One output row `O[i] = Σ_j P[i,j]·V[j]` vectorizes across the *head
+//! dimension*: eight output lanes accumulate in one register while `j`
+//! walks the full probability row, broadcasting each weight.  That keeps
+//! every output lane's float additions in exactly the scalar `j` order
+//! (mul then add, **no FMA**), which is what makes the arm bit-identical
+//! to the scalar triple loop — vectorizing across `j` instead would
+//! reassociate the sum and drift by ulps.
+//!
+//! On the `Log2Code5` port the weight is `val[code]` — the row's
+//! expanded ≤ 32-entry ALDivision shift table, one byte read per weight,
+//! same as the scalar code path.  `d` tails shorter than a vector run a
+//! scalar epilogue that also walks `j` sequentially per lane.
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+use crate::softmax::e2::VAL_TABLE_LEN;
+
+/// One f32 A·V output row: `o_row[t] = Σ_j p_row[j] * v[j*d + t]`.
+///
+/// # Safety
+///
+/// AVX2 host required; `v.len() == p_row.len() * d` and
+/// `o_row.len() == d`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn av_row_f32_avx2(p_row: &[f32], v: &[f32], d: usize, o_row: &mut [f32]) {
+    let l = p_row.len();
+    debug_assert_eq!(v.len(), l * d);
+    debug_assert_eq!(o_row.len(), d);
+    let mut t = 0;
+    while t + 8 <= d {
+        let mut acc = _mm256_setzero_ps();
+        for (j, &pij) in p_row.iter().enumerate() {
+            let p = _mm256_set1_ps(pij);
+            let vv = _mm256_loadu_ps(v.as_ptr().add(j * d + t));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(p, vv));
+        }
+        _mm256_storeu_ps(o_row.as_mut_ptr().add(t), acc);
+        t += 8;
+    }
+    while t < d {
+        let mut acc = 0f32;
+        for (j, &pij) in p_row.iter().enumerate() {
+            acc += pij * v[j * d + t];
+        }
+        o_row[t] = acc;
+        t += 1;
+    }
+}
+
+/// One `Log2Code5` A·V output row: the weight dequantizes through the
+/// row's expanded shift table, `o_row[t] = Σ_j val[code[j]] * v[j*d+t]`.
+///
+/// # Safety
+///
+/// AVX2 host required; `v.len() == code_row.len() * d`,
+/// `o_row.len() == d`, and every code indexes inside `val` (codes are
+/// `k + sub <= 30` by construction; a hand-built out-of-table code
+/// panics exactly like the scalar index would).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn av_row_codes_avx2(
+    code_row: &[u8],
+    val: &[f32; VAL_TABLE_LEN],
+    v: &[f32],
+    d: usize,
+    o_row: &mut [f32],
+) {
+    let l = code_row.len();
+    debug_assert_eq!(v.len(), l * d);
+    debug_assert_eq!(o_row.len(), d);
+    let mut t = 0;
+    while t + 8 <= d {
+        let mut acc = _mm256_setzero_ps();
+        for (j, &code) in code_row.iter().enumerate() {
+            let p = _mm256_set1_ps(val[code as usize]);
+            let vv = _mm256_loadu_ps(v.as_ptr().add(j * d + t));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(p, vv));
+        }
+        _mm256_storeu_ps(o_row.as_mut_ptr().add(t), acc);
+        t += 8;
+    }
+    while t < d {
+        let mut acc = 0f32;
+        for (j, &code) in code_row.iter().enumerate() {
+            acc += val[code as usize] * v[j * d + t];
+        }
+        o_row[t] = acc;
+        t += 1;
+    }
+}
+
+// ---- portable stubs ----------------------------------------------------
+
+/// Non-x86 stub; never reached (see module docs).
+///
+/// # Safety
+///
+/// Never called: `Dispatch::Avx2` cannot be constructed on this target.
+#[cfg(not(target_arch = "x86_64"))]
+pub unsafe fn av_row_f32_avx2(_p_row: &[f32], _v: &[f32], _d: usize, _o_row: &mut [f32]) {
+    unreachable!("avx2 arm selected on a non-x86_64 target")
+}
+
+/// Non-x86 stub; never reached (see module docs).
+///
+/// # Safety
+///
+/// Never called: `Dispatch::Avx2` cannot be constructed on this target.
+#[cfg(not(target_arch = "x86_64"))]
+pub unsafe fn av_row_codes_avx2(
+    _code_row: &[u8],
+    _val: &[f32; VAL_TABLE_LEN],
+    _v: &[f32],
+    _d: usize,
+    _o_row: &mut [f32],
+) {
+    unreachable!("avx2 arm selected on a non-x86_64 target")
+}

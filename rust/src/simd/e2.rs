@@ -1,0 +1,303 @@
+//! AVX2 arms of the E2Softmax planar kernels (`softmax/e2.rs`).
+//!
+//! Stage 1 vectorizes the per-slice running max (4 × i64 compare-blend
+//! tree) and the k-code / Q(.15)-summand generation: eight deltas at a
+//! time are narrowed to i32, gathered through the widened
+//! [`Log2ExpTable`] k table, turned into summands with one variable
+//! shift (`2^(SUM_FRAC - k)` — recomputing beats a second gather), and
+//! byte-packed back into the scratch `k` buffer with an in-register
+//! shuffle.  The online sum is exact integer addition, so lanes may
+//! accumulate independently and reduce horizontally per slice — the
+//! truncating inter-slice `>>` rescale still sees exactly the scalar
+//! value.  Any group holding a delta outside the 8-bit code grid (only
+//! reachable with hand-built rows) falls through to the scalar
+//! `k_pow` fallback for that group.
+//!
+//! Stage 2 is a pure `table[k + sub]` expansion: eight bytes widen to
+//! dword indices, one `vgatherdps` against the ≤ 32-entry ALDivision
+//! value table, one store.  The code twin is a straight byte add
+//! (`k + sub <= 30`, no carry).  Both index in `[0, 30]` by
+//! construction — k and sub saturate at 15 — so the gather never leaves
+//! the table.
+//!
+//! Everything here is bit-identical to the scalar loops in
+//! `softmax/e2.rs` (pinned by `tests/simd_dispatch.rs`); tails shorter
+//! than a vector run the same scalar epilogue inline.
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+use crate::softmax::e2::VAL_TABLE_LEN;
+use crate::softmax::log2exp::Log2ExpTable;
+
+#[cfg(target_arch = "x86_64")]
+use crate::softmax::config::SUM_FRAC;
+
+/// Flush the lane accumulator of Q(.15) summands after this many
+/// 8-element groups: each lane add is at most `2^SUM_FRAC`, so the u32
+/// lanes stay exact for far longer than any real row, but a hand-built
+/// mega-slice must not overflow either.
+#[cfg(target_arch = "x86_64")]
+const POW_FLUSH_GROUPS: u32 = 1 << 16;
+
+/// Stage 1 of the planar row kernel: fills `k_out` (byte k codes) and
+/// `slice_m` (per-slice running max), returns `(sum_q15, m_final)` —
+/// bit-identical to the scalar loop in `E2Softmax::row_prepare`.
+///
+/// # Safety
+///
+/// Caller must ensure the host supports AVX2 (the `Dispatch::Avx2` arm
+/// only exists after runtime detection) and that `k_out.len() == q.len()`
+/// and `slice_m.len() == q.len().div_ceil(chunk)` with `chunk >= 1` and
+/// `q` non-empty, exactly as `row_prepare` sizes them.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn stage1_avx2(
+    t: &Log2ExpTable,
+    chunk: usize,
+    q: &[i64],
+    k_out: &mut [u8],
+    slice_m: &mut [i64],
+) -> (u64, i64) {
+    debug_assert!(!q.is_empty());
+    debug_assert_eq!(k_out.len(), q.len());
+    debug_assert_eq!(slice_m.len(), q.len().div_ceil(chunk));
+    let k32 = t.k32().as_ptr();
+    // byte selector: dword lanes 0..3 -> packed bytes 0..3 per 128 lane
+    let pack = _mm256_set_epi8(
+        -1, -1, -1, -1, -1, -1, -1, -1, -1, -1, -1, -1, 12, 8, 4, 0, -1, -1, -1, -1, -1, -1, -1,
+        -1, -1, -1, -1, -1, 12, 8, 4, 0,
+    );
+    let ones = _mm256_set1_epi32(1);
+    let frac = _mm256_set1_epi32(SUM_FRAC as i32);
+    let grid = _mm256_set1_epi64x(255);
+    let zero = _mm256_setzero_si256();
+    let mut sum: u64 = 0;
+    let mut m_prev = i64::MIN;
+    for (sl, (ks, ms)) in q.chunks(chunk).zip(k_out.chunks_mut(chunk).zip(slice_m.iter_mut())) {
+        let n = sl.len();
+        // local max: 4-lane i64 compare-blend, scalar tail
+        let mut local = i64::MIN;
+        let mut i = 0;
+        if n >= 4 {
+            let mut vmax = _mm256_loadu_si256(sl.as_ptr() as *const __m256i);
+            i = 4;
+            while i + 4 <= n {
+                let v = _mm256_loadu_si256(sl.as_ptr().add(i) as *const __m256i);
+                vmax = _mm256_blendv_epi8(vmax, v, _mm256_cmpgt_epi64(v, vmax));
+                i += 4;
+            }
+            let mut lanes = [0i64; 4];
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, vmax);
+            for &v in &lanes {
+                local = local.max(v);
+            }
+        }
+        while i < n {
+            local = local.max(sl[i]);
+            i += 1;
+        }
+        let m_new = if m_prev == i64::MIN { local } else { m_prev.max(local) };
+        if m_prev != i64::MIN && m_prev != m_new {
+            sum >>= t.k(m_prev - m_new) as u32;
+        }
+        // k codes + online sum, 8 deltas per step
+        let mvec = _mm256_set1_epi64x(m_new);
+        let mut acc = _mm256_setzero_si256();
+        let mut groups = 0u32;
+        let mut j = 0;
+        while j + 8 <= n {
+            let a = _mm256_loadu_si256(sl.as_ptr().add(j) as *const __m256i);
+            let b = _mm256_loadu_si256(sl.as_ptr().add(j + 4) as *const __m256i);
+            let da = _mm256_sub_epi64(mvec, a); // -delta, >= 0 on the grid
+            let db = _mm256_sub_epi64(mvec, b);
+            // off-grid delta (or i64 wraparound) in the group -> the
+            // scalar fallback owns it; sum order is irrelevant (exact)
+            let oor = _mm256_or_si256(
+                _mm256_or_si256(_mm256_cmpgt_epi64(da, grid), _mm256_cmpgt_epi64(db, grid)),
+                _mm256_or_si256(_mm256_cmpgt_epi64(zero, da), _mm256_cmpgt_epi64(zero, db)),
+            );
+            if _mm256_testz_si256(oor, oor) == 0 {
+                for jj in j..j + 8 {
+                    let (k, pow) = t.k_pow(sl[jj] - m_new);
+                    sum += pow;
+                    ks[jj] = k;
+                }
+                j += 8;
+                continue;
+            }
+            // narrow the eight in-grid i64 deltas to packed i32 lanes
+            let sa = _mm256_shuffle_epi32::<0x88>(da);
+            let sb = _mm256_shuffle_epi32::<0x88>(db);
+            let idx = _mm256_permute4x64_epi64::<0xD8>(_mm256_unpacklo_epi64(sa, sb));
+            let k = _mm256_i32gather_epi32::<4>(k32, idx);
+            // summand 2^(SUM_FRAC - k): one variable shift per lane
+            let pw = _mm256_sllv_epi32(ones, _mm256_sub_epi32(frac, k));
+            acc = _mm256_add_epi32(acc, pw);
+            groups += 1;
+            if groups == POW_FLUSH_GROUPS {
+                sum += hsum_u32(acc);
+                acc = _mm256_setzero_si256();
+                groups = 0;
+            }
+            // byte-pack the eight k codes (each <= 15) and store
+            let bytes = _mm256_shuffle_epi8(k, pack);
+            let eight =
+                _mm_unpacklo_epi32(_mm256_castsi256_si128(bytes), _mm256_extracti128_si256::<1>(bytes));
+            _mm_storel_epi64(ks.as_mut_ptr().add(j) as *mut __m128i, eight);
+            j += 8;
+        }
+        sum += hsum_u32(acc);
+        while j < n {
+            let (k, pow) = t.k_pow(sl[j] - m_new);
+            sum += pow;
+            ks[j] = k;
+            j += 1;
+        }
+        *ms = m_new;
+        m_prev = m_new;
+    }
+    (sum, m_prev)
+}
+
+/// Stage 2 of the f32 row kernel: `out[i] = val[k[i] + sub_slice]` —
+/// bit-identical to the scalar loop in `E2Softmax::row_kernel` (the
+/// gather reads the same table entries the scalar index would).
+///
+/// # Safety
+///
+/// AVX2 host required; `k`, `out` are the full row (`k.len() ==
+/// out.len()`) and `slice_m` its per-slice maxima as filled by stage 1
+/// with the same `chunk`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn stage2_f32_avx2(
+    t: &Log2ExpTable,
+    chunk: usize,
+    k: &[u8],
+    slice_m: &[i64],
+    m_final: i64,
+    val: &[f32; VAL_TABLE_LEN],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(k.len(), out.len());
+    let vp = val.as_ptr();
+    for ((ks, os), &m_sl) in k.chunks(chunk).zip(out.chunks_mut(chunk)).zip(slice_m.iter()) {
+        let sub = t.k(m_sl - m_final);
+        let subv = _mm256_set1_epi32(sub as i32);
+        let n = ks.len();
+        let mut j = 0;
+        while j + 8 <= n {
+            let kb = _mm_loadl_epi64(ks.as_ptr().add(j) as *const __m128i);
+            let idx = _mm256_add_epi32(_mm256_cvtepu8_epi32(kb), subv);
+            // k, sub <= 15 -> idx <= 30, always inside the 32-entry table
+            _mm256_storeu_ps(os.as_mut_ptr().add(j), _mm256_i32gather_ps::<4>(vp, idx));
+            j += 8;
+        }
+        while j < n {
+            os[j] = val[(ks[j] as i64 + sub) as usize];
+            j += 1;
+        }
+    }
+}
+
+/// Stage 2 of the code twin: `codes[i] = k[i] + sub_slice` as one wide
+/// byte add (both operands <= 15, no carry) — bit-identical to the
+/// scalar loop in `E2Softmax::row_codes`.
+///
+/// # Safety
+///
+/// AVX2 host required; same buffer contract as [`stage2_f32_avx2`] with
+/// `codes` in place of `out`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn stage2_codes_avx2(
+    t: &Log2ExpTable,
+    chunk: usize,
+    k: &[u8],
+    slice_m: &[i64],
+    m_final: i64,
+    codes: &mut [u8],
+) {
+    debug_assert_eq!(k.len(), codes.len());
+    for ((ks, cs), &m_sl) in k.chunks(chunk).zip(codes.chunks_mut(chunk)).zip(slice_m.iter()) {
+        let sub = t.k(m_sl - m_final) as u8;
+        let subv = _mm256_set1_epi8(sub as i8);
+        let n = ks.len();
+        let mut j = 0;
+        while j + 32 <= n {
+            let v = _mm256_loadu_si256(ks.as_ptr().add(j) as *const __m256i);
+            _mm256_storeu_si256(cs.as_mut_ptr().add(j) as *mut __m256i, _mm256_add_epi8(v, subv));
+            j += 32;
+        }
+        while j < n {
+            cs[j] = ks[j] + sub;
+            j += 1;
+        }
+    }
+}
+
+/// Horizontal sum of eight u32 lanes into u64.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_u32(v: __m256i) -> u64 {
+    let mut lanes = [0u32; 8];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v);
+    lanes.iter().map(|&x| x as u64).sum()
+}
+
+// ---- portable stubs ----------------------------------------------------
+//
+// `Dispatch::sanitize` guarantees the Avx2 arm is never selected off
+// x86-64, so these exist only to keep call sites cfg-free.
+
+/// Non-x86 stub; never reached (see module docs).
+///
+/// # Safety
+///
+/// Never called: `Dispatch::Avx2` cannot be constructed on this target.
+#[cfg(not(target_arch = "x86_64"))]
+pub unsafe fn stage1_avx2(
+    _t: &Log2ExpTable,
+    _chunk: usize,
+    _q: &[i64],
+    _k_out: &mut [u8],
+    _slice_m: &mut [i64],
+) -> (u64, i64) {
+    unreachable!("avx2 arm selected on a non-x86_64 target")
+}
+
+/// Non-x86 stub; never reached (see module docs).
+///
+/// # Safety
+///
+/// Never called: `Dispatch::Avx2` cannot be constructed on this target.
+#[cfg(not(target_arch = "x86_64"))]
+pub unsafe fn stage2_f32_avx2(
+    _t: &Log2ExpTable,
+    _chunk: usize,
+    _k: &[u8],
+    _slice_m: &[i64],
+    _m_final: i64,
+    _val: &[f32; VAL_TABLE_LEN],
+    _out: &mut [f32],
+) {
+    unreachable!("avx2 arm selected on a non-x86_64 target")
+}
+
+/// Non-x86 stub; never reached (see module docs).
+///
+/// # Safety
+///
+/// Never called: `Dispatch::Avx2` cannot be constructed on this target.
+#[cfg(not(target_arch = "x86_64"))]
+pub unsafe fn stage2_codes_avx2(
+    _t: &Log2ExpTable,
+    _chunk: usize,
+    _k: &[u8],
+    _slice_m: &[i64],
+    _m_final: i64,
+    _codes: &mut [u8],
+) {
+    unreachable!("avx2 arm selected on a non-x86_64 target")
+}

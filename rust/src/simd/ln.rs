@@ -1,0 +1,177 @@
+//! AVX2 arms of the AILayerNorm planar kernels (`layernorm/ai.rs`).
+//!
+//! Stage 1 vectorizes the statistic calculation: eight u8 codes and
+//! their PTF factors widen to dwords, `(code - zp) << a` accumulates
+//! `E_x` in four i64 lanes, and the compress-square magnitudes gather
+//! through the 256-entry [`COMPRESSED_SQUARE_TABLE`] as i64 pairs
+//! (`vpgatherdq`), PTF-shifted by `2a` with a 64-bit variable shift.
+//! Both reductions are exact integer sums, so lane accumulation +
+//! horizontal reduction reproduces the scalar value bit for bit.
+//!
+//! Stage 2 vectorizes the fused affine pass: the exactly-centered
+//! numerator `C·D_i - E_x` is built in i32 lanes (the caller proves it
+//! fits), converted with `vcvtdq2ps` — which rounds nearest-even exactly
+//! like the scalar `as f32` — and finished as
+//! `(gamma * si_over_c) * num + beta` in the scalar evaluation order
+//! (mul, mul, add — **no FMA**, which would change the rounding).
+//!
+//! Eligibility is the caller's job (`AiLayerNorm` gates on
+//! `zp ∈ [0, 255]`, `alpha < 16`, and the stage-2 i32 bound); rows that
+//! fail any gate take the scalar arm whole.  Pinned bit-exact by
+//! `tests/simd_dispatch.rs`.
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// Stage 1: `(Σ (code-zp)<<a, Σ sq[|code-zp|]<<2a)` — the raw sums
+/// before the deferred `<< 4` decompress, bit-identical to the scalar
+/// accumulation in `AiLayerNorm::row_stats`.
+///
+/// # Safety
+///
+/// AVX2 host required; `codes.len() == alpha.len()`, `sq` is the
+/// 256-entry compress-square table, `zp ∈ [0, 255]` and every
+/// `alpha < 16` (the caller's eligibility gate — it keeps `(code-zp)<<a`
+/// in i32 and the 64-bit shifts under 64).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn stats_avx2(zp: i32, codes: &[u8], alpha: &[u8], sq: &[i64; 256]) -> (i64, i64) {
+    debug_assert_eq!(codes.len(), alpha.len());
+    debug_assert!((0..=255).contains(&zp));
+    let c = codes.len();
+    let zpv = _mm256_set1_epi32(zp);
+    let cap = _mm256_set1_epi32(255);
+    let sqp = sq.as_ptr();
+    let mut ex_acc = _mm256_setzero_si256(); // 4 x i64
+    let mut ex2_acc = _mm256_setzero_si256(); // 4 x i64
+    let mut i = 0;
+    while i + 8 <= c {
+        let cb = _mm_loadl_epi64(codes.as_ptr().add(i) as *const __m128i);
+        let ab = _mm_loadl_epi64(alpha.as_ptr().add(i) as *const __m128i);
+        let xi = _mm256_sub_epi32(_mm256_cvtepu8_epi32(cb), zpv);
+        let a = _mm256_cvtepu8_epi32(ab);
+        // E_x term: (code - zp) << a, widened to i64 before accumulating
+        let sh = _mm256_sllv_epi32(xi, a);
+        let sh_lo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(sh));
+        let sh_hi = _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(sh));
+        ex_acc = _mm256_add_epi64(ex_acc, _mm256_add_epi64(sh_lo, sh_hi));
+        // E_x2 term: gather the compressed square by magnitude, << 2a
+        let mag = _mm256_min_epi32(_mm256_abs_epi32(xi), cap);
+        let sq_lo = _mm256_i32gather_epi64::<8>(sqp, _mm256_castsi256_si128(mag));
+        let sq_hi = _mm256_i32gather_epi64::<8>(sqp, _mm256_extracti128_si256::<1>(mag));
+        let a2 = _mm256_add_epi32(a, a);
+        let a2_lo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(a2));
+        let a2_hi = _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(a2));
+        ex2_acc = _mm256_add_epi64(ex2_acc, _mm256_sllv_epi64(sq_lo, a2_lo));
+        ex2_acc = _mm256_add_epi64(ex2_acc, _mm256_sllv_epi64(sq_hi, a2_hi));
+        i += 8;
+    }
+    let mut ex = hsum_i64(ex_acc);
+    let mut ex2 = hsum_i64(ex2_acc);
+    while i < c {
+        let xi = codes[i] as i64 - zp as i64;
+        let a = alpha[i] as u32;
+        ex += xi << a;
+        let mag = xi.unsigned_abs().min(255) as usize;
+        ex2 += sq[mag] << (2 * a);
+        i += 1;
+    }
+    (ex, ex2)
+}
+
+/// Stage 2: `out[i] = gamma[i] * si_over_c * (D_i·C - E_x) + beta[i]`
+/// with the numerator built in i32 lanes — bit-identical to the scalar
+/// loop in `AiLayerNorm::row_kernel` (same float evaluation order, and
+/// `vcvtdq2ps` rounds exactly like the scalar `i64 as f32` in range).
+///
+/// # Safety
+///
+/// AVX2 host required; all slices are one row of equal length,
+/// `zp ∈ [0, 255]`, every `alpha < 16`, and the caller has proven
+/// `|D_i·C - E_x|` and `|D_i·C|` fit in i32 for the row (the
+/// `C·(255 << max_alpha) + |E_x|` bound in `AiLayerNorm`).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)] // one row's worth of planes, mirrors row_kernel
+pub unsafe fn stage2_avx2(
+    zp: i32,
+    c: i32,
+    ex: i32,
+    si_over_c: f32,
+    codes: &[u8],
+    alpha: &[u8],
+    gamma: &[f32],
+    beta: &[f32],
+    out: &mut [f32],
+) {
+    let n = codes.len();
+    debug_assert!(alpha.len() == n && gamma.len() == n && beta.len() == n && out.len() == n);
+    let zpv = _mm256_set1_epi32(zp);
+    let cv = _mm256_set1_epi32(c);
+    let exv = _mm256_set1_epi32(ex);
+    let siv = _mm256_set1_ps(si_over_c);
+    let mut i = 0;
+    while i + 8 <= n {
+        let cb = _mm_loadl_epi64(codes.as_ptr().add(i) as *const __m128i);
+        let ab = _mm_loadl_epi64(alpha.as_ptr().add(i) as *const __m128i);
+        let d = _mm256_sllv_epi32(
+            _mm256_sub_epi32(_mm256_cvtepu8_epi32(cb), zpv),
+            _mm256_cvtepu8_epi32(ab),
+        );
+        let num = _mm256_sub_epi32(_mm256_mullo_epi32(d, cv), exv);
+        let numf = _mm256_cvtepi32_ps(num);
+        let g = _mm256_loadu_ps(gamma.as_ptr().add(i));
+        let b = _mm256_loadu_ps(beta.as_ptr().add(i));
+        let y = _mm256_add_ps(_mm256_mul_ps(_mm256_mul_ps(g, siv), numf), b);
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), y);
+        i += 8;
+    }
+    while i < n {
+        let d = (codes[i] as i64 - zp as i64) << alpha[i];
+        let num = d * c as i64 - ex as i64;
+        out[i] = gamma[i] * si_over_c * num as f32 + beta[i];
+        i += 1;
+    }
+}
+
+/// Horizontal sum of four i64 lanes.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_i64(v: __m256i) -> i64 {
+    let mut lanes = [0i64; 4];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v);
+    lanes.iter().sum()
+}
+
+// ---- portable stubs ----------------------------------------------------
+
+/// Non-x86 stub; never reached (see module docs).
+///
+/// # Safety
+///
+/// Never called: `Dispatch::Avx2` cannot be constructed on this target.
+#[cfg(not(target_arch = "x86_64"))]
+pub unsafe fn stats_avx2(_zp: i32, _codes: &[u8], _alpha: &[u8], _sq: &[i64; 256]) -> (i64, i64) {
+    unreachable!("avx2 arm selected on a non-x86_64 target")
+}
+
+/// Non-x86 stub; never reached (see module docs).
+///
+/// # Safety
+///
+/// Never called: `Dispatch::Avx2` cannot be constructed on this target.
+#[cfg(not(target_arch = "x86_64"))]
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn stage2_avx2(
+    _zp: i32,
+    _c: i32,
+    _ex: i32,
+    _si_over_c: f32,
+    _codes: &[u8],
+    _alpha: &[u8],
+    _gamma: &[f32],
+    _beta: &[f32],
+    _out: &mut [f32],
+) {
+    unreachable!("avx2 arm selected on a non-x86_64 target")
+}

@@ -1,0 +1,137 @@
+//! Lane-parallel kernel arms with runtime dispatch (DESIGN.md §3.4).
+//!
+//! The planar kernels in `softmax/e2.rs`, `layernorm/ai.rs` and
+//! `ops/attention.rs` each carry two implementations of their hot loop:
+//! the original scalar code (kept verbatim — it is both the portable
+//! fallback and the bit-exactness oracle) and an explicit-width AVX2 arm.
+//! Which arm runs is a [`Dispatch`] value chosen **once at construction**
+//! via [`Dispatch::detect`] and stored on the op, so the per-row/per-batch
+//! paths never re-probe CPU features and every existing caller gets the
+//! vector arm with zero API change.
+//!
+//! Ground rules that keep the arms bit-identical (enforced by
+//! `tests/simd_dispatch.rs` and the `bench_kernels` exactness gate):
+//!
+//! * integer stage-1 reductions may reassociate (addition is exact), but
+//!   every f32 operation keeps the scalar evaluation order — no FMA, no
+//!   reassociated float sums (A·V vectorizes across the *output* lanes so
+//!   each lane's j-walk is the scalar one);
+//! * inputs the vector arm cannot represent (out-of-grid deltas, wide PTF
+//!   shifts, non-u8 zero points) fall through to the scalar code path at
+//!   group or row granularity;
+//! * remainder tails shorter than a vector always run the scalar epilogue.
+//!
+//! `SOLE_FORCE_SCALAR=1` (read once, like the bench quick-mode switch)
+//! pins everything to [`Dispatch::Scalar`] for A/B timing and CI.
+
+use std::fmt;
+use std::sync::OnceLock;
+
+pub mod av;
+pub mod e2;
+pub mod ln;
+
+/// Which kernel arm an op selected at construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dispatch {
+    /// The portable scalar arm — also the bit-exactness oracle.
+    Scalar,
+    /// The AVX2 arm (x86-64 with runtime `avx2` support only).
+    Avx2,
+}
+
+impl Dispatch {
+    /// Probe once: AVX2 when the host supports it and
+    /// `SOLE_FORCE_SCALAR` is not set, scalar otherwise.
+    pub fn detect() -> Dispatch {
+        if force_scalar() || !avx2_supported() {
+            Dispatch::Scalar
+        } else {
+            Dispatch::Avx2
+        }
+    }
+
+    /// Clamp an explicitly requested arm to what this host can actually
+    /// run (and to scalar under `SOLE_FORCE_SCALAR`), so `with_dispatch`
+    /// constructors are safe on any machine.
+    pub fn sanitize(self) -> Dispatch {
+        match self {
+            Dispatch::Avx2 if !force_scalar() && avx2_supported() => Dispatch::Avx2,
+            _ => Dispatch::Scalar,
+        }
+    }
+
+    /// The arms runnable on this host right now — what conformance tests
+    /// and benches iterate to compare every available arm against scalar.
+    pub fn available() -> Vec<Dispatch> {
+        let mut arms = vec![Dispatch::Scalar];
+        if !force_scalar() && avx2_supported() {
+            arms.push(Dispatch::Avx2);
+        }
+        arms
+    }
+
+    /// Stable lowercase name for bench records and the `sole ops` table.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Dispatch::Scalar => "scalar",
+            Dispatch::Avx2 => "avx2",
+        }
+    }
+}
+
+impl fmt::Display for Dispatch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// `SOLE_FORCE_SCALAR` set (and not "0"), read once per process — same
+/// latch-on-first-read discipline as the bench quick-mode switch, so
+/// toggling the variable mid-run cannot desync ops constructed before
+/// and after.
+pub fn force_scalar() -> bool {
+    static FORCE: OnceLock<bool> = OnceLock::new();
+    *FORCE.get_or_init(|| {
+        std::env::var_os("SOLE_FORCE_SCALAR").is_some_and(|v| !v.is_empty() && v != "0")
+    })
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_supported() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_supported() -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detect_is_an_available_arm() {
+        let arms = Dispatch::available();
+        assert!(arms.contains(&Dispatch::Scalar));
+        assert!(arms.contains(&Dispatch::detect()));
+    }
+
+    #[test]
+    fn sanitize_is_idempotent_and_never_invents_an_arm() {
+        for &arm in &[Dispatch::Scalar, Dispatch::Avx2] {
+            let s = arm.sanitize();
+            assert_eq!(s.sanitize(), s);
+            assert!(Dispatch::available().contains(&s), "{arm:?} -> {s:?}");
+        }
+        assert_eq!(Dispatch::Scalar.sanitize(), Dispatch::Scalar);
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(Dispatch::Scalar.as_str(), "scalar");
+        assert_eq!(Dispatch::Avx2.as_str(), "avx2");
+        assert_eq!(Dispatch::Avx2.to_string(), "avx2");
+    }
+}

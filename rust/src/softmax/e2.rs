@@ -19,6 +19,7 @@
 use super::aldivision::{aldivision, q23_to_f64};
 use super::config::{DEFAULT_E, SUM_FRAC};
 use super::log2exp::{log2exp, Log2ExpTable};
+use crate::simd::Dispatch;
 
 /// Configuration of the E2Softmax datapath.
 #[derive(Debug, Clone, Copy)]
@@ -126,16 +127,38 @@ pub struct E2Softmax {
     /// Precomputed Log2Exp for the `[-255, 0]` delta range at `cfg.e`
     /// (built once in `new`; the generator is the bit-exact `log2exp`).
     table: Log2ExpTable,
+    /// Kernel arm for the planar hot paths, chosen once at construction
+    /// (DESIGN.md §3.4); `forward_introspect` is always scalar.
+    dispatch: Dispatch,
 }
 
 impl E2Softmax {
     pub fn new(cfg: E2SoftmaxConfig) -> Self {
-        E2Softmax { table: Log2ExpTable::new(cfg.e), cfg }
+        Self::with_dispatch(cfg, Dispatch::detect())
+    }
+
+    /// Construction with an explicit kernel arm (tests and benches pin
+    /// arms to compare them); the request is clamped to what this host
+    /// can run.
+    pub fn with_dispatch(cfg: E2SoftmaxConfig, dispatch: Dispatch) -> Self {
+        E2Softmax { table: Log2ExpTable::new(cfg.e), cfg, dispatch: dispatch.sanitize() }
+    }
+
+    /// The kernel arm the planar hot paths run on.
+    pub fn dispatch(&self) -> Dispatch {
+        self.dispatch
     }
 
     /// The (construction-frozen) datapath configuration.
     pub fn cfg(&self) -> E2SoftmaxConfig {
         self.cfg
+    }
+
+    /// The AVX2 arms step 8 elements inside one slice, so they only pay
+    /// off (and are only exercised) at hardware-width chunks; narrow
+    /// chunks take the scalar arm whole.
+    fn simd_row(&self) -> bool {
+        self.dispatch == Dispatch::Avx2 && self.cfg.chunk.max(1) >= 8
     }
 
     /// Full-introspection version (tests, golden vectors).  Deliberately
@@ -252,6 +275,22 @@ impl E2Softmax {
         let val = expand_table(div.c, div.base_shift);
         let chunk = self.cfg.chunk.max(1);
         let t = &self.table;
+        if self.simd_row() {
+            // SAFETY: the Avx2 arm only exists after runtime detection
+            // (Dispatch::sanitize), and row_prepare sized the buffers.
+            unsafe {
+                crate::simd::e2::stage2_f32_avx2(
+                    t,
+                    chunk,
+                    &scratch.k,
+                    &scratch.slice_m,
+                    m_final,
+                    &val,
+                    out,
+                );
+            }
+            return;
+        }
         // Stage 2: the correction sub = k(m_slice - m_final) is constant
         // per slice — hoist it, leaving a pure table[k] -> scale pipeline.
         for ((ks, os), &m_sl) in scratch
@@ -277,6 +316,20 @@ impl E2Softmax {
         let (div, m_final) = self.row_prepare(q, scratch);
         let chunk = self.cfg.chunk.max(1);
         let t = &self.table;
+        if self.simd_row() {
+            // SAFETY: as in row_kernel — detected arm, sized buffers.
+            unsafe {
+                crate::simd::e2::stage2_codes_avx2(
+                    t,
+                    chunk,
+                    &scratch.k,
+                    &scratch.slice_m,
+                    m_final,
+                    codes,
+                );
+            }
+            return div;
+        }
         for ((ks, cs), &m_sl) in scratch
             .k
             .chunks(chunk)
@@ -304,31 +357,40 @@ impl E2Softmax {
         scratch.k.resize(n, 0);
         scratch.slice_m.resize(n.div_ceil(chunk), 0);
 
-        // Stage 1: per-slice local max, then a branch-free element loop —
-        // one table load yields both k and the Q(.15) summand.
-        let mut sum: u64 = 0;
-        let mut m_prev = i64::MIN;
-        for (sl, (ks, ms)) in q
-            .chunks(chunk)
-            .zip(scratch.k.chunks_mut(chunk).zip(scratch.slice_m.iter_mut()))
-        {
-            let mut local = sl[0];
-            for &v in &sl[1..] {
-                local = local.max(v);
+        let (sum, m_final) = if self.simd_row() {
+            // SAFETY: the Avx2 arm only exists after runtime detection
+            // (Dispatch::sanitize); buffers were just sized to the row.
+            unsafe {
+                crate::simd::e2::stage1_avx2(t, chunk, q, &mut scratch.k, &mut scratch.slice_m)
             }
-            let m_new = if m_prev == i64::MIN { local } else { m_prev.max(local) };
-            if m_prev != i64::MIN && m_prev != m_new {
-                sum >>= t.k(m_prev - m_new) as u32;
+        } else {
+            // Stage 1 (scalar arm, the oracle): per-slice local max, then
+            // a branch-free element loop — one table load yields both k
+            // and the Q(.15) summand.
+            let mut sum: u64 = 0;
+            let mut m_prev = i64::MIN;
+            for (sl, (ks, ms)) in q
+                .chunks(chunk)
+                .zip(scratch.k.chunks_mut(chunk).zip(scratch.slice_m.iter_mut()))
+            {
+                let mut local = sl[0];
+                for &v in &sl[1..] {
+                    local = local.max(v);
+                }
+                let m_new = if m_prev == i64::MIN { local } else { m_prev.max(local) };
+                if m_prev != i64::MIN && m_prev != m_new {
+                    sum >>= t.k(m_prev - m_new) as u32;
+                }
+                for (ko, &qi) in ks.iter_mut().zip(sl) {
+                    let (k, pow) = t.k_pow(qi - m_new);
+                    sum += pow;
+                    *ko = k;
+                }
+                *ms = m_new;
+                m_prev = m_new;
             }
-            for (ko, &qi) in ks.iter_mut().zip(sl) {
-                let (k, pow) = t.k_pow(qi - m_new);
-                sum += pow;
-                *ko = k;
-            }
-            *ms = m_new;
-            m_prev = m_new;
-        }
-        let m_final = m_prev;
+            (sum, m_prev)
+        };
 
         // ALDivision's LOD / mantissa-probe / constant-select depend only on
         // the reduced sum — per-row constants, hoisted out of the element

@@ -2,6 +2,7 @@
 //! not vendored).  Warmup + timed iterations, reports mean / p50 / p99 /
 //! throughput; used by every target in `rust/benches/`.
 
+use std::sync::OnceLock;
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
@@ -20,12 +21,24 @@ impl BenchResult {
     }
 }
 
-/// True when `SOLE_BENCH_QUICK` is set: every bench target shrinks to a
-/// smoke-test length so CI can execute all of them cheaply (the numbers
-/// are meaningless in this mode — it exists so bench code cannot rot
-/// uncompiled or un-run).
+static QUICK: OnceLock<bool> = OnceLock::new();
+
+/// True when `SOLE_BENCH_QUICK` is set (or [`set_quick_mode`] ran first):
+/// every bench target shrinks to a smoke-test length so CI can execute
+/// all of them cheaply (the numbers are meaningless in this mode — it
+/// exists so bench code cannot rot uncompiled or un-run).  Latched on
+/// first query, so the answer is stable for the whole process.
 pub fn quick_mode() -> bool {
-    std::env::var_os("SOLE_BENCH_QUICK").is_some()
+    *QUICK.get_or_init(|| std::env::var_os("SOLE_BENCH_QUICK").is_some())
+}
+
+/// Programmatic opt-in to quick mode, for bench binaries honoring a
+/// `--quick` flag.  Must run before the first `quick_mode()` query (a
+/// later call is a no-op: the latch is already set).  This replaces the
+/// former `std::env::set_var` route, which is unsound in a process that
+/// may have running threads.
+pub fn set_quick_mode(on: bool) {
+    let _ = QUICK.set(on);
 }
 
 /// Benchmark `f`, auto-scaling iteration count to ~`target` total runtime.

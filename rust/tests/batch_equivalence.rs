@@ -178,7 +178,7 @@ fn ailayernorm_batch_through_ptf_matches_row_path() {
         s: 1.0 / 24.0,
         zp: 128,
     };
-    let ln = AiLayerNorm { zp: cal.zp };
+    let ln = AiLayerNorm::new(cal.zp);
     let gamma = vec![1f32; c];
     let beta = vec![0f32; c];
     let mut codes_batch = Vec::new();

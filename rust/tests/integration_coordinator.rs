@@ -96,7 +96,7 @@ fn layernorm_coordinator_matches_direct_kernel() {
         })
         .collect();
     let rxs: Vec<_> = rows.iter().map(|r| cl.submit(r.clone()).unwrap()).collect();
-    let ln = AiLayerNorm { zp: cal.zp };
+    let ln = AiLayerNorm::new(cal.zp);
     let mut codes = Vec::new();
     let mut want = vec![0f32; c];
     for (i, (row, rx)) in rows.iter().zip(rxs).enumerate() {

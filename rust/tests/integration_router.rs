@@ -70,7 +70,7 @@ fn layernorm_service_matches_direct_kernel_at_c768() {
     let cl = router.client();
     // the same identity calibration AiLayerNormOp::try_new uses
     let cal = PtfCalib { alpha: vec![0u8; c], s: 1.0 / 32.0, zp: DEFAULT_ZP };
-    let ln = AiLayerNorm { zp: cal.zp };
+    let ln = AiLayerNorm::new(cal.zp);
     let gamma = vec![1f32; c];
     let beta = vec![0f32; c];
     let mut rng = Rng::new(43);

@@ -54,7 +54,7 @@ fn reference_row(op: &str, row: &[f32]) -> Vec<f32> {
         "ailayernorm" => {
             let c = row.len();
             let cal = identity_calibration(c);
-            let ln = AiLayerNorm { zp: cal.zp };
+            let ln = AiLayerNorm::new(cal.zp);
             let mut codes = Vec::new();
             ptf_quantize_into(row, &cal, &mut codes);
             let mut out = vec![0f32; c];

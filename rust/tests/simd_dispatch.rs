@@ -1,0 +1,294 @@
+//! Lane-parallel kernel conformance (DESIGN.md §3.4): every dispatch arm
+//! this host can run must be BIT-exact against the scalar arm — the
+//! scalar loops are the oracle, the AVX2 arms a pure re-expression.
+//!
+//! The sweeps cover the adversarial shapes for an 8-lane kernel: rows
+//! shorter than a vector, one element either side of the lane width, the
+//! paper's shapes (L = 49, 785) whose tails land mid-vector, narrow
+//! chunks that disable the softmax SIMD arm entirely, NaN logits (code
+//! -255 through the quantize path), hand-built off-grid codes that force
+//! the stage-1 gather fallback, alpha >= 16 and out-of-u8 zero points
+//! that force the layernorm eligibility gates scalar, and degenerate
+//! 1x1 attention.  A seeded property sweep fuzzes the same invariant.
+
+use sole::layernorm::{config::DEFAULT_ZP, AiLayerNorm};
+use sole::ops::attention::AttnAvOp;
+use sole::ops::{Op, OpRegistry, PortMut, PortRef, PortType};
+use sole::simd::Dispatch;
+use sole::softmax::config::ALDIV_C0;
+use sole::softmax::e2::quantize_logits_batch_into;
+use sole::softmax::{E2Scratch, E2Softmax, E2SoftmaxConfig, CODE_SIDE_LEN};
+use sole::util::proptest;
+use sole::util::rng::Rng;
+
+/// The arms under test beyond the scalar oracle (empty on a host with no
+/// SIMD support — the suite then only checks the reporting surface).
+fn extra_arms() -> Vec<Dispatch> {
+    Dispatch::available().into_iter().filter(|&d| d != Dispatch::Scalar).collect()
+}
+
+/// Assert two f32 buffers are bit-identical (plain `==` would let a
+/// NaN-producing bug pass as "equal to itself differs").
+fn assert_bits(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{what}: elem {i} ({g} vs {w})");
+    }
+}
+
+/// Run every arm of E2Softmax over one packed batch and pin both entry
+/// points (f32 and code twin) to the scalar arm bitwise.
+fn check_e2(cfg: E2SoftmaxConfig, l: usize, q: &[i64], what: &str) {
+    let rows = q.len() / l;
+    let oracle = E2Softmax::with_dispatch(cfg, Dispatch::Scalar);
+    let mut want = vec![0f32; q.len()];
+    let mut want_codes = vec![0u8; q.len()];
+    let mut want_side = vec![0f32; rows * CODE_SIDE_LEN];
+    let mut s = E2Scratch::default();
+    oracle.forward_batch_f32(q, l, &mut want, &mut s);
+    oracle.forward_batch_codes(q, l, &mut want_codes, &mut want_side, &mut s);
+    for arm in extra_arms() {
+        let sm = E2Softmax::with_dispatch(cfg, arm);
+        assert_eq!(sm.dispatch(), arm, "{what}: arm survives construction");
+        let mut got = vec![0f32; q.len()];
+        let mut got_codes = vec![0u8; q.len()];
+        let mut got_side = vec![0f32; rows * CODE_SIDE_LEN];
+        let mut s = E2Scratch::default();
+        sm.forward_batch_f32(q, l, &mut got, &mut s);
+        sm.forward_batch_codes(q, l, &mut got_codes, &mut got_side, &mut s);
+        assert_bits(&got, &want, &format!("{what} [{arm}] f32"));
+        assert_eq!(got_codes, want_codes, "{what} [{arm}] codes");
+        assert_bits(&got_side, &want_side, &format!("{what} [{arm}] side"));
+    }
+}
+
+/// Run every arm of AILayerNorm over one packed batch and pin the f32
+/// and q8 batch entry points to the scalar arm bitwise.
+fn check_ln(zp: i64, c: usize, codes: &[u8], alpha: &[u8], what: &str) {
+    let rows = codes.len() / c;
+    let mut rng = Rng::new(0xA11A);
+    let gamma: Vec<f32> = (0..c).map(|_| 1.0 + 0.1 * rng.normal() as f32).collect();
+    let beta: Vec<f32> = (0..c).map(|_| 0.2 * rng.normal() as f32).collect();
+    let oracle = AiLayerNorm::with_dispatch(zp, Dispatch::Scalar);
+    let mut want = vec![0f32; codes.len()];
+    oracle.forward_batch_f32(codes, alpha, &gamma, &beta, &mut want);
+    let mut row = Vec::new();
+    let mut want_q8 = vec![0u8; codes.len()];
+    let mut want_scale = vec![0f32; rows];
+    oracle.forward_batch_q8(codes, alpha, &gamma, &beta, &mut row, &mut want_q8, &mut want_scale);
+    for arm in extra_arms() {
+        let ln = AiLayerNorm::with_dispatch(zp, arm);
+        assert_eq!(ln.dispatch(), arm, "{what}: arm survives construction");
+        let mut got = vec![0f32; codes.len()];
+        ln.forward_batch_f32(codes, alpha, &gamma, &beta, &mut got);
+        assert_bits(&got, &want, &format!("{what} [{arm}] f32"));
+        let mut got_q8 = vec![0u8; codes.len()];
+        let mut got_scale = vec![0f32; rows];
+        ln.forward_batch_q8(codes, alpha, &gamma, &beta, &mut row, &mut got_q8, &mut got_scale);
+        assert_eq!(got_q8, want_q8, "{what} [{arm}] q8 codes");
+        assert_bits(&got_scale, &want_scale, &format!("{what} [{arm}] q8 scales"));
+    }
+}
+
+#[test]
+fn e2softmax_arms_bitwise_equal_across_shapes() {
+    let mut rng = Rng::new(0x51D1);
+    // lane_width +/- 1, sub-vector rows, the paper's shapes, a pow-2 point
+    for &l in &[7usize, 8, 9, 31, 32, 33, 49, 128, 785, 1024] {
+        for &chunk in &[1usize, 7, 32] {
+            for &rows in &[0usize, 1, 16] {
+                let q: Vec<i64> = (0..rows * l).map(|_| -rng.range_i64(0, 256)).collect();
+                let cfg = E2SoftmaxConfig { chunk, ..E2SoftmaxConfig::default() };
+                check_e2(cfg, l, &q, &format!("L={l} chunk={chunk} rows={rows}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn e2softmax_arms_agree_on_nan_logits() {
+    // NaN logits quantize to the bottom code -255 (treated as -inf);
+    // the arms must agree on rows that mix NaN with real values and on
+    // an all-NaN row (uniform floor).
+    let l = 33;
+    let mut rng = Rng::new(0xF100D);
+    let mut x = vec![0f32; 3 * l];
+    rng.fill_normal(&mut x, 0.0, 2.0);
+    for i in 0..l {
+        if i % 5 == 0 {
+            x[i] = f32::NAN;
+        }
+        x[2 * l + i] = f32::NAN; // whole last row NaN
+    }
+    let cfg = E2SoftmaxConfig::default();
+    let mut q = Vec::new();
+    quantize_logits_batch_into(&x, l, cfg.e, &mut q);
+    assert!(q.contains(&-255), "NaN must reach the bottom code");
+    check_e2(cfg, l, &q, "nan logits");
+}
+
+#[test]
+fn e2softmax_arms_agree_on_off_grid_codes() {
+    // Hand-built codes below the 8-bit grid (unreachable through the
+    // quantize path) force stage 1's gather fallback: any 8-group with a
+    // delta > 255 must take the same scalar k_pow route in both arms.
+    let l = 40;
+    let mut q = vec![0i64; 2 * l];
+    for (i, v) in q.iter_mut().enumerate() {
+        *v = match i % 4 {
+            0 => -(i as i64 % 200),
+            1 => -1000 - i as i64, // off-grid
+            2 => -(i as i64 % 30),
+            _ => -100_000, // far off-grid
+        };
+    }
+    for &chunk in &[8usize, 32] {
+        let cfg = E2SoftmaxConfig { chunk, ..E2SoftmaxConfig::default() };
+        check_e2(cfg, l, &q, &format!("off-grid chunk={chunk}"));
+    }
+}
+
+#[test]
+fn ailayernorm_arms_bitwise_equal_across_shapes() {
+    let mut rng = Rng::new(0x1A7E);
+    for &c in &[7usize, 8, 9, 49, 128, 768, 785, 1024] {
+        for &rows in &[0usize, 1, 16] {
+            let codes: Vec<u8> = (0..rows * c).map(|_| rng.range_i64(0, 256) as u8).collect();
+            let alpha: Vec<u8> = (0..c).map(|_| rng.range_i64(0, 4) as u8).collect();
+            check_ln(DEFAULT_ZP, c, &codes, &alpha, &format!("C={c} rows={rows}"));
+        }
+    }
+}
+
+#[test]
+fn ailayernorm_arms_agree_where_the_gates_fall_scalar() {
+    // The SIMD arm gates itself off (whole-row or stage-by-stage) on
+    // large alpha, saturating stage-2 numerators and out-of-u8 zero
+    // points; the contract — arm equals scalar bitwise — must hold
+    // regardless of which gate fired.
+    let mut rng = Rng::new(0x6A7E);
+    let c = 100;
+    let codes: Vec<u8> = (0..4 * c).map(|_| rng.range_i64(0, 256) as u8).collect();
+    // alpha up to 15: stats stay SIMD-eligible but the stage-2 i32
+    // bound trips for large C; alpha >= 16 disables the SIMD arm whole
+    for alpha_max in [16i64, 20, 32] {
+        let alpha: Vec<u8> = (0..c).map(|_| rng.range_i64(0, alpha_max) as u8).collect();
+        check_ln(DEFAULT_ZP, c, &codes, &alpha, &format!("alpha<{alpha_max}"));
+    }
+    // stage-2 saturation: wide C with the largest in-gate alpha
+    let cw = 2048;
+    let codes_w: Vec<u8> = (0..2 * cw).map(|_| rng.range_i64(0, 256) as u8).collect();
+    let alpha_w: Vec<u8> = (0..cw).map(|_| rng.range_i64(12, 16) as u8).collect();
+    check_ln(DEFAULT_ZP, cw, &codes_w, &alpha_w, "stage-2 saturation");
+    // out-of-u8 zero points
+    let alpha: Vec<u8> = (0..c).map(|_| rng.range_i64(0, 4) as u8).collect();
+    for zp in [-3i64, 300] {
+        check_ln(zp, c, &codes, &alpha, &format!("zp={zp}"));
+    }
+}
+
+#[test]
+fn attn_av_arms_bitwise_equal_on_both_ports() {
+    let mut rng = Rng::new(0xAA01);
+    for &(l, d) in &[(49usize, 64usize), (128, 64), (8, 7), (16, 9), (1, 1)] {
+        let b = 3usize;
+        // f32 port: random probabilities and values through run_batch
+        let oracle =
+            AttnAvOp::with_dispatch(l, d, PortType::F32, Dispatch::Scalar).expect("scalar f32");
+        let mut input = vec![0f32; b * oracle.item_len()];
+        rng.fill_normal(&mut input, 0.0, 1.0);
+        let mut want = vec![0f32; b * l * d];
+        let mut s = oracle.make_scratch();
+        oracle.run_batch(b, &input, &mut want, &mut s).expect("scalar run");
+        for arm in extra_arms() {
+            let av = AttnAvOp::with_dispatch(l, d, PortType::F32, arm).expect("arm f32");
+            let mut got = vec![0f32; b * l * d];
+            let mut s = av.make_scratch();
+            av.run_batch(b, &input, &mut got, &mut s).expect("arm run");
+            assert_bits(&got, &want, &format!("attn-av f32 L={l} D={d} [{arm}]"));
+        }
+
+        // code port: in-table codes plus valid per-row divider headers
+        let oracle = AttnAvOp::with_dispatch(l, d, PortType::Log2Code5, Dispatch::Scalar)
+            .expect("scalar codes");
+        let codes: Vec<u8> = (0..b * l * l).map(|i| (i % 32) as u8).collect();
+        let side_item = CODE_SIDE_LEN * l + l * d;
+        let mut side = vec![0f32; b * side_item];
+        for item in side.chunks_exact_mut(side_item) {
+            let (headers, v) = item.split_at_mut(CODE_SIDE_LEN * l);
+            for h in headers.chunks_exact_mut(CODE_SIDE_LEN) {
+                h[0] = ALDIV_C0 as f32;
+                h[1] = 6.0;
+            }
+            rng.fill_normal(v, 0.0, 1.0);
+        }
+        let mut want = vec![0f32; b * l * d];
+        let mut s = oracle.make_scratch();
+        oracle
+            .run_batch_ports(
+                b,
+                PortRef::Log2Code5 { codes: &codes, side: &side },
+                PortMut::F32(&mut want),
+                &mut s,
+            )
+            .expect("scalar ports run");
+        for arm in extra_arms() {
+            let av = AttnAvOp::with_dispatch(l, d, PortType::Log2Code5, arm).expect("arm codes");
+            let mut got = vec![0f32; b * l * d];
+            let mut s = av.make_scratch();
+            av.run_batch_ports(
+                b,
+                PortRef::Log2Code5 { codes: &codes, side: &side },
+                PortMut::F32(&mut got),
+                &mut s,
+            )
+            .expect("arm ports run");
+            assert_bits(&got, &want, &format!("attn-av codes L={l} D={d} [{arm}]"));
+        }
+    }
+}
+
+#[test]
+fn property_arms_match_scalar_on_random_shapes() {
+    proptest::check("e2softmax-simd-eq", 40, 0x51D2, |rng| {
+        let l = proptest::size(rng, 300);
+        let chunk = proptest::size(rng, 64);
+        let rows = proptest::size(rng, 4);
+        let q: Vec<i64> = (0..rows * l).map(|_| -rng.range_i64(0, 256)).collect();
+        let cfg = E2SoftmaxConfig { chunk, ..E2SoftmaxConfig::default() };
+        check_e2(cfg, l, &q, &format!("prop L={l} chunk={chunk} rows={rows}"));
+    });
+    proptest::check("ailayernorm-simd-eq", 40, 0x1A7F, |rng| {
+        let c = proptest::size(rng, 900);
+        let rows = proptest::size(rng, 4);
+        let codes: Vec<u8> = (0..rows * c).map(|_| rng.range_i64(0, 256) as u8).collect();
+        let alpha: Vec<u8> = (0..c).map(|_| rng.range_i64(0, 16) as u8).collect();
+        check_ln(DEFAULT_ZP, c, &codes, &alpha, &format!("prop C={c} rows={rows}"));
+    });
+}
+
+#[test]
+fn op_layer_reports_the_selected_arm() {
+    let detected = Dispatch::detect();
+    assert!(Dispatch::available().contains(&detected));
+    let registry = OpRegistry::builtin();
+    // the paper pair and the A·V stage carry a vectorized kernel and
+    // report the host arm; the exact baselines have none
+    for spec in ["e2softmax/L128", "ailayernorm/C768"] {
+        let (_, op) = registry.build(spec).expect(spec);
+        assert_eq!(op.dispatch(), Some(detected), "{spec}");
+    }
+    for spec in ["softmax-exact/L128", "layernorm-exact/C768"] {
+        let (_, op) = registry.build(spec).expect(spec);
+        assert_eq!(op.dispatch(), None, "{spec}");
+    }
+    // pipelines surface their first dispatched stage
+    let (_, op) = registry.build("attention/L128xD64").expect("attention");
+    assert_eq!(op.dispatch(), Some(detected), "fused attention pipeline");
+    let (_, op) = registry.build("attention-exact/L128xD64").expect("attention-exact");
+    assert_eq!(
+        op.dispatch(),
+        Some(detected),
+        "exact attention still stages A·V through the dispatched kernel"
+    );
+}
