@@ -20,6 +20,13 @@
 //! storage claim): the code port must stay ≤ 1/3 of the f32-staged
 //! bytes, asserted against `PipelineOp::staging_bytes_per_item()`.
 //!
+//! The block section extends the storage claim to the full transformer
+//! block (`impl = fused_ports` vs `impl = staged_dequant`): the fused
+//! `block/*` pipeline consumes its `ptf-u8` and `log2c5` boundaries
+//! natively, the comparator widens the same producers through dequant
+//! adapter stages.  Bit-exactness and the total-staging-bytes win are
+//! asserted before timing.
+//!
 //! A fourth section measures the lane-parallel kernel arms (DESIGN.md
 //! §3.4): the same planar kernels with dispatch pinned to `scalar` vs
 //! whatever `Dispatch::detect()` picks on this host.  The two arms are
@@ -42,6 +49,7 @@ use sole::layernorm::rsqrt::rsqrt_hw;
 use sole::layernorm::AiLayerNorm;
 use sole::layernorm::config::DEFAULT_ZP;
 use sole::ops::attention::{fused_pipeline, unfused_pipeline, AttnAvOp};
+use sole::ops::block::{fused_block, unfused_block};
 use sole::ops::{Op, PortMut, PortRef, PortType};
 use sole::simd::Dispatch;
 use sole::softmax::{config, log2exp, E2Scratch, E2Softmax, E2SoftmaxConfig, CODE_SIDE_LEN};
@@ -403,6 +411,82 @@ fn main() {
                 Some(fused_pq),
             ));
         }
+    }
+
+    // Transformer block (DESIGN.md §3.5): the fused block pipeline whose
+    // quantized boundaries are consumed natively vs the comparator that
+    // widens the same producers through dequant adapter stages.  Same
+    // arithmetic in the same order — bit-exactness is asserted before
+    // timing (also pinned in ops/block.rs), so the ratio measures what
+    // consuming the low-bit ports in place buys.
+    println!("\nblock — fused quantized-boundary block vs dequant-adapter comparator");
+    for &l in &[49usize, 128] {
+        let (d, b) = (HEAD_D, 4usize);
+        let fused = fused_block(l, d).expect("fused block pipeline");
+        let staged = unfused_block(l, d).expect("staged block pipeline");
+        let mut input = vec![0f32; b * fused.item_len()];
+        rng.fill_normal(&mut input, 0.0, 1.0);
+        let mut out_fused = vec![0f32; b * fused.out_len()];
+        let mut out_staged = vec![0f32; b * staged.out_len()];
+        let mut fs = fused.make_scratch();
+        let mut ss = staged.make_scratch();
+        fused.run_batch(b, &input, &mut out_fused, &mut fs).expect("fused run");
+        staged.run_batch(b, &input, &mut out_staged, &mut ss).expect("staged run");
+        assert_eq!(out_fused, out_staged, "fused block diverged at L={l} D={d} B={b}");
+
+        // the storage claim across the whole block: summed over every
+        // stage boundary, the fused path (codes + f32 sidecars) must
+        // stage fewer bytes per item than the adapter-widened comparator
+        let fused_total: usize = fused.staging_bytes_per_item().iter().sum();
+        let staged_total: usize = staged.staging_bytes_per_item().iter().sum();
+        assert!(
+            fused_total < staged_total,
+            "fused block staging must beat the comparator at L={l}: \
+             {fused_total} vs {staged_total} bytes"
+        );
+
+        let rs = bench(&format!("block staged      L={l:<4} B={b:<2}"), TARGET, || {
+            staged
+                .run_batch(b, std::hint::black_box(&input), &mut out_staged, &mut ss)
+                .expect("staged run");
+        });
+        report(&rs);
+        let rf = bench(&format!("block fused       L={l:<4} B={b:<2}"), TARGET, || {
+            fused
+                .run_batch(b, std::hint::black_box(&input), &mut out_fused, &mut fs)
+                .expect("fused run");
+        });
+        report(&rf);
+        let speedup = rs.mean.as_secs_f64() / rf.mean.as_secs_f64();
+        println!(
+            "    -> {:.1} items/s staged, {:.1} items/s fused ({speedup:.2}x), \
+             staging {fused_total} vs {staged_total} bytes/item",
+            b as f64 * rs.per_sec(),
+            b as f64 * rf.per_sec(),
+        );
+        let row_elems = fused.item_len();
+        results.push(record(
+            "block",
+            l,
+            row_elems,
+            b,
+            "staged_dequant",
+            staged.dispatch().map_or("-", |x| x.as_str()),
+            &rs,
+            None,
+            Some(staged_total),
+        ));
+        results.push(record(
+            "block",
+            l,
+            row_elems,
+            b,
+            "fused_ports",
+            fused.dispatch().map_or("-", |x| x.as_str()),
+            &rf,
+            Some(speedup),
+            Some(fused_total),
+        ));
     }
 
     // Lane-parallel kernels (DESIGN.md §3.4): the same planar kernels

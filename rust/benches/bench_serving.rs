@@ -21,6 +21,15 @@
 //! — and the document a top-level one, so records from different
 //! machines stay comparable.
 //!
+//! Every row carries a `mode` field: `prefill` for the batching
+//! services above, `decode` for the second phase, which registers the
+//! stateful `decode-attention` family as a session-affine decode service
+//! on the *same* router budget and drives interleaved KV-cache sessions
+//! token by token — the serving regime the batching pool cannot express
+//! (stateless families sweep as prefill; stateful ones are skipped there
+//! and measured here).  Decode rows report tokens/s and per-step
+//! latency from the same sharded metrics schema.
+//!
 //! Flags: `--json` writes the JSON artifact (default path
 //! `<repo>/BENCH_serving.json`, override with `--out <path>`); `--quick`
 //! is the CI smoke mode (equivalent to `SOLE_BENCH_QUICK=1`: numbers are
@@ -47,18 +56,29 @@ fn main() {
     // one worker per service: the min-one-per-service floor makes any
     // smaller budget silently run that many threads anyway, and the
     // recorded total_workers must match the threads that actually served
-    let mut specs: Vec<String> = registry
-        .names()
-        .iter()
-        .map(|n| registry.canonical_spec(n).expect("registered op").to_string())
-        .collect();
+    let mut specs: Vec<String> = Vec::new();
+    for n in registry.names() {
+        let spec = registry.canonical_spec(n).expect("registered op").to_string();
+        let (_, op) = registry.build(&spec).expect("registered spec");
+        if op.stateful() {
+            continue; // stateful families get the decode phase below
+        }
+        specs.push(spec);
+    }
     // the attention row family: the canonical fused + exact pipelines are
     // already in the registry sweep; add the paper's DeiT sequence length
     specs.push("attention/L49xD64".to_string());
-    let total_workers = specs.len();
+    // the decode phase: the stateful family at its canonical spec, one
+    // lane from the same worker budget
+    let decode_spec =
+        registry.canonical_spec("decode-attention").expect("registered op").to_string();
+    let decode_sessions = 4usize;
+    let decode_steps = if quick_mode() { 16 } else { 128 };
+    let total_workers = specs.len() + 1;
     println!(
         "bench_serving — every registered op through the ServiceRouter \
-         ({total_workers} workers, {per_service} requests/op){}",
+         ({total_workers} workers, {per_service} requests/op, then \
+         {decode_sessions}x{decode_steps} decode steps){}",
         if quick_mode() { " [QUICK smoke mode — numbers meaningless]" } else { "" }
     );
 
@@ -68,6 +88,7 @@ fn main() {
     for spec in &specs {
         builder = builder.op_service(&registry, spec, vec![1, 4, 8, 16]).expect("registry spec");
     }
+    builder = builder.decode_service(&registry, &decode_spec, 1).expect("decode spec");
     let router = builder.start().expect("router start");
     let client = router.client();
 
@@ -134,6 +155,7 @@ fn main() {
         results.push(obj(vec![
             ("op", Json::Str(op)),
             ("spec", Json::Str(name.clone())),
+            ("mode", Json::Str("prefill".to_string())),
             ("item_len", Json::Int(*item as i64)),
             ("dispatch", Json::Str(dispatch.clone())),
             ("workers", Json::Int(router.workers(name).unwrap_or(0) as i64)),
@@ -146,9 +168,65 @@ fn main() {
         ]));
     }
     assert_eq!(total_completed, submitted, "merged conservation");
-    // the recorded budget is the actual thread count (floor-one split)
-    let worker_sum: usize = lanes.iter().filter_map(|(n, _, _, _)| router.workers(n)).sum();
+    // the recorded budget is the actual thread count (floor-one split),
+    // decode lane included
+    let worker_sum: usize = lanes.iter().filter_map(|(n, _, _, _)| router.workers(n)).sum::<usize>()
+        + router.workers(&decode_spec).expect("decode service");
     assert_eq!(worker_sum, total_workers, "budget must match the served thread count");
+
+    // decode phase: interleaved KV-cache sessions, one token per request,
+    // so every step depends on server-side state from the previous one
+    let decode_item = client.decode_item_len(&decode_spec).expect("decode service");
+    let (_, decode_op) = registry.build(&decode_spec).expect("registered spec");
+    let decode_dispatch = decode_op.dispatch().map_or("-", |d| d.as_str()).to_string();
+    let mut step = vec![0f32; decode_item];
+    let d0 = Instant::now();
+    for _ in 0..decode_steps {
+        let rxs: Vec<_> = (0..decode_sessions as u64)
+            .map(|sid| {
+                rng.fill_normal(&mut step, 0.0, 1.0);
+                client.submit_decode(&decode_spec, sid, step.clone()).expect("decode submit")
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().expect("decode response");
+        }
+    }
+    let decode_wall = d0.elapsed().as_secs_f64();
+    let dm = router.metrics(&decode_spec).expect("decode service");
+    let decode_completed = (decode_sessions * decode_steps) as u64;
+    assert_eq!(dm.accepted(), decode_completed, "{decode_spec}: accepted");
+    assert_eq!(dm.errors(), 0, "{decode_spec}: errors");
+    assert_eq!(dm.completed(), decode_completed, "{decode_spec}: conservation");
+    let (dp50, dp99, dmean) = dm.total_latency();
+    let tokens_per_sec = decode_completed as f64 / decode_wall;
+    println!(
+        "{:>20} {:>4} {:>10.0} {:>10.2} {:>10.2} {:>10.2} {:>10}",
+        decode_spec,
+        router.workers(&decode_spec).unwrap_or(0),
+        tokens_per_sec,
+        dp50 * 1e3,
+        dp99 * 1e3,
+        dmean * 1e3,
+        format!("{}sess", router.sessions(&decode_spec).unwrap_or(0)),
+    );
+    results.push(obj(vec![
+        ("op", Json::Str("decode-attention".to_string())),
+        ("spec", Json::Str(decode_spec.clone())),
+        ("mode", Json::Str("decode".to_string())),
+        ("item_len", Json::Int(decode_item as i64)),
+        ("dispatch", Json::Str(decode_dispatch)),
+        ("workers", Json::Int(router.workers(&decode_spec).unwrap_or(0) as i64)),
+        ("sessions", Json::Int(decode_sessions as i64)),
+        ("steps_per_session", Json::Int(decode_steps as i64)),
+        ("completed", Json::Int(decode_completed as i64)),
+        ("rows_per_sec", Json::Num(tokens_per_sec)),
+        ("p50_ms", Json::Num(dp50 * 1e3)),
+        ("p99_ms", Json::Num(dp99 * 1e3)),
+        ("mean_ms", Json::Num(dmean * 1e3)),
+        ("mean_batch", Json::Num(dm.mean_batch())),
+    ]));
+
     let (mp50, mp99, mmean) = router.merged_latency();
     let merged_rows_per_sec = submitted as f64 / wall;
     println!(
@@ -184,7 +262,19 @@ fn main() {
                 obj(vec![
                     (
                         "rows_per_sec",
-                        Json::Str("requests completed per wall second, mixed load".to_string()),
+                        Json::Str(
+                            "requests completed per wall second, mixed load \
+                             (decode rows: tokens/s across the interleaved sessions)"
+                                .to_string(),
+                        ),
+                    ),
+                    (
+                        "mode",
+                        Json::Str(
+                            "prefill = batching service sweep; decode = session-affine \
+                             KV-cache phase"
+                                .to_string(),
+                        ),
                     ),
                     (
                         "p50_ms",

@@ -137,6 +137,15 @@ impl OpBackend {
     /// path — there is deliberately no panicking `new`.
     pub fn try_new(op: Arc<dyn Op>, buckets: Vec<usize>) -> Result<OpBackend> {
         anyhow::ensure!(op.item_len() > 0, "op '{}' has an empty item", op.name());
+        // stateless workers would silently give every request a fresh
+        // (empty) session; stateful ops are served with session affinity
+        // by the decode service instead
+        anyhow::ensure!(
+            !op.stateful(),
+            "op '{}' is stateful; serve it through the decode service (sole serve --decode), \
+             not a stateless op backend",
+            op.name()
+        );
         // the serving edge speaks f32 only: an op with a quantized outer
         // port must be wrapped in a PipelineOp, which dequantizes its
         // tail and rejects quantized entry stages
@@ -267,6 +276,17 @@ mod tests {
         let reg = OpRegistry::builtin();
         let be = OpBackend::from_spec(&reg, "ailayernorm-ptf/C64", vec![1]).unwrap();
         assert_eq!((be.item_input_len(), be.item_output_len()), (64, 64));
+    }
+
+    #[test]
+    fn stateful_ops_are_rejected_at_the_serving_boundary() {
+        // decode-attention keeps a KV cache per session: a stateless
+        // worker pool must refuse it and point at the decode service
+        let reg = OpRegistry::builtin();
+        let be = OpBackend::from_spec(&reg, "decode-attention/L8xD4", vec![1]);
+        let err = format!("{:#}", be.unwrap_err());
+        assert!(err.contains("stateful"), "{err}");
+        assert!(err.contains("decode service"), "{err}");
     }
 
     #[test]

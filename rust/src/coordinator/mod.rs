@@ -21,12 +21,15 @@
 //!
 //! One `Coordinator` serves one backend at one item length; `router`
 //! (DESIGN.md §5.1) stacks many of them behind named services so a single
-//! process serves the paper's full mixed-op, mixed-shape workload.
+//! process serves the paper's full mixed-op, mixed-shape workload, and
+//! `session` adds the session-affine decode pool for stateful KV-cache
+//! ops (DESIGN.md §3.5) — the batching pool here is the prefill path.
 
 pub mod backend;
 pub mod batcher;
 pub mod metrics;
 pub mod router;
+pub mod session;
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -42,6 +45,7 @@ pub use router::{
     paper_service_specs, paper_services, RouterClient, ServiceRouter, ServiceRouterBuilder,
     ServiceSpec,
 };
+pub use session::{DecodeClient, DecodeService};
 
 /// One inference request: a flat f32 item (e.g. one image or one row).
 pub struct Request {

@@ -16,6 +16,13 @@
 //! larger share without starving the rest.  Metrics stay per-service
 //! (each coordinator keeps its own sharded `Metrics`) and merge on read
 //! for the cross-service view (`Metrics::merged_summary`).
+//!
+//! Stateful decode ops join the same budget through
+//! [`ServiceRouterBuilder::decode_service`]: they get a session-affine
+//! [`DecodeService`] pool instead of a batching coordinator (a stateless
+//! pool would hand every request a fresh, empty KV cache), and
+//! `RouterClient::infer_decode` routes `(service, session, step)`
+//! triples to the session's pinned lane.
 
 use std::collections::BTreeMap;
 use std::sync::{mpsc, Arc};
@@ -25,8 +32,9 @@ use anyhow::{Context, Result};
 use super::backend::{Backend, OpBackend};
 use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
+use super::session::{DecodeClient, DecodeService};
 use super::{Client, Coordinator, Response, TrySubmit};
-use crate::ops::OpRegistry;
+use crate::ops::{Op, OpRegistry};
 
 /// Declarative description of one named service before the router starts.
 pub struct ServiceSpec {
@@ -38,11 +46,20 @@ pub struct ServiceSpec {
     pub weight: usize,
 }
 
+/// Declarative description of one decode service: a stateful op served
+/// with session affinity instead of a batching pool.
+struct DecodeSpec {
+    name: String,
+    op: Arc<dyn Op>,
+    weight: usize,
+}
+
 /// Builder: register services, then `start()` the per-service pools.
 pub struct ServiceRouterBuilder {
     total_workers: usize,
     default_policy: BatchPolicy,
     specs: Vec<ServiceSpec>,
+    decode_specs: Vec<DecodeSpec>,
 }
 
 impl ServiceRouterBuilder {
@@ -97,26 +114,66 @@ impl ServiceRouterBuilder {
         Ok(self.spec(ServiceSpec { name: parsed.to_string(), backend, policy, weight }))
     }
 
-    /// Split the worker budget and start every service's pool.
+    /// Register a decode service from a registry spec string
+    /// (`decode-attention/L128xD64`): the op must be stateful, and the
+    /// service draws `weight` shares of the worker budget as
+    /// session-pinned lanes rather than a batching pool.
+    pub fn decode_service(
+        mut self,
+        registry: &OpRegistry,
+        spec: &str,
+        weight: usize,
+    ) -> Result<Self> {
+        let (parsed, op) = registry.build(spec)?;
+        anyhow::ensure!(
+            op.stateful(),
+            "op '{parsed}' is stateless; register it with op_service, not decode_service"
+        );
+        self.decode_specs.push(DecodeSpec { name: parsed.to_string(), op, weight });
+        Ok(self)
+    }
+
+    /// Split the worker budget and start every service's pool —
+    /// batching coordinators and session-affine decode pools draw from
+    /// the same budget.
     pub fn start(self) -> Result<ServiceRouter> {
-        anyhow::ensure!(!self.specs.is_empty(), "router needs at least one service");
+        anyhow::ensure!(
+            !self.specs.is_empty() || !self.decode_specs.is_empty(),
+            "router needs at least one service"
+        );
         // validate every name before spawning anything: a failure after
         // Coordinator::start would leak running worker pools
         {
             let mut seen = std::collections::BTreeSet::new();
-            for spec in &self.specs {
-                anyhow::ensure!(!spec.name.is_empty(), "service name must be non-empty");
-                anyhow::ensure!(seen.insert(&spec.name), "duplicate service name '{}'", spec.name);
+            for name in self
+                .specs
+                .iter()
+                .map(|s| &s.name)
+                .chain(self.decode_specs.iter().map(|d| &d.name))
+            {
+                anyhow::ensure!(!name.is_empty(), "service name must be non-empty");
+                anyhow::ensure!(seen.insert(name), "duplicate service name '{name}'");
             }
         }
-        let weights: Vec<usize> = self.specs.iter().map(|s| s.weight.max(1)).collect();
+        let weights: Vec<usize> = self
+            .specs
+            .iter()
+            .map(|s| s.weight.max(1))
+            .chain(self.decode_specs.iter().map(|d| d.weight.max(1)))
+            .collect();
         let shares = split_workers(self.total_workers, &weights);
+        let (batch_shares, decode_shares) = shares.split_at(self.specs.len());
         let mut services = BTreeMap::new();
-        for (spec, workers) in self.specs.into_iter().zip(shares) {
+        for (spec, &workers) in self.specs.into_iter().zip(batch_shares) {
             let coordinator = Coordinator::start(spec.backend, spec.policy, workers);
             services.insert(spec.name, Service { coordinator, workers });
         }
-        Ok(ServiceRouter { services })
+        let mut decode = BTreeMap::new();
+        for (spec, &workers) in self.decode_specs.into_iter().zip(decode_shares) {
+            let service = DecodeService::start(spec.op, workers)?;
+            decode.insert(spec.name, service);
+        }
+        Ok(ServiceRouter { services, decode })
     }
 }
 
@@ -130,6 +187,7 @@ struct Service {
 /// The registry of running services behind one process.
 pub struct ServiceRouter {
     services: BTreeMap<String, Service>,
+    decode: BTreeMap<String, DecodeService>,
 }
 
 impl ServiceRouter {
@@ -139,22 +197,42 @@ impl ServiceRouter {
             total_workers: total_workers.max(1),
             default_policy: BatchPolicy::default(),
             specs: Vec::new(),
+            decode_specs: Vec::new(),
         }
     }
 
-    /// Registered service names, ascending.
+    /// Registered batching service names, ascending (decode services are
+    /// listed by [`ServiceRouter::decode_services`]).
     pub fn services(&self) -> Vec<&str> {
         self.services.keys().map(String::as_str).collect()
     }
 
-    /// This service's metrics (None for an unknown name).
+    /// Registered decode service names, ascending.
+    pub fn decode_services(&self) -> Vec<&str> {
+        self.decode.keys().map(String::as_str).collect()
+    }
+
+    /// This service's metrics (None for an unknown name); decode
+    /// services report through the same sharded type.
     pub fn metrics(&self, service: &str) -> Option<&Arc<Metrics>> {
-        self.services.get(service).map(|s| &s.coordinator.metrics)
+        self.services
+            .get(service)
+            .map(|s| &s.coordinator.metrics)
+            .or_else(|| self.decode.get(service).map(|d| &d.metrics))
     }
 
     /// Workers assigned to this service by the budget split.
     pub fn workers(&self, service: &str) -> Option<usize> {
-        self.services.get(service).map(|s| s.workers)
+        self.services
+            .get(service)
+            .map(|s| s.workers)
+            .or_else(|| self.decode.get(service).map(|d| d.workers()))
+    }
+
+    /// Distinct sessions a decode service has seen (None for unknown or
+    /// batching services).
+    pub fn sessions(&self, service: &str) -> Option<u64> {
+        self.decode.get(service).map(|d| d.sessions())
     }
 
     /// A cloneable handle routing requests by service name.
@@ -166,17 +244,27 @@ impl ServiceRouter {
                     .map(|(name, s)| (name.clone(), s.coordinator.client()))
                     .collect(),
             ),
+            decode_routes: Arc::new(
+                self.decode.iter().map(|(name, d)| (name.clone(), d.client())).collect(),
+            ),
         }
     }
 
-    /// Cross-service merged metrics line.
+    fn all_metrics(&self) -> impl Iterator<Item = &Metrics> {
+        self.services
+            .values()
+            .map(|s| &*s.coordinator.metrics)
+            .chain(self.decode.values().map(|d| &*d.metrics))
+    }
+
+    /// Cross-service merged metrics line (batching + decode).
     pub fn merged_summary(&self) -> String {
-        Metrics::merged_summary(self.services.values().map(|s| &*s.coordinator.metrics))
+        Metrics::merged_summary(self.all_metrics())
     }
 
     /// Cross-service merged (p50, p99, mean) end-to-end latency, seconds.
     pub fn merged_latency(&self) -> (f64, f64, f64) {
-        Metrics::total_latency_of(self.services.values().map(|s| &*s.coordinator.metrics))
+        Metrics::total_latency_of(self.all_metrics())
     }
 
     /// Multi-line report: one line per service plus the merged view.
@@ -186,24 +274,39 @@ impl ServiceRouter {
             let line = format!("{name} [{}w]: {}\n", s.workers, s.coordinator.metrics.summary());
             out.push_str(&line);
         }
+        for (name, d) in &self.decode {
+            let line = format!(
+                "{name} [{}w decode, {} sessions]: {}\n",
+                d.workers(),
+                d.sessions(),
+                d.metrics.summary()
+            );
+            out.push_str(&line);
+        }
         out.push_str(&format!("merged: {}", self.merged_summary()));
         out
     }
 
-    /// Graceful shutdown of every service — each coordinator drains its
-    /// queue, so every accepted request is answered first.
+    /// Graceful shutdown of every service — each pool drains its
+    /// queue(s), so every accepted request is answered first.
     pub fn shutdown(self) {
         for (_, s) in self.services {
             s.coordinator.shutdown();
+        }
+        for (_, d) in self.decode {
+            d.shutdown();
         }
     }
 }
 
 /// Routing handle: validates the service name, then defers to that
 /// service's `Client` (which validates the per-service item length).
+/// Decode services route through `submit_decode`/`infer_decode`, which
+/// additionally carry the session id the step belongs to.
 #[derive(Clone)]
 pub struct RouterClient {
     routes: Arc<BTreeMap<String, Client>>,
+    decode_routes: Arc<BTreeMap<String, DecodeClient>>,
 }
 
 impl RouterClient {
@@ -214,14 +317,31 @@ impl RouterClient {
         })
     }
 
-    /// Registered service names, ascending.
+    fn decode_route(&self, service: &str) -> Result<&DecodeClient> {
+        self.decode_routes.get(service).with_context(|| {
+            let known: Vec<&str> = self.decode_routes.keys().map(String::as_str).collect();
+            format!("unknown decode service '{service}' (registered: {})", known.join(", "))
+        })
+    }
+
+    /// Registered batching service names, ascending.
     pub fn services(&self) -> Vec<&str> {
         self.routes.keys().map(String::as_str).collect()
+    }
+
+    /// Registered decode service names, ascending.
+    pub fn decode_services(&self) -> Vec<&str> {
+        self.decode_routes.keys().map(String::as_str).collect()
     }
 
     /// Flat f32 item length `service` expects.
     pub fn item_len(&self, service: &str) -> Result<usize> {
         Ok(self.route(service)?.item_len())
+    }
+
+    /// Flat f32 length one decode step of `service` expects.
+    pub fn decode_item_len(&self, service: &str) -> Result<usize> {
+        Ok(self.decode_route(service)?.item_len())
     }
 
     /// Submit one item to `service`; returns the response receiver.
@@ -237,6 +357,26 @@ impl RouterClient {
     /// Blocking one-shot convenience.
     pub fn infer(&self, service: &str, input: Vec<f32>) -> Result<Response> {
         self.route(service)?.infer(input).with_context(|| format!("service '{service}'"))
+    }
+
+    /// Submit one decode step for `session` to a decode `service`; the
+    /// step lands on the session's pinned lane.
+    pub fn submit_decode(
+        &self,
+        service: &str,
+        session: u64,
+        input: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Response>> {
+        self.decode_route(service)?
+            .submit(session, input)
+            .with_context(|| format!("decode service '{service}'"))
+    }
+
+    /// Blocking one-step decode convenience.
+    pub fn infer_decode(&self, service: &str, session: u64, input: Vec<f32>) -> Result<Response> {
+        self.decode_route(service)?
+            .infer(session, input)
+            .with_context(|| format!("decode service '{service}'"))
     }
 }
 
@@ -395,6 +535,96 @@ mod tests {
         assert!(s.contains("e2softmax/L32"), "{s}");
         assert!(s.contains("ailayernorm/C64"), "{s}");
         assert!(s.contains("merged: accepted=10 completed=10"), "{s}");
+        router.shutdown();
+    }
+
+    #[test]
+    fn decode_sessions_ride_the_router() {
+        let registry = OpRegistry::builtin();
+        let (cap, d) = (8usize, 4usize);
+        let router = ServiceRouter::builder(3)
+            .default_policy(quick_policy())
+            .op_service(&registry, "e2softmax/L32", vec![1, 4])
+            .unwrap()
+            .decode_service(&registry, "decode-attention/L8xD4", 1)
+            .unwrap()
+            .start()
+            .unwrap();
+        // decode services are listed separately; the batching list is
+        // unchanged by their presence
+        assert_eq!(router.services(), vec!["e2softmax/L32"]);
+        assert_eq!(router.decode_services(), vec!["decode-attention/L8xD4"]);
+        assert!(router.workers("decode-attention/L8xD4").unwrap() >= 1);
+        let cl = router.client();
+        assert_eq!(cl.decode_item_len("decode-attention/L8xD4").unwrap(), 3 * d);
+        // two interleaved sessions must each match a local op replay —
+        // only possible if the router pins each session to a lane that
+        // keeps its KV cache across requests
+        let op = crate::ops::DecodeAttnOp::try_new(cap, d).unwrap();
+        let mut scratch = op.make_scratch();
+        let mut rng = crate::util::rng::Rng::new(0x2007);
+        let mut states = [op.make_state(), op.make_state()];
+        let mut want = vec![0f32; d];
+        for step in 0..cap {
+            for sid in [0u64, 1] {
+                let mut item = vec![0f32; 3 * d];
+                rng.fill_normal(&mut item, 0.0, 1.0);
+                let st = &mut states[sid as usize];
+                op.run_batch_stateful(1, &item, &mut want, &mut scratch, st).unwrap();
+                let got = cl.infer_decode("decode-attention/L8xD4", sid, item).unwrap();
+                assert_eq!(got.output, want, "session {sid} step {step}");
+            }
+        }
+        assert_eq!(router.sessions("decode-attention/L8xD4"), Some(2));
+        assert_eq!(router.sessions("e2softmax/L32"), None);
+        let m = router.metrics("decode-attention/L8xD4").unwrap();
+        assert_eq!(m.completed(), 2 * cap as u64);
+        // decode traffic shows up in the per-service and merged report
+        cl.infer("e2softmax/L32", vec![0.1; 32]).unwrap();
+        let s = router.summary();
+        assert!(s.contains("decode-attention/L8xD4"), "{s}");
+        assert!(s.contains("sessions"), "{s}");
+        assert!(s.contains(&format!("merged: accepted={}", 2 * cap + 1)), "{s}");
+        router.shutdown();
+    }
+
+    #[test]
+    fn decode_registration_rejects_misuse() {
+        let registry = OpRegistry::builtin();
+        // a stateless op cannot be a decode service
+        let err = format!(
+            "{:#}",
+            ServiceRouter::builder(2).decode_service(&registry, "e2softmax/L8", 1).unwrap_err()
+        );
+        assert!(err.contains("stateless"), "{err}");
+        // duplicate names are rejected across the batching + decode lists
+        let dup = ServiceRouter::builder(2)
+            .decode_service(&registry, "decode-attention/L8xD4", 1)
+            .unwrap()
+            .decode_service(&registry, "decode-attention/L8xD4", 1)
+            .unwrap()
+            .start();
+        assert!(dup.is_err());
+        // a decode-only router is a valid router
+        let router = ServiceRouter::builder(2)
+            .decode_service(&registry, "decode-attention/L4xD4", 1)
+            .unwrap()
+            .start()
+            .unwrap();
+        let cl = router.client();
+        assert!(cl.services().is_empty());
+        // routing errors name the decode registry, not the batching one
+        let err = format!("{:#}", cl.infer_decode("nope", 0, vec![0.0; 12]).unwrap_err());
+        assert!(err.contains("unknown decode service"), "{err}");
+        assert!(err.contains("decode-attention/L4xD4"), "{err}");
+        // and a stateful spec cannot sneak into the batching path
+        let err = format!(
+            "{:#}",
+            ServiceRouter::builder(2)
+                .op_service(&registry, "decode-attention/L4xD4", vec![1])
+                .unwrap_err()
+        );
+        assert!(err.contains("stateful"), "{err}");
         router.shutdown();
     }
 

@@ -1,0 +1,366 @@
+//! DecodeService: session-affine serving for stateful decode ops
+//! (DESIGN.md §3.5).
+//!
+//! The stateless `Coordinator` packs whatever requests arrive into one
+//! batch — correct only because its backends are pure functions of the
+//! item.  A decode op ([`crate::ops::DecodeAttnOp`]) is a function of
+//! the item *and* a growing per-session KV cache, which forces two
+//! departures from the batching pool:
+//!
+//! * **State lives in the worker, never the op.**  The op stays `Sync`
+//!   and shared; each worker owns a `session id -> OpState` map and
+//!   hands the state mutably to `run_batch_stateful` one request at a
+//!   time.  Nothing about a session is reachable from any other thread.
+//! * **Session affinity.**  A session's steps must execute in order
+//!   against the same state, so each worker owns its own FIFO lane and
+//!   a session is pinned to lane `session % n_workers`.  One worker per
+//!   lane + FIFO order = per-session program order, with no cross-lane
+//!   coordination.  Different sessions on different lanes still run in
+//!   parallel.
+//!
+//! Steps execute at batch size 1 — decode is the latency-bound regime;
+//! the bucketed batcher exists for prefill.  Metrics reuse the sharded
+//! [`Metrics`] (one shard per lane), so `bench_serving` reports decode
+//! rows with the same schema as prefill rows.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::metrics::Metrics;
+use super::Response;
+use crate::ops::{Op, PortType};
+
+/// One decode step request, already pinned to a lane.
+struct StepRequest {
+    id: u64,
+    session: u64,
+    input: Vec<f32>,
+    submitted: Instant,
+    resp: mpsc::Sender<Response>,
+}
+
+/// One worker's private FIFO.
+struct Lane {
+    queue: Mutex<VecDeque<StepRequest>>,
+    available: Condvar,
+}
+
+/// The session-affine serving pool for one stateful op.
+pub struct DecodeService {
+    lanes: Arc<Vec<Arc<Lane>>>,
+    workers: Vec<JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+    /// Sharded latency/throughput counters, one shard per lane.
+    pub metrics: Arc<Metrics>,
+    next_id: Arc<AtomicU64>,
+    sessions: Arc<AtomicU64>,
+    item_len: usize,
+    out_len: usize,
+}
+
+impl DecodeService {
+    /// Start `n_workers` lanes over a shared stateful op.  Refuses
+    /// stateless ops (they belong in a batching `Coordinator`) and
+    /// quantized outer ports, mirroring `OpBackend`.
+    pub fn start(op: Arc<dyn Op>, n_workers: usize) -> Result<DecodeService> {
+        anyhow::ensure!(
+            op.stateful(),
+            "op '{}' is stateless; serve it through a Coordinator over an OpBackend",
+            op.name()
+        );
+        anyhow::ensure!(op.item_len() > 0, "op '{}' has an empty item", op.name());
+        anyhow::ensure!(
+            op.in_port() == PortType::F32 && op.out_port() == PortType::F32,
+            "op '{}' exposes a {} -> {} port pair; decode edges are f32",
+            op.name(),
+            op.in_port(),
+            op.out_port()
+        );
+        let n_workers = n_workers.max(1);
+        let lanes: Arc<Vec<Arc<Lane>>> = Arc::new(
+            (0..n_workers)
+                .map(|_| {
+                    Arc::new(Lane { queue: Mutex::new(VecDeque::new()), available: Condvar::new() })
+                })
+                .collect(),
+        );
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(Metrics::with_shards(n_workers));
+        let sessions = Arc::new(AtomicU64::new(0));
+        let item_len = op.item_len();
+        let out_len = op.out_len();
+        let mut workers = Vec::new();
+        for (wid, lane) in lanes.iter().enumerate() {
+            let lane = lane.clone();
+            let stop = shutdown.clone();
+            let op = op.clone();
+            let mt = metrics.clone();
+            let ns = sessions.clone();
+            workers.push(std::thread::spawn(move || lane_loop(wid, lane, stop, op, mt, ns)));
+        }
+        Ok(DecodeService {
+            lanes,
+            workers,
+            shutdown,
+            metrics,
+            next_id: Arc::new(AtomicU64::new(0)),
+            sessions,
+            item_len,
+            out_len,
+        })
+    }
+
+    /// A cloneable submission handle.
+    pub fn client(&self) -> DecodeClient {
+        DecodeClient {
+            lanes: self.lanes.clone(),
+            shutdown: self.shutdown.clone(),
+            next_id: self.next_id.clone(),
+            metrics: self.metrics.clone(),
+            item_len: self.item_len,
+        }
+    }
+
+    /// Flat f32 length of one step's input (`[q | k | v]` for decode
+    /// attention).
+    pub fn item_len(&self) -> usize {
+        self.item_len
+    }
+
+    /// Flat f32 length of one step's output.
+    pub fn out_len(&self) -> usize {
+        self.out_len
+    }
+
+    /// Number of lanes (= workers = metrics shards).
+    pub fn workers(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Distinct sessions that have taken at least one step.
+    pub fn sessions(&self) -> u64 {
+        self.sessions.load(Ordering::Relaxed)
+    }
+
+    /// Graceful shutdown: drains every lane — each accepted step is
+    /// answered (or observes a send-side drop on a failed step) before
+    /// the workers exit, mirroring `Coordinator::shutdown`.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        for lane in self.lanes.iter() {
+            lane.available.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Submission handle: routes each step to its session's pinned lane.
+#[derive(Clone)]
+pub struct DecodeClient {
+    lanes: Arc<Vec<Arc<Lane>>>,
+    shutdown: Arc<AtomicBool>,
+    next_id: Arc<AtomicU64>,
+    metrics: Arc<Metrics>,
+    item_len: usize,
+}
+
+impl DecodeClient {
+    /// Submit one decode step for `session`; returns the receiver for
+    /// its response.  Steps submitted for one session from one thread
+    /// execute (and cache-append) in submission order — the lane is a
+    /// FIFO owned by a single worker.
+    pub fn submit(&self, session: u64, input: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+        anyhow::ensure!(
+            input.len() == self.item_len,
+            "decode step len {} != {}",
+            input.len(),
+            self.item_len
+        );
+        let lane = &self.lanes[(session % self.lanes.len() as u64) as usize];
+        let mut q = lane.queue.lock().unwrap();
+        // checked under the lane lock, as in Coordinator::enqueue: the
+        // worker only exits once the flag is set AND its lane is empty
+        anyhow::ensure!(
+            !self.shutdown.load(Ordering::SeqCst),
+            "decode service is shutting down"
+        );
+        let (tx, rx) = mpsc::channel();
+        q.push_back(StepRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            session,
+            input,
+            submitted: Instant::now(),
+            resp: tx,
+        });
+        self.metrics.record_accepted();
+        drop(q);
+        lane.available.notify_one();
+        Ok(rx)
+    }
+
+    /// Blocking one-step convenience.
+    pub fn infer(&self, session: u64, input: Vec<f32>) -> Result<Response> {
+        Ok(self.submit(session, input)?.recv()?)
+    }
+
+    /// Flat f32 length one step expects.
+    pub fn item_len(&self) -> usize {
+        self.item_len
+    }
+}
+
+/// One lane's worker: pops steps in FIFO order and runs each against its
+/// session's state.  The state map is a plain local — only this thread
+/// ever touches the sessions pinned here.
+fn lane_loop(
+    wid: usize,
+    lane: Arc<Lane>,
+    shutdown: Arc<AtomicBool>,
+    op: Arc<dyn Op>,
+    metrics: Arc<Metrics>,
+    sessions: Arc<AtomicU64>,
+) {
+    let mut states: HashMap<u64, crate::ops::OpState> = HashMap::new();
+    let mut scratch = op.make_scratch();
+    let out_len = op.out_len();
+    loop {
+        let req = {
+            let mut q = lane.queue.lock().unwrap();
+            loop {
+                if let Some(r) = q.pop_front() {
+                    break r;
+                }
+                if shutdown.load(Ordering::SeqCst) {
+                    return; // lane drained
+                }
+                let (guard, _t) =
+                    lane.available.wait_timeout(q, Duration::from_millis(50)).unwrap();
+                q = guard;
+            }
+        };
+        let state = states.entry(req.session).or_insert_with(|| {
+            sessions.fetch_add(1, Ordering::Relaxed);
+            op.make_state()
+        });
+        let mut output = vec![0f32; out_len];
+        let t0 = Instant::now();
+        let result = op.run_batch_stateful(1, &req.input, &mut output, &mut scratch, state);
+        let exec = t0.elapsed();
+        match result {
+            Ok(()) => {
+                let queue_time = t0.duration_since(req.submitted);
+                metrics.record_shard(wid, queue_time, exec, 1, 1);
+                let _ = req.resp.send(Response {
+                    id: req.id,
+                    output,
+                    queue_time,
+                    exec_time: exec,
+                    batch_size: 1,
+                });
+            }
+            Err(e) => {
+                // a failed step (e.g. a session at capacity) drops only
+                // its own request; the session state stays as it was
+                metrics.record_error();
+                eprintln!("decode step failed (session {}): {e:#}", req.session);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{DecodeAttnOp, E2SoftmaxOp};
+    use crate::util::rng::Rng;
+
+    fn decode_service(cap: usize, d: usize, workers: usize) -> DecodeService {
+        DecodeService::start(Arc::new(DecodeAttnOp::try_new(cap, d).unwrap()), workers).unwrap()
+    }
+
+    #[test]
+    fn rejects_stateless_ops() {
+        let op: Arc<dyn Op> = Arc::new(E2SoftmaxOp::try_new(8).unwrap());
+        let err = format!("{:#}", DecodeService::start(op, 2).unwrap_err());
+        assert!(err.contains("stateless"), "{err}");
+    }
+
+    #[test]
+    fn sessions_accumulate_state_server_side() {
+        let (cap, d) = (16usize, 8usize);
+        let svc = decode_service(cap, d, 2);
+        let cl = svc.client();
+        assert_eq!(cl.item_len(), 3 * d);
+        // run two interleaved sessions through the service, and the same
+        // token streams through a local op: every step must match, which
+        // is only possible if each session's KV cache persists and grows
+        // server-side between requests
+        let op = DecodeAttnOp::try_new(cap, d).unwrap();
+        let mut scratch = op.make_scratch();
+        let mut rng = Rng::new(0x5E55);
+        for sid in [0u64, 1] {
+            let mut state = op.make_state();
+            let mut want = vec![0f32; d];
+            for step in 0..cap {
+                let mut item = vec![0f32; 3 * d];
+                rng.fill_normal(&mut item, 0.0, 1.0);
+                op.run_batch_stateful(1, &item, &mut want, &mut scratch, &mut state).unwrap();
+                let got = cl.infer(sid, item).unwrap();
+                assert_eq!(got.output, want, "session {sid} step {step}");
+            }
+        }
+        assert_eq!(svc.sessions(), 2);
+        assert_eq!(svc.metrics.completed(), 2 * cap as u64);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn a_session_over_capacity_fails_without_poisoning_its_lane() {
+        let svc = decode_service(2, 4, 1);
+        let cl = svc.client();
+        let step = vec![0.5f32; 12];
+        cl.infer(7, step.clone()).unwrap();
+        cl.infer(7, step.clone()).unwrap();
+        // step 3 overflows session 7's cache: its sender is dropped
+        assert!(cl.submit(7, step.clone()).unwrap().recv().is_err());
+        // the lane (and a fresh session on it) keeps serving
+        cl.infer(8, step.clone()).unwrap();
+        assert_eq!(svc.metrics.errors(), 1);
+        assert_eq!(
+            svc.metrics.completed() + svc.metrics.errors(),
+            svc.metrics.accepted(),
+            "conservation: completed + errors == accepted"
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn in_flight_steps_survive_shutdown_and_new_ones_bounce() {
+        let (cap, d) = (32usize, 4usize);
+        let svc = decode_service(cap, d, 2);
+        let cl = svc.client();
+        let rxs: Vec<_> =
+            (0..20).map(|i| cl.submit(i % 4, vec![0.25; 3 * d]).unwrap()).collect();
+        svc.shutdown();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv().unwrap_or_else(|e| panic!("step {i} dropped: {e}"));
+            assert_eq!(r.output.len(), d);
+        }
+        assert!(cl.submit(0, vec![0.25; 3 * d]).is_err());
+    }
+
+    #[test]
+    fn wrong_item_len_is_rejected_at_submit() {
+        let svc = decode_service(4, 4, 1);
+        let cl = svc.client();
+        assert!(cl.submit(0, vec![0.0; 5]).is_err());
+        svc.shutdown();
+    }
+}

@@ -5,7 +5,7 @@
 //!      [--artifacts DIR] [--samples N] [--batches 1,2,4,8,16]
 //! sole serve [--artifacts DIR] [--model deit_t] [--variant fp32_sole] [--all-families]
 //!      [--ops <spec,...>] [--requests N] [--rate R] [--max-wait-ms W] [--workers K]
-//!      [--queue-cap N]
+//!      [--queue-cap N] [--decode <spec>] [--decode-steps N] [--sessions S]
 //! sole ops
 //! sole info [--artifacts DIR]
 //! ```
@@ -21,6 +21,12 @@
 //! `sole ops` lists every registered operator family with its spec
 //! grammar.  `--workers` is the *total* worker budget, split across
 //! services (hot service weighted up, minimum one each).
+//!
+//! `--decode decode-attention/L128xD64` additionally registers a
+//! session-affine decode service on the same router and drives
+//! `--sessions` interleaved KV-cache sessions for `--decode-steps`
+//! tokens each — the prefill services batch, the decode service pins
+//! each session to a lane (DESIGN.md §3.5).
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -141,18 +147,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(raw) => raw.split(',').map(|s| s.trim().to_string()).collect(),
         None => paper_service_specs(),
     };
+    // --decode adds a session-affine decode service (software path only)
+    let decode = DecodeDrive {
+        spec: args.opt("decode").map(str::to_string),
+        steps: args.opt_usize("decode-steps", 32)?,
+        sessions: args.opt_usize("sessions", 4)?,
+    };
 
+    let software_only = args.opt("ops").is_some() || decode.spec.is_some();
     let have_artifacts = artifacts.join("manifest.json").exists();
-    if args.opt("ops").is_none() && have_artifacts && cfg!(feature = "pjrt") {
+    if !software_only && have_artifacts && cfg!(feature = "pjrt") {
         serve_artifact_families(args, &artifacts, n_requests, rate, workers, policy)
     } else {
-        if args.opt("ops").is_none() && have_artifacts {
+        if !software_only && have_artifacts {
             println!(
                 "artifacts found but built without --features pjrt — \
                  serving the software op-services instead"
             );
         }
-        serve_software_ops(&specs, n_requests, rate, workers, policy)
+        serve_software_ops(&specs, &decode, n_requests, rate, workers, policy)
     }
 }
 
@@ -187,6 +200,18 @@ fn cmd_ops() -> Result<()> {
             ports.join("->"),
             l.summary
         );
+        // pipelines: bytes one item occupies at each stage boundary —
+        // the number the low-bit ports exist to shrink (DESIGN.md §3.3)
+        let staging = op.staging_bytes_per_item();
+        if !staging.is_empty() {
+            let cells: Vec<String> = staging.iter().map(|b| b.to_string()).collect();
+            println!(
+                "{:<18} {:>14} staging bytes/item at stage boundaries: [{}]",
+                "",
+                "",
+                cells.join(", ")
+            );
+        }
     }
     println!(
         "\nserve them with e.g.:\n  sole serve --ops {}",
@@ -258,11 +283,22 @@ fn serve_artifact_families(
     Ok(())
 }
 
+/// The `--decode` workload: which stateful spec to register (None to
+/// skip), how many tokens per session, how many interleaved sessions.
+struct DecodeDrive {
+    spec: Option<String>,
+    steps: usize,
+    sessions: usize,
+}
+
 /// Software path (no artifacts needed): serve the requested op specs —
 /// by default the paper's full mixed workload — through one router,
-/// requests interleaved round-robin across services.
+/// requests interleaved round-robin across services.  With `--decode`,
+/// a session-affine decode service joins the same worker budget and is
+/// driven with interleaved KV-cache sessions after the prefill workload.
 fn serve_software_ops(
     specs: &[String],
+    decode: &DecodeDrive,
     n_requests: usize,
     rate: f64,
     workers: usize,
@@ -280,6 +316,19 @@ fn serve_software_ops(
         let name = registry.parse_spec(spec)?.to_string();
         builder = builder.op_service(&registry, &name, vec![1, 4, 8, 16])?;
         names.push(name);
+    }
+    let mut decode_name = None;
+    if let Some(spec) = &decode.spec {
+        let parsed = registry.parse_spec(spec)?;
+        anyhow::ensure!(
+            decode.steps <= parsed.len,
+            "--decode-steps {} exceeds the session capacity L{} of '{parsed}'",
+            decode.steps,
+            parsed.len
+        );
+        let name = parsed.to_string();
+        builder = builder.decode_service(&registry, &name, 1)?;
+        decode_name = Some(name);
     }
     let router = builder.start()?;
     let client = router.client();
@@ -308,6 +357,37 @@ fn serve_software_ops(
         "served {n_requests} mixed requests in {wall:.2}s ({:.1} req/s)",
         n_requests as f64 / wall
     );
+
+    if let Some(name) = &decode_name {
+        // decode soak: interleave the sessions step-by-step so every
+        // request depends on state the service must have kept from the
+        // session's previous step
+        let item_len = client.decode_item_len(name)?;
+        let n_steps = decode.steps * decode.sessions.max(1);
+        println!(
+            "decoding {} sessions x {} tokens through {name}",
+            decode.sessions.max(1),
+            decode.steps
+        );
+        let d0 = Instant::now();
+        let mut item = vec![0f32; item_len];
+        for _step in 0..decode.steps {
+            let rxs: Vec<_> = (0..decode.sessions.max(1) as u64)
+                .map(|sid| {
+                    rng.fill_normal(&mut item, 0.0, 1.0);
+                    client.submit_decode(name, sid, item.clone())
+                })
+                .collect::<Result<_>>()?;
+            for rx in rxs {
+                let _ = rx.recv()?;
+            }
+        }
+        let dwall = d0.elapsed().as_secs_f64();
+        println!(
+            "decoded {n_steps} steps in {dwall:.2}s ({:.1} tok/s)",
+            n_steps as f64 / dwall
+        );
+    }
     println!("{}", router.summary());
     router.shutdown();
     Ok(())

@@ -47,23 +47,40 @@ pub fn attention_spec(op: &str, l: usize, d: usize) -> OpSpec {
     OpSpec { op: op.to_string(), dim: 'L', len: l, extra: vec![('D', d)] }
 }
 
+/// The canonical spec of a multi-head attention-family pipeline:
+/// `<op>/H<heads>xL<len>xD<dim>`.
+pub fn attention_heads_spec(op: &str, h: usize, l: usize, d: usize) -> OpSpec {
+    OpSpec { op: op.to_string(), dim: 'H', len: h, extra: vec![('L', l), ('D', d)] }
+}
+
+/// The three fused stages (logits → code-port softmax → shift-accumulate
+/// A·V) shared by the single-head and multi-head fused pipelines.
+fn fused_stages(l: usize, d: usize) -> Result<Vec<Arc<dyn Op>>> {
+    Ok(vec![
+        Arc::new(AttnLogitsOp::try_new(l, d)?),
+        Arc::new(AttnSoftmaxOp::try_new(
+            l,
+            d,
+            Arc::new(E2SoftmaxOp::with_out_port(l, PortType::Log2Code5)?),
+        )?),
+        Arc::new(AttnAvOp::with_in_port(l, d, PortType::Log2Code5)?),
+    ])
+}
+
 /// The fused pipeline behind the registered `attention/L<len>xD<dim>`
 /// spec: logits, softmax emitting the `Log2Code5` port, then
 /// shift-accumulate A·V consuming it — the probability matrix crosses
 /// the stage boundary at 1 byte per weight.
 pub fn fused_pipeline(l: usize, d: usize) -> Result<PipelineOp> {
-    PipelineOp::try_new(
-        attention_spec("attention", l, d),
-        vec![
-            Arc::new(AttnLogitsOp::try_new(l, d)?),
-            Arc::new(AttnSoftmaxOp::try_new(
-                l,
-                d,
-                Arc::new(E2SoftmaxOp::with_out_port(l, PortType::Log2Code5)?),
-            )?),
-            Arc::new(AttnAvOp::with_in_port(l, d, PortType::Log2Code5)?),
-        ],
-    )
+    PipelineOp::try_new(attention_spec("attention", l, d), fused_stages(l, d)?)
+}
+
+/// The multi-head fused pipeline behind `attention/H<h>xL<len>xD<dim>`:
+/// one item packs `h` heads, each staged through the same single-head
+/// stages (`PipelineOp::with_heads` — pure batch geometry, SIMD arms and
+/// dispatch untouched).
+pub fn fused_pipeline_heads(h: usize, l: usize, d: usize) -> Result<PipelineOp> {
+    PipelineOp::with_heads(attention_heads_spec("attention", h, l, d), h, fused_stages(l, d)?)
 }
 
 /// The staged comparator (`attention-unfused`, not registered): the same
@@ -81,18 +98,27 @@ pub fn unfused_pipeline(l: usize, d: usize) -> Result<PipelineOp> {
     )
 }
 
+/// The exact-softmax stages shared by the single-head and multi-head
+/// exact pipelines.
+fn exact_stages(l: usize, d: usize) -> Result<Vec<Arc<dyn Op>>> {
+    Ok(vec![
+        Arc::new(AttnLogitsOp::try_new(l, d)?),
+        Arc::new(AttnSoftmaxOp::try_new(l, d, Arc::new(ExactSoftmaxOp::try_new(l)?))?),
+        Arc::new(AttnAvOp::try_new(l, d)?),
+    ])
+}
+
 /// The exact-softmax pipeline behind the registered
 /// `attention-exact/L<len>xD<dim>` spec: the error/latency reference the
 /// fused pipeline is compared against.
 pub fn exact_pipeline(l: usize, d: usize) -> Result<PipelineOp> {
-    PipelineOp::try_new(
-        attention_spec("attention-exact", l, d),
-        vec![
-            Arc::new(AttnLogitsOp::try_new(l, d)?),
-            Arc::new(AttnSoftmaxOp::try_new(l, d, Arc::new(ExactSoftmaxOp::try_new(l)?))?),
-            Arc::new(AttnAvOp::try_new(l, d)?),
-        ],
-    )
+    PipelineOp::try_new(attention_spec("attention-exact", l, d), exact_stages(l, d)?)
+}
+
+/// The multi-head exact pipeline behind
+/// `attention-exact/H<h>xL<len>xD<dim>`.
+pub fn exact_pipeline_heads(h: usize, l: usize, d: usize) -> Result<PipelineOp> {
+    PipelineOp::with_heads(attention_heads_spec("attention-exact", h, l, d), h, exact_stages(l, d)?)
 }
 
 fn ensure_shape(name: &str, l: usize, d: usize) -> Result<()> {

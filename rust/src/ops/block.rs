@@ -1,0 +1,819 @@
+//! Transformer-block pipelines: pre-LN self-attention with a residual
+//! add, `Y = X + Attn(LN(X))`, as a [`PipelineOp`] (DESIGN.md §3.5).
+//!
+//! This is the paper's end-to-end story: *both* SOLE units live in one
+//! datapath and every inter-stage boundary that the hardware stores at
+//! low width stays low-width in software too.  The registered fused
+//! `block/L<len>xD<dim>` pipeline chains
+//!
+//! 1. [`BlockLnOp`] — AILayerNorm over each token row, emitting the
+//!    normed rows as `ptf-u8` codes (one affine scale per token) with
+//!    the raw input X riding the sidecar tail for the residual;
+//! 2. [`BlockLogitsOp`] — consumes the `ptf-u8` port *directly*,
+//!    dequantizing each normed row inside the logit loop (no adapter),
+//!    and emits `[S | N' | X]` f32 where `S = (N'N'ᵀ)/√D`;
+//! 3. [`AttnSoftmaxOp`] over a `Log2Code5`-ported [`E2SoftmaxOp`] — the
+//!    probability matrix crosses as packed 5-bit shift codes, `[N' | X]`
+//!    passes through as the sidecar tail;
+//! 4. [`BlockAvOp`] — shift-accumulate `O = P·N'` straight from the
+//!    codes, then re-quantizes each context row to `ptf-u8` (one scale
+//!    per token) with X still in the sidecar;
+//! 5. [`BlockResidualOp`] — the quantized consumer the port system was
+//!    built for: `Y = X + dequant(O')`, reading the `ptf-u8` codes
+//!    inside the add loop.  No f32 attention output is ever staged.
+//!
+//! The boundary ports are `[ptf-u8, f32, log2c5, ptf-u8]` with **zero**
+//! auto-inserted [`DequantOp`](super::DequantOp) adapters.  The
+//! unregistered comparator built by [`unfused_block`] keeps the same
+//! quantized producers but f32 consumers, so `PipelineOp::try_new`
+//! inserts the adapters and every value is dequantized through the same
+//! arithmetic in the same order — bit-identical output, pinned by the
+//! tests here and by `tests/op_conformance.rs`.
+//!
+//! One item is one token block: `L x D` f32 in, `L x D` f32 out.  The
+//! multi-head `block/H<h>xL<len>xD<dim>` variant packs `h` such blocks
+//! per item via `PipelineOp::with_heads` (pure batch geometry).
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::attention::AttnSoftmaxOp;
+use super::port::{check_batch_ports, PortMut, PortRef, PortType};
+use super::{check_batch, AiLayerNormOp, E2SoftmaxOp, Op, OpScratch, OpSpec, PipelineOp};
+use crate::quant::{q8_dequantize, q8_quantize_row_into};
+use crate::simd::Dispatch;
+use crate::softmax::e2::{expand_row_side, CODE_SIDE_LEN, VAL_TABLE_LEN};
+
+/// The canonical spec of a block-family pipeline: `<op>/L<len>xD<dim>`.
+pub fn block_spec(op: &str, l: usize, d: usize) -> OpSpec {
+    OpSpec { op: op.to_string(), dim: 'L', len: l, extra: vec![('D', d)] }
+}
+
+/// The canonical spec of a multi-head block-family pipeline:
+/// `<op>/H<heads>xL<len>xD<dim>`.
+pub fn block_heads_spec(op: &str, h: usize, l: usize, d: usize) -> OpSpec {
+    OpSpec { op: op.to_string(), dim: 'H', len: h, extra: vec![('L', l), ('D', d)] }
+}
+
+/// The five stages of the fused block: every quantized boundary is
+/// consumed natively (see module docs).
+fn fused_block_stages(l: usize, d: usize) -> Result<Vec<Arc<dyn Op>>> {
+    Ok(vec![
+        Arc::new(BlockLnOp::try_new(l, d)?),
+        Arc::new(BlockLogitsOp::with_in_port(l, d, PortType::PtfU8)?),
+        Arc::new(AttnSoftmaxOp::try_new(
+            l,
+            2 * d,
+            Arc::new(E2SoftmaxOp::with_out_port(l, PortType::Log2Code5)?),
+        )?),
+        Arc::new(BlockAvOp::with_in_port(l, d, PortType::Log2Code5)?),
+        Arc::new(BlockResidualOp::with_in_port(l, d, PortType::PtfU8)?),
+    ])
+}
+
+/// The fused pipeline behind the registered `block/L<len>xD<dim>` spec.
+pub fn fused_block(l: usize, d: usize) -> Result<PipelineOp> {
+    PipelineOp::try_new(block_spec("block", l, d), fused_block_stages(l, d)?)
+}
+
+/// The multi-head fused pipeline behind `block/H<h>xL<len>xD<dim>`: one
+/// item packs `h` token blocks through the same single-head stages.
+pub fn fused_block_heads(h: usize, l: usize, d: usize) -> Result<PipelineOp> {
+    PipelineOp::with_heads(block_heads_spec("block", h, l, d), h, fused_block_stages(l, d)?)
+}
+
+/// The staged comparator (`block-unfused`, not registered): the same
+/// quantized producers but f32 consumers, so the pipeline auto-inserts
+/// [`DequantOp`](super::DequantOp) adapters at the `ptf-u8` boundaries
+/// and the softmax stays on the f32 port.  Bit-identical to
+/// [`fused_block`]; exists so tests and benches can measure exactly what
+/// consuming the quantized ports in place buys.
+pub fn unfused_block(l: usize, d: usize) -> Result<PipelineOp> {
+    PipelineOp::try_new(
+        block_spec("block-unfused", l, d),
+        vec![
+            Arc::new(BlockLnOp::try_new(l, d)?),
+            Arc::new(BlockLogitsOp::try_new(l, d)?),
+            Arc::new(AttnSoftmaxOp::try_new(l, 2 * d, Arc::new(E2SoftmaxOp::try_new(l)?))?),
+            Arc::new(BlockAvOp::try_new(l, d)?),
+            Arc::new(BlockResidualOp::try_new(l, d)?),
+        ],
+    )
+}
+
+fn ensure_shape(name: &str, l: usize, d: usize) -> Result<()> {
+    anyhow::ensure!(l > 0, "{name}: sequence length must be positive");
+    anyhow::ensure!(d > 0, "{name}: channel dimension must be positive");
+    Ok(())
+}
+
+/// Stage 1: AILayerNorm over each of the `L` token rows (`D` channels),
+/// emitted on the `ptf-u8` port — `L x D` u8 codes with one affine scale
+/// per token row — and the untouched input X appended to the sidecar
+/// tail so the residual stage downstream can close the loop.
+pub struct BlockLnOp {
+    l: usize,
+    d: usize,
+    ln: AiLayerNormOp,
+}
+
+/// Per-worker arena: the wrapped layernorm op's own scratch.
+struct LnScratch {
+    inner: OpScratch,
+}
+
+impl BlockLnOp {
+    /// Sequence length `l`, channel dimension `d`; the inner
+    /// [`AiLayerNormOp`] runs at the identity calibration on a `ptf-u8`
+    /// out-port.
+    pub fn try_new(l: usize, d: usize) -> Result<BlockLnOp> {
+        ensure_shape("block-ln", l, d)?;
+        Ok(BlockLnOp { l, d, ln: AiLayerNormOp::with_out_port(d, PortType::PtfU8)? })
+    }
+}
+
+impl Op for BlockLnOp {
+    fn name(&self) -> &str {
+        "block-ln"
+    }
+
+    fn dim(&self) -> char {
+        'L'
+    }
+
+    fn item_len(&self) -> usize {
+        self.l * self.d
+    }
+
+    fn out_port(&self) -> PortType {
+        PortType::PtfU8
+    }
+
+    fn out_code_rows(&self) -> usize {
+        self.l
+    }
+
+    fn out_side_len(&self) -> usize {
+        // one scale per token row, then the X passthrough tail
+        self.l + self.l * self.d
+    }
+
+    fn dispatch(&self) -> Option<Dispatch> {
+        self.ln.dispatch()
+    }
+
+    fn make_scratch(&self) -> OpScratch {
+        Box::new(LnScratch { inner: self.ln.make_scratch() })
+    }
+
+    fn run_batch(
+        &self,
+        _rows: usize,
+        _input: &[f32],
+        _out: &mut [f32],
+        _scratch: &mut OpScratch,
+    ) -> Result<()> {
+        anyhow::bail!("block-ln with a ptf-u8 out-port must be driven through run_batch_ports")
+    }
+
+    fn run_batch_ports(
+        &self,
+        rows: usize,
+        input: PortRef<'_>,
+        out: PortMut<'_>,
+        scratch: &mut OpScratch,
+    ) -> Result<()> {
+        check_batch_ports(self, rows, &input, &out)?;
+        let (input, codes, side) = match (input, out) {
+            (PortRef::F32(input), PortMut::PtfU8 { codes, side }) => (input, codes, side),
+            (input, out) => {
+                anyhow::bail!("block-ln: no {} -> {} path", input.port(), out.port())
+            }
+        };
+        let s = scratch
+            .downcast_mut::<LnScratch>()
+            .context("block-ln handed a foreign scratch arena")?;
+        let ld = self.l * self.d;
+        for ((item, c_item), s_item) in input
+            .chunks_exact(ld)
+            .zip(codes.chunks_exact_mut(ld))
+            .zip(side.chunks_exact_mut(self.l + ld))
+        {
+            let (scales, x_tail) = s_item.split_at_mut(self.l);
+            self.ln.run_batch_ports(
+                self.l,
+                PortRef::F32(item),
+                PortMut::PtfU8 { codes: c_item, side: scales },
+                &mut s.inner,
+            )?;
+            x_tail.copy_from_slice(item);
+        }
+        Ok(())
+    }
+}
+
+/// Stage 2: self-attention logits over the normed rows,
+/// `S = (N'N'ᵀ)/√D`.  On the `ptf-u8` in-port (the fused path) each
+/// normed row is dequantized through its token scale *inside* this
+/// stage — no adapter, 1 byte read per element — and the dequantized
+/// rows are materialized once into the output where the A·V stage needs
+/// them anyway.  On f32 (`try_new`, the comparator) the item is the
+/// adapter-widened `[N' | X]` block.  Either way the output is
+/// `[S | N' | X]` f32.
+pub struct BlockLogitsOp {
+    l: usize,
+    d: usize,
+    scale: f32,
+    in_port: PortType,
+}
+
+impl BlockLogitsOp {
+    /// Sequence length `l`, channel dimension `d`, staged f32 `[N' | X]`
+    /// in-port; the logit scale is the standard `1/√d`.
+    pub fn try_new(l: usize, d: usize) -> Result<BlockLogitsOp> {
+        BlockLogitsOp::with_in_port(l, d, PortType::F32)
+    }
+
+    /// Construction with an explicit in-port (`F32` or `PtfU8`).
+    pub fn with_in_port(l: usize, d: usize, port: PortType) -> Result<BlockLogitsOp> {
+        ensure_shape("block-logits", l, d)?;
+        anyhow::ensure!(
+            port != PortType::Log2Code5,
+            "block-logits has no log2c5 in-port (normed rows are affine u8 or f32)"
+        );
+        Ok(BlockLogitsOp { l, d, scale: 1.0 / (d as f32).sqrt(), in_port: port })
+    }
+
+    /// `S = (N'N'ᵀ)·scale` into `s_out`, accumulation over `d` then one
+    /// multiply by the scale — the same order as `AttnLogitsOp`.
+    fn logits_into(&self, n: &[f32], s_out: &mut [f32]) {
+        for (ni, s_row) in n.chunks_exact(self.d).zip(s_out.chunks_exact_mut(self.l)) {
+            for (nj, s_elem) in n.chunks_exact(self.d).zip(s_row.iter_mut()) {
+                let mut acc = 0f32;
+                for (&x, &y) in ni.iter().zip(nj) {
+                    acc += x * y;
+                }
+                *s_elem = acc * self.scale;
+            }
+        }
+    }
+}
+
+impl Op for BlockLogitsOp {
+    fn name(&self) -> &str {
+        "block-logits"
+    }
+
+    fn dim(&self) -> char {
+        'L'
+    }
+
+    fn item_len(&self) -> usize {
+        match self.in_port {
+            // codes carry only the normed rows; scales and X are sidecar
+            PortType::PtfU8 => self.l * self.d,
+            _ => 2 * self.l * self.d,
+        }
+    }
+
+    fn out_len(&self) -> usize {
+        self.l * self.l + 2 * self.l * self.d
+    }
+
+    fn in_port(&self) -> PortType {
+        self.in_port
+    }
+
+    fn in_side_len(&self) -> usize {
+        match self.in_port {
+            PortType::PtfU8 => self.l + self.l * self.d,
+            _ => 0,
+        }
+    }
+
+    fn run_batch(
+        &self,
+        rows: usize,
+        input: &[f32],
+        out: &mut [f32],
+        _scratch: &mut OpScratch,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            self.in_port == PortType::F32,
+            "block-logits with a {} in-port must be driven through run_batch_ports",
+            self.in_port
+        );
+        check_batch(self, rows, input, out)?;
+        let ll = self.l * self.l;
+        for (item, out_item) in
+            input.chunks_exact(self.item_len()).zip(out.chunks_exact_mut(self.out_len()))
+        {
+            let (s_out, nx_out) = out_item.split_at_mut(ll);
+            self.logits_into(&item[..self.l * self.d], s_out);
+            nx_out.copy_from_slice(item);
+        }
+        Ok(())
+    }
+
+    fn run_batch_ports(
+        &self,
+        rows: usize,
+        input: PortRef<'_>,
+        out: PortMut<'_>,
+        scratch: &mut OpScratch,
+    ) -> Result<()> {
+        check_batch_ports(self, rows, &input, &out)?;
+        match (input, out) {
+            (PortRef::F32(input), PortMut::F32(out)) => self.run_batch(rows, input, out, scratch),
+            (PortRef::PtfU8 { codes, side }, PortMut::F32(out)) => {
+                let ll = self.l * self.l;
+                let ld = self.l * self.d;
+                for ((c_item, s_item), out_item) in codes
+                    .chunks_exact(ld)
+                    .zip(side.chunks_exact(self.l + ld))
+                    .zip(out.chunks_exact_mut(self.out_len()))
+                {
+                    let (scales, x_tail) = s_item.split_at(self.l);
+                    let (s_out, rest) = out_item.split_at_mut(ll);
+                    let (n_out, x_out) = rest.split_at_mut(ld);
+                    // widen each normed row through its token scale once,
+                    // straight into the output block the A·V stage reads
+                    for ((c_row, &sc), n_row) in
+                        c_item.chunks_exact(self.d).zip(scales).zip(n_out.chunks_exact_mut(self.d))
+                    {
+                        for (o, &c) in n_row.iter_mut().zip(c_row) {
+                            *o = q8_dequantize(c, sc);
+                        }
+                    }
+                    self.logits_into(n_out, s_out);
+                    x_out.copy_from_slice(x_tail);
+                }
+                Ok(())
+            }
+            (input, out) => {
+                anyhow::bail!("block-logits: no {} -> {} path", input.port(), out.port())
+            }
+        }
+    }
+}
+
+/// Stage 4: shift-accumulate `O = P·N'`, then re-quantize each context
+/// row to `ptf-u8` for the residual boundary.  Probabilities arrive on
+/// either port — `Log2Code5` (fused: dequantize through the row's
+/// expanded shift table inside the loop, exactly like `AttnAvOp`) or
+/// f32 (`try_new`, the comparator `[P | N' | X]` block).  The output is
+/// always `ptf-u8`: `L x D` codes, one scale per token row, X passed
+/// through on the sidecar tail.
+pub struct BlockAvOp {
+    l: usize,
+    d: usize,
+    in_port: PortType,
+    /// Kernel arm of the accumulation loop, chosen once at construction
+    /// (DESIGN.md §3.4); shared with `AttnAvOp` — the AVX2 arm
+    /// vectorizes across output lanes, per-lane order stays scalar.
+    dispatch: Dispatch,
+}
+
+/// Per-worker arena: one f32 context row, quantized per token before the
+/// next row overwrites it.
+struct AvScratch {
+    row: Vec<f32>,
+}
+
+impl BlockAvOp {
+    /// Sequence length `l`, channel dimension `d`, staged f32
+    /// `[P | N' | X]` in-port.
+    pub fn try_new(l: usize, d: usize) -> Result<BlockAvOp> {
+        BlockAvOp::with_in_port(l, d, PortType::F32)
+    }
+
+    /// Construction with an explicit in-port (`F32` or `Log2Code5`).
+    pub fn with_in_port(l: usize, d: usize, port: PortType) -> Result<BlockAvOp> {
+        BlockAvOp::with_dispatch(l, d, port, Dispatch::detect())
+    }
+
+    /// Construction with an explicit kernel arm (tests pin arms to
+    /// compare them); the request is clamped to what this host can run.
+    pub fn with_dispatch(
+        l: usize,
+        d: usize,
+        port: PortType,
+        dispatch: Dispatch,
+    ) -> Result<BlockAvOp> {
+        ensure_shape("block-av", l, d)?;
+        anyhow::ensure!(
+            port != PortType::PtfU8,
+            "block-av has no ptf-u8 in-port (attention probabilities are f32 or log2 codes)"
+        );
+        Ok(BlockAvOp { l, d, in_port: port, dispatch: dispatch.sanitize() })
+    }
+
+    /// One context row `o = Σ_j p_j·n'_j` from f32 probabilities.
+    fn av_row_f32(&self, p_row: &[f32], n: &[f32], o_row: &mut [f32]) {
+        if self.dispatch == Dispatch::Avx2 {
+            // SAFETY: the Avx2 arm only exists after runtime detection
+            // (Dispatch::sanitize); shapes checked by the caller.
+            unsafe { crate::simd::av::av_row_f32_avx2(p_row, n, self.d, o_row) };
+            return;
+        }
+        o_row.fill(0.0);
+        for (&pij, n_row) in p_row.iter().zip(n.chunks_exact(self.d)) {
+            for (o, &nv) in o_row.iter_mut().zip(n_row) {
+                *o += pij * nv;
+            }
+        }
+    }
+
+    /// One context row from packed shift codes and the row's expanded
+    /// dequantization table.
+    fn av_row_codes(
+        &self,
+        code_row: &[u8],
+        val: &[f32; VAL_TABLE_LEN],
+        n: &[f32],
+        o_row: &mut [f32],
+    ) {
+        if self.dispatch == Dispatch::Avx2 {
+            // SAFETY: detected arm; shapes checked by the caller.
+            unsafe { crate::simd::av::av_row_codes_avx2(code_row, val, n, self.d, o_row) };
+            return;
+        }
+        o_row.fill(0.0);
+        for (&code, n_row) in code_row.iter().zip(n.chunks_exact(self.d)) {
+            let pij = val[code as usize];
+            for (o, &nv) in o_row.iter_mut().zip(n_row) {
+                *o += pij * nv;
+            }
+        }
+    }
+}
+
+impl Op for BlockAvOp {
+    fn name(&self) -> &str {
+        "block-av"
+    }
+
+    fn dim(&self) -> char {
+        'L'
+    }
+
+    fn item_len(&self) -> usize {
+        match self.in_port {
+            PortType::F32 => self.l * self.l + 2 * self.l * self.d,
+            // codes carry only the probability payload; [N' | X] is sidecar
+            _ => self.l * self.l,
+        }
+    }
+
+    fn out_len(&self) -> usize {
+        self.l * self.d
+    }
+
+    fn in_port(&self) -> PortType {
+        self.in_port
+    }
+
+    fn in_side_len(&self) -> usize {
+        match self.in_port {
+            PortType::F32 => 0,
+            _ => CODE_SIDE_LEN * self.l + 2 * self.l * self.d,
+        }
+    }
+
+    fn out_port(&self) -> PortType {
+        PortType::PtfU8
+    }
+
+    fn out_code_rows(&self) -> usize {
+        self.l
+    }
+
+    fn out_side_len(&self) -> usize {
+        self.l + self.l * self.d
+    }
+
+    fn dispatch(&self) -> Option<Dispatch> {
+        Some(self.dispatch)
+    }
+
+    fn make_scratch(&self) -> OpScratch {
+        Box::new(AvScratch { row: vec![0f32; self.d] })
+    }
+
+    fn run_batch(
+        &self,
+        _rows: usize,
+        _input: &[f32],
+        _out: &mut [f32],
+        _scratch: &mut OpScratch,
+    ) -> Result<()> {
+        anyhow::bail!("block-av with a ptf-u8 out-port must be driven through run_batch_ports")
+    }
+
+    fn run_batch_ports(
+        &self,
+        rows: usize,
+        input: PortRef<'_>,
+        out: PortMut<'_>,
+        scratch: &mut OpScratch,
+    ) -> Result<()> {
+        check_batch_ports(self, rows, &input, &out)?;
+        let s = scratch
+            .downcast_mut::<AvScratch>()
+            .context("block-av handed a foreign scratch arena")?;
+        let ll = self.l * self.l;
+        let ld = self.l * self.d;
+        match (input, out) {
+            (PortRef::F32(input), PortMut::PtfU8 { codes, side }) => {
+                for ((item, c_item), s_item) in input
+                    .chunks_exact(ll + 2 * ld)
+                    .zip(codes.chunks_exact_mut(ld))
+                    .zip(side.chunks_exact_mut(self.l + ld))
+                {
+                    let (p, rest) = item.split_at(ll);
+                    let (n, x) = rest.split_at(ld);
+                    let (scales, x_out) = s_item.split_at_mut(self.l);
+                    for ((p_row, c_row), scale) in p
+                        .chunks_exact(self.l)
+                        .zip(c_item.chunks_exact_mut(self.d))
+                        .zip(scales.iter_mut())
+                    {
+                        self.av_row_f32(p_row, n, &mut s.row);
+                        *scale = q8_quantize_row_into(&s.row, c_row);
+                    }
+                    x_out.copy_from_slice(x);
+                }
+                Ok(())
+            }
+            (PortRef::Log2Code5 { codes, side }, PortMut::PtfU8 { codes: oc, side: os }) => {
+                let hdr = CODE_SIDE_LEN * self.l;
+                for ((c_in, s_in), (c_item, s_item)) in codes
+                    .chunks_exact(ll)
+                    .zip(side.chunks_exact(hdr + 2 * ld))
+                    .zip(oc.chunks_exact_mut(ld).zip(os.chunks_exact_mut(self.l + ld)))
+                {
+                    let (headers, rest) = s_in.split_at(hdr);
+                    let (n, x) = rest.split_at(ld);
+                    let (scales, x_out) = s_item.split_at_mut(self.l);
+                    for ((code_row, h), (c_row, scale)) in c_in
+                        .chunks_exact(self.l)
+                        .zip(headers.chunks_exact(CODE_SIDE_LEN))
+                        .zip(c_item.chunks_exact_mut(self.d).zip(scales.iter_mut()))
+                    {
+                        // the hardware shift network: one table expansion
+                        // per row, then a 1-byte indexed load per weight
+                        let val = expand_row_side(h);
+                        self.av_row_codes(code_row, &val, n, &mut s.row);
+                        *scale = q8_quantize_row_into(&s.row, c_row);
+                    }
+                    x_out.copy_from_slice(x);
+                }
+                Ok(())
+            }
+            (input, out) => {
+                anyhow::bail!("block-av: no {} -> {} path", input.port(), out.port())
+            }
+        }
+    }
+}
+
+/// Stage 5: the residual add `Y = X + O'`, with the attention output
+/// arriving as `ptf-u8` codes on the fused path — each element widens
+/// through its token scale *inside* the add loop (the "quantized
+/// consumer" this PR exists to prove out; DESIGN.md §3.5).  On f32
+/// (`try_new`, the comparator) the item is the adapter-widened
+/// `[O' | X]` block.
+pub struct BlockResidualOp {
+    l: usize,
+    d: usize,
+    in_port: PortType,
+}
+
+impl BlockResidualOp {
+    /// Sequence length `l`, channel dimension `d`, staged f32 `[O' | X]`
+    /// in-port.
+    pub fn try_new(l: usize, d: usize) -> Result<BlockResidualOp> {
+        BlockResidualOp::with_in_port(l, d, PortType::F32)
+    }
+
+    /// Construction with an explicit in-port (`F32` or `PtfU8`).
+    pub fn with_in_port(l: usize, d: usize, port: PortType) -> Result<BlockResidualOp> {
+        ensure_shape("block-residual", l, d)?;
+        anyhow::ensure!(
+            port != PortType::Log2Code5,
+            "block-residual has no log2c5 in-port (context rows are affine u8 or f32)"
+        );
+        Ok(BlockResidualOp { l, d, in_port: port })
+    }
+}
+
+impl Op for BlockResidualOp {
+    fn name(&self) -> &str {
+        "block-residual"
+    }
+
+    fn dim(&self) -> char {
+        'L'
+    }
+
+    fn item_len(&self) -> usize {
+        match self.in_port {
+            PortType::PtfU8 => self.l * self.d,
+            _ => 2 * self.l * self.d,
+        }
+    }
+
+    fn out_len(&self) -> usize {
+        self.l * self.d
+    }
+
+    fn in_port(&self) -> PortType {
+        self.in_port
+    }
+
+    fn in_side_len(&self) -> usize {
+        match self.in_port {
+            PortType::PtfU8 => self.l + self.l * self.d,
+            _ => 0,
+        }
+    }
+
+    fn run_batch(
+        &self,
+        rows: usize,
+        input: &[f32],
+        out: &mut [f32],
+        _scratch: &mut OpScratch,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            self.in_port == PortType::F32,
+            "block-residual with a {} in-port must be driven through run_batch_ports",
+            self.in_port
+        );
+        check_batch(self, rows, input, out)?;
+        let ld = self.l * self.d;
+        for (item, out_item) in input.chunks_exact(2 * ld).zip(out.chunks_exact_mut(ld)) {
+            let (o_prime, x) = item.split_at(ld);
+            for ((y, &xv), &ov) in out_item.iter_mut().zip(x).zip(o_prime) {
+                *y = xv + ov;
+            }
+        }
+        Ok(())
+    }
+
+    fn run_batch_ports(
+        &self,
+        rows: usize,
+        input: PortRef<'_>,
+        out: PortMut<'_>,
+        scratch: &mut OpScratch,
+    ) -> Result<()> {
+        check_batch_ports(self, rows, &input, &out)?;
+        match (input, out) {
+            (PortRef::F32(input), PortMut::F32(out)) => self.run_batch(rows, input, out, scratch),
+            (PortRef::PtfU8 { codes, side }, PortMut::F32(out)) => {
+                let ld = self.l * self.d;
+                for ((c_item, s_item), out_item) in codes
+                    .chunks_exact(ld)
+                    .zip(side.chunks_exact(self.l + ld))
+                    .zip(out.chunks_exact_mut(ld))
+                {
+                    let (scales, x) = s_item.split_at(self.l);
+                    for (((c_row, &sc), x_row), o_row) in c_item
+                        .chunks_exact(self.d)
+                        .zip(scales)
+                        .zip(x.chunks_exact(self.d))
+                        .zip(out_item.chunks_exact_mut(self.d))
+                    {
+                        for ((y, &xv), &c) in o_row.iter_mut().zip(x_row).zip(c_row) {
+                            *y = xv + q8_dequantize(c, sc);
+                        }
+                    }
+                }
+                Ok(())
+            }
+            (input, out) => {
+                anyhow::bail!("block-residual: no {} -> {} path", input.port(), out.port())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn block_items(rng: &mut Rng, l: usize, d: usize, rows: usize) -> Vec<f32> {
+        let mut v = vec![0f32; rows * l * d];
+        rng.fill_normal(&mut v, 0.0, 1.0);
+        v
+    }
+
+    fn run(op: &dyn Op, rows: usize, input: &[f32]) -> Vec<f32> {
+        let mut out = vec![0f32; rows * op.out_len()];
+        let mut scratch = op.make_scratch();
+        op.run_batch(rows, input, &mut out, &mut scratch).unwrap();
+        out
+    }
+
+    #[test]
+    fn fused_is_bit_exact_to_unfused() {
+        let mut rng = Rng::new(0xB10C);
+        for &(l, d) in &[(1usize, 4usize), (7, 3), (17, 8), (32, 16)] {
+            let fused = fused_block(l, d).unwrap();
+            let unfused = unfused_block(l, d).unwrap();
+            let input = block_items(&mut rng, l, d, 3);
+            assert_eq!(run(&fused, 3, &input), run(&unfused, 3, &input), "L{l}xD{d}");
+        }
+    }
+
+    #[test]
+    fn residual_actually_rides_the_input_through() {
+        // Y - X must equal the quantized attention branch, so zero input
+        // maps to zero output and the op is not a pure attention clone
+        let (l, d) = (8, 4);
+        let fused = fused_block(l, d).unwrap();
+        let zeros = vec![0f32; l * d];
+        assert_eq!(run(&fused, 1, &zeros), zeros);
+        let mut rng = Rng::new(0xB11);
+        let input = block_items(&mut rng, l, d, 1);
+        let y = run(&fused, 1, &input);
+        let mut moved = 0usize;
+        for (a, b) in y.iter().zip(&input) {
+            if a != b {
+                moved += 1;
+            }
+        }
+        assert!(moved > 0, "residual output never departed from X");
+    }
+
+    #[test]
+    fn fused_block_advertises_the_quantized_boundaries() {
+        let (l, d) = (16, 8);
+        let p = fused_block(l, d).unwrap();
+        assert_eq!(p.spec().to_string(), "block/L16xD8");
+        assert_eq!((p.item_len(), p.out_len()), (l * d, l * d));
+        assert_eq!((p.in_port(), p.out_port()), (PortType::F32, PortType::F32));
+        // five stages, zero adapters: every quantized boundary has a
+        // native consumer on the other side
+        assert_eq!(p.stages().len(), 5);
+        assert!(
+            p.stages().iter().all(|s| !s.name().starts_with("dequant")),
+            "fused block grew a dequant adapter"
+        );
+        assert_eq!(
+            p.boundary_ports(),
+            vec![PortType::PtfU8, PortType::F32, PortType::Log2Code5, PortType::PtfU8]
+        );
+        // the comparator pays two adapters (both ptf-u8 boundaries; the
+        // softmax comparator stays f32 end to end)
+        let u = unfused_block(l, d).unwrap();
+        assert_eq!(u.stages().len(), 7);
+        assert_eq!(u.stages().iter().filter(|s| s.name().starts_with("dequant")).count(), 2);
+        // staged bytes per boundary: codes at 1 byte/elem plus the f32
+        // sidecar, vs 4 bytes/elem everywhere on the f32 comparator
+        let staging = p.staging_bytes_per_item();
+        assert_eq!(staging.len(), 4);
+        assert_eq!(staging[0], l * d + 4 * (l + l * d));
+        assert_eq!(staging[2], l * l + 4 * (2 * l + 2 * l * d));
+    }
+
+    #[test]
+    fn multi_head_packing_is_pure_batch_geometry() {
+        let (h, l, d) = (3usize, 9, 4);
+        let packed = fused_block_heads(h, l, d).unwrap();
+        assert_eq!(packed.spec().to_string(), "block/H3xL9xD4");
+        assert_eq!(packed.item_len(), h * l * d);
+        assert_eq!(packed.out_len(), h * l * d);
+        let single = fused_block(l, d).unwrap();
+        let rows = 2;
+        let mut rng = Rng::new(0xB12);
+        let input = block_items(&mut rng, l, d, rows * h);
+        assert_eq!(run(&packed, rows, &input), run(&single, rows * h, &input));
+    }
+
+    #[test]
+    fn stage_ports_reject_what_the_datapath_cannot_carry() {
+        assert!(BlockLogitsOp::with_in_port(4, 4, PortType::Log2Code5).is_err());
+        assert!(BlockAvOp::with_in_port(4, 4, PortType::PtfU8).is_err());
+        assert!(BlockResidualOp::with_in_port(4, 4, PortType::Log2Code5).is_err());
+        assert!(BlockLnOp::try_new(0, 4).is_err());
+        assert!(BlockAvOp::try_new(4, 0).is_err());
+        // quantized-ported stages refuse the untyped f32 entry point
+        let (l, d) = (4, 4);
+        for op in [
+            Arc::new(BlockLnOp::try_new(l, d).unwrap()) as Arc<dyn Op>,
+            Arc::new(BlockLogitsOp::with_in_port(l, d, PortType::PtfU8).unwrap()),
+            Arc::new(BlockAvOp::with_in_port(l, d, PortType::Log2Code5).unwrap()),
+            Arc::new(BlockResidualOp::with_in_port(l, d, PortType::PtfU8).unwrap()),
+        ] {
+            let mut s = op.make_scratch();
+            let input = vec![0f32; op.item_len()];
+            let mut out = vec![0f32; op.out_len()];
+            let err = op.run_batch(1, &input, &mut out, &mut s).unwrap_err();
+            assert!(format!("{err:#}").contains("run_batch_ports"), "{}: {err:#}", op.name());
+        }
+    }
+}

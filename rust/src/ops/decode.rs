@@ -1,0 +1,294 @@
+//! Stateful KV-cache decode attention: one query row per step against a
+//! server-resident key/value cache (DESIGN.md §3.5).
+//!
+//! Prefill (the `attention/*` pipelines) scores a whole `L x L` block at
+//! once; decode is the serving regime where the sequence grows one token
+//! per request and recomputing the full block would be `O(L²·D)` per
+//! step.  [`DecodeAttnOp`] keeps K and V cached in per-session
+//! [`DecodeState`] — the state lives in the serving worker, keyed by
+//! session id, never inside the op (`coordinator/session.rs`) — and each
+//! step costs one `O(t·D)` row: score the new query against the `t`
+//! cached keys, E2Softmax the row to 5-bit shift codes, then
+//! shift-accumulate over the cached V.
+//!
+//! Every kernel here is the row-length-parameterized arm the prefill
+//! pipelines already run (`quantize_logits_batch_into`,
+//! `E2Softmax::forward_batch_codes`, `av_row_codes_avx2`), and
+//! E2Softmax quantizes each row against its own max — so step `t` of a
+//! decode session is **bit-identical** to row `t` of a one-shot
+//! `attention/L<t>xD<d>` prefill over the same tokens.  That oracle is
+//! pinned by `tests/decode_prefill.rs` under both kernel arms.
+//!
+//! The op registers as `decode-attention/L<cap>xD<dim>`: `L` is the
+//! session *capacity* (cache slots), the per-request item is one packed
+//! `[q | k | v]` row (`3·D` f32) and the output is the `D`-wide context
+//! row.  `run_batch` errors by design — `OpBackend` refuses stateful
+//! ops, the decode service drives [`Op::run_batch_stateful`] instead.
+
+use anyhow::{Context, Result};
+
+use super::{check_batch, Op, OpScratch, OpSpec, OpState};
+use crate::simd::Dispatch;
+use crate::softmax::e2::{
+    expand_row_side, quantize_logits_batch_into, E2Scratch, CODE_SIDE_LEN,
+};
+use crate::softmax::{E2Softmax, E2SoftmaxConfig};
+
+/// Decode-attention op: spec `decode-attention/L<cap>xD<dim>`, item
+/// `[q | k | v]` (`3·D` f32), output one `D`-wide context row per step.
+pub struct DecodeAttnOp {
+    l_max: usize,
+    d: usize,
+    sm: E2Softmax,
+    scale: f32,
+    dispatch: Dispatch,
+}
+
+/// Per-session KV cache: the only state in the system, owned by the
+/// serving worker the session is pinned to.
+pub struct DecodeState {
+    /// Cached key rows, `t * d` f32.
+    k: Vec<f32>,
+    /// Cached value rows, `t * d` f32.
+    v: Vec<f32>,
+    /// Steps taken so far (cached tokens).
+    t: usize,
+}
+
+impl DecodeState {
+    /// Number of cached tokens (decode steps taken so far).
+    pub fn len(&self) -> usize {
+        self.t
+    }
+
+    /// True before the first decode step.
+    pub fn is_empty(&self) -> bool {
+        self.t == 0
+    }
+}
+
+/// Per-worker arena: the score row, its quantized forms, and the
+/// E2Softmax kernel scratch.  Sized to the current `t`, so capacity
+/// grows to the longest session the worker has served.
+struct Scratch {
+    logits: Vec<f32>,
+    qcodes: Vec<i64>,
+    codes: Vec<u8>,
+    side: [f32; CODE_SIDE_LEN],
+    e2: E2Scratch,
+}
+
+impl DecodeAttnOp {
+    /// Session capacity `l_max` (cache slots), head dimension `d`; the
+    /// logit scale is the standard `1/√d`.
+    pub fn try_new(l_max: usize, d: usize) -> Result<DecodeAttnOp> {
+        DecodeAttnOp::with_dispatch(l_max, d, Dispatch::detect())
+    }
+
+    /// Construction with an explicit kernel arm (tests pin arms to
+    /// compare them); the request is clamped to what this host can run.
+    pub fn with_dispatch(l_max: usize, d: usize, dispatch: Dispatch) -> Result<DecodeAttnOp> {
+        anyhow::ensure!(l_max > 0, "decode-attention: session capacity must be positive");
+        anyhow::ensure!(d > 0, "decode-attention: head dimension must be positive");
+        let dispatch = dispatch.sanitize();
+        Ok(DecodeAttnOp {
+            l_max,
+            d,
+            sm: E2Softmax::with_dispatch(E2SoftmaxConfig::default(), dispatch),
+            scale: 1.0 / (d as f32).sqrt(),
+            dispatch,
+        })
+    }
+}
+
+impl Op for DecodeAttnOp {
+    fn name(&self) -> &str {
+        "decode-attention"
+    }
+
+    fn dim(&self) -> char {
+        'L'
+    }
+
+    fn spec(&self) -> OpSpec {
+        let extra = vec![('D', self.d)];
+        OpSpec { op: "decode-attention".into(), dim: 'L', len: self.l_max, extra }
+    }
+
+    fn item_len(&self) -> usize {
+        3 * self.d
+    }
+
+    fn out_len(&self) -> usize {
+        self.d
+    }
+
+    fn dispatch(&self) -> Option<Dispatch> {
+        Some(self.dispatch)
+    }
+
+    fn make_scratch(&self) -> OpScratch {
+        Box::new(Scratch {
+            logits: Vec::new(),
+            qcodes: Vec::new(),
+            codes: Vec::new(),
+            side: [0.0; CODE_SIDE_LEN],
+            e2: E2Scratch::default(),
+        })
+    }
+
+    fn stateful(&self) -> bool {
+        true
+    }
+
+    fn make_state(&self) -> OpState {
+        let cap = self.l_max * self.d;
+        Box::new(DecodeState { k: Vec::with_capacity(cap), v: Vec::with_capacity(cap), t: 0 })
+    }
+
+    fn run_batch(
+        &self,
+        _rows: usize,
+        _input: &[f32],
+        _out: &mut [f32],
+        _scratch: &mut OpScratch,
+    ) -> Result<()> {
+        anyhow::bail!(
+            "decode-attention is stateful: drive it through run_batch_stateful via the decode \
+             service (sole serve --decode), not the stateless batch path"
+        )
+    }
+
+    fn run_batch_stateful(
+        &self,
+        rows: usize,
+        input: &[f32],
+        out: &mut [f32],
+        scratch: &mut OpScratch,
+        state: &mut OpState,
+    ) -> Result<()> {
+        check_batch(self, rows, input, out)?;
+        let s = scratch
+            .downcast_mut::<Scratch>()
+            .context("decode-attention handed a foreign scratch arena")?;
+        let st = state
+            .downcast_mut::<DecodeState>()
+            .context("decode-attention handed a foreign session state")?;
+        let d = self.d;
+        for (item, o_row) in input.chunks_exact(3 * d).zip(out.chunks_exact_mut(d)) {
+            anyhow::ensure!(
+                st.t < self.l_max,
+                "decode-attention session is at capacity L{} ({} cached tokens)",
+                self.l_max,
+                st.t
+            );
+            let (q, rest) = item.split_at(d);
+            let (k, v) = rest.split_at(d);
+            st.k.extend_from_slice(k);
+            st.v.extend_from_slice(v);
+            st.t += 1;
+            let t = st.t;
+            // score the new query against every cached key — the same
+            // acc-over-d-then-scale order as AttnLogitsOp, so row t of a
+            // prefill block sees identical f32s
+            s.logits.resize(t, 0.0);
+            for (kj, s_elem) in st.k.chunks_exact(d).zip(s.logits.iter_mut()) {
+                let mut acc = 0f32;
+                for (&x, &y) in q.iter().zip(kj) {
+                    acc += x * y;
+                }
+                *s_elem = acc * self.scale;
+            }
+            // one E2Softmax row: per-row-max quantization, codes + the
+            // compact divider header — decode stores exactly what the
+            // prefill code port stores
+            quantize_logits_batch_into(&s.logits, t, self.sm.cfg().e, &mut s.qcodes);
+            s.codes.resize(t, 0);
+            self.sm.forward_batch_codes(&s.qcodes, t, &mut s.codes, &mut s.side, &mut s.e2);
+            let val = expand_row_side(&s.side);
+            if self.dispatch == Dispatch::Avx2 {
+                // SAFETY: the Avx2 arm only exists after runtime detection
+                // (Dispatch::sanitize); shapes checked above.
+                unsafe { crate::simd::av::av_row_codes_avx2(&s.codes, &val, &st.v, d, o_row) };
+                continue;
+            }
+            o_row.fill(0.0);
+            for (&code, v_row) in s.codes.iter().zip(st.v.chunks_exact(d)) {
+                let pij = val[code as usize];
+                for (o, &vv) in o_row.iter_mut().zip(v_row) {
+                    *o += pij * vv;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn stateless_entry_points_are_sealed() {
+        let op = DecodeAttnOp::try_new(8, 4).unwrap();
+        assert!(op.stateful());
+        assert_eq!(op.spec().to_string(), "decode-attention/L8xD4");
+        assert_eq!((op.item_len(), op.out_len()), (12, 4));
+        let mut s = op.make_scratch();
+        let err = op.run_batch(1, &[0.0; 12], &mut [0.0; 4], &mut s).unwrap_err();
+        assert!(format!("{err:#}").contains("run_batch_stateful"), "{err:#}");
+        // degenerate shapes die at construction
+        assert!(DecodeAttnOp::try_new(0, 4).is_err());
+        assert!(DecodeAttnOp::try_new(8, 0).is_err());
+    }
+
+    #[test]
+    fn sessions_are_isolated_and_capacity_bounded() {
+        let (cap, d) = (3usize, 4usize);
+        let op = DecodeAttnOp::try_new(cap, d).unwrap();
+        let mut rng = Rng::new(0xDEC0);
+        let mut input = vec![0f32; 3 * d];
+        let mut scratch = op.make_scratch();
+        let mut a = op.make_state();
+        let mut b = op.make_state();
+        let mut out_a = vec![0f32; d];
+        let mut out_b = vec![0f32; d];
+        // the same token stream through two sessions gives the same rows
+        for step in 0..cap {
+            rng.fill_normal(&mut input, 0.0, 1.0);
+            op.run_batch_stateful(1, &input, &mut out_a, &mut scratch, &mut a).unwrap();
+            op.run_batch_stateful(1, &input, &mut out_b, &mut scratch, &mut b).unwrap();
+            assert_eq!(out_a, out_b, "step {step}");
+        }
+        assert_eq!(a.downcast_ref::<DecodeState>().unwrap().len(), cap);
+        // step cap+1 overflows the cache, and the error names the spec's L
+        let err = op.run_batch_stateful(1, &input, &mut out_a, &mut scratch, &mut a).unwrap_err();
+        assert!(format!("{err:#}").contains("capacity L3"), "{err:#}");
+        // a fresh state starts over
+        let mut c = op.make_state();
+        assert!(c.downcast_ref::<DecodeState>().unwrap().is_empty());
+        op.run_batch_stateful(1, &input, &mut out_a, &mut scratch, &mut c).unwrap();
+    }
+
+    #[test]
+    fn a_batched_call_equals_token_by_token_steps() {
+        let (cap, d) = (16usize, 8usize);
+        let op = DecodeAttnOp::try_new(cap, d).unwrap();
+        let mut rng = Rng::new(0xDEC1);
+        let mut input = vec![0f32; cap * 3 * d];
+        rng.fill_normal(&mut input, 0.0, 1.0);
+        // all 16 steps in one run_batch_stateful call
+        let mut batched = vec![0f32; cap * d];
+        let mut scratch = op.make_scratch();
+        let mut state = op.make_state();
+        op.run_batch_stateful(cap, &input, &mut batched, &mut scratch, &mut state).unwrap();
+        // vs one call per token on a fresh session
+        let mut stepped = vec![0f32; cap * d];
+        let mut state = op.make_state();
+        for (item, o_row) in input.chunks_exact(3 * d).zip(stepped.chunks_exact_mut(d)) {
+            op.run_batch_stateful(1, item, o_row, &mut scratch, &mut state).unwrap();
+        }
+        assert_eq!(batched, stepped);
+    }
+}

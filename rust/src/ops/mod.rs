@@ -37,9 +37,16 @@
 //! softmax→A·V through the `Log2Code5` port), and `ailayernorm-ptf`
 //! (AILayerNorm staged through its `PtfU8` out-port plus the
 //! auto-inserted [`port::DequantOp`] adapter) — every one servable side
-//! by side for accuracy/throughput comparison.  A shared conformance
-//! suite (`tests/op_conformance.rs`) pins each registered op bit-exact
-//! to its direct kernel.
+//! by side for accuracy/throughput comparison.  PR 8 adds the
+//! transformer-block tier: multi-head attention packing (`H` specs like
+//! `attention/H8xL128xD64`, [`PipelineOp`] heads), the `block` family
+//! ([`block`]: AILayerNorm → attention → residual-add with every
+//! internal boundary on a quantized port, including a direct `ptf-u8`
+//! consumer), and the stateful `decode-attention` family ([`decode`]: a
+//! KV-cache op served through the session-affine decode service, never
+//! through `OpBackend`).  A shared conformance suite
+//! (`tests/op_conformance.rs`) pins each registered op bit-exact to its
+//! direct kernel.
 //!
 //! ## Spec parsing
 //!
@@ -67,6 +74,8 @@
 pub mod ailayernorm;
 pub mod attention;
 pub mod baselines;
+pub mod block;
+pub mod decode;
 pub mod e2softmax;
 pub mod exact;
 pub mod pipeline;
@@ -78,6 +87,7 @@ use anyhow::Result;
 
 pub use ailayernorm::AiLayerNormOp;
 pub use baselines::{IbertLayerNormOp, IbertSoftmaxOp, SoftermaxOp};
+pub use decode::DecodeAttnOp;
 pub use e2softmax::E2SoftmaxOp;
 pub use exact::{ExactLayerNormOp, ExactSoftmaxOp};
 pub use pipeline::PipelineOp;
@@ -89,6 +99,15 @@ pub use spec::OpSpec;
 /// [`Op::make_scratch`] and hands it back on every `run_batch`, so ops
 /// reuse buffers without locks; stateless ops keep the default `()`.
 pub type OpScratch = Box<dyn std::any::Any + Send>;
+
+/// Opaque per-session state for stateful ops ([`Op::make_state`]).
+/// Unlike scratch (per worker, contents never observable across
+/// batches), state is per *session* and carries meaning between requests
+/// — e.g. the KV cache a decode op appends to.  State lives in the
+/// serving layer (the decode service's worker owns it, keyed by session
+/// id), never inside the op itself, so one op instance serves any number
+/// of concurrent sessions.
+pub type OpState = Box<dyn std::any::Any + Send>;
 
 /// One batch operator: the single API every kernel is served through.
 ///
@@ -168,6 +187,15 @@ pub trait Op: Send + Sync {
         Vec::new()
     }
 
+    /// Bytes one item occupies in the staging buffer at each internal
+    /// stage boundary, in execution order — empty for single-stage ops.
+    /// For pipelines this is code bytes at the boundary port's width plus
+    /// the f32 sidecar: the number the paper's inter-stage storage claim
+    /// lives in, surfaced by `sole ops` and `bench_kernels --json`.
+    fn staging_bytes_per_item(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
     /// The SIMD kernel arm this op's hot loops selected at construction
     /// (`crate::simd::Dispatch`, DESIGN.md §3.4) — `None` for ops with
     /// no vectorized kernel.  Surfaced by `sole ops` and both bench
@@ -220,6 +248,39 @@ pub trait Op: Send + Sync {
                 self.out_port()
             ),
         }
+    }
+
+    /// Whether this op carries per-session state across requests
+    /// ([`Op::make_state`] / [`Op::run_batch_stateful`]).  Stateful ops
+    /// cannot be served through the stateless `OpBackend` path — the
+    /// decode service drives them with session affinity instead.
+    /// Defaults to `false`; everything registered before the decode
+    /// family is stateless.
+    fn stateful(&self) -> bool {
+        false
+    }
+
+    /// Create fresh per-session state (a new, empty KV cache for a
+    /// decode op).  Stateless ops keep the default `()`.
+    fn make_state(&self) -> OpState {
+        Box::new(())
+    }
+
+    /// Stateful twin of [`Op::run_batch`]: the same batch contract, plus
+    /// mutable per-session state that persists across calls.  Rows are
+    /// processed in order — for a decode op, each row appends one step to
+    /// the session.  The default delegates to `run_batch` (stateless ops
+    /// ignore the state); stateful ops override and make `run_batch`
+    /// error, so a stateless serving path cannot silently drop state.
+    fn run_batch_stateful(
+        &self,
+        rows: usize,
+        input: &[f32],
+        out: &mut [f32],
+        scratch: &mut OpScratch,
+        _state: &mut OpState,
+    ) -> Result<()> {
+        self.run_batch(rows, input, out, scratch)
     }
 }
 

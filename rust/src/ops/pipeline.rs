@@ -36,8 +36,19 @@ use super::{check_batch, Op, OpScratch, OpSpec};
 /// A chain of [`Op`] stages executed as one op: the output batch of
 /// stage `i` is the input batch of stage `i+1`, staged at whatever port
 /// the boundary declares.
+///
+/// ## Multi-head packing
+///
+/// A pipeline built with [`PipelineOp::with_heads`] packs `H` heads into
+/// one item: the item is `H` consecutive single-head items, and every
+/// stage runs over `rows * H` inner rows through the *same* single-head
+/// stage ops — the SIMD arms and dispatch are untouched, the packing is
+/// pure batch geometry.  `item_len`/`out_len`/`staging_bytes_per_item`
+/// all scale by `H`, so one request carries a whole multi-head attention
+/// (or block) item through the router.
 pub struct PipelineOp {
     spec: OpSpec,
+    heads: usize,
     stages: Vec<Arc<dyn Op>>,
 }
 
@@ -58,6 +69,15 @@ impl PipelineOp {
     /// out-port meets an f32 in-port (or the final f32 output edge), the
     /// matching [`DequantOp`] is inserted as an explicit stage.
     pub fn try_new(spec: OpSpec, stages: Vec<Arc<dyn Op>>) -> Result<PipelineOp> {
+        PipelineOp::with_heads(spec, 1, stages)
+    }
+
+    /// [`PipelineOp::try_new`] with `heads` single-head items packed per
+    /// pipeline item: each stage executes `rows * heads` inner rows, so
+    /// per-head slices stage through the same boundary ports and kernels
+    /// as the single-head pipeline.  `heads == 1` is exactly `try_new`.
+    pub fn with_heads(spec: OpSpec, heads: usize, stages: Vec<Arc<dyn Op>>) -> Result<PipelineOp> {
+        anyhow::ensure!(heads > 0, "pipeline '{spec}': head count must be positive");
         anyhow::ensure!(!stages.is_empty(), "pipeline '{spec}' needs at least one stage");
         anyhow::ensure!(
             stages[0].in_port() == PortType::F32,
@@ -108,7 +128,7 @@ impl PipelineOp {
                 .with_context(|| format!("pipeline '{spec}'"))?;
             chain.push(Arc::new(tail));
         }
-        Ok(PipelineOp { spec, stages: chain })
+        Ok(PipelineOp { spec, heads, stages: chain })
     }
 
     /// The chained stages, in execution order — auto-inserted dequant
@@ -117,16 +137,9 @@ impl PipelineOp {
         &self.stages
     }
 
-    /// Bytes one item occupies in the staging buffer at each internal
-    /// boundary, in execution order (length `stages() - 1`): code bytes
-    /// at the port's width plus the f32 sidecar.  This is the number the
-    /// paper's storage claim lives in — `bench_kernels --json` reports
-    /// it per pipeline as `staging_bytes_per_item`.
-    pub fn staging_bytes_per_item(&self) -> Vec<usize> {
-        self.stages[..self.stages.len() - 1]
-            .iter()
-            .map(|s| s.out_port().bytes_per_elem() * s.out_len() + 4 * s.out_side_len())
-            .collect()
+    /// Heads packed per item (1 for single-head pipelines).
+    pub fn heads(&self) -> usize {
+        self.heads
     }
 }
 
@@ -140,11 +153,11 @@ impl Op for PipelineOp {
     }
 
     fn item_len(&self) -> usize {
-        self.stages[0].item_len()
+        self.heads * self.stages[0].item_len()
     }
 
     fn out_len(&self) -> usize {
-        self.stages[self.stages.len() - 1].out_len()
+        self.heads * self.stages[self.stages.len() - 1].out_len()
     }
 
     fn spec(&self) -> OpSpec {
@@ -153,6 +166,21 @@ impl Op for PipelineOp {
 
     fn boundary_ports(&self) -> Vec<PortType> {
         self.stages[..self.stages.len() - 1].iter().map(|s| s.out_port()).collect()
+    }
+
+    /// Bytes one item occupies in the staging buffer at each internal
+    /// boundary, in execution order (length `stages() - 1`): code bytes
+    /// at the port's width plus the f32 sidecar, summed over the packed
+    /// heads.  This is the number the paper's inter-stage storage claim
+    /// lives in — `sole ops` and `bench_kernels --json` report it per
+    /// pipeline as `staging_bytes_per_item`.
+    fn staging_bytes_per_item(&self) -> Vec<usize> {
+        self.stages[..self.stages.len() - 1]
+            .iter()
+            .map(|s| {
+                self.heads * (s.out_port().bytes_per_elem() * s.out_len() + 4 * s.out_side_len())
+            })
+            .collect()
     }
 
     fn dispatch(&self) -> Option<crate::simd::Dispatch> {
@@ -187,6 +215,10 @@ impl Op for PipelineOp {
         );
         let Scratch { stages: scr, a, b } = s;
         let last = self.stages.len() - 1;
+        // multi-head packing is pure batch geometry: one pipeline item is
+        // `heads` consecutive single-head items, so every stage runs over
+        // `rows * heads` inner rows through the unchanged single-head op
+        let inner = rows * self.heads;
         // ping-pong through a/b: stage i reads the buffer stage i-1 wrote
         // (or `input` for stage 0), and writes the other buffer (or `out`
         // for the last stage) at stage i's declared out-port.  `prepare`
@@ -207,10 +239,10 @@ impl Op for PipelineOp {
                 } else {
                     b.as_port_ref()
                 };
-                stage.run_batch_ports(rows, src, PortMut::F32(out), sc)
+                stage.run_batch_ports(inner, src, PortMut::F32(out), sc)
             } else {
-                let elems = rows * stage.out_len();
-                let side = rows * stage.out_side_len();
+                let elems = inner * stage.out_len();
+                let side = inner * stage.out_side_len();
                 let (src, dst) = if i == 0 {
                     src_is_a = true;
                     (PortRef::F32(input), a.prepare(stage.out_port(), elems, side))
@@ -221,7 +253,7 @@ impl Op for PipelineOp {
                     src_is_a = true;
                     (b.as_port_ref(), a.prepare(stage.out_port(), elems, side))
                 };
-                stage.run_batch_ports(rows, src, dst, sc)
+                stage.run_batch_ports(inner, src, dst, sc)
             };
             result.with_context(|| {
                 format!("pipeline '{}' stage {} ('{}')", self.spec, i, stage.name())
@@ -285,6 +317,32 @@ mod tests {
         );
         assert!(err.contains("only dequant-to-f32 boundaries auto-insert"), "{err}");
         assert!(PipelineOp::try_new(spec("e2softmax/L8"), vec![]).is_err());
+    }
+
+    #[test]
+    fn packed_heads_are_pure_batch_geometry() {
+        // an H-head packed item is H consecutive single-head items: the
+        // packed pipeline over `rows` items must be bit-identical to the
+        // single-head pipeline over `rows * H` inner rows
+        let (l, heads, rows) = (8usize, 3usize, 2usize);
+        let single = PipelineOp::try_new(spec("e2softmax/L8"), vec![code_softmax(l)]).unwrap();
+        let packed =
+            PipelineOp::with_heads(spec("e2softmax/H3xL8"), heads, vec![code_softmax(l)]).unwrap();
+        assert_eq!(packed.heads(), heads);
+        assert_eq!(packed.item_len(), heads * l);
+        assert_eq!(packed.out_len(), heads * l);
+        assert_eq!(packed.staging_bytes_per_item(), vec![heads * (l + 4 * 2)]);
+        let mut rng = Rng::new(0x9E3);
+        let mut input = vec![0f32; rows * heads * l];
+        rng.fill_normal(&mut input, 0.0, 2.0);
+        let (mut got, mut want) = (vec![0f32; rows * heads * l], vec![0f32; rows * heads * l]);
+        let mut sp = packed.make_scratch();
+        packed.run_batch(rows, &input, &mut got, &mut sp).unwrap();
+        let mut ss = single.make_scratch();
+        single.run_batch(rows * heads, &input, &mut want, &mut ss).unwrap();
+        assert_eq!(got, want);
+        // zero heads is a construction error, not a degenerate op
+        assert!(PipelineOp::with_heads(spec("e2softmax/L8"), 0, vec![code_softmax(l)]).is_err());
     }
 
     #[test]

@@ -26,7 +26,11 @@
 //! explicit adapter stage `PipelineOp::try_new` auto-inserts (and the
 //! registry can serve/bench, e.g. `ailayernorm-ptf`): quantized ports are
 //! never silently widened — the adapter shows up in `stages()`, the CLI
-//! listing and the bench tables.  See DESIGN.md §3.3.
+//! listing and the bench tables.  The fused `attention` pipeline and the
+//! `block` residual family are the native consumers: their stages read
+//! `Log2Code5`/`PtfU8` inputs and dequantize inside their accumulation
+//! loops, so those chains carry **no** adapter stages at all.  See
+//! DESIGN.md §3.3 and §3.5.
 
 use anyhow::Result;
 

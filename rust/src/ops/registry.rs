@@ -5,7 +5,11 @@
 //! lengths, e.g. `[('L', 128)]` or `[('L', 128), ('D', 64)]` — so
 //! `e2softmax/C768` and `attention/L128` are caught errors, not silently
 //! weird services; plus a one-line summary and a fallible constructor
-//! from a parsed [`OpSpec`].
+//! from a parsed [`OpSpec`].  Families registered with
+//! [`OpRegistry::register_heads`] additionally accept an optional
+//! leading `H<heads>` dimension (`attention/H8xL128xD64`): the canonical
+//! spec stays single-head, and the constructor sees the full parsed spec
+//! so it can build the packed multi-head pipeline.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -13,8 +17,8 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use super::{
-    attention, AiLayerNormOp, E2SoftmaxOp, ExactLayerNormOp, ExactSoftmaxOp, IbertLayerNormOp,
-    IbertSoftmaxOp, Op, OpSpec, PipelineOp, PortType, SoftermaxOp,
+    attention, block, decode, AiLayerNormOp, E2SoftmaxOp, ExactLayerNormOp, ExactSoftmaxOp,
+    IbertLayerNormOp, IbertSoftmaxOp, Op, OpSpec, PipelineOp, PortType, SoftermaxOp,
 };
 
 /// Constructor from a validated spec (the registry checks the dimension
@@ -25,6 +29,9 @@ pub type OpCtor = Box<dyn Fn(&OpSpec) -> Result<Arc<dyn Op>> + Send + Sync>;
 struct OpEntry {
     /// (letter, default length) per dimension, primary first.
     dims: Vec<(char, usize)>,
+    /// Whether the family accepts an optional leading `H<heads>`
+    /// dimension (multi-head packing).
+    heads: bool,
     summary: String,
     ctor: OpCtor,
 }
@@ -36,6 +43,9 @@ pub struct OpListing {
     pub name: String,
     /// Dimension signature: (letter, default length), primary first.
     pub dims: Vec<(char, usize)>,
+    /// Whether the family accepts an optional leading `H<heads>`
+    /// dimension.
+    pub heads: bool,
     /// One-line description.
     pub summary: String,
 }
@@ -46,11 +56,17 @@ impl OpListing {
         spec_from_dims(&self.name, &self.dims)
     }
 
-    /// The shape signature as the grammar renders it: `L<len>` or
-    /// `L<len>xD<len>`.
+    /// The shape signature as the grammar renders it: `L<len>`,
+    /// `L<len>xD<len>`, or `[H<n>x]L<len>xD<len>` for heads-enabled
+    /// families.
     pub fn signature(&self) -> String {
         let parts: Vec<String> = self.dims.iter().map(|&(d, _)| format!("{d}<len>")).collect();
-        parts.join("x")
+        let base = parts.join("x");
+        if self.heads {
+            format!("[H<n>x]{base}")
+        } else {
+            base
+        }
     }
 }
 
@@ -70,24 +86,27 @@ impl OpRegistry {
     }
 
     /// Every in-tree operator: the paper pair, the exact baselines, the
-    /// prior-work comparators, and the attention pipelines.
+    /// prior-work comparators, the attention/block pipelines, and the
+    /// stateful decode family.
     pub fn builtin() -> OpRegistry {
         let mut r = OpRegistry::empty();
         // registering a literal name twice is a programmer error; the
         // expect keeps builtin() infallible for callers
-        let mut add = |name: &str, dims: &[(char, usize)], summary: &str, ctor: OpCtor| {
-            r.register(name, dims, summary, ctor)
+        let mut add = |name: &str, dims: &[(char, usize)], heads: bool, summary: &str, ctor| {
+            r.register_entry(name, dims, heads, summary, ctor)
                 .unwrap_or_else(|e| panic!("builtin registry: {e:#}"))
         };
         add(
             "e2softmax",
             &[('L', 128)],
+            false,
             "SOLE E2Softmax (Algorithm 1): bit-exact integer softmax, planar LUT kernel",
             Box::new(|spec: &OpSpec| Ok(Arc::new(E2SoftmaxOp::try_new(spec.len)?) as Arc<dyn Op>)),
         );
         add(
             "softmax-exact",
             &[('L', 128)],
+            false,
             "exact f64 softmax baseline on f32 logit rows",
             Box::new(|spec: &OpSpec| {
                 Ok(Arc::new(ExactSoftmaxOp::try_new(spec.len)?) as Arc<dyn Op>)
@@ -96,12 +115,14 @@ impl OpRegistry {
         add(
             "softermax",
             &[('L', 128)],
+            false,
             "Softermax (DAC'21) base-2 comparator, 8 fraction bits",
             Box::new(|spec: &OpSpec| Ok(Arc::new(SoftermaxOp::try_new(spec.len)?) as Arc<dyn Op>)),
         );
         add(
             "ibert-softmax",
             &[('L', 128)],
+            false,
             "I-BERT i-exp integer softmax comparator, input scale 1/16",
             Box::new(|spec: &OpSpec| {
                 Ok(Arc::new(IbertSoftmaxOp::try_new(spec.len)?) as Arc<dyn Op>)
@@ -110,6 +131,7 @@ impl OpRegistry {
         add(
             "ailayernorm",
             &[('C', 768)],
+            false,
             "SOLE AILayerNorm (Algorithm 2): bit-exact integer layernorm, PTF-quantized",
             Box::new(|spec: &OpSpec| {
                 Ok(Arc::new(AiLayerNormOp::try_new(spec.len)?) as Arc<dyn Op>)
@@ -118,6 +140,7 @@ impl OpRegistry {
         add(
             "ailayernorm-ptf",
             &[('C', 768)],
+            false,
             "AILayerNorm staged through its ptf-u8 out-port (u8 codes + one f32 row scale), \
              widened back to f32 by the auto-inserted dequant adapter stage",
             Box::new(|spec: &OpSpec| {
@@ -128,6 +151,7 @@ impl OpRegistry {
         add(
             "layernorm-exact",
             &[('C', 768)],
+            false,
             "exact f64 layernorm baseline, identity affine",
             Box::new(|spec: &OpSpec| {
                 Ok(Arc::new(ExactLayerNormOp::try_new(spec.len)?) as Arc<dyn Op>)
@@ -136,6 +160,7 @@ impl OpRegistry {
         add(
             "ibert-layernorm",
             &[('C', 768)],
+            false,
             "I-BERT integer layernorm comparator, input scale 1/64",
             Box::new(|spec: &OpSpec| {
                 Ok(Arc::new(IbertLayerNormOp::try_new(spec.len)?) as Arc<dyn Op>)
@@ -144,18 +169,57 @@ impl OpRegistry {
         add(
             "attention",
             &[('L', 128), ('D', 64)],
+            true,
             "fused attention pipeline: QK^T-scaled logits -> E2Softmax log2 codes -> \
-             shift-accumulate A*V (item [Q|K|V], 3*L*D f32 in, L*D f32 out)",
+             shift-accumulate A*V (item [Q|K|V], 3*L*D f32 in, L*D f32 out; H packs heads)",
             Box::new(|spec: &OpSpec| {
-                Ok(Arc::new(attention::fused_pipeline(spec.len, spec.extra[0].1)?) as Arc<dyn Op>)
+                Ok(if spec.dim == 'H' {
+                    let (h, l, d) = (spec.len, spec.extra[0].1, spec.extra[1].1);
+                    Arc::new(attention::fused_pipeline_heads(h, l, d)?) as Arc<dyn Op>
+                } else {
+                    Arc::new(attention::fused_pipeline(spec.len, spec.extra[0].1)?) as Arc<dyn Op>
+                })
             }),
         );
         add(
             "attention-exact",
             &[('L', 128), ('D', 64)],
+            true,
             "exact-softmax attention pipeline: the error/latency reference for 'attention'",
             Box::new(|spec: &OpSpec| {
-                Ok(Arc::new(attention::exact_pipeline(spec.len, spec.extra[0].1)?) as Arc<dyn Op>)
+                Ok(if spec.dim == 'H' {
+                    let (h, l, d) = (spec.len, spec.extra[0].1, spec.extra[1].1);
+                    Arc::new(attention::exact_pipeline_heads(h, l, d)?) as Arc<dyn Op>
+                } else {
+                    Arc::new(attention::exact_pipeline(spec.len, spec.extra[0].1)?) as Arc<dyn Op>
+                })
+            }),
+        );
+        add(
+            "block",
+            &[('L', 128), ('D', 64)],
+            true,
+            "transformer block pipeline: AILayerNorm (ptf-u8 port) -> attention over the \
+             normed rows -> residual add consuming ptf-u8 directly (item X, L*D f32 in/out)",
+            Box::new(|spec: &OpSpec| {
+                Ok(if spec.dim == 'H' {
+                    let (h, l, d) = (spec.len, spec.extra[0].1, spec.extra[1].1);
+                    Arc::new(block::fused_block_heads(h, l, d)?) as Arc<dyn Op>
+                } else {
+                    Arc::new(block::fused_block(spec.len, spec.extra[0].1)?) as Arc<dyn Op>
+                })
+            }),
+        );
+        add(
+            "decode-attention",
+            &[('L', 128), ('D', 64)],
+            false,
+            "stateful KV-cache decode attention: each request appends one [q|k|v] step \
+             (3*D f32) and returns its context row (D f32); L is the session capacity — \
+             served with session affinity by the decode service, never through OpBackend",
+            Box::new(|spec: &OpSpec| {
+                let op = decode::DecodeAttnOp::try_new(spec.len, spec.extra[0].1)?;
+                Ok(Arc::new(op) as Arc<dyn Op>)
             }),
         );
         r
@@ -169,6 +233,32 @@ impl OpRegistry {
         &mut self,
         name: &str,
         dims: &[(char, usize)],
+        summary: &str,
+        ctor: OpCtor,
+    ) -> Result<()> {
+        self.register_entry(name, dims, false, summary, ctor)
+    }
+
+    /// [`OpRegistry::register`] for a family that also accepts an
+    /// optional leading `H<heads>` dimension: `parse_spec` admits both
+    /// `<op>/L..xD..` and `<op>/H<n>xL..xD..`, and the constructor
+    /// receives the full parsed spec (`spec.dim == 'H'` for the packed
+    /// form).  `H` must not appear in `dims`.
+    pub fn register_heads(
+        &mut self,
+        name: &str,
+        dims: &[(char, usize)],
+        summary: &str,
+        ctor: OpCtor,
+    ) -> Result<()> {
+        self.register_entry(name, dims, true, summary, ctor)
+    }
+
+    fn register_entry(
+        &mut self,
+        name: &str,
+        dims: &[(char, usize)],
+        heads: bool,
         summary: &str,
         ctor: OpCtor,
     ) -> Result<()> {
@@ -187,6 +277,10 @@ impl OpRegistry {
                 default_len > 0,
                 "op '{name}': default lengths must be positive"
             );
+            anyhow::ensure!(
+                !(heads && dim == 'H'),
+                "op '{name}': 'H' is the implicit heads dimension, not part of the signature"
+            );
         }
         anyhow::ensure!(
             !self.entries.contains_key(name),
@@ -194,7 +288,7 @@ impl OpRegistry {
         );
         self.entries.insert(
             name.to_string(),
-            OpEntry { dims: dims.to_vec(), summary: summary.to_string(), ctor },
+            OpEntry { dims: dims.to_vec(), heads, summary: summary.to_string(), ctor },
         );
         Ok(())
     }
@@ -211,6 +305,7 @@ impl OpRegistry {
             .map(|(name, e)| OpListing {
                 name: name.clone(),
                 dims: e.dims.clone(),
+                heads: e.heads,
                 summary: e.summary.clone(),
             })
             .collect()
@@ -229,20 +324,26 @@ impl OpRegistry {
     }
 
     /// Parse a spec string and validate it against the registry: known
-    /// family, matching dimension signature.
+    /// family, matching dimension signature (heads-enabled families also
+    /// accept an optional leading `H<heads>` dimension).
     pub fn parse_spec(&self, s: &str) -> Result<OpSpec> {
         let spec = OpSpec::parse(s)?;
         let e = self.entry(&spec.op)?;
         let want: Vec<char> = e.dims.iter().map(|&(d, _)| d).collect();
-        if spec.letters() != want {
+        let got_letters = spec.letters();
+        let matches = if e.heads && spec.dim == 'H' {
+            got_letters[1..] == want[..]
+        } else {
+            got_letters == want
+        };
+        if !matches {
             let signature: Vec<String> = want.iter().map(|d| format!("{d}<len>")).collect();
-            let got: Vec<String> = spec.letters().iter().map(|d| format!("{d}<len>")).collect();
-            anyhow::bail!(
-                "op spec '{s}': '{}' takes {}, not {}",
-                spec.op,
-                signature.join("x"),
-                got.join("x")
-            );
+            let mut signature = signature.join("x");
+            if e.heads {
+                signature = format!("[H<n>x]{signature}");
+            }
+            let got: Vec<String> = got_letters.iter().map(|d| format!("{d}<len>")).collect();
+            anyhow::bail!("op spec '{s}': '{}' takes {signature}, not {}", spec.op, got.join("x"));
         }
         Ok(spec)
     }
@@ -291,6 +392,8 @@ mod tests {
                 "ailayernorm-ptf",
                 "attention",
                 "attention-exact",
+                "block",
+                "decode-attention",
                 "e2softmax",
                 "ibert-layernorm",
                 "ibert-softmax",
@@ -308,6 +411,14 @@ mod tests {
         assert_eq!(r.canonical_spec("attention").unwrap().to_string(), "attention/L128xD64");
         assert_eq!(
             r.listings().iter().find(|l| l.name == "attention").unwrap().signature(),
+            "[H<n>x]L<len>xD<len>"
+        );
+        assert_eq!(
+            r.listings().iter().find(|l| l.name == "block").unwrap().signature(),
+            "[H<n>x]L<len>xD<len>"
+        );
+        assert_eq!(
+            r.listings().iter().find(|l| l.name == "decode-attention").unwrap().signature(),
             "L<len>xD<len>"
         );
         assert_eq!(
@@ -356,13 +467,36 @@ mod tests {
         assert!(r.build("ailayernorm/L49").is_err());
         // pipelines validate the full signature, not just the first letter
         let err = format!("{:#}", r.build("attention/L128").unwrap_err());
-        assert!(err.contains("takes L<len>xD<len>"), "{err}");
+        assert!(err.contains("takes [H<n>x]L<len>xD<len>"), "{err}");
         assert!(r.build("attention/L128xC64").is_err());
         assert!(r.build("attention/D64xL128").is_err());
         assert!(r.build("attention/L128xD64xD2").is_err());
         // and 1-D families reject trailing dimensions
         let err = format!("{:#}", r.build("e2softmax/L128xD64").unwrap_err());
         assert!(err.contains("takes L<len>"), "{err}");
+    }
+
+    #[test]
+    fn heads_specs_build_only_for_heads_enabled_families() {
+        let r = OpRegistry::builtin();
+        for s in ["attention/H8xL16xD8", "attention-exact/H2xL16xD8", "block/H2xL16xD8"] {
+            let (spec, op) = r.build(s).unwrap();
+            assert_eq!(spec.to_string(), s);
+            assert_eq!(op.spec(), spec, "{s}");
+        }
+        // the multi-head item packs H single-head items
+        let (_, packed) = r.build("attention/H8xL16xD8").unwrap();
+        let (_, single) = r.build("attention/L16xD8").unwrap();
+        assert_eq!(packed.item_len(), 8 * single.item_len());
+        assert_eq!(packed.out_len(), 8 * single.out_len());
+        // H on a non-heads family is a signature error naming the grammar
+        let err = format!("{:#}", r.build("e2softmax/H2xL64").unwrap_err());
+        assert!(err.contains("takes L<len>"), "{err}");
+        assert!(r.build("decode-attention/H2xL64xD8").is_err());
+        // H alone never replaces the required dimensions
+        assert!(r.build("attention/H8xL128").is_err());
+        assert!(r.build("attention/H8").is_err());
+        assert!(r.build("attention/H0xL16xD8").is_err());
     }
 
     #[test]
@@ -391,5 +525,9 @@ mod tests {
         assert!(r.register("ok-name", &[], "bad", ctor()).is_err());
         assert!(r.register("ok-name", &[('l', 64)], "bad", ctor()).is_err());
         assert!(r.register("ok-name", &[('L', 0)], "bad", ctor()).is_err());
+        // a heads-enabled family cannot also name 'H' in its signature
+        assert!(r.register_heads("ok-name", &[('H', 8), ('L', 64)], "bad", ctor()).is_err());
+        // but a plain family may use the letter explicitly
+        assert!(r.register("h-name", &[('H', 8)], "ok", ctor()).is_ok());
     }
 }

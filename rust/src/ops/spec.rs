@@ -3,14 +3,16 @@
 //! A spec names an operator family plus its item shape in a single
 //! routable token: `<op>/<DIM><len>[x<DIM><len>...]`.  Examples:
 //! `e2softmax/L256`, `softmax-exact/L49`, `ailayernorm/C768`,
-//! `attention/L128xD64`.  `<op>` is the registry family name (no `/`),
-//! each `<DIM>` is one uppercase dimension letter (by convention `L` for
-//! sequence/row length, `C` for layernorm channel count, `D` for
-//! attention head dimension), `<len>` is a positive integer, and extra
-//! dimensions are separated by a lowercase `x` (unambiguous: dimension
-//! letters are uppercase).  Most families are one-dimensional; pipelines
-//! like `attention` carry the extra dimensions their stages need.  The
-//! canonical rendering round-trips: `parse(format(spec)) == spec`.
+//! `attention/L128xD64`, `attention/H8xL128xD64`.  `<op>` is the
+//! registry family name (no `/`), each `<DIM>` is one uppercase
+//! dimension letter (by convention `L` for sequence/row length, `C` for
+//! layernorm channel count, `D` for attention head dimension, `H` for
+//! head count), `<len>` is a positive integer, and extra dimensions are
+//! separated by a lowercase `x` (unambiguous: dimension letters are
+//! uppercase).  Dimension letters must be distinct within one spec.
+//! Most families are one-dimensional; pipelines like `attention` carry
+//! the extra dimensions their stages need.  The canonical rendering
+//! round-trips: `parse(format(spec)) == spec`.
 
 use anyhow::{Context, Result};
 
@@ -45,7 +47,15 @@ impl OpSpec {
         let mut segments = shape.split('x');
         let (dim, len) = parse_segment(s, segments.next().unwrap_or(""))?;
         let extra = segments.map(|seg| parse_segment(s, seg)).collect::<Result<Vec<_>>>()?;
-        Ok(OpSpec { op: op.to_string(), dim, len, extra })
+        let spec = OpSpec { op: op.to_string(), dim, len, extra };
+        let letters = spec.letters();
+        for (i, &d) in letters.iter().enumerate() {
+            anyhow::ensure!(
+                !letters[..i].contains(&d),
+                "op spec '{s}': duplicate dimension letter '{d}'"
+            );
+        }
+        Ok(spec)
     }
 
     /// Dimension letters in spec order, primary first (`['L', 'D']` for
@@ -129,6 +139,30 @@ mod tests {
         // arbitrary depth parses (the registry enforces family signatures)
         let deep = OpSpec::parse("x/A1xB2xC3").unwrap();
         assert_eq!(deep.extra, vec![('B', 2), ('C', 3)]);
+    }
+
+    #[test]
+    fn parses_multi_head_specs_with_h_prefix() {
+        for (s, h, l, d) in
+            [("attention/H8xL128xD64", 8, 128, 64), ("block/H2xL17xD32", 2, 17, 32)]
+        {
+            let spec = OpSpec::parse(s).unwrap();
+            assert_eq!((spec.dim, spec.len), ('H', h));
+            assert_eq!(spec.extra, vec![('L', l), ('D', d)]);
+            assert_eq!(spec.letters(), vec!['H', 'L', 'D']);
+            // canonical round trip
+            assert_eq!(spec.to_string(), s);
+            assert_eq!(OpSpec::parse(&spec.to_string()).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn rejects_duplicate_dimension_letters() {
+        for bad in ["attention/L128xL64", "attention/L128xD64xD2", "x/A1xB2xA3"] {
+            let err = format!("{:#}", OpSpec::parse(bad).unwrap_err());
+            assert!(err.contains(&format!("'{bad}'")), "'{bad}' -> {err}");
+            assert!(err.contains("duplicate dimension letter"), "'{bad}' -> {err}");
+        }
     }
 
     #[test]

@@ -1,0 +1,117 @@
+//! The decode-vs-prefill oracle: a KV-cache decode session is the same
+//! computation as a one-shot prefill, unrolled one token per request.
+//!
+//! E2Softmax quantizes every probability row against its own max and the
+//! A·V kernels are row-length-parameterized, so decode step `t` must be
+//! **bit-identical** to the last row of the fused `attention/L<t>xD<d>`
+//! prefill pipeline over the same first `t` tokens — no tolerance.  The
+//! suite pins that chain at sampled session lengths up to 160 tokens
+//! (the acceptance bar is ≥ 128), pins the Scalar kernel arm against the
+//! dispatched one, and then pins the *served* paths — `DecodeService`
+//! directly and `RouterClient::infer_decode` through a `ServiceRouter` —
+//! against the same oracle stream.  CI runs the suite forced-scalar and
+//! with AVX2 enabled, so both arms cross the full chain.
+
+use std::sync::Arc;
+
+use sole::coordinator::{DecodeService, ServiceRouter};
+use sole::ops::{DecodeAttnOp, Op, OpRegistry};
+use sole::simd::Dispatch;
+use sole::util::rng::Rng;
+
+/// Session length: past the 128-token acceptance bar, with a tail that
+/// is not a multiple of the 8-lane AVX2 width anywhere (160 = 8·20, but
+/// the sampled prefill lengths include odd and prime `t`).
+const CAP: usize = 160;
+const D: usize = 16;
+
+/// One deterministic token stream: `CAP` packed `[q | k | v]` steps.
+fn token_stream(seed: u64) -> Vec<f32> {
+    let mut v = vec![0f32; CAP * 3 * D];
+    let mut rng = Rng::new(seed);
+    rng.fill_normal(&mut v, 0.0, 1.0);
+    v
+}
+
+/// Run the whole stream through one decode session, one step per call,
+/// returning the `CAP x D` context rows.
+fn decode_outputs(op: &DecodeAttnOp, stream: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; CAP * D];
+    let mut scratch = op.make_scratch();
+    let mut state = op.make_state();
+    for (item, o_row) in stream.chunks_exact(3 * D).zip(out.chunks_exact_mut(D)) {
+        op.run_batch_stateful(1, item, o_row, &mut scratch, &mut state).unwrap();
+    }
+    out
+}
+
+/// The oracle: the last context row of the registered fused attention
+/// pipeline over the first `t` tokens, with the step stream repacked
+/// into the pipeline's planar `[Q | K | V]` item.
+fn prefill_last_row(t: usize, stream: &[f32]) -> Vec<f32> {
+    let registry = OpRegistry::builtin();
+    let (_, attn) = registry.build(&format!("attention/L{t}xD{D}")).unwrap();
+    let mut item = vec![0f32; 3 * t * D];
+    for (i, step) in stream.chunks_exact(3 * D).take(t).enumerate() {
+        item[i * D..(i + 1) * D].copy_from_slice(&step[..D]);
+        item[(t + i) * D..(t + i + 1) * D].copy_from_slice(&step[D..2 * D]);
+        item[(2 * t + i) * D..(2 * t + i + 1) * D].copy_from_slice(&step[2 * D..]);
+    }
+    let mut out = vec![0f32; t * D];
+    let mut scratch = attn.make_scratch();
+    attn.run_batch(1, &item, &mut out, &mut scratch).unwrap();
+    out[(t - 1) * D..].to_vec()
+}
+
+#[test]
+fn every_decode_step_is_bit_equal_to_its_prefill_row() {
+    let stream = token_stream(0x0DEC);
+    let op = DecodeAttnOp::try_new(CAP, D).unwrap();
+    let decoded = decode_outputs(&op, &stream);
+    // sampled prefill lengths: tiny, odd, prime, lane-aligned, and the
+    // full 160-token session
+    for &t in &[1usize, 2, 3, 17, 64, 128, CAP] {
+        let want = prefill_last_row(t, &stream);
+        assert_eq!(&decoded[(t - 1) * D..t * D], &want[..], "step {t}");
+    }
+}
+
+#[test]
+fn the_pinned_scalar_arm_matches_the_dispatched_arm() {
+    // on an AVX2 host this crosses the kernel arms; forced-scalar (CI's
+    // SOLE_FORCE_SCALAR leg) it degenerates to scalar == scalar
+    let stream = token_stream(0x0DEC);
+    let detected = DecodeAttnOp::try_new(CAP, D).unwrap();
+    let scalar = DecodeAttnOp::with_dispatch(CAP, D, Dispatch::Scalar).unwrap();
+    assert_eq!(decode_outputs(&detected, &stream), decode_outputs(&scalar, &stream));
+}
+
+#[test]
+fn the_decode_service_and_router_reproduce_the_oracle() {
+    // the same stream as the oracle test (same seed), served two ways:
+    // straight through a DecodeService and through a ServiceRouter's
+    // decode route — every step must be bit-equal to the local replay,
+    // which the oracle test ties to prefill
+    let stream = token_stream(0x0DEC);
+    let op = DecodeAttnOp::try_new(CAP, D).unwrap();
+    let want = decode_outputs(&op, &stream);
+
+    let svc = DecodeService::start(Arc::new(DecodeAttnOp::try_new(CAP, D).unwrap()), 2).unwrap();
+    let cl = svc.client();
+    let name = format!("decode-attention/L{CAP}xD{D}");
+    let registry = OpRegistry::builtin();
+    let router =
+        ServiceRouter::builder(2).decode_service(&registry, &name, 1).unwrap().start().unwrap();
+    let rcl = router.client();
+    for (step, (item, w)) in stream.chunks_exact(3 * D).zip(want.chunks_exact(D)).enumerate() {
+        let got = cl.infer(9, item.to_vec()).unwrap();
+        assert_eq!(got.output, w, "service step {}", step + 1);
+        let got = rcl.infer_decode(&name, 4, item.to_vec()).unwrap();
+        assert_eq!(got.output, w, "router step {}", step + 1);
+    }
+    assert_eq!(svc.sessions(), 1);
+    assert_eq!(router.sessions(&name), Some(1));
+    assert_eq!(svc.metrics.completed(), CAP as u64);
+    svc.shutdown();
+    router.shutdown();
+}

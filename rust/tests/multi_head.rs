@@ -1,0 +1,69 @@
+//! Multi-head packing is pure batch geometry: the registered
+//! `H<h>x`-prefixed attention and block pipelines must be bit-identical
+//! to staging each head slice through the single-head pipeline — the
+//! `H` dimension never changes arithmetic, only how many head blocks one
+//! router item carries.
+//!
+//! Fixed shapes pin H ∈ {1, 2, 8} at lane-aligned and odd sequence
+//! lengths; the property sweep draws random (H, odd L, D) shapes so the
+//! AVX2 tails (L and D not multiples of the 8-lane width) are crossed on
+//! every run.  CI runs the suite forced-scalar and with AVX2 enabled.
+
+use sole::ops::{Op, OpRegistry};
+use sole::util::proptest::{check, size};
+use sole::util::rng::Rng;
+
+fn run(op: &dyn Op, rows: usize, input: &[f32]) -> Vec<f32> {
+    let mut out = vec![0f32; rows * op.out_len()];
+    let mut scratch = op.make_scratch();
+    op.run_batch(rows, input, &mut out, &mut scratch).unwrap();
+    out
+}
+
+/// The packed `family/H<h>xL<l>xD<d>` op over `rows` items vs every head
+/// slice staged one at a time through `family/L<l>xD<d>`.
+fn packed_equals_per_head(family: &str, h: usize, l: usize, d: usize, rng: &mut Rng) {
+    let registry = OpRegistry::builtin();
+    let (_, packed) = registry.build(&format!("{family}/H{h}xL{l}xD{d}")).unwrap();
+    let (_, single) = registry.build(&format!("{family}/L{l}xD{d}")).unwrap();
+    assert_eq!(packed.item_len(), h * single.item_len(), "{family} H{h}");
+    assert_eq!(packed.out_len(), h * single.out_len(), "{family} H{h}");
+    let rows = 2;
+    let mut input = vec![0f32; rows * packed.item_len()];
+    rng.fill_normal(&mut input, 0.0, 1.0);
+    let got = run(&*packed, rows, &input);
+    let (il, ol) = (single.item_len(), single.out_len());
+    let mut want = vec![0f32; rows * packed.out_len()];
+    for (i, item) in input.chunks_exact(il).enumerate() {
+        want[i * ol..(i + 1) * ol].copy_from_slice(&run(&*single, 1, item));
+    }
+    assert_eq!(got, want, "{family} H{h}xL{l}xD{d}");
+}
+
+#[test]
+fn fused_multi_head_attention_equals_per_head_staging() {
+    let mut rng = Rng::new(0xA110);
+    for &(h, l, d) in &[(1usize, 16usize, 8usize), (2, 9, 4), (8, 16, 8), (3, 17, 5)] {
+        packed_equals_per_head("attention", h, l, d, &mut rng);
+    }
+}
+
+#[test]
+fn fused_multi_head_block_equals_per_head_staging() {
+    let mut rng = Rng::new(0xB110);
+    for &(h, l, d) in &[(1usize, 16usize, 8usize), (2, 9, 4), (8, 16, 8), (3, 17, 5)] {
+        packed_equals_per_head("block", h, l, d, &mut rng);
+    }
+}
+
+#[test]
+fn property_packed_heads_never_change_arithmetic() {
+    // random H ∈ {1, 2, 8}, odd L (always an AVX2 tail), small-biased D
+    check("packed-heads-geometry", 10, 0x4EAD, |rng| {
+        let h = [1usize, 2, 8][((rng.f64() * 3.0) as usize).min(2)];
+        let l = 2 * size(rng, 8) + 1;
+        let d = size(rng, 8);
+        packed_equals_per_head("attention", h, l, d, rng);
+        packed_equals_per_head("block", h, l, d, rng);
+    });
+}

@@ -18,6 +18,12 @@
 //! additionally pinned bit-exact against composing its stages as
 //! *separate services* through `OpBackend` — the acceptance bar for the
 //! shift-accumulate A·V path.
+//!
+//! Stateful families (`Op::stateful`) are exempt from the run-based
+//! checks — their `run_batch` errors by design and `OpBackend` refuses
+//! them — and are pinned by name plus sealed-entry-point checks in
+//! `stateful_families_are_pinned_and_sealed` instead; their serving
+//! contract lives in `tests/decode_prefill.rs`.
 
 use sole::coordinator::{Backend, OpBackend};
 use sole::layernorm::ai::layernorm_exact;
@@ -117,6 +123,48 @@ fn attention_reference(l: usize, d: usize, item: &[f32], softmax_op: &str) -> Ve
     out
 }
 
+/// Block stage math composed from direct kernels, mirroring the fused
+/// pipeline's arithmetic exactly: per token row the ailayernorm kernel
+/// staged through the q8 row codec, self-attention logits over the
+/// normed rows (acc over d, then one scale multiply), the e2softmax row
+/// kernel, the j-then-d A·V accumulation over the normed rows, one more
+/// q8 round trip, then the residual add against the raw input.
+fn block_reference(l: usize, d: usize, item: &[f32]) -> Vec<f32> {
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut n = vec![0f32; l * d];
+    for (x_row, n_row) in item.chunks_exact(d).zip(n.chunks_exact_mut(d)) {
+        n_row.copy_from_slice(&reference_row("ailayernorm-ptf", x_row));
+    }
+    let mut s = vec![0f32; l * l];
+    for (ni, s_row) in n.chunks_exact(d).zip(s.chunks_exact_mut(l)) {
+        for (nj, s_elem) in n.chunks_exact(d).zip(s_row.iter_mut()) {
+            let mut acc = 0f32;
+            for (&x, &y) in ni.iter().zip(nj) {
+                acc += x * y;
+            }
+            *s_elem = acc * scale;
+        }
+    }
+    let mut out = vec![0f32; l * d];
+    for ((s_row, o_row), x_row) in
+        s.chunks_exact(l).zip(out.chunks_exact_mut(d)).zip(item.chunks_exact(d))
+    {
+        let p_row = reference_row("e2softmax", s_row);
+        let mut acc = vec![0f32; d];
+        for (&pij, n_row) in p_row.iter().zip(n.chunks_exact(d)) {
+            for (o, &nv) in acc.iter_mut().zip(n_row) {
+                *o += pij * nv;
+            }
+        }
+        let mut codes = vec![0u8; d];
+        let qs = q8_quantize_row_into(&acc, &mut codes);
+        for ((y, &xv), &c) in o_row.iter_mut().zip(x_row).zip(&codes) {
+            *y = xv + q8_dequantize(c, qs);
+        }
+    }
+    out
+}
+
 /// One item through the direct kernel of any registered family.
 fn reference_item(spec: &OpSpec, item: &[f32]) -> Vec<f32> {
     match spec.op.as_str() {
@@ -124,6 +172,7 @@ fn reference_item(spec: &OpSpec, item: &[f32]) -> Vec<f32> {
         "attention-exact" => {
             attention_reference(spec.len, spec.extra[0].1, item, "softmax-exact")
         }
+        "block" => block_reference(spec.len, spec.extra[0].1, item),
         _ => reference_row(&spec.op, item),
     }
 }
@@ -157,6 +206,9 @@ fn every_registered_op_is_bit_exact_to_its_direct_kernel() {
     for spec in conformance_specs(&registry) {
         let (parsed, op) = registry.build(&spec.to_string()).unwrap();
         assert_eq!(parsed, spec);
+        if op.stateful() {
+            continue; // sealed run_batch; pinned separately below
+        }
         let (item_in, item_out) = (op.item_len(), op.out_len());
         let rows = 4;
         let input = rows_for(&mut rng, item_in, rows);
@@ -178,6 +230,10 @@ fn every_registered_op_handles_edge_shapes_through_the_backend() {
     let registry = OpRegistry::builtin();
     let mut rng = Rng::new(0x0C1F);
     for spec in conformance_specs(&registry) {
+        let (_, op) = registry.build(&spec.to_string()).unwrap();
+        if op.stateful() {
+            continue; // OpBackend refuses stateful ops by design
+        }
         let be = OpBackend::from_spec(&registry, &spec.to_string(), vec![1, CAP]).unwrap();
         let (item_in, item_out) = (be.item_input_len(), be.item_output_len());
         for rows in [1usize, CAP] {
@@ -203,6 +259,9 @@ fn every_registered_op_is_deterministic_under_scratch_reuse() {
     for name in registry.names() {
         let spec = registry.canonical_spec(name).unwrap();
         let (_, op) = registry.build(&spec.to_string()).unwrap();
+        if op.stateful() {
+            continue; // per-session state is the contract, not a leak
+        }
         let rows = 8;
         let a = rows_for(&mut rng, op.item_len(), rows);
         let b = rows_for(&mut rng, op.item_len(), rows);
@@ -238,6 +297,9 @@ fn every_registered_op_rejects_malformed_batches() {
     for name in registry.names() {
         let spec = registry.canonical_spec(name).unwrap();
         let (_, op) = registry.build(&spec.to_string()).unwrap();
+        if op.stateful() {
+            continue; // run_batch rejects everything, shapes included
+        }
         let mut scratch = op.make_scratch();
         let mut out = vec![0f32; op.out_len()];
         // short input
@@ -259,6 +321,9 @@ fn every_registered_op_treats_an_empty_batch_as_a_no_op_success() {
     for name in registry.names() {
         let spec = registry.canonical_spec(name).unwrap();
         let (_, op) = registry.build(&spec.to_string()).unwrap();
+        if op.stateful() {
+            continue; // the sealed run_batch rejects even empty batches
+        }
         let mut scratch = op.make_scratch();
         op.run_batch(0, &[], &mut [], &mut scratch)
             .unwrap_or_else(|e| panic!("{spec}: empty batch should be a no-op: {e:#}"));
@@ -284,7 +349,37 @@ fn quantized_boundaries_are_pinned_to_the_expected_families() {
             quantized.push(name.to_string());
         }
     }
-    assert_eq!(quantized, vec!["ailayernorm-ptf", "attention"]);
+    assert_eq!(quantized, vec!["ailayernorm-ptf", "attention", "block"]);
+}
+
+#[test]
+fn stateful_families_are_pinned_and_sealed() {
+    // statefulness is opt-in per family and pinned by name: a stateful
+    // op's stateless entry points are sealed (run_batch errors, OpBackend
+    // refuses it at construction), while run_batch_stateful works against
+    // a fresh per-session state from make_state
+    let registry = OpRegistry::builtin();
+    let mut stateful = Vec::new();
+    for name in registry.names() {
+        let spec = registry.canonical_spec(name).unwrap();
+        let (_, op) = registry.build(&spec.to_string()).unwrap();
+        if !op.stateful() {
+            continue;
+        }
+        stateful.push(name.to_string());
+        let mut scratch = op.make_scratch();
+        let input = vec![0.25f32; op.item_len()];
+        let mut out = vec![0f32; op.out_len()];
+        let err = op.run_batch(1, &input, &mut out, &mut scratch).unwrap_err();
+        assert!(format!("{err:#}").contains("run_batch_stateful"), "{spec}: {err:#}");
+        let be = OpBackend::from_spec(&registry, &spec.to_string(), vec![1, CAP]);
+        let err = format!("{:#}", be.unwrap_err());
+        assert!(err.contains("stateful"), "{spec}: {err}");
+        let mut state = op.make_state();
+        op.run_batch_stateful(1, &input, &mut out, &mut scratch, &mut state)
+            .unwrap_or_else(|e| panic!("{spec}: stateful path failed: {e:#}"));
+    }
+    assert_eq!(stateful, vec!["decode-attention"]);
 }
 
 #[test]
