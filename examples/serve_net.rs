@@ -1,0 +1,108 @@
+//! Network client driver for the TCP front door (DESIGN.md §5.3):
+//! connects to a running `sole serve --listen <addr>` process and pushes
+//! a mixed inference workload through the wire protocol — round-robin
+//! infer requests over `--ops`, optional interleaved decode sessions
+//! with explicit `end_session`, an optional server status fetch, and an
+//! optional graceful shutdown request.
+//!
+//! Typed server rejections (shed, unknown service, …) are counted, not
+//! fatal; the process exits nonzero only if *nothing* completed, which
+//! is what the CI smoke job asserts on.
+//!
+//! ```
+//! sole serve --listen 127.0.0.1:7411 --ops e2softmax/L128 &
+//! cargo run --release --offline --example serve_net -- \
+//!     --addr 127.0.0.1:7411 [--requests 64] [--ops e2softmax/L128,...] \
+//!     [--decode decode-attention/L64xD32 --decode-steps 8 --sessions 2] \
+//!     [--status] [--shutdown]
+//! ```
+
+use std::time::Duration;
+
+use anyhow::Result;
+use sole::coordinator::paper_service_specs;
+use sole::ops::OpRegistry;
+use sole::server::{NetClient, Reply};
+use sole::util::cli::Args;
+use sole::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let addr = args.opt_str("addr", "127.0.0.1:7411");
+    let n = args.opt_usize("requests", 64)?;
+    let specs: Vec<String> = match args.opt("ops") {
+        Some(raw) => raw.split(',').map(|s| s.trim().to_string()).collect(),
+        None => paper_service_specs(),
+    };
+    let decode_spec = args.opt("decode").map(str::to_string);
+    let decode_steps = args.opt_usize("decode-steps", 8)?;
+    let sessions = args.opt_usize("sessions", 2)?;
+
+    // derive each spec's item length from the same registry the server
+    // built its services from — the wire carries no schema
+    let registry = OpRegistry::builtin();
+    let mut rng = Rng::new(4242);
+    let mut lanes: Vec<(String, Vec<f32>)> = Vec::with_capacity(specs.len());
+    for spec in &specs {
+        let (parsed, op) = registry.build(spec)?;
+        let mut row = vec![0f32; op.item_len()];
+        rng.fill_normal(&mut row, 0.0, 2.0);
+        lanes.push((parsed.to_string(), row));
+    }
+
+    let mut cl = NetClient::connect(addr, Duration::from_secs(30))?;
+    println!("connected to {addr}; driving {n} requests over {} services", lanes.len());
+
+    let mut completed = 0u64;
+    let mut rejected = 0u64;
+    for i in 0..n {
+        let (name, row) = &lanes[i % lanes.len()];
+        match cl.infer(name, row)? {
+            Reply::Output(r) => {
+                anyhow::ensure!(!r.output.is_empty(), "empty output from '{name}'");
+                completed += 1;
+            }
+            Reply::Rejected(e) => {
+                rejected += 1;
+                eprintln!("rejected by {name}: {e}");
+            }
+            Reply::Text(t) => anyhow::bail!("unexpected text reply to infer: {t}"),
+        }
+    }
+
+    if let Some(spec) = &decode_spec {
+        let (parsed, op) = registry.build(spec)?;
+        let name = parsed.to_string();
+        let mut item = vec![0f32; op.item_len()];
+        println!("decoding {} sessions x {decode_steps} tokens through {name}", sessions.max(1));
+        for _step in 0..decode_steps {
+            for sid in 0..sessions.max(1) as u64 {
+                rng.fill_normal(&mut item, 0.0, 1.0);
+                match cl.infer_decode(&name, sid, &item)? {
+                    Reply::Output(_) => completed += 1,
+                    Reply::Rejected(e) => {
+                        rejected += 1;
+                        eprintln!("decode rejected (session {sid}): {e}");
+                    }
+                    Reply::Text(t) => anyhow::bail!("unexpected text reply to decode: {t}"),
+                }
+            }
+        }
+        // free the server-side session state explicitly
+        for sid in 0..sessions.max(1) as u64 {
+            if let Reply::Rejected(e) = cl.end_session(&name, sid)? {
+                anyhow::bail!("end_session({sid}) rejected: {e}");
+            }
+        }
+    }
+
+    println!("completed {completed}, rejected {rejected}");
+    if args.flag("status") {
+        println!("--- server status ---\n{}", cl.status()?);
+    }
+    if args.flag("shutdown") {
+        println!("server: {}", cl.shutdown_server()?);
+    }
+    anyhow::ensure!(completed > 0, "no requests completed");
+    Ok(())
+}

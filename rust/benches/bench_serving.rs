@@ -30,15 +30,27 @@
 //! and measured here).  Decode rows report tokens/s and per-step
 //! latency from the same sharded metrics schema.
 //!
+//! The third phase (`mode: "overload"`) measures behavior *past*
+//! capacity with real sockets in the loop: a dedicated one-worker
+//! SlowEcho service (fixed 2ms per row, so capacity is known exactly)
+//! behind the TCP front door, hammered by one blocking connection per
+//! client thread.  Two legs — shedding disabled (only the bounded
+//! queue pushes back, late) vs depth-based admission control (sheds
+//! early) — record shed rate and p99 side by side, and the ledger
+//! `offered == completed + errors + shed` is asserted against the
+//! wire-side counts before anything is written.
+//!
 //! Flags: `--json` writes the JSON artifact (default path
 //! `<repo>/BENCH_serving.json`, override with `--out <path>`); `--quick`
 //! is the CI smoke mode (equivalent to `SOLE_BENCH_QUICK=1`: numbers are
 //! meaningless, the point is that every code path executes).
 
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use sole::coordinator::{BatchPolicy, ServiceRouter};
+use sole::coordinator::{Backend, BackendScratch, BatchPolicy, ServiceRouter};
 use sole::ops::OpRegistry;
+use sole::server::{AdmissionConfig, ErrCode, NetClient, Reply, Server, ServerConfig};
 use sole::simd::Dispatch;
 use sole::util::bench::{quick_mode, set_quick_mode};
 use sole::util::cli::Args;
@@ -239,6 +251,25 @@ fn main() {
     println!("{}", router.summary());
     router.shutdown();
 
+    // overload phase: the front door past capacity, shed vs no-shed
+    let n_clients = 12usize;
+    let per_client = if quick_mode() { 6 } else { 20 };
+    println!(
+        "\noverload phase: slow/L32 (1 worker, 2ms/row) behind the TCP front door, \
+         {n_clients} blocking connections x {per_client} requests"
+    );
+    println!(
+        "{:>20} {:>8} {:>10} {:>8} {:>10} {:>10}",
+        "shed policy", "offered", "completed", "shed", "shed rate", "p99 ms"
+    );
+    results.push(overload_leg("none", AdmissionConfig::default(), n_clients, per_client));
+    results.push(overload_leg(
+        "depth4",
+        AdmissionConfig { max_queue_depth: Some(4), max_in_flight: None, max_p99: None },
+        n_clients,
+        per_client,
+    ));
+
     if args.flag("json") {
         let default_out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json");
         if quick_mode() && args.opt("out").is_none() {
@@ -301,4 +332,142 @@ fn main() {
         std::fs::write(path, text).expect("write BENCH_serving.json");
         println!("wrote {path}");
     }
+}
+
+/// A backend with exactly known capacity: echoes its input after a
+/// fixed sleep, batch size pinned to 1, so one worker serves precisely
+/// `1/delay` rows per second and overload is a property of the offered
+/// load, not of kernel speed on the host.
+struct SlowEcho {
+    item: usize,
+    delay: Duration,
+    buckets: Vec<usize>,
+}
+
+impl Backend for SlowEcho {
+    fn item_input_len(&self) -> usize {
+        self.item
+    }
+    fn item_output_len(&self) -> usize {
+        self.item
+    }
+    fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+    fn run(
+        &self,
+        _bucket: usize,
+        inputs: &[f32],
+        out: &mut [f32],
+        _scratch: &mut BackendScratch,
+    ) -> anyhow::Result<()> {
+        std::thread::sleep(self.delay);
+        out.copy_from_slice(inputs);
+        Ok(())
+    }
+}
+
+/// One overload leg: a fresh one-worker router + front door, hammered
+/// by `n_clients` blocking connections, `per_client` requests each.
+/// Returns the JSON record row after asserting the shed ledger against
+/// the wire-side counts.
+fn overload_leg(
+    policy_label: &str,
+    admission: AdmissionConfig,
+    n_clients: usize,
+    per_client: usize,
+) -> Json {
+    const ITEM: usize = 32;
+    let backend =
+        Arc::new(SlowEcho { item: ITEM, delay: Duration::from_millis(2), buckets: vec![1] });
+    let policy =
+        BatchPolicy { max_wait: Duration::from_millis(1), max_batch: 1, queue_cap: Some(16) };
+    let router = ServiceRouter::builder(1)
+        .default_policy(policy)
+        .service("slow", backend)
+        .start()
+        .expect("overload router");
+    let cfg = ServerConfig {
+        conn_threads: n_clients,
+        pending_conns: n_clients,
+        admission,
+        rebalance: None,
+        ..ServerConfig::default()
+    };
+    let server = Server::start(router, "127.0.0.1:0", cfg).expect("server start");
+    let addr = server.addr().to_string();
+
+    let mut handles = Vec::with_capacity(n_clients);
+    for c in 0..n_clients {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0xC0DE + c as u64);
+            let mut row = vec![0f32; ITEM];
+            rng.fill_normal(&mut row, 0.0, 1.0);
+            let mut cl = NetClient::connect(&addr, Duration::from_secs(30)).expect("connect");
+            let (mut done, mut shed) = (0u64, 0u64);
+            for _ in 0..per_client {
+                match cl.infer("slow", &row).expect("round trip") {
+                    Reply::Output(r) => {
+                        assert_eq!(r.output.len(), ITEM, "echo length");
+                        done += 1;
+                    }
+                    Reply::Rejected(e) => {
+                        assert_eq!(e.code, ErrCode::Shed, "unexpected rejection: {e}");
+                        shed += 1;
+                    }
+                    Reply::Text(t) => panic!("unexpected text reply: {t}"),
+                }
+            }
+            (done, shed)
+        }));
+    }
+    let (mut completed, mut shed) = (0u64, 0u64);
+    for h in handles {
+        let (d, s) = h.join().expect("client thread");
+        completed += d;
+        shed += s;
+    }
+    let offered = (n_clients * per_client) as u64;
+
+    let router = server.shutdown().expect("server shutdown");
+    let m = router.metrics("slow").expect("slow service").clone();
+    router.shutdown();
+
+    // the ledger, with real sockets in the loop: what the clients saw is
+    // exactly what the router accounted for
+    assert_eq!(m.offered(), offered, "{policy_label}: every wire request is offered");
+    assert_eq!(m.errors(), 0, "{policy_label}: errors");
+    assert_eq!(m.completed(), completed, "{policy_label}: wire completions match");
+    assert_eq!(m.shed(), shed, "{policy_label}: wire sheds match");
+    assert_eq!(
+        m.completed() + m.errors() + m.shed(),
+        m.offered(),
+        "{policy_label}: conservation"
+    );
+    let (_, p99, mean) = m.total_latency();
+    let shed_rate = shed as f64 / offered as f64;
+    println!(
+        "{:>20} {:>8} {:>10} {:>8} {:>9.1}% {:>10.2}",
+        policy_label,
+        offered,
+        completed,
+        shed,
+        shed_rate * 100.0,
+        p99 * 1e3
+    );
+    obj(vec![
+        ("op", Json::Str("slow-echo".to_string())),
+        ("spec", Json::Str("slow/L32".to_string())),
+        ("mode", Json::Str("overload".to_string())),
+        ("shed_policy", Json::Str(policy_label.to_string())),
+        ("workers", Json::Int(1)),
+        ("conn_threads", Json::Int(n_clients as i64)),
+        ("offered", Json::Int(offered as i64)),
+        ("completed", Json::Int(m.completed() as i64)),
+        ("shed", Json::Int(m.shed() as i64)),
+        ("shed_rate", Json::Num(shed_rate)),
+        ("p99_ms", Json::Num(p99 * 1e3)),
+        ("mean_ms", Json::Num(mean * 1e3)),
+    ])
 }

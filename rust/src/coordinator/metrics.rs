@@ -10,9 +10,15 @@
 //! client enqueues bumps `accepted`, and eventually bumps exactly one of
 //! `completed` (response delivered) or `errors` (dropped by a failed
 //! batch), so `completed + errors == accepted` once the queue is drained.
+//! A request turned away at admission (a full bounded queue, or the
+//! network front door's load shedder) bumps `shed` instead of `accepted`,
+//! so the full-front-door ledger is `offered == completed + errors +
+//! shed` — nothing that arrived is ever unaccounted for.
 //!
 //! One `Metrics` instance covers one service; the router's cross-service
 //! view is merge-on-read too (`merged_summary` / `total_latency_of`).
+//! `in_flight()` (accepted minus resolved) is the cheap three-atomic-read
+//! pressure snapshot the shedder and the rebalancer poll.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -25,6 +31,7 @@ pub struct Metrics {
     accepted: AtomicU64,
     completed: AtomicU64,
     errors: AtomicU64,
+    shed: AtomicU64,
     shards: Vec<Mutex<Inner>>,
 }
 
@@ -64,6 +71,7 @@ impl Metrics {
             accepted: AtomicU64::new(0),
             completed: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
             shards: (0..n.max(1)).map(|_| Mutex::new(Inner::default())).collect(),
         }
     }
@@ -102,6 +110,13 @@ impl Metrics {
         self.record_errors(1);
     }
 
+    /// Record one request turned away before it entered the queue (a full
+    /// bounded queue, or the front door's admission controller).  Shed
+    /// requests never bump `accepted`, so `offered == accepted + shed`.
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Record `n` dropped requests at once (a failed batch drops every
     /// request it carried — one error each, not one per batch).
     pub fn record_errors(&self, n: u64) {
@@ -120,6 +135,24 @@ impl Metrics {
         self.errors.load(Ordering::Relaxed)
     }
 
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Everything that ever arrived at this service: `accepted + shed`.
+    /// Once the queue drains, `offered == completed + errors + shed`.
+    pub fn offered(&self) -> u64 {
+        self.accepted() + self.shed()
+    }
+
+    /// Accepted requests not yet resolved (completed or errored) — three
+    /// relaxed atomic loads, cheap enough for the shedder to poll per
+    /// request.  Saturating: concurrent updates can transiently make the
+    /// resolved count read ahead of `accepted`.
+    pub fn in_flight(&self) -> u64 {
+        self.accepted().saturating_sub(self.completed() + self.errors())
+    }
+
     pub fn shard_count(&self) -> usize {
         self.shards.len()
     }
@@ -136,15 +169,21 @@ impl Metrics {
 
     /// One-line summary for the CLI / examples (this service's view).
     pub fn summary(&self) -> String {
-        format_summary(self.accepted(), self.completed(), self.errors(), &self.merged())
+        format_summary(
+            self.accepted(),
+            self.completed(),
+            self.errors(),
+            self.shed(),
+            &self.merged(),
+        )
     }
 
     /// One-line summary merged across many services' metrics — the
     /// router's cross-service view (exact histogram merge, parallel
     /// Welford for the streaming stats, summed counters).
     pub fn merged_summary<'a, I: IntoIterator<Item = &'a Metrics>>(all: I) -> String {
-        let (accepted, completed, errors, g) = merge_all(all);
-        format_summary(accepted, completed, errors, &g)
+        let (accepted, completed, errors, shed, g) = merge_all(all);
+        format_summary(accepted, completed, errors, shed, &g)
     }
 
     /// (p50, p99, mean) of end-to-end latency in seconds, over all shards.
@@ -156,7 +195,7 @@ impl Metrics {
     /// (p50, p99, mean) of end-to-end latency merged across many services
     /// (the router's cross-service latency view).
     pub fn total_latency_of<'a, I: IntoIterator<Item = &'a Metrics>>(all: I) -> (f64, f64, f64) {
-        let (_, _, _, g) = merge_all(all);
+        let (_, _, _, _, g) = merge_all(all);
         (g.total_hist.p50(), g.total_hist.p99(), g.total_hist.mean())
     }
 
@@ -166,21 +205,22 @@ impl Metrics {
 }
 
 /// Sum the counters and merge the shard state of many metrics instances.
-fn merge_all<'a, I: IntoIterator<Item = &'a Metrics>>(all: I) -> (u64, u64, u64, Inner) {
-    let (mut accepted, mut completed, mut errors) = (0, 0, 0);
+fn merge_all<'a, I: IntoIterator<Item = &'a Metrics>>(all: I) -> (u64, u64, u64, u64, Inner) {
+    let (mut accepted, mut completed, mut errors, mut shed) = (0, 0, 0, 0);
     let mut acc = Inner::default();
     for m in all {
         accepted += m.accepted();
         completed += m.completed();
         errors += m.errors();
+        shed += m.shed();
         acc.merge_from(&m.merged());
     }
-    (accepted, completed, errors, acc)
+    (accepted, completed, errors, shed, acc)
 }
 
-fn format_summary(accepted: u64, completed: u64, errors: u64, g: &Inner) -> String {
+fn format_summary(accepted: u64, completed: u64, errors: u64, shed: u64, g: &Inner) -> String {
     format!(
-        "accepted={accepted} completed={completed} errors={errors} | \
+        "accepted={accepted} completed={completed} errors={errors} shed={shed} | \
          total p50={:.2}ms p99={:.2}ms mean={:.2}ms | \
          exec p50={:.2}ms | queue p50={:.2}ms | avg_batch={:.2} pad_waste={:.0}%",
         g.total_hist.p50() * 1e3,
@@ -287,6 +327,34 @@ mod tests {
         assert!(p50 > 0.0 && p99 >= p50 && mean > 0.0);
         // merging one instance reproduces its own view exactly
         assert_eq!(Metrics::total_latency_of([&a]), a.total_latency());
+    }
+
+    #[test]
+    fn shed_and_in_flight_accounting() {
+        let m = Metrics::new();
+        for _ in 0..8 {
+            m.record_accepted();
+        }
+        for _ in 0..3 {
+            m.record_shed();
+        }
+        assert_eq!(m.shed(), 3);
+        assert_eq!(m.offered(), 11);
+        assert_eq!(m.in_flight(), 8);
+        for _ in 0..5 {
+            m.record(Duration::from_micros(2), Duration::from_micros(4), 4, 4);
+        }
+        m.record_error();
+        assert_eq!(m.in_flight(), 2);
+        // full front-door ledger once the queue would drain
+        m.record(Duration::from_micros(2), Duration::from_micros(4), 4, 4);
+        m.record(Duration::from_micros(2), Duration::from_micros(4), 4, 4);
+        assert_eq!(m.offered(), m.completed() + m.errors() + m.shed());
+        assert_eq!(m.in_flight(), 0);
+        let s = m.summary();
+        assert!(s.contains("shed=3"), "{s}");
+        let merged = Metrics::merged_summary([&m]);
+        assert!(merged.contains("shed=3"), "{merged}");
     }
 
     #[test]

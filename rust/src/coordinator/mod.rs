@@ -31,7 +31,7 @@ pub mod metrics;
 pub mod router;
 pub mod session;
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -81,6 +81,19 @@ struct Shared {
     space: Condvar,
     shutdown: AtomicBool,
     queue_cap: Option<usize>,
+    /// Outstanding retirement requests (`shrink`): each worker that claims
+    /// one (atomic decrement) exits its loop.  Which worker retires is
+    /// deliberately unspecified — workers are interchangeable (the arena is
+    /// per-worker, the queue is shared), so the first to notice leaves.
+    retire: AtomicUsize,
+}
+
+/// Decrement `retire` if positive; `true` means this worker claimed a
+/// retirement and must exit.
+fn claim_retirement(retire: &AtomicUsize) -> bool {
+    retire
+        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1))
+        .is_ok()
 }
 
 /// Handle for submitting requests.
@@ -126,6 +139,9 @@ impl Client {
                     "coordinator is shutting down"
                 );
                 if !block {
+                    // shed, not accepted: the front-door ledger is
+                    // offered == completed + errors + shed
+                    self.metrics.record_shed();
                     return Ok(TrySubmit::Full(input));
                 }
                 let (guard, _t) = self
@@ -161,15 +177,30 @@ impl Client {
     pub fn item_len(&self) -> usize {
         self.item_len
     }
+
+    /// Requests currently parked in the queue (not yet picked up by a
+    /// worker) — one lock, read by the shedder and the rebalancer.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
 }
 
-/// The coordinator: owns the worker threads.
+/// The coordinator: owns the worker threads.  The pool is dynamic: the
+/// rebalancer can `grow` / `shrink` it at runtime (retired threads stay in
+/// `workers` until shutdown joins them — they have already returned, so the
+/// join is free).
 pub struct Coordinator {
     shared: Arc<Shared>,
-    workers: Vec<JoinHandle<()>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
     pub metrics: Arc<Metrics>,
     item_len: usize,
     next_id: Arc<AtomicU64>,
+    backend: Arc<dyn Backend>,
+    policy: BatchPolicy,
+    /// Workers currently serving (spawned minus retired), maintained under
+    /// the `workers` lock; reads are lock-free.
+    live: AtomicUsize,
+    next_wid: AtomicUsize,
 }
 
 impl Coordinator {
@@ -184,18 +215,69 @@ impl Coordinator {
             space: Condvar::new(),
             shutdown: AtomicBool::new(false),
             queue_cap: policy.queue_cap,
+            retire: AtomicUsize::new(0),
         });
         let metrics = Arc::new(Metrics::with_shards(n_workers));
         let item_len = backend.item_input_len();
         let mut workers = Vec::new();
         for wid in 0..n_workers {
-            let sh = shared.clone();
-            let be = backend.clone();
-            let mt = metrics.clone();
-            let pol = policy.clone();
-            workers.push(std::thread::spawn(move || worker_loop(wid, sh, be, pol, mt)));
+            workers.push(spawn_worker(wid, &shared, &backend, &policy, &metrics));
         }
-        Coordinator { shared, workers, metrics, item_len, next_id: Arc::new(AtomicU64::new(0)) }
+        Coordinator {
+            shared,
+            workers: Mutex::new(workers),
+            metrics,
+            item_len,
+            next_id: Arc::new(AtomicU64::new(0)),
+            backend,
+            policy,
+            live: AtomicUsize::new(n_workers),
+            next_wid: AtomicUsize::new(n_workers),
+        }
+    }
+
+    /// Workers currently serving this coordinator's queue.
+    pub fn live_workers(&self) -> usize {
+        self.live.load(Ordering::SeqCst)
+    }
+
+    /// Requests parked in the queue right now.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    /// Add `n` workers to the pool (fresh arenas; metrics shards wrap, so
+    /// worker ids beyond the original shard count stay valid).
+    pub fn grow(&self, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let mut workers = self.workers.lock().unwrap();
+        for _ in 0..n {
+            let wid = self.next_wid.fetch_add(1, Ordering::SeqCst);
+            let w = spawn_worker(wid, &self.shared, &self.backend, &self.policy, &self.metrics);
+            workers.push(w);
+        }
+        self.live.fetch_add(n, Ordering::SeqCst);
+    }
+
+    /// Ask up to `n` workers to retire, never dropping the pool below one
+    /// live worker (a service must always drain its queue).  Returns how
+    /// many retirements were actually posted; each is claimed by the next
+    /// worker to pass its loop head or condvar wake (≤ ~50ms), so the pool
+    /// shrinks shortly after, not synchronously.
+    pub fn shrink(&self, n: usize) -> usize {
+        let workers = self.workers.lock().unwrap();
+        let live = self.live.load(Ordering::SeqCst);
+        let take = n.min(live.saturating_sub(1));
+        if take > 0 {
+            self.shared.retire.fetch_add(take, Ordering::SeqCst);
+            self.live.fetch_sub(take, Ordering::SeqCst);
+            // wake sleepers so an idle worker claims the retirement promptly
+            self.shared.available.notify_all();
+        }
+        drop(workers);
+        take
     }
 
     pub fn client(&self) -> Client {
@@ -216,14 +298,29 @@ impl Coordinator {
     /// accepted receives its response (or observes a send-side drop on
     /// backend error) before the workers exit.  Submitters blocked on a
     /// full bounded queue error out instead of enqueueing.
-    pub fn shutdown(mut self) {
+    pub fn shutdown(self) {
         self.shared.shutdown.store(true, Ordering::SeqCst);
         self.shared.available.notify_all();
         self.shared.space.notify_all();
-        for w in self.workers.drain(..) {
+        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        for w in handles {
             let _ = w.join();
         }
     }
+}
+
+fn spawn_worker(
+    wid: usize,
+    shared: &Arc<Shared>,
+    backend: &Arc<dyn Backend>,
+    policy: &BatchPolicy,
+    metrics: &Arc<Metrics>,
+) -> JoinHandle<()> {
+    let sh = shared.clone();
+    let be = backend.clone();
+    let mt = metrics.clone();
+    let pol = policy.clone();
+    std::thread::spawn(move || worker_loop(wid, sh, be, pol, mt))
 }
 
 /// Per-worker reusable buffers: the packed input, the staged output, the
@@ -257,6 +354,13 @@ fn worker_loop(
             let mut q = shared.queue.lock().unwrap();
             loop {
                 if shared.shutdown.load(Ordering::SeqCst) && q.is_empty() {
+                    return;
+                }
+                // a retirement posted by `shrink` is claimed between
+                // batches, never mid-batch; `shrink` guarantees at least
+                // one worker outlives every posted retirement, so the
+                // queue always keeps a consumer
+                if claim_retirement(&shared.retire) {
                     return;
                 }
                 if !q.is_empty() {
@@ -616,16 +720,65 @@ mod tests {
         std::thread::sleep(Duration::from_millis(50));
         // second request parks in the queue (cap 1 -> queue now full)
         let rx2 = cl.submit(vec![2.0; 4]).unwrap();
-        // third must bounce with its input handed back
+        // third must bounce with its input handed back, counted as shed
         match cl.try_submit(vec![3.0; 4]).unwrap() {
             TrySubmit::Full(input) => assert_eq!(input, vec![3.0; 4]),
             TrySubmit::Accepted(_) => panic!("queue should be full"),
         }
+        assert_eq!(co.metrics.shed(), 1);
         // blocking submit waits for space and eventually lands
         let rx3 = cl.submit(vec![4.0; 4]).unwrap();
         for rx in [rx1, rx2, rx3] {
             assert!(rx.recv().is_ok());
         }
+        // full ledger: offered == completed + errors + shed
+        assert_eq!(co.metrics.offered(), 4);
+        assert_eq!(
+            co.metrics.offered(),
+            co.metrics.completed() + co.metrics.errors() + co.metrics.shed()
+        );
+        co.shutdown();
+    }
+
+    #[test]
+    fn grow_and_shrink_resize_the_pool() {
+        let co = start_sw(policy(1, 8));
+        let cl = co.client();
+        assert_eq!(co.live_workers(), 1);
+        co.grow(2);
+        assert_eq!(co.live_workers(), 3);
+        // shrink floors at one live worker no matter how much is asked
+        assert_eq!(co.shrink(10), 2);
+        assert_eq!(co.live_workers(), 1);
+        assert_eq!(co.shrink(1), 0);
+        // the surviving worker still serves (retirements are claimed on
+        // wake ticks, so give them a moment to land first)
+        std::thread::sleep(Duration::from_millis(200));
+        let rxs: Vec<_> = (0..20).map(|_| cl.submit(vec![0.25; 64]).unwrap()).collect();
+        for rx in rxs {
+            assert!(rx.recv().is_ok());
+        }
+        assert_eq!(co.metrics.completed(), 20);
+        // grow again after a shrink: fresh workers join the same queue
+        co.grow(1);
+        assert_eq!(co.live_workers(), 2);
+        let r = cl.infer(vec![0.5; 64]).unwrap();
+        assert_eq!(r.output.len(), 64);
+        co.shutdown();
+    }
+
+    #[test]
+    fn shrink_while_loaded_still_drains_everything() {
+        let be = Arc::new(SlowEcho { l: 4, buckets: vec![1, 4], delay: Duration::from_millis(2) });
+        let co = Coordinator::start(be, policy(1, 4), 4);
+        let cl = co.client();
+        let rxs: Vec<_> = (0..80).map(|i| cl.submit(vec![i as f32; 4]).unwrap()).collect();
+        assert_eq!(co.shrink(3), 3);
+        for rx in rxs {
+            assert!(rx.recv().is_ok(), "request dropped across a shrink");
+        }
+        assert_eq!(co.live_workers(), 1);
+        assert_eq!(co.metrics.completed(), 80);
         co.shutdown();
     }
 

@@ -26,6 +26,7 @@
 
 use std::collections::BTreeMap;
 use std::sync::{mpsc, Arc};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -52,6 +53,7 @@ struct DecodeSpec {
     name: String,
     op: Arc<dyn Op>,
     weight: usize,
+    idle_ttl: Option<Duration>,
 }
 
 /// Builder: register services, then `start()` the per-service pools.
@@ -119,17 +121,29 @@ impl ServiceRouterBuilder {
     /// service draws `weight` shares of the worker budget as
     /// session-pinned lanes rather than a batching pool.
     pub fn decode_service(
+        self,
+        registry: &OpRegistry,
+        spec: &str,
+        weight: usize,
+    ) -> Result<Self> {
+        self.decode_service_with_ttl(registry, spec, weight, None)
+    }
+
+    /// `decode_service` with an idle-session TTL: sessions taking no step
+    /// for `idle_ttl` are evicted by their lane (see `DecodeService`).
+    pub fn decode_service_with_ttl(
         mut self,
         registry: &OpRegistry,
         spec: &str,
         weight: usize,
+        idle_ttl: Option<Duration>,
     ) -> Result<Self> {
         let (parsed, op) = registry.build(spec)?;
         anyhow::ensure!(
             op.stateful(),
             "op '{parsed}' is stateless; register it with op_service, not decode_service"
         );
-        self.decode_specs.push(DecodeSpec { name: parsed.to_string(), op, weight });
+        self.decode_specs.push(DecodeSpec { name: parsed.to_string(), op, weight, idle_ttl });
         Ok(self)
     }
 
@@ -166,11 +180,11 @@ impl ServiceRouterBuilder {
         let mut services = BTreeMap::new();
         for (spec, &workers) in self.specs.into_iter().zip(batch_shares) {
             let coordinator = Coordinator::start(spec.backend, spec.policy, workers);
-            services.insert(spec.name, Service { coordinator, workers });
+            services.insert(spec.name, Service { coordinator });
         }
         let mut decode = BTreeMap::new();
         for (spec, &workers) in self.decode_specs.into_iter().zip(decode_shares) {
-            let service = DecodeService::start(spec.op, workers)?;
+            let service = DecodeService::start_with(spec.op, workers, spec.idle_ttl)?;
             decode.insert(spec.name, service);
         }
         Ok(ServiceRouter { services, decode })
@@ -178,10 +192,10 @@ impl ServiceRouterBuilder {
 }
 
 /// One running service: a coordinator with its own queue, worker pool and
-/// metrics shards.
+/// metrics shards.  The pool size is dynamic (`rebalance_one`), so it is
+/// always read from the coordinator, never cached here.
 struct Service {
     coordinator: Coordinator,
-    workers: usize,
 }
 
 /// The registry of running services behind one process.
@@ -221,18 +235,88 @@ impl ServiceRouter {
             .or_else(|| self.decode.get(service).map(|d| &d.metrics))
     }
 
-    /// Workers assigned to this service by the budget split.
+    /// Workers serving this service right now (the initial budget split,
+    /// as later adjusted by `rebalance_one`).
     pub fn workers(&self, service: &str) -> Option<usize> {
         self.services
             .get(service)
-            .map(|s| s.workers)
+            .map(|s| s.coordinator.live_workers())
             .or_else(|| self.decode.get(service).map(|d| d.workers()))
     }
 
-    /// Distinct sessions a decode service has seen (None for unknown or
+    /// Requests parked in this service's queue (lanes summed for decode).
+    pub fn queue_depth(&self, service: &str) -> Option<usize> {
+        self.services
+            .get(service)
+            .map(|s| s.coordinator.queue_depth())
+            .or_else(|| self.decode.get(service).map(|d| d.queue_depth()))
+    }
+
+    /// Accepted-but-unresolved requests for this service (queued or
+    /// executing) — see `Metrics::in_flight`.
+    pub fn in_flight(&self, service: &str) -> Option<u64> {
+        self.metrics(service).map(|m| m.in_flight())
+    }
+
+    /// Sessions ever created by a decode service (None for unknown or
     /// batching services).
     pub fn sessions(&self, service: &str) -> Option<u64> {
         self.decode.get(service).map(|d| d.sessions())
+    }
+
+    /// Sessions currently resident in a decode service.
+    pub fn live_sessions(&self, service: &str) -> Option<u64> {
+        self.decode.get(service).map(|d| d.live_sessions())
+    }
+
+    /// Move one worker from `from` to `to` (both batching services —
+    /// decode lanes are session-pinned and never resize).  `Ok(false)`
+    /// means no move happened because `from` is at its floor of one
+    /// worker; the rebalancer invariant is that no service ever serves
+    /// with zero workers.
+    pub fn rebalance_one(&self, from: &str, to: &str) -> Result<bool> {
+        anyhow::ensure!(from != to, "rebalance needs two distinct services");
+        let lookup = |name: &str| {
+            self.services.get(name).with_context(|| {
+                if self.decode.contains_key(name) {
+                    format!("decode service '{name}' has session-pinned lanes; not rebalanceable")
+                } else {
+                    format!("unknown batching service '{name}'")
+                }
+            })
+        };
+        let from_svc = lookup(from)?;
+        let to_svc = lookup(to)?;
+        if from_svc.coordinator.shrink(1) == 0 {
+            return Ok(false);
+        }
+        to_svc.coordinator.grow(1);
+        Ok(true)
+    }
+
+    /// One compact line of live pressure per service — workers, queue
+    /// depth, in-flight (plus resident sessions for decode) — for the
+    /// `sole serve` status line and the wire `status` reply.
+    pub fn load_report(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        for (name, s) in &self.services {
+            parts.push(format!(
+                "{name}[w={} q={} if={}]",
+                s.coordinator.live_workers(),
+                s.coordinator.queue_depth(),
+                s.coordinator.metrics.in_flight()
+            ));
+        }
+        for (name, d) in &self.decode {
+            parts.push(format!(
+                "{name}[w={} q={} if={} live={}]",
+                d.workers(),
+                d.queue_depth(),
+                d.metrics.in_flight(),
+                d.live_sessions()
+            ));
+        }
+        parts.join(" ")
     }
 
     /// A cloneable handle routing requests by service name.
@@ -271,7 +355,11 @@ impl ServiceRouter {
     pub fn summary(&self) -> String {
         let mut out = String::new();
         for (name, s) in &self.services {
-            let line = format!("{name} [{}w]: {}\n", s.workers, s.coordinator.metrics.summary());
+            let line = format!(
+                "{name} [{}w]: {}\n",
+                s.coordinator.live_workers(),
+                s.coordinator.metrics.summary()
+            );
             out.push_str(&line);
         }
         for (name, d) in &self.decode {
@@ -376,6 +464,14 @@ impl RouterClient {
     pub fn infer_decode(&self, service: &str, session: u64, input: Vec<f32>) -> Result<Response> {
         self.decode_route(service)?
             .infer(session, input)
+            .with_context(|| format!("decode service '{service}'"))
+    }
+
+    /// End a decode session explicitly, freeing its lane-resident state
+    /// (blocking; idempotent — see `DecodeClient::end_session`).
+    pub fn end_session(&self, service: &str, session: u64) -> Result<Response> {
+        self.decode_route(service)?
+            .end_session_wait(session)
             .with_context(|| format!("decode service '{service}'"))
     }
 }
@@ -625,6 +721,60 @@ mod tests {
                 .unwrap_err()
         );
         assert!(err.contains("stateful"), "{err}");
+        router.shutdown();
+    }
+
+    #[test]
+    fn rebalance_moves_workers_with_floor_one() {
+        let router = two_service_router(4); // 2 workers each
+        let (a, b) = ("ailayernorm/C64", "e2softmax/L32");
+        assert_eq!(router.workers(a), Some(2));
+        assert_eq!(router.workers(b), Some(2));
+        assert!(router.rebalance_one(a, b).unwrap());
+        assert_eq!(router.workers(a), Some(1));
+        assert_eq!(router.workers(b), Some(3));
+        // the donor never drops below one worker — no move happens
+        assert!(!router.rebalance_one(a, b).unwrap());
+        assert_eq!(router.workers(a), Some(1));
+        assert_eq!(router.workers(b), Some(3));
+        // both services still answer after the move
+        let cl = router.client();
+        assert_eq!(cl.infer(a, vec![0.2; 64]).unwrap().output.len(), 64);
+        assert_eq!(cl.infer(b, vec![0.2; 32]).unwrap().output.len(), 32);
+        // pressure snapshots exist and settle to zero once drained
+        assert_eq!(router.queue_depth(a), Some(0));
+        assert_eq!(router.in_flight(a), Some(0));
+        assert!(router.load_report().contains("e2softmax/L32[w=3"));
+        // self-moves and unknown names are errors, not silent no-ops
+        assert!(router.rebalance_one(a, a).is_err());
+        assert!(router.rebalance_one(a, "nope").is_err());
+        router.shutdown();
+    }
+
+    #[test]
+    fn router_end_session_frees_decode_state() {
+        let registry = OpRegistry::builtin();
+        let svc = "decode-attention/L2xD4";
+        let router = ServiceRouter::builder(2)
+            .decode_service(&registry, svc, 1)
+            .unwrap()
+            .start()
+            .unwrap();
+        // decode lanes are session-pinned: not a rebalance target
+        assert!(router.rebalance_one(svc, svc).is_err());
+        let cl = router.client();
+        let step = vec![0.5f32; 12];
+        // fill session 0 to its cache capacity (L=2)
+        cl.infer_decode(svc, 0, step.clone()).unwrap();
+        cl.infer_decode(svc, 0, step.clone()).unwrap();
+        assert_eq!(router.live_sessions(svc), Some(1));
+        cl.end_session(svc, 0).unwrap();
+        assert_eq!(router.live_sessions(svc), Some(0));
+        // the reused id restarts at step 0: a continued session would be
+        // at capacity and error on the next step
+        cl.infer_decode(svc, 0, step.clone()).unwrap();
+        assert_eq!(router.sessions(svc), Some(2));
+        assert_eq!(router.metrics(svc).unwrap().errors(), 0);
         router.shutdown();
     }
 

@@ -22,6 +22,15 @@
 //! the bucketed batcher exists for prefill.  Metrics reuse the sharded
 //! [`Metrics`] (one shard per lane), so `bench_serving` reports decode
 //! rows with the same schema as prefill rows.
+//!
+//! Session state is bounded two ways (a front door cannot trust clients
+//! to be tidy): an **idle TTL** (`start_with`) evicts sessions that take
+//! no step for the configured duration — the owning lane sweeps its own
+//! map on wake ticks, so eviction needs no cross-thread access to state —
+//! and an explicit **`end_session`** message frees a session immediately.
+//! Either way the id becomes reusable: the next step under it builds a
+//! fresh state at step 0.  `live_sessions` gauges resident sessions;
+//! `sessions` keeps counting every session ever created.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -44,10 +53,25 @@ struct StepRequest {
     resp: mpsc::Sender<Response>,
 }
 
+/// What flows down a lane: a decode step, or an explicit session end.
+/// Ends ride the same FIFO as steps so a `submit(s) ; end_session(s)`
+/// sequence frees the state only after the step ran.
+enum LaneMsg {
+    Step(StepRequest),
+    End { id: u64, session: u64, submitted: Instant, resp: mpsc::Sender<Response> },
+}
+
 /// One worker's private FIFO.
 struct Lane {
-    queue: Mutex<VecDeque<StepRequest>>,
+    queue: Mutex<VecDeque<LaneMsg>>,
     available: Condvar,
+}
+
+/// A resident session: its op state plus the last time a step touched it
+/// (drives idle-TTL eviction).
+struct SessionSlot {
+    state: crate::ops::OpState,
+    last_used: Instant,
 }
 
 /// The session-affine serving pool for one stateful op.
@@ -59,15 +83,28 @@ pub struct DecodeService {
     pub metrics: Arc<Metrics>,
     next_id: Arc<AtomicU64>,
     sessions: Arc<AtomicU64>,
+    live: Arc<AtomicU64>,
     item_len: usize,
     out_len: usize,
 }
 
 impl DecodeService {
+    /// Start `n_workers` lanes with no idle eviction (sessions live until
+    /// `end_session` or shutdown).
+    pub fn start(op: Arc<dyn Op>, n_workers: usize) -> Result<DecodeService> {
+        DecodeService::start_with(op, n_workers, None)
+    }
+
     /// Start `n_workers` lanes over a shared stateful op.  Refuses
     /// stateless ops (they belong in a batching `Coordinator`) and
-    /// quantized outer ports, mirroring `OpBackend`.
-    pub fn start(op: Arc<dyn Op>, n_workers: usize) -> Result<DecodeService> {
+    /// quantized outer ports, mirroring `OpBackend`.  With `idle_ttl`
+    /// set, a session taking no step for that long is evicted by its
+    /// lane's periodic sweep (granularity: the 50ms wake tick).
+    pub fn start_with(
+        op: Arc<dyn Op>,
+        n_workers: usize,
+        idle_ttl: Option<Duration>,
+    ) -> Result<DecodeService> {
         anyhow::ensure!(
             op.stateful(),
             "op '{}' is stateless; serve it through a Coordinator over an OpBackend",
@@ -92,6 +129,7 @@ impl DecodeService {
         let shutdown = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(Metrics::with_shards(n_workers));
         let sessions = Arc::new(AtomicU64::new(0));
+        let live = Arc::new(AtomicU64::new(0));
         let item_len = op.item_len();
         let out_len = op.out_len();
         let mut workers = Vec::new();
@@ -101,7 +139,10 @@ impl DecodeService {
             let op = op.clone();
             let mt = metrics.clone();
             let ns = sessions.clone();
-            workers.push(std::thread::spawn(move || lane_loop(wid, lane, stop, op, mt, ns)));
+            let lv = live.clone();
+            workers.push(std::thread::spawn(move || {
+                lane_loop(wid, lane, stop, op, mt, ns, lv, idle_ttl)
+            }));
         }
         Ok(DecodeService {
             lanes,
@@ -110,6 +151,7 @@ impl DecodeService {
             metrics,
             next_id: Arc::new(AtomicU64::new(0)),
             sessions,
+            live,
             item_len,
             out_len,
         })
@@ -142,9 +184,21 @@ impl DecodeService {
         self.lanes.len()
     }
 
-    /// Distinct sessions that have taken at least one step.
+    /// Sessions ever created (a reused id after eviction counts again).
     pub fn sessions(&self) -> u64 {
         self.sessions.load(Ordering::Relaxed)
+    }
+
+    /// Sessions currently resident across all lanes (created minus
+    /// evicted/ended) — the gauge the TTL satellite bounds.
+    pub fn live_sessions(&self) -> u64 {
+        self.live.load(Ordering::Relaxed)
+    }
+
+    /// Steps/ends parked across all lanes right now (pressure snapshot
+    /// for the shedder).
+    pub fn queue_depth(&self) -> usize {
+        self.lanes.iter().map(|l| l.queue.lock().unwrap().len()).sum()
     }
 
     /// Graceful shutdown: drains every lane — each accepted step is
@@ -192,13 +246,13 @@ impl DecodeClient {
             "decode service is shutting down"
         );
         let (tx, rx) = mpsc::channel();
-        q.push_back(StepRequest {
+        q.push_back(LaneMsg::Step(StepRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             session,
             input,
             submitted: Instant::now(),
             resp: tx,
-        });
+        }));
         self.metrics.record_accepted();
         drop(q);
         lane.available.notify_one();
@@ -210,15 +264,58 @@ impl DecodeClient {
         Ok(self.submit(session, input)?.recv()?)
     }
 
+    /// Free `session`'s state explicitly.  Rides the session's FIFO lane
+    /// behind any steps already submitted for it; the (empty-output)
+    /// response confirms the state is gone.  Idempotent — ending an
+    /// unknown or already-ended session still succeeds.
+    pub fn end_session(&self, session: u64) -> Result<mpsc::Receiver<Response>> {
+        let lane = &self.lanes[(session % self.lanes.len() as u64) as usize];
+        let mut q = lane.queue.lock().unwrap();
+        anyhow::ensure!(
+            !self.shutdown.load(Ordering::SeqCst),
+            "decode service is shutting down"
+        );
+        let (tx, rx) = mpsc::channel();
+        q.push_back(LaneMsg::End {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            session,
+            submitted: Instant::now(),
+            resp: tx,
+        });
+        // an end is a request like any other for the conservation ledger
+        self.metrics.record_accepted();
+        drop(q);
+        lane.available.notify_one();
+        Ok(rx)
+    }
+
+    /// Blocking `end_session` convenience.
+    pub fn end_session_wait(&self, session: u64) -> Result<Response> {
+        Ok(self.end_session(session)?.recv()?)
+    }
+
     /// Flat f32 length one step expects.
     pub fn item_len(&self) -> usize {
         self.item_len
     }
 }
 
+/// Drop every session idle for `ttl` or longer, updating the live gauge.
+fn evict_idle(states: &mut HashMap<u64, SessionSlot>, ttl: Duration, live: &AtomicU64) {
+    let before = states.len();
+    states.retain(|_, slot| slot.last_used.elapsed() < ttl);
+    let evicted = before - states.len();
+    if evicted > 0 {
+        live.fetch_sub(evicted as u64, Ordering::Relaxed);
+    }
+}
+
 /// One lane's worker: pops steps in FIFO order and runs each against its
 /// session's state.  The state map is a plain local — only this thread
-/// ever touches the sessions pinned here.
+/// ever touches the sessions pinned here, which is also why idle-TTL
+/// sweeps run here (on wake ticks and between messages) rather than from
+/// any shared reaper thread.
+#[allow(clippy::too_many_arguments)]
 fn lane_loop(
     wid: usize,
     lane: Arc<Lane>,
@@ -226,16 +323,22 @@ fn lane_loop(
     op: Arc<dyn Op>,
     metrics: Arc<Metrics>,
     sessions: Arc<AtomicU64>,
+    live: Arc<AtomicU64>,
+    idle_ttl: Option<Duration>,
 ) {
-    let mut states: HashMap<u64, crate::ops::OpState> = HashMap::new();
+    let mut states: HashMap<u64, SessionSlot> = HashMap::new();
     let mut scratch = op.make_scratch();
     let out_len = op.out_len();
+    // sweep at half the TTL (floored) so an idle session outlives its TTL
+    // by at most one sweep interval, busy lane or not
+    let sweep_every = idle_ttl.map(|t| (t / 2).max(Duration::from_millis(10)));
+    let mut last_sweep = Instant::now();
     loop {
-        let req = {
+        let msg = {
             let mut q = lane.queue.lock().unwrap();
             loop {
-                if let Some(r) = q.pop_front() {
-                    break r;
+                if let Some(m) = q.pop_front() {
+                    break m;
                 }
                 if shutdown.load(Ordering::SeqCst) {
                     return; // lane drained
@@ -243,33 +346,71 @@ fn lane_loop(
                 let (guard, _t) =
                     lane.available.wait_timeout(q, Duration::from_millis(50)).unwrap();
                 q = guard;
+                if let (Some(ttl), Some(every)) = (idle_ttl, sweep_every) {
+                    if last_sweep.elapsed() >= every {
+                        evict_idle(&mut states, ttl, &live);
+                        last_sweep = Instant::now();
+                    }
+                }
             }
         };
-        let state = states.entry(req.session).or_insert_with(|| {
-            sessions.fetch_add(1, Ordering::Relaxed);
-            op.make_state()
-        });
-        let mut output = vec![0f32; out_len];
-        let t0 = Instant::now();
-        let result = op.run_batch_stateful(1, &req.input, &mut output, &mut scratch, state);
-        let exec = t0.elapsed();
-        match result {
-            Ok(()) => {
-                let queue_time = t0.duration_since(req.submitted);
-                metrics.record_shard(wid, queue_time, exec, 1, 1);
-                let _ = req.resp.send(Response {
-                    id: req.id,
-                    output,
+        match msg {
+            LaneMsg::Step(req) => {
+                let slot = states.entry(req.session).or_insert_with(|| {
+                    sessions.fetch_add(1, Ordering::Relaxed);
+                    live.fetch_add(1, Ordering::Relaxed);
+                    SessionSlot { state: op.make_state(), last_used: Instant::now() }
+                });
+                slot.last_used = Instant::now();
+                let mut output = vec![0f32; out_len];
+                let t0 = Instant::now();
+                let result = op.run_batch_stateful(
+                    1,
+                    &req.input,
+                    &mut output,
+                    &mut scratch,
+                    &mut slot.state,
+                );
+                let exec = t0.elapsed();
+                match result {
+                    Ok(()) => {
+                        let queue_time = t0.duration_since(req.submitted);
+                        metrics.record_shard(wid, queue_time, exec, 1, 1);
+                        let _ = req.resp.send(Response {
+                            id: req.id,
+                            output,
+                            queue_time,
+                            exec_time: exec,
+                            batch_size: 1,
+                        });
+                    }
+                    Err(e) => {
+                        // a failed step (e.g. a session at capacity) drops
+                        // only its own request; the session state stays
+                        metrics.record_error();
+                        eprintln!("decode step failed (session {}): {e:#}", req.session);
+                    }
+                }
+            }
+            LaneMsg::End { id, session, submitted, resp } => {
+                if states.remove(&session).is_some() {
+                    live.fetch_sub(1, Ordering::Relaxed);
+                }
+                let queue_time = submitted.elapsed();
+                metrics.record_shard(wid, queue_time, Duration::ZERO, 1, 1);
+                let _ = resp.send(Response {
+                    id,
+                    output: Vec::new(),
                     queue_time,
-                    exec_time: exec,
+                    exec_time: Duration::ZERO,
                     batch_size: 1,
                 });
             }
-            Err(e) => {
-                // a failed step (e.g. a session at capacity) drops only
-                // its own request; the session state stays as it was
-                metrics.record_error();
-                eprintln!("decode step failed (session {}): {e:#}", req.session);
+        }
+        if let (Some(ttl), Some(every)) = (idle_ttl, sweep_every) {
+            if last_sweep.elapsed() >= every {
+                evict_idle(&mut states, ttl, &live);
+                last_sweep = Instant::now();
             }
         }
     }
@@ -361,6 +502,75 @@ mod tests {
         let svc = decode_service(4, 4, 1);
         let cl = svc.client();
         assert!(cl.submit(0, vec![0.0; 5]).is_err());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn idle_ttl_evicts_and_reused_id_restarts_at_step_zero() {
+        let (cap, d) = (8usize, 4usize);
+        let op = Arc::new(DecodeAttnOp::try_new(cap, d).unwrap());
+        let svc =
+            DecodeService::start_with(op, 1, Some(Duration::from_millis(60))).unwrap();
+        let cl = svc.client();
+        let mut rng = Rng::new(0xE71C);
+        let steps: Vec<Vec<f32>> = (0..3)
+            .map(|_| {
+                let mut v = vec![0f32; 3 * d];
+                rng.fill_normal(&mut v, 0.0, 1.0);
+                v
+            })
+            .collect();
+        // advance session 5 two steps, then go idle past the TTL
+        cl.infer(5, steps[0].clone()).unwrap();
+        cl.infer(5, steps[1].clone()).unwrap();
+        assert_eq!((svc.sessions(), svc.live_sessions()), (1, 1));
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while svc.live_sessions() != 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(svc.live_sessions(), 0, "idle session was not evicted");
+        // the reused id restarts at step 0: its next step matches a fresh
+        // local replay of step 0, not a continuation of the evicted cache
+        // (step 2 would attend over three cached tokens, not one)
+        let local = DecodeAttnOp::try_new(cap, d).unwrap();
+        let mut scratch = local.make_scratch();
+        let mut state = local.make_state();
+        let mut want = vec![0f32; d];
+        local.run_batch_stateful(1, &steps[2], &mut want, &mut scratch, &mut state).unwrap();
+        let got = cl.infer(5, steps[2].clone()).unwrap();
+        assert_eq!(got.output, want);
+        assert_eq!(svc.sessions(), 2, "a reused id creates a fresh session");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn end_session_frees_state_and_reused_id_restarts_at_step_zero() {
+        let (cap, d) = (4usize, 4usize);
+        let svc = decode_service(cap, d, 2);
+        let cl = svc.client();
+        let step = vec![0.5f32; 3 * d];
+        // fill session 3 to cache capacity: one more step would error
+        for _ in 0..cap {
+            cl.infer(3, step.clone()).unwrap();
+        }
+        assert_eq!(svc.live_sessions(), 1);
+        let r = cl.end_session_wait(3).unwrap();
+        assert!(r.output.is_empty());
+        assert_eq!(svc.live_sessions(), 0);
+        // ending a session that no longer exists is still fine
+        cl.end_session_wait(3).unwrap();
+        // proof the id restarted at step 0: a *continued* session would be
+        // at capacity and error immediately, a fresh one takes cap steps
+        for _ in 0..cap {
+            cl.infer(3, step.clone()).unwrap();
+        }
+        assert_eq!((svc.sessions(), svc.live_sessions()), (2, 1));
+        assert_eq!(svc.metrics.errors(), 0);
+        assert_eq!(
+            svc.metrics.completed() + svc.metrics.errors(),
+            svc.metrics.accepted(),
+            "conservation across steps and ends"
+        );
         svc.shutdown();
     }
 }

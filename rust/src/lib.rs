@@ -8,7 +8,9 @@
 //!   Pallas kernels and the transformer models that embed them, AOT-lowered
 //!   to HLO text under `artifacts/`.
 //! * **Layer 3 (this crate)** — the inference coordinator (request router,
-//!   dynamic batcher, PJRT runtime), the unified operator layer (`ops`:
+//!   dynamic batcher, PJRT runtime), the TCP front door (`server`: wire
+//!   protocol, admission control/load shedding, worker rebalancing), the
+//!   unified operator layer (`ops`:
 //!   one `Op` trait + `OpRegistry` serving SOLE's kernels, the exact
 //!   baselines and the prior-work comparators behind spec strings), the
 //!   bit-exact integer models of both algorithms, the hardware evaluation
@@ -28,6 +30,7 @@ pub mod model;
 pub mod ops;
 pub mod quant;
 pub mod runtime;
+pub mod server;
 pub mod simd;
 pub mod softmax;
 pub mod tensor;

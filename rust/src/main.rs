@@ -6,6 +6,8 @@
 //! sole serve [--artifacts DIR] [--model deit_t] [--variant fp32_sole] [--all-families]
 //!      [--ops <spec,...>] [--requests N] [--rate R] [--max-wait-ms W] [--workers K]
 //!      [--queue-cap N] [--decode <spec>] [--decode-steps N] [--sessions S]
+//! sole serve --listen <addr> [--ops ...] [--decode <spec>] [--session-ttl-ms T]
+//!      [--conn-threads C] [--shed-depth N] [--shed-p99-ms P] [--rebalance-ms R]
 //! sole ops
 //! sole info [--artifacts DIR]
 //! ```
@@ -27,6 +29,15 @@
 //! `--sessions` interleaved KV-cache sessions for `--decode-steps`
 //! tokens each — the prefill services batch, the decode service pins
 //! each session to a lane (DESIGN.md §3.5).
+//!
+//! `--listen <addr>` swaps the self-driven workload for the TCP front
+//! door (DESIGN.md §5.3): the same software op-services are served to
+//! network clients over the length-prefixed wire protocol, with
+//! admission control (`--shed-depth`, `--shed-p99-ms`), dynamic worker
+//! rebalancing (`--rebalance-ms`, 0 disables), and idle decode-session
+//! eviction (`--session-ttl-ms`, 0 keeps sessions forever).  The
+//! process runs until a client sends the wire `shutdown` message
+//! (`sole`'s own `serve_net` example does with `--shutdown`).
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -37,6 +48,7 @@ use anyhow::{bail, Context, Result};
 use sole::coordinator::{paper_service_specs, BatchPolicy, PjrtBackend, ServiceRouter};
 use sole::experiments::{self, ExperimentOut};
 use sole::ops::{Op, OpRegistry};
+use sole::server::{AdmissionConfig, RebalanceConfig, Server, ServerConfig};
 use sole::runtime::Engine;
 use sole::tensor::Bundle;
 use sole::util::cli::Args;
@@ -153,6 +165,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         steps: args.opt_usize("decode-steps", 32)?,
         sessions: args.opt_usize("sessions", 4)?,
     };
+
+    // --listen replaces the self-driven workload with the TCP front door
+    if let Some(addr) = args.opt("listen") {
+        return serve_listen(args, addr, &specs, &decode, workers, policy);
+    }
 
     let software_only = args.opt("ops").is_some() || decode.spec.is_some();
     let have_artifacts = artifacts.join("manifest.json").exists();
@@ -388,6 +405,82 @@ fn serve_software_ops(
             n_steps as f64 / dwall
         );
     }
+    println!("{}", router.summary());
+    router.shutdown();
+    Ok(())
+}
+
+/// `sole serve --listen <addr>`: put the TCP front door in front of the
+/// software op-services and run until a wire-level shutdown arrives.
+/// Prints a status line (connections, per-service queue pressure and
+/// worker counts) every `--status-ms` while serving.
+fn serve_listen(
+    args: &Args,
+    addr: &str,
+    specs: &[String],
+    decode: &DecodeDrive,
+    workers: usize,
+    policy: BatchPolicy,
+) -> Result<()> {
+    anyhow::ensure!(!specs.is_empty(), "--ops: need at least one op spec");
+    let session_ttl = match args.opt_usize("session-ttl-ms", 0)? {
+        0 => None,
+        ms => Some(Duration::from_millis(ms as u64)),
+    };
+    let shed_depth = args.opt_usize("shed-depth", 256)?; // 0 disables the rule
+    let shed_p99_ms = args.opt_usize("shed-p99-ms", 0)?; // 0 disables the rule
+    let rebalance_ms = args.opt_usize("rebalance-ms", 250)?; // 0 keeps the static split
+    let conn_threads = args.opt_usize("conn-threads", 4)?;
+    let status_every = Duration::from_millis(args.opt_usize("status-ms", 1000)? as u64);
+
+    let registry = OpRegistry::builtin();
+    let mut builder = ServiceRouter::builder(workers).default_policy(policy);
+    let mut names = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let name = registry.parse_spec(spec)?.to_string();
+        builder = builder.op_service(&registry, &name, vec![1, 4, 8, 16])?;
+        names.push(name);
+    }
+    if let Some(spec) = &decode.spec {
+        let name = registry.parse_spec(spec)?.to_string();
+        builder = builder.decode_service_with_ttl(&registry, &name, 1, session_ttl)?;
+        names.push(name);
+    }
+    let router = builder.start()?;
+
+    let cfg = ServerConfig {
+        conn_threads: conn_threads.max(1),
+        admission: AdmissionConfig {
+            max_queue_depth: if shed_depth == 0 { None } else { Some(shed_depth) },
+            max_in_flight: None,
+            max_p99: if shed_p99_ms == 0 {
+                None
+            } else {
+                Some(Duration::from_millis(shed_p99_ms as u64))
+            },
+        },
+        rebalance: if rebalance_ms == 0 {
+            None
+        } else {
+            Some(RebalanceConfig {
+                interval: Duration::from_millis(rebalance_ms as u64),
+                ..RebalanceConfig::default()
+            })
+        },
+        ..ServerConfig::default()
+    };
+    let server = Server::start(router, addr, cfg)?;
+    println!(
+        "listening on {} — services [{}] ({workers} workers)",
+        server.addr(),
+        names.join(", ")
+    );
+    println!("send the wire shutdown message to stop (serve_net example: --shutdown)");
+    while !server.wait(status_every) {
+        println!("{}", server.status_line());
+    }
+    println!("shutdown requested; draining connections");
+    let router = server.shutdown()?;
     println!("{}", router.summary());
     router.shutdown();
     Ok(())

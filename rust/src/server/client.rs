@@ -1,0 +1,124 @@
+//! Blocking TCP client for the front door's wire protocol.
+//!
+//! One `NetClient` owns one connection and speaks strict
+//! request/response framing over it.  The server handles a
+//! connection's frames strictly in order, one at a time — so a single
+//! connection carries at most one request through the router, and
+//! offered load past capacity is generated with many *connections*
+//! (one client thread each; see `bench_serving`'s overload phase and
+//! the server integration tests).  The split-phase API (`send_infer` +
+//! `recv_reply`) still lets one client queue a bounded window of
+//! frames to hide round-trip latency; replies match sends by position.
+//!
+//! A typed server rejection (shed, unknown service, malformed, …) is
+//! *data*, not an error: it comes back as [`Reply::Rejected`] so
+//! callers can count sheds without string-matching.  Transport-level
+//! failures (connection closed, timeouts) are `Err`.
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::wire::{self, FrameRead, Msg, Resp, WireError};
+
+/// A served response: the output plus server-side timing.
+#[derive(Debug, Clone)]
+pub struct NetResponse {
+    pub output: Vec<f32>,
+    pub queue_s: f64,
+    pub exec_s: f64,
+    pub batch: u32,
+}
+
+/// What one request came back as.
+#[derive(Debug, Clone)]
+pub enum Reply {
+    /// Served.
+    Output(NetResponse),
+    /// Typed rejection (shed, unknown service, bad length, …).
+    Rejected(WireError),
+    /// Text payload (status / shutdown acks).
+    Text(String),
+}
+
+/// One blocking connection to a front door.
+pub struct NetClient {
+    stream: TcpStream,
+}
+
+impl NetClient {
+    /// Connect to `addr` (e.g. `127.0.0.1:7411`) with a read/write
+    /// timeout applied to every subsequent operation.
+    pub fn connect(addr: &str, timeout: Duration) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(timeout)).context("set read timeout")?;
+        stream.set_write_timeout(Some(timeout)).context("set write timeout")?;
+        Ok(NetClient { stream })
+    }
+
+    fn send(&mut self, msg: &Msg) -> Result<()> {
+        wire::write_frame(&mut self.stream, &wire::encode_msg(msg)).context("send frame")
+    }
+
+    /// Read one reply frame (blocking, bounded by the connect timeout).
+    pub fn recv_reply(&mut self) -> Result<Reply> {
+        let body = match wire::read_frame(&mut self.stream, wire::MAX_FRAME)? {
+            FrameRead::Frame(b) => b,
+            FrameRead::Eof => anyhow::bail!("server closed the connection"),
+            FrameRead::TooLarge(n) => anyhow::bail!("server sent an oversized frame ({n} bytes)"),
+        };
+        Ok(match wire::decode_resp(&body).context("decode server response")? {
+            Resp::Output { output, queue_s, exec_s, batch } => {
+                Reply::Output(NetResponse { output, queue_s, exec_s, batch })
+            }
+            Resp::Error(e) => Reply::Rejected(e),
+            Resp::Text(s) => Reply::Text(s),
+        })
+    }
+
+    /// Queue one infer request without waiting for its reply (pipelining;
+    /// replies come back in send order).
+    pub fn send_infer(&mut self, service: &str, input: &[f32]) -> Result<()> {
+        self.send(&Msg::Infer { service: service.to_string(), input: input.to_vec() })
+    }
+
+    /// One blocking infer round-trip.
+    pub fn infer(&mut self, service: &str, input: &[f32]) -> Result<Reply> {
+        self.send_infer(service, input)?;
+        self.recv_reply()
+    }
+
+    /// One blocking decode-step round-trip for `session`.
+    pub fn infer_decode(&mut self, service: &str, session: u64, input: &[f32]) -> Result<Reply> {
+        self.send(&Msg::Decode { service: service.to_string(), session, input: input.to_vec() })?;
+        self.recv_reply()
+    }
+
+    /// Free a decode session's server-side state.
+    pub fn end_session(&mut self, service: &str, session: u64) -> Result<Reply> {
+        self.send(&Msg::EndSession { service: service.to_string(), session })?;
+        self.recv_reply()
+    }
+
+    /// Fetch the server's live status report.
+    pub fn status(&mut self) -> Result<String> {
+        self.send(&Msg::Status)?;
+        match self.recv_reply()? {
+            Reply::Text(s) => Ok(s),
+            Reply::Rejected(e) => Err(e.into()),
+            Reply::Output(_) => anyhow::bail!("status got an output frame"),
+        }
+    }
+
+    /// Ask the server to shut down gracefully; returns its ack text.
+    pub fn shutdown_server(&mut self) -> Result<String> {
+        self.send(&Msg::Shutdown)?;
+        match self.recv_reply()? {
+            Reply::Text(s) => Ok(s),
+            Reply::Rejected(e) => Err(e.into()),
+            Reply::Output(_) => anyhow::bail!("shutdown got an output frame"),
+        }
+    }
+}

@@ -1,0 +1,302 @@
+//! Adaptive control plane: admission control, load shedding, and the
+//! worker rebalancer (DESIGN.md §5.3).
+//!
+//! Both controllers are driven by the per-service sharded metrics the
+//! coordinators already collect — queue depth, in-flight count, and
+//! p99 latency — no second bookkeeping layer is introduced.
+//!
+//! **Admission** is checked per request on the connection threads, so
+//! it must be cheap: queue depth is one lock, in-flight is three
+//! relaxed atomic loads, and p99 — which requires merging histogram
+//! shards — is *sampled* by the control thread into a lock-free board
+//! and only read on the request path.  The p99 histograms are
+//! cumulative over the run, so a past overload would latch the gate
+//! shut forever; the p99 rule therefore only sheds while the service
+//! also has current congestion (queue deeper than its worker count).
+//!
+//! **Rebalancing** compares per-worker queue pressure across batching
+//! services and moves one worker per tick from the coldest donor to the
+//! hottest service (`ServiceRouter::rebalance_one`).  Invariants: a
+//! donor never drops below one worker, decode services never
+//! participate (their lanes are session-pinned), and at most one
+//! worker moves per tick so a bursty minute cannot slosh the whole
+//! pool back and forth.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::ServiceRouter;
+
+/// Per-request admission limits.  `None` disables that rule; with every
+/// rule disabled (the default) the gate always admits and only the
+/// bounded queue itself sheds.
+#[derive(Debug, Clone, Default)]
+pub struct AdmissionConfig {
+    /// Shed when the service's queue depth reaches this.
+    pub max_queue_depth: Option<usize>,
+    /// Shed when accepted-but-unresolved requests reach this.
+    pub max_in_flight: Option<u64>,
+    /// Shed when sampled p99 latency exceeds this *and* the queue is
+    /// deeper than the service's live worker count (see module docs).
+    pub max_p99: Option<Duration>,
+}
+
+/// Why a request was shed at admission.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ShedReason {
+    QueueDepth { depth: usize, limit: usize },
+    InFlight { in_flight: u64, limit: u64 },
+    P99 { p99: Duration, limit: Duration },
+}
+
+impl std::fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShedReason::QueueDepth { depth, limit } => {
+                write!(f, "queue depth {depth} >= limit {limit}")
+            }
+            ShedReason::InFlight { in_flight, limit } => {
+                write!(f, "in-flight {in_flight} >= limit {limit}")
+            }
+            ShedReason::P99 { p99, limit } => {
+                write!(
+                    f,
+                    "p99 {:.2}ms > limit {:.2}ms under congestion",
+                    p99.as_secs_f64() * 1e3,
+                    limit.as_secs_f64() * 1e3
+                )
+            }
+        }
+    }
+}
+
+/// Rebalancer tuning.
+#[derive(Debug, Clone)]
+pub struct RebalanceConfig {
+    /// How often the rebalancer evaluates a move.
+    pub interval: Duration,
+    /// Minimum per-worker queue-pressure gap between the hottest and
+    /// coldest service before a worker moves.
+    pub min_gap: f64,
+}
+
+impl Default for RebalanceConfig {
+    fn default() -> Self {
+        RebalanceConfig { interval: Duration::from_millis(250), min_gap: 2.0 }
+    }
+}
+
+/// Sampled p99 per service, written by the control thread and read
+/// lock-free on the request path (f64 seconds as bits).
+pub(crate) struct P99Board {
+    entries: BTreeMap<String, AtomicU64>,
+}
+
+impl P99Board {
+    fn new(services: &[String]) -> P99Board {
+        P99Board {
+            entries: services
+                .iter()
+                .map(|s| (s.clone(), AtomicU64::new(0f64.to_bits())))
+                .collect(),
+        }
+    }
+
+    fn store(&self, service: &str, p99_s: f64) {
+        if let Some(e) = self.entries.get(service) {
+            e.store(p99_s.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    fn load(&self, service: &str) -> f64 {
+        self.entries.get(service).map_or(0.0, |e| f64::from_bits(e.load(Ordering::Relaxed)))
+    }
+}
+
+/// The per-request admission gate.
+pub(crate) struct Shedder {
+    router: Arc<ServiceRouter>,
+    cfg: AdmissionConfig,
+    board: Arc<P99Board>,
+}
+
+impl Shedder {
+    pub(crate) fn admit(&self, service: &str) -> Result<(), ShedReason> {
+        let cfg = &self.cfg;
+        if cfg.max_queue_depth.is_none() && cfg.max_in_flight.is_none() && cfg.max_p99.is_none() {
+            return Ok(());
+        }
+        let depth = self.router.queue_depth(service).unwrap_or(0);
+        if let Some(limit) = cfg.max_queue_depth {
+            if depth >= limit {
+                return Err(ShedReason::QueueDepth { depth, limit });
+            }
+        }
+        if let Some(limit) = cfg.max_in_flight {
+            let in_flight = self.router.in_flight(service).unwrap_or(0);
+            if in_flight >= limit {
+                return Err(ShedReason::InFlight { in_flight, limit });
+            }
+        }
+        if let Some(limit) = cfg.max_p99 {
+            let workers = self.router.workers(service).unwrap_or(1);
+            if depth > workers {
+                let p99 = Duration::from_secs_f64(self.board.load(service));
+                if p99 > limit {
+                    return Err(ShedReason::P99 { p99, limit });
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Pick one worker move from per-service `(name, queue_depth, workers)`
+/// loads: the coldest donor with spare workers gives one to the hottest
+/// service, if the per-worker pressure gap is at least `min_gap`.
+/// Returns `(from, to)` indices, or `None` when balanced (or no donor
+/// has more than its floor worker).
+pub fn plan_move(loads: &[(String, usize, usize)], min_gap: f64) -> Option<(usize, usize)> {
+    if loads.len() < 2 {
+        return None;
+    }
+    let pressure =
+        |&(_, depth, workers): &(String, usize, usize)| depth as f64 / (workers.max(1)) as f64;
+    let (hot, hot_p) = loads
+        .iter()
+        .enumerate()
+        .map(|(i, l)| (i, pressure(l)))
+        .max_by(|a, b| a.1.total_cmp(&b.1))?;
+    let (cold, cold_p) = loads
+        .iter()
+        .enumerate()
+        .filter(|(i, l)| *i != hot && l.2 > 1)
+        .map(|(i, l)| (i, pressure(l)))
+        .min_by(|a, b| a.1.total_cmp(&b.1))?;
+    if hot_p - cold_p >= min_gap {
+        Some((cold, hot))
+    } else {
+        None
+    }
+}
+
+/// The background control thread: samples p99 into the board on every
+/// tick and (optionally) evaluates one rebalance move per interval.
+pub(crate) struct ControlPlane {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ControlPlane {
+    /// Spawn over `router`.  Returns the plane plus the shedder sharing
+    /// its p99 board.
+    pub(crate) fn spawn(
+        router: Arc<ServiceRouter>,
+        admission: AdmissionConfig,
+        rebalance: Option<RebalanceConfig>,
+    ) -> (ControlPlane, Shedder) {
+        let names: Vec<String> = router
+            .services()
+            .iter()
+            .chain(router.decode_services().iter())
+            .map(|s| s.to_string())
+            .collect();
+        let batch_names: Vec<String> = router.services().iter().map(|s| s.to_string()).collect();
+        let board = Arc::new(P99Board::new(&names));
+        let stop = Arc::new(AtomicBool::new(false));
+        let shedder = Shedder { router: router.clone(), cfg: admission, board: board.clone() };
+        let tick = Duration::from_millis(25)
+            .min(rebalance.as_ref().map_or(Duration::from_millis(25), |r| r.interval));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            let mut since_rebalance = Duration::ZERO;
+            while !stop2.load(Ordering::SeqCst) {
+                for name in &names {
+                    if let Some(m) = router.metrics(name) {
+                        let (_, p99, _) = m.total_latency();
+                        board.store(name, p99);
+                    }
+                }
+                if let Some(rb) = &rebalance {
+                    since_rebalance += tick;
+                    if since_rebalance >= rb.interval {
+                        since_rebalance = Duration::ZERO;
+                        let loads: Vec<(String, usize, usize)> = batch_names
+                            .iter()
+                            .map(|n| {
+                                (
+                                    n.clone(),
+                                    router.queue_depth(n).unwrap_or(0),
+                                    router.workers(n).unwrap_or(1),
+                                )
+                            })
+                            .collect();
+                        if let Some((from, to)) = plan_move(&loads, rb.min_gap) {
+                            let _ = router.rebalance_one(&loads[from].0, &loads[to].0);
+                        }
+                    }
+                }
+                std::thread::sleep(tick);
+            }
+        });
+        (ControlPlane { stop, handle: Some(handle) }, shedder)
+    }
+
+    /// Stop and join the control thread.
+    pub(crate) fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loads(v: &[(&str, usize, usize)]) -> Vec<(String, usize, usize)> {
+        v.iter().map(|&(n, d, w)| (n.to_string(), d, w)).collect()
+    }
+
+    #[test]
+    fn plan_move_targets_the_hot_service() {
+        // hot has 12 queued over 2 workers (6/worker), cold is idle with
+        // 2 workers -> move one cold worker to hot
+        let l = loads(&[("hot", 12, 2), ("cold", 0, 2)]);
+        assert_eq!(plan_move(&l, 2.0), Some((1, 0)));
+        // order independence: indices follow the slice, not the names
+        let l = loads(&[("cold", 0, 2), ("hot", 12, 2)]);
+        assert_eq!(plan_move(&l, 2.0), Some((0, 1)));
+    }
+
+    #[test]
+    fn plan_move_respects_the_floor_and_the_gap() {
+        // the only cold donor is at one worker: no move, ever
+        let l = loads(&[("hot", 50, 2), ("cold", 0, 1)]);
+        assert_eq!(plan_move(&l, 2.0), None);
+        // balanced load: gap below threshold, no move
+        let l = loads(&[("a", 4, 2), ("b", 3, 2)]);
+        assert_eq!(plan_move(&l, 2.0), None);
+        // single service or empty: nothing to balance
+        assert_eq!(plan_move(&loads(&[("a", 99, 4)]), 2.0), None);
+        assert_eq!(plan_move(&[], 2.0), None);
+    }
+
+    #[test]
+    fn plan_move_picks_the_coldest_donor_among_several() {
+        let l = loads(&[("hot", 40, 2), ("warm", 8, 2), ("cool", 2, 2), ("idle", 0, 3)]);
+        // hottest is "hot" (20/worker), coldest donor is "idle" (0/worker)
+        assert_eq!(plan_move(&l, 2.0), Some((3, 0)));
+    }
+
+    #[test]
+    fn zero_worker_entries_do_not_divide_by_zero() {
+        let l = loads(&[("a", 10, 0), ("b", 0, 2)]);
+        // pressure for a clamps workers to 1; b is the only donor
+        assert_eq!(plan_move(&l, 2.0), Some((1, 0)));
+    }
+}

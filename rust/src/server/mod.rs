@@ -1,0 +1,470 @@
+//! The TCP front door (DESIGN.md §5.3): network ingress for a
+//! [`ServiceRouter`].
+//!
+//! Layering, outside in:
+//!
+//! * an **accept thread** polls a non-blocking listener and hands each
+//!   socket to a bounded connection queue — when every connection slot
+//!   is taken *and* the queue is full, the connection itself is shed
+//!   with a typed error instead of parking unboundedly;
+//! * a fixed pool of **connection threads** speaks the wire protocol
+//!   ([`wire`]), one frame in → one frame out, in order, per
+//!   connection.  Socket reads poll in short slices so a connection
+//!   blocked on an idle peer still observes server shutdown and its
+//!   own idle timeout;
+//! * each request passes the **admission gate** ([`AdmissionConfig`])
+//!   and then [`RouterClient::try_submit`] — a full bounded queue
+//!   propagates to the socket as a typed [`ErrCode::Shed`] rather than
+//!   blocking the connection thread, so backpressure reaches clients
+//!   instead of accumulating in the server;
+//! * the **control plane** ([`control`]) samples p99 for the gate and
+//!   periodically rebalances workers toward hot services.
+//!
+//! Conservation extends to the wire: every decoded request frame is
+//! answered by exactly one response frame (output or typed error), and
+//! the router-side ledger `offered == completed + errors + shed` is
+//! checked in the integration tests with real sockets in the loop.
+//!
+//! Everything is std::thread + blocking sockets, consistent with the
+//! coordinator's design (no async runtime in the vendor set); a fixed
+//! connection pool is the honest shape for a worker-bound serving
+//! system — overload policy should be explicit (shed) rather than
+//! hidden in unbounded accept queues.
+
+pub mod client;
+pub mod control;
+pub mod wire;
+
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{RouterClient, ServiceRouter, TrySubmit};
+
+pub use client::{NetClient, NetResponse, Reply};
+pub use control::{plan_move, AdmissionConfig, RebalanceConfig, ShedReason};
+pub use wire::{ErrCode, WireError};
+
+use control::{ControlPlane, Shedder};
+use wire::{Msg, Resp};
+
+/// Server tuning.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Connection-handler threads (concurrent connections served).
+    pub conn_threads: usize,
+    /// Accepted sockets that may wait for a free handler before new
+    /// connections are shed.
+    pub pending_conns: usize,
+    /// Idle read timeout: a connection sending no frame for this long
+    /// is closed.
+    pub read_timeout: Duration,
+    /// Per-frame write timeout (a client not draining its socket cannot
+    /// wedge a handler forever).
+    pub write_timeout: Duration,
+    /// Largest accepted frame body.
+    pub max_frame: u32,
+    /// Per-request admission limits.
+    pub admission: AdmissionConfig,
+    /// Worker rebalancing; `None` keeps the static split.
+    pub rebalance: Option<RebalanceConfig>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            conn_threads: 4,
+            pending_conns: 16,
+            read_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(10),
+            max_frame: wire::MAX_FRAME,
+            admission: AdmissionConfig::default(),
+            rebalance: None,
+        }
+    }
+}
+
+/// State shared by the accept thread, connection handlers, and the
+/// owning [`Server`] handle.
+struct Inner {
+    router: Arc<ServiceRouter>,
+    client: RouterClient,
+    cfg: ServerConfig,
+    shedder: Shedder,
+    stop: AtomicBool,
+    /// Set when a wire `shutdown` message arrives; `Server::wait`
+    /// observes it.
+    shutdown_requested: Mutex<bool>,
+    shutdown_cv: Condvar,
+    conns_served: AtomicU64,
+    conns_shed: AtomicU64,
+}
+
+impl Inner {
+    fn request_shutdown(&self) {
+        *self.shutdown_requested.lock().unwrap() = true;
+        self.shutdown_cv.notify_all();
+    }
+}
+
+/// A running front door.  Owns the accept thread, the connection pool,
+/// and the control plane; `shutdown` tears all of it down and returns
+/// the router for final metrics.
+pub struct Server {
+    inner: Arc<Inner>,
+    accept: Option<JoinHandle<()>>,
+    pool: Vec<JoinHandle<()>>,
+    control: Option<ControlPlane>,
+    addr: SocketAddr,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// serving `router` over it.
+    pub fn start(router: ServiceRouter, addr: &str, cfg: ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr().context("local addr")?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        let router = Arc::new(router);
+        let (control, shedder) =
+            ControlPlane::spawn(router.clone(), cfg.admission.clone(), cfg.rebalance.clone());
+        let client = router.client();
+        let conn_threads = cfg.conn_threads.max(1);
+        let pending = cfg.pending_conns.max(1);
+        let inner = Arc::new(Inner {
+            router,
+            client,
+            cfg,
+            shedder,
+            stop: AtomicBool::new(false),
+            shutdown_requested: Mutex::new(false),
+            shutdown_cv: Condvar::new(),
+            conns_served: AtomicU64::new(0),
+            conns_shed: AtomicU64::new(0),
+        });
+        let (tx, rx) = mpsc::sync_channel::<TcpStream>(pending);
+        let rx = Arc::new(Mutex::new(rx));
+        let mut pool = Vec::new();
+        for _ in 0..conn_threads {
+            let rx = rx.clone();
+            let inner = inner.clone();
+            pool.push(std::thread::spawn(move || loop {
+                // handlers take one socket at a time; when the sender is
+                // gone (accept thread exited) the pool drains and stops
+                let sock = match rx.lock().unwrap().recv() {
+                    Ok(s) => s,
+                    Err(_) => return,
+                };
+                inner.conns_served.fetch_add(1, Ordering::Relaxed);
+                handle_conn(sock, &inner);
+            }));
+        }
+        let accept_inner = inner.clone();
+        let accept = std::thread::spawn(move || loop {
+            if accept_inner.stop.load(Ordering::SeqCst) {
+                return; // dropping `tx` stops the idle pool threads
+            }
+            match listener.accept() {
+                Ok((sock, _peer)) => match tx.try_send(sock) {
+                    Ok(()) => {}
+                    Err(mpsc::TrySendError::Full(sock)) => {
+                        // connection-level shed: every handler busy and
+                        // the pending queue full — tell the client and
+                        // close instead of queueing unboundedly
+                        accept_inner.conns_shed.fetch_add(1, Ordering::Relaxed);
+                        shed_connection(sock);
+                    }
+                    Err(mpsc::TrySendError::Disconnected(_)) => return,
+                },
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => {
+                    eprintln!("accept failed: {e}");
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        });
+        Ok(Server { inner, accept: Some(accept), pool, control: Some(control), addr: local })
+    }
+
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The served router, for observation while the server runs (live
+    /// worker counts, queue depths, metrics).  Borrowed, not cloned, so
+    /// observers cannot keep the router alive past [`Server::shutdown`].
+    pub fn router(&self) -> &ServiceRouter {
+        &self.inner.router
+    }
+
+    /// Live status: the router's per-service pressure line plus
+    /// connection counters.
+    pub fn status_line(&self) -> String {
+        format!(
+            "conns served={} shed={} | {}",
+            self.inner.conns_served.load(Ordering::Relaxed),
+            self.inner.conns_shed.load(Ordering::Relaxed),
+            self.inner.router.load_report()
+        )
+    }
+
+    /// Block up to `timeout` for a wire-level shutdown request; `true`
+    /// once one has arrived.
+    pub fn wait(&self, timeout: Duration) -> bool {
+        let g = self.inner.shutdown_requested.lock().unwrap();
+        let (g, _t) = self.inner.shutdown_cv.wait_timeout_while(g, timeout, |req| !*req).unwrap();
+        *g
+    }
+
+    /// Stop accepting, drain the connection pool, stop the control
+    /// plane, and hand the router back (so callers can read final
+    /// metrics and shut the services down).  In-flight requests finish:
+    /// handlers observe the stop flag only between frames.
+    pub fn shutdown(mut self) -> Result<ServiceRouter> {
+        self.inner.stop.store(true, Ordering::SeqCst);
+        self.inner.request_shutdown();
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        for h in self.pool.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(c) = self.control.take() {
+            c.stop();
+        }
+        let inner = Arc::try_unwrap(self.inner)
+            .map_err(|_| anyhow::anyhow!("server threads still hold state"))?;
+        let Inner { router, client, shedder, .. } = inner;
+        drop(client);
+        drop(shedder);
+        Arc::try_unwrap(router)
+            .map_err(|_| anyhow::anyhow!("router still referenced; drop external handles first"))
+    }
+}
+
+/// Send a typed shed error on a socket we will not serve, then close.
+fn shed_connection(mut sock: TcpStream) {
+    sock.set_write_timeout(Some(Duration::from_millis(250))).ok();
+    let resp = Resp::Error(WireError::new(ErrCode::Shed, "connection limit reached"));
+    let _ = wire::write_frame(&mut sock, &wire::encode_resp(&resp));
+}
+
+/// Outcome of reading one frame with the poll-slice strategy.
+enum ConnRead {
+    Frame(Vec<u8>),
+    TooLarge(u32),
+    /// Clean close, idle timeout, server stop, or a transport error —
+    /// in every case the connection is done.
+    Done,
+}
+
+/// Read one length-prefixed frame, polling in short slices so the
+/// handler notices `stop` and the idle deadline while blocked.
+fn read_frame_polled(sock: &mut TcpStream, inner: &Inner) -> ConnRead {
+    let deadline = Instant::now() + inner.cfg.read_timeout;
+    let mut hdr = [0u8; 4];
+    match read_exact_polled(sock, &mut hdr, deadline, &inner.stop) {
+        ReadExact::Done => {}
+        ReadExact::Closed => return ConnRead::Done,
+    }
+    let len = u32::from_le_bytes(hdr);
+    if len > inner.cfg.max_frame {
+        return ConnRead::TooLarge(len);
+    }
+    let mut body = vec![0u8; len as usize];
+    // the body follows immediately; an idle stall mid-frame is a dead
+    // or hostile peer, bounded by the same deadline
+    match read_exact_polled(sock, &mut body, deadline, &inner.stop) {
+        ReadExact::Done => ConnRead::Frame(body),
+        ReadExact::Closed => ConnRead::Done,
+    }
+}
+
+enum ReadExact {
+    Done,
+    Closed,
+}
+
+/// Fill `buf` from `sock`, waking every poll slice to check `stop` and
+/// `deadline`.  EOF — clean at a frame boundary or mid-frame — maps to
+/// `Closed` either way: the connection is done.
+fn read_exact_polled(
+    sock: &mut TcpStream,
+    buf: &mut [u8],
+    deadline: Instant,
+    stop: &AtomicBool,
+) -> ReadExact {
+    sock.set_read_timeout(Some(Duration::from_millis(100))).ok();
+    let mut got = 0;
+    while got < buf.len() {
+        if stop.load(Ordering::SeqCst) || Instant::now() >= deadline {
+            return ReadExact::Closed;
+        }
+        match sock.read(&mut buf[got..]) {
+            Ok(0) => return ReadExact::Closed,
+            Ok(n) => got += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut
+                    || e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return ReadExact::Closed,
+        }
+    }
+    ReadExact::Done
+}
+
+/// Serve one connection: frames in, responses out, strictly in order.
+fn handle_conn(mut sock: TcpStream, inner: &Inner) {
+    sock.set_nodelay(true).ok();
+    sock.set_write_timeout(Some(inner.cfg.write_timeout)).ok();
+    loop {
+        let resp = match read_frame_polled(&mut sock, inner) {
+            ConnRead::Done => return,
+            ConnRead::TooLarge(n) => {
+                // the unread body desynchronizes the stream: answer
+                // with the typed error, then close
+                let resp = Resp::Error(WireError::new(
+                    ErrCode::FrameTooLarge,
+                    format!("frame of {n} bytes exceeds cap {}", inner.cfg.max_frame),
+                ));
+                let _ = wire::write_frame(&mut sock, &wire::encode_resp(&resp));
+                return;
+            }
+            ConnRead::Frame(body) => match wire::decode_msg(&body) {
+                Ok(msg) => dispatch(msg, inner),
+                Err(e) => Resp::Error(e),
+            },
+        };
+        if wire::write_frame(&mut sock, &wire::encode_resp(&resp)).is_err() {
+            return;
+        }
+    }
+}
+
+/// Execute one decoded message against the router.  Every arm returns
+/// exactly one response — the wire side of request conservation.
+fn dispatch(msg: Msg, inner: &Inner) -> Resp {
+    if inner.stop.load(Ordering::SeqCst) {
+        return Resp::Error(WireError::new(ErrCode::ShuttingDown, "server is stopping"));
+    }
+    match msg {
+        Msg::Infer { service, input } => {
+            let want = match inner.client.item_len(&service) {
+                Ok(n) => n,
+                Err(_) => {
+                    return Resp::Error(WireError::new(
+                        ErrCode::UnknownService,
+                        format!(
+                            "no batching service '{service}' (registered: {})",
+                            inner.client.services().join(", ")
+                        ),
+                    ));
+                }
+            };
+            if input.len() != want {
+                return Resp::Error(WireError::new(
+                    ErrCode::BadItemLen,
+                    format!("item len {} != {want} for '{service}'", input.len()),
+                ));
+            }
+            if let Err(reason) = inner.shedder.admit(&service) {
+                if let Some(m) = inner.router.metrics(&service) {
+                    m.record_shed();
+                }
+                return Resp::Error(WireError::new(ErrCode::Shed, reason.to_string()));
+            }
+            match inner.client.try_submit(&service, input) {
+                // `try_submit` already counted the shed in the metrics
+                Ok(TrySubmit::Full(_)) => Resp::Error(WireError::new(
+                    ErrCode::Shed,
+                    format!("queue full for '{service}'"),
+                )),
+                Ok(TrySubmit::Accepted(rx)) => match rx.recv() {
+                    Ok(r) => response_to_wire(&r),
+                    Err(_) => Resp::Error(WireError::new(
+                        ErrCode::Internal,
+                        format!("batch failed server-side for '{service}'"),
+                    )),
+                },
+                Err(e) => Resp::Error(WireError::new(ErrCode::ShuttingDown, format!("{e:#}"))),
+            }
+        }
+        Msg::Decode { service, session, input } => {
+            let want = match inner.client.decode_item_len(&service) {
+                Ok(n) => n,
+                Err(_) => {
+                    return Resp::Error(WireError::new(
+                        ErrCode::UnknownService,
+                        format!(
+                            "no decode service '{service}' (registered: {})",
+                            inner.client.decode_services().join(", ")
+                        ),
+                    ));
+                }
+            };
+            if input.len() != want {
+                return Resp::Error(WireError::new(
+                    ErrCode::BadItemLen,
+                    format!("step len {} != {want} for '{service}'", input.len()),
+                ));
+            }
+            if let Err(reason) = inner.shedder.admit(&service) {
+                if let Some(m) = inner.router.metrics(&service) {
+                    m.record_shed();
+                }
+                return Resp::Error(WireError::new(ErrCode::Shed, reason.to_string()));
+            }
+            match inner.client.submit_decode(&service, session, input) {
+                Ok(rx) => match rx.recv() {
+                    Ok(r) => response_to_wire(&r),
+                    Err(_) => Resp::Error(WireError::new(
+                        ErrCode::Internal,
+                        format!("decode step failed server-side (session {session})"),
+                    )),
+                },
+                Err(e) => Resp::Error(WireError::new(ErrCode::ShuttingDown, format!("{e:#}"))),
+            }
+        }
+        Msg::EndSession { service, session } => {
+            let names = inner.client.decode_services();
+            if !names.contains(&service.as_str()) {
+                return Resp::Error(WireError::new(
+                    ErrCode::UnknownService,
+                    format!("no decode service '{service}' (registered: {})", names.join(", ")),
+                ));
+            }
+            match inner.client.end_session(&service, session) {
+                Ok(r) => response_to_wire(&r),
+                Err(e) => Resp::Error(WireError::new(ErrCode::Internal, format!("{e:#}"))),
+            }
+        }
+        Msg::Status => Resp::Text(format!(
+            "conns served={} shed={}\n{}\n{}",
+            inner.conns_served.load(Ordering::Relaxed),
+            inner.conns_shed.load(Ordering::Relaxed),
+            inner.router.load_report(),
+            inner.router.summary()
+        )),
+        Msg::Shutdown => {
+            inner.request_shutdown();
+            Resp::Text("shutting down".to_string())
+        }
+    }
+}
+
+fn response_to_wire(r: &crate::coordinator::Response) -> Resp {
+    Resp::Output {
+        output: r.output.clone(),
+        queue_s: r.queue_time.as_secs_f64(),
+        exec_s: r.exec_time.as_secs_f64(),
+        batch: r.batch_size as u32,
+    }
+}

@@ -1,0 +1,525 @@
+//! Wire protocol for the TCP front door (DESIGN.md §5.3).
+//!
+//! Frames are `u32` little-endian length prefixes followed by that many
+//! body bytes; the first body byte is the message type.  Everything
+//! multi-byte is little-endian, payloads are raw `f32` bit patterns —
+//! the point of the protocol is that the bytes that leave the server are
+//! the same bits `RouterClient::infer` would have returned in-process,
+//! so bit-exactness survives the socket.
+//!
+//! Decoding is strict: truncated bodies, non-UTF-8 service names,
+//! payload lengths that disagree with their declared counts, unknown
+//! message types, and trailing bytes are all rejected as typed
+//! [`ErrCode::Malformed`] errors rather than best-effort parses.  A
+//! frame whose declared length exceeds the cap is reported *before*
+//! reading the body ([`FrameRead::TooLarge`]) because the stream is
+//! unrecoverable past that point — the server answers with
+//! [`ErrCode::FrameTooLarge`] and closes.
+//!
+//! This module is pure encode/decode over `io::Read`/`io::Write` (plus
+//! in-memory slices), so every frame shape is unit-testable without a
+//! socket; the connection-handling policy (timeouts, shedding, the
+//! stop flag) lives in the server module.
+
+use std::fmt;
+use std::io::{Read, Write};
+
+use anyhow::Result;
+
+/// Hard cap on one frame's body (64 MiB) — far above any real batch
+/// (the largest paper item, attention/L1024xD64, is ~1.5 MiB), low
+/// enough that a corrupt length prefix cannot OOM the server.
+pub const MAX_FRAME: u32 = 64 << 20;
+
+const MSG_INFER: u8 = 1;
+const MSG_DECODE: u8 = 2;
+const MSG_END_SESSION: u8 = 3;
+const MSG_STATUS: u8 = 4;
+const MSG_SHUTDOWN: u8 = 5;
+
+const RESP_OUTPUT: u8 = 0x80;
+const RESP_ERROR: u8 = 0x81;
+const RESP_TEXT: u8 = 0x82;
+
+/// Typed rejection codes carried by error responses, so clients can
+/// distinguish "shed, retry later" from "your frame is garbage" without
+/// string matching.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrCode {
+    /// The frame could not be decoded (truncation, bad UTF-8, trailing
+    /// bytes, unknown message type).
+    Malformed = 1,
+    /// No service with that name is registered.
+    UnknownService = 2,
+    /// The payload length does not match the service's item length.
+    BadItemLen = 3,
+    /// Load-shed: the admission controller or the bounded queue turned
+    /// the request away.  Retryable by construction.
+    Shed = 4,
+    /// The server is draining for shutdown.
+    ShuttingDown = 5,
+    /// The request was accepted but its batch failed server-side.
+    Internal = 6,
+    /// The declared frame length exceeds the server's cap; the
+    /// connection is closed after this error.
+    FrameTooLarge = 7,
+}
+
+impl ErrCode {
+    pub fn from_u8(v: u8) -> Option<ErrCode> {
+        match v {
+            1 => Some(ErrCode::Malformed),
+            2 => Some(ErrCode::UnknownService),
+            3 => Some(ErrCode::BadItemLen),
+            4 => Some(ErrCode::Shed),
+            5 => Some(ErrCode::ShuttingDown),
+            6 => Some(ErrCode::Internal),
+            7 => Some(ErrCode::FrameTooLarge),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrCode::Malformed => "malformed",
+            ErrCode::UnknownService => "unknown-service",
+            ErrCode::BadItemLen => "bad-item-len",
+            ErrCode::Shed => "shed",
+            ErrCode::ShuttingDown => "shutting-down",
+            ErrCode::Internal => "internal",
+            ErrCode::FrameTooLarge => "frame-too-large",
+        }
+    }
+}
+
+impl fmt::Display for ErrCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A typed wire-level rejection: code plus a human-readable detail.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireError {
+    pub code: ErrCode,
+    pub msg: String,
+}
+
+impl WireError {
+    pub fn new(code: ErrCode, msg: impl Into<String>) -> WireError {
+        WireError { code, msg: msg.into() }
+    }
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code, self.msg)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Client-to-server messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// One item for a batching service.
+    Infer { service: String, input: Vec<f32> },
+    /// One decode step for `session` on a decode service.
+    Decode { service: String, session: u64, input: Vec<f32> },
+    /// Free a decode session's state explicitly.
+    EndSession { service: String, session: u64 },
+    /// Ask for the live status report.
+    Status,
+    /// Ask the server to shut down gracefully.
+    Shutdown,
+}
+
+/// Server-to-client messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Resp {
+    /// A served request: the output bits plus the same timing the
+    /// in-process `Response` carries.
+    Output { output: Vec<f32>, queue_s: f64, exec_s: f64, batch: u32 },
+    /// A typed rejection.
+    Error(WireError),
+    /// Human-readable text (status reports, shutdown acks).
+    Text(String),
+}
+
+/// Strict little-endian cursor over one frame body.
+struct Cur<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Cur<'a> {
+        Cur { b, off: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self.off.checked_add(n).filter(|&e| e <= self.b.len()).ok_or_else(|| {
+            WireError::new(
+                ErrCode::Malformed,
+                format!("truncated frame: wanted {n} bytes at offset {}", self.off),
+            )
+        })?;
+        let s = &self.b[self.off..end];
+        self.off = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn name(&mut self) -> Result<String, WireError> {
+        let n = self.u16()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| WireError::new(ErrCode::Malformed, "service name is not UTF-8"))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>, WireError> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| {
+            WireError::new(ErrCode::Malformed, "f32 count overflows the frame")
+        })?)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn text(&mut self) -> Result<String, WireError> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| WireError::new(ErrCode::Malformed, "text is not UTF-8"))
+    }
+
+    fn finish(self) -> Result<(), WireError> {
+        if self.off == self.b.len() {
+            Ok(())
+        } else {
+            Err(WireError::new(
+                ErrCode::Malformed,
+                format!("{} trailing bytes after message", self.b.len() - self.off),
+            ))
+        }
+    }
+}
+
+fn put_name(out: &mut Vec<u8>, name: &str) {
+    let n = name.len().min(u16::MAX as usize) as u16;
+    out.extend_from_slice(&n.to_le_bytes());
+    out.extend_from_slice(&name.as_bytes()[..n as usize]);
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_text(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Encode one client message as a frame body (no length prefix).
+pub fn encode_msg(msg: &Msg) -> Vec<u8> {
+    let mut out = Vec::new();
+    match msg {
+        Msg::Infer { service, input } => {
+            out.push(MSG_INFER);
+            put_name(&mut out, service);
+            put_f32s(&mut out, input);
+        }
+        Msg::Decode { service, session, input } => {
+            out.push(MSG_DECODE);
+            put_name(&mut out, service);
+            out.extend_from_slice(&session.to_le_bytes());
+            put_f32s(&mut out, input);
+        }
+        Msg::EndSession { service, session } => {
+            out.push(MSG_END_SESSION);
+            put_name(&mut out, service);
+            out.extend_from_slice(&session.to_le_bytes());
+        }
+        Msg::Status => out.push(MSG_STATUS),
+        Msg::Shutdown => out.push(MSG_SHUTDOWN),
+    }
+    out
+}
+
+/// Decode one client message from a frame body.
+pub fn decode_msg(body: &[u8]) -> Result<Msg, WireError> {
+    let mut c = Cur::new(body);
+    let msg = match c.u8()? {
+        MSG_INFER => Msg::Infer { service: c.name()?, input: c.f32s()? },
+        MSG_DECODE => Msg::Decode { service: c.name()?, session: c.u64()?, input: c.f32s()? },
+        MSG_END_SESSION => Msg::EndSession { service: c.name()?, session: c.u64()? },
+        MSG_STATUS => Msg::Status,
+        MSG_SHUTDOWN => Msg::Shutdown,
+        t => {
+            return Err(WireError::new(ErrCode::Malformed, format!("unknown message type {t}")));
+        }
+    };
+    c.finish()?;
+    Ok(msg)
+}
+
+/// Encode one server response as a frame body (no length prefix).
+pub fn encode_resp(resp: &Resp) -> Vec<u8> {
+    let mut out = Vec::new();
+    match resp {
+        Resp::Output { output, queue_s, exec_s, batch } => {
+            out.push(RESP_OUTPUT);
+            put_f32s(&mut out, output);
+            out.extend_from_slice(&queue_s.to_le_bytes());
+            out.extend_from_slice(&exec_s.to_le_bytes());
+            out.extend_from_slice(&batch.to_le_bytes());
+        }
+        Resp::Error(e) => {
+            out.push(RESP_ERROR);
+            out.push(e.code as u8);
+            put_text(&mut out, &e.msg);
+        }
+        Resp::Text(s) => {
+            out.push(RESP_TEXT);
+            put_text(&mut out, s);
+        }
+    }
+    out
+}
+
+/// Decode one server response from a frame body.
+pub fn decode_resp(body: &[u8]) -> Result<Resp, WireError> {
+    let mut c = Cur::new(body);
+    let resp = match c.u8()? {
+        RESP_OUTPUT => {
+            let output = c.f32s()?;
+            let queue_s = c.f64()?;
+            let exec_s = c.f64()?;
+            let batch = c.u32()?;
+            Resp::Output { output, queue_s, exec_s, batch }
+        }
+        RESP_ERROR => {
+            let raw = c.u8()?;
+            let code = ErrCode::from_u8(raw).ok_or_else(|| {
+                WireError::new(ErrCode::Malformed, format!("unknown error code {raw}"))
+            })?;
+            Resp::Error(WireError { code, msg: c.text()? })
+        }
+        RESP_TEXT => Resp::Text(c.text()?),
+        t => {
+            return Err(WireError::new(ErrCode::Malformed, format!("unknown response type {t}")));
+        }
+    };
+    c.finish()?;
+    Ok(resp)
+}
+
+/// Write one length-prefixed frame.
+pub fn write_frame(w: &mut impl Write, body: &[u8]) -> std::io::Result<()> {
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Outcome of reading one frame off a stream.
+#[derive(Debug)]
+pub enum FrameRead {
+    /// A complete frame body.
+    Frame(Vec<u8>),
+    /// Clean end-of-stream at a frame boundary.
+    Eof,
+    /// The declared length exceeds the cap; the body was *not* read, so
+    /// the stream is desynchronized and must be closed.
+    TooLarge(u32),
+}
+
+/// Blocking read of one frame.  EOF exactly at a frame boundary is
+/// `Eof`; EOF mid-frame is an `UnexpectedEof` error.
+pub fn read_frame(r: &mut impl Read, max: u32) -> std::io::Result<FrameRead> {
+    let mut hdr = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        let n = r.read(&mut hdr[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(FrameRead::Eof);
+            }
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "eof mid frame header",
+            ));
+        }
+        got += n;
+    }
+    let len = u32::from_le_bytes(hdr);
+    if len > max {
+        return Ok(FrameRead::TooLarge(len));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    Ok(FrameRead::Frame(body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_msg(msg: Msg) {
+        let body = encode_msg(&msg);
+        assert_eq!(decode_msg(&body).unwrap(), msg);
+    }
+
+    fn roundtrip_resp(resp: Resp) {
+        let body = encode_resp(&resp);
+        assert_eq!(decode_resp(&body).unwrap(), resp);
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        roundtrip_msg(Msg::Infer {
+            service: "e2softmax/L64".into(),
+            input: vec![0.0, -1.5, f32::MIN_POSITIVE, 1e30],
+        });
+        roundtrip_msg(Msg::Infer { service: "x".into(), input: vec![] });
+        roundtrip_msg(Msg::Decode {
+            service: "decode-attention/L8xD4".into(),
+            session: u64::MAX,
+            input: vec![1.0; 12],
+        });
+        roundtrip_msg(Msg::EndSession { service: "d".into(), session: 7 });
+        roundtrip_msg(Msg::Status);
+        roundtrip_msg(Msg::Shutdown);
+    }
+
+    #[test]
+    fn every_response_roundtrips() {
+        roundtrip_resp(Resp::Output {
+            output: vec![0.25, -0.0, f32::NAN.to_bits() as f32],
+            queue_s: 0.001,
+            exec_s: 2.5e-6,
+            batch: 16,
+        });
+        roundtrip_resp(Resp::Output { output: vec![], queue_s: 0.0, exec_s: 0.0, batch: 1 });
+        for code in [
+            ErrCode::Malformed,
+            ErrCode::UnknownService,
+            ErrCode::BadItemLen,
+            ErrCode::Shed,
+            ErrCode::ShuttingDown,
+            ErrCode::Internal,
+            ErrCode::FrameTooLarge,
+        ] {
+            assert_eq!(ErrCode::from_u8(code as u8), Some(code));
+            roundtrip_resp(Resp::Error(WireError::new(code, format!("detail for {code}"))));
+        }
+        roundtrip_resp(Resp::Text("line one\nline two".into()));
+    }
+
+    #[test]
+    fn f32_bits_survive_the_wire_exactly() {
+        // bit-exactness is the contract: encode/decode must preserve the
+        // exact bit pattern, including negative zero and NaN payloads
+        let tricky =
+            vec![f32::from_bits(0x8000_0000), f32::from_bits(0x7FC0_1234), f32::MIN, f32::MAX];
+        let body = encode_msg(&Msg::Infer { service: "s".into(), input: tricky.clone() });
+        match decode_msg(&body).unwrap() {
+            Msg::Infer { input, .. } => {
+                let got: Vec<u32> = input.iter().map(|x| x.to_bits()).collect();
+                let want: Vec<u32> = tricky.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(got, want);
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_bodies_are_typed_rejections() {
+        // empty body
+        assert_eq!(decode_msg(&[]).unwrap_err().code, ErrCode::Malformed);
+        // unknown message type
+        assert_eq!(decode_msg(&[99]).unwrap_err().code, ErrCode::Malformed);
+        // truncated: name length promises more bytes than exist
+        let err = decode_msg(&[MSG_INFER, 10, 0, b'a']).unwrap_err();
+        assert_eq!(err.code, ErrCode::Malformed);
+        assert!(err.msg.contains("truncated"), "{err}");
+        // bad utf-8 name
+        let mut body = vec![MSG_INFER, 2, 0, 0xFF, 0xFE];
+        body.extend_from_slice(&0u32.to_le_bytes());
+        assert_eq!(decode_msg(&body).unwrap_err().code, ErrCode::Malformed);
+        // declared f32 count larger than payload
+        let mut body = vec![MSG_INFER, 1, 0, b's'];
+        body.extend_from_slice(&5u32.to_le_bytes());
+        body.extend_from_slice(&1.0f32.to_le_bytes());
+        assert_eq!(decode_msg(&body).unwrap_err().code, ErrCode::Malformed);
+        // trailing junk after a complete message
+        let mut body = encode_msg(&Msg::Status);
+        body.push(0);
+        let err = decode_msg(&body).unwrap_err();
+        assert_eq!(err.code, ErrCode::Malformed);
+        assert!(err.msg.contains("trailing"), "{err}");
+        // responses are just as strict
+        assert_eq!(decode_resp(&[0x7F]).unwrap_err().code, ErrCode::Malformed);
+        assert_eq!(decode_resp(&[RESP_ERROR, 200]).unwrap_err().code, ErrCode::Malformed);
+    }
+
+    #[test]
+    fn frames_roundtrip_over_io() {
+        let bodies = [
+            encode_msg(&Msg::Status),
+            encode_msg(&Msg::Infer { service: "s".into(), input: vec![1.0; 7] }),
+        ];
+        let mut buf = Vec::new();
+        for b in &bodies {
+            write_frame(&mut buf, b).unwrap();
+        }
+        let mut r = &buf[..];
+        for b in &bodies {
+            match read_frame(&mut r, MAX_FRAME).unwrap() {
+                FrameRead::Frame(got) => assert_eq!(&got, b),
+                other => panic!("expected a frame, got {other:?}"),
+            }
+        }
+        assert!(matches!(read_frame(&mut r, MAX_FRAME).unwrap(), FrameRead::Eof));
+    }
+
+    #[test]
+    fn oversized_and_truncated_frames_are_detected() {
+        // a frame that declares more than the cap is reported unread
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        let mut r = &buf[..];
+        match read_frame(&mut r, MAX_FRAME).unwrap() {
+            FrameRead::TooLarge(n) => assert_eq!(n, MAX_FRAME + 1),
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+        // eof mid-header and mid-body are hard errors, not clean Eof
+        let mut r: &[u8] = &[1, 0];
+        assert!(read_frame(&mut r, MAX_FRAME).is_err());
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&8u32.to_le_bytes());
+        buf.extend_from_slice(&[1, 2, 3]);
+        let mut r = &buf[..];
+        assert!(read_frame(&mut r, MAX_FRAME).is_err());
+    }
+}

@@ -1,0 +1,475 @@
+//! Integration: the TCP front door end to end with real sockets —
+//! loopback bit-exactness against direct op invocation, typed
+//! rejections for malformed and mistargeted frames, load shedding with
+//! the conservation ledger checked across the wire, the rebalancer
+//! shifting a worker to the hot service under skewed traffic, decode
+//! sessions (with explicit `end_session`) over TCP, and graceful
+//! wire-initiated shutdown.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sole::coordinator::{Backend, BackendScratch, BatchPolicy, ServiceRouter};
+use sole::ops::OpRegistry;
+use sole::server::{
+    wire, AdmissionConfig, ErrCode, NetClient, RebalanceConfig, Reply, Server, ServerConfig,
+};
+use sole::util::rng::Rng;
+
+/// Echo after a fixed sleep: known capacity, so overload and queue
+/// pressure are forced by construction, not by host speed.
+struct SlowEcho {
+    item: usize,
+    delay: Duration,
+    buckets: Vec<usize>,
+}
+
+impl Backend for SlowEcho {
+    fn item_input_len(&self) -> usize {
+        self.item
+    }
+    fn item_output_len(&self) -> usize {
+        self.item
+    }
+    fn buckets(&self) -> &[usize] {
+        &self.buckets
+    }
+    fn run(
+        &self,
+        _bucket: usize,
+        inputs: &[f32],
+        out: &mut [f32],
+        _scratch: &mut BackendScratch,
+    ) -> anyhow::Result<()> {
+        std::thread::sleep(self.delay);
+        out.copy_from_slice(inputs);
+        Ok(())
+    }
+}
+
+fn slow_echo(item: usize, delay_ms: u64) -> Arc<SlowEcho> {
+    Arc::new(SlowEcho { item, delay: Duration::from_millis(delay_ms), buckets: vec![1] })
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn tcp_results_are_bit_exact_to_direct_invocation() {
+    // the wire carries raw f32 bit patterns: a served response must be
+    // bit-identical to running the same registry op directly — sockets,
+    // framing and batching add no arithmetic
+    let registry = OpRegistry::builtin();
+    let specs = ["e2softmax/L49", "ailayernorm/C96", "attention/L64xD32"];
+    let mut builder = ServiceRouter::builder(3).default_policy(BatchPolicy {
+        max_wait: Duration::from_millis(1),
+        max_batch: 8,
+        queue_cap: None,
+    });
+    for s in specs {
+        builder = builder.op_service(&registry, s, vec![1, 4, 8]).unwrap();
+    }
+    let router = builder.start().unwrap();
+    let server = Server::start(router, "127.0.0.1:0", ServerConfig::default()).unwrap();
+    let addr = server.addr().to_string();
+
+    let mut cl = NetClient::connect(&addr, Duration::from_secs(10)).unwrap();
+    let mut rng = Rng::new(0xA11CE);
+    for spec in specs {
+        let (_, op) = registry.build(spec).unwrap();
+        let mut scratch = op.make_scratch();
+        for i in 0..6 {
+            let mut row = vec![0f32; op.item_len()];
+            rng.fill_normal(&mut row, 0.0, 1.5);
+            let mut want = vec![0f32; op.out_len()];
+            op.run_batch(1, &row, &mut want, &mut scratch).unwrap();
+            match cl.infer(spec, &row).unwrap() {
+                Reply::Output(r) => {
+                    assert_eq!(bits(&r.output), bits(&want), "{spec} request {i}");
+                    assert!(r.batch >= 1, "{spec}: batch size populated");
+                }
+                other => panic!("{spec} request {i}: unexpected {other:?}"),
+            }
+        }
+    }
+    drop(cl);
+    let router = server.shutdown().unwrap();
+    for spec in specs {
+        let m = router.metrics(spec).unwrap();
+        assert_eq!(m.completed(), 6, "{spec}");
+        assert_eq!(m.errors(), 0, "{spec}");
+    }
+    router.shutdown();
+}
+
+#[test]
+fn malformed_and_mistargeted_frames_get_typed_errors() {
+    let registry = OpRegistry::builtin();
+    let router = ServiceRouter::builder(1)
+        .default_policy(BatchPolicy {
+            max_wait: Duration::from_millis(1),
+            max_batch: 4,
+            queue_cap: None,
+        })
+        .op_service(&registry, "e2softmax/L8", vec![1, 4])
+        .unwrap()
+        .start()
+        .unwrap();
+    let cfg = ServerConfig { max_frame: 4096, ..ServerConfig::default() };
+    let server = Server::start(router, "127.0.0.1:0", cfg).unwrap();
+    let addr = server.addr();
+
+    let read_resp = |sock: &mut TcpStream| -> wire::Resp {
+        match wire::read_frame(sock, wire::MAX_FRAME).unwrap() {
+            wire::FrameRead::Frame(b) => wire::decode_resp(&b).unwrap(),
+            other => panic!("expected a response frame, got {other:?}"),
+        }
+    };
+
+    // protocol-level garbage on a raw socket: typed Malformed, and the
+    // connection survives to serve the next (valid) frame
+    let mut sock = TcpStream::connect(addr).unwrap();
+    sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    wire::write_frame(&mut sock, &[0xEE]).unwrap(); // unknown message type
+    match read_resp(&mut sock) {
+        wire::Resp::Error(e) => assert_eq!(e.code, ErrCode::Malformed, "{e}"),
+        other => panic!("unexpected {other:?}"),
+    }
+    wire::write_frame(&mut sock, &[1, 10, 0, b'a']).unwrap(); // truncated infer
+    match read_resp(&mut sock) {
+        wire::Resp::Error(e) => assert_eq!(e.code, ErrCode::Malformed, "{e}"),
+        other => panic!("unexpected {other:?}"),
+    }
+    wire::write_frame(&mut sock, &wire::encode_msg(&wire::Msg::Status)).unwrap();
+    assert!(
+        matches!(read_resp(&mut sock), wire::Resp::Text(_)),
+        "connection must survive typed rejections"
+    );
+    drop(sock);
+
+    // mistargeted but well-formed requests: typed, specific codes
+    let mut cl = NetClient::connect(&addr.to_string(), Duration::from_secs(10)).unwrap();
+    match cl.infer("nope/L8", &[0.0; 8]).unwrap() {
+        Reply::Rejected(e) => {
+            assert_eq!(e.code, ErrCode::UnknownService, "{e}");
+            assert!(e.msg.contains("e2softmax/L8"), "lists registered services: {e}");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    match cl.infer("e2softmax/L8", &[0.0; 3]).unwrap() {
+        Reply::Rejected(e) => assert_eq!(e.code, ErrCode::BadItemLen, "{e}"),
+        other => panic!("unexpected {other:?}"),
+    }
+    // the connection still serves valid requests afterwards
+    assert!(matches!(cl.infer("e2softmax/L8", &[0.5; 8]).unwrap(), Reply::Output(_)));
+    drop(cl);
+
+    // an oversized declared length: typed error, then the stream closes
+    // (the unread body desynchronizes it)
+    let mut sock = TcpStream::connect(addr).unwrap();
+    sock.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    sock.write_all(&8192u32.to_le_bytes()).unwrap();
+    sock.flush().unwrap();
+    match read_resp(&mut sock) {
+        wire::Resp::Error(e) => assert_eq!(e.code, ErrCode::FrameTooLarge, "{e}"),
+        other => panic!("unexpected {other:?}"),
+    }
+    assert!(
+        matches!(wire::read_frame(&mut sock, wire::MAX_FRAME).unwrap(), wire::FrameRead::Eof),
+        "connection must close after an oversized frame"
+    );
+
+    server.shutdown().unwrap().shutdown();
+}
+
+#[test]
+fn overload_sheds_with_typed_errors_and_the_ledger_conserves() {
+    // one worker at 2ms/row behind a queue of 2: eight blocking
+    // connections offer ~8 concurrent requests, so most must come back
+    // as typed Shed — and accepted + shed must equal offered exactly,
+    // counted on both sides of the socket
+    const CLIENTS: usize = 8;
+    const PER_CLIENT: usize = 10;
+    let router = ServiceRouter::builder(1)
+        .default_policy(BatchPolicy {
+            max_wait: Duration::from_millis(1),
+            max_batch: 1,
+            queue_cap: Some(2),
+        })
+        .service("slow", slow_echo(16, 2))
+        .start()
+        .unwrap();
+    let cfg = ServerConfig {
+        conn_threads: CLIENTS,
+        pending_conns: CLIENTS,
+        admission: AdmissionConfig::default(),
+        rebalance: None,
+        ..ServerConfig::default()
+    };
+    let server = Server::start(router, "127.0.0.1:0", cfg).unwrap();
+    let addr = server.addr().to_string();
+
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(900 + c as u64);
+                let mut row = vec![0f32; 16];
+                rng.fill_normal(&mut row, 0.0, 1.0);
+                let mut cl = NetClient::connect(&addr, Duration::from_secs(30)).unwrap();
+                let (mut done, mut shed) = (0u64, 0u64);
+                for _ in 0..PER_CLIENT {
+                    match cl.infer("slow", &row).unwrap() {
+                        Reply::Output(r) => {
+                            assert_eq!(bits(&r.output), bits(&row), "echo must be exact");
+                            done += 1;
+                        }
+                        Reply::Rejected(e) => {
+                            assert_eq!(e.code, ErrCode::Shed, "only sheds expected: {e}");
+                            shed += 1;
+                        }
+                        Reply::Text(t) => panic!("unexpected text reply: {t}"),
+                    }
+                }
+                (done, shed)
+            })
+        })
+        .collect();
+    let (mut completed, mut shed) = (0u64, 0u64);
+    for h in handles {
+        let (d, s) = h.join().unwrap();
+        completed += d;
+        shed += s;
+    }
+    let offered = (CLIENTS * PER_CLIENT) as u64;
+    assert_eq!(completed + shed, offered, "every request got exactly one reply");
+    assert!(shed > 0, "overload must actually shed");
+    assert!(completed > 0, "overload must not starve everything");
+
+    let router = server.shutdown().unwrap();
+    let m = router.metrics("slow").unwrap();
+    assert_eq!(m.offered(), offered, "wire offered matches the ledger");
+    assert_eq!(m.completed(), completed, "wire completions match");
+    assert_eq!(m.shed(), shed, "wire sheds match");
+    assert_eq!(m.errors(), 0);
+    assert_eq!(m.completed() + m.errors() + m.shed(), m.offered(), "conservation");
+    router.shutdown();
+}
+
+#[test]
+fn rebalancer_moves_a_worker_to_the_hot_service_under_skew() {
+    // "slow" and a real op start at 2 workers each; sustained blocking
+    // traffic on "slow" only must make the control plane move exactly
+    // one worker (the donor floor keeps the cold service at 1), and the
+    // cold service must keep serving bit-exact afterwards
+    const CLIENTS: usize = 8;
+    let registry = OpRegistry::builtin();
+    let router = ServiceRouter::builder(4)
+        .default_policy(BatchPolicy {
+            max_wait: Duration::from_millis(1),
+            max_batch: 1,
+            queue_cap: None,
+        })
+        .service("slow", slow_echo(32, 2))
+        .op_service(&registry, "e2softmax/L49", vec![1, 4])
+        .unwrap()
+        .start()
+        .unwrap();
+    assert_eq!(router.workers("slow"), Some(2), "even split before traffic");
+    assert_eq!(router.workers("e2softmax/L49"), Some(2));
+    let cfg = ServerConfig {
+        conn_threads: CLIENTS + 1,
+        pending_conns: CLIENTS + 1,
+        rebalance: Some(RebalanceConfig {
+            interval: Duration::from_millis(50),
+            min_gap: 1.0,
+        }),
+        ..ServerConfig::default()
+    };
+    let server = Server::start(router, "127.0.0.1:0", cfg).unwrap();
+    let addr = server.addr().to_string();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let addr = addr.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(7000 + c as u64);
+                let mut row = vec![0f32; 32];
+                rng.fill_normal(&mut row, 0.0, 1.0);
+                let mut cl = NetClient::connect(&addr, Duration::from_secs(30)).unwrap();
+                while !stop.load(Ordering::SeqCst) {
+                    match cl.infer("slow", &row).unwrap() {
+                        Reply::Output(_) => {}
+                        other => panic!("hot traffic must be served: {other:?}"),
+                    }
+                }
+            })
+        })
+        .collect();
+
+    // the acceptance clock: the move must happen within 5 seconds
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let hot = server.router().workers("slow").unwrap();
+        if hot >= 3 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "rebalancer made no move in 5s (hot workers still {hot}, queue {:?})",
+            server.router().queue_depth("slow")
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(server.router().workers("slow"), Some(3), "one worker moved to the hot pool");
+    assert_eq!(
+        server.router().workers("e2softmax/L49"),
+        Some(1),
+        "the donor stops at the one-worker floor"
+    );
+    stop.store(true, Ordering::SeqCst);
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // idle-service correctness is preserved after losing a worker
+    let (_, op) = registry.build("e2softmax/L49").unwrap();
+    let mut scratch = op.make_scratch();
+    let mut cl = NetClient::connect(&addr, Duration::from_secs(10)).unwrap();
+    let mut rng = Rng::new(0xC01D);
+    for i in 0..4 {
+        let mut row = vec![0f32; 49];
+        rng.fill_normal(&mut row, 0.0, 2.0);
+        let mut want = vec![0f32; 49];
+        op.run_batch(1, &row, &mut want, &mut scratch).unwrap();
+        match cl.infer("e2softmax/L49", &row).unwrap() {
+            Reply::Output(r) => assert_eq!(bits(&r.output), bits(&want), "cold request {i}"),
+            other => panic!("cold request {i}: unexpected {other:?}"),
+        }
+    }
+    drop(cl);
+
+    let router = server.shutdown().unwrap();
+    for name in ["slow", "e2softmax/L49"] {
+        let m = router.metrics(name).unwrap();
+        assert_eq!(m.errors(), 0, "{name}");
+        assert_eq!(m.completed() + m.shed(), m.offered(), "{name}: conservation");
+    }
+    router.shutdown();
+}
+
+#[test]
+fn decode_sessions_over_tcp_with_explicit_end_session() {
+    let registry = OpRegistry::builtin();
+    let spec = "decode-attention/L8xD4";
+    let router = ServiceRouter::builder(2)
+        .decode_service(&registry, spec, 1)
+        .unwrap()
+        .start()
+        .unwrap();
+    let server = Server::start(router, "127.0.0.1:0", ServerConfig::default()).unwrap();
+    let addr = server.addr().to_string();
+    let mut cl = NetClient::connect(&addr, Duration::from_secs(10)).unwrap();
+
+    let (_, op) = registry.build(spec).unwrap();
+    let d = 4usize;
+    let steps = 3usize;
+    let mut rng = Rng::new(0xDEC0);
+    // pre-generate every step so the local replay sees identical inputs
+    let rows: Vec<Vec<Vec<f32>>> = (0..2)
+        .map(|_| {
+            (0..steps)
+                .map(|_| {
+                    let mut item = vec![0f32; 3 * d];
+                    rng.fill_normal(&mut item, 0.0, 1.0);
+                    item
+                })
+                .collect()
+        })
+        .collect();
+
+    // interleave two sessions; each reply must match a local stateful
+    // replay of that session bit-for-bit
+    let mut states: Vec<_> = (0..2).map(|_| op.make_state()).collect();
+    let mut scratch = op.make_scratch();
+    for step in 0..steps {
+        for sid in 0..2u64 {
+            let item = &rows[sid as usize][step];
+            let mut want = vec![0f32; d];
+            op.run_batch_stateful(1, item, &mut want, &mut scratch, &mut states[sid as usize])
+                .unwrap();
+            match cl.infer_decode(spec, sid, item).unwrap() {
+                Reply::Output(r) => {
+                    assert_eq!(bits(&r.output), bits(&want), "session {sid} step {step}")
+                }
+                other => panic!("session {sid} step {step}: unexpected {other:?}"),
+            }
+        }
+    }
+    assert_eq!(server.router().live_sessions(spec), Some(2));
+
+    // ending a session frees its server-side state...
+    match cl.end_session(spec, 0).unwrap() {
+        Reply::Output(r) => assert!(r.output.is_empty(), "end_session acks with no payload"),
+        other => panic!("end_session: unexpected {other:?}"),
+    }
+    assert_eq!(server.router().live_sessions(spec), Some(1));
+    // ...and an unknown decode service is a typed rejection
+    match cl.end_session("nope", 0).unwrap() {
+        Reply::Rejected(e) => assert_eq!(e.code, ErrCode::UnknownService, "{e}"),
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // a reused id is a fresh session: its first step equals a fresh
+    // local replay at step 0, not a continuation
+    let mut fresh = op.make_state();
+    let item = &rows[0][0];
+    let mut want = vec![0f32; d];
+    op.run_batch_stateful(1, item, &mut want, &mut scratch, &mut fresh).unwrap();
+    match cl.infer_decode(spec, 0, item).unwrap() {
+        Reply::Output(r) => assert_eq!(bits(&r.output), bits(&want), "reused id restarts at 0"),
+        other => panic!("unexpected {other:?}"),
+    }
+    assert_eq!(server.router().live_sessions(spec), Some(2));
+
+    drop(cl);
+    let router = server.shutdown().unwrap();
+    let m = router.metrics(spec).unwrap();
+    assert_eq!(m.errors(), 0);
+    router.shutdown();
+}
+
+#[test]
+fn wire_shutdown_request_is_observed_and_drains_cleanly() {
+    let registry = OpRegistry::builtin();
+    let router = ServiceRouter::builder(1)
+        .op_service(&registry, "e2softmax/L16", vec![1, 4])
+        .unwrap()
+        .start()
+        .unwrap();
+    let server = Server::start(router, "127.0.0.1:0", ServerConfig::default()).unwrap();
+    let addr = server.addr().to_string();
+
+    let mut cl = NetClient::connect(&addr, Duration::from_secs(10)).unwrap();
+    assert!(matches!(cl.infer("e2softmax/L16", &[0.25; 16]).unwrap(), Reply::Output(_)));
+    assert!(!server.wait(Duration::from_millis(10)), "no shutdown requested yet");
+    let ack = cl.shutdown_server().unwrap();
+    assert!(ack.contains("shutting down"), "{ack}");
+    assert!(server.wait(Duration::from_secs(5)), "the wire request must be observed");
+    // the request is a signal to the owner; the server still serves
+    // until the owner actually drains it
+    assert!(matches!(cl.infer("e2softmax/L16", &[0.5; 16]).unwrap(), Reply::Output(_)));
+    drop(cl);
+
+    let router = server.shutdown().unwrap();
+    let m = router.metrics("e2softmax/L16").unwrap();
+    assert_eq!(m.completed(), 2);
+    assert_eq!(m.errors(), 0);
+    router.shutdown();
+}
