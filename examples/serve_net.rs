@@ -2,8 +2,10 @@
 //! connects to a running `sole serve --listen <addr>` process and pushes
 //! a mixed inference workload through the wire protocol — round-robin
 //! infer requests over `--ops`, optional interleaved decode sessions
-//! with explicit `end_session`, an optional server status fetch, and an
-//! optional graceful shutdown request.
+//! with explicit `end_session`, an optional chunked-infer row streamed
+//! through a `--stream` service (served as `<spec>/stream`), an
+//! optional server status fetch, and an optional graceful shutdown
+//! request.
 //!
 //! Typed server rejections (shed, unknown service, …) are counted, not
 //! fatal; the process exits nonzero only if *nothing* completed, which
@@ -14,6 +16,7 @@
 //! cargo run --release --offline --example serve_net -- \
 //!     --addr 127.0.0.1:7411 [--requests 64] [--ops e2softmax/L128,...] \
 //!     [--decode decode-attention/L64xD32 --decode-steps 8 --sessions 2] \
+//!     [--stream consmax/L128 --stream-len 4096 --chunk 64] \
 //!     [--status] [--shutdown]
 //! ```
 
@@ -37,6 +40,9 @@ fn main() -> Result<()> {
     let decode_spec = args.opt("decode").map(str::to_string);
     let decode_steps = args.opt_usize("decode-steps", 8)?;
     let sessions = args.opt_usize("sessions", 2)?;
+    let stream_spec = args.opt("stream").map(str::to_string);
+    let stream_len = args.opt_usize("stream-len", 4096)?;
+    let chunk = args.opt_usize("chunk", 64)?;
 
     // derive each spec's item length from the same registry the server
     // built its services from — the wire carries no schema
@@ -94,6 +100,28 @@ fn main() -> Result<()> {
                 anyhow::bail!("end_session({sid}) rejected: {e}");
             }
         }
+    }
+
+    if let Some(spec) = &stream_spec {
+        // chunked infer: the row is longer than any registered L and
+        // travels in per-chunk frames to the `<spec>/stream` service
+        let parsed = registry.parse_spec(spec)?;
+        let name = format!("{parsed}/stream");
+        let mut row = vec![0f32; stream_len.max(1)];
+        rng.fill_normal(&mut row, 0.0, 2.0);
+        let out = cl.stream_row(&name, 1, &row, chunk.max(1))?;
+        anyhow::ensure!(
+            out.len() == row.len(),
+            "streamed {} elements through {name} but got {} back",
+            row.len(),
+            out.len()
+        );
+        println!(
+            "streamed a {}-element row through {name} in {} chunks",
+            row.len(),
+            row.len().div_ceil(chunk.max(1))
+        );
+        completed += 1;
     }
 
     println!("completed {completed}, rejected {rejected}");

@@ -40,6 +40,13 @@
 //! `offered == completed + errors + shed` is asserted against the
 //! wire-side counts before anything is written.
 //!
+//! Workload inputs come from the shared logit-distribution generator
+//! (`util::dist`, the same one the accuracy harness samples from), so a
+//! row here and a row in `ACCURACY.md` describe the same distribution:
+//! the Gaussian leg at `DIST_SIGMA`, seeded from `DIST_SEED` (overload
+//! clients derive per-connection seeds as `DIST_SEED + 1000 + client`).
+//! Every JSON row records its `workload` name and `seed`.
+//!
 //! Flags: `--json` writes the JSON artifact (default path
 //! `<repo>/BENCH_serving.json`, override with `--out <path>`); `--quick`
 //! is the CI smoke mode (equivalent to `SOLE_BENCH_QUICK=1`: numbers are
@@ -54,6 +61,7 @@ use sole::server::{AdmissionConfig, ErrCode, NetClient, Reply, Server, ServerCon
 use sole::simd::Dispatch;
 use sole::util::bench::{quick_mode, set_quick_mode};
 use sole::util::cli::Args;
+use sole::util::dist::{LogitDist, DIST_SEED};
 use sole::util::json::{obj, Json};
 use sole::util::rng::Rng;
 
@@ -104,10 +112,12 @@ fn main() {
     let router = builder.start().expect("router start");
     let client = router.client();
 
-    // pre-generate one block of normal rows per service; a throwaway
-    // registry build of the same spec reports which kernel arm the
-    // served instances dispatched to (construction is deterministic)
-    let mut rng = Rng::new(0x501E);
+    // pre-generate one block of rows per service from the shared
+    // Gaussian workload leg (util::dist — the accuracy harness samples
+    // the same distribution at the same σ); a throwaway registry build
+    // of the same spec reports which kernel arm the served instances
+    // dispatched to (construction is deterministic)
+    let mut rng = Rng::new(DIST_SEED);
     let lanes: Vec<(String, usize, String, Vec<f32>)> = specs
         .iter()
         .map(|spec| {
@@ -115,7 +125,7 @@ fn main() {
             let (_, op) = registry.build(spec).expect("registered spec");
             let dispatch = op.dispatch().map_or("-", |d| d.as_str()).to_string();
             let mut inputs = vec![0f32; 32 * item];
-            rng.fill_normal(&mut inputs, 0.0, 2.0);
+            LogitDist::Gaussian.fill_batch(&mut rng, item, &mut inputs);
             (spec.clone(), item, dispatch, inputs)
         })
         .collect();
@@ -168,6 +178,8 @@ fn main() {
             ("op", Json::Str(op)),
             ("spec", Json::Str(name.clone())),
             ("mode", Json::Str("prefill".to_string())),
+            ("workload", Json::Str(LogitDist::Gaussian.name().to_string())),
+            ("seed", Json::Int(DIST_SEED as i64)),
             ("item_len", Json::Int(*item as i64)),
             ("dispatch", Json::Str(dispatch.clone())),
             ("workers", Json::Int(router.workers(name).unwrap_or(0) as i64)),
@@ -226,6 +238,8 @@ fn main() {
         ("op", Json::Str("decode-attention".to_string())),
         ("spec", Json::Str(decode_spec.clone())),
         ("mode", Json::Str("decode".to_string())),
+        ("workload", Json::Str(LogitDist::Gaussian.name().to_string())),
+        ("seed", Json::Int(DIST_SEED as i64)),
         ("item_len", Json::Int(decode_item as i64)),
         ("dispatch", Json::Str(decode_dispatch)),
         ("workers", Json::Int(router.workers(&decode_spec).unwrap_or(0) as i64)),
@@ -312,6 +326,22 @@ fn main() {
                         Json::Str("median end-to-end latency (queue + exec), ms".to_string()),
                     ),
                     ("p99_ms", Json::Str("p99 end-to-end latency, ms".to_string())),
+                    (
+                        "workload",
+                        Json::Str(
+                            "util::dist logit distribution the inputs were sampled \
+                             from (shared with the accuracy harness)"
+                                .to_string(),
+                        ),
+                    ),
+                    (
+                        "seed",
+                        Json::Str(
+                            "base RNG seed (DIST_SEED); overload clients derive \
+                             seed + 1000 + client"
+                                .to_string(),
+                        ),
+                    ),
                 ]),
             ),
             (
@@ -401,9 +431,10 @@ fn overload_leg(
     for c in 0..n_clients {
         let addr = addr.clone();
         handles.push(std::thread::spawn(move || {
-            let mut rng = Rng::new(0xC0DE + c as u64);
+            // per-connection seed derived from the shared workload base
+            let mut rng = Rng::new(DIST_SEED + 1000 + c as u64);
             let mut row = vec![0f32; ITEM];
-            rng.fill_normal(&mut row, 0.0, 1.0);
+            LogitDist::Gaussian.fill_row(&mut rng, &mut row);
             let mut cl = NetClient::connect(&addr, Duration::from_secs(30)).expect("connect");
             let (mut done, mut shed) = (0u64, 0u64);
             for _ in 0..per_client {
@@ -460,6 +491,8 @@ fn overload_leg(
         ("op", Json::Str("slow-echo".to_string())),
         ("spec", Json::Str("slow/L32".to_string())),
         ("mode", Json::Str("overload".to_string())),
+        ("workload", Json::Str(LogitDist::Gaussian.name().to_string())),
+        ("seed", Json::Int(DIST_SEED as i64)),
         ("shed_policy", Json::Str(policy_label.to_string())),
         ("workers", Json::Int(1)),
         ("conn_threads", Json::Int(n_clients as i64)),

@@ -358,6 +358,63 @@ mod tests {
     }
 
     #[test]
+    fn ledger_conserves_under_concurrent_shard_writes() {
+        // eight writers hammer their own shards concurrently with a
+        // fixed per-thread script (shed every 10th, error every 25th
+        // accepted, complete the rest); the counters must conserve and
+        // the merged view must equal a sequential replay of the same
+        // multiset — the invariant the stream/decode/batching pools all
+        // lean on when they report through one Metrics instance
+        const WORKERS: usize = 8;
+        const PER: u64 = 400;
+        let m = Metrics::with_shards(WORKERS);
+        std::thread::scope(|s| {
+            for w in 0..WORKERS {
+                let m = &m;
+                s.spawn(move || {
+                    for i in 1..=PER {
+                        if i % 10 == 0 {
+                            m.record_shed();
+                        } else if i % 25 == 0 {
+                            m.record_accepted();
+                            m.record_error();
+                        } else {
+                            m.record_accepted();
+                            let q = Duration::from_micros(i * 3);
+                            let e = Duration::from_micros(i * 11);
+                            m.record_shard(w, q, e, 8, (i % 8 + 1) as usize);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(m.offered(), WORKERS as u64 * PER, "every scripted event is accounted");
+        assert_eq!(m.completed() + m.errors() + m.shed(), m.offered(), "conservation");
+        assert_eq!(m.in_flight(), 0, "everything accepted was resolved");
+
+        // the same multiset recorded sequentially into one shard: the
+        // merged histograms are exact, the Welford merge agrees to fp
+        let single = Metrics::with_shards(1);
+        for _ in 0..WORKERS {
+            for i in 1..=PER {
+                if i % 10 == 0 || i % 25 == 0 {
+                    continue;
+                }
+                let q = Duration::from_micros(i * 3);
+                let e = Duration::from_micros(i * 11);
+                single.record(q, e, 8, (i % 8 + 1) as usize);
+            }
+        }
+        assert_eq!(m.completed(), single.completed());
+        let (p50, p99, mean) = m.total_latency();
+        let (sp50, sp99, smean) = single.total_latency();
+        assert_eq!(p50, sp50, "histogram merge is exact under concurrency");
+        assert_eq!(p99, sp99);
+        assert!((mean - smean).abs() < 1e-12);
+        assert!((m.mean_batch() - single.mean_batch()).abs() < 1e-9);
+    }
+
+    #[test]
     fn zero_shards_clamps_to_one() {
         let m = Metrics::with_shards(0);
         assert_eq!(m.shard_count(), 1);

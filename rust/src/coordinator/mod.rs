@@ -21,15 +21,18 @@
 //!
 //! One `Coordinator` serves one backend at one item length; `router`
 //! (DESIGN.md §5.1) stacks many of them behind named services so a single
-//! process serves the paper's full mixed-op, mixed-shape workload, and
+//! process serves the paper's full mixed-op, mixed-shape workload,
 //! `session` adds the session-affine decode pool for stateful KV-cache
-//! ops (DESIGN.md §3.5) — the batching pool here is the prefill path.
+//! ops (DESIGN.md §3.5) — the batching pool here is the prefill path —
+//! and `stream` adds the row-affine chunk-streaming pool for
+//! reduction-free softmax ops (DESIGN.md §3.6), where L is unbounded.
 
 pub mod backend;
 pub mod batcher;
 pub mod metrics;
 pub mod router;
 pub mod session;
+pub mod stream;
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -46,6 +49,7 @@ pub use router::{
     ServiceSpec,
 };
 pub use session::{DecodeClient, DecodeService};
+pub use stream::{StreamClient, StreamReply, StreamService, StreamViolation};
 
 /// One inference request: a flat f32 item (e.g. one image or one row).
 pub struct Request {

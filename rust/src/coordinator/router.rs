@@ -22,7 +22,11 @@
 //! [`DecodeService`] pool instead of a batching coordinator (a stateless
 //! pool would hand every request a fresh, empty KV cache), and
 //! `RouterClient::infer_decode` routes `(service, session, step)`
-//! triples to the session's pinned lane.
+//! triples to the session's pinned lane.  Reduction-free streaming ops
+//! join through [`ServiceRouterBuilder::stream_service`]: a row-affine
+//! [`StreamService`] pool (DESIGN.md §3.6) that accepts a row chunk by
+//! chunk, with `RouterClient::stream_chunk` routing
+//! `(service, row, chunk)` triples to the row's pinned lane.
 
 use std::collections::BTreeMap;
 use std::sync::{mpsc, Arc};
@@ -34,6 +38,7 @@ use super::backend::{Backend, OpBackend};
 use super::batcher::BatchPolicy;
 use super::metrics::Metrics;
 use super::session::{DecodeClient, DecodeService};
+use super::stream::{StreamClient, StreamReply, StreamService};
 use super::{Client, Coordinator, Response, TrySubmit};
 use crate::ops::{Op, OpRegistry};
 
@@ -56,12 +61,22 @@ struct DecodeSpec {
     idle_ttl: Option<Duration>,
 }
 
+/// Declarative description of one stream service: a reduction-free op
+/// served chunk by chunk with row affinity instead of a batching pool.
+struct StreamSpec {
+    name: String,
+    op: Arc<dyn Op>,
+    weight: usize,
+    idle_ttl: Option<Duration>,
+}
+
 /// Builder: register services, then `start()` the per-service pools.
 pub struct ServiceRouterBuilder {
     total_workers: usize,
     default_policy: BatchPolicy,
     specs: Vec<ServiceSpec>,
     decode_specs: Vec<DecodeSpec>,
+    stream_specs: Vec<StreamSpec>,
 }
 
 impl ServiceRouterBuilder {
@@ -147,12 +162,46 @@ impl ServiceRouterBuilder {
         Ok(self)
     }
 
+    /// Register a stream service from a registry spec string
+    /// (`consmax/L128`): the op must be reduction-free, and the service
+    /// draws `weight` shares of the worker budget as row-pinned lanes
+    /// rather than a batching pool.  The same spec may also be
+    /// registered as a batching `op_service` under its own name — the
+    /// stream service is named `<spec>/stream` so both paths coexist.
+    pub fn stream_service(
+        self,
+        registry: &OpRegistry,
+        spec: &str,
+        weight: usize,
+    ) -> Result<Self> {
+        self.stream_service_with_ttl(registry, spec, weight, None)
+    }
+
+    /// `stream_service` with an idle-row TTL: rows abandoned mid-stream
+    /// for `idle_ttl` are evicted by their lane (see `StreamService`).
+    pub fn stream_service_with_ttl(
+        mut self,
+        registry: &OpRegistry,
+        spec: &str,
+        weight: usize,
+        idle_ttl: Option<Duration>,
+    ) -> Result<Self> {
+        let (parsed, op) = registry.build(spec)?;
+        anyhow::ensure!(
+            op.reduction_free(),
+            "op '{parsed}' carries a reduction; register it with op_service, not stream_service"
+        );
+        let name = format!("{parsed}/stream");
+        self.stream_specs.push(StreamSpec { name, op, weight, idle_ttl });
+        Ok(self)
+    }
+
     /// Split the worker budget and start every service's pool —
     /// batching coordinators and session-affine decode pools draw from
     /// the same budget.
     pub fn start(self) -> Result<ServiceRouter> {
         anyhow::ensure!(
-            !self.specs.is_empty() || !self.decode_specs.is_empty(),
+            !self.specs.is_empty() || !self.decode_specs.is_empty() || !self.stream_specs.is_empty(),
             "router needs at least one service"
         );
         // validate every name before spawning anything: a failure after
@@ -164,6 +213,7 @@ impl ServiceRouterBuilder {
                 .iter()
                 .map(|s| &s.name)
                 .chain(self.decode_specs.iter().map(|d| &d.name))
+                .chain(self.stream_specs.iter().map(|t| &t.name))
             {
                 anyhow::ensure!(!name.is_empty(), "service name must be non-empty");
                 anyhow::ensure!(seen.insert(name), "duplicate service name '{name}'");
@@ -174,9 +224,11 @@ impl ServiceRouterBuilder {
             .iter()
             .map(|s| s.weight.max(1))
             .chain(self.decode_specs.iter().map(|d| d.weight.max(1)))
+            .chain(self.stream_specs.iter().map(|t| t.weight.max(1)))
             .collect();
         let shares = split_workers(self.total_workers, &weights);
-        let (batch_shares, decode_shares) = shares.split_at(self.specs.len());
+        let (batch_shares, rest) = shares.split_at(self.specs.len());
+        let (decode_shares, stream_shares) = rest.split_at(self.decode_specs.len());
         let mut services = BTreeMap::new();
         for (spec, &workers) in self.specs.into_iter().zip(batch_shares) {
             let coordinator = Coordinator::start(spec.backend, spec.policy, workers);
@@ -187,7 +239,12 @@ impl ServiceRouterBuilder {
             let service = DecodeService::start_with(spec.op, workers, spec.idle_ttl)?;
             decode.insert(spec.name, service);
         }
-        Ok(ServiceRouter { services, decode })
+        let mut stream = BTreeMap::new();
+        for (spec, &workers) in self.stream_specs.into_iter().zip(stream_shares) {
+            let service = StreamService::start_with(spec.op, workers, spec.idle_ttl)?;
+            stream.insert(spec.name, service);
+        }
+        Ok(ServiceRouter { services, decode, stream })
     }
 }
 
@@ -202,6 +259,7 @@ struct Service {
 pub struct ServiceRouter {
     services: BTreeMap<String, Service>,
     decode: BTreeMap<String, DecodeService>,
+    stream: BTreeMap<String, StreamService>,
 }
 
 impl ServiceRouter {
@@ -212,6 +270,7 @@ impl ServiceRouter {
             default_policy: BatchPolicy::default(),
             specs: Vec::new(),
             decode_specs: Vec::new(),
+            stream_specs: Vec::new(),
         }
     }
 
@@ -226,13 +285,19 @@ impl ServiceRouter {
         self.decode.keys().map(String::as_str).collect()
     }
 
-    /// This service's metrics (None for an unknown name); decode
-    /// services report through the same sharded type.
+    /// Registered stream service names, ascending.
+    pub fn stream_services(&self) -> Vec<&str> {
+        self.stream.keys().map(String::as_str).collect()
+    }
+
+    /// This service's metrics (None for an unknown name); decode and
+    /// stream services report through the same sharded type.
     pub fn metrics(&self, service: &str) -> Option<&Arc<Metrics>> {
         self.services
             .get(service)
             .map(|s| &s.coordinator.metrics)
             .or_else(|| self.decode.get(service).map(|d| &d.metrics))
+            .or_else(|| self.stream.get(service).map(|t| &t.metrics))
     }
 
     /// Workers serving this service right now (the initial budget split,
@@ -242,14 +307,17 @@ impl ServiceRouter {
             .get(service)
             .map(|s| s.coordinator.live_workers())
             .or_else(|| self.decode.get(service).map(|d| d.workers()))
+            .or_else(|| self.stream.get(service).map(|t| t.workers()))
     }
 
-    /// Requests parked in this service's queue (lanes summed for decode).
+    /// Requests parked in this service's queue (lanes summed for decode
+    /// and stream services).
     pub fn queue_depth(&self, service: &str) -> Option<usize> {
         self.services
             .get(service)
             .map(|s| s.coordinator.queue_depth())
             .or_else(|| self.decode.get(service).map(|d| d.queue_depth()))
+            .or_else(|| self.stream.get(service).map(|t| t.queue_depth()))
     }
 
     /// Accepted-but-unresolved requests for this service (queued or
@@ -269,6 +337,17 @@ impl ServiceRouter {
         self.decode.get(service).map(|d| d.live_sessions())
     }
 
+    /// Rows ever opened by a stream service (None for unknown or
+    /// non-stream services).
+    pub fn stream_rows(&self, service: &str) -> Option<u64> {
+        self.stream.get(service).map(|t| t.rows())
+    }
+
+    /// Rows currently open in a stream service.
+    pub fn open_rows(&self, service: &str) -> Option<u64> {
+        self.stream.get(service).map(|t| t.open_rows())
+    }
+
     /// Move one worker from `from` to `to` (both batching services —
     /// decode lanes are session-pinned and never resize).  `Ok(false)`
     /// means no move happened because `from` is at its floor of one
@@ -280,6 +359,8 @@ impl ServiceRouter {
             self.services.get(name).with_context(|| {
                 if self.decode.contains_key(name) {
                     format!("decode service '{name}' has session-pinned lanes; not rebalanceable")
+                } else if self.stream.contains_key(name) {
+                    format!("stream service '{name}' has row-pinned lanes; not rebalanceable")
                 } else {
                     format!("unknown batching service '{name}'")
                 }
@@ -316,6 +397,15 @@ impl ServiceRouter {
                 d.live_sessions()
             ));
         }
+        for (name, t) in &self.stream {
+            parts.push(format!(
+                "{name}[w={} q={} if={} open={}]",
+                t.workers(),
+                t.queue_depth(),
+                t.metrics.in_flight(),
+                t.open_rows()
+            ));
+        }
         parts.join(" ")
     }
 
@@ -331,6 +421,9 @@ impl ServiceRouter {
             decode_routes: Arc::new(
                 self.decode.iter().map(|(name, d)| (name.clone(), d.client())).collect(),
             ),
+            stream_routes: Arc::new(
+                self.stream.iter().map(|(name, t)| (name.clone(), t.client())).collect(),
+            ),
         }
     }
 
@@ -339,6 +432,7 @@ impl ServiceRouter {
             .values()
             .map(|s| &*s.coordinator.metrics)
             .chain(self.decode.values().map(|d| &*d.metrics))
+            .chain(self.stream.values().map(|t| &*t.metrics))
     }
 
     /// Cross-service merged metrics line (batching + decode).
@@ -371,6 +465,15 @@ impl ServiceRouter {
             );
             out.push_str(&line);
         }
+        for (name, t) in &self.stream {
+            let line = format!(
+                "{name} [{}w stream, {} rows]: {}\n",
+                t.workers(),
+                t.rows(),
+                t.metrics.summary()
+            );
+            out.push_str(&line);
+        }
         out.push_str(&format!("merged: {}", self.merged_summary()));
         out
     }
@@ -384,6 +487,9 @@ impl ServiceRouter {
         for (_, d) in self.decode {
             d.shutdown();
         }
+        for (_, t) in self.stream {
+            t.shutdown();
+        }
     }
 }
 
@@ -395,6 +501,7 @@ impl ServiceRouter {
 pub struct RouterClient {
     routes: Arc<BTreeMap<String, Client>>,
     decode_routes: Arc<BTreeMap<String, DecodeClient>>,
+    stream_routes: Arc<BTreeMap<String, StreamClient>>,
 }
 
 impl RouterClient {
@@ -409,6 +516,13 @@ impl RouterClient {
         self.decode_routes.get(service).with_context(|| {
             let known: Vec<&str> = self.decode_routes.keys().map(String::as_str).collect();
             format!("unknown decode service '{service}' (registered: {})", known.join(", "))
+        })
+    }
+
+    fn stream_route(&self, service: &str) -> Result<&StreamClient> {
+        self.stream_routes.get(service).with_context(|| {
+            let known: Vec<&str> = self.stream_routes.keys().map(String::as_str).collect();
+            format!("unknown stream service '{service}' (registered: {})", known.join(", "))
         })
     }
 
@@ -473,6 +587,55 @@ impl RouterClient {
         self.decode_route(service)?
             .end_session_wait(session)
             .with_context(|| format!("decode service '{service}'"))
+    }
+
+    /// Registered stream service names, ascending.
+    pub fn stream_services(&self) -> Vec<&str> {
+        self.stream_routes.keys().map(String::as_str).collect()
+    }
+
+    /// Submit one chunk of `row` to a stream `service`; the chunk lands
+    /// on the row's pinned lane (see `StreamClient::submit`).
+    pub fn submit_stream(
+        &self,
+        service: &str,
+        row: u64,
+        begin: bool,
+        finish: bool,
+        chunk: Vec<f32>,
+    ) -> Result<mpsc::Receiver<StreamReply>> {
+        self.stream_route(service)?
+            .submit(row, begin, finish, chunk)
+            .with_context(|| format!("stream service '{service}'"))
+    }
+
+    /// Blocking one-chunk stream convenience; the `Ok` reply still
+    /// carries the typed violation arm.
+    pub fn stream_chunk(
+        &self,
+        service: &str,
+        row: u64,
+        begin: bool,
+        finish: bool,
+        chunk: Vec<f32>,
+    ) -> Result<StreamReply> {
+        self.stream_route(service)?
+            .chunk(row, begin, finish, chunk)
+            .with_context(|| format!("stream service '{service}'"))
+    }
+
+    /// Stream a whole row through `service` in `chunk`-sized pieces and
+    /// return the concatenated outputs (see `StreamClient::stream_row`).
+    pub fn stream_row(
+        &self,
+        service: &str,
+        row: u64,
+        input: &[f32],
+        chunk: usize,
+    ) -> Result<Vec<f32>> {
+        self.stream_route(service)?
+            .stream_row(row, input, chunk)
+            .with_context(|| format!("stream service '{service}'"))
     }
 }
 
@@ -721,6 +884,73 @@ mod tests {
                 .unwrap_err()
         );
         assert!(err.contains("stateful"), "{err}");
+        router.shutdown();
+    }
+
+    #[test]
+    fn stream_rows_ride_the_router() {
+        let registry = OpRegistry::builtin();
+        let l = 64usize;
+        let router = ServiceRouter::builder(3)
+            .default_policy(quick_policy())
+            .op_service(&registry, "consmax/L64", vec![1, 4])
+            .unwrap()
+            .stream_service(&registry, "consmax/L64", 1)
+            .unwrap()
+            .start()
+            .unwrap();
+        // the stream path coexists with the batching path for the same
+        // spec under its suffixed name
+        assert_eq!(router.services(), vec!["consmax/L64"]);
+        assert_eq!(router.stream_services(), vec!["consmax/L64/stream"]);
+        assert!(router.workers("consmax/L64/stream").unwrap() >= 1);
+        let cl = router.client();
+        let mut rng = crate::util::rng::Rng::new(0x2010);
+        let mut x = vec![0f32; l];
+        rng.fill_normal(&mut x, 0.0, 2.0);
+        // chunked streaming matches the whole-row batching service bitwise
+        let want = cl.infer("consmax/L64", x.clone()).unwrap().output;
+        let got = cl.stream_row("consmax/L64/stream", 0, &x, 7).unwrap();
+        assert_eq!(got, want);
+        // a typed violation comes back through the reply, not an error
+        let reply = cl.stream_chunk("consmax/L64/stream", 99, false, false, vec![0.5; 4]).unwrap();
+        assert!(reply.is_err());
+        assert_eq!(router.stream_rows("consmax/L64/stream"), Some(1));
+        assert_eq!(router.open_rows("consmax/L64/stream"), Some(0));
+        assert_eq!(router.stream_rows("consmax/L64"), None);
+        // stream traffic shows up in the reports
+        let s = router.summary();
+        assert!(s.contains("consmax/L64/stream"), "{s}");
+        assert!(s.contains("rows"), "{s}");
+        assert!(router.load_report().contains("consmax/L64/stream[w="), "{}", router.load_report());
+        router.shutdown();
+    }
+
+    #[test]
+    fn stream_registration_rejects_misuse() {
+        let registry = OpRegistry::builtin();
+        // a reduction-bearing op cannot be a stream service
+        let err = format!(
+            "{:#}",
+            ServiceRouter::builder(2).stream_service(&registry, "e2softmax/L8", 1).unwrap_err()
+        );
+        assert!(err.contains("carries a reduction"), "{err}");
+        // a stream-only router is a valid router
+        let router = ServiceRouter::builder(2)
+            .stream_service(&registry, "gn-softmax/L32", 1)
+            .unwrap()
+            .start()
+            .unwrap();
+        let cl = router.client();
+        assert!(cl.services().is_empty());
+        // routing errors name the stream registry, not the batching one
+        let err = format!("{:#}", cl.stream_row("nope", 0, &[0.5; 8], 4).unwrap_err());
+        assert!(err.contains("unknown stream service"), "{err}");
+        assert!(err.contains("gn-softmax/L32/stream"), "{err}");
+        // stream lanes are row-pinned: not a rebalance target
+        let err =
+            format!("{:#}", router.rebalance_one("gn-softmax/L32/stream", "x").unwrap_err());
+        assert!(err.contains("row-pinned"), "{err}");
         router.shutdown();
     }
 

@@ -1,0 +1,560 @@
+//! StreamService: chunked row streaming for reduction-free ops
+//! (DESIGN.md §3.6).
+//!
+//! The batching `Coordinator` and the session-affine `DecodeService`
+//! both require a *whole item* per request — for a softmax that means
+//! buffering the full row before dispatch, which caps L at what a client
+//! is willing to hold.  A reduction-free op ([`Op::reduction_free`]:
+//! `consmax`, `gn-softmax`) never looks across elements, so a row can be
+//! processed online, chunk by chunk, with L unbounded.  This service is
+//! the lane that does it:
+//!
+//! * **Row state lives in the worker, never the op.**  Mirroring
+//!   `DecodeService`'s session map, each worker owns a
+//!   `row id -> OpState` map of *open rows* and hands the state mutably
+//!   to the streaming trio (`begin_row`/`push_chunk`/`finish_row`) one
+//!   chunk at a time.
+//! * **Row affinity.**  A row's chunks must execute in order against the
+//!   same state, so a row is pinned to lane `row % n_workers` and each
+//!   lane is a FIFO owned by one worker — per-row program order with no
+//!   cross-lane coordination, different rows in parallel.
+//! * **Typed protocol violations.**  A chunk for a row that is not open,
+//!   a second `begin` for an open row, or an empty chunk is a *client*
+//!   error, not a server fault: the reply channel carries
+//!   `Result<Response, StreamViolation>` so the front door can answer
+//!   with a typed `ErrCode` and keep the connection alive.  Violations
+//!   count as errors in the conservation ledger; they never disturb the
+//!   row state they bounced off.
+//!
+//! Open rows are bounded the same two ways as decode sessions: `finish`
+//! frees the state inline, and an **idle TTL** (`start_with`) evicts
+//! rows abandoned mid-stream — the owning lane sweeps its own map on
+//! wake ticks.  An evicted (or finished) row id is reusable: the next
+//! `begin` under it opens a fresh row.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::metrics::Metrics;
+use super::Response;
+use crate::ops::{Op, PortType};
+
+/// A streaming-protocol violation: the client broke the chunk sequence
+/// contract.  The request is refused with a typed reply; server state
+/// (the row map, the lane, the connection) is untouched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamViolation {
+    /// A non-`begin` chunk named a row that is not open (never begun,
+    /// already finished, or evicted by the idle TTL).
+    RowNotOpen,
+    /// A `begin` chunk named a row that is already open.
+    RowAlreadyOpen,
+    /// The chunk carried no elements.
+    EmptyChunk,
+}
+
+impl StreamViolation {
+    /// Stable wire-facing description.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StreamViolation::RowNotOpen => "row is not open (begin it first)",
+            StreamViolation::RowAlreadyOpen => "row is already open",
+            StreamViolation::EmptyChunk => "chunk must carry at least one element",
+        }
+    }
+}
+
+impl std::fmt::Display for StreamViolation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::error::Error for StreamViolation {}
+
+/// What a chunk request resolves to: the chunk's outputs, or the typed
+/// violation the client committed.
+pub type StreamReply = std::result::Result<Response, StreamViolation>;
+
+/// One chunk request, already pinned to a lane.
+struct ChunkRequest {
+    id: u64,
+    row: u64,
+    begin: bool,
+    finish: bool,
+    data: Vec<f32>,
+    submitted: Instant,
+    resp: mpsc::Sender<StreamReply>,
+}
+
+/// One worker's private FIFO.
+struct Lane {
+    queue: Mutex<VecDeque<ChunkRequest>>,
+    available: Condvar,
+}
+
+/// An open row: its op state plus the last time a chunk touched it
+/// (drives idle-TTL eviction of abandoned streams).
+struct RowSlot {
+    state: crate::ops::OpState,
+    last_used: Instant,
+}
+
+/// The row-affine chunk-streaming pool for one reduction-free op.
+pub struct StreamService {
+    lanes: Arc<Vec<Arc<Lane>>>,
+    workers: Vec<JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+    /// Sharded latency/throughput counters, one shard per lane.
+    pub metrics: Arc<Metrics>,
+    next_id: Arc<AtomicU64>,
+    rows: Arc<AtomicU64>,
+    open: Arc<AtomicU64>,
+}
+
+impl StreamService {
+    /// Start `n_workers` lanes with no idle eviction (abandoned rows live
+    /// until shutdown).
+    pub fn start(op: Arc<dyn Op>, n_workers: usize) -> Result<StreamService> {
+        StreamService::start_with(op, n_workers, None)
+    }
+
+    /// Start `n_workers` lanes over a shared reduction-free op.  Refuses
+    /// ops that carry a reduction (they belong in a batching
+    /// `Coordinator`) and quantized outer ports, mirroring `OpBackend`.
+    /// With `idle_ttl` set, a row taking no chunk for that long is
+    /// evicted by its lane's periodic sweep (granularity: the 50ms wake
+    /// tick).
+    pub fn start_with(
+        op: Arc<dyn Op>,
+        n_workers: usize,
+        idle_ttl: Option<Duration>,
+    ) -> Result<StreamService> {
+        anyhow::ensure!(
+            op.reduction_free(),
+            "op '{}' is not reduction-free; serve it through a Coordinator over an OpBackend",
+            op.name()
+        );
+        anyhow::ensure!(
+            !op.stateful(),
+            "op '{}' is stateful; register it with decode_service, not stream_service",
+            op.name()
+        );
+        anyhow::ensure!(
+            op.in_port() == PortType::F32 && op.out_port() == PortType::F32,
+            "op '{}' exposes a {} -> {} port pair; stream edges are f32",
+            op.name(),
+            op.in_port(),
+            op.out_port()
+        );
+        let n_workers = n_workers.max(1);
+        let lanes: Arc<Vec<Arc<Lane>>> = Arc::new(
+            (0..n_workers)
+                .map(|_| {
+                    Arc::new(Lane { queue: Mutex::new(VecDeque::new()), available: Condvar::new() })
+                })
+                .collect(),
+        );
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(Metrics::with_shards(n_workers));
+        let rows = Arc::new(AtomicU64::new(0));
+        let open = Arc::new(AtomicU64::new(0));
+        let mut workers = Vec::new();
+        for (wid, lane) in lanes.iter().enumerate() {
+            let lane = lane.clone();
+            let stop = shutdown.clone();
+            let op = op.clone();
+            let mt = metrics.clone();
+            let nr = rows.clone();
+            let lv = open.clone();
+            workers.push(std::thread::spawn(move || {
+                lane_loop(wid, lane, stop, op, mt, nr, lv, idle_ttl)
+            }));
+        }
+        Ok(StreamService {
+            lanes,
+            workers,
+            shutdown,
+            metrics,
+            next_id: Arc::new(AtomicU64::new(0)),
+            rows,
+            open,
+        })
+    }
+
+    /// A cloneable submission handle.
+    pub fn client(&self) -> StreamClient {
+        StreamClient {
+            lanes: self.lanes.clone(),
+            shutdown: self.shutdown.clone(),
+            next_id: self.next_id.clone(),
+            metrics: self.metrics.clone(),
+        }
+    }
+
+    /// Number of lanes (= workers = metrics shards).
+    pub fn workers(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Rows ever opened (a reused id after finish/eviction counts again).
+    pub fn rows(&self) -> u64 {
+        self.rows.load(Ordering::Relaxed)
+    }
+
+    /// Rows currently open across all lanes (begun minus
+    /// finished/evicted) — the gauge the idle TTL bounds.
+    pub fn open_rows(&self) -> u64 {
+        self.open.load(Ordering::Relaxed)
+    }
+
+    /// Chunks parked across all lanes right now (pressure snapshot for
+    /// the shedder).
+    pub fn queue_depth(&self) -> usize {
+        self.lanes.iter().map(|l| l.queue.lock().unwrap().len()).sum()
+    }
+
+    /// Graceful shutdown: drains every lane — each accepted chunk is
+    /// answered (or observes a send-side drop on a failed chunk) before
+    /// the workers exit, mirroring `DecodeService::shutdown`.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        for lane in self.lanes.iter() {
+            lane.available.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Submission handle: routes each chunk to its row's pinned lane.
+#[derive(Clone)]
+pub struct StreamClient {
+    lanes: Arc<Vec<Arc<Lane>>>,
+    shutdown: Arc<AtomicBool>,
+    next_id: Arc<AtomicU64>,
+    metrics: Arc<Metrics>,
+}
+
+impl StreamClient {
+    /// Submit one chunk for `row`; returns the receiver for its reply.
+    /// `begin` opens the row (it must not be open), `finish` closes it
+    /// after this chunk (both may be set: a single-chunk row).  Chunks
+    /// submitted for one row from one thread execute in submission order
+    /// — the lane is a FIFO owned by a single worker.  There is no
+    /// length check: streamed rows are L-unbounded by design.
+    pub fn submit(
+        &self,
+        row: u64,
+        begin: bool,
+        finish: bool,
+        data: Vec<f32>,
+    ) -> Result<mpsc::Receiver<StreamReply>> {
+        let lane = &self.lanes[(row % self.lanes.len() as u64) as usize];
+        let mut q = lane.queue.lock().unwrap();
+        // checked under the lane lock, as in DecodeClient::submit: the
+        // worker only exits once the flag is set AND its lane is empty
+        anyhow::ensure!(
+            !self.shutdown.load(Ordering::SeqCst),
+            "stream service is shutting down"
+        );
+        let (tx, rx) = mpsc::channel();
+        q.push_back(ChunkRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            row,
+            begin,
+            finish,
+            data,
+            submitted: Instant::now(),
+            resp: tx,
+        });
+        self.metrics.record_accepted();
+        drop(q);
+        lane.available.notify_one();
+        Ok(rx)
+    }
+
+    /// Blocking one-chunk convenience.
+    pub fn chunk(&self, row: u64, begin: bool, finish: bool, data: Vec<f32>) -> Result<StreamReply> {
+        Ok(self.submit(row, begin, finish, data)?.recv()?)
+    }
+
+    /// Stream a whole row through the service in `chunk`-sized pieces
+    /// and return the concatenated outputs — the convenience the
+    /// equivalence tests compare against `run_batch`.  A violation
+    /// (e.g. the row id is already open) surfaces as an error.
+    pub fn stream_row(&self, row: u64, input: &[f32], chunk: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(chunk > 0, "chunk size must be positive");
+        anyhow::ensure!(!input.is_empty(), "streamed rows must be non-empty");
+        let mut out = Vec::with_capacity(input.len());
+        let last = input.len().div_ceil(chunk) - 1;
+        for (i, piece) in input.chunks(chunk).enumerate() {
+            let reply = self.chunk(row, i == 0, i == last, piece.to_vec())?;
+            let resp = reply.map_err(|v| anyhow::anyhow!("stream protocol violation: {v}"))?;
+            out.extend_from_slice(&resp.output);
+        }
+        Ok(out)
+    }
+}
+
+/// Drop every row idle for `ttl` or longer, updating the open gauge.
+fn evict_idle(states: &mut HashMap<u64, RowSlot>, ttl: Duration, open: &AtomicU64) {
+    let before = states.len();
+    states.retain(|_, slot| slot.last_used.elapsed() < ttl);
+    let evicted = before - states.len();
+    if evicted > 0 {
+        open.fetch_sub(evicted as u64, Ordering::Relaxed);
+    }
+}
+
+/// One lane's worker: pops chunks in FIFO order and runs each against
+/// its row's state.  The row map is a plain local — only this thread
+/// ever touches the rows pinned here, which is also why idle-TTL sweeps
+/// run here rather than from any shared reaper thread.
+#[allow(clippy::too_many_arguments)]
+fn lane_loop(
+    wid: usize,
+    lane: Arc<Lane>,
+    shutdown: Arc<AtomicBool>,
+    op: Arc<dyn Op>,
+    metrics: Arc<Metrics>,
+    rows: Arc<AtomicU64>,
+    open: Arc<AtomicU64>,
+    idle_ttl: Option<Duration>,
+) {
+    let mut states: HashMap<u64, RowSlot> = HashMap::new();
+    // sweep at half the TTL (floored) so an abandoned row outlives its
+    // TTL by at most one sweep interval, busy lane or not
+    let sweep_every = idle_ttl.map(|t| (t / 2).max(Duration::from_millis(10)));
+    let mut last_sweep = Instant::now();
+    loop {
+        let req = {
+            let mut q = lane.queue.lock().unwrap();
+            loop {
+                if let Some(m) = q.pop_front() {
+                    break m;
+                }
+                if shutdown.load(Ordering::SeqCst) {
+                    return; // lane drained
+                }
+                let (guard, _t) =
+                    lane.available.wait_timeout(q, Duration::from_millis(50)).unwrap();
+                q = guard;
+                if let (Some(ttl), Some(every)) = (idle_ttl, sweep_every) {
+                    if last_sweep.elapsed() >= every {
+                        evict_idle(&mut states, ttl, &open);
+                        last_sweep = Instant::now();
+                    }
+                }
+            }
+        };
+        let violation = if req.data.is_empty() {
+            Some(StreamViolation::EmptyChunk)
+        } else if req.begin && states.contains_key(&req.row) {
+            Some(StreamViolation::RowAlreadyOpen)
+        } else if !req.begin && !states.contains_key(&req.row) {
+            Some(StreamViolation::RowNotOpen)
+        } else {
+            None
+        };
+        if let Some(v) = violation {
+            // a client-sequence error: typed reply, row state untouched
+            metrics.record_error();
+            let _ = req.resp.send(Err(v));
+        } else {
+            if req.begin {
+                rows.fetch_add(1, Ordering::Relaxed);
+                open.fetch_add(1, Ordering::Relaxed);
+                states
+                    .insert(req.row, RowSlot { state: op.begin_row(), last_used: Instant::now() });
+            }
+            let slot = states.get_mut(&req.row).expect("open row has a slot");
+            slot.last_used = Instant::now();
+            let mut output = Vec::with_capacity(req.data.len());
+            let t0 = Instant::now();
+            let result = op.push_chunk(&mut slot.state, &req.data, &mut output).and_then(|()| {
+                if req.finish {
+                    op.finish_row(&mut slot.state, &mut output)
+                } else {
+                    Ok(())
+                }
+            });
+            let exec = t0.elapsed();
+            match result {
+                Ok(()) => {
+                    if req.finish && states.remove(&req.row).is_some() {
+                        open.fetch_sub(1, Ordering::Relaxed);
+                    }
+                    let queue_time = t0.duration_since(req.submitted);
+                    metrics.record_shard(wid, queue_time, exec, 1, 1);
+                    let _ = req.resp.send(Ok(Response {
+                        id: req.id,
+                        output,
+                        queue_time,
+                        exec_time: exec,
+                        batch_size: 1,
+                    }));
+                }
+                Err(e) => {
+                    // a failed chunk is a server fault: the row is in an
+                    // unknown state, so drop it along with the sender
+                    if states.remove(&req.row).is_some() {
+                        open.fetch_sub(1, Ordering::Relaxed);
+                    }
+                    metrics.record_error();
+                    eprintln!("stream chunk failed (row {}): {e:#}", req.row);
+                }
+            }
+        }
+        if let (Some(ttl), Some(every)) = (idle_ttl, sweep_every) {
+            if last_sweep.elapsed() >= every {
+                evict_idle(&mut states, ttl, &open);
+                last_sweep = Instant::now();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{ConSmaxOp, E2SoftmaxOp, GnSoftmaxOp};
+    use crate::util::rng::Rng;
+
+    fn consmax_service(l: usize, workers: usize) -> StreamService {
+        StreamService::start(Arc::new(ConSmaxOp::try_new(l).unwrap()), workers).unwrap()
+    }
+
+    #[test]
+    fn rejects_reduction_bearing_ops() {
+        let op: Arc<dyn Op> = Arc::new(E2SoftmaxOp::try_new(8).unwrap());
+        let err = format!("{:#}", StreamService::start(op, 2).unwrap_err());
+        assert!(err.contains("not reduction-free"), "{err}");
+    }
+
+    #[test]
+    fn streamed_rows_match_run_batch_bitwise() {
+        let l = 256;
+        let svc = consmax_service(l, 2);
+        let cl = svc.client();
+        let op = ConSmaxOp::try_new(l).unwrap();
+        let mut scratch = op.make_scratch();
+        let mut rng = Rng::new(0x57E0);
+        for (row_id, &chunk) in [1usize, 7, 64, l].iter().enumerate() {
+            let mut x = vec![0f32; l];
+            rng.fill_normal(&mut x, 0.0, 2.0);
+            let mut want = vec![0f32; l];
+            op.run_batch(1, &x, &mut want, &mut scratch).unwrap();
+            let got = cl.stream_row(row_id as u64, &x, chunk).unwrap();
+            assert_eq!(got, want, "chunk={chunk}");
+        }
+        assert_eq!(svc.rows(), 4);
+        assert_eq!(svc.open_rows(), 0, "finished rows are freed");
+        assert_eq!(
+            svc.metrics.completed() + svc.metrics.errors(),
+            svc.metrics.accepted(),
+            "conservation over the streamed chunks"
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn interleaved_rows_on_one_client_stay_isolated() {
+        let l = 64;
+        let svc = consmax_service(l, 2);
+        let cl = svc.client();
+        let op = ConSmaxOp::try_new(l).unwrap();
+        let mut scratch = op.make_scratch();
+        let mut rng = Rng::new(0x57E1);
+        let mut x = [vec![0f32; l], vec![0f32; l]];
+        let mut want = [vec![0f32; l], vec![0f32; l]];
+        for r in 0..2 {
+            rng.fill_normal(&mut x[r], 0.0, 2.0);
+            op.run_batch(1, &x[r], &mut want[r], &mut scratch).unwrap();
+        }
+        // alternate 16-element chunks between the two rows
+        let mut got = [Vec::new(), Vec::new()];
+        let pieces: Vec<Vec<&[f32]>> = x.iter().map(|v| v.chunks(16).collect()).collect();
+        let n = pieces[0].len();
+        for i in 0..n {
+            for r in 0..2 {
+                let reply =
+                    cl.chunk(r as u64, i == 0, i == n - 1, pieces[r][i].to_vec()).unwrap();
+                got[r].extend_from_slice(&reply.unwrap().output);
+            }
+        }
+        assert_eq!(got[0], want[0]);
+        assert_eq!(got[1], want[1]);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn protocol_violations_are_typed_and_leave_the_lane_serving() {
+        let svc = consmax_service(16, 1);
+        let cl = svc.client();
+        // chunk for a row never begun
+        let r = cl.chunk(9, false, false, vec![0.5; 4]).unwrap();
+        assert_eq!(r.unwrap_err(), StreamViolation::RowNotOpen);
+        // begin twice
+        cl.chunk(9, true, false, vec![0.5; 4]).unwrap().unwrap();
+        let r = cl.chunk(9, true, false, vec![0.5; 4]).unwrap();
+        assert_eq!(r.unwrap_err(), StreamViolation::RowAlreadyOpen);
+        // empty chunk (flags do not excuse it)
+        let r = cl.chunk(9, false, true, Vec::new()).unwrap();
+        assert_eq!(r.unwrap_err(), StreamViolation::EmptyChunk);
+        // the row survived those bounces and still finishes cleanly
+        cl.chunk(9, false, true, vec![0.5; 4]).unwrap().unwrap();
+        // chunk after finish: the row is gone
+        let r = cl.chunk(9, false, false, vec![0.5; 4]).unwrap();
+        assert_eq!(r.unwrap_err(), StreamViolation::RowNotOpen);
+        assert_eq!(svc.metrics.errors(), 4);
+        assert_eq!(
+            svc.metrics.completed() + svc.metrics.errors(),
+            svc.metrics.accepted(),
+            "violations stay on the ledger"
+        );
+        assert_eq!(svc.open_rows(), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn idle_ttl_evicts_abandoned_rows_and_the_id_is_reusable() {
+        let op = Arc::new(GnSoftmaxOp::try_new(32).unwrap());
+        let svc = StreamService::start_with(op, 1, Some(Duration::from_millis(60))).unwrap();
+        let cl = svc.client();
+        cl.chunk(3, true, false, vec![0.5; 8]).unwrap().unwrap();
+        assert_eq!((svc.rows(), svc.open_rows()), (1, 1));
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while svc.open_rows() != 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(svc.open_rows(), 0, "abandoned row was not evicted");
+        // the evicted id is not open any more...
+        let r = cl.chunk(3, false, false, vec![0.5; 8]).unwrap();
+        assert_eq!(r.unwrap_err(), StreamViolation::RowNotOpen);
+        // ...and a fresh begin under it opens a new row
+        cl.chunk(3, true, true, vec![0.5; 8]).unwrap().unwrap();
+        assert_eq!(svc.rows(), 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn in_flight_chunks_survive_shutdown_and_new_ones_bounce() {
+        let svc = consmax_service(64, 2);
+        let cl = svc.client();
+        let rxs: Vec<_> =
+            (0..10).map(|row| cl.submit(row, true, true, vec![0.25; 16]).unwrap()).collect();
+        svc.shutdown();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv().unwrap_or_else(|e| panic!("chunk {i} dropped: {e}")).unwrap();
+            assert_eq!(r.output.len(), 16);
+        }
+        assert!(cl.submit(0, true, true, vec![0.25; 16]).is_err());
+    }
+}

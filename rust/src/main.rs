@@ -6,8 +6,10 @@
 //! sole serve [--artifacts DIR] [--model deit_t] [--variant fp32_sole] [--all-families]
 //!      [--ops <spec,...>] [--requests N] [--rate R] [--max-wait-ms W] [--workers K]
 //!      [--queue-cap N] [--decode <spec>] [--decode-steps N] [--sessions S]
-//! sole serve --listen <addr> [--ops ...] [--decode <spec>] [--session-ttl-ms T]
-//!      [--conn-threads C] [--shed-depth N] [--shed-p99-ms P] [--rebalance-ms R]
+//!      [--stream-ops <spec,...>]
+//! sole serve --listen <addr> [--ops ...] [--stream-ops ...] [--decode <spec>]
+//!      [--session-ttl-ms T] [--conn-threads C] [--shed-depth N] [--shed-p99-ms P]
+//!      [--rebalance-ms R]
 //! sole ops
 //! sole info [--artifacts DIR]
 //! ```
@@ -29,6 +31,13 @@
 //! `--sessions` interleaved KV-cache sessions for `--decode-steps`
 //! tokens each — the prefill services batch, the decode service pins
 //! each session to a lane (DESIGN.md §3.5).
+//!
+//! `--stream-ops consmax/L128,gn-softmax/L128` registers row-affine
+//! chunk-streaming services for reduction-free ops (DESIGN.md §3.6);
+//! each spec is served as `<spec>/stream` and accepts rows of unbounded
+//! length in chunks.  In the self-driven path the CLI streams one long
+//! demonstration row per service; under `--listen` clients drive them
+//! with the wire protocol's chunked-infer message.
 //!
 //! `--listen <addr>` swaps the self-driven workload for the TCP front
 //! door (DESIGN.md §5.3): the same software op-services are served to
@@ -67,6 +76,7 @@ fn main() -> Result<()> {
                  usage:\n  sole experiment <fig1a|fig3|fig6a|fig6b|table1|table2|table3|compress-error|ablation|all>\n\
                  \x20 sole serve [--model deit_t] [--variant fp32_sole] [--all-families] \
                  [--ops e2softmax/L128,attention/L128xD64] \
+                 [--stream-ops consmax/L128] \
                  [--requests 64] [--rate 8] [--workers 4]\n\
                  \x20 sole ops\n\
                  \x20 sole info",
@@ -165,13 +175,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         steps: args.opt_usize("decode-steps", 32)?,
         sessions: args.opt_usize("sessions", 4)?,
     };
+    // --stream-ops adds row-affine chunk-streaming services for
+    // reduction-free ops (software path only)
+    let stream_specs: Vec<String> = match args.opt("stream-ops") {
+        Some(raw) => raw.split(',').map(|s| s.trim().to_string()).collect(),
+        None => Vec::new(),
+    };
 
     // --listen replaces the self-driven workload with the TCP front door
     if let Some(addr) = args.opt("listen") {
-        return serve_listen(args, addr, &specs, &decode, workers, policy);
+        return serve_listen(args, addr, &specs, &stream_specs, &decode, workers, policy);
     }
 
-    let software_only = args.opt("ops").is_some() || decode.spec.is_some();
+    let software_only =
+        args.opt("ops").is_some() || decode.spec.is_some() || !stream_specs.is_empty();
     let have_artifacts = artifacts.join("manifest.json").exists();
     if !software_only && have_artifacts && cfg!(feature = "pjrt") {
         serve_artifact_families(args, &artifacts, n_requests, rate, workers, policy)
@@ -182,7 +199,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                  serving the software op-services instead"
             );
         }
-        serve_software_ops(&specs, &decode, n_requests, rate, workers, policy)
+        serve_software_ops(&specs, &stream_specs, &decode, n_requests, rate, workers, policy)
     }
 }
 
@@ -312,9 +329,12 @@ struct DecodeDrive {
 /// by default the paper's full mixed workload — through one router,
 /// requests interleaved round-robin across services.  With `--decode`,
 /// a session-affine decode service joins the same worker budget and is
-/// driven with interleaved KV-cache sessions after the prefill workload.
+/// driven with interleaved KV-cache sessions after the prefill workload;
+/// with `--stream-ops`, chunk-streaming services join it and each gets
+/// one long demonstration row streamed through.
 fn serve_software_ops(
     specs: &[String],
+    stream_specs: &[String],
     decode: &DecodeDrive,
     n_requests: usize,
     rate: f64,
@@ -333,6 +353,12 @@ fn serve_software_ops(
         let name = registry.parse_spec(spec)?.to_string();
         builder = builder.op_service(&registry, &name, vec![1, 4, 8, 16])?;
         names.push(name);
+    }
+    let mut stream_drives = Vec::with_capacity(stream_specs.len());
+    for spec in stream_specs {
+        let parsed = registry.parse_spec(spec)?;
+        builder = builder.stream_service(&registry, &parsed.to_string(), 1)?;
+        stream_drives.push((format!("{parsed}/stream"), parsed.len));
     }
     let mut decode_name = None;
     if let Some(spec) = &decode.spec {
@@ -405,6 +431,22 @@ fn serve_software_ops(
             n_steps as f64 / dwall
         );
     }
+
+    // stream demo: one row of 4x the registered L through each stream
+    // service, in 64-element chunks — showing L-unbounded streaming
+    for (row_id, (name, l)) in stream_drives.iter().enumerate() {
+        let mut row = vec![0f32; 4 * l];
+        rng.fill_normal(&mut row, 0.0, 2.0);
+        let s0 = Instant::now();
+        let out = client.stream_row(name, row_id as u64, &row, 64)?;
+        println!(
+            "streamed a {}-element row through {name} in {} chunks ({:.2}ms)",
+            row.len(),
+            row.len().div_ceil(64),
+            s0.elapsed().as_secs_f64() * 1e3
+        );
+        anyhow::ensure!(out.len() == row.len(), "stream output length mismatch for {name}");
+    }
     println!("{}", router.summary());
     router.shutdown();
     Ok(())
@@ -418,6 +460,7 @@ fn serve_listen(
     args: &Args,
     addr: &str,
     specs: &[String],
+    stream_specs: &[String],
     decode: &DecodeDrive,
     workers: usize,
     policy: BatchPolicy,
@@ -445,6 +488,13 @@ fn serve_listen(
         let name = registry.parse_spec(spec)?.to_string();
         builder = builder.decode_service_with_ttl(&registry, &name, 1, session_ttl)?;
         names.push(name);
+    }
+    for spec in stream_specs {
+        let parsed = registry.parse_spec(spec)?;
+        // --session-ttl-ms doubles as the idle-row TTL for stream rows
+        builder =
+            builder.stream_service_with_ttl(&registry, &parsed.to_string(), 1, session_ttl)?;
+        names.push(format!("{parsed}/stream"));
     }
     let router = builder.start()?;
 

@@ -44,7 +44,12 @@
 //! internal boundary on a quantized port, including a direct `ptf-u8`
 //! consumer), and the stateful `decode-attention` family ([`decode`]: a
 //! KV-cache op served through the session-affine decode service, never
-//! through `OpBackend`).  A shared conformance suite
+//! through `OpBackend`).  PR 10 adds the reduction-free streaming family
+//! ([`streaming`]: `consmax`, `gn-softmax` — elementwise softmax
+//! variants that declare [`Op::reduction_free`] and implement the
+//! chunked streaming trio [`Op::begin_row`] / [`Op::push_chunk`] /
+//! [`Op::finish_row`], served a row at a time by the stream service,
+//! DESIGN.md §3.6).  A shared conformance suite
 //! (`tests/op_conformance.rs`) pins each registered op bit-exact to its
 //! direct kernel.
 //!
@@ -82,6 +87,7 @@ pub mod pipeline;
 pub mod port;
 pub mod registry;
 pub mod spec;
+pub mod streaming;
 
 use anyhow::Result;
 
@@ -94,6 +100,7 @@ pub use pipeline::PipelineOp;
 pub use port::{check_batch_ports, DequantOp, PortMut, PortRef, PortType, StageBuf};
 pub use registry::OpRegistry;
 pub use spec::OpSpec;
+pub use streaming::{ConSmaxOp, GnSoftmaxOp};
 
 /// Opaque per-worker scratch arena.  A worker creates one per op via
 /// [`Op::make_scratch`] and hands it back on every `run_batch`, so ops
@@ -281,6 +288,53 @@ pub trait Op: Send + Sync {
         _state: &mut OpState,
     ) -> Result<()> {
         self.run_batch(rows, input, out, scratch)
+    }
+
+    /// Whether this op needs no row-wide reduction: every output element
+    /// is a function of its own input element alone (ConSmax replaces
+    /// the max/sum with learnable constants, GN-Softmax with a
+    /// calibration reference and a fixed shift).  Reduction-free ops
+    /// additionally implement the streaming trio ([`Op::begin_row`] /
+    /// [`Op::push_chunk`] / [`Op::finish_row`]), and the stream service
+    /// (`coordinator/stream.rs`, DESIGN.md §3.6) serves them a row at a
+    /// time in arbitrary chunks — the length of a streamed row is *not*
+    /// bounded by `item_len()` (that is the batch-path shape); the
+    /// contract is that chunked processing of an `item_len()`-length row
+    /// is bit-identical to [`Op::run_batch`] over it.  Defaults to
+    /// `false`; ops with a reduction (or a quantized port) never stream.
+    fn reduction_free(&self) -> bool {
+        false
+    }
+
+    /// Open fresh per-row streaming state ([`Op::reduction_free`] ops
+    /// only).  Like session state, row state lives in the serving layer
+    /// — the stream service's worker owns it, keyed by row id — never
+    /// inside the op.  Purely elementwise ops keep the default `()`.
+    fn begin_row(&self) -> OpState {
+        Box::new(())
+    }
+
+    /// Append the outputs for one chunk of an open row to `out`.  The
+    /// concatenation of every `push_chunk` output plus the
+    /// [`Op::finish_row`] tail, in order, is bit-identical to
+    /// `run_batch` over the whole row.  Chunks are non-empty; chunk
+    /// boundaries are arbitrary.  The default errors: ops that carry a
+    /// reduction cannot stream.
+    fn push_chunk(&self, _state: &mut OpState, _chunk: &[f32], _out: &mut Vec<f32>) -> Result<()> {
+        anyhow::bail!(
+            "op '{}' is not reduction-free; it cannot stream row chunks",
+            self.name()
+        )
+    }
+
+    /// Close an open row, appending any tail output to `out` (empty for
+    /// purely elementwise ops).  The default errors like
+    /// [`Op::push_chunk`].
+    fn finish_row(&self, _state: &mut OpState, _out: &mut Vec<f32>) -> Result<()> {
+        anyhow::bail!(
+            "op '{}' is not reduction-free; it cannot stream row chunks",
+            self.name()
+        )
     }
 }
 

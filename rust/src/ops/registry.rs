@@ -17,8 +17,9 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use super::{
-    attention, block, decode, AiLayerNormOp, E2SoftmaxOp, ExactLayerNormOp, ExactSoftmaxOp,
-    IbertLayerNormOp, IbertSoftmaxOp, Op, OpSpec, PipelineOp, PortType, SoftermaxOp,
+    attention, block, decode, AiLayerNormOp, ConSmaxOp, E2SoftmaxOp, ExactLayerNormOp,
+    ExactSoftmaxOp, GnSoftmaxOp, IbertLayerNormOp, IbertSoftmaxOp, Op, OpSpec, PipelineOp,
+    PortType, SoftermaxOp,
 };
 
 /// Constructor from a validated spec (the registry checks the dimension
@@ -86,8 +87,8 @@ impl OpRegistry {
     }
 
     /// Every in-tree operator: the paper pair, the exact baselines, the
-    /// prior-work comparators, the attention/block pipelines, and the
-    /// stateful decode family.
+    /// prior-work comparators, the reduction-free streaming family, the
+    /// attention/block pipelines, and the stateful decode family.
     pub fn builtin() -> OpRegistry {
         let mut r = OpRegistry::empty();
         // registering a literal name twice is a programmer error; the
@@ -118,6 +119,22 @@ impl OpRegistry {
             false,
             "Softermax (DAC'21) base-2 comparator, 8 fraction bits",
             Box::new(|spec: &OpSpec| Ok(Arc::new(SoftermaxOp::try_new(spec.len)?) as Arc<dyn Op>)),
+        );
+        add(
+            "consmax",
+            &[('L', 128)],
+            false,
+            "ConSmax reduction-free softmax (learnable beta/gamma frozen at the registered \
+             calibration) — streams row chunks through the stream service",
+            Box::new(|spec: &OpSpec| Ok(Arc::new(ConSmaxOp::try_new(spec.len)?) as Arc<dyn Op>)),
+        );
+        add(
+            "gn-softmax",
+            &[('L', 128)],
+            false,
+            "guaranteed-normalization softmax (power-of-two codes, row sum <= 1 by \
+             construction) — reduction-free, streams row chunks through the stream service",
+            Box::new(|spec: &OpSpec| Ok(Arc::new(GnSoftmaxOp::try_new(spec.len)?) as Arc<dyn Op>)),
         );
         add(
             "ibert-softmax",
@@ -393,8 +410,10 @@ mod tests {
                 "attention",
                 "attention-exact",
                 "block",
+                "consmax",
                 "decode-attention",
                 "e2softmax",
+                "gn-softmax",
                 "ibert-layernorm",
                 "ibert-softmax",
                 "layernorm-exact",
@@ -454,8 +473,8 @@ mod tests {
     #[test]
     fn unknown_op_error_lists_registered_names() {
         let r = OpRegistry::builtin();
-        let err = format!("{:#}", r.build("consmax/L64").unwrap_err());
-        assert!(err.contains("unknown op 'consmax'"), "{err}");
+        let err = format!("{:#}", r.build("flashmax/L64").unwrap_err());
+        assert!(err.contains("unknown op 'flashmax'"), "{err}");
         assert!(err.contains("e2softmax"), "{err}");
     }
 

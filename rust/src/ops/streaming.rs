@@ -1,0 +1,225 @@
+//! The reduction-free streaming softmax family as [`Op`]s: ConSmax
+//! (learnable β/γ, arxiv 2402.10930) and GN-Softmax (guaranteed
+//! normalization, arxiv 2604.23647).  These wrap the functional models
+//! in `softmax/consmax.rs` / `softmax/gnsoftmax.rs`.
+//!
+//! Both ops are elementwise, so besides the usual planar `run_batch`
+//! they implement the streaming trio (`begin_row` / `push_chunk` /
+//! `finish_row`) and declare [`Op::reduction_free`]: the stream service
+//! feeds them a row in arbitrary chunks and the concatenated outputs are
+//! bit-identical to the whole-row batch path.  The spec length `L` fixes
+//! the *batch-path* row shape (and the calibration γ / μ·S); streamed
+//! rows are not length-checked — that is the point of the family.
+
+use anyhow::Result;
+
+use super::{check_batch, Op, OpScratch, OpState};
+use crate::softmax::{ConSmax, GnSoftmax};
+
+/// ConSmax rows of length `l` (spec `consmax/L<l>`), the registered
+/// β/γ calibration of [`ConSmax::for_len`].
+pub struct ConSmaxOp {
+    l: usize,
+    sm: ConSmax,
+}
+
+impl ConSmaxOp {
+    /// Row length `l` at the registered calibration.
+    pub fn try_new(l: usize) -> Result<ConSmaxOp> {
+        anyhow::ensure!(l > 0, "consmax rows must be non-empty");
+        Ok(ConSmaxOp { l, sm: ConSmax::for_len(l) })
+    }
+
+    /// The wrapped kernel (accuracy harness access).
+    pub fn kernel(&self) -> &ConSmax {
+        &self.sm
+    }
+}
+
+impl Op for ConSmaxOp {
+    fn name(&self) -> &str {
+        "consmax"
+    }
+
+    fn dim(&self) -> char {
+        'L'
+    }
+
+    fn item_len(&self) -> usize {
+        self.l
+    }
+
+    fn run_batch(
+        &self,
+        rows: usize,
+        input: &[f32],
+        out: &mut [f32],
+        _scratch: &mut OpScratch,
+    ) -> Result<()> {
+        check_batch(self, rows, input, out)?;
+        if rows > 0 {
+            self.sm.forward_batch_f32(input, self.l, out);
+        }
+        Ok(())
+    }
+
+    fn reduction_free(&self) -> bool {
+        true
+    }
+
+    fn push_chunk(&self, _state: &mut OpState, chunk: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        let start = out.len();
+        out.resize(start + chunk.len(), 0.0);
+        self.sm.forward_chunk(chunk, &mut out[start..]);
+        Ok(())
+    }
+
+    fn finish_row(&self, _state: &mut OpState, _out: &mut Vec<f32>) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// GN-Softmax rows of length `l` (spec `gn-softmax/L<l>`), the
+/// registered μ/S calibration of [`GnSoftmax::for_len`].
+pub struct GnSoftmaxOp {
+    l: usize,
+    sm: GnSoftmax,
+}
+
+impl GnSoftmaxOp {
+    /// Row length `l` at the registered calibration.
+    pub fn try_new(l: usize) -> Result<GnSoftmaxOp> {
+        anyhow::ensure!(l > 0, "gn-softmax rows must be non-empty");
+        Ok(GnSoftmaxOp { l, sm: GnSoftmax::for_len(l) })
+    }
+
+    /// The wrapped kernel (accuracy harness access).
+    pub fn kernel(&self) -> &GnSoftmax {
+        &self.sm
+    }
+}
+
+impl Op for GnSoftmaxOp {
+    fn name(&self) -> &str {
+        "gn-softmax"
+    }
+
+    fn dim(&self) -> char {
+        'L'
+    }
+
+    fn item_len(&self) -> usize {
+        self.l
+    }
+
+    fn run_batch(
+        &self,
+        rows: usize,
+        input: &[f32],
+        out: &mut [f32],
+        _scratch: &mut OpScratch,
+    ) -> Result<()> {
+        check_batch(self, rows, input, out)?;
+        if rows > 0 {
+            self.sm.forward_batch_f32(input, self.l, out);
+        }
+        Ok(())
+    }
+
+    fn reduction_free(&self) -> bool {
+        true
+    }
+
+    fn push_chunk(&self, _state: &mut OpState, chunk: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        let start = out.len();
+        out.resize(start + chunk.len(), 0.0);
+        self.sm.forward_chunk(chunk, &mut out[start..]);
+        Ok(())
+    }
+
+    fn finish_row(&self, _state: &mut OpState, _out: &mut Vec<f32>) -> Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn ops() -> Vec<Box<dyn Op>> {
+        vec![
+            Box::new(ConSmaxOp::try_new(96).unwrap()),
+            Box::new(GnSoftmaxOp::try_new(96).unwrap()),
+        ]
+    }
+
+    #[test]
+    fn family_declares_reduction_free() {
+        for op in ops() {
+            assert!(op.reduction_free(), "{}", op.name());
+            assert!(!op.stateful(), "{}", op.name());
+            assert_eq!(op.out_len(), op.item_len(), "{}", op.name());
+        }
+    }
+
+    #[test]
+    fn streamed_chunks_match_run_batch_bitwise() {
+        let mut rng = Rng::new(0x57A3);
+        for op in ops() {
+            let l = op.item_len();
+            let mut x = vec![0f32; l];
+            rng.fill_normal(&mut x, 0.0, 2.0);
+            let mut whole = vec![0f32; l];
+            let mut scratch = op.make_scratch();
+            op.run_batch(1, &x, &mut whole, &mut scratch).unwrap();
+            for &chunk in &[1usize, 7, 64, l] {
+                let mut state = op.begin_row();
+                let mut cat = Vec::with_capacity(l);
+                for piece in x.chunks(chunk) {
+                    op.push_chunk(&mut state, piece, &mut cat).unwrap();
+                }
+                op.finish_row(&mut state, &mut cat).unwrap();
+                assert_eq!(cat, whole, "{} chunk={chunk}", op.name());
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_rows_are_not_bounded_by_the_spec_length() {
+        // the spec L pins the batch shape and calibration only; the
+        // stream path takes rows of any length
+        let mut rng = Rng::new(0x57A4);
+        for op in ops() {
+            let n = 3 * op.item_len() + 11;
+            let mut x = vec![0f32; n];
+            rng.fill_normal(&mut x, 0.0, 2.0);
+            let mut state = op.begin_row();
+            let mut out = Vec::new();
+            for piece in x.chunks(100) {
+                op.push_chunk(&mut state, piece, &mut out).unwrap();
+            }
+            op.finish_row(&mut state, &mut out).unwrap();
+            assert_eq!(out.len(), n, "{}", op.name());
+        }
+    }
+
+    #[test]
+    fn reduction_bearing_ops_refuse_to_stream() {
+        let op = crate::ops::E2SoftmaxOp::try_new(32).unwrap();
+        assert!(!op.reduction_free());
+        let mut state = op.begin_row();
+        let mut out = Vec::new();
+        let err = op.push_chunk(&mut state, &[0.0; 4], &mut out).unwrap_err();
+        assert!(format!("{err:#}").contains("not reduction-free"), "{err:#}");
+        assert!(op.finish_row(&mut state, &mut out).is_err());
+    }
+
+    #[test]
+    fn zero_rows_batch_is_a_no_op() {
+        for op in ops() {
+            let mut scratch = op.make_scratch();
+            op.run_batch(0, &[], &mut [], &mut scratch).unwrap();
+        }
+    }
+}

@@ -20,7 +20,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use super::wire::{self, FrameRead, Msg, Resp, WireError};
+use super::wire::{self, FrameRead, Msg, Resp, WireError, STREAM_BEGIN, STREAM_FINISH};
 
 /// A served response: the output plus server-side timing.
 #[derive(Debug, Clone)]
@@ -100,6 +100,61 @@ impl NetClient {
     pub fn end_session(&mut self, service: &str, session: u64) -> Result<Reply> {
         self.send(&Msg::EndSession { service: service.to_string(), session })?;
         self.recv_reply()
+    }
+
+    /// Queue one chunk of `row` for a stream service without waiting
+    /// for its reply (pipelining; replies come back in send order).
+    pub fn send_stream_chunk(
+        &mut self,
+        service: &str,
+        row: u64,
+        begin: bool,
+        finish: bool,
+        chunk: &[f32],
+    ) -> Result<()> {
+        let flags = if begin { STREAM_BEGIN } else { 0 } | if finish { STREAM_FINISH } else { 0 };
+        self.send(&Msg::Stream { service: service.to_string(), row, flags, chunk: chunk.to_vec() })
+    }
+
+    /// One blocking stream-chunk round-trip.
+    pub fn stream_chunk(
+        &mut self,
+        service: &str,
+        row: u64,
+        begin: bool,
+        finish: bool,
+        chunk: &[f32],
+    ) -> Result<Reply> {
+        self.send_stream_chunk(service, row, begin, finish, chunk)?;
+        self.recv_reply()
+    }
+
+    /// Stream a whole row through a stream service in `chunk`-sized
+    /// pieces and return the concatenated outputs.  Because each chunk
+    /// travels in its own frame, `input` may be far longer than the
+    /// service's registered `L` (or than one frame could carry).  Any
+    /// typed rejection mid-row is returned as an error naming the code.
+    pub fn stream_row(
+        &mut self,
+        service: &str,
+        row: u64,
+        input: &[f32],
+        chunk: usize,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(chunk > 0, "chunk size must be positive");
+        anyhow::ensure!(!input.is_empty(), "cannot stream an empty row");
+        let last = input.len().div_ceil(chunk) - 1;
+        let mut out = Vec::with_capacity(input.len());
+        for (i, piece) in input.chunks(chunk).enumerate() {
+            match self.stream_chunk(service, row, i == 0, i == last, piece)? {
+                Reply::Output(r) => out.extend_from_slice(&r.output),
+                Reply::Rejected(e) => {
+                    return Err(anyhow::anyhow!("chunk {i} of row {row} rejected: {e}"));
+                }
+                Reply::Text(s) => anyhow::bail!("chunk {i} of row {row} got text reply: {s}"),
+            }
+        }
+        Ok(out)
     }
 
     /// Fetch the server's live status report.

@@ -24,6 +24,10 @@
 //! answered by exactly one response frame (output or typed error), and
 //! the router-side ledger `offered == completed + errors + shed` is
 //! checked in the integration tests with real sockets in the loop.
+//! Chunked streaming ([`Msg::Stream`]) keeps the same one-frame-in /
+//! one-frame-out discipline — each chunk is answered by its own output
+//! or typed [`ErrCode::StreamProtocol`] error — so a row of unbounded
+//! length never needs an unbounded frame.
 //!
 //! Everything is std::thread + blocking sockets, consistent with the
 //! coordinator's design (no async runtime in the vendor set); a fixed
@@ -48,7 +52,7 @@ use crate::coordinator::{RouterClient, ServiceRouter, TrySubmit};
 
 pub use client::{NetClient, NetResponse, Reply};
 pub use control::{plan_move, AdmissionConfig, RebalanceConfig, ShedReason};
-pub use wire::{ErrCode, WireError};
+pub use wire::{ErrCode, WireError, STREAM_BEGIN, STREAM_FINISH};
 
 use control::{ControlPlane, Shedder};
 use wire::{Msg, Resp};
@@ -444,6 +448,34 @@ fn dispatch(msg: Msg, inner: &Inner) -> Resp {
             match inner.client.end_session(&service, session) {
                 Ok(r) => response_to_wire(&r),
                 Err(e) => Resp::Error(WireError::new(ErrCode::Internal, format!("{e:#}"))),
+            }
+        }
+        Msg::Stream { service, row, flags, chunk } => {
+            let names = inner.client.stream_services();
+            if !names.contains(&service.as_str()) {
+                return Resp::Error(WireError::new(
+                    ErrCode::UnknownService,
+                    format!("no stream service '{service}' (registered: {})", names.join(", ")),
+                ));
+            }
+            // shed happens before the chunk reaches the lane, so the
+            // row's server-side state is untouched and the client can
+            // resend the same chunk after backing off
+            if let Err(reason) = inner.shedder.admit(&service) {
+                if let Some(m) = inner.router.metrics(&service) {
+                    m.record_shed();
+                }
+                return Resp::Error(WireError::new(ErrCode::Shed, reason.to_string()));
+            }
+            let begin = flags & wire::STREAM_BEGIN != 0;
+            let finish = flags & wire::STREAM_FINISH != 0;
+            match inner.client.stream_chunk(&service, row, begin, finish, chunk) {
+                Ok(Ok(r)) => response_to_wire(&r),
+                Ok(Err(v)) => Resp::Error(WireError::new(
+                    ErrCode::StreamProtocol,
+                    format!("row {row}: {}", v.as_str()),
+                )),
+                Err(e) => Resp::Error(WireError::new(ErrCode::ShuttingDown, format!("{e:#}"))),
             }
         }
         Msg::Status => Resp::Text(format!(

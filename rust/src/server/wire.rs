@@ -36,6 +36,12 @@ const MSG_DECODE: u8 = 2;
 const MSG_END_SESSION: u8 = 3;
 const MSG_STATUS: u8 = 4;
 const MSG_SHUTDOWN: u8 = 5;
+const MSG_STREAM: u8 = 6;
+
+/// Flag bit on a stream chunk: this chunk opens its row.
+pub const STREAM_BEGIN: u8 = 1;
+/// Flag bit on a stream chunk: this chunk closes its row.
+pub const STREAM_FINISH: u8 = 2;
 
 const RESP_OUTPUT: u8 = 0x80;
 const RESP_ERROR: u8 = 0x81;
@@ -63,6 +69,11 @@ pub enum ErrCode {
     /// The declared frame length exceeds the server's cap; the
     /// connection is closed after this error.
     FrameTooLarge = 7,
+    /// A chunk-streaming rule was broken (chunk on a row that is not
+    /// open, re-begin of an open row, empty chunk).  The connection and
+    /// the row-id space stay usable; only the offending chunk is
+    /// rejected.
+    StreamProtocol = 8,
 }
 
 impl ErrCode {
@@ -75,6 +86,7 @@ impl ErrCode {
             5 => Some(ErrCode::ShuttingDown),
             6 => Some(ErrCode::Internal),
             7 => Some(ErrCode::FrameTooLarge),
+            8 => Some(ErrCode::StreamProtocol),
             _ => None,
         }
     }
@@ -88,6 +100,7 @@ impl ErrCode {
             ErrCode::ShuttingDown => "shutting-down",
             ErrCode::Internal => "internal",
             ErrCode::FrameTooLarge => "frame-too-large",
+            ErrCode::StreamProtocol => "stream-protocol",
         }
     }
 }
@@ -128,6 +141,12 @@ pub enum Msg {
     Decode { service: String, session: u64, input: Vec<f32> },
     /// Free a decode session's state explicitly.
     EndSession { service: String, session: u64 },
+    /// One chunk of one row for a stream service.  `flags` is a bitmask
+    /// of [`STREAM_BEGIN`] / [`STREAM_FINISH`]; rows are keyed by the
+    /// client-chosen `row` id, so chunks of different rows may
+    /// interleave on one connection.  Because each chunk is its own
+    /// frame, the row length is unbounded by [`MAX_FRAME`].
+    Stream { service: String, row: u64, flags: u8, chunk: Vec<f32> },
     /// Ask for the live status report.
     Status,
     /// Ask the server to shut down gracefully.
@@ -261,6 +280,13 @@ pub fn encode_msg(msg: &Msg) -> Vec<u8> {
             put_name(&mut out, service);
             out.extend_from_slice(&session.to_le_bytes());
         }
+        Msg::Stream { service, row, flags, chunk } => {
+            out.push(MSG_STREAM);
+            put_name(&mut out, service);
+            out.extend_from_slice(&row.to_le_bytes());
+            out.push(*flags);
+            put_f32s(&mut out, chunk);
+        }
         Msg::Status => out.push(MSG_STATUS),
         Msg::Shutdown => out.push(MSG_SHUTDOWN),
     }
@@ -274,6 +300,18 @@ pub fn decode_msg(body: &[u8]) -> Result<Msg, WireError> {
         MSG_INFER => Msg::Infer { service: c.name()?, input: c.f32s()? },
         MSG_DECODE => Msg::Decode { service: c.name()?, session: c.u64()?, input: c.f32s()? },
         MSG_END_SESSION => Msg::EndSession { service: c.name()?, session: c.u64()? },
+        MSG_STREAM => {
+            let service = c.name()?;
+            let row = c.u64()?;
+            let flags = c.u8()?;
+            if flags & !(STREAM_BEGIN | STREAM_FINISH) != 0 {
+                return Err(WireError::new(
+                    ErrCode::Malformed,
+                    format!("unknown stream flags {flags:#04x}"),
+                ));
+            }
+            Msg::Stream { service, row, flags, chunk: c.f32s()? }
+        }
         MSG_STATUS => Msg::Status,
         MSG_SHUTDOWN => Msg::Shutdown,
         t => {
@@ -408,6 +446,19 @@ mod tests {
             input: vec![1.0; 12],
         });
         roundtrip_msg(Msg::EndSession { service: "d".into(), session: 7 });
+        roundtrip_msg(Msg::Stream {
+            service: "consmax/L128/stream".into(),
+            row: 42,
+            flags: STREAM_BEGIN,
+            chunk: vec![0.5, -3.0, f32::NEG_INFINITY],
+        });
+        roundtrip_msg(Msg::Stream {
+            service: "gn-softmax/L64/stream".into(),
+            row: u64::MAX,
+            flags: STREAM_BEGIN | STREAM_FINISH,
+            chunk: vec![1.0; 9],
+        });
+        roundtrip_msg(Msg::Stream { service: "s".into(), row: 0, flags: 0, chunk: vec![] });
         roundtrip_msg(Msg::Status);
         roundtrip_msg(Msg::Shutdown);
     }
@@ -429,6 +480,7 @@ mod tests {
             ErrCode::ShuttingDown,
             ErrCode::Internal,
             ErrCode::FrameTooLarge,
+            ErrCode::StreamProtocol,
         ] {
             assert_eq!(ErrCode::from_u8(code as u8), Some(code));
             roundtrip_resp(Resp::Error(WireError::new(code, format!("detail for {code}"))));
@@ -478,6 +530,18 @@ mod tests {
         let err = decode_msg(&body).unwrap_err();
         assert_eq!(err.code, ErrCode::Malformed);
         assert!(err.msg.contains("trailing"), "{err}");
+        // stream chunk with undefined flag bits set
+        let mut body = vec![MSG_STREAM, 1, 0, b's'];
+        body.extend_from_slice(&7u64.to_le_bytes());
+        body.push(0x80);
+        body.extend_from_slice(&0u32.to_le_bytes());
+        let err = decode_msg(&body).unwrap_err();
+        assert_eq!(err.code, ErrCode::Malformed);
+        assert!(err.msg.contains("stream flags"), "{err}");
+        // stream chunk truncated before its payload
+        let mut body = vec![MSG_STREAM, 1, 0, b's'];
+        body.extend_from_slice(&7u64.to_le_bytes());
+        assert_eq!(decode_msg(&body).unwrap_err().code, ErrCode::Malformed);
         // responses are just as strict
         assert_eq!(decode_resp(&[0x7F]).unwrap_err().code, ErrCode::Malformed);
         assert_eq!(decode_resp(&[RESP_ERROR, 200]).unwrap_err().code, ErrCode::Malformed);

@@ -1,0 +1,280 @@
+//! ConSmax — hardware-friendly softmax with learnable parameters
+//! (Liu et al., arxiv 2402.10930), functional model.
+//!
+//! ConSmax replaces both softmax reductions with learnable constants: the
+//! row max becomes a trained offset β and the denominator a trained scale
+//! γ, so `y_i = exp(x_i - β) / γ` is *elementwise* — no running max, no
+//! online sum, no second pass.  That is the property the streaming
+//! service path is built on: a row can be processed chunk by chunk (any
+//! chunk boundaries) and the concatenated outputs are bit-identical to
+//! the whole-row kernel, because element `i` never sees element `j`.
+//!
+//! The datapath mirrors the unit in the paper: base-2 re-expression
+//! `exp(x - β) = 2^((x - β) · log2 e)`, integer/fraction split of the
+//! exponent, a 2^[`CONSMAX_FRAC_BITS`]-entry LUT for the fractional
+//! power, and an exponent-field shift for the integer part.  Inference
+//! uses frozen β/γ (this repo has no training loop); the defaults are
+//! calibrated for the shared logit distributions in `util/dist.rs` — see
+//! [`ConSmax::for_len`].  Output stays on the f32 grid the LUT induces;
+//! every step is deterministic (the only libm call is the one-time LUT
+//! build), so chunked-vs-whole-row equality holds on every platform.
+
+/// Fraction bits of the 2^f LUT (256 entries — the paper's bitwidth
+/// ablation settles at 8 fractional bits).
+pub const CONSMAX_FRAC_BITS: u32 = 8;
+
+/// Frozen β of the registered `consmax` services.  Calibration: for the
+/// reference logit distribution N(0, σ²) with σ = [`CONSMAX_SIGMA_REF`],
+/// `E[exp(x - β)] = exp(σ²/2 - β) = 1`, so β = σ²/2 puts the per-element
+/// mean on the normalization target.
+pub const CONSMAX_BETA: f64 = 2.0;
+
+/// Reference logit std-dev the default β/γ are calibrated against (the
+/// Gaussian leg of `util/dist.rs`).
+pub const CONSMAX_SIGMA_REF: f64 = 2.0;
+
+/// Exponent clamp of the datapath: (x - β)·log2 e saturates into
+/// [-S, S] so the integer part always fits the f32 exponent field.
+const EXP_CLAMP: f64 = 126.0;
+
+const LUT_LEN: usize = 1 << CONSMAX_FRAC_BITS;
+const FRAC_MASK: i64 = LUT_LEN as i64 - 1;
+
+/// Construction-time ConSmax parameters (frozen at inference).
+#[derive(Debug, Clone, Copy)]
+pub struct ConSmaxConfig {
+    /// Learnable max-replacement offset β.
+    pub beta: f64,
+    /// Learnable denominator γ (must be positive and finite).
+    pub gamma: f64,
+}
+
+/// Exact power of two as f32, built in the exponent field (no libm).
+/// `e` must be in the normal range [-126, 127].
+#[inline]
+pub(crate) fn pow2_f32(e: i32) -> f32 {
+    debug_assert!((-126..=127).contains(&e), "pow2_f32 exponent {e} out of normal range");
+    f32::from_bits(((e + 127) as u32) << 23)
+}
+
+/// One ConSmax instance: frozen β/γ plus the fractional-power LUT.
+pub struct ConSmax {
+    cfg: ConSmaxConfig,
+    inv_gamma: f64,
+    /// `lut[i] = 2^(i / LUT_LEN)` — the fractional power, f32 grid.
+    lut: [f32; LUT_LEN],
+}
+
+impl ConSmax {
+    /// Build from explicit parameters.  Panics on a non-positive or
+    /// non-finite γ (a construction-time programmer error, like a zero
+    /// row length).
+    pub fn new(cfg: ConSmaxConfig) -> ConSmax {
+        assert!(
+            cfg.gamma.is_finite() && cfg.gamma > 0.0 && cfg.beta.is_finite(),
+            "consmax parameters must be finite with gamma > 0 (beta {}, gamma {})",
+            cfg.beta,
+            cfg.gamma
+        );
+        let mut lut = [0f32; LUT_LEN];
+        for (i, v) in lut.iter_mut().enumerate() {
+            *v = (i as f64 / LUT_LEN as f64).exp2() as f32;
+        }
+        ConSmax { inv_gamma: 1.0 / cfg.gamma, cfg, lut }
+    }
+
+    /// The registered calibration for rows of length `l`: β =
+    /// [`CONSMAX_BETA`] and γ = l · exp(σ²/2 - β) = l at σ =
+    /// [`CONSMAX_SIGMA_REF`] — the γ that normalizes the *expected* row
+    /// sum over the reference distribution.  Real rows deviate (that is
+    /// the trade ConSmax makes); the accuracy harness measures by how
+    /// much.
+    pub fn for_len(l: usize) -> ConSmax {
+        assert!(l > 0, "consmax rows must be non-empty");
+        let gamma = l as f64
+            * (CONSMAX_SIGMA_REF * CONSMAX_SIGMA_REF / 2.0 - CONSMAX_BETA).exp();
+        ConSmax::new(ConSmaxConfig { beta: CONSMAX_BETA, gamma })
+    }
+
+    /// The (construction-frozen) parameters.
+    pub fn cfg(&self) -> ConSmaxConfig {
+        self.cfg
+    }
+
+    /// One element through the datapath.  NaN logits map to probability
+    /// 0 (treated as -inf, the same row-poisoning guard as the E2Softmax
+    /// quantizer's bottom code).
+    #[inline]
+    pub fn forward_elem(&self, x: f32) -> f32 {
+        if x.is_nan() {
+            return 0.0;
+        }
+        let s = ((x as f64 - self.cfg.beta) * std::f64::consts::LOG2_E)
+            .clamp(-EXP_CLAMP, EXP_CLAMP);
+        // Q(.FRAC_BITS) exponent code: integer part -> exponent field,
+        // fractional part -> LUT index.  `>>` is an arithmetic shift on
+        // i64, so negative codes floor-divide as the hardware would.
+        let t = (s * LUT_LEN as f64).floor() as i64;
+        let q = (t >> CONSMAX_FRAC_BITS) as i32;
+        let f = (t & FRAC_MASK) as usize;
+        (self.lut[f] as f64 * pow2_f32(q) as f64 * self.inv_gamma) as f32
+    }
+
+    /// Elementwise kernel over any slice — *the* streaming primitive:
+    /// `forward_chunk` over arbitrary splits of a row concatenates to
+    /// exactly `forward_row_f32` of the whole row.
+    pub fn forward_chunk(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), out.len(), "consmax chunk out len mismatch");
+        for (o, &v) in out.iter_mut().zip(x) {
+            *o = self.forward_elem(v);
+        }
+    }
+
+    /// One whole row (identical math to `forward_chunk`; kept for API
+    /// parallelism with the reduction-bearing kernels).
+    pub fn forward_row_f32(&self, x: &[f32], out: &mut [f32]) {
+        self.forward_chunk(x, out);
+    }
+
+    /// Packed planar batch of rows of length `l` — bit-exact to per-row
+    /// `forward_row_f32`.
+    pub fn forward_batch_f32(&self, x: &[f32], l: usize, out: &mut [f32]) {
+        assert!(l > 0, "consmax rows must be non-empty");
+        assert!(x.len() % l == 0, "packed batch len {} is not a multiple of {l}", x.len());
+        assert!(x.len() == out.len(), "out len {} != batch len {}", out.len(), x.len());
+        self.forward_chunk(x, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::softmax::e2::softmax_exact;
+    use crate::util::proptest::{check, size};
+    use crate::util::rng::Rng;
+
+    fn gen(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() * CONSMAX_SIGMA_REF) as f32).collect()
+    }
+
+    #[test]
+    fn pow2_matches_exp2() {
+        for e in -126..=127 {
+            assert_eq!(pow2_f32(e), (e as f32).exp2(), "e={e}");
+        }
+    }
+
+    #[test]
+    fn chunked_concatenation_is_bitwise_whole_row() {
+        check("consmax-chunked", 60, 0xC05, |rng| {
+            let n = size(rng, 512);
+            let x = gen(rng, n);
+            let sm = ConSmax::for_len(n);
+            let mut whole = vec![0f32; n];
+            sm.forward_row_f32(&x, &mut whole);
+            for &chunk in &[1usize, 7, 64, n] {
+                let mut cat = Vec::with_capacity(n);
+                for piece in x.chunks(chunk) {
+                    let mut o = vec![0f32; piece.len()];
+                    sm.forward_chunk(piece, &mut o);
+                    cat.extend_from_slice(&o);
+                }
+                assert_eq!(cat, whole, "chunk={chunk} n={n}");
+            }
+        });
+    }
+
+    #[test]
+    fn batch_matches_rows_bitwise() {
+        let l = 96;
+        let b = 5;
+        let mut rng = Rng::new(17);
+        let x = gen(&mut rng, b * l);
+        let sm = ConSmax::for_len(l);
+        let mut batch = vec![0f32; b * l];
+        sm.forward_batch_f32(&x, l, &mut batch);
+        let mut row = vec![0f32; l];
+        for r in 0..b {
+            sm.forward_row_f32(&x[r * l..(r + 1) * l], &mut row);
+            assert_eq!(&batch[r * l..(r + 1) * l], &row[..], "row {r}");
+        }
+    }
+
+    #[test]
+    fn tracks_exact_softmax_on_the_calibrated_distribution() {
+        // ConSmax is not normalized per row — the constant γ only matches
+        // the row sum in expectation — so the ceiling is looser than the
+        // reduction-bearing comparators'.  The accuracy harness records
+        // the measured defect; this pins the order of magnitude.
+        let mut rng = Rng::new(5);
+        let mut worst: f64 = 0.0;
+        for _ in 0..20 {
+            let x = gen(&mut rng, 64);
+            let sm = ConSmax::for_len(64);
+            let exact = softmax_exact(&x);
+            let mut out = vec![0f32; 64];
+            sm.forward_row_f32(&x, &mut out);
+            for (o, e) in out.iter().zip(&exact) {
+                worst = worst.max((*o as f64 - e).abs());
+            }
+        }
+        assert!(worst < 0.35, "worst {worst}");
+    }
+
+    #[test]
+    fn monotone_and_positive() {
+        check("consmax-monotone", 40, 0xC06, |rng| {
+            let n = size(rng, 200).max(2);
+            let x = gen(rng, n);
+            let sm = ConSmax::for_len(n);
+            let mut out = vec![0f32; n];
+            sm.forward_row_f32(&x, &mut out);
+            for i in 0..n {
+                assert!(out[i] >= 0.0, "negative probability at {i}");
+                for j in 0..n {
+                    if x[i] > x[j] {
+                        // the LUT floor-quantizes the exponent, so ties on
+                        // the code grid are allowed but never inversions
+                        assert!(out[i] >= out[j], "i={i} j={j} {} {}", out[i], out[j]);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn nan_maps_to_zero_and_does_not_poison_neighbors() {
+        let sm = ConSmax::for_len(4);
+        let x = [0.5f32, f32::NAN, 2.0, -1.0];
+        let clean = [0.5f32, 0.0, 2.0, -1.0];
+        let mut out = vec![0f32; 4];
+        sm.forward_row_f32(&x, &mut out);
+        assert_eq!(out[1], 0.0);
+        let mut out_clean = vec![0f32; 4];
+        sm.forward_row_f32(&clean, &mut out_clean);
+        // elementwise: the other slots are untouched by the NaN
+        assert_eq!(out[0], out_clean[0]);
+        assert_eq!(out[2], out_clean[2]);
+        assert_eq!(out[3], out_clean[3]);
+    }
+
+    #[test]
+    fn extreme_logits_saturate_finite() {
+        let sm = ConSmax::for_len(8);
+        for &v in &[f32::MAX, f32::MIN, 1e30, -1e30, f32::INFINITY, f32::NEG_INFINITY] {
+            let y = sm.forward_elem(v);
+            assert!(y.is_finite(), "input {v} -> {y}");
+            assert!(y >= 0.0, "input {v} -> {y}");
+        }
+        // -inf lands on (a scaled version of) the bottom of the grid
+        assert!(sm.forward_elem(f32::NEG_INFINITY) < sm.forward_elem(0.0));
+    }
+
+    #[test]
+    fn default_calibration_gamma_is_row_length() {
+        // σ²/2 == β at the reference calibration, so γ = l exactly
+        let sm = ConSmax::for_len(64);
+        assert_eq!(sm.cfg().gamma, 64.0);
+        assert_eq!(sm.cfg().beta, CONSMAX_BETA);
+    }
+}

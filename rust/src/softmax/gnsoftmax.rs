@@ -1,0 +1,265 @@
+//! GN-Softmax — guaranteed-normalization softmax (Choi et al., arxiv
+//! 2604.23647), functional model.
+//!
+//! The design removes both reductions while keeping a *hard* bound on
+//! the row sum.  Each element is quantized to a power of two against a
+//! calibration reference μ (not the row max — μ is a frozen constant):
+//!
+//! ```text
+//! c_i = clamp(round((x_i - μ) · log2 e), -R, 0)     // 4-bit code
+//! y_i = 2^(c_i - S),  S = ceil(log2 L)
+//! ```
+//!
+//! Since every `c_i ≤ 0` and `2^S ≥ L`, the row sum obeys
+//! `Σ y_i ≤ L · 2^-S ≤ 1` for *any* input — normalization is guaranteed
+//! by construction, with no sum ever computed.  Like ConSmax the map is
+//! elementwise, so chunked streaming is bit-identical to the whole-row
+//! kernel; unlike ConSmax every output is an exact power of two, so the
+//! kernel involves no floating-point rounding at all (the only
+//! real-valued step is the code quantization) and its outputs are
+//! platform-exact.
+
+use super::consmax::pow2_f32;
+
+/// Code depth R of the power-of-two quantizer: codes span [-R, 0]
+/// (a 4-bit magnitude, matching the paper's exponent bitwidth and the
+/// E2Softmax k range).
+pub const GN_CODE_RANGE: i64 = 15;
+
+/// Reference logit std-dev the default μ is calibrated against (the
+/// Gaussian leg of `util/dist.rs`, same reference as ConSmax).
+pub const GN_SIGMA_REF: f64 = 2.0;
+
+/// Frozen GN-Softmax parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct GnSoftmaxConfig {
+    /// Calibration reference μ standing in for the row max.
+    pub mu: f64,
+    /// Denominator shift S (the row length's `ceil(log2 L)`).
+    pub shift: u32,
+}
+
+/// One GN-Softmax instance (stateless beyond its frozen config).
+pub struct GnSoftmax {
+    cfg: GnSoftmaxConfig,
+}
+
+/// `ceil(log2 l)` for `l >= 1` — the denominator shift that makes the
+/// sum bound airtight (`2^shift >= l`).
+pub fn shift_for_len(l: usize) -> u32 {
+    assert!(l > 0, "gn-softmax rows must be non-empty");
+    (usize::BITS - (l - 1).leading_zeros()).min(63)
+}
+
+impl GnSoftmax {
+    /// Build from explicit parameters.  Panics on a non-finite μ or a
+    /// shift outside the f32 exponent budget (construction-time
+    /// programmer errors).
+    pub fn new(cfg: GnSoftmaxConfig) -> GnSoftmax {
+        assert!(cfg.mu.is_finite(), "gn-softmax mu must be finite");
+        assert!(
+            (cfg.shift as i64) + GN_CODE_RANGE <= 126,
+            "gn-softmax shift {} overflows the f32 exponent range",
+            cfg.shift
+        );
+        GnSoftmax { cfg }
+    }
+
+    /// The registered calibration for rows of length `l`: shift =
+    /// ceil(log2 l), and μ = σ·√(2 ln l) — the expected maximum of `l`
+    /// draws from N(0, σ²) at σ = [`GN_SIGMA_REF`], i.e. the constant
+    /// that best impersonates the row max the quantizer can no longer
+    /// compute.
+    pub fn for_len(l: usize) -> GnSoftmax {
+        let shift = shift_for_len(l);
+        let mu = GN_SIGMA_REF * (2.0 * (l as f64).ln()).sqrt();
+        GnSoftmax::new(GnSoftmaxConfig { mu, shift })
+    }
+
+    /// The (construction-frozen) parameters.
+    pub fn cfg(&self) -> GnSoftmaxConfig {
+        self.cfg
+    }
+
+    /// One element through the quantizer.  NaN logits map to probability
+    /// 0 (treated as -inf); everything else lands on an exact power of
+    /// two in [2^-(R+S), 2^-S].
+    #[inline]
+    pub fn forward_elem(&self, x: f32) -> f32 {
+        if x.is_nan() {
+            return 0.0;
+        }
+        let d = (x as f64 - self.cfg.mu) * std::f64::consts::LOG2_E;
+        // `as i64` saturates on overflow, so ±inf and huge logits clamp
+        // cleanly into the code range
+        let c = (d.round() as i64).clamp(-GN_CODE_RANGE, 0);
+        pow2_f32((c - self.cfg.shift as i64) as i32)
+    }
+
+    /// Elementwise kernel over any slice — the streaming primitive
+    /// (arbitrary chunk splits concatenate bit-identically).
+    pub fn forward_chunk(&self, x: &[f32], out: &mut [f32]) {
+        assert_eq!(x.len(), out.len(), "gn-softmax chunk out len mismatch");
+        for (o, &v) in out.iter_mut().zip(x) {
+            *o = self.forward_elem(v);
+        }
+    }
+
+    /// One whole row (identical math to `forward_chunk`).
+    pub fn forward_row_f32(&self, x: &[f32], out: &mut [f32]) {
+        self.forward_chunk(x, out);
+    }
+
+    /// Packed planar batch of rows of length `l` — bit-exact to per-row
+    /// `forward_row_f32`.
+    pub fn forward_batch_f32(&self, x: &[f32], l: usize, out: &mut [f32]) {
+        assert!(l > 0, "gn-softmax rows must be non-empty");
+        assert!(x.len() % l == 0, "packed batch len {} is not a multiple of {l}", x.len());
+        assert!(x.len() == out.len(), "out len {} != batch len {}", out.len(), x.len());
+        self.forward_chunk(x, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::softmax::e2::softmax_exact;
+    use crate::util::proptest::{check, size};
+    use crate::util::rng::Rng;
+
+    fn gen(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() * GN_SIGMA_REF) as f32).collect()
+    }
+
+    #[test]
+    fn shift_is_ceil_log2() {
+        for (l, s) in [(1usize, 0u32), (2, 1), (3, 2), (4, 2), (5, 3), (128, 7), (4096, 12)] {
+            assert_eq!(shift_for_len(l), s, "l={l}");
+            assert!(1u64 << shift_for_len(l) >= l as u64);
+        }
+    }
+
+    #[test]
+    fn sum_is_guaranteed_at_most_one_for_any_input() {
+        // adversarial sweep: uniform huge logits, all-equal rows, mixed
+        // infinities — the bound must hold unconditionally
+        check("gn-sum-bound", 80, 0x61B, |rng| {
+            let n = size(rng, 4096);
+            let sm = GnSoftmax::for_len(n);
+            let mode = rng.range_usize(0, 4);
+            let x: Vec<f32> = (0..n)
+                .map(|_| match mode {
+                    0 => (rng.normal() * GN_SIGMA_REF) as f32,
+                    1 => 1e30,
+                    2 => f32::INFINITY,
+                    _ => (rng.f64() * 200.0 - 100.0) as f32,
+                })
+                .collect();
+            let mut out = vec![0f32; n];
+            sm.forward_row_f32(&x, &mut out);
+            let sum: f64 = out.iter().map(|&v| v as f64).sum();
+            assert!(sum <= 1.0 + 1e-12, "n={n} mode={mode} sum={sum}");
+            for &v in &out {
+                assert!(v > 0.0, "outputs are positive powers of two");
+            }
+        });
+    }
+
+    #[test]
+    fn outputs_are_exact_powers_of_two() {
+        let mut rng = Rng::new(7);
+        let n = 256;
+        let x = gen(&mut rng, n);
+        let sm = GnSoftmax::for_len(n);
+        let mut out = vec![0f32; n];
+        sm.forward_row_f32(&x, &mut out);
+        for &v in &out {
+            // one mantissa bit set, nothing else
+            assert_eq!(v.to_bits() & 0x007f_ffff, 0, "{v} is not a power of two");
+        }
+    }
+
+    #[test]
+    fn chunked_concatenation_is_bitwise_whole_row() {
+        check("gn-chunked", 60, 0x61C, |rng| {
+            let n = size(rng, 512);
+            let x = gen(rng, n);
+            let sm = GnSoftmax::for_len(n);
+            let mut whole = vec![0f32; n];
+            sm.forward_row_f32(&x, &mut whole);
+            for &chunk in &[1usize, 7, 64, n] {
+                let mut cat = Vec::with_capacity(n);
+                for piece in x.chunks(chunk) {
+                    let mut o = vec![0f32; piece.len()];
+                    sm.forward_chunk(piece, &mut o);
+                    cat.extend_from_slice(&o);
+                }
+                assert_eq!(cat, whole, "chunk={chunk} n={n}");
+            }
+        });
+    }
+
+    #[test]
+    fn batch_matches_rows_bitwise() {
+        let l = 96;
+        let b = 5;
+        let mut rng = Rng::new(29);
+        let x = gen(&mut rng, b * l);
+        let sm = GnSoftmax::for_len(l);
+        let mut batch = vec![0f32; b * l];
+        sm.forward_batch_f32(&x, l, &mut batch);
+        let mut row = vec![0f32; l];
+        for r in 0..b {
+            sm.forward_row_f32(&x[r * l..(r + 1) * l], &mut row);
+            assert_eq!(&batch[r * l..(r + 1) * l], &row[..], "row {r}");
+        }
+    }
+
+    #[test]
+    fn tracks_exact_softmax_on_the_calibrated_distribution() {
+        // the power-of-two grid + frozen μ are coarse; pin the order of
+        // magnitude (the accuracy harness records the measured values)
+        let mut rng = Rng::new(11);
+        let mut worst: f64 = 0.0;
+        for _ in 0..20 {
+            let x = gen(&mut rng, 64);
+            let sm = GnSoftmax::for_len(64);
+            let exact = softmax_exact(&x);
+            let mut out = vec![0f32; 64];
+            sm.forward_row_f32(&x, &mut out);
+            for (o, e) in out.iter().zip(&exact) {
+                worst = worst.max((*o as f64 - e).abs());
+            }
+        }
+        assert!(worst < 0.5, "worst {worst}");
+    }
+
+    #[test]
+    fn monotone_on_the_code_grid() {
+        check("gn-monotone", 40, 0x61D, |rng| {
+            let n = size(rng, 200).max(2);
+            let x = gen(rng, n);
+            let sm = GnSoftmax::for_len(n);
+            let mut out = vec![0f32; n];
+            sm.forward_row_f32(&x, &mut out);
+            for i in 0..n {
+                for j in 0..n {
+                    if x[i] > x[j] {
+                        assert!(out[i] >= out[j], "i={i} j={j}");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn nan_maps_to_zero_and_infinities_clamp() {
+        let sm = GnSoftmax::for_len(8);
+        assert_eq!(sm.forward_elem(f32::NAN), 0.0);
+        // +inf pins the top code (2^-shift), -inf the bottom code
+        let top = pow2_f32(-(sm.cfg().shift as i32));
+        let bottom = pow2_f32(-(GN_CODE_RANGE as i32) - sm.cfg().shift as i32);
+        assert_eq!(sm.forward_elem(f32::INFINITY), top);
+        assert_eq!(sm.forward_elem(f32::NEG_INFINITY), bottom);
+    }
+}

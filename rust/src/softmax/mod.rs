@@ -1,17 +1,23 @@
 //! Softmax algorithms: the paper's E2Softmax (bit-exact integer model of
-//! Algorithm 1) plus the exact baseline and the prior-work comparators
-//! (Softermax, I-BERT) used in Table III and the accuracy ablations.
+//! Algorithm 1) plus the exact baseline, the prior-work comparators
+//! (Softermax, I-BERT) used in Table III and the accuracy ablations, and
+//! the reduction-free streaming family (ConSmax, GN-Softmax) behind the
+//! chunked streaming service path (DESIGN.md §3.6).
 
 pub mod aldivision;
 pub mod baselines;
+pub mod consmax;
 pub mod e2;
+pub mod gnsoftmax;
 pub mod log2exp;
 
 pub use aldivision::{aldivision, AldivOut};
+pub use consmax::{ConSmax, ConSmaxConfig};
 pub use e2::{
     expand_row_side, quantize_logits_batch_into, quantize_logits_into, E2Scratch, E2Softmax,
     E2SoftmaxConfig, E2SoftmaxOut, CODE_SIDE_LEN, VAL_TABLE_LEN,
 };
+pub use gnsoftmax::{GnSoftmax, GnSoftmaxConfig};
 pub use log2exp::{log2exp, Log2ExpTable};
 
 /// Contract constants shared with python/compile/kernels/ref.py — see

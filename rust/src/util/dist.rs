@@ -1,0 +1,173 @@
+//! Shared logit-distribution generator: the one place benches and the
+//! accuracy harness sample "realistic" softmax inputs from, so a number
+//! in `BENCH_serving.json` and a row in `ACCURACY.md` describe the same
+//! workload.  Each consumer notes the [`LogitDist`] name and its seed
+//! next to the measurement.
+//!
+//! Three legs, matching the accuracy-harness axes in ISSUE 10:
+//! Gaussian logits at the family's calibration σ, a heavy-tailed Laplace
+//! leg at the same standard deviation (outlier logits are where the
+//! approximations earn or lose their keep), and post-QKᵀ attention
+//! logits — `q·kᵢ/√d` over unit-normal Q/K at the paper head width — the
+//! distribution the served `attention` pipelines actually feed their
+//! softmax stage.
+
+use super::rng::Rng;
+
+/// Standard deviation of the Gaussian and heavy-tail legs — the same
+/// reference σ the ConSmax/GN-Softmax default calibrations target.
+pub const DIST_SIGMA: f64 = 2.0;
+
+/// Head width of the attention-logits leg (the paper's D = 64).
+pub const ATTN_D: usize = 64;
+
+/// Base seed shared by the accuracy harness and `bench_serving`'s
+/// workload generators (each consumer derives per-case seeds from it and
+/// records the derived seed beside the measurement).
+pub const DIST_SEED: u64 = 0xD157;
+
+/// A named logit distribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LogitDist {
+    /// N(0, σ²) at σ = [`DIST_SIGMA`].
+    Gaussian,
+    /// Laplace (two-sided exponential) scaled to the same σ — matched
+    /// second moment, heavier tails.
+    HeavyTail,
+    /// Post-QKᵀ attention logits: one unit-normal query against `L`
+    /// unit-normal keys at head width [`ATTN_D`], scaled by 1/√d.
+    Attention,
+}
+
+impl LogitDist {
+    /// Every leg, in the order tables render them.
+    pub const ALL: [LogitDist; 3] =
+        [LogitDist::Gaussian, LogitDist::HeavyTail, LogitDist::Attention];
+
+    /// Stable name used in `ACCURACY.md` / `BENCH_*.json` rows.
+    pub fn name(&self) -> &'static str {
+        match self {
+            LogitDist::Gaussian => "gaussian",
+            LogitDist::HeavyTail => "heavy-tail",
+            LogitDist::Attention => "attention",
+        }
+    }
+
+    /// Fill one logit row (any length) from this distribution.
+    pub fn fill_row(&self, rng: &mut Rng, out: &mut [f32]) {
+        match self {
+            LogitDist::Gaussian => rng.fill_normal(out, 0.0, DIST_SIGMA),
+            LogitDist::HeavyTail => {
+                // Laplace scale b has variance 2b², so b = σ/√2 matches
+                // the Gaussian leg's second moment
+                let b = DIST_SIGMA / std::f64::consts::SQRT_2;
+                for v in out.iter_mut() {
+                    let mag = rng.exponential(1.0) * b;
+                    *v = if rng.f64() < 0.5 { -mag } else { mag } as f32;
+                }
+            }
+            LogitDist::Attention => {
+                let mut q = vec![0f32; ATTN_D];
+                rng.fill_normal(&mut q, 0.0, 1.0);
+                let scale = 1.0 / (ATTN_D as f32).sqrt();
+                let mut k = vec![0f32; ATTN_D];
+                for v in out.iter_mut() {
+                    rng.fill_normal(&mut k, 0.0, 1.0);
+                    let mut acc = 0f32;
+                    for (&x, &y) in q.iter().zip(&k) {
+                        acc += x * y;
+                    }
+                    *v = acc * scale;
+                }
+            }
+        }
+    }
+
+    /// Fill a packed planar batch of `rows` rows of length `l`.
+    pub fn fill_batch(&self, rng: &mut Rng, l: usize, out: &mut [f32]) {
+        assert!(l > 0 && out.len() % l == 0, "batch len {} is not a multiple of {l}", out.len());
+        for row in out.chunks_exact_mut(l) {
+            self.fill_row(rng, row);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        for dist in LogitDist::ALL {
+            let mut a = vec![0f32; 256];
+            let mut b = vec![0f32; 256];
+            dist.fill_row(&mut Rng::new(DIST_SEED), &mut a);
+            dist.fill_row(&mut Rng::new(DIST_SEED), &mut b);
+            assert_eq!(a, b, "{}", dist.name());
+            dist.fill_row(&mut Rng::new(DIST_SEED + 1), &mut b);
+            assert_ne!(a, b, "{}", dist.name());
+        }
+    }
+
+    #[test]
+    fn names_are_stable_and_unique() {
+        let names: Vec<&str> = LogitDist::ALL.iter().map(|d| d.name()).collect();
+        assert_eq!(names, vec!["gaussian", "heavy-tail", "attention"]);
+    }
+
+    #[test]
+    fn legs_have_the_matched_scale() {
+        // mean ≈ 0 and std ≈ DIST_SIGMA for the iid legs; the attention
+        // leg is unit-ish by the 1/√d scaling (per-row correlation via
+        // the shared query keeps it looser)
+        let n = 40_000;
+        for dist in [LogitDist::Gaussian, LogitDist::HeavyTail] {
+            let mut x = vec![0f32; n];
+            dist.fill_row(&mut Rng::new(9), &mut x);
+            let mean: f64 = x.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+            let var: f64 =
+                x.iter().map(|&v| (v as f64 - mean) * (v as f64 - mean)).sum::<f64>() / n as f64;
+            assert!(mean.abs() < 0.05, "{} mean {mean}", dist.name());
+            assert!(
+                (var.sqrt() - DIST_SIGMA).abs() < 0.08,
+                "{} std {}",
+                dist.name(),
+                var.sqrt()
+            );
+        }
+        let mut x = vec![0f32; n];
+        LogitDist::Attention.fill_row(&mut Rng::new(9), &mut x);
+        let var: f64 = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / n as f64;
+        assert!((0.3..3.0).contains(&var), "attention var {var}");
+    }
+
+    #[test]
+    fn heavy_tail_is_heavier_than_gaussian() {
+        // excess kurtosis: Laplace has 3, Gaussian 0 — compare the raw
+        // fourth moments at matched variance
+        let n = 60_000;
+        let kurt = |dist: LogitDist| {
+            let mut x = vec![0f32; n];
+            dist.fill_row(&mut Rng::new(21), &mut x);
+            let m2: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / n as f64;
+            let m4: f64 = x.iter().map(|&v| (v as f64).powi(4)).sum::<f64>() / n as f64;
+            m4 / (m2 * m2)
+        };
+        let g = kurt(LogitDist::Gaussian);
+        let h = kurt(LogitDist::HeavyTail);
+        assert!(h > g + 1.0, "gaussian {g}, heavy-tail {h}");
+    }
+
+    #[test]
+    fn batch_fill_is_row_fill_in_sequence() {
+        let mut rng = Rng::new(5);
+        let mut batch = vec![0f32; 3 * 64];
+        LogitDist::Gaussian.fill_batch(&mut rng, 64, &mut batch);
+        let mut rng2 = Rng::new(5);
+        let mut rows = vec![0f32; 3 * 64];
+        for row in rows.chunks_exact_mut(64) {
+            LogitDist::Gaussian.fill_row(&mut rng2, row);
+        }
+        assert_eq!(batch, rows);
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod dist;
 pub mod json;
 pub mod proptest;
 pub mod rng;

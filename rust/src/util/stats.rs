@@ -217,6 +217,48 @@ mod tests {
     }
 
     #[test]
+    fn merge_is_order_insensitive_across_many_shards() {
+        // the metrics reader folds worker shards in whatever order the
+        // shard vector happens to hold; the result must not depend on
+        // that order — exact for the histogram, fp-tight for Welford
+        let xs: Vec<f64> = (0..600).map(|i| ((i as f64 * 0.61).cos() * 3.0 + 3.5).abs()).collect();
+        let mut shards_s = vec![Streaming::new(); 5];
+        let mut shards_h = vec![LatencyHist::new(); 5];
+        for (i, &x) in xs.iter().enumerate() {
+            shards_s[i % 5].push(x);
+            shards_h[i % 5].record(x * 1e-4);
+        }
+        let fold = |order: &[usize]| {
+            let mut s = Streaming::new();
+            let mut h = LatencyHist::new();
+            for &i in order {
+                s.merge(&shards_s[i]);
+                h.merge(&shards_h[i]);
+            }
+            (s, h)
+        };
+        let (s_fwd, h_fwd) = fold(&[0, 1, 2, 3, 4]);
+        let (s_rev, h_rev) = fold(&[4, 3, 2, 1, 0]);
+        let (s_mix, h_mix) = fold(&[2, 0, 4, 1, 3]);
+        for (s, h) in [(&s_rev, &h_rev), (&s_mix, &h_mix)] {
+            assert_eq!(s.count(), s_fwd.count());
+            assert!((s.mean() - s_fwd.mean()).abs() < 1e-9);
+            assert!((s.var() - s_fwd.var()).abs() < 1e-9);
+            assert_eq!(s.min(), s_fwd.min());
+            assert_eq!(s.max(), s_fwd.max());
+            assert_eq!(h.count(), h_fwd.count());
+            assert_eq!(h.p50(), h_fwd.p50());
+            assert_eq!(h.p99(), h_fwd.p99());
+            assert!((h.mean() - h_fwd.mean()).abs() < 1e-12);
+        }
+        // merging into an empty accumulator reproduces the source
+        let mut empty = LatencyHist::new();
+        empty.merge(&h_fwd);
+        assert_eq!(empty.count(), h_fwd.count());
+        assert_eq!(empty.p50(), h_fwd.p50());
+    }
+
+    #[test]
     fn hist_merge_is_exact() {
         let mut whole = LatencyHist::new();
         let mut a = LatencyHist::new();

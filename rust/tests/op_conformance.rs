@@ -37,7 +37,9 @@ use sole::ops::{Op, OpRegistry, OpSpec, PortType};
 use sole::quant::{ptf_quantize_into, q8_dequantize, q8_quantize_row_into};
 use sole::softmax::baselines::{ibert_softmax, softermax};
 use sole::softmax::e2::softmax_exact;
-use sole::softmax::{quantize_logits_into, E2Scratch, E2Softmax, E2SoftmaxConfig};
+use sole::softmax::{
+    quantize_logits_into, ConSmax, E2Scratch, E2Softmax, E2SoftmaxConfig, GnSoftmax,
+};
 use sole::util::rng::Rng;
 
 /// One row through the direct kernel of a shape-preserving family.
@@ -56,6 +58,18 @@ fn reference_row(op: &str, row: &[f32]) -> Vec<f32> {
         "softermax" => softermax(row, SOFTERMAX_FRAC_BITS).into_iter().map(|v| v as f32).collect(),
         "ibert-softmax" => {
             ibert_softmax(row, IBERT_SOFTMAX_SCALE).into_iter().map(|v| v as f32).collect()
+        }
+        "consmax" => {
+            let sm = ConSmax::for_len(row.len());
+            let mut out = vec![0f32; row.len()];
+            sm.forward_row_f32(row, &mut out);
+            out
+        }
+        "gn-softmax" => {
+            let sm = GnSoftmax::for_len(row.len());
+            let mut out = vec![0f32; row.len()];
+            sm.forward_row_f32(row, &mut out);
+            out
         }
         "ailayernorm" => {
             let c = row.len();
@@ -380,6 +394,38 @@ fn stateful_families_are_pinned_and_sealed() {
             .unwrap_or_else(|e| panic!("{spec}: stateful path failed: {e:#}"));
     }
     assert_eq!(stateful, vec!["decode-attention"]);
+}
+
+#[test]
+fn reduction_free_families_are_pinned_and_stream_bit_exact() {
+    // reduction-freeness is opt-in per family and pinned by name: the
+    // streaming trio works (and matches run_batch bitwise over a whole
+    // row) exactly for the pinned families, and errors for every other
+    let registry = OpRegistry::builtin();
+    let mut rng = Rng::new(0x0C4F);
+    let mut streaming = Vec::new();
+    for name in registry.names() {
+        let spec = registry.canonical_spec(name).unwrap();
+        let (_, op) = registry.build(&spec.to_string()).unwrap();
+        let mut state = op.begin_row();
+        let mut cat = Vec::new();
+        if !op.reduction_free() {
+            let err = op.push_chunk(&mut state, &[0.25; 4], &mut cat).unwrap_err();
+            assert!(format!("{err:#}").contains("not reduction-free"), "{spec}: {err:#}");
+            continue;
+        }
+        streaming.push(name.to_string());
+        let row = rows_for(&mut rng, op.item_len(), 1);
+        let mut whole = vec![0f32; op.out_len()];
+        let mut scratch = op.make_scratch();
+        op.run_batch(1, &row, &mut whole, &mut scratch).unwrap();
+        for piece in row.chunks(13) {
+            op.push_chunk(&mut state, piece, &mut cat).unwrap();
+        }
+        op.finish_row(&mut state, &mut cat).unwrap();
+        assert_eq!(cat, whole, "{spec}: streamed row diverges from run_batch");
+    }
+    assert_eq!(streaming, vec!["consmax", "gn-softmax"]);
 }
 
 #[test]

@@ -3,8 +3,10 @@
 //! rejections for malformed and mistargeted frames, load shedding with
 //! the conservation ledger checked across the wire, the rebalancer
 //! shifting a worker to the hot service under skewed traffic, decode
-//! sessions (with explicit `end_session`) over TCP, and graceful
-//! wire-initiated shutdown.
+//! sessions (with explicit `end_session`) over TCP, chunked-infer
+//! streaming (typed `StreamProtocol` violations, interleaved rows on
+//! one connection, frame-cap overflow mid-stream with the row state
+//! surviving reconnection), and graceful wire-initiated shutdown.
 
 use std::io::Write;
 use std::net::TcpStream;
@@ -442,6 +444,153 @@ fn decode_sessions_over_tcp_with_explicit_end_session() {
     let router = server.shutdown().unwrap();
     let m = router.metrics(spec).unwrap();
     assert_eq!(m.errors(), 0);
+    router.shutdown();
+}
+
+#[test]
+fn stream_chunked_infer_is_typed_isolated_and_survives_reconnects() {
+    // the chunked-infer path end to end: typed StreamProtocol rejections
+    // that leave the connection AND the row-id space serving, rows
+    // interleaved on one connection staying bit-exact, and a frame-cap
+    // overflow mid-stream closing only the connection — the row's
+    // server-side state survives for a reconnecting client to finish
+    let registry = OpRegistry::builtin();
+    let spec = "consmax/L32";
+    let service = "consmax/L32/stream";
+    let router = ServiceRouter::builder(2).stream_service(&registry, spec, 1).unwrap();
+    let router = router.start().unwrap();
+    let cfg = ServerConfig { max_frame: 4096, ..ServerConfig::default() };
+    let server = Server::start(router, "127.0.0.1:0", cfg).unwrap();
+    let addr = server.addr().to_string();
+    let mut cl = NetClient::connect(&addr, Duration::from_secs(10)).unwrap();
+
+    // an unknown stream service is a typed rejection listing what exists
+    match cl.stream_chunk("nope/stream", 1, true, false, &[0.5]).unwrap() {
+        Reply::Rejected(e) => {
+            assert_eq!(e.code, ErrCode::UnknownService, "{e}");
+            assert!(e.msg.contains(service), "lists stream services: {e}");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    // a zero-length chunk is a violation and does NOT open the row
+    match cl.stream_chunk(service, 5, true, false, &[]).unwrap() {
+        Reply::Rejected(e) => {
+            assert_eq!(e.code, ErrCode::StreamProtocol, "{e}");
+            assert!(e.msg.contains("at least one element"), "{e}");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    // a chunk after finish targets a closed row: typed, not fatal
+    assert!(matches!(
+        cl.stream_chunk(service, 1, true, true, &[0.5, -1.0, 2.0, 0.0]).unwrap(),
+        Reply::Output(_)
+    ));
+    match cl.stream_chunk(service, 1, false, false, &[0.1]).unwrap() {
+        Reply::Rejected(e) => {
+            assert_eq!(e.code, ErrCode::StreamProtocol, "{e}");
+            assert!(e.msg.contains("not open"), "chunk after finish: {e}");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    // a chunk for a row that was never opened
+    match cl.stream_chunk(service, 7, false, false, &[0.2]).unwrap() {
+        Reply::Rejected(e) => assert_eq!(e.code, ErrCode::StreamProtocol, "{e}"),
+        other => panic!("unexpected {other:?}"),
+    }
+    // re-beginning an open row
+    assert!(matches!(cl.stream_chunk(service, 9, true, false, &[0.3]).unwrap(), Reply::Output(_)));
+    match cl.stream_chunk(service, 9, true, false, &[0.4]).unwrap() {
+        Reply::Rejected(e) => {
+            assert_eq!(e.code, ErrCode::StreamProtocol, "{e}");
+            assert!(e.msg.contains("already open"), "{e}");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    // ...and the same row still finishes normally afterwards
+    assert!(matches!(cl.stream_chunk(service, 9, false, true, &[0.5]).unwrap(), Reply::Output(_)));
+
+    // two rows interleaved on ONE connection stay isolated: each row's
+    // concatenated outputs are bit-identical to a whole-row run_batch
+    let (_, op) = registry.build(spec).unwrap();
+    let mut scratch = op.make_scratch();
+    let mut rng = Rng::new(0x57A3);
+    let rows: Vec<Vec<f32>> = (0..2)
+        .map(|_| {
+            let mut row = vec![0f32; op.item_len()];
+            rng.fill_normal(&mut row, 0.0, 2.0);
+            row
+        })
+        .collect();
+    let mut got = vec![Vec::new(), Vec::new()];
+    let pieces = [(0usize, 12usize), (12, 12), (24, 8)];
+    for (i, &(start, n)) in pieces.iter().enumerate() {
+        for (r, row) in rows.iter().enumerate() {
+            let begin = i == 0;
+            let finish = i == pieces.len() - 1;
+            let id = 11 + r as u64;
+            match cl.stream_chunk(service, id, begin, finish, &row[start..start + n]).unwrap() {
+                Reply::Output(resp) => got[r].extend_from_slice(&resp.output),
+                other => panic!("row {id} piece {i}: unexpected {other:?}"),
+            }
+        }
+    }
+    for (r, row) in rows.iter().enumerate() {
+        let mut want = vec![0f32; op.out_len()];
+        op.run_batch(1, row, &mut want, &mut scratch).unwrap();
+        assert_eq!(bits(&got[r]), bits(&want), "interleaved row {r} is bit-exact");
+    }
+
+    // frame-cap overflow mid-stream: the connection dies with a typed
+    // error, but the open row's state lives in the service — a new
+    // connection finishes it and the result is still bit-exact
+    let mut raw = TcpStream::connect(server.addr()).unwrap();
+    raw.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let long_row = &rows[0];
+    let open = wire::Msg::Stream {
+        service: service.to_string(),
+        row: 21,
+        flags: sole::server::STREAM_BEGIN,
+        chunk: long_row[..16].to_vec(),
+    };
+    wire::write_frame(&mut raw, &wire::encode_msg(&open)).unwrap();
+    let first = match wire::read_frame(&mut raw, wire::MAX_FRAME).unwrap() {
+        wire::FrameRead::Frame(b) => match wire::decode_resp(&b).unwrap() {
+            wire::Resp::Output { output, .. } => output,
+            other => panic!("unexpected {other:?}"),
+        },
+        other => panic!("expected a frame, got {other:?}"),
+    };
+    raw.write_all(&8192u32.to_le_bytes()).unwrap(); // declares > max_frame
+    raw.flush().unwrap();
+    match wire::read_frame(&mut raw, wire::MAX_FRAME).unwrap() {
+        wire::FrameRead::Frame(b) => match wire::decode_resp(&b).unwrap() {
+            wire::Resp::Error(e) => assert_eq!(e.code, ErrCode::FrameTooLarge, "{e}"),
+            other => panic!("unexpected {other:?}"),
+        },
+        other => panic!("expected a frame, got {other:?}"),
+    }
+    assert!(
+        matches!(wire::read_frame(&mut raw, wire::MAX_FRAME).unwrap(), wire::FrameRead::Eof),
+        "connection must close after an oversized frame"
+    );
+    let mut cl2 = NetClient::connect(&addr, Duration::from_secs(10)).unwrap();
+    let tail = match cl2.stream_chunk(service, 21, false, true, &long_row[16..]).unwrap() {
+        Reply::Output(r) => r.output,
+        other => panic!("finishing after reconnect: unexpected {other:?}"),
+    };
+    let mut full = first;
+    full.extend_from_slice(&tail);
+    let mut want = vec![0f32; op.out_len()];
+    op.run_batch(1, long_row, &mut want, &mut scratch).unwrap();
+    assert_eq!(bits(&full), bits(&want), "row finished across connections is bit-exact");
+
+    drop(cl);
+    drop(cl2);
+    let router = server.shutdown().unwrap();
+    let m = router.metrics(service).unwrap();
+    assert_eq!(m.errors(), 4, "one per protocol violation");
+    assert_eq!(m.completed() + m.errors() + m.shed(), m.offered(), "conservation");
+    assert_eq!(router.open_rows(service), Some(0), "every opened row was closed");
     router.shutdown();
 }
 
